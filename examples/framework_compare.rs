@@ -1,0 +1,77 @@
+//! Framework shoot-out: train vanilla SL / SFL / PSL / EPSL(0.5) / EPSL(1)
+//! side by side on the same synthetic corpus and report accuracy, rounds
+//! and simulated latency to a target — the paper's Fig. 4 in one command.
+//!
+//! Usage: cargo run --release --example framework_compare [rounds] [target]
+
+use epsl::config::Config;
+use epsl::coordinator::{train, TrainerOptions};
+use epsl::latency::frameworks::Framework;
+use epsl::runtime::artifact::Manifest;
+use epsl::runtime::Runtime;
+use epsl::util::table::{LinePlot, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let rounds: usize =
+        args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let target: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.6);
+
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::new("artifacts")?;
+    let cfg = Config::new();
+
+    let frameworks = [
+        ("vanilla SL", Framework::VanillaSl),
+        ("SFL", Framework::Sfl),
+        ("PSL", Framework::Psl),
+        ("EPSL(0.5)", Framework::Epsl { phi: 0.5 }),
+        ("EPSL(1.0)", Framework::Epsl { phi: 1.0 }),
+        ("EPSL-PT", Framework::EpslPt { early: true }),
+    ];
+    let mut t = Table::new(format!(
+        "framework comparison — {rounds} rounds, target {target}"
+    ).as_str())
+    .header(&[
+        "framework",
+        "final acc",
+        "rounds→target",
+        "per-round lat (s)",
+        "latency→target (s)",
+    ]);
+    let mut plot =
+        LinePlot::new("test accuracy vs round", "round", "accuracy");
+    for (name, fw) in frameworks {
+        let opts = TrainerOptions {
+            family: "mnist".into(),
+            framework: fw,
+            n_clients: 5,
+            rounds,
+            eval_every: 10,
+            dataset_size: 2000,
+            test_size: 512,
+            eta_c: 0.1,
+            eta_s: 0.1,
+            pt_switch: rounds / 3,
+            ..Default::default()
+        };
+        let run = train(&rt, &manifest, &cfg, &opts)?;
+        plot.series(name, &run.accuracy_curve());
+        let r2t = run.rounds_to_accuracy(target);
+        let l2t = run.latency_to_accuracy(target);
+        t.row(&[
+            name.to_string(),
+            format!("{:.3}", run.converged_accuracy(3)),
+            r2t.map(|r| r.to_string()).unwrap_or_else(|| "-".into()),
+            format!("{:.3}", run.rounds[0].sim_latency),
+            l2t.map(|l| format!("{l:.1}")).unwrap_or_else(|| "-".into()),
+        ]);
+        println!(
+            "{name:<12} done: acc {:.3}",
+            run.converged_accuracy(3)
+        );
+    }
+    println!("\n{}", plot.render());
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Quickstart: load the AOT artifacts, run ONE full EPSL round across two
+//! simulated clients, and print the per-stage latency breakdown — the
+//! smallest end-to-end exercise of the public API.
+//!
+//! Usage: cargo run --release --example quickstart
+
+use epsl::channel::{ChannelRealization, Deployment};
+use epsl::config::Config;
+use epsl::coordinator::{train, TrainerOptions};
+use epsl::optim::{bcd, Problem};
+use epsl::profile::resnet18;
+use epsl::runtime::artifact::Manifest;
+use epsl::runtime::Runtime;
+use epsl::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the build-time artifacts (python never runs from here on).
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::new("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+    let fam = manifest.family("mnist")?;
+    println!(
+        "model: {} parameter tensors ({} floats), batch {}",
+        fam.params.len(),
+        fam.param_elements(),
+        fam.batch
+    );
+
+    // 2. One EPSL round (2 clients, φ = 0.5) through the real runtime.
+    let cfg = Config::new();
+    let opts = TrainerOptions {
+        n_clients: 2,
+        rounds: 1,
+        eval_every: 1,
+        dataset_size: 400,
+        test_size: 256,
+        ..Default::default()
+    };
+    let run = train(&rt, &manifest, &cfg, &opts)?;
+    let r = &run.rounds[0];
+    println!(
+        "round 0: loss {:.4}, train acc {:.3}, test acc {:.3}",
+        r.loss, r.train_acc, r.test_acc
+    );
+
+    // 3. Resource management on a simulated wireless deployment.
+    let profile = resnet18::profile();
+    let mut rng = Rng::new(1);
+    let dep = Deployment::generate(&cfg.net, &mut rng);
+    let ch = ChannelRealization::average(&dep);
+    let prob = Problem {
+        cfg: &cfg.net,
+        profile: &profile,
+        dep: &dep,
+        ch: &ch,
+        batch: cfg.train.batch,
+        phi: 0.5,
+    };
+    let res = bcd::solve(&prob, bcd::BcdOptions::default())?;
+    let s = prob.stage_latencies(&res.decision);
+    println!(
+        "\noptimized deployment (C=5, ResNet-18 profile): cut layer {} \
+         ({}), per-round latency {:.3}s",
+        res.decision.cut,
+        profile.layers[res.decision.cut - 1].name,
+        res.objective
+    );
+    println!(
+        "  uplink phase {:.3}s | server fp {:.3}s | server bp {:.3}s | \
+         broadcast {:.3}s | downlink phase {:.3}s",
+        s.uplink_phase_max(),
+        s.server_fp,
+        s.server_bp,
+        s.broadcast,
+        s.downlink_phase_max()
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

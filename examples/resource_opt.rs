@@ -1,0 +1,77 @@
+//! Resource-management walkthrough: run the full BCD optimizer and all four
+//! baselines on one heterogeneous deployment and show where the latency
+//! goes — the paper's §VII-C story (cut-layer selection dominates).
+//!
+//! Usage: cargo run --release --example resource_opt [seed] [clients]
+
+use epsl::channel::{ChannelRealization, Deployment};
+use epsl::config::NetworkConfig;
+use epsl::optim::baselines::{self, Scheme};
+use epsl::optim::{bcd, Problem};
+use epsl::profile::resnet18;
+use epsl::util::rng::Rng;
+use epsl::util::table::{bar_chart, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(11);
+    let clients: usize =
+        args.get(2).and_then(|s| s.parse().ok()).unwrap_or(5);
+
+    let mut net = NetworkConfig::default();
+    net.n_clients = clients;
+    let profile = resnet18::profile();
+    let mut rng = Rng::new(seed);
+    let dep = Deployment::generate(&net, &mut rng);
+    let ch = ChannelRealization::average(&dep);
+    let prob = Problem {
+        cfg: &net,
+        profile: &profile,
+        dep: &dep,
+        ch: &ch,
+        batch: 64,
+        phi: 0.5,
+    };
+
+    println!("deployment (seed {seed}):");
+    let mut t = Table::new("clients")
+        .header(&["client", "f (GHz)", "distance (m)", "LoS"]);
+    for (i, c) in dep.clients.iter().enumerate() {
+        t.row(&[
+            i.to_string(),
+            format!("{:.2}", c.f_client / 1e9),
+            format!("{:.0}", c.distance_m),
+            c.los.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mut items = Vec::new();
+    for scheme in Scheme::all() {
+        let mut srng = Rng::new(999);
+        let d = baselines::solve(&prob, scheme, &mut srng)?;
+        let obj = prob.objective(&d);
+        println!(
+            "{:<38} cut={:<2} latency={:.3}s",
+            scheme.name(),
+            d.cut,
+            obj
+        );
+        items.push((scheme.name().to_string(), obj));
+    }
+    println!();
+    println!("{}", bar_chart("per-round latency by scheme", &items, "s"));
+
+    // BCD trajectory detail.
+    let res = bcd::solve(&prob, bcd::BcdOptions::default())?;
+    println!(
+        "BCD trajectory ({} iterations): {}",
+        res.iterations,
+        res.trajectory
+            .iter()
+            .map(|v| format!("{v:.3}"))
+            .collect::<Vec<_>>()
+            .join(" → ")
+    );
+    Ok(())
+}

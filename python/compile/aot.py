@@ -1,0 +1,248 @@
+"""AOT compile path: lower every training graph to HLO *text* + manifest.
+
+This is the only place python touches the system. ``make artifacts`` runs it
+once; the rust coordinator then loads ``artifacts/*.hlo.txt`` through the
+PJRT C API and never calls back into python.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 crate links against) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Every graph is lowered with ``return_tuple=True`` so the rust side always
+unwraps one tuple literal regardless of arity.
+
+Output layout:
+    artifacts/<name>.hlo.txt      one per exported graph
+    artifacts/manifest.json       full shape/dtype/param-split metadata
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.phi_aggregate import phi_aggregate
+
+# Client-count variants exported for server_train (the rust coordinator picks
+# the artifact matching the experiment's C; Fig. 9 sweeps these).
+CLIENT_COUNTS = (1, 2, 5, 10, 15, 20)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dtype_str(dt) -> str:
+    dt = jnp.dtype(dt)
+    return {"float32": "f32", "int32": "i32", "uint32": "u32",
+            "bfloat16": "bf16"}[dt.name]
+
+
+def _spec(name: str, shape: Sequence[int], dtype) -> dict:
+    return {"name": name, "dtype": _dtype_str(dtype),
+            "shape": [int(d) for d in shape]}
+
+
+class Exporter:
+    """Lowers graphs, writes HLO files, accumulates manifest entries."""
+
+    def __init__(self, out_dir: str, verbose: bool = True):
+        self.out_dir = out_dir
+        self.verbose = verbose
+        self.n_files = 0
+
+    def export(self, fname: str, fn, arg_specs: List[Tuple[str, tuple, object]],
+               out_specs: List[Tuple[str, tuple, object]]) -> dict:
+        """Lower fn(*args) to HLO text; returns the manifest entry."""
+        t0 = time.time()
+        shaped = [jax.ShapeDtypeStruct(s, d) for (_n, s, d) in arg_specs]
+        lowered = jax.jit(fn).lower(*shaped)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        self.n_files += 1
+        if self.verbose:
+            print(f"  [{self.n_files:3d}] {fname:48s} "
+                  f"{len(text) // 1024:5d} KiB  {time.time() - t0:5.1f}s")
+        return {
+            "file": fname,
+            "inputs": [_spec(n, s, d) for (n, s, d) in arg_specs],
+            "outputs": [_spec(n, s, d) for (n, s, d) in out_specs],
+        }
+
+
+def export_family(ex: Exporter, cfg: model.ModelConfig,
+                  client_counts: Sequence[int], cuts: Sequence[int]) -> dict:
+    """Export every graph for one model family; returns manifest subtree."""
+    b = cfg.batch
+    specs = model.param_specs(cfg)
+    pspecs = [(n, s, jnp.float32) for (n, s) in specs]
+    img_shape = (b, cfg.img, cfg.img, cfg.channels)
+
+    fam: dict = {
+        "channels": cfg.channels,
+        "num_classes": cfg.num_classes,
+        "img": cfg.img,
+        "width": cfg.width,
+        "batch": b,
+        "eval_batch": cfg.eval_batch,
+        "params": [{"name": n, "shape": list(s)} for (n, s) in specs],
+        "client_param_count": {
+            str(k): model.client_param_count(k) for k in cuts
+        },
+        "smashed_shape": {
+            str(k): list(cfg.smashed_shape(k)) for k in cuts
+        },
+        "artifacts": {},
+    }
+    arts = fam["artifacts"]
+
+    # ---- init ----
+    arts["init"] = ex.export(
+        f"{cfg.name}_init.hlo.txt",
+        lambda seed: tuple(model.init_params(cfg, seed)),
+        [("seed", (2,), jnp.uint32)],
+        [(n, s, jnp.float32) for (n, s) in specs],
+    )
+
+    # ---- eval (full model, fixed eval batch) ----
+    eb = cfg.eval_batch
+    arts["eval"] = ex.export(
+        f"{cfg.name}_eval.hlo.txt",
+        lambda *a: model.full_eval(cfg, list(a[:len(specs)]), a[len(specs)],
+                                   a[len(specs) + 1]),
+        pspecs + [("x", (eb, cfg.img, cfg.img, cfg.channels), jnp.float32),
+                  ("y", (eb,), jnp.int32)],
+        [("loss", (), jnp.float32), ("ncorrect", (), jnp.float32)],
+    )
+
+    arts["client_fwd"] = {}
+    arts["client_step"] = {}
+    arts["server_train"] = {}
+    arts["phi_agg"] = {}
+
+    for cut in cuts:
+        ncp = model.client_param_count(cut)
+        csp = pspecs[:ncp]
+        ssp = pspecs[ncp:]
+        smash = cfg.smashed_shape(cut)
+
+        # ---- client_fwd ----
+        def cf(*a, _cut=cut, _ncp=ncp):
+            return (model.client_fwd(cfg, _cut, list(a[:_ncp]), a[_ncp]),)
+
+        arts["client_fwd"][str(cut)] = ex.export(
+            f"{cfg.name}_client_fwd_cut{cut}.hlo.txt", cf,
+            csp + [("x", img_shape, jnp.float32)],
+            [("smashed", (b,) + smash, jnp.float32)],
+        )
+
+        # ---- client_step ----
+        def cs(*a, _cut=cut, _ncp=ncp):
+            return tuple(
+                model.client_step(cfg, _cut, list(a[:_ncp]), a[_ncp],
+                                  a[_ncp + 1], a[_ncp + 2]))
+
+        arts["client_step"][str(cut)] = ex.export(
+            f"{cfg.name}_client_step_cut{cut}.hlo.txt", cs,
+            csp + [("x", img_shape, jnp.float32),
+                   ("g_cut", (b,) + smash, jnp.float32),
+                   ("lr", (), jnp.float32)],
+            [(n, s, jnp.float32) for (n, s, _d) in csp],
+        )
+
+        # ---- server_train per client count ----
+        arts["server_train"][str(cut)] = {}
+        for cc in client_counts:
+            def st(*a, _cut=cut, _cc=cc, _nsp=len(ssp)):
+                new_p, cut_agg, cut_unagg, loss, ncorr = model.server_train(
+                    cfg, _cut, _cc, list(a[:_nsp]), a[_nsp], a[_nsp + 1],
+                    a[_nsp + 2], a[_nsp + 3], a[_nsp + 4])
+                return tuple(new_p) + (cut_agg, cut_unagg, loss, ncorr)
+
+            arts["server_train"][str(cut)][str(cc)] = ex.export(
+                f"{cfg.name}_server_train_cut{cut}_c{cc}.hlo.txt", st,
+                ssp + [("smashed", (cc, b) + smash, jnp.float32),
+                       ("y", (cc, b), jnp.int32),
+                       ("lam", (cc,), jnp.float32),
+                       ("mask", (b,), jnp.float32),
+                       ("lr", (), jnp.float32)],
+                [(n, s, jnp.float32) for (n, s, _d) in ssp] +
+                [("cut_agg", (b,) + smash, jnp.float32),
+                 ("cut_unagg", (cc, b) + smash, jnp.float32),
+                 ("loss", (), jnp.float32),
+                 ("ncorrect", (), jnp.float32)],
+            )
+
+        # ---- standalone phi_aggregate kernel (L1 perf bench target) ----
+        q = smash[0] * smash[1] * smash[2]
+        cc0 = 5 if 5 in client_counts else client_counts[0]
+
+        def pa(z, lam, mask, _q=q):
+            return (phi_aggregate(z, lam, mask),)
+
+        arts["phi_agg"][str(cut)] = ex.export(
+            f"{cfg.name}_phi_agg_cut{cut}.hlo.txt", pa,
+            [("z", (cc0, b, q), jnp.float32), ("lam", (cc0,), jnp.float32),
+             ("mask", (b,), jnp.float32)],
+            [("out", (cc0, b, q), jnp.float32)],
+        )
+
+    return fam
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--families", default="mnist,ham")
+    ap.add_argument("--cuts", default="1,2,3,4")
+    ap.add_argument("--clients", default=",".join(map(str, CLIENT_COUNTS)))
+    ap.add_argument("--fast", action="store_true",
+                    help="minimal artifact set (CI smoke): mnist, cut 2, C=2")
+    args = ap.parse_args()
+
+    if args.fast:
+        families, cuts, clients = ["mnist"], [2], [2]
+    else:
+        families = args.families.split(",")
+        cuts = [int(c) for c in args.cuts.split(",")]
+        clients = [int(c) for c in args.clients.split(",")]
+
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+    ex = Exporter(args.out)
+    manifest = {
+        "version": 1,
+        "client_counts": clients,
+        "cuts": cuts,
+        "families": {},
+    }
+    for fname in families:
+        cfg = model.FAMILIES[fname]
+        print(f"family {fname}: b={cfg.batch} img={cfg.img} "
+              f"classes={cfg.num_classes}")
+        manifest["families"][fname] = export_family(ex, cfg, clients, cuts)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {ex.n_files} artifacts + manifest.json "
+          f"in {time.time() - t0:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

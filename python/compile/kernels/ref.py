@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness pin).
+
+These implement paper eq. (5)-(6) semantics directly with jnp ops and are
+what the pytest/hypothesis suites compare the Pallas kernels against.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def phi_aggregate_ref(z, lam, mask):
+    """Reference for kernels.phi_aggregate.
+
+    out[i, j] = mask[j] * sum_k lam[k] z[k, j] + (1 - mask[j]) * z[i, j].
+    """
+    c, b = z.shape[0], z.shape[1]
+    assert lam.shape == (c,)
+    assert mask.shape == (b,)
+    extra = (1,) * (z.ndim - 2)
+    lam_b = lam.reshape((c, 1) + extra).astype(jnp.float32)
+    agg = jnp.sum(lam_b * z.astype(jnp.float32), axis=0, keepdims=True)
+    agg = agg.astype(z.dtype)
+    m = mask.reshape((1, b) + extra).astype(z.dtype)
+    return m * agg + (1.0 - m) * z
+
+
+def sgd_update_ref(w, g, lr):
+    """Reference for kernels.sgd_update."""
+    return w - jnp.asarray(lr, w.dtype) * g
+
+
+def aggregation_mask(phi: float, b: int):
+    """mask[j] = 1 for j < ceil(phi*b) — the paper's aggregated slot count."""
+    m = math.ceil(phi * b)
+    return jnp.where(jnp.arange(b) < m, 1.0, 0.0).astype(jnp.float32)

@@ -1,0 +1,389 @@
+"""L2: the split model + EPSL train-step graphs (build-time JAX).
+
+Implements the paper's training procedure (§IV, Algorithm 1) as a family of
+jit-lowerable functions over a small residual CNN ("SplitNet") that mirrors
+ResNet-18's block topology at reproduction scale (see DESIGN.md §3 for the
+substitution note — latency experiments use the paper's exact ResNet-18
+Table-IV profile analytically; *training* experiments run this network
+end-to-end through PJRT from the rust coordinator).
+
+The network is staged so that every stage boundary is a legal cut layer
+(paper Fig. 6's "potential choice of the cut layer"):
+
+    stage 1: conv3x3(w1) + relu
+    stage 2: residual block (w -> w)
+    stage 3: residual block (w -> 2w, stride 2)
+    stage 4: residual block (2w -> 4w, stride 2)
+    head:    global-avg-pool + fc          (always server-side)
+
+Cut after stage k in {1,2,3,4}: client owns stages 1..k, server owns the
+rest. Parameters live in one canonical ordered list; per-cut client/server
+subsets are contiguous prefix/suffix (recorded in the manifest).
+
+Exported graphs (lowered to HLO text by aot.py, executed from rust):
+  init                      seed[2]u32                    -> all params
+  client_fwd_cut{k}         (P_c..., X[b,...])            -> smashed S
+  server_train_cut{k}_c{C}  (P_s..., S[C,b,...], y[C,b],
+                             lam[C], mask[b], lr)         -> (P_s'...,
+                             cut_agg[b,...], cut_unagg[C,b,...],
+                             loss, ncorrect)
+  client_step_cut{k}        (P_c..., X, g_cut[b,...], lr) -> P_c'...
+  eval                      (P..., X[B,...], y[B])        -> (loss, ncorrect)
+
+EPSL semantics implemented exactly as eq. (5)-(6): the last-layer
+activations' gradients of the first ceil(phi*b) sample slots of every client
+are lambda-aggregated client-wise *before* the remaining server BP. The
+aggregated slots back-propagate through a "virtual batch" whose inputs are
+the lambda-aggregated smashed activations (one BP pass over ceil(phi*b)
+virtual samples — matching the paper's server BP workload model, eq. 17) and
+the resulting cut-layer gradient is identical for all clients, which is what
+makes the downlink a broadcast (stage 5) rather than C unicasts. phi is
+dynamic at runtime via the mask vector; phi=0 reproduces PSL bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.phi_aggregate import phi_aggregate_nd, sgd_update
+
+# ----------------------------------------------------------------------------
+# Configuration
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape configuration for one model family."""
+
+    name: str
+    channels: int  # input image channels
+    num_classes: int
+    img: int = 16  # square input resolution
+    width: int = 8  # base conv width (stages: w, w, 2w, 4w)
+    batch: int = 32  # per-client mini-batch b
+    eval_batch: int = 256
+
+    @property
+    def stage_widths(self) -> Tuple[int, int, int, int]:
+        w = self.width
+        return (w, w, 2 * w, 4 * w)
+
+    def smashed_shape(self, cut: int) -> Tuple[int, int, int]:
+        """(h, w, c) of the activations at cut layer `cut` (after stage cut)."""
+        assert 1 <= cut <= 4
+        ws = self.stage_widths
+        if cut <= 2:
+            return (self.img, self.img, ws[cut - 1])
+        if cut == 3:
+            return (self.img // 2, self.img // 2, ws[2])
+        return (self.img // 4, self.img // 4, ws[3])
+
+
+MNIST_LIKE = ModelConfig(name="mnist", channels=1, num_classes=10)
+HAM_LIKE = ModelConfig(name="ham", channels=3, num_classes=7)
+
+FAMILIES: Dict[str, ModelConfig] = {c.name: c for c in (MNIST_LIKE, HAM_LIKE)}
+CUTS = (1, 2, 3, 4)
+
+# ----------------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical ordered (name, shape) list for the full model."""
+    w1, w2, w3, w4 = cfg.stage_widths
+    specs: List[Tuple[str, Tuple[int, ...]]] = []
+    # stage 1
+    specs.append(("s1.w", (3, 3, cfg.channels, w1)))
+    specs.append(("s1.b", (w1,)))
+    # stage 2: residual w1 -> w2 (stride 1, identity skip: w1 == w2)
+    specs.append(("s2.wa", (3, 3, w1, w2)))
+    specs.append(("s2.ba", (w2,)))
+    specs.append(("s2.wb", (3, 3, w2, w2)))
+    specs.append(("s2.bb", (w2,)))
+    # stage 3: residual w2 -> w3, stride 2, projection skip
+    specs.append(("s3.wa", (3, 3, w2, w3)))
+    specs.append(("s3.ba", (w3,)))
+    specs.append(("s3.wb", (3, 3, w3, w3)))
+    specs.append(("s3.bb", (w3,)))
+    specs.append(("s3.wp", (1, 1, w2, w3)))
+    specs.append(("s3.bp", (w3,)))
+    # stage 4: residual w3 -> w4, stride 2, projection skip
+    specs.append(("s4.wa", (3, 3, w3, w4)))
+    specs.append(("s4.ba", (w4,)))
+    specs.append(("s4.wb", (3, 3, w4, w4)))
+    specs.append(("s4.bb", (w4,)))
+    specs.append(("s4.wp", (1, 1, w3, w4)))
+    specs.append(("s4.bp", (w4,)))
+    # head
+    specs.append(("fc.w", (w4, cfg.num_classes)))
+    specs.append(("fc.b", (cfg.num_classes,)))
+    return specs
+
+
+# Number of parameter tensors per stage (canonical-prefix bookkeeping).
+_STAGE_PARAM_COUNTS = (2, 4, 6, 6)  # s1, s2, s3, s4
+
+
+def client_param_count(cut: int) -> int:
+    return sum(_STAGE_PARAM_COUNTS[:cut])
+
+
+def split_params(params: Sequence[jax.Array], cut: int):
+    n = client_param_count(cut)
+    return list(params[:n]), list(params[n:])
+
+
+def init_params(cfg: ModelConfig, seed: jax.Array) -> List[jax.Array]:
+    """He-normal init; `seed` is a uint32[2] PRNG key payload."""
+    key = jax.random.wrap_key_data(seed.astype(jnp.uint32))
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.split(".")[-1].startswith("b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = math.sqrt(2.0 / fan_in)
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+# ----------------------------------------------------------------------------
+# Forward passes
+# ----------------------------------------------------------------------------
+
+_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def _conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=_DN)
+    return y + b[None, None, None, :]
+
+
+def _stage1(p, x):
+    return jax.nn.relu(_conv(x, p["s1.w"], p["s1.b"]))
+
+
+def _resblock(p, prefix, x, stride, project):
+    h = jax.nn.relu(_conv(x, p[f"{prefix}.wa"], p[f"{prefix}.ba"], stride))
+    h = _conv(h, p[f"{prefix}.wb"], p[f"{prefix}.bb"])
+    if project:
+        skip = _conv(x, p[f"{prefix}.wp"], p[f"{prefix}.bp"], stride)
+    else:
+        skip = x
+    return jax.nn.relu(h + skip)
+
+
+def _head(p, x):
+    pooled = jnp.mean(x, axis=(1, 2))  # global average pool
+    return pooled @ p["fc.w"] + p["fc.b"]
+
+
+_STAGES = (
+    lambda p, x: _stage1(p, x),
+    lambda p, x: _resblock(p, "s2", x, 1, False),
+    lambda p, x: _resblock(p, "s3", x, 2, True),
+    lambda p, x: _resblock(p, "s4", x, 2, True),
+)
+
+
+def forward_stages(params: Sequence[jax.Array], names: Sequence[str], x,
+                   from_stage: int, to_stage: int, with_head: bool):
+    """Run stages [from_stage, to_stage] (1-based, inclusive), then head."""
+    p = dict(zip(names, params))
+    h = x
+    for s in range(from_stage, to_stage + 1):
+        h = _STAGES[s - 1](p, h)
+    if with_head:
+        h = _head(p, h)
+    return h
+
+
+def full_names(cfg: ModelConfig) -> List[str]:
+    return [n for n, _ in param_specs(cfg)]
+
+
+def client_names(cfg: ModelConfig, cut: int) -> List[str]:
+    return full_names(cfg)[:client_param_count(cut)]
+
+
+def server_names(cfg: ModelConfig, cut: int) -> List[str]:
+    return full_names(cfg)[client_param_count(cut):]
+
+
+def client_fwd(cfg: ModelConfig, cut: int, params: Sequence[jax.Array], x):
+    """Client-side FP: stages 1..cut. x: (b, img, img, ch) -> smashed."""
+    return forward_stages(params, client_names(cfg, cut), x, 1, cut,
+                          with_head=False)
+
+
+def server_fwd(cfg: ModelConfig, cut: int, params: Sequence[jax.Array], s):
+    """Server-side FP: stages cut+1..4 + head. s: (n, *smashed) -> logits."""
+    return forward_stages(params, server_names(cfg, cut), s, cut + 1, 4,
+                          with_head=True)
+
+
+def full_fwd(cfg: ModelConfig, params: Sequence[jax.Array], x):
+    return forward_stages(params, full_names(cfg), x, 1, 4, with_head=True)
+
+
+# ----------------------------------------------------------------------------
+# Loss / gradients
+# ----------------------------------------------------------------------------
+
+
+def _softmax_xent(logits, labels, num_classes):
+    """Per-sample cross-entropy and its dL/dlogits (both unweighted)."""
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=logits.dtype)
+    ce = -jnp.sum(onehot * logp, axis=-1)
+    dlogits = jax.nn.softmax(logits) - onehot
+    return ce, dlogits
+
+
+def _ncorrect(logits, labels):
+    return jnp.sum(
+        (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+# ----------------------------------------------------------------------------
+# Exported train-step graphs
+# ----------------------------------------------------------------------------
+
+
+def server_train(cfg: ModelConfig, cut: int, n_clients: int,
+                 server_params: Sequence[jax.Array], smashed, labels, lam,
+                 mask, lr):
+    """EPSL server-side step (paper §IV stages 3-6, eq. 5-7).
+
+    Args:
+      server_params: server-side tensors (canonical suffix for this cut).
+      smashed: (C, b, *smash) concatenated client smashed data (stage 2's
+        uplink payload).
+      labels:  (C, b) int32.
+      lam:     (C,) dataset weights lambda_i = D_i / D.
+      mask:    (b,) aggregation mask; mask[j] = 1 for j < ceil(phi*b).
+      lr:      scalar learning rate eta_s.
+
+    Returns:
+      (new server params..., cut_agg (b,*smash) broadcast cut-layer gradient,
+       cut_unagg (C,b,*smash) unicast cut-layer gradients (masked slots are
+       zero), global weighted loss, ncorrect over C*b samples)
+    """
+    c, b = n_clients, cfg.batch
+    smash = cfg.smashed_shape(cut)
+    flat = smashed.reshape((c * b,) + smash)
+
+    def fwd(p_list, s):
+        return server_fwd(cfg, cut, p_list, s)
+
+    # --- server FP over all C*b real samples (eq. 3, latency eq. 16) ---
+    logits, pullback = jax.vjp(fwd, list(server_params), flat)
+    labels_flat = labels.reshape(c * b)
+    ce, dlogits = _softmax_xent(logits, labels_flat, cfg.num_classes)
+    ncorr = _ncorrect(logits, labels_flat)
+    # Global loss: sum_i lambda_i * (1/b) * sum_j CE_ij  (eq. 1 weighting).
+    ce_cb = ce.reshape(c, b)
+    loss = jnp.sum(lam[:, None] * ce_cb) / b
+
+    z = dlogits.reshape(c, b, cfg.num_classes)
+
+    # --- last-layer gradient aggregation (eq. 6) via the Pallas kernel ---
+    z_mixed = phi_aggregate_nd(z, lam, mask)  # (C,b,nc); masked rows = zbar
+    zbar = z_mixed[0]  # (b, nc): masked slots hold the aggregate
+
+    # Virtual aggregated batch: lambda-aggregated smashed activations.
+    s_mixed = phi_aggregate_nd(smashed, lam, mask)
+    sbar = s_mixed[0]  # (b, *smash)
+
+    # --- BP of the aggregated slots: one pass over ceil(phi*b) virtual
+    # samples (eq. 5 first block; row weight 1/b) ---
+    _, pullback_v = jax.vjp(fwd, list(server_params), sbar)
+    cot_v = (mask[:, None] * zbar) / b
+    gw_v, gs_v = pullback_v(cot_v)
+    cut_agg = gs_v * b  # raw activations' gradients for the broadcast
+
+    # --- BP of the unaggregated slots (eq. 5 remaining blocks; row weight
+    # lambda_i / b) ---
+    unmask = (1.0 - mask)[None, :, None]
+    cot_r = (unmask * lam[:, None, None] * z / b).reshape(
+        (c * b, cfg.num_classes))
+    gw_r, gs_r = pullback(cot_r)
+    # Recover raw (unweighted) activations' gradients for the unicast
+    # downlink: divide the lambda_i/b row weight back out.
+    lam_safe = jnp.maximum(lam, 1e-12)
+    lam_b = lam_safe[:, None, None, None, None]
+    cut_unagg = gs_r.reshape((c, b) + smash) * b / lam_b
+    cut_unagg = cut_unagg * (1.0 - mask)[None, :, None, None, None]
+
+    # --- parameter update (eq. 7) via the fused Pallas SGD kernel ---
+    new_params = [
+        sgd_update(w, gv + gr, lr)
+        for w, gv, gr in zip(server_params, gw_v, gw_r)
+    ]
+    return new_params, cut_agg, cut_unagg, loss, ncorr
+
+
+def client_step(cfg: ModelConfig, cut: int, client_params: Sequence[jax.Array],
+                x, g_cut, lr):
+    """Client-side BP + update (paper §IV stage 7, eq. 8-12).
+
+    g_cut: (b, *smash) raw cut-layer activations' gradients for this client
+    (rust assembles mask[j]*cut_agg[j] + (1-mask[j])*cut_unagg[i,j]).
+    """
+    b = cfg.batch
+
+    def fwd(p_list, xx):
+        return client_fwd(cfg, cut, p_list, xx)
+
+    _, pullback = jax.vjp(fwd, list(client_params), x)
+    gw, _gx = pullback(g_cut / b)  # eq. 9: every row weighted 1/b
+    return [sgd_update(w, g, lr) for w, g in zip(client_params, gw)]
+
+
+def full_eval(cfg: ModelConfig, params: Sequence[jax.Array], x, labels):
+    """Full-model eval on a fixed-size batch: (mean CE, ncorrect)."""
+    logits = full_fwd(cfg, params, x)
+    ce, _ = _softmax_xent(logits, labels, cfg.num_classes)
+    return jnp.mean(ce), _ncorrect(logits, labels)
+
+
+# ----------------------------------------------------------------------------
+# PSL reference step (pytest oracle: EPSL(phi=0) must match this; also used
+# for the linear-tail equivalence test)
+# ----------------------------------------------------------------------------
+
+
+def psl_server_train_ref(cfg: ModelConfig, cut: int, n_clients: int,
+                         server_params: Sequence[jax.Array], smashed, labels,
+                         lam, lr):
+    """Plain PSL: BP every sample with weight lambda_i/b, no aggregation."""
+    c, b = n_clients, cfg.batch
+    smash = cfg.smashed_shape(cut)
+    flat = smashed.reshape((c * b,) + smash)
+    logits, pullback = jax.vjp(
+        lambda p, s: server_fwd(cfg, cut, p, s), list(server_params), flat)
+    labels_flat = labels.reshape(c * b)
+    ce, dlogits = _softmax_xent(logits, labels_flat, cfg.num_classes)
+    ce_cb = ce.reshape(c, b)
+    loss = jnp.sum(lam[:, None] * ce_cb) / b
+    z = dlogits.reshape(c, b, cfg.num_classes)
+    cot = (lam[:, None, None] * z / b).reshape((c * b, cfg.num_classes))
+    gw, gs = pullback(cot)
+    lam_safe = jnp.maximum(lam, 1e-12)
+    cut_grads = gs.reshape((c, b) + smash) * b / lam_safe[:, None, None, None,
+                                                          None]
+    new_params = [w - lr * g for w, g in zip(server_params, gw)]
+    return new_params, cut_grads, loss, _ncorrect(logits, labels_flat)

@@ -1,0 +1,70 @@
+"""AOT export: manifest consistency + HLO text well-formedness."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART = "/tmp/epsl_test_artifacts"
+
+
+@pytest.fixture(scope="module")
+def fast_artifacts():
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", ART, "--fast"],
+        check=True, cwd=os.path.dirname(os.path.dirname(__file__)))
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_structure(fast_artifacts):
+    m = fast_artifacts
+    assert m["version"] == 1
+    assert "mnist" in m["families"]
+    fam = m["families"]["mnist"]
+    for key in ("init", "eval", "client_fwd", "client_step", "server_train",
+                "phi_agg"):
+        assert key in fam["artifacts"], key
+
+
+def test_all_files_exist_and_parse(fast_artifacts):
+    fam = fast_artifacts["families"]["mnist"]
+
+    def walk(entry):
+        if isinstance(entry, dict) and "file" in entry:
+            yield entry
+        elif isinstance(entry, dict):
+            for v in entry.values():
+                yield from walk(v)
+
+    n = 0
+    for entry in walk(fam["artifacts"]):
+        path = os.path.join(ART, entry["file"])
+        assert os.path.exists(path), path
+        text = open(path).read()
+        assert "ENTRY" in text, f"no ENTRY computation in {path}"
+        assert "HloModule" in text
+        n += 1
+    assert n == 6
+
+
+def test_io_spec_shapes(fast_artifacts):
+    fam = fast_artifacts["families"]["mnist"]
+    st = fam["artifacts"]["server_train"]["2"]["2"]
+    names = [s["name"] for s in st["inputs"]]
+    # server params then (smashed, y, lam, mask, lr)
+    assert names[-5:] == ["smashed", "y", "lam", "mask", "lr"]
+    smashed = st["inputs"][-5]
+    assert smashed["shape"] == [2, fam["batch"]] + fam["smashed_shape"]["2"]
+    outs = [s["name"] for s in st["outputs"]]
+    assert outs[-4:] == ["cut_agg", "cut_unagg", "loss", "ncorrect"]
+    n_server_params = len(fam["params"]) - fam["client_param_count"]["2"]
+    assert len(st["outputs"]) == n_server_params + 4
+
+
+def test_param_split_counts(fast_artifacts):
+    fam = fast_artifacts["families"]["mnist"]
+    assert fam["client_param_count"]["2"] == 6
+    assert len(fam["params"]) == 20

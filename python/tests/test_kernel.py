@@ -1,0 +1,201 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes/phi; the core signal of the compile path.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.phi_aggregate import (phi_aggregate, phi_aggregate_nd,
+                                           sgd_update)
+from compile.kernels.ref import (aggregation_mask, phi_aggregate_ref,
+                                 sgd_update_ref)
+
+settings.register_profile("ci", deadline=None, max_examples=40)
+settings.load_profile("ci")
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _lam(key, c):
+    raw = jax.random.uniform(key, (c,), jnp.float32, 0.05, 1.0)
+    return raw / jnp.sum(raw)
+
+
+# ---------------------------------------------------------------------------
+# phi_aggregate vs ref
+# ---------------------------------------------------------------------------
+
+
+@given(
+    c=st.integers(1, 12),
+    b=st.integers(1, 48),
+    q=st.integers(1, 700),
+    phi=st.sampled_from([0.0, 0.25, 0.5, 0.75, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_phi_aggregate_matches_ref(c, b, q, phi, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    z = _rand(k1, (c, b, q), jnp.float32)
+    lam = _lam(k2, c)
+    mask = aggregation_mask(phi, b)
+    out = phi_aggregate(z, lam, mask)
+    ref = phi_aggregate_ref(z, lam, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5,
+                               rtol=1e-5)
+
+
+@given(
+    c=st.integers(1, 6),
+    b=st.integers(1, 16),
+    q=st.integers(1, 200),
+    tile=st.sampled_from([1, 7, 64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_phi_aggregate_tile_invariance(c, b, q, tile, seed):
+    """Output must not depend on the feature-tile split."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    z = _rand(k1, (c, b, q), jnp.float32)
+    lam = _lam(k2, c)
+    mask = aggregation_mask(0.5, b)
+    a = phi_aggregate(z, lam, mask, tile_q=tile)
+    bfull = phi_aggregate(z, lam, mask, tile_q=q)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bfull), atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_phi_aggregate_dtypes(dtype):
+    key = jax.random.PRNGKey(7)
+    k1, k2 = jax.random.split(key)
+    z = _rand(k1, (4, 8, 33), dtype)
+    lam = _lam(k2, 4)
+    mask = aggregation_mask(0.5, 8)
+    out = phi_aggregate(z, lam, mask)
+    ref = phi_aggregate_ref(z, lam, mask)
+    assert out.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol,
+        rtol=tol)
+
+
+def test_phi_zero_is_identity():
+    """phi=0 -> EPSL degenerates to PSL: the kernel must be the identity."""
+    key = jax.random.PRNGKey(1)
+    z = _rand(key, (5, 16, 40), jnp.float32)
+    lam = _lam(key, 5)
+    out = phi_aggregate(z, lam, aggregation_mask(0.0, 16))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(z))
+
+
+def test_phi_one_rows_identical_across_clients():
+    """phi=1: every client sees the same aggregated tensor (broadcastable)."""
+    key = jax.random.PRNGKey(2)
+    z = _rand(key, (6, 8, 30), jnp.float32)
+    lam = _lam(jax.random.PRNGKey(3), 6)
+    out = np.asarray(phi_aggregate(z, lam, aggregation_mask(1.0, 8)))
+    for i in range(1, 6):
+        np.testing.assert_allclose(out[i], out[0], atol=1e-6)
+    # and the value is the lambda-weighted sum
+    expect = np.einsum("c,cbq->bq", np.asarray(lam), np.asarray(z))
+    np.testing.assert_allclose(out[0], expect, atol=1e-5)
+
+
+def test_one_hot_lambda_selects_client():
+    """lam = e_k makes the aggregate equal client k's rows."""
+    key = jax.random.PRNGKey(4)
+    z = _rand(key, (4, 6, 12), jnp.float32)
+    lam = jnp.array([0.0, 0.0, 1.0, 0.0])
+    out = np.asarray(phi_aggregate(z, lam, aggregation_mask(1.0, 6)))
+    np.testing.assert_allclose(out[0], np.asarray(z)[2], atol=1e-6)
+
+
+@given(
+    c=st.integers(1, 5),
+    b=st.integers(1, 12),
+    phi=st.sampled_from([0.0, 0.3, 0.5, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mask_boundary_matches_ceil(c, b, phi, seed):
+    """Exactly ceil(phi*b) slots are aggregated — the paper's count."""
+    m = math.ceil(phi * b)
+    mask = np.asarray(aggregation_mask(phi, b))
+    assert int(mask.sum()) == m
+    key = jax.random.PRNGKey(seed)
+    z = _rand(key, (c, b, 9), jnp.float32)
+    lam = _lam(jax.random.PRNGKey(seed % 1000 + 1), c)
+    out = np.asarray(phi_aggregate(z, lam, jnp.asarray(mask)))
+    zn = np.asarray(z)
+    # unmasked slots untouched
+    np.testing.assert_array_equal(out[:, m:], zn[:, m:])
+    # masked slots identical across clients
+    for i in range(1, c):
+        np.testing.assert_allclose(out[i, :m], out[0, :m], atol=1e-6)
+
+
+def test_phi_aggregate_nd_matches_flat():
+    key = jax.random.PRNGKey(5)
+    z = _rand(key, (3, 4, 2, 5, 7), jnp.float32)
+    lam = _lam(jax.random.PRNGKey(6), 3)
+    mask = aggregation_mask(0.5, 4)
+    out = phi_aggregate_nd(z, lam, mask)
+    ref = phi_aggregate_ref(z, lam, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sgd_update vs ref
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 9000),
+    lr=st.floats(1e-5, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_update_matches_ref(n, lr, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    w = _rand(k1, (n,), jnp.float32)
+    g = _rand(k2, (n,), jnp.float32)
+    out = sgd_update(w, g, jnp.float32(lr))
+    ref = sgd_update_ref(w, g, lr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6,
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(3, 3, 1, 8), (8,), (32, 10), (2, 2, 2, 2)])
+def test_sgd_update_preserves_shape(shape):
+    key = jax.random.PRNGKey(11)
+    w = _rand(key, shape, jnp.float32)
+    g = jnp.ones(shape, jnp.float32)
+    out = sgd_update(w, g, jnp.float32(0.1))
+    assert out.shape == shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(w) - 0.1,
+                               atol=1e-6)
+
+
+def test_sgd_zero_lr_is_identity():
+    key = jax.random.PRNGKey(12)
+    w = _rand(key, (100,), jnp.float32)
+    g = _rand(jax.random.PRNGKey(13), (100,), jnp.float32)
+    out = sgd_update(w, g, jnp.float32(0.0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(w))
+
+
+def test_kernel_jits_and_lowers():
+    """The kernel must survive jit.lower (the AOT path requirement)."""
+    spec = jax.ShapeDtypeStruct((3, 8, 64), jnp.float32)
+    lspec = jax.ShapeDtypeStruct((3,), jnp.float32)
+    mspec = jax.ShapeDtypeStruct((8,), jnp.float32)
+    lowered = jax.jit(phi_aggregate).lower(spec, lspec, mspec)
+    assert lowered is not None

@@ -1,0 +1,235 @@
+"""L2 correctness: split-model semantics, EPSL vs PSL, gradient checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import aggregation_mask
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+CFG = model.MNIST_LIKE
+
+
+def _params(seed=0):
+    return model.init_params(CFG, jnp.array([0, seed], jnp.uint32))
+
+
+def _batch(key, c=2):
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (c, CFG.batch, CFG.img, CFG.img, CFG.channels))
+    y = jax.random.randint(ky, (c, CFG.batch), 0, CFG.num_classes)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# Structure
+# ---------------------------------------------------------------------------
+
+
+def test_param_specs_shapes():
+    params = _params()
+    specs = model.param_specs(CFG)
+    assert len(params) == len(specs) == 20
+    for p, (name, shape) in zip(params, specs):
+        assert p.shape == shape, name
+
+
+@pytest.mark.parametrize("cut", model.CUTS)
+def test_split_is_prefix_suffix(cut):
+    params = _params()
+    pc, ps = model.split_params(params, cut)
+    assert len(pc) == model.client_param_count(cut)
+    assert len(pc) + len(ps) == len(params)
+
+
+@pytest.mark.parametrize("cut", model.CUTS)
+def test_client_server_compose_to_full(cut):
+    """client_fwd then server_fwd must equal full_fwd for every cut."""
+    params = _params()
+    pc, ps = model.split_params(params, cut)
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (CFG.batch, CFG.img, CFG.img, CFG.channels))
+    s = model.client_fwd(CFG, cut, pc, x)
+    assert s.shape == (CFG.batch,) + CFG.smashed_shape(cut)
+    logits_split = model.server_fwd(CFG, cut, ps, s)
+    logits_full = model.full_fwd(CFG, params, x)
+    np.testing.assert_allclose(np.asarray(logits_split),
+                               np.asarray(logits_full), atol=1e-5)
+
+
+def test_smashed_shapes_match_config():
+    assert CFG.smashed_shape(1) == (16, 16, 8)
+    assert CFG.smashed_shape(2) == (16, 16, 8)
+    assert CFG.smashed_shape(3) == (8, 8, 16)
+    assert CFG.smashed_shape(4) == (4, 4, 32)
+
+
+def test_init_deterministic_and_seed_sensitive():
+    a = _params(1)
+    b = _params(1)
+    c = _params(2)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    assert any(
+        not np.allclose(np.asarray(pa), np.asarray(pc))
+        for pa, pc in zip(a, c))
+
+
+# ---------------------------------------------------------------------------
+# EPSL semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cut", [1, 3])
+def test_epsl_phi0_equals_psl(cut):
+    """phi=0 must reproduce plain PSL (paper: 'PSL is a special case')."""
+    params = _params()
+    _, ps = model.split_params(params, cut)
+    key = jax.random.PRNGKey(5)
+    c = 3
+    x, y = _batch(key, c)
+    pc, _ = model.split_params(params, cut)
+    sm = jnp.stack([model.client_fwd(CFG, cut, pc, x[i]) for i in range(c)])
+    lam = jnp.array([0.2, 0.3, 0.5])
+    mask0 = aggregation_mask(0.0, CFG.batch)
+    new_p, _cagg, cunagg, loss, ncorr = model.server_train(
+        CFG, cut, c, ps, sm, y, lam, mask0, jnp.float32(0.05))
+    ref_p, ref_g, ref_loss, ref_n = model.psl_server_train_ref(
+        CFG, cut, c, ps, sm, y, lam, 0.05)
+    assert abs(float(loss) - float(ref_loss)) < 1e-6
+    assert float(ncorr) == float(ref_n)
+    for a, b in zip(new_p, ref_p):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cunagg), np.asarray(ref_g),
+                               atol=1e-5)
+
+
+def test_epsl_phi1_cut_grads_broadcastable():
+    """phi=1: unagg grads vanish; agg grad is one tensor for all clients."""
+    cut, c = 2, 4
+    params = _params()
+    pc, ps = model.split_params(params, cut)
+    key = jax.random.PRNGKey(6)
+    x, y = _batch(key, c)
+    sm = jnp.stack([model.client_fwd(CFG, cut, pc, x[i]) for i in range(c)])
+    lam = jnp.full((c,), 1.0 / c)
+    new_p, cagg, cunagg, loss, _ = model.server_train(
+        CFG, cut, c, ps, sm, y, lam, aggregation_mask(1.0, CFG.batch),
+        jnp.float32(0.05))
+    np.testing.assert_array_equal(np.asarray(cunagg),
+                                  np.zeros_like(np.asarray(cunagg)))
+    assert np.all(np.isfinite(np.asarray(cagg)))
+    assert np.isfinite(float(loss))
+
+
+def test_aggregate_then_bp_equals_bp_then_aggregate_on_linear_tail():
+    """The paper's linearity argument (§IV): for a linear server-side model,
+    aggregating last-layer gradients then back-propagating equals
+    back-propagating then aggregating."""
+    c, b, q, nc = 3, 8, 20, 5
+    key = jax.random.PRNGKey(8)
+    kw, kz, ks = jax.random.split(key, 3)
+    w = jax.random.normal(kw, (q, nc))
+    s = jax.random.normal(ks, (c, b, q))
+    y = jax.random.randint(kz, (c, b), 0, nc)
+    lam = jnp.array([0.5, 0.25, 0.25])
+
+    def fwd(s_flat):
+        return s_flat @ w
+
+    logits = fwd(s.reshape(c * b, q))
+    onehot = jax.nn.one_hot(y.reshape(c * b), nc)
+    z = (jax.nn.softmax(logits) - onehot).reshape(c, b, nc)
+
+    # BP-then-aggregate: per-client cut grads, lambda-aggregated.
+    cut_per_client = jnp.einsum("cbn,qn->cbq", z, w)
+    bp_then_agg = jnp.einsum("c,cbq->bq", lam, cut_per_client)
+    # Aggregate-then-BP (EPSL): aggregate z, then one BP pass.
+    zbar = jnp.einsum("c,cbn->bn", lam, z)
+    agg_then_bp = jnp.einsum("bn,qn->bq", zbar, w)
+    np.testing.assert_allclose(np.asarray(bp_then_agg),
+                               np.asarray(agg_then_bp), atol=1e-5)
+
+
+@given(phi=st.sampled_from([0.0, 0.25, 0.5, 1.0]),
+       seed=st.integers(0, 10_000))
+def test_server_train_outputs_finite(phi, seed):
+    cut, c = 2, 2
+    params = _params(seed % 7)
+    pc, ps = model.split_params(params, cut)
+    key = jax.random.PRNGKey(seed)
+    x, y = _batch(key, c)
+    sm = jnp.stack([model.client_fwd(CFG, cut, pc, x[i]) for i in range(c)])
+    lam = jnp.array([0.6, 0.4])
+    new_p, cagg, cunagg, loss, ncorr = model.server_train(
+        CFG, cut, c, ps, sm, y, lam, aggregation_mask(phi, CFG.batch),
+        jnp.float32(0.05))
+    assert np.isfinite(float(loss))
+    assert 0.0 <= float(ncorr) <= c * CFG.batch
+    for p in new_p:
+        assert np.all(np.isfinite(np.asarray(p)))
+    assert np.all(np.isfinite(np.asarray(cagg)))
+    assert np.all(np.isfinite(np.asarray(cunagg)))
+
+
+def test_client_step_moves_params_downhill():
+    """A full EPSL round (client fwd -> server train -> client step) must
+    reduce the global loss on the same batch for a small lr."""
+    cut, c = 2, 2
+    params = _params()
+    pc, ps = model.split_params(params, cut)
+    key = jax.random.PRNGKey(9)
+    x, y = _batch(key, c)
+    lam = jnp.array([0.5, 0.5])
+    mask = aggregation_mask(0.5, CFG.batch)
+    lr = jnp.float32(0.1)
+
+    def global_loss(pc_list, ps_list):
+        total = 0.0
+        for i in range(c):
+            s = model.client_fwd(CFG, cut, pc_list[i], x[i])
+            logits = model.server_fwd(CFG, cut, ps_list, s)
+            logp = jax.nn.log_softmax(logits)
+            onehot = jax.nn.one_hot(y[i], CFG.num_classes)
+            total = total + float(lam[i]) * float(
+                jnp.mean(-jnp.sum(onehot * logp, axis=-1)))
+        return total
+
+    pcs = [list(pc) for _ in range(c)]
+    loss_before = global_loss(pcs, ps)
+    for _ in range(5):
+        sm = jnp.stack(
+            [model.client_fwd(CFG, cut, pcs[i], x[i]) for i in range(c)])
+        ps, cagg, cunagg, _, _ = model.server_train(
+            CFG, cut, c, ps, sm, y, lam, mask, lr)
+        for i in range(c):
+            g = mask[:, None, None, None] * cagg + \
+                (1.0 - mask)[:, None, None, None] * cunagg[i]
+            pcs[i] = model.client_step(CFG, cut, pcs[i], x[i], g, lr)
+    loss_after = global_loss(pcs, ps)
+    assert loss_after < loss_before, (loss_before, loss_after)
+
+
+def test_full_eval_counts():
+    params = _params()
+    key = jax.random.PRNGKey(10)
+    x = jax.random.normal(
+        key, (CFG.eval_batch, CFG.img, CFG.img, CFG.channels))
+    y = jax.random.randint(key, (CFG.eval_batch,), 0, CFG.num_classes)
+    loss, ncorr = model.full_eval(CFG, params, x, y)
+    assert np.isfinite(float(loss))
+    assert 0 <= float(ncorr) <= CFG.eval_batch
+
+
+def test_ham_family_shapes():
+    cfg = model.HAM_LIKE
+    params = model.init_params(cfg, jnp.array([0, 0], jnp.uint32))
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (cfg.batch, cfg.img, cfg.img, cfg.channels))
+    logits = model.full_fwd(cfg, params, x)
+    assert logits.shape == (cfg.batch, cfg.num_classes)

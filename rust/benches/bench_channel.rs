@@ -1,0 +1,42 @@
+//! Channel-simulator benches: deployment generation, gain realization,
+//! rate evaluation (the inner loop of every optimizer iteration).
+
+use epsl::channel::rate::{broadcast_rate, downlink_rates, uplink_rates,
+                          Allocation};
+use epsl::channel::{pathloss, ChannelRealization, Deployment};
+use epsl::config::NetworkConfig;
+use epsl::util::bench::Bencher;
+use epsl::util::rng::Rng;
+
+fn main() {
+    let cfg = NetworkConfig::default();
+    let mut rng = Rng::new(1);
+    let dep = Deployment::generate(&cfg, &mut rng);
+    let ch = ChannelRealization::average(&dep);
+    let mut alloc = Allocation::empty(cfg.n_subchannels);
+    for k in 0..cfg.n_subchannels {
+        alloc.assign(k, k % cfg.n_clients);
+    }
+    let psd = vec![-62.0; cfg.n_subchannels];
+
+    let mut b = Bencher::new();
+    let mut rng2 = Rng::new(2);
+    b.run("deployment_generate (C=5, M=20)", || {
+        Deployment::generate(&cfg, &mut rng2)
+    });
+    b.run("channel_average (C=5, M=20)", || {
+        ChannelRealization::average(&dep)
+    });
+    b.run("channel_sample (shadow fading)", || {
+        ChannelRealization::sample(&dep, &mut rng)
+    });
+    b.run("uplink_rates (eq 14)", || {
+        uplink_rates(&cfg, &ch, &alloc, &psd)
+    });
+    b.run("downlink_rates (eq 20)", || downlink_rates(&cfg, &ch, &alloc));
+    b.run("broadcast_rate (eq 18)", || broadcast_rate(&cfg, &ch));
+    b.run("pathloss_mean_gain", || {
+        pathloss::mean_gain(28e9, 120.0, false)
+    });
+    println!("\n{}", b.report());
+}

@@ -1,0 +1,56 @@
+//! Figure-regeneration benches: one end-to-end timing per paper
+//! table/figure family, matching DESIGN.md's per-experiment index.
+//! (The latency figures run at quick settings; the training figures time a
+//! short representative slice rather than a full convergence run.)
+
+use epsl::config::Config;
+use epsl::coordinator::{train, TrainerOptions};
+use epsl::experiments::{self, Ctx};
+use epsl::latency::frameworks::Framework;
+use epsl::runtime::artifact::Manifest;
+use epsl::runtime::Runtime;
+use epsl::util::bench::Bencher;
+
+fn main() {
+    let cfg = Config::new();
+    let mut b = Bencher::slow();
+
+    // Pure latency-model figures (no artifacts needed). fig12/fig13 share
+    // fig11's machinery (scheme sweep / BCD loop) and take minutes per
+    // iteration — fig11 is the representative timing.
+    for id in ["table1", "table4", "fig11"] {
+        b.run(&format!("figure {id} (quick)"), || {
+            let mut ctx =
+                Ctx::new(Config::new(), None, None, "/tmp/epsl_bench", true);
+            experiments::run(id, &mut ctx).unwrap()
+        });
+    }
+
+    // Training-figure slices (table5 / fig4 / fig7-10 share this path).
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("artifacts missing: skipping training-figure benches");
+        println!("\n{}", b.report());
+        return;
+    };
+    let rt = Runtime::new("artifacts").expect("PJRT");
+    for (name, fw) in [
+        ("PSL", Framework::Psl),
+        ("EPSL(0.5)", Framework::Epsl { phi: 0.5 }),
+        ("SFL", Framework::Sfl),
+        ("vanilla SL", Framework::VanillaSl),
+    ] {
+        b.run(&format!("train 5 rounds {name} C=5 (fig4/7/8 slice)"), || {
+            let opts = TrainerOptions {
+                framework: fw,
+                n_clients: 5,
+                rounds: 5,
+                eval_every: 100,
+                dataset_size: 500,
+                test_size: 256,
+                ..Default::default()
+            };
+            train(&rt, &manifest, &cfg, &opts).unwrap()
+        });
+    }
+    println!("\n{}", b.report());
+}

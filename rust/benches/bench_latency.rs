@@ -1,0 +1,57 @@
+//! Latency-model benches: stage-latency evaluation for every framework
+//! (these run inside every optimizer objective evaluation — the tightest
+//! L3 inner loop after the rate computations).
+
+use epsl::latency::frameworks::{round_latency, Framework};
+use epsl::latency::{epsl_stage_latencies, LatencyInputs};
+use epsl::profile::{resnet18, splitnet};
+use epsl::util::bench::Bencher;
+
+fn main() {
+    let p18 = resnet18::profile();
+    let psn = splitnet::profile(splitnet::SplitNetConfig::mnist_like());
+    let f = vec![1e9, 1.2e9, 1.3e9, 1.5e9, 1.6e9];
+    let up = vec![1.5e8; 5];
+    let dn = vec![1.5e8; 5];
+    let mk = |profile, cut| LatencyInputs {
+        profile,
+        cut,
+        batch: 64,
+        phi: 0.5,
+        f_server: 5e9,
+        kappa_server: 1.0 / 32.0,
+        kappa_client: 1.0 / 16.0,
+        f_clients: &f,
+        uplink: &up,
+        downlink: &dn,
+        broadcast: 2e8,
+    };
+
+    let mut b = Bencher::new();
+    let inp18 = mk(&p18, 10);
+    let inpsn = mk(&psn, 2);
+    b.run("epsl_stages resnet18 (18 layers)", || {
+        epsl_stage_latencies(&inp18)
+    });
+    b.run("epsl_stages splitnet (5 layers)", || {
+        epsl_stage_latencies(&inpsn)
+    });
+    for fw in [
+        Framework::VanillaSl,
+        Framework::Sfl,
+        Framework::Psl,
+        Framework::Epsl { phi: 0.5 },
+    ] {
+        b.run(&format!("round_latency {}", fw.name()), || {
+            round_latency(fw, &inp18).round_total()
+        });
+    }
+    b.run("profile rho/varpi scan (all cuts)", || {
+        let mut acc = 0.0;
+        for &j in &p18.cut_candidates {
+            acc += p18.client_fp_flops(j) + p18.server_bp_flops(j);
+        }
+        acc
+    });
+    println!("\n{}", b.report());
+}

@@ -1,0 +1,61 @@
+//! Optimizer benches: the resource-management hot path (L3).
+//!
+//! Paper-relevant targets: the BCD solver must be negligible next to a
+//! training round (it runs once per deployment); per-block costs are
+//! broken out so §Perf can attribute regressions.
+
+use epsl::channel::{ChannelRealization, Deployment};
+use epsl::config::NetworkConfig;
+use epsl::optim::{baselines, bcd, cutlayer, greedy, power, Problem};
+use epsl::profile::resnet18;
+use epsl::util::bench::Bencher;
+use epsl::util::rng::Rng;
+
+fn main() {
+    let cfg = NetworkConfig::default();
+    let profile = resnet18::profile();
+    let mut rng = Rng::new(42);
+    let dep = Deployment::generate(&cfg, &mut rng);
+    let ch = ChannelRealization::average(&dep);
+    let prob = Problem {
+        cfg: &cfg,
+        profile: &profile,
+        dep: &dep,
+        ch: &ch,
+        batch: 64,
+        phi: 0.5,
+    };
+    let psd = vec![-65.0; cfg.n_subchannels];
+    let alloc = greedy::allocate(&prob, &psd, 4);
+
+    let mut b = Bencher::new();
+    b.run("greedy_allocation (Alg 2)", || {
+        greedy::allocate(&prob, &psd, 4)
+    });
+    b.run("power_control (P2 waterfill+bisect)", || {
+        power::solve(&prob, &alloc, 4).unwrap()
+    });
+    b.run("cutlayer_milp (P3 B&B, 17 candidates)", || {
+        cutlayer::solve(&prob, &alloc, &psd).unwrap()
+    });
+    b.run("cutlayer_exhaustive (reference)", || {
+        cutlayer::exhaustive(&prob, &alloc, &psd)
+    });
+    b.run("bcd_full (Alg 3)", || {
+        bcd::solve(&prob, bcd::BcdOptions::default()).unwrap()
+    });
+    let mut srng = Rng::new(7);
+    b.run("baseline_a (RSS+uniform)", || {
+        baselines::solve(&prob, baselines::Scheme::BaselineA, &mut srng)
+            .unwrap()
+    });
+    b.run("objective_eval (eq 23)", || {
+        let d = epsl::optim::Decision {
+            alloc: alloc.clone(),
+            psd_dbm_hz: psd.clone(),
+            cut: 4,
+        };
+        prob.objective(&d)
+    });
+    println!("\n{}", b.report());
+}

@@ -1,0 +1,119 @@
+//! Runtime benches (L1/L2 through PJRT): per-artifact execution cost and
+//! the full EPSL round — the measured counterpart of the §V latency model
+//! and the focus of the §Perf pass.
+//!
+//! Requires `make artifacts`.
+
+use epsl::config::Config;
+use epsl::coordinator::{train, TrainerOptions};
+use epsl::runtime::artifact::Manifest;
+use epsl::runtime::tensor::{literal_f32, literal_i32, literal_u32};
+use epsl::runtime::Runtime;
+use epsl::util::bench::Bencher;
+use epsl::util::rng::Rng;
+
+fn main() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("skipping bench_runtime: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::new("artifacts").expect("PJRT cpu client");
+    let fam = manifest.family("mnist").expect("mnist family");
+    let b = fam.batch;
+    let cut = 2;
+    let c = 5;
+    let mut rng = Rng::new(3);
+
+    // Inputs.
+    let seed = literal_u32(&[2], &[0, 1]).unwrap();
+    let params = rt.call(&fam.init, &[seed]).unwrap();
+    let ncp = fam.client_param_count[&cut];
+    let (client_p, server_p) = (params[..ncp].to_vec(), params[ncp..].to_vec());
+    let img: Vec<f32> = (0..b * 16 * 16)
+        .map(|_| rng.normal(0.0, 1.0) as f32)
+        .collect();
+    let x = literal_f32(&[b, 16, 16, 1], &img).unwrap();
+    let smash = &fam.smashed_shape[&cut];
+    let smash_len: usize = smash.iter().product();
+
+    let mut bench = Bencher::slow();
+
+    let cf = fam.client_fwd.get(&cut).unwrap();
+    let mut inputs = client_p.clone();
+    inputs.push(x.clone());
+    bench.run("client_fwd cut2 (b=32)", || {
+        rt.call(cf, &inputs).unwrap()
+    });
+
+    let smashed_out = rt.call(cf, &inputs).unwrap();
+    let one = smashed_out[0].to_vec::<f32>().unwrap();
+    let mut all = Vec::with_capacity(c * one.len());
+    for _ in 0..c {
+        all.extend_from_slice(&one);
+    }
+    let mut st_shape = vec![c, b];
+    st_shape.extend(smash.iter());
+    let labels: Vec<i32> =
+        (0..c * b).map(|i| (i % 10) as i32).collect();
+    let st = fam.server_train_entry(cut, c).unwrap();
+    let mut st_inputs = server_p.clone();
+    st_inputs.push(literal_f32(&st_shape, &all).unwrap());
+    st_inputs.push(literal_i32(&[c, b], &labels).unwrap());
+    st_inputs.push(literal_f32(&[c], &vec![0.2; c]).unwrap());
+    st_inputs
+        .push(literal_f32(&[b], &vec![1.0; b / 2]
+            .into_iter()
+            .chain(vec![0.0; b - b / 2])
+            .collect::<Vec<f32>>()).unwrap());
+    st_inputs.push(literal_f32(&[], &[0.1]).unwrap());
+    bench.run("server_train cut2 C=5 (EPSL phi=0.5)", || {
+        rt.call(st, &st_inputs).unwrap()
+    });
+
+    let cs = fam.client_step.get(&cut).unwrap();
+    let g: Vec<f32> = vec![0.01; b * smash_len];
+    let mut g_shape = vec![b];
+    g_shape.extend(smash.iter());
+    let mut cs_inputs = client_p.clone();
+    cs_inputs.push(x.clone());
+    cs_inputs.push(literal_f32(&g_shape, &g).unwrap());
+    cs_inputs.push(literal_f32(&[], &[0.1]).unwrap());
+    bench.run("client_step cut2 (b=32)", || {
+        rt.call(cs, &cs_inputs).unwrap()
+    });
+
+    let pa = fam.phi_agg.get(&cut).unwrap();
+    let zspec = &pa.inputs[0];
+    let (zc, zb, zq) = (zspec.shape[0], zspec.shape[1], zspec.shape[2]);
+    let z: Vec<f32> = vec![0.5; zc * zb * zq];
+    let pa_inputs = vec![
+        literal_f32(&[zc, zb, zq], &z).unwrap(),
+        literal_f32(&[zc], &vec![0.2; zc]).unwrap(),
+        literal_f32(&[zb], &vec![1.0; zb]).unwrap(),
+    ];
+    bench.run("phi_aggregate kernel (pallas, C=5)", || {
+        rt.call(pa, &pa_inputs).unwrap()
+    });
+
+    // Full EPSL round through the coordinator (end-to-end: tables F4/F9).
+    let cfg = Config::new();
+    bench.run("full_epsl_round C=5 (coordinator e2e)", || {
+        let opts = TrainerOptions {
+            n_clients: 5,
+            rounds: 1,
+            eval_every: 100,
+            dataset_size: 400,
+            test_size: 256,
+            ..Default::default()
+        };
+        train(&rt, &manifest, &cfg, &opts).unwrap()
+    });
+
+    println!("\n{}", bench.report());
+    let s = rt.stats();
+    println!(
+        "runtime totals: {} executions, {:.2}s execute, {} compiles, \
+         {:.2}s compile",
+        s.executions, s.execute_seconds, s.compiles, s.compile_seconds
+    );
+}

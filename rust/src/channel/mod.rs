@@ -1,0 +1,221 @@
+//! Wireless-edge deployment and channel simulator.
+//!
+//! Implements the paper's system model (§III, §V): C client devices placed
+//! uniformly in a disc of radius `d_max` around the edge server, M FDMA
+//! subchannels of bandwidth `B` at mmWave center frequencies, per-link mean
+//! gains γ(F_k, d_i) from [`pathloss`], and the three link-rate expressions
+//! (eqs. 14, 18, 20) in [`rate`].
+
+pub mod pathloss;
+pub mod rate;
+
+use crate::config::NetworkConfig;
+use crate::util::rng::Rng;
+
+/// One FDMA subchannel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Subchannel {
+    pub index: usize,
+    /// Center frequency F_k (Hz).
+    pub center_freq_hz: f64,
+    /// Bandwidth B_k (Hz).
+    pub bandwidth_hz: f64,
+}
+
+/// One client device's link + compute state.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientLink {
+    /// Distance d_i to the server (m).
+    pub distance_m: f64,
+    /// Computing capability f_i (cycles/s).
+    pub f_client: f64,
+    /// LoS / NLoS state (drawn once per deployment).
+    pub los: bool,
+}
+
+/// A generated deployment: client placement + subchannel plan.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub clients: Vec<ClientLink>,
+    pub subchannels: Vec<Subchannel>,
+}
+
+impl Deployment {
+    /// Generate per the paper's simulation setup (§VII-A): clients uniform
+    /// in the coverage disc, f_i uniform in the configured range, LoS drawn
+    /// from the distance-dependent probability, contiguous subchannels from
+    /// the base frequency.
+    pub fn generate(cfg: &NetworkConfig, rng: &mut Rng) -> Deployment {
+        let clients = (0..cfg.n_clients)
+            .map(|_| {
+                let (x, y) = rng.in_disc(cfg.d_max_m);
+                let d = (x * x + y * y).sqrt().max(1.0);
+                let f =
+                    rng.uniform(cfg.f_client_range.0, cfg.f_client_range.1);
+                let los = rng.chance(pathloss::los_probability(d));
+                ClientLink { distance_m: d, f_client: f, los }
+            })
+            .collect();
+        let subchannels = (0..cfg.n_subchannels)
+            .map(|k| Subchannel {
+                index: k,
+                center_freq_hz: cfg.base_freq_hz
+                    + (k as f64 + 0.5) * cfg.subchannel_bw_hz,
+                bandwidth_hz: cfg.subchannel_bw_hz,
+            })
+            .collect();
+        Deployment { clients, subchannels }
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn n_subchannels(&self) -> usize {
+        self.subchannels.len()
+    }
+
+    /// Mean linear gain γ(F_k, d_i) (deterministic; the optimizer's view).
+    pub fn mean_gain(&self, client: usize, subch: usize) -> f64 {
+        let c = &self.clients[client];
+        let s = &self.subchannels[subch];
+        pathloss::mean_gain(s.center_freq_hz, c.distance_m, c.los)
+    }
+
+    /// Client compute capabilities as a vector.
+    pub fn f_clients(&self) -> Vec<f64> {
+        self.clients.iter().map(|c| c.f_client).collect()
+    }
+}
+
+/// A channel *realization*: per-(client, subchannel) linear gains.
+///
+/// `average` is the paper's deterministic γ(F_k, d_i) (used by the
+/// optimizer and the "ideal static channel" benchmark of Fig. 13);
+/// `sample` adds lognormal shadow fading (the per-round redraw of Fig. 13).
+#[derive(Debug, Clone)]
+pub struct ChannelRealization {
+    /// gain[client][subchannel], linear.
+    pub gain: Vec<Vec<f64>>,
+}
+
+impl ChannelRealization {
+    pub fn average(dep: &Deployment) -> ChannelRealization {
+        let gain = (0..dep.n_clients())
+            .map(|i| {
+                (0..dep.n_subchannels())
+                    .map(|k| dep.mean_gain(i, k))
+                    .collect()
+            })
+            .collect();
+        ChannelRealization { gain }
+    }
+
+    pub fn sample(dep: &Deployment, rng: &mut Rng) -> ChannelRealization {
+        let gain = dep
+            .clients
+            .iter()
+            .map(|c| {
+                dep.subchannels
+                    .iter()
+                    .map(|s| {
+                        pathloss::sample_gain(
+                            s.center_freq_hz,
+                            c.distance_m,
+                            c.los,
+                            rng,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        ChannelRealization { gain }
+    }
+
+    /// γ_w — the weakest gain across all clients and subchannels (eq. 18's
+    /// broadcast bottleneck).
+    pub fn worst_gain(&self) -> f64 {
+        self.gain
+            .iter()
+            .flat_map(|row| row.iter().copied())
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> NetworkConfig {
+        NetworkConfig::default()
+    }
+
+    #[test]
+    fn generate_respects_config() {
+        let mut rng = Rng::new(3);
+        let dep = Deployment::generate(&cfg(), &mut rng);
+        assert_eq!(dep.n_clients(), 5);
+        assert_eq!(dep.n_subchannels(), 20);
+        for c in &dep.clients {
+            assert!(c.distance_m <= 200.0 + 1e-9);
+            assert!((1e9..=1.6e9).contains(&c.f_client));
+        }
+        // Subchannels tile the band contiguously.
+        for w in dep.subchannels.windows(2) {
+            let gap = w[1].center_freq_hz - w[0].center_freq_hz;
+            assert!((gap - 10e6).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn deployment_is_seed_deterministic() {
+        let a = Deployment::generate(&cfg(), &mut Rng::new(9));
+        let b = Deployment::generate(&cfg(), &mut Rng::new(9));
+        for (x, y) in a.clients.iter().zip(&b.clients) {
+            assert_eq!(x.distance_m, y.distance_m);
+            assert_eq!(x.f_client, y.f_client);
+        }
+    }
+
+    #[test]
+    fn average_realization_matches_mean_gain() {
+        let mut rng = Rng::new(4);
+        let dep = Deployment::generate(&cfg(), &mut rng);
+        let re = ChannelRealization::average(&dep);
+        assert!((re.gain[2][7] - dep.mean_gain(2, 7)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn sampled_realization_varies() {
+        let mut rng = Rng::new(5);
+        let dep = Deployment::generate(&cfg(), &mut rng);
+        let a = ChannelRealization::sample(&dep, &mut rng);
+        let b = ChannelRealization::sample(&dep, &mut rng);
+        assert_ne!(a.gain[0][0], b.gain[0][0]);
+    }
+
+    #[test]
+    fn worst_gain_is_minimum() {
+        let re = ChannelRealization {
+            gain: vec![vec![1e-9, 5e-9], vec![3e-9, 2e-10]],
+        };
+        assert_eq!(re.worst_gain(), 2e-10);
+    }
+
+    #[test]
+    fn nearer_clients_have_higher_gain_on_average() {
+        // construct two clients at fixed distances with LoS
+        let dep = Deployment {
+            clients: vec![
+                ClientLink { distance_m: 20.0, f_client: 1e9, los: true },
+                ClientLink { distance_m: 180.0, f_client: 1e9, los: true },
+            ],
+            subchannels: vec![Subchannel {
+                index: 0,
+                center_freq_hz: 28e9,
+                bandwidth_hz: 10e6,
+            }],
+        };
+        assert!(dep.mean_gain(0, 0) > dep.mean_gain(1, 0));
+    }
+}

@@ -1,0 +1,115 @@
+//! mmWave path-loss model (Samimi–Rappaport, per paper §VII-A).
+//!
+//! Close-in free-space-reference model:
+//! `PL(f, d)[dB] = FSPL(f, 1 m) + 10·n·log10(d)` with path-loss exponents
+//! n = 2.1 (LoS) / 3.4 (NLoS) and lognormal shadow fading with standard
+//! deviation 3.6 dB (LoS) / 9.7 dB (NLoS) — exactly the paper's constants
+//! from [42]. LoS probability follows the 3GPP UMi street-canyon model
+//! (the paper does not specify one; documented substitution in DESIGN.md).
+
+use crate::util::rng::Rng;
+
+/// Paper constants from [42] (Samimi et al.).
+pub const LOS_PLE: f64 = 2.1;
+pub const NLOS_PLE: f64 = 3.4;
+pub const LOS_SHADOW_DB: f64 = 3.6;
+pub const NLOS_SHADOW_DB: f64 = 9.7;
+
+const SPEED_OF_LIGHT: f64 = 2.997_924_58e8;
+
+/// Free-space path loss at 1 m reference distance, in dB.
+pub fn fspl_1m_db(freq_hz: f64) -> f64 {
+    20.0 * (4.0 * std::f64::consts::PI * freq_hz / SPEED_OF_LIGHT).log10()
+}
+
+/// 3GPP UMi street-canyon LoS probability at distance `d` (m).
+pub fn los_probability(d_m: f64) -> f64 {
+    if d_m <= 18.0 {
+        return 1.0;
+    }
+    (18.0 / d_m) * (1.0 - (-d_m / 36.0).exp()) + (-d_m / 36.0).exp()
+}
+
+/// Mean path loss in dB (no shadowing) at frequency `f`, distance `d`.
+pub fn path_loss_db(freq_hz: f64, d_m: f64, los: bool) -> f64 {
+    let d = d_m.max(1.0); // CI model reference distance
+    let n = if los { LOS_PLE } else { NLOS_PLE };
+    fspl_1m_db(freq_hz) + 10.0 * n * d.log10()
+}
+
+/// Mean (average) linear channel gain γ(F_k, d_i) — the paper's
+/// deterministic gain used for resource management.
+pub fn mean_gain(freq_hz: f64, d_m: f64, los: bool) -> f64 {
+    10f64.powf(-path_loss_db(freq_hz, d_m, los) / 10.0)
+}
+
+/// One shadow-fading realization: mean gain perturbed by lognormal
+/// shadowing with the LoS/NLoS standard deviation.
+pub fn sample_gain(freq_hz: f64, d_m: f64, los: bool, rng: &mut Rng) -> f64 {
+    let sigma = if los { LOS_SHADOW_DB } else { NLOS_SHADOW_DB };
+    let shadow_db = rng.normal(0.0, sigma);
+    10f64.powf(-(path_loss_db(freq_hz, d_m, los) + shadow_db) / 10.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fspl_28ghz_near_61db() {
+        // FSPL(1 m, 28 GHz) ≈ 61.4 dB (textbook value).
+        let v = fspl_1m_db(28e9);
+        assert!((v - 61.38).abs() < 0.1, "{v}");
+    }
+
+    #[test]
+    fn path_loss_increases_with_distance_and_nlos() {
+        let f = 28e9;
+        assert!(path_loss_db(f, 100.0, true) > path_loss_db(f, 10.0, true));
+        assert!(path_loss_db(f, 100.0, false) > path_loss_db(f, 100.0, true));
+        // LoS slope: 21 dB/decade.
+        let slope =
+            path_loss_db(f, 100.0, true) - path_loss_db(f, 10.0, true);
+        assert!((slope - 21.0).abs() < 1e-9);
+        let slope_n =
+            path_loss_db(f, 100.0, false) - path_loss_db(f, 10.0, false);
+        assert!((slope_n - 34.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gain_is_inverse_of_loss() {
+        let g = mean_gain(28e9, 50.0, true);
+        let pl = path_loss_db(28e9, 50.0, true);
+        assert!((10.0 * g.log10() + pl).abs() < 1e-9);
+        assert!(g > 0.0 && g < 1.0);
+    }
+
+    #[test]
+    fn los_probability_monotone() {
+        assert_eq!(los_probability(5.0), 1.0);
+        assert!(los_probability(50.0) > los_probability(100.0));
+        assert!(los_probability(200.0) > 0.0);
+        assert!(los_probability(200.0) < 0.2);
+    }
+
+    #[test]
+    fn shadowing_statistics() {
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let mean_db = path_loss_db(28e9, 80.0, false);
+        let mut db_samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            let g = sample_gain(28e9, 80.0, false, &mut rng);
+            db_samples.push(-10.0 * g.log10() - mean_db);
+        }
+        let m = crate::util::stats::mean(&db_samples);
+        let s = crate::util::stats::std_dev(&db_samples);
+        assert!(m.abs() < 0.3, "shadow mean {m}");
+        assert!((s - NLOS_SHADOW_DB).abs() < 0.3, "shadow std {s}");
+    }
+
+    #[test]
+    fn higher_frequency_more_loss() {
+        assert!(path_loss_db(38e9, 50.0, true) > path_loss_db(28e9, 50.0, true));
+    }
+}

@@ -1,0 +1,210 @@
+//! Link-rate expressions — paper eqs. (14), (18), (20).
+//!
+//! All powers are spectral densities: the transmit PSD `p` (dBm/Hz), the
+//! noise PSD σ² (dBm/Hz) and the antenna gain / channel gain are linear
+//! factors, so the per-subchannel SNR is dimensionless:
+//! `SNR = p·G_c·G_s·γ / σ²`.
+
+use crate::config::NetworkConfig;
+
+use super::ChannelRealization;
+
+/// A subchannel→client assignment: `owner[k] = Some(i)` means subchannel k
+/// is allocated to client i (constraints C1/C2: at most one owner each).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub owner: Vec<Option<usize>>,
+}
+
+impl Allocation {
+    pub fn empty(n_subchannels: usize) -> Self {
+        Allocation { owner: vec![None; n_subchannels] }
+    }
+
+    /// Subchannels owned by client `i`.
+    pub fn channels_of(&self, i: usize) -> Vec<usize> {
+        self.owner
+            .iter()
+            .enumerate()
+            .filter_map(|(k, o)| (*o == Some(i)).then_some(k))
+            .collect()
+    }
+
+    /// Number of subchannels owned by client `i` (M_i).
+    pub fn count_of(&self, i: usize) -> usize {
+        self.owner.iter().filter(|o| **o == Some(i)).count()
+    }
+
+    pub fn assign(&mut self, subch: usize, client: usize) {
+        self.owner[subch] = Some(client);
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.owner.iter().all(Option::is_some)
+    }
+}
+
+/// Linear SNR from PSDs in dBm/Hz and linear gains.
+#[inline]
+pub fn snr_linear(p_dbm_hz: f64, antenna_gain: f64, channel_gain: f64,
+                  noise_dbm_hz: f64) -> f64 {
+    let num_db = p_dbm_hz + 10.0 * (antenna_gain * channel_gain).log10();
+    10f64.powf((num_db - noise_dbm_hz) / 10.0)
+}
+
+/// Shannon rate of one subchannel (bits/s).
+#[inline]
+pub fn subchannel_rate(bandwidth_hz: f64, snr: f64) -> f64 {
+    bandwidth_hz * (1.0 + snr).log2()
+}
+
+/// Eq. (14): uplink rate of every client under allocation `alloc` with
+/// per-subchannel transmit PSDs `p_dbm_hz[k]`.
+pub fn uplink_rates(cfg: &NetworkConfig, ch: &ChannelRealization,
+                    alloc: &Allocation, p_dbm_hz: &[f64]) -> Vec<f64> {
+    let n_clients = ch.gain.len();
+    let mut rates = vec![0.0; n_clients];
+    for (k, owner) in alloc.owner.iter().enumerate() {
+        if let Some(i) = owner {
+            let snr = snr_linear(
+                p_dbm_hz[k],
+                cfg.antenna_gain,
+                ch.gain[*i][k],
+                cfg.noise_dbm_hz,
+            );
+            rates[*i] += subchannel_rate(cfg.subchannel_bw_hz, snr);
+        }
+    }
+    rates
+}
+
+/// Eq. (20): downlink (server→client i) rate over client i's subchannels at
+/// the server PSD p^DL.
+pub fn downlink_rates(cfg: &NetworkConfig, ch: &ChannelRealization,
+                      alloc: &Allocation) -> Vec<f64> {
+    let n_clients = ch.gain.len();
+    let mut rates = vec![0.0; n_clients];
+    for (k, owner) in alloc.owner.iter().enumerate() {
+        if let Some(i) = owner {
+            let snr = snr_linear(
+                cfg.p_dl_dbm_hz,
+                cfg.antenna_gain,
+                ch.gain[*i][k],
+                cfg.noise_dbm_hz,
+            );
+            rates[*i] += subchannel_rate(cfg.subchannel_bw_hz, snr);
+        }
+    }
+    rates
+}
+
+/// Eq. (18): broadcast rate over *all* M subchannels, limited by the
+/// weakest gain γ_w across clients and subchannels.
+pub fn broadcast_rate(cfg: &NetworkConfig, ch: &ChannelRealization) -> f64 {
+    let gw = ch.worst_gain();
+    let snr = snr_linear(
+        cfg.p_dl_dbm_hz,
+        cfg.antenna_gain,
+        gw,
+        cfg.noise_dbm_hz,
+    );
+    cfg.n_subchannels as f64
+        * subchannel_rate(cfg.subchannel_bw_hz, snr)
+}
+
+/// Uniform-power helper: spread a device power budget `p_total_dbm` (dBm)
+/// uniformly over `n` subchannels of bandwidth `bw`, returning the PSD in
+/// dBm/Hz. (Baselines a/d set power uniformly.)
+pub fn uniform_psd_dbm_hz(p_total_dbm: f64, n: usize, bw_hz: f64) -> f64 {
+    p_total_dbm - 10.0 * ((n.max(1) as f64) * bw_hz).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Deployment;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (NetworkConfig, ChannelRealization, Deployment) {
+        let cfg = NetworkConfig::default();
+        let mut rng = Rng::new(7);
+        let dep = Deployment::generate(&cfg, &mut rng);
+        let ch = ChannelRealization::average(&dep);
+        (cfg, ch, dep)
+    }
+
+    #[test]
+    fn allocation_bookkeeping() {
+        let mut a = Allocation::empty(4);
+        assert!(!a.is_complete());
+        a.assign(0, 1);
+        a.assign(2, 1);
+        a.assign(1, 0);
+        a.assign(3, 2);
+        assert!(a.is_complete());
+        assert_eq!(a.channels_of(1), vec![0, 2]);
+        assert_eq!(a.count_of(1), 2);
+        assert_eq!(a.count_of(3), 0);
+    }
+
+    #[test]
+    fn snr_db_arithmetic() {
+        // p = -60 dBm/Hz, G*γ = 1 (0 dB), σ² = -174 dBm/Hz → SNR = 114 dB.
+        let snr = snr_linear(-60.0, 1.0, 1.0, -174.0);
+        assert!((10.0 * snr.log10() - 114.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shannon_rate_monotone_in_snr() {
+        assert!(subchannel_rate(10e6, 100.0) > subchannel_rate(10e6, 10.0));
+        assert_eq!(subchannel_rate(10e6, 0.0), 0.0);
+    }
+
+    #[test]
+    fn uplink_sums_over_owned_channels() {
+        let (cfg, ch, _dep) = setup();
+        let mut alloc = Allocation::empty(cfg.n_subchannels);
+        for k in 0..cfg.n_subchannels {
+            alloc.assign(k, k % cfg.n_clients);
+        }
+        let p = vec![-60.0; cfg.n_subchannels];
+        let rates = uplink_rates(&cfg, &ch, &alloc, &p);
+        assert_eq!(rates.len(), 5);
+        assert!(rates.iter().all(|&r| r > 0.0));
+        // Removing a channel strictly reduces its owner's rate.
+        let mut alloc2 = alloc.clone();
+        alloc2.owner[0] = None;
+        let owner = alloc.owner[0].unwrap();
+        let rates2 = uplink_rates(&cfg, &ch, &alloc2, &p);
+        assert!(rates2[owner] < rates[owner]);
+    }
+
+    #[test]
+    fn broadcast_rate_uses_worst_gain() {
+        let (cfg, ch, _dep) = setup();
+        let r = broadcast_rate(&cfg, &ch);
+        assert!(r > 0.0);
+        // Weakening the worst link lowers the broadcast rate.
+        let mut ch2 = ch.clone();
+        ch2.gain[0][0] = ch2.worst_gain() / 100.0;
+        assert!(broadcast_rate(&cfg, &ch2) < r);
+    }
+
+    #[test]
+    fn more_power_more_rate() {
+        let (cfg, ch, _dep) = setup();
+        let mut alloc = Allocation::empty(cfg.n_subchannels);
+        alloc.assign(0, 0);
+        let lo = uplink_rates(&cfg, &ch, &alloc, &vec![-70.0; 20])[0];
+        let hi = uplink_rates(&cfg, &ch, &alloc, &vec![-50.0; 20])[0];
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn uniform_psd_conserves_budget() {
+        // 31.76 dBm over 4 channels of 10 MHz = PSD such that
+        // psd + 10log10(4*10e6) = 31.76.
+        let psd = uniform_psd_dbm_hz(31.76, 4, 10e6);
+        assert!((psd + 10.0 * (4.0 * 10e6f64).log10() - 31.76).abs() < 1e-9);
+    }
+}

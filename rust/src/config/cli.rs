@@ -1,0 +1,182 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `repro <subcommand> [--flag [value]] [positional…]`.
+//! Flags with values: `--key value` or `--key=value`. Boolean flags have no
+//! value. Unknown flags are an error (catches typos in experiment scripts).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+/// Flag specification for validation.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse argv (without the binary name) against a flag spec.
+    pub fn parse(argv: &[String], specs: &[FlagSpec]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs.iter().find(|s| s.name == name).ok_or_else(
+                    || Error::Config(format!("unknown flag --{name}")),
+                )?;
+                let value = if spec.takes_value {
+                    match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| {
+                                Error::Config(format!(
+                                    "flag --{name} requires a value"
+                                ))
+                            })?
+                            .clone(),
+                    }
+                } else {
+                    if inline_val.is_some() {
+                        return Err(Error::Config(format!(
+                            "flag --{name} takes no value"
+                        )));
+                    }
+                    "true".to_string()
+                };
+                out.flags.insert(name, value);
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>().map_err(|_| {
+                    Error::Config(format!("--{name}: expected number, got '{v}'"))
+                })
+            })
+            .transpose()
+    }
+
+    pub fn usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>().map_err(|_| {
+                    Error::Config(format!(
+                        "--{name}: expected integer, got '{v}'"
+                    ))
+                })
+            })
+            .transpose()
+    }
+}
+
+/// Render a help string from specs.
+pub fn render_help(prog: &str, subcommands: &[(&str, &str)],
+                   specs: &[FlagSpec]) -> String {
+    let mut s = format!("usage: {prog} <subcommand> [flags]\n\nsubcommands:\n");
+    for (name, help) in subcommands {
+        s.push_str(&format!("  {name:<18} {help}\n"));
+    }
+    s.push_str("\nflags:\n");
+    for f in specs {
+        let v = if f.takes_value { " <v>" } else { "" };
+        s.push_str(&format!("  --{}{v:<8} {}\n", f.name, f.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "id", takes_value: true, help: "figure id" },
+            FlagSpec { name: "all", takes_value: false, help: "run all" },
+            FlagSpec { name: "phi", takes_value: true, help: "ratio" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positional() {
+        let a = Args::parse(
+            &sv(&["figures", "--id", "fig11", "--all", "extra"]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "figures");
+        assert_eq!(a.get("id"), Some("fig11"));
+        assert!(a.has("all"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&sv(&["train", "--phi=0.5"]), &specs()).unwrap();
+        assert_eq!(a.f64("phi").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(Args::parse(&sv(&["x", "--nope"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&sv(&["x", "--id"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bool_flag_with_value_rejected() {
+        assert!(Args::parse(&sv(&["x", "--all=yes"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn numeric_parse_errors() {
+        let a = Args::parse(&sv(&["x", "--phi", "abc"]), &specs()).unwrap();
+        assert!(a.f64("phi").is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("repro", &[("train", "run training")], &specs());
+        assert!(h.contains("repro"));
+        assert!(h.contains("--id"));
+    }
+}

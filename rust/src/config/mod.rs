@@ -1,0 +1,386 @@
+//! Experiment configuration: the paper's Table III defaults, overridable
+//! from a TOML-subset file and CLI flags.
+
+pub mod cli;
+pub mod toml;
+
+use crate::error::{Error, Result};
+
+/// Convert dBm to linear milliwatts-equivalent (mW).
+pub fn dbm_to_mw(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0)
+}
+
+/// Convert dBm to watts.
+pub fn dbm_to_w(dbm: f64) -> f64 {
+    dbm_to_mw(dbm) * 1e-3
+}
+
+/// Convert dB to a linear power ratio.
+pub fn db_to_lin(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Convert a linear power ratio to dB.
+pub fn lin_to_db(lin: f64) -> f64 {
+    10.0 * lin.log10()
+}
+
+/// Wireless + compute deployment parameters (paper Table III).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkConfig {
+    /// Number of participating client devices C.
+    pub n_clients: usize,
+    /// Number of subchannels M.
+    pub n_subchannels: usize,
+    /// Per-subchannel bandwidth B_k (Hz). Total bandwidth = M * B.
+    pub subchannel_bw_hz: f64,
+    /// Lowest subchannel center frequency (Hz) — mmWave band.
+    pub base_freq_hz: f64,
+    /// Server computing capability f_s (cycles/s).
+    pub f_server: f64,
+    /// Client computing capability range [lo, hi] (cycles/s); clients draw
+    /// uniformly (Table III: [1, 1.6]x10^9).
+    pub f_client_range: (f64, f64),
+    /// Server computing intensity κ_s (cycles/FLOP).
+    pub kappa_server: f64,
+    /// Client computing intensity κ (cycles/FLOP).
+    pub kappa_client: f64,
+    /// Server transmit PSD p^DL (dBm/Hz).
+    pub p_dl_dbm_hz: f64,
+    /// Noise PSD σ² (dBm/Hz).
+    pub noise_dbm_hz: f64,
+    /// Combined antenna gain G_c * G_s (linear).
+    pub antenna_gain: f64,
+    /// Coverage radius d_max (m).
+    pub d_max_m: f64,
+    /// Per-device max transmit power p^max (dBm).
+    pub p_max_dbm: f64,
+    /// Total uplink power threshold p_th (dBm).
+    pub p_th_dbm: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            n_clients: 5,
+            n_subchannels: 20,
+            subchannel_bw_hz: 10e6,
+            base_freq_hz: 28e9,
+            f_server: 5e9,
+            f_client_range: (1e9, 1.6e9),
+            kappa_server: 1.0 / 32.0,
+            kappa_client: 1.0 / 16.0,
+            p_dl_dbm_hz: -50.0,
+            noise_dbm_hz: -174.0,
+            antenna_gain: 10.0,
+            d_max_m: 200.0,
+            p_max_dbm: 31.76,
+            p_th_dbm: 36.99,
+        }
+    }
+}
+
+impl NetworkConfig {
+    /// Total system bandwidth (Hz).
+    pub fn total_bandwidth_hz(&self) -> f64 {
+        self.n_subchannels as f64 * self.subchannel_bw_hz
+    }
+
+    /// Rescale to a different total bandwidth keeping M fixed (Fig. 11).
+    pub fn with_total_bandwidth(mut self, hz: f64) -> Self {
+        self.subchannel_bw_hz = hz / self.n_subchannels as f64;
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_clients == 0 {
+            return Err(Error::Config("n_clients must be > 0".into()));
+        }
+        if self.n_subchannels < self.n_clients {
+            return Err(Error::Config(format!(
+                "need at least one subchannel per client: M={} < C={}",
+                self.n_subchannels, self.n_clients
+            )));
+        }
+        if self.subchannel_bw_hz <= 0.0 || self.f_server <= 0.0 {
+            return Err(Error::Config("bandwidth/compute must be > 0".into()));
+        }
+        let (lo, hi) = self.f_client_range;
+        if lo <= 0.0 || hi < lo {
+            return Err(Error::Config("bad client compute range".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Training-procedure parameters (paper Table III + §VII-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// Mini-batch size b used by the *latency model* (paper: 64).
+    pub batch: usize,
+    /// Aggregation ratio φ ∈ [0, 1].
+    pub phi: f64,
+    /// Client-side learning rate η_c.
+    pub eta_c: f64,
+    /// Server-side learning rate η_s.
+    pub eta_s: f64,
+    /// Total dataset size D (samples across all clients).
+    pub dataset_size: usize,
+    /// Number of training rounds to run.
+    pub rounds: usize,
+    /// Dataset family: "mnist" or "ham" (synthetic analogues).
+    pub family: String,
+    /// IID vs non-IID (2 classes per client) sharding.
+    pub iid: bool,
+    /// RNG seed for the whole experiment.
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            batch: 64,
+            phi: 0.5,
+            eta_c: 1.5e-4,
+            eta_s: 1e-4,
+            dataset_size: 8000,
+            rounds: 300,
+            family: "ham".into(),
+            iid: true,
+            seed: 2023,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.phi) {
+            return Err(Error::Config(format!("phi={} out of [0,1]", self.phi)));
+        }
+        if self.batch == 0 || self.rounds == 0 {
+            return Err(Error::Config("batch/rounds must be > 0".into()));
+        }
+        if self.family != "mnist" && self.family != "ham" {
+            return Err(Error::Config(format!(
+                "unknown family '{}' (mnist|ham)",
+                self.family
+            )));
+        }
+        Ok(())
+    }
+
+    /// ⌈φb⌉ — number of aggregated sample slots.
+    pub fn aggregated_count(&self) -> usize {
+        (self.phi * self.batch as f64).ceil() as usize
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub net: NetworkConfig,
+    pub train: TrainConfig,
+    /// Artifact directory (default "artifacts").
+    pub artifacts_dir: String,
+    /// Results directory (default "results").
+    pub results_dir: String,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Config {
+            net: NetworkConfig::default(),
+            train: TrainConfig::default(),
+            artifacts_dir: "artifacts".into(),
+            results_dir: "results".into(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.net.validate()?;
+        self.train.validate()
+    }
+
+    /// Apply overrides from a parsed TOML doc (keys mirror field paths,
+    /// e.g. `net.n_clients`, `train.phi`, `artifacts_dir`).
+    pub fn apply_toml(&mut self, doc: &toml::Doc) -> Result<()> {
+        let d = doc;
+        if let Some(v) = d.usize("net.n_clients") {
+            self.net.n_clients = v;
+        }
+        if let Some(v) = d.usize("net.n_subchannels") {
+            self.net.n_subchannels = v;
+        }
+        if let Some(v) = d.f64("net.subchannel_bw_hz") {
+            self.net.subchannel_bw_hz = v;
+        }
+        if let Some(v) = d.f64("net.base_freq_hz") {
+            self.net.base_freq_hz = v;
+        }
+        if let Some(v) = d.f64("net.f_server") {
+            self.net.f_server = v;
+        }
+        if let Some(v) = d.f64("net.f_client_lo") {
+            self.net.f_client_range.0 = v;
+        }
+        if let Some(v) = d.f64("net.f_client_hi") {
+            self.net.f_client_range.1 = v;
+        }
+        if let Some(v) = d.f64("net.kappa_server") {
+            self.net.kappa_server = v;
+        }
+        if let Some(v) = d.f64("net.kappa_client") {
+            self.net.kappa_client = v;
+        }
+        if let Some(v) = d.f64("net.p_dl_dbm_hz") {
+            self.net.p_dl_dbm_hz = v;
+        }
+        if let Some(v) = d.f64("net.noise_dbm_hz") {
+            self.net.noise_dbm_hz = v;
+        }
+        if let Some(v) = d.f64("net.antenna_gain") {
+            self.net.antenna_gain = v;
+        }
+        if let Some(v) = d.f64("net.d_max_m") {
+            self.net.d_max_m = v;
+        }
+        if let Some(v) = d.f64("net.p_max_dbm") {
+            self.net.p_max_dbm = v;
+        }
+        if let Some(v) = d.f64("net.p_th_dbm") {
+            self.net.p_th_dbm = v;
+        }
+        if let Some(v) = d.usize("train.batch") {
+            self.train.batch = v;
+        }
+        if let Some(v) = d.f64("train.phi") {
+            self.train.phi = v;
+        }
+        if let Some(v) = d.f64("train.eta_c") {
+            self.train.eta_c = v;
+        }
+        if let Some(v) = d.f64("train.eta_s") {
+            self.train.eta_s = v;
+        }
+        if let Some(v) = d.usize("train.dataset_size") {
+            self.train.dataset_size = v;
+        }
+        if let Some(v) = d.usize("train.rounds") {
+            self.train.rounds = v;
+        }
+        if let Some(v) = d.str("train.family") {
+            self.train.family = v.to_string();
+        }
+        if let Some(v) = d.bool("train.iid") {
+            self.train.iid = v;
+        }
+        if let Some(v) = d.usize("train.seed") {
+            self.train.seed = v as u64;
+        }
+        if let Some(v) = d.str("artifacts_dir") {
+            self.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = d.str("results_dir") {
+            self.results_dir = v.to_string();
+        }
+        self.validate()
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{path}: {e}")))?;
+        let doc = toml::parse(&text)?;
+        let mut cfg = Config::new();
+        cfg.apply_toml(&doc)?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table_iii() {
+        let c = Config::new();
+        assert_eq!(c.net.n_clients, 5);
+        assert_eq!(c.net.n_subchannels, 20);
+        assert_eq!(c.net.subchannel_bw_hz, 10e6);
+        assert_eq!(c.net.total_bandwidth_hz(), 200e6);
+        assert_eq!(c.net.f_server, 5e9);
+        assert_eq!(c.net.kappa_server, 1.0 / 32.0);
+        assert_eq!(c.net.kappa_client, 1.0 / 16.0);
+        assert_eq!(c.net.p_max_dbm, 31.76);
+        assert_eq!(c.net.p_th_dbm, 36.99);
+        assert_eq!(c.train.batch, 64);
+        assert_eq!(c.train.eta_c, 1.5e-4);
+        assert_eq!(c.train.eta_s, 1e-4);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn db_conversions() {
+        assert!((dbm_to_mw(0.0) - 1.0).abs() < 1e-12);
+        assert!((dbm_to_mw(30.0) - 1000.0).abs() < 1e-9);
+        assert!((dbm_to_w(30.0) - 1.0).abs() < 1e-12);
+        assert!((db_to_lin(10.0) - 10.0).abs() < 1e-12);
+        assert!((lin_to_db(100.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p_max_matches_1_5_watt() {
+        // 31.76 dBm ≈ 1.5 W (sanity on the paper's constant)
+        assert!((dbm_to_w(31.76) - 1.5).abs() < 0.01);
+        // 36.99 dBm ≈ 5 W total threshold
+        assert!((dbm_to_w(36.99) - 5.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn aggregated_count_ceil() {
+        let mut t = TrainConfig::default();
+        t.batch = 64;
+        t.phi = 0.5;
+        assert_eq!(t.aggregated_count(), 32);
+        t.phi = 0.01;
+        assert_eq!(t.aggregated_count(), 1);
+        t.phi = 0.0;
+        assert_eq!(t.aggregated_count(), 0);
+        t.phi = 1.0;
+        assert_eq!(t.aggregated_count(), 64);
+    }
+
+    #[test]
+    fn validation_rejects_bad() {
+        let mut c = Config::new();
+        c.train.phi = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::new();
+        c.net.n_subchannels = 2; // < n_clients
+        assert!(c.validate().is_err());
+        let mut c = Config::new();
+        c.train.family = "cifar".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = toml::parse(
+            "[net]\nn_clients = 10\nf_server = 7e9\n[train]\nphi = 0.25\nfamily = \"mnist\"\n",
+        )
+        .unwrap();
+        let mut c = Config::new();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.net.n_clients, 10);
+        assert_eq!(c.net.f_server, 7e9);
+        assert_eq!(c.train.phi, 0.25);
+        assert_eq!(c.train.family, "mnist");
+    }
+
+    #[test]
+    fn with_total_bandwidth_rescales() {
+        let n = NetworkConfig::default().with_total_bandwidth(100e6);
+        assert!((n.subchannel_bw_hz - 5e6).abs() < 1.0);
+        assert!((n.total_bandwidth_hz() - 100e6).abs() < 1.0);
+    }
+}

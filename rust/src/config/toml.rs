@@ -1,0 +1,229 @@
+//! TOML-subset parser (no `toml`/`serde` crates offline).
+//!
+//! Supports the subset the project's config files use:
+//! `[section]` headers, `key = value` with string / bool / integer / float /
+//! homogeneous-array values, `#` comments, and dotted keys inside sections.
+//! Produces a flat map `section.key -> Value`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Num(f64),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().filter(|x| *x >= 0.0).map(|x| x as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        match self {
+            Value::Arr(v) => v.iter().map(Value::as_f64).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: flat `section.key` map (root keys have no prefix).
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+
+    pub fn usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(Value::as_usize)
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| {
+                Error::Config(format!("line {}: bad section header", ln + 1))
+            })?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| {
+            Error::Config(format!("line {}: expected key = value", ln + 1))
+        })?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(Error::Config(format!("line {}: empty key", ln + 1)));
+        }
+        let value = parse_value(line[eq + 1..].trim()).map_err(|e| {
+            Error::Config(format!("line {}: {e}", ln + 1))
+        })?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.entries.insert(full, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of quotes starts a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|it| parse_value(it.trim()))
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        return Ok(Value::Arr(items));
+    }
+    // numbers: allow underscores and scientific notation
+    let cleaned = s.replace('_', "");
+    cleaned
+        .parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+seed = 42
+name = "fig11"
+
+[network]
+n_clients = 5
+bandwidth_mhz = 10.0
+subchannels = 20
+p_max_dbm = 31.76
+freqs = [28.0, 28.01, 28.02]
+enabled = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = parse(SAMPLE).unwrap();
+        assert_eq!(d.usize("seed"), Some(42));
+        assert_eq!(d.str("name"), Some("fig11"));
+        assert_eq!(d.usize("network.n_clients"), Some(5));
+        assert_eq!(d.f64("network.p_max_dbm"), Some(31.76));
+        assert_eq!(d.bool("network.enabled"), Some(true));
+        assert_eq!(
+            d.get("network.freqs").unwrap().as_f64_vec().unwrap(),
+            vec![28.0, 28.01, 28.02]
+        );
+    }
+
+    #[test]
+    fn comments_stripped_outside_strings() {
+        let d = parse("a = 1 # comment\nb = \"x # y\"\n").unwrap();
+        assert_eq!(d.f64("a"), Some(1.0));
+        assert_eq!(d.str("b"), Some("x # y"));
+    }
+
+    #[test]
+    fn underscores_and_scientific() {
+        let d = parse("f = 5_000_000_000\ng = 1.5e-4\n").unwrap();
+        assert_eq!(d.f64("f"), Some(5e9));
+        assert_eq!(d.f64("g"), Some(1.5e-4));
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = parse("x\n").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        let err = parse("a = 1\n[broken\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn empty_array() {
+        let d = parse("xs = []\n").unwrap();
+        assert_eq!(d.get("xs").unwrap().as_f64_vec().unwrap(), Vec::<f64>::new());
+    }
+}

@@ -1,0 +1,559 @@
+//! Framework training drivers: EPSL / PSL / SFL / vanilla SL / EPSL-PT.
+//!
+//! One entry point, [`train`], runs Algorithm 1 for the chosen framework
+//! over the AOT artifacts and returns per-round [`RunMetrics`] (loss,
+//! train/test accuracy, the §V simulated latency, and wall-clock).
+
+use std::time::Instant;
+
+use xla::Literal;
+
+use crate::channel::{ChannelRealization, Deployment};
+use crate::config::Config;
+use crate::data::partition::{iid, lambda_weights, non_iid_two_class};
+use crate::data::synth::{train_test, SynthSpec};
+use crate::data::{Dataset, Shard};
+use crate::error::{Error, Result};
+use crate::latency::frameworks::{round_latency, Framework};
+use crate::latency::LatencyInputs;
+use crate::metrics::{RoundRecord, RunMetrics};
+use crate::optim::{bcd, Decision, Problem};
+use crate::profile::resnet18;
+use crate::runtime::artifact::{FamilyManifest, Manifest};
+use crate::runtime::tensor::{literal_f32, literal_i32, literal_u32,
+                             scalar_f32, to_f32_vec};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+use super::params::{fedavg, ParamSet};
+use super::{phi_at_round, resnet18_cut_for_splitnet};
+
+/// Options for one training run.
+#[derive(Debug, Clone)]
+pub struct TrainerOptions {
+    pub family: String,
+    pub framework: Framework,
+    pub n_clients: usize,
+    /// SplitNet cut (1..=4).
+    pub cut: usize,
+    pub iid: bool,
+    pub dataset_size: usize,
+    pub test_size: usize,
+    pub rounds: usize,
+    pub eval_every: usize,
+    pub eta_c: f32,
+    pub eta_s: f32,
+    pub seed: u64,
+    /// EPSL-PT: round at which φ switches 1 → 0.
+    pub pt_switch: usize,
+    /// Run the BCD resource optimizer for the latency accounting
+    /// (otherwise a greedy + uniform-power decision is used).
+    pub optimize_resources: bool,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions {
+            family: "mnist".into(),
+            framework: Framework::Epsl { phi: 0.5 },
+            n_clients: 5,
+            cut: 2,
+            iid: true,
+            dataset_size: 2000,
+            test_size: 512,
+            rounds: 100,
+            eval_every: 5,
+            eta_c: 0.08,
+            eta_s: 0.08,
+            seed: 2023,
+            pt_switch: 50,
+            optimize_resources: false,
+        }
+    }
+}
+
+/// Everything fixed across rounds.
+struct Session<'a> {
+    rt: &'a Runtime,
+    fam: &'a FamilyManifest,
+    opts: &'a TrainerOptions,
+    train_set: Dataset,
+    test_set: Dataset,
+    shards: Vec<Shard>,
+    lam: Vec<f32>,
+    /// Per-round simulated latency per φ value (resnet18 profile).
+    sim_latency: SimLatency,
+    rng: Rng,
+    /// Round-invariant literals, hoisted out of the hot loop (§Perf).
+    lam_lit: Literal,
+    lr_s_lit: Literal,
+    lr_c_lit: Literal,
+    /// (φ bits) → (mask host vector, mask literal).
+    mask_cache: std::collections::HashMap<u64, (Vec<f32>, Literal)>,
+}
+
+/// Pre-computed stage-latency inputs for the §V model.
+struct SimLatency {
+    f_clients: Vec<f64>,
+    uplink: Vec<f64>,
+    downlink: Vec<f64>,
+    broadcast: f64,
+    cut: usize,
+    batch: usize,
+    f_server: f64,
+    kappa_server: f64,
+    kappa_client: f64,
+}
+
+impl SimLatency {
+    fn round_seconds(&self, fw: Framework, phi: f64) -> f64 {
+        let profile = resnet18::profile();
+        let inp = LatencyInputs {
+            profile: &profile,
+            cut: self.cut,
+            batch: self.batch,
+            phi,
+            f_server: self.f_server,
+            kappa_server: self.kappa_server,
+            kappa_client: self.kappa_client,
+            f_clients: &self.f_clients,
+            uplink: &self.uplink,
+            downlink: &self.downlink,
+            broadcast: self.broadcast,
+        };
+        // For EPSL-PT the effective framework at this round is EPSL{phi}.
+        let fw_eff = match fw {
+            Framework::EpslPt { .. } => Framework::Epsl { phi },
+            other => other,
+        };
+        round_latency(fw_eff, &inp).round_total()
+    }
+}
+
+fn build_sim_latency(cfg: &Config, opts: &TrainerOptions, rng: &mut Rng)
+    -> Result<SimLatency> {
+    let mut net = cfg.net.clone();
+    net.n_clients = opts.n_clients;
+    if net.n_subchannels < net.n_clients {
+        net.n_subchannels = net.n_clients;
+    }
+    let dep = Deployment::generate(&net, rng);
+    let ch = ChannelRealization::average(&dep);
+    let profile = resnet18::profile();
+    let cut = resnet18_cut_for_splitnet(opts.cut);
+    let prob = Problem {
+        cfg: &net,
+        profile: &profile,
+        dep: &dep,
+        ch: &ch,
+        batch: cfg.train.batch,
+        phi: opts.framework.phi(),
+    };
+    let decision: Decision = if opts.optimize_resources {
+        bcd::solve(&prob, bcd::BcdOptions::default())?.decision
+    } else {
+        let psd = crate::optim::baselines::uniform_power(
+            &prob,
+            &crate::optim::baselines::rss_allocation(&prob),
+        );
+        let alloc = crate::optim::baselines::rss_allocation(&prob);
+        Decision { alloc, psd_dbm_hz: psd, cut }
+    };
+    let (up, dn, bc) = prob.rates(&decision);
+    Ok(SimLatency {
+        f_clients: dep.f_clients(),
+        uplink: up,
+        downlink: dn,
+        broadcast: bc,
+        cut,
+        batch: cfg.train.batch,
+        f_server: net.f_server,
+        kappa_server: net.kappa_server,
+        kappa_client: net.kappa_client,
+    })
+}
+
+/// Build the aggregation mask for ⌈φb⌉ slots.
+fn mask_vec(phi: f64, b: usize) -> Vec<f32> {
+    let m = (phi * b as f64).ceil() as usize;
+    (0..b).map(|j| if j < m { 1.0 } else { 0.0 }).collect()
+}
+
+impl<'a> Session<'a> {
+    /// Cached aggregation mask for this φ (host copy + literal).
+    fn mask_for(&mut self, phi: f64) -> Result<(Vec<f32>, Literal)> {
+        let key = phi.to_bits();
+        if let Some((v, l)) = self.mask_cache.get(&key) {
+            return Ok((v.clone(), l.clone()));
+        }
+        let v = mask_vec(phi, self.fam.batch);
+        let l = literal_f32(&[self.fam.batch], &v)?;
+        self.mask_cache.insert(key, (v.clone(), l.clone()));
+        Ok((v, l))
+    }
+
+    fn batch_literals(&mut self, client: usize)
+        -> Result<(Literal, Vec<f32>, Vec<i32>)> {
+        let b = self.fam.batch;
+        let idx = self.shards[client].sample_batch(b, &mut self.rng);
+        let (imgs, labels) = self.train_set.gather(&idx);
+        let x = literal_f32(
+            &[b, self.fam.img, self.fam.img, self.fam.channels],
+            &imgs,
+        )?;
+        Ok((x, imgs, labels))
+    }
+
+    /// One parallel round (EPSL / PSL / SFL): returns (loss, train_acc).
+    #[allow(clippy::too_many_arguments)]
+    fn parallel_round(&mut self, client_params: &mut [Vec<Literal>],
+                      server_params: &mut Vec<Literal>, phi: f64)
+        -> Result<(f64, f64)> {
+        let c = self.opts.n_clients;
+        let b = self.fam.batch;
+        let cut = self.opts.cut;
+        let fam = self.fam;
+        let smash = &fam.smashed_shape[&cut];
+        let smash_len: usize = smash.iter().product();
+
+        // Stage 1-2: client FP + uplink.
+        let cf_entry = fam.client_fwd.get(&cut).ok_or_else(|| {
+            Error::Artifact(format!("no client_fwd for cut {cut}"))
+        })?;
+        let mut smashed_host = Vec::with_capacity(c * b * smash_len);
+        let mut labels_host: Vec<i32> = Vec::with_capacity(c * b);
+        let mut xs = Vec::with_capacity(c);
+        for i in 0..c {
+            let (x, _imgs, labels) = self.batch_literals(i)?;
+            let mut inputs: Vec<Literal> = client_params[i].to_vec();
+            inputs.push(x.clone());
+            let out = self.rt.call(cf_entry, &inputs)?;
+            smashed_host.extend(to_f32_vec(&out[0])?);
+            labels_host.extend(labels);
+            xs.push(x);
+        }
+
+        // Stage 3-4: server FP + EPSL BP.
+        let st_entry = fam.server_train_entry(cut, c)?;
+        let mut smash_shape = vec![c, b];
+        smash_shape.extend(smash.iter());
+        let (mask, mask_lit) = self.mask_for(phi)?;
+        let mut inputs: Vec<Literal> = server_params.to_vec();
+        inputs.push(literal_f32(&smash_shape, &smashed_host)?);
+        inputs.push(literal_i32(&[c, b], &labels_host)?);
+        inputs.push(self.lam_lit.clone());
+        inputs.push(mask_lit);
+        inputs.push(self.lr_s_lit.clone());
+        let mut out = self.rt.call(st_entry, &inputs)?;
+        let n_sp = server_params.len();
+        let ncorr = scalar_f32(&out[n_sp + 3])? as f64;
+        let loss = scalar_f32(&out[n_sp + 2])? as f64;
+        let cut_unagg = to_f32_vec(&out[n_sp + 1])?;
+        let cut_agg = to_f32_vec(&out[n_sp])?;
+        out.truncate(n_sp);
+        *server_params = out;
+
+        // Stage 5-7: gradient routing + client BP.
+        let cs_entry = fam.client_step.get(&cut).ok_or_else(|| {
+            Error::Artifact(format!("no client_step for cut {cut}"))
+        })?;
+        let mut g_cut = vec![0.0f32; b * smash_len];
+        for (i, x) in xs.into_iter().enumerate() {
+            for j in 0..b {
+                let dst = &mut g_cut[j * smash_len..(j + 1) * smash_len];
+                if mask[j] > 0.5 {
+                    // broadcast payload (identical for every client)
+                    dst.copy_from_slice(
+                        &cut_agg[j * smash_len..(j + 1) * smash_len],
+                    );
+                } else {
+                    // unicast payload
+                    let base = (i * b + j) * smash_len;
+                    dst.copy_from_slice(
+                        &cut_unagg[base..base + smash_len],
+                    );
+                }
+            }
+            let mut g_shape = vec![b];
+            g_shape.extend(smash.iter());
+            let mut inputs: Vec<Literal> = client_params[i].to_vec();
+            inputs.push(x);
+            inputs.push(literal_f32(&g_shape, &g_cut)?);
+            inputs.push(self.lr_c_lit.clone());
+            client_params[i] = self.rt.call(cs_entry, &inputs)?;
+        }
+
+        // SFL: client-side model FedAvg (the model exchange).
+        if matches!(self.opts.framework, Framework::Sfl) {
+            let avg = fedavg(client_params, &self.lam, fam, cut)?;
+            for cp in client_params.iter_mut() {
+                *cp = avg.clone();
+            }
+        }
+        Ok((loss, ncorr / (c * b) as f64))
+    }
+
+    /// One vanilla-SL "round": a sequential pass over all clients with a
+    /// single relayed client-side model.
+    fn vanilla_round(&mut self, shared_client: &mut Vec<Literal>,
+                     server_params: &mut Vec<Literal>)
+        -> Result<(f64, f64)> {
+        let c = self.opts.n_clients;
+        let b = self.fam.batch;
+        let cut = self.opts.cut;
+        let fam = self.fam;
+        let smash = &fam.smashed_shape[&cut];
+        let smash_len: usize = smash.iter().product();
+        let cf_entry = fam.client_fwd.get(&cut).unwrap();
+        let st_entry = fam.server_train_entry(cut, 1)?;
+        let cs_entry = fam.client_step.get(&cut).unwrap();
+        let (_mask, mask_lit) = self.mask_for(0.0)?;
+        let lam1 = literal_f32(&[1], &[1.0])?;
+        let mut loss_sum = 0.0;
+        let mut ncorr_sum = 0.0;
+        for i in 0..c {
+            let (x, _imgs, labels) = self.batch_literals(i)?;
+            let mut inputs: Vec<Literal> = shared_client.to_vec();
+            inputs.push(x.clone());
+            let smashed = self.rt.call(cf_entry, &inputs)?;
+            let mut smash_shape = vec![1, b];
+            smash_shape.extend(smash.iter());
+            let smashed_host = to_f32_vec(&smashed[0])?;
+            let mut inputs: Vec<Literal> = server_params.to_vec();
+            inputs.push(literal_f32(&smash_shape, &smashed_host)?);
+            inputs.push(literal_i32(&[1, b], &labels)?);
+            inputs.push(lam1.clone());
+            inputs.push(mask_lit.clone());
+            inputs.push(self.lr_s_lit.clone());
+            let mut out = self.rt.call(st_entry, &inputs)?;
+            let n_sp = server_params.len();
+            ncorr_sum += scalar_f32(&out[n_sp + 3])? as f64;
+            loss_sum += scalar_f32(&out[n_sp + 2])? as f64;
+            let cut_unagg = to_f32_vec(&out[n_sp + 1])?;
+            out.truncate(n_sp);
+            *server_params = out;
+            // all-unicast gradients for this client
+            let mut g_shape = vec![b];
+            g_shape.extend(smash.iter());
+            let g = &cut_unagg[..b * smash_len];
+            let mut inputs: Vec<Literal> = shared_client.to_vec();
+            inputs.push(x);
+            inputs.push(literal_f32(&g_shape, g)?);
+            inputs.push(self.lr_c_lit.clone());
+            *shared_client = self.rt.call(cs_entry, &inputs)?;
+        }
+        Ok((loss_sum / c as f64, ncorr_sum / (c * b) as f64))
+    }
+
+    /// Test accuracy of the λ-averaged model (full test set, chunked).
+    fn evaluate(&mut self, client_params: &[Vec<Literal>],
+                server_params: &[Literal]) -> Result<f64> {
+        let fam = self.fam;
+        let cut = self.opts.cut;
+        let avg_client = if client_params.len() == 1 {
+            client_params[0].clone()
+        } else {
+            fedavg(client_params, &self.lam, fam, cut)?
+        };
+        let full = ParamSet::join(&avg_client, server_params);
+        let eb = fam.eval_batch;
+        let mut correct = 0.0;
+        let mut total = 0.0;
+        let img_len = self.test_set.image_len();
+        let n_chunks = self.test_set.n / eb;
+        for chunk in 0..n_chunks.max(1) {
+            let lo = chunk * eb;
+            let hi = ((chunk + 1) * eb).min(self.test_set.n);
+            if hi - lo < eb {
+                break; // artifacts are fixed-shape; drop the ragged tail
+            }
+            let idx: Vec<usize> = (lo..hi).collect();
+            let (imgs, labels) = self.test_set.gather(&idx);
+            debug_assert_eq!(imgs.len(), eb * img_len);
+            let mut inputs: Vec<Literal> = full.clone();
+            inputs.push(literal_f32(
+                &[eb, fam.img, fam.img, fam.channels],
+                &imgs,
+            )?);
+            inputs.push(literal_i32(&[eb], &labels)?);
+            let out = self.rt.call(&fam.eval, &inputs)?;
+            correct += scalar_f32(&out[1])? as f64;
+            total += eb as f64;
+        }
+        Ok(if total > 0.0 { correct / total } else { f64::NAN })
+    }
+}
+
+/// Run one full training experiment.
+pub fn train(rt: &Runtime, manifest: &Manifest, cfg: &Config,
+             opts: &TrainerOptions) -> Result<RunMetrics> {
+    let fam = manifest.family(&opts.family)?;
+    let st_c = if matches!(opts.framework, Framework::VanillaSl) {
+        1
+    } else {
+        opts.n_clients
+    };
+    // Fail fast if the needed artifact is missing.
+    fam.server_train_entry(opts.cut, st_c)?;
+
+    let mut rng = Rng::new(opts.seed);
+    // Data.
+    let spec = SynthSpec::for_family(&opts.family, opts.dataset_size);
+    let (train_set, test_set) =
+        train_test(&spec, opts.test_size, opts.seed ^ 0xDA7A);
+    let shards = if opts.iid {
+        iid(&train_set, opts.n_clients, &mut rng)
+    } else {
+        non_iid_two_class(&train_set, opts.n_clients, &mut rng)?
+    };
+    let lam = lambda_weights(&shards);
+
+    // Latency model over a simulated deployment.
+    let sim_latency = build_sim_latency(cfg, opts, &mut rng)?;
+
+    // Model init.
+    let seed_lit = literal_u32(&[2], &[0, opts.seed as u32])?;
+    let full = ParamSet::new(rt.call(&fam.init, &[seed_lit])?);
+    let (client0, mut server_params) = full.split(fam, opts.cut);
+    let mut client_params: Vec<Vec<Literal>> = if matches!(
+        opts.framework,
+        Framework::VanillaSl
+    ) {
+        vec![client0]
+    } else {
+        (0..opts.n_clients).map(|_| client0.clone()).collect()
+    };
+
+    let lam_lit = literal_f32(&[lam.len()], &lam)?;
+    let lr_s_lit = literal_f32(&[], &[opts.eta_s])?;
+    let lr_c_lit = literal_f32(&[], &[opts.eta_c])?;
+    let mut session = Session {
+        rt,
+        fam,
+        opts,
+        train_set,
+        test_set,
+        shards,
+        lam,
+        sim_latency,
+        rng,
+        lam_lit,
+        lr_s_lit,
+        lr_c_lit,
+        mask_cache: std::collections::HashMap::new(),
+    };
+
+    let mut metrics = RunMetrics::new(opts.framework.name());
+    for round in 0..opts.rounds {
+        let t0 = Instant::now();
+        let phi = phi_at_round(opts.framework, round, opts.pt_switch);
+        let (loss, train_acc) = match opts.framework {
+            Framework::VanillaSl => session
+                .vanilla_round(&mut client_params[0], &mut server_params)?,
+            _ => session.parallel_round(
+                &mut client_params,
+                &mut server_params,
+                phi,
+            )?,
+        };
+        let test_acc = if round % opts.eval_every == opts.eval_every - 1
+            || round + 1 == opts.rounds
+        {
+            session.evaluate(&client_params, &server_params)?
+        } else {
+            f64::NAN
+        };
+        let sim = session.sim_latency.round_seconds(opts.framework, phi);
+        metrics.push(RoundRecord {
+            round,
+            loss,
+            train_acc,
+            test_acc,
+            sim_latency: sim,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+    }
+    Ok(metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> Option<(Runtime, Manifest, Config)> {
+        let m = Manifest::load("artifacts").ok()?;
+        let rt = Runtime::new("artifacts").ok()?;
+        Some((rt, m, Config::new()))
+    }
+
+    #[test]
+    fn epsl_smoke_two_clients() {
+        let Some((rt, m, cfg)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let opts = TrainerOptions {
+            n_clients: 2,
+            rounds: 4,
+            eval_every: 2,
+            dataset_size: 400,
+            test_size: 256,
+            ..Default::default()
+        };
+        let run = train(&rt, &m, &cfg, &opts).unwrap();
+        assert_eq!(run.rounds.len(), 4);
+        assert!(run.rounds.iter().all(|r| r.loss.is_finite()));
+        assert!(run.rounds.iter().all(|r| r.sim_latency > 0.0));
+        // at least one evaluation happened
+        assert!(run.rounds.iter().any(|r| !r.test_acc.is_nan()));
+    }
+
+    #[test]
+    fn vanilla_smoke() {
+        let Some((rt, m, cfg)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let opts = TrainerOptions {
+            framework: Framework::VanillaSl,
+            n_clients: 2,
+            rounds: 2,
+            eval_every: 2,
+            dataset_size: 400,
+            test_size: 256,
+            ..Default::default()
+        };
+        let run = train(&rt, &m, &cfg, &opts).unwrap();
+        assert_eq!(run.rounds.len(), 2);
+        assert!(run.rounds[0].loss.is_finite());
+    }
+
+    #[test]
+    fn sfl_keeps_clients_synchronized() {
+        let Some((rt, m, cfg)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let opts = TrainerOptions {
+            framework: Framework::Sfl,
+            n_clients: 2,
+            rounds: 2,
+            eval_every: 10,
+            dataset_size: 400,
+            test_size: 256,
+            ..Default::default()
+        };
+        // After a round the FedAvg makes client models identical — verified
+        // indirectly: the run completes and losses are finite.
+        let run = train(&rt, &m, &cfg, &opts).unwrap();
+        assert!(run.rounds.iter().all(|r| r.loss.is_finite()));
+    }
+
+    #[test]
+    fn mask_vec_counts() {
+        assert_eq!(mask_vec(0.5, 32).iter().sum::<f32>(), 16.0);
+        assert_eq!(mask_vec(0.0, 32).iter().sum::<f32>(), 0.0);
+        assert_eq!(mask_vec(1.0, 32).iter().sum::<f32>(), 32.0);
+        assert_eq!(mask_vec(0.01, 32).iter().sum::<f32>(), 1.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Model parameter state: literal-resident parameters with host mirrors
+//! only where aggregation requires them (SFL FedAvg, evaluation average).
+
+use xla::Literal;
+
+use crate::error::Result;
+use crate::runtime::artifact::FamilyManifest;
+use crate::runtime::tensor::{literal_f32, to_f32_vec, weighted_average};
+
+/// A full model's parameters in canonical order, as XLA literals.
+pub struct ParamSet {
+    pub literals: Vec<Literal>,
+}
+
+impl ParamSet {
+    pub fn new(literals: Vec<Literal>) -> Self {
+        ParamSet { literals }
+    }
+
+    pub fn len(&self) -> usize {
+        self.literals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.literals.is_empty()
+    }
+
+    /// Split into (client prefix, server suffix) clones for the given cut.
+    pub fn split(&self, fam: &FamilyManifest, cut: usize)
+        -> (Vec<Literal>, Vec<Literal>) {
+        let n = fam.client_param_count[&cut];
+        (
+            self.literals[..n].to_vec(),
+            self.literals[n..].to_vec(),
+        )
+    }
+
+    /// Recombine client + server parts into a full canonical list.
+    pub fn join(client: &[Literal], server: &[Literal]) -> Vec<Literal> {
+        let mut v = Vec::with_capacity(client.len() + server.len());
+        v.extend(client.iter().cloned());
+        v.extend(server.iter().cloned());
+        v
+    }
+}
+
+/// λ-weighted FedAvg over per-client parameter lists (same shapes).
+/// Used by SFL every round and by the evaluation-model average for
+/// PSL/EPSL (whose client models never synchronize during training).
+pub fn fedavg(clients: &[Vec<Literal>], weights: &[f32],
+              fam: &FamilyManifest, cut: usize) -> Result<Vec<Literal>> {
+    assert_eq!(clients.len(), weights.len());
+    let n_tensors = fam.client_param_count[&cut];
+    let mut out = Vec::with_capacity(n_tensors);
+    for t in 0..n_tensors {
+        let bufs: Vec<Vec<f32>> = clients
+            .iter()
+            .map(|c| to_f32_vec(&c[t]))
+            .collect::<Result<_>>()?;
+        let avg = weighted_average(&bufs, weights);
+        let shape = &fam.params[t].1;
+        out.push(literal_f32(shape, &avg)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+
+    fn fam() -> Option<FamilyManifest> {
+        Manifest::load("artifacts").ok().map(|m| {
+            m.family("mnist").unwrap().clone()
+        })
+    }
+
+    #[test]
+    fn split_join_roundtrip() {
+        let Some(fam) = fam() else {
+            return;
+        };
+        let lits: Vec<Literal> = fam
+            .params
+            .iter()
+            .map(|(_, s)| {
+                let n: usize = s.iter().product();
+                literal_f32(s, &vec![1.0; n]).unwrap()
+            })
+            .collect();
+        let ps = ParamSet::new(lits);
+        let (c, s) = ps.split(&fam, 2);
+        assert_eq!(c.len(), 6);
+        assert_eq!(c.len() + s.len(), fam.params.len());
+        let joined = ParamSet::join(&c, &s);
+        assert_eq!(joined.len(), fam.params.len());
+    }
+
+    #[test]
+    fn fedavg_weighted() {
+        let Some(fam) = fam() else {
+            return;
+        };
+        let cut = 2;
+        let n = fam.client_param_count[&cut];
+        let mk = |v: f32| -> Vec<Literal> {
+            fam.params[..n]
+                .iter()
+                .map(|(_, s)| {
+                    let len: usize = s.iter().product();
+                    literal_f32(s, &vec![v; len]).unwrap()
+                })
+                .collect()
+        };
+        let avg =
+            fedavg(&[mk(1.0), mk(3.0)], &[0.25, 0.75], &fam, cut).unwrap();
+        let v = to_f32_vec(&avg[0]).unwrap();
+        assert!(v.iter().all(|&x| (x - 2.5).abs() < 1e-6));
+    }
+}

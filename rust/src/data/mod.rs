@@ -1,0 +1,117 @@
+//! Datasets and sharding.
+//!
+//! The paper trains on MNIST and HAM10000; this environment has no network
+//! access, so [`synth`] generates procedural class-structured image
+//! datasets with the same interface (documented substitution — DESIGN.md
+//! §3): `synth-mnist` (10 classes, 1 channel) and `synth-ham` (7 classes,
+//! 3 channels). [`partition`] implements the paper's IID and non-IID
+//! (2 classes per client) shardings.
+
+pub mod partition;
+pub mod synth;
+
+use crate::util::rng::Rng;
+
+/// A flat NHWC f32 image-classification dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Row-major `[n, h, w, c]`.
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    /// Floats per image.
+    pub fn image_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Borrow image `i` as a slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let l = self.image_len();
+        &self.images[i * l..(i + 1) * l]
+    }
+
+    /// Gather the given indices into contiguous (images, labels) buffers —
+    /// the mini-batch layout the AOT artifacts expect.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let l = self.image_len();
+        let mut imgs = Vec::with_capacity(idx.len() * l);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            imgs.extend_from_slice(self.image(i));
+            labels.push(self.labels[i]);
+        }
+        (imgs, labels)
+    }
+
+    /// Per-class sample counts.
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+}
+
+/// A client's shard: indices into the parent dataset.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub indices: Vec<usize>,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Sample a mini-batch of `b` indices (with replacement if the shard is
+    /// smaller than `b` — mirrors random mini-batch draws in Alg. 1).
+    pub fn sample_batch(&self, b: usize, rng: &mut Rng) -> Vec<usize> {
+        if self.len() >= b {
+            rng.sample_indices(self.len(), b)
+                .into_iter()
+                .map(|j| self.indices[j])
+                .collect()
+        } else {
+            (0..b).map(|_| self.indices[rng.below(self.len())]).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::synth::{generate, SynthSpec};
+    use super::*;
+
+    #[test]
+    fn gather_layout() {
+        let ds = generate(&SynthSpec::mnist_like(64), 999);
+        let (imgs, labels) = ds.gather(&[3, 7]);
+        assert_eq!(imgs.len(), 2 * ds.image_len());
+        assert_eq!(labels, vec![ds.labels[3], ds.labels[7]]);
+        assert_eq!(&imgs[..ds.image_len()], ds.image(3));
+    }
+
+    #[test]
+    fn shard_sampling_in_range() {
+        let shard = Shard { indices: vec![5, 9, 11] };
+        let mut rng = Rng::new(1);
+        let b = shard.sample_batch(8, &mut rng); // larger than shard
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|i| [5, 9, 11].contains(i)));
+        let b2 = shard.sample_batch(2, &mut rng);
+        assert_eq!(b2.len(), 2);
+        assert_ne!(b2[0], b2[1]); // without replacement when possible
+    }
+}

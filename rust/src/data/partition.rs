@@ -1,0 +1,187 @@
+//! IID / non-IID client sharding (paper §VII-A).
+//!
+//! - **IID**: shuffle and split evenly — every client sees all classes.
+//! - **non-IID**: each client holds samples from exactly **2 classes**
+//!   (the paper's pathological setting from [27, 45]): class shards are
+//!   built per class, split into half-shards, and each client receives two
+//!   half-shards of distinct classes.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::{Dataset, Shard};
+
+/// IID partition into `c` near-equal shards.
+pub fn iid(ds: &Dataset, c: usize, rng: &mut Rng) -> Vec<Shard> {
+    let mut idx: Vec<usize> = (0..ds.n).collect();
+    rng.shuffle(&mut idx);
+    let base = ds.n / c;
+    let extra = ds.n % c;
+    let mut shards = Vec::with_capacity(c);
+    let mut cursor = 0;
+    for i in 0..c {
+        let take = base + usize::from(i < extra);
+        shards.push(Shard { indices: idx[cursor..cursor + take].to_vec() });
+        cursor += take;
+    }
+    shards
+}
+
+/// Non-IID partition: exactly 2 classes per client.
+///
+/// Builds `2·C` class-chunks (each class contributes `ceil(2C / n_classes)`
+/// or fewer chunks) and deals every client two chunks with distinct
+/// classes. Requires `n_classes ≥ 2`.
+pub fn non_iid_two_class(ds: &Dataset, c: usize, rng: &mut Rng)
+    -> Result<Vec<Shard>> {
+    if ds.n_classes < 2 {
+        return Err(Error::Data("need ≥ 2 classes for non-IID".into()));
+    }
+    // Per-class index pools (shuffled).
+    let mut pools: Vec<Vec<usize>> = vec![Vec::new(); ds.n_classes];
+    for (i, &l) in ds.labels.iter().enumerate() {
+        pools[l as usize].push(i);
+    }
+    for p in pools.iter_mut() {
+        rng.shuffle(p);
+    }
+    // Assign class pairs round-robin over a shuffled class list so chunks
+    // per class stay balanced and the two classes always differ.
+    let mut class_order: Vec<usize> = (0..ds.n_classes).collect();
+    rng.shuffle(&mut class_order);
+    let pairs: Vec<(usize, usize)> = (0..c)
+        .map(|i| {
+            let a = class_order[(2 * i) % ds.n_classes];
+            let mut b = class_order[(2 * i + 1) % ds.n_classes];
+            if a == b {
+                b = class_order[(2 * i + 2) % ds.n_classes];
+            }
+            (a, b)
+        })
+        .collect();
+    // How many clients draw from each class → split pools evenly.
+    let mut demand = vec![0usize; ds.n_classes];
+    for &(a, b) in &pairs {
+        demand[a] += 1;
+        demand[b] += 1;
+    }
+    let mut cursors = vec![0usize; ds.n_classes];
+    let mut shards = Vec::with_capacity(c);
+    for &(a, b) in &pairs {
+        let mut indices = Vec::new();
+        for &cls in &[a, b] {
+            let pool = &pools[cls];
+            let share = pool.len() / demand[cls].max(1);
+            let start = cursors[cls];
+            let end = (start + share).min(pool.len());
+            indices.extend_from_slice(&pool[start..end]);
+            cursors[cls] = end;
+        }
+        if indices.is_empty() {
+            return Err(Error::Data(format!(
+                "empty non-IID shard (classes {a},{b})"
+            )));
+        }
+        shards.push(Shard { indices });
+    }
+    Ok(shards)
+}
+
+/// λ_i = D_i / D dataset weights for a sharding.
+pub fn lambda_weights(shards: &[Shard]) -> Vec<f32> {
+    let total: usize = shards.iter().map(Shard::len).sum();
+    shards
+        .iter()
+        .map(|s| s.len() as f32 / total.max(1) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn ds() -> Dataset {
+        generate(&SynthSpec::mnist_like(1000), 5)
+    }
+
+    #[test]
+    fn iid_covers_everything_once() {
+        let d = ds();
+        let mut rng = Rng::new(1);
+        let shards = iid(&d, 7, &mut rng);
+        assert_eq!(shards.len(), 7);
+        let mut all: Vec<usize> =
+            shards.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+        // near-equal sizes
+        let sizes: Vec<usize> = shards.iter().map(Shard::len).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn iid_shards_see_all_classes() {
+        let d = ds();
+        let mut rng = Rng::new(2);
+        let shards = iid(&d, 5, &mut rng);
+        for s in &shards {
+            let mut classes: Vec<i32> =
+                s.indices.iter().map(|&i| d.labels[i]).collect();
+            classes.sort_unstable();
+            classes.dedup();
+            assert_eq!(classes.len(), 10, "IID shard missing classes");
+        }
+    }
+
+    #[test]
+    fn non_iid_exactly_two_classes() {
+        let d = ds();
+        let mut rng = Rng::new(3);
+        let shards = non_iid_two_class(&d, 5, &mut rng).unwrap();
+        assert_eq!(shards.len(), 5);
+        for s in &shards {
+            let mut classes: Vec<i32> =
+                s.indices.iter().map(|&i| d.labels[i]).collect();
+            classes.sort_unstable();
+            classes.dedup();
+            assert_eq!(classes.len(), 2, "shard has {classes:?}");
+        }
+    }
+
+    #[test]
+    fn non_iid_no_index_reuse() {
+        let d = ds();
+        let mut rng = Rng::new(4);
+        let shards = non_iid_two_class(&d, 10, &mut rng).unwrap();
+        let mut all: Vec<usize> =
+            shards.iter().flat_map(|s| s.indices.clone()).collect();
+        let before = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), before, "an index was assigned twice");
+    }
+
+    #[test]
+    fn non_iid_handles_more_clients_than_class_pairs() {
+        let d = ds();
+        let mut rng = Rng::new(5);
+        // 15 clients over 10 classes: pairs wrap around.
+        let shards = non_iid_two_class(&d, 15, &mut rng).unwrap();
+        assert_eq!(shards.len(), 15);
+        for s in &shards {
+            assert!(!s.is_empty());
+        }
+    }
+
+    #[test]
+    fn lambda_sums_to_one() {
+        let d = ds();
+        let mut rng = Rng::new(6);
+        let shards = iid(&d, 5, &mut rng);
+        let lam = lambda_weights(&shards);
+        let sum: f32 = lam.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(lam.iter().all(|&l| l > 0.0));
+    }
+}

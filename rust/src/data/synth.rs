@@ -1,0 +1,350 @@
+//! Procedural class-structured image synthesis.
+//!
+//! Each class has a deterministic *prototype*: smoothed Gaussian noise at a
+//! class-specific seed. A sample is its class prototype under a small random
+//! translation, a per-sample amplitude jitter, and additive pixel noise —
+//! enough intra-class variation that a CNN must learn translation-tolerant
+//! class features (what the accuracy experiments exercise), while staying
+//! fully reproducible from a single seed.
+
+use crate::util::rng::Rng;
+
+use super::Dataset;
+
+/// Generation parameters.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub n_classes: usize,
+    /// Additive noise std (signal std is ~1).
+    pub noise: f64,
+    /// Max |shift| in pixels for the random translation.
+    pub max_shift: isize,
+}
+
+impl SynthSpec {
+    /// 10-class single-channel digits analogue.
+    pub fn mnist_like(n: usize) -> Self {
+        SynthSpec {
+            n,
+            h: 16,
+            w: 16,
+            c: 1,
+            n_classes: 10,
+            noise: 0.35,
+            max_shift: 2,
+        }
+    }
+
+    /// 7-class RGB skin-lesion analogue (harder: more noise).
+    pub fn ham_like(n: usize) -> Self {
+        SynthSpec {
+            n,
+            h: 16,
+            w: 16,
+            c: 3,
+            n_classes: 7,
+            noise: 0.5,
+            max_shift: 2,
+        }
+    }
+
+    pub fn for_family(family: &str, n: usize) -> Self {
+        match family {
+            "mnist" => Self::mnist_like(n),
+            _ => Self::ham_like(n),
+        }
+    }
+}
+
+/// 3x3 box blur with edge clamping (smooths prototypes so translations
+/// produce correlated, learnable features rather than white noise).
+fn box_blur(img: &[f64], h: usize, w: usize) -> Vec<f64> {
+    let mut out = vec![0.0; h * w];
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = 0.0;
+            let mut cnt = 0.0;
+            for dy in -1i64..=1 {
+                for dx in -1i64..=1 {
+                    let yy = y as i64 + dy;
+                    let xx = x as i64 + dx;
+                    if yy >= 0 && yy < h as i64 && xx >= 0 && xx < w as i64 {
+                        acc += img[(yy as usize) * w + xx as usize];
+                        cnt += 1.0;
+                    }
+                }
+            }
+            out[y * w + x] = acc / cnt;
+        }
+    }
+    out
+}
+
+/// Class prototype: smoothed unit-variance noise, one plane per channel.
+fn prototype(spec: &SynthSpec, class: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ (0xC1A5_5000 + class as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let plane = spec.h * spec.w;
+    let mut proto = vec![0.0; plane * spec.c];
+    for ch in 0..spec.c {
+        let raw: Vec<f64> = (0..plane).map(|_| rng.gaussian()).collect();
+        let mut sm = box_blur(&raw, spec.h, spec.w);
+        sm = box_blur(&sm, spec.h, spec.w);
+        // Renormalize to unit std.
+        let mean: f64 = sm.iter().sum::<f64>() / plane as f64;
+        let var: f64 =
+            sm.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+                / plane as f64;
+        let std = var.sqrt().max(1e-9);
+        for (dst, src) in proto[ch * plane..(ch + 1) * plane]
+            .iter_mut()
+            .zip(sm.iter())
+        {
+            *dst = (src - mean) / std;
+        }
+    }
+    proto
+}
+
+/// Generate a dataset. Deterministic in `(spec, seed)`.
+pub fn generate(spec: &SynthSpec, seed: u64) -> Dataset {
+    let protos: Vec<Vec<f64>> =
+        (0..spec.n_classes).map(|c| prototype(spec, c, seed)).collect();
+    let mut rng = Rng::new(seed);
+    let plane = spec.h * spec.w;
+    let img_len = plane * spec.c;
+    let mut images = Vec::with_capacity(spec.n * img_len);
+    let mut labels = Vec::with_capacity(spec.n);
+    for i in 0..spec.n {
+        let class = i % spec.n_classes; // balanced
+        let proto = &protos[class];
+        let dy = rng.range(0, (2 * spec.max_shift + 1) as usize) as isize
+            - spec.max_shift;
+        let dx = rng.range(0, (2 * spec.max_shift + 1) as usize) as isize
+            - spec.max_shift;
+        let amp = rng.uniform(0.8, 1.2);
+        for ch in 0..spec.c {
+            for y in 0..spec.h {
+                for x in 0..spec.w {
+                    let sy = (y as isize + dy)
+                        .clamp(0, spec.h as isize - 1)
+                        as usize;
+                    let sx = (x as isize + dx)
+                        .clamp(0, spec.w as isize - 1)
+                        as usize;
+                    let v = amp * proto[ch * plane + sy * spec.w + sx]
+                        + spec.noise * rng.gaussian();
+                    // NHWC layout.
+                    images.push(v as f32);
+                }
+            }
+        }
+        // interleave channels into NHWC: we pushed HW per channel (CHW);
+        // fix ordering below if multi-channel.
+        labels.push(class as i32);
+    }
+    // Convert CHW blocks to HWC per image when c > 1.
+    if spec.c > 1 {
+        let mut fixed = vec![0.0f32; images.len()];
+        for i in 0..spec.n {
+            let base = i * img_len;
+            for ch in 0..spec.c {
+                for p in 0..plane {
+                    fixed[base + p * spec.c + ch] =
+                        images[base + ch * plane + p];
+                }
+            }
+        }
+        images = fixed;
+    }
+    // Shuffle sample order (labels were round-robin).
+    let mut order: Vec<usize> = (0..spec.n).collect();
+    rng.shuffle(&mut order);
+    let mut s_images = Vec::with_capacity(images.len());
+    let mut s_labels = Vec::with_capacity(spec.n);
+    for &i in &order {
+        s_images.extend_from_slice(&images[i * img_len..(i + 1) * img_len]);
+        s_labels.push(labels[i]);
+    }
+    Dataset {
+        images: s_images,
+        labels: s_labels,
+        n: spec.n,
+        h: spec.h,
+        w: spec.w,
+        c: spec.c,
+        n_classes: spec.n_classes,
+    }
+}
+
+/// Standard train/test pair (disjoint seeds ⇒ same prototypes, fresh
+/// translations/noise — prototypes must share the seed so the test set
+/// tests generalization over nuisance factors, not new classes).
+pub fn train_test(spec_train: &SynthSpec, n_test: usize, seed: u64)
+    -> (Dataset, Dataset) {
+    let train = generate(spec_train, seed);
+    let mut test_spec = spec_train.clone();
+    test_spec.n = n_test;
+    // Same prototype seed; different sample stream.
+    let protos_seed = seed;
+    let test = generate_with_proto_seed(&test_spec, protos_seed, seed + 1);
+    (train, test)
+}
+
+fn generate_with_proto_seed(spec: &SynthSpec, proto_seed: u64,
+                            sample_seed: u64) -> Dataset {
+    // Same as `generate` but decoupling prototype and sample randomness.
+    let protos: Vec<Vec<f64>> =
+        (0..spec.n_classes).map(|c| prototype(spec, c, proto_seed)).collect();
+    let mut rng = Rng::new(sample_seed);
+    let plane = spec.h * spec.w;
+    let img_len = plane * spec.c;
+    let mut images = Vec::with_capacity(spec.n * img_len);
+    let mut labels = Vec::with_capacity(spec.n);
+    for i in 0..spec.n {
+        let class = i % spec.n_classes;
+        let proto = &protos[class];
+        let dy = rng.range(0, (2 * spec.max_shift + 1) as usize) as isize
+            - spec.max_shift;
+        let dx = rng.range(0, (2 * spec.max_shift + 1) as usize) as isize
+            - spec.max_shift;
+        let amp = rng.uniform(0.8, 1.2);
+        let mut chw = vec![0.0f32; img_len];
+        for ch in 0..spec.c {
+            for y in 0..spec.h {
+                for x in 0..spec.w {
+                    let sy = (y as isize + dy)
+                        .clamp(0, spec.h as isize - 1)
+                        as usize;
+                    let sx = (x as isize + dx)
+                        .clamp(0, spec.w as isize - 1)
+                        as usize;
+                    let v = amp * proto[ch * plane + sy * spec.w + sx]
+                        + spec.noise * rng.gaussian();
+                    chw[ch * plane + y * spec.w + x] = v as f32;
+                }
+            }
+        }
+        for p in 0..plane {
+            for ch in 0..spec.c {
+                images.push(chw[ch * plane + p]);
+            }
+        }
+        labels.push(class as i32);
+    }
+    let mut order: Vec<usize> = (0..spec.n).collect();
+    rng.shuffle(&mut order);
+    let mut s_images = Vec::with_capacity(images.len());
+    let mut s_labels = Vec::with_capacity(spec.n);
+    for &i in &order {
+        s_images.extend_from_slice(&images[i * img_len..(i + 1) * img_len]);
+        s_labels.push(labels[i]);
+    }
+    Dataset {
+        images: s_images,
+        labels: s_labels,
+        n: spec.n,
+        h: spec.h,
+        w: spec.w,
+        c: spec.c,
+        n_classes: spec.n_classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn deterministic_and_balanced() {
+        let spec = SynthSpec::mnist_like(200);
+        let a = generate(&spec, 42);
+        let b = generate(&spec, 42);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let hist = a.class_histogram();
+        assert_eq!(hist.iter().sum::<usize>(), 200);
+        assert!(hist.iter().all(|&h| h == 20));
+    }
+
+    #[test]
+    fn different_seed_different_data() {
+        let spec = SynthSpec::mnist_like(50);
+        let a = generate(&spec, 1);
+        let b = generate(&spec, 2);
+        assert_ne!(a.images, b.images);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // Same-class samples must correlate more than cross-class — the
+        // learnability precondition for every accuracy experiment.
+        let spec = SynthSpec::mnist_like(400);
+        let ds = generate(&spec, 7);
+        let corr = |a: &[f32], b: &[f32]| -> f64 {
+            let ma = mean(&a.iter().map(|x| *x as f64).collect::<Vec<_>>());
+            let mb = mean(&b.iter().map(|x| *x as f64).collect::<Vec<_>>());
+            let mut num = 0.0;
+            let mut da = 0.0;
+            let mut db = 0.0;
+            for (x, y) in a.iter().zip(b) {
+                let xa = *x as f64 - ma;
+                let yb = *y as f64 - mb;
+                num += xa * yb;
+                da += xa * xa;
+                db += yb * yb;
+            }
+            num / (da.sqrt() * db.sqrt() + 1e-12)
+        };
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let c = corr(ds.image(i), ds.image(j));
+                if ds.labels[i] == ds.labels[j] {
+                    same.push(c);
+                } else {
+                    diff.push(c);
+                }
+            }
+        }
+        let ms = mean(&same);
+        let md = mean(&diff);
+        assert!(
+            ms > md + 0.2,
+            "same-class corr {ms:.3} not >> cross-class {md:.3}"
+        );
+    }
+
+    #[test]
+    fn ham_is_three_channel_seven_class() {
+        let ds = generate(&SynthSpec::ham_like(70), 3);
+        assert_eq!(ds.c, 3);
+        assert_eq!(ds.n_classes, 7);
+        assert_eq!(ds.image_len(), 16 * 16 * 3);
+        assert_eq!(ds.images.len(), 70 * 768);
+    }
+
+    #[test]
+    fn train_test_share_prototypes() {
+        let spec = SynthSpec::mnist_like(300);
+        let (train, test) = train_test(&spec, 100, 11);
+        assert_eq!(test.n, 100);
+        // Cross-set same-class correlation must exceed cross-class — the
+        // test set is recognizable from training prototypes.
+        let ci = |ds: &Dataset, class: i32| {
+            ds.labels.iter().position(|&l| l == class).unwrap()
+        };
+        let dot = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum()
+        };
+        let tr0 = train.image(ci(&train, 0));
+        let te0 = test.image(ci(&test, 0));
+        let te1 = test.image(ci(&test, 1));
+        assert!(dot(tr0, te0) > dot(tr0, te1));
+    }
+}

@@ -1,0 +1,69 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for the EPSL library.
+#[derive(Debug)]
+pub enum Error {
+    /// Configuration parse / validation failure.
+    Config(String),
+    /// Artifact manifest or HLO loading failure.
+    Artifact(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+    /// Optimizer infeasibility or numerical failure.
+    Optim(String),
+    /// Dataset construction / partitioning failure.
+    Data(String),
+    /// I/O error with context.
+    Io(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Optim(m) => write!(f, "optimizer error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        assert!(Error::Config("x".into()).to_string().contains("config"));
+        assert!(Error::Runtime("y".into()).to_string().contains("runtime"));
+        assert!(Error::Optim("z".into()).to_string().contains("optimizer"));
+    }
+
+    #[test]
+    fn from_io() {
+        let e: Error =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

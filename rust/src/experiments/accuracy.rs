@@ -1,0 +1,135 @@
+//! Accuracy-curve experiments: Fig. 4 (curves + latency bars) and
+//! Figs. 7–8 (MNIST-like / HAM-like under IID and non-IID).
+
+use crate::coordinator::{train, TrainerOptions};
+use crate::error::Result;
+use crate::latency::frameworks::Framework;
+use crate::metrics::RunMetrics;
+use crate::util::table::{bar_chart, LinePlot, Table};
+
+use super::Ctx;
+
+pub(crate) fn curve_frameworks() -> Vec<(String, Framework)> {
+    vec![
+        ("vanilla SL".into(), Framework::VanillaSl),
+        ("SFL".into(), Framework::Sfl),
+        ("PSL".into(), Framework::Psl),
+        ("EPSL(0.5)".into(), Framework::Epsl { phi: 0.5 }),
+        ("EPSL(1.0)".into(), Framework::Epsl { phi: 1.0 }),
+    ]
+}
+
+/// Train (cached) one curve run.
+pub(crate) fn curve_run(ctx: &mut Ctx, family: &str, iid: bool,
+                        name: &str, fw: Framework, n_clients: usize,
+                        rounds: usize, dataset: usize)
+    -> Result<RunMetrics> {
+    let key = format!(
+        "{family}-{}-{name}-c{n_clients}-r{rounds}-d{dataset}",
+        if iid { "iid" } else { "noniid" }
+    );
+    if let Some(r) = ctx.run_cache.get(&key) {
+        return Ok(r.clone());
+    }
+    let rt = ctx.runtime()?;
+    let manifest = ctx.manifest()?;
+    let opts = TrainerOptions {
+        family: family.into(),
+        framework: fw,
+        n_clients,
+        iid,
+        rounds,
+        eval_every: 10,
+        dataset_size: dataset,
+        test_size: 512,
+        eta_c: 0.1,
+        eta_s: 0.1,
+        ..Default::default()
+    };
+    println!("  training {key} …");
+    let r = train(rt, manifest, &ctx.cfg, &opts)?;
+    ctx.run_cache.insert(key, r.clone());
+    Ok(r)
+}
+
+fn emit_curves(ctx: &Ctx, id: &str, title: &str,
+               runs: &[(String, RunMetrics)]) -> Result<()> {
+    let mut plot = LinePlot::new(title, "round", "test accuracy");
+    let mut csv = String::from("framework,round,test_acc\n");
+    for (name, run) in runs {
+        let curve = run.accuracy_curve();
+        plot.series(name, &curve);
+        for (r, a) in &curve {
+            csv.push_str(&format!("{name},{r},{a:.4}\n"));
+        }
+    }
+    println!("{}", plot.render());
+    ctx.save(&format!("{id}.csv"), &csv)?;
+    ctx.save(&format!("{id}.txt"), &plot.render())
+}
+
+/// Fig. 4 — (a) accuracy vs rounds, (b) per-round latency bars, C=5,
+/// HAM-like IID.
+pub fn fig4(ctx: &mut Ctx) -> Result<()> {
+    let rounds = if ctx.quick { 250 } else { 400 };
+    let dataset = if ctx.quick { 1500 } else { 8000 };
+    let mut runs = Vec::new();
+    for (name, fw) in curve_frameworks() {
+        let r = curve_run(ctx, "ham", true, &name, fw, 5, rounds, dataset)?;
+        runs.push((name, r));
+    }
+    emit_curves(ctx, "fig4a", "Fig 4a: test accuracy (HAM-like, IID, C=5)",
+                &runs)?;
+    // (b) per-round latency from the §V model (first round's record).
+    let items: Vec<(String, f64)> = runs
+        .iter()
+        .map(|(name, run)| (name.clone(), run.rounds[0].sim_latency))
+        .collect();
+    let chart =
+        bar_chart("Fig 4b: per-round latency (s), C=5", &items, "s");
+    println!("{chart}");
+    let mut t = Table::new("fig4b").header(&["framework", "latency_s"]);
+    for (n, v) in &items {
+        t.row(&[n.clone(), format!("{v:.4}")]);
+    }
+    ctx.save("fig4b.csv", &t.to_csv())?;
+    ctx.save("fig4b.txt", &chart)
+}
+
+fn accuracy_fig(ctx: &mut Ctx, id: &str, family: &str) -> Result<()> {
+    let rounds = if ctx.quick { 250 } else { 400 };
+    let dataset = if ctx.quick { 1500 } else { 8000 };
+    // quick mode drops vanilla SL from the non-IID half (it is by far the
+    // slowest to run and its curve shape is established by the IID half).
+    for (suffix, iid) in [("a", true), ("b", false)] {
+        let mut runs = Vec::new();
+        for (name, fw) in curve_frameworks() {
+            if ctx.quick && !iid && matches!(fw, Framework::VanillaSl) {
+                continue;
+            }
+            let r =
+                curve_run(ctx, family, iid, &name, fw, 5, rounds, dataset)?;
+            runs.push((name, r));
+        }
+        emit_curves(
+            ctx,
+            &format!("{id}{suffix}"),
+            &format!(
+                "{id}{suffix}: {family}-like, {} (C=5)",
+                if iid { "IID" } else { "non-IID" }
+            ),
+            &runs,
+        )?;
+    }
+    Ok(())
+}
+
+/// Fig. 7 — MNIST-like accuracy curves, IID (a) and non-IID (b).
+pub fn fig7(ctx: &mut Ctx) -> Result<()> {
+    accuracy_fig(ctx, "fig7", "mnist")
+}
+
+/// Fig. 8 — HAM-like accuracy curves, IID (a) and non-IID (b).
+pub fn fig8(ctx: &mut Ctx) -> Result<()> {
+    accuracy_fig(ctx, "fig8", "ham")
+}

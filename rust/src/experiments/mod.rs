@@ -1,0 +1,143 @@
+//! Experiment registry: one generator per table/figure in the paper's
+//! evaluation (§VII). `repro figures --id <ID>` regenerates a single
+//! artifact; `--all` regenerates everything into `results/`.
+//!
+//! | id     | paper artifact |
+//! |--------|----------------|
+//! | table1 | framework capability matrix |
+//! | table4 | ResNet-18 layer profile |
+//! | table5 | converged accuracy vs C (HAM-like, IID) |
+//! | fig4   | accuracy vs round + per-round latency bars (C=5) |
+//! | fig7   | accuracy curves, MNIST-like, IID + non-IID |
+//! | fig8   | accuracy curves, HAM-like, IID + non-IID |
+//! | fig9   | total latency to target accuracy vs C |
+//! | fig10  | total latency vs dataset size |
+//! | fig11  | per-round latency vs total bandwidth (5 schemes) |
+//! | fig12  | per-round latency vs server compute (5 schemes) |
+//! | fig13  | robustness to channel variation |
+//!
+//! Training-backed experiments (table5, fig4, fig7–10) run the real
+//! coordinator over PJRT; `quick` mode shrinks rounds/sweeps so the full
+//! set completes in minutes (the full-fidelity settings are the documented
+//! defaults in EXPERIMENTS.md).
+
+pub mod accuracy;
+pub mod latency_figs;
+pub mod tables;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::metrics::RunMetrics;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::Runtime;
+
+/// Shared context handed to every experiment.
+pub struct Ctx<'a> {
+    pub cfg: Config,
+    pub rt: Option<&'a Runtime>,
+    pub manifest: Option<&'a Manifest>,
+    pub out_dir: String,
+    /// Reduced-budget mode (fewer rounds / sweep points).
+    pub quick: bool,
+    /// Cache of training runs shared across experiments in one invocation,
+    /// keyed by a descriptive string.
+    pub run_cache: BTreeMap<String, RunMetrics>,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(cfg: Config, rt: Option<&'a Runtime>,
+               manifest: Option<&'a Manifest>, out_dir: &str, quick: bool)
+        -> Self {
+        Ctx {
+            cfg,
+            rt,
+            manifest,
+            out_dir: out_dir.to_string(),
+            quick,
+            run_cache: BTreeMap::new(),
+        }
+    }
+
+    pub fn runtime(&self) -> Result<&'a Runtime> {
+        self.rt.ok_or_else(|| {
+            Error::Artifact(
+                "this experiment trains models: build artifacts first \
+                 (`make artifacts`)"
+                    .into(),
+            )
+        })
+    }
+
+    pub fn manifest(&self) -> Result<&'a Manifest> {
+        self.manifest.ok_or_else(|| {
+            Error::Artifact("manifest unavailable — run `make artifacts`".into())
+        })
+    }
+
+    /// Write a result file under `out_dir`.
+    pub fn save(&self, name: &str, contents: &str) -> Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = Path::new(&self.out_dir).join(name);
+        std::fs::write(&path, contents)?;
+        println!("wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// All experiment ids in regeneration order.
+pub const ALL_IDS: &[&str] = &[
+    "table1", "table4", "fig11", "fig12", "fig13", "table5", "fig4", "fig7",
+    "fig8", "fig9", "fig10",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &mut Ctx) -> Result<()> {
+    println!("\n=== experiment {id} ({}) ===",
+             if ctx.quick { "quick" } else { "full" });
+    match id {
+        "table1" => tables::table1(ctx),
+        "table4" => tables::table4(ctx),
+        "table5" => tables::table5(ctx),
+        "fig4" => accuracy::fig4(ctx),
+        "fig7" => accuracy::fig7(ctx),
+        "fig8" => accuracy::fig8(ctx),
+        "fig9" => latency_figs::fig9(ctx),
+        "fig10" => latency_figs::fig10(ctx),
+        "fig11" => latency_figs::fig11(ctx),
+        "fig12" => latency_figs::fig12(ctx),
+        "fig13" => latency_figs::fig13(ctx),
+        other => Err(Error::Config(format!(
+            "unknown experiment '{other}' (known: {ALL_IDS:?})"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_rejected() {
+        let mut ctx = Ctx::new(Config::new(), None, None, "/tmp/epsl_res", true);
+        assert!(run("nope", &mut ctx).is_err());
+    }
+
+    #[test]
+    fn all_ids_dispatch() {
+        // Profile/capability experiments must run without artifacts.
+        for id in ["table1", "table4"] {
+            let mut ctx =
+                Ctx::new(Config::new(), None, None, "/tmp/epsl_res", true);
+            run(id, &mut ctx).unwrap();
+        }
+    }
+
+    #[test]
+    fn training_experiments_require_runtime() {
+        let mut ctx = Ctx::new(Config::new(), None, None, "/tmp/epsl_res", true);
+        assert!(run("table5", &mut ctx).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Tables I, IV and V.
+
+use crate::error::Result;
+use crate::latency::frameworks::Framework;
+use crate::profile::resnet18;
+use crate::util::table::Table;
+
+use super::Ctx;
+
+/// Table I — qualitative framework comparison.
+pub fn table1(ctx: &mut Ctx) -> Result<()> {
+    let mut t = Table::new("Table I: FL / vanilla SL / SFL / PSL / EPSL")
+        .header(&["property", "FL", "vanilla SL", "SFL", "PSL", "EPSL"]);
+    let frameworks = [
+        Framework::VanillaSl,
+        Framework::Sfl,
+        Framework::Psl,
+        Framework::Epsl { phi: 0.5 },
+    ];
+    let yn = |b: bool| if b { "Yes" } else { "No" };
+    let caps: Vec<(bool, bool, bool, bool, bool)> =
+        frameworks.iter().map(|f| f.capabilities()).collect();
+    // FL column is fixed by the paper: no offload, parallel, model
+    // exchange, no dim reduction, no raw-data access.
+    t.row(&[
+        "partial computation offloading",
+        "No",
+        yn(caps[0].0),
+        yn(caps[1].0),
+        yn(caps[2].0),
+        yn(caps[3].0),
+    ]);
+    t.row(&[
+        "parallel computing",
+        "Yes",
+        yn(caps[0].1),
+        yn(caps[1].1),
+        yn(caps[2].1),
+        yn(caps[3].1),
+    ]);
+    t.row(&[
+        "model exchange",
+        "Yes",
+        yn(caps[0].2),
+        yn(caps[1].2),
+        yn(caps[2].2),
+        yn(caps[3].2),
+    ]);
+    t.row(&[
+        "activations' gradients' dimension reduction",
+        "No",
+        yn(caps[0].3),
+        yn(caps[1].3),
+        yn(caps[2].3),
+        yn(caps[3].3),
+    ]);
+    t.row(&[
+        "access to raw data",
+        "No",
+        yn(caps[0].4),
+        yn(caps[1].4),
+        yn(caps[2].4),
+        yn(caps[3].4),
+    ]);
+    println!("{}", t.render());
+    ctx.save("table1.csv", &t.to_csv())?;
+    ctx.save("table1.txt", &t.render())
+}
+
+/// Table IV — the ResNet-18 profile with derived ρ/ϖ/ψ columns.
+pub fn table4(ctx: &mut Ctx) -> Result<()> {
+    let p = resnet18::profile();
+    let mut t = Table::new("Table IV: ResNet-18 network parameters").header(&[
+        "layer", "size (MiB)", "FP (MFLOP)", "smashed (MiB)", "rho_j (MFLOP)",
+        "varpi_j (MFLOP)", "psi_j (Mbit)",
+    ]);
+    for (j, l) in p.layers.iter().enumerate() {
+        let cut = j + 1;
+        let psi = if cut < p.n_layers() {
+            format!("{:.4}", p.psi_bits(cut) / 1e6)
+        } else {
+            "-".into()
+        };
+        t.row(&[
+            l.name.to_string(),
+            format!("{:.4}", l.params_mib),
+            format!("{:.4}", l.fp_mflops),
+            format!("{:.4}", l.smashed_mib),
+            format!("{:.3}", p.rho(cut) / 1e6),
+            format!("{:.3}", p.varpi(cut) / 1e6),
+            psi,
+        ]);
+    }
+    println!("{}", t.render());
+    ctx.save("table4.csv", &t.to_csv())?;
+    ctx.save("table4.txt", &t.render())
+}
+
+/// Table V — converged test accuracy (HAM-like, IID) vs client count.
+pub fn table5(ctx: &mut Ctx) -> Result<()> {
+    // Fail fast if artifacts are missing (before any table output).
+    let _ = ctx.runtime()?;
+    let _ = ctx.manifest()?;
+    let (client_counts, rounds, dataset): (Vec<usize>, usize, usize) =
+        if ctx.quick {
+            (vec![5, 10], 250, 1500)
+        } else {
+            (vec![5, 10, 15], 400, 8000)
+        };
+    let frameworks: Vec<(String, Framework)> = vec![
+        ("vanilla SL".into(), Framework::VanillaSl),
+        ("SFL".into(), Framework::Sfl),
+        ("PSL".into(), Framework::Psl),
+        ("EPSL(0.5)".into(), Framework::Epsl { phi: 0.5 }),
+        ("EPSL(1.0)".into(), Framework::Epsl { phi: 1.0 }),
+    ];
+    let mut t = Table::new("Table V: converged test accuracy, HAM-like IID")
+        .header(
+            &std::iter::once("framework".to_string())
+                .chain(client_counts.iter().map(|c| format!("C={c}")))
+                .collect::<Vec<_>>(),
+        );
+    for (name, fw) in &frameworks {
+        let mut row = vec![name.clone()];
+        for &c in &client_counts {
+            let run = super::accuracy::curve_run(
+                ctx, "ham", true, name, *fw, c, rounds, dataset,
+            )?;
+            let acc = run.converged_accuracy(3);
+            println!("  {name} C={c}: acc={acc:.3}");
+            row.push(format!("{:.1}%", 100.0 * acc));
+        }
+        t.row(&row);
+    }
+    println!("{}", t.render());
+    ctx.save("table5.csv", &t.to_csv())?;
+    ctx.save("table5.txt", &t.render())
+}

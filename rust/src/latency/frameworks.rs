@@ -1,0 +1,282 @@
+//! Per-round latency models for every SL framework the paper compares
+//! (Fig. 1 / Table I): vanilla SL, SFL, PSL, EPSL, and EPSL-PT.
+//!
+//! - **EPSL**: eqs. 13–23 directly ([`epsl_stage_latencies`]).
+//! - **PSL**: EPSL with φ = 0 (no broadcast, full unicast, full server BP).
+//! - **SFL**: PSL round **plus** client-side model exchange — every client
+//!   uploads its client-side model, the server FedAvg-aggregates and
+//!   broadcasts the result back (Thapa et al.).
+//! - **Vanilla SL**: strictly sequential — each client in turn runs the
+//!   full split round with the server at C = 1, then relays the client-side
+//!   model to the next client through the server.
+//! - **EPSL-PT**: phased training — EPSL with φ = 1 for the first fraction
+//!   of rounds, then φ = 0 (the framework drivers flip φ; per-round latency
+//!   here is parameterized by the current φ).
+
+use super::{epsl_stage_latencies, LatencyInputs, StageLatencies};
+
+/// The five frameworks of the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Framework {
+    VanillaSl,
+    Sfl,
+    Psl,
+    Epsl { phi: f64 },
+    /// Phased training: φ=1 early, φ=0 late. `early` marks the phase.
+    EpslPt { early: bool },
+}
+
+impl Framework {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Framework::VanillaSl => "vanilla SL",
+            Framework::Sfl => "SFL",
+            Framework::Psl => "PSL",
+            Framework::Epsl { .. } => "EPSL",
+            Framework::EpslPt { .. } => "EPSL-PT",
+        }
+    }
+
+    /// The effective aggregation ratio this framework runs with.
+    pub fn phi(&self) -> f64 {
+        match self {
+            Framework::VanillaSl | Framework::Sfl | Framework::Psl => 0.0,
+            Framework::Epsl { phi } => *phi,
+            Framework::EpslPt { early } => {
+                if *early {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Does the framework exchange client-side models each round?
+    pub fn exchanges_model(&self) -> bool {
+        matches!(self, Framework::Sfl)
+    }
+
+    /// Table I rows: (partial offload, parallel, model exchange,
+    /// gradient-dimension reduction, raw-data access).
+    pub fn capabilities(&self) -> (bool, bool, bool, bool, bool) {
+        match self {
+            Framework::VanillaSl => (true, false, false, false, false),
+            Framework::Sfl => (true, true, true, false, false),
+            Framework::Psl => (true, true, false, false, false),
+            Framework::Epsl { .. } | Framework::EpslPt { .. } => {
+                (true, true, false, true, false)
+            }
+        }
+    }
+}
+
+/// Per-round latency of `fw` under the given inputs. `inp.phi` is ignored —
+/// the framework defines its own φ.
+pub fn round_latency(fw: Framework, inp: &LatencyInputs) -> StageLatencies {
+    let mut my = inp.clone();
+    my.phi = fw.phi();
+    match fw {
+        Framework::Epsl { .. }
+        | Framework::Psl
+        | Framework::EpslPt { .. } => epsl_stage_latencies(&my),
+        Framework::Sfl => {
+            let mut s = epsl_stage_latencies(&my);
+            s.model_exchange = sfl_model_exchange(inp);
+            s
+        }
+        Framework::VanillaSl => vanilla_sl_round(inp),
+    }
+}
+
+/// SFL model-exchange time: slowest client-model upload (unicast over the
+/// client's own subchannels) + aggregated-model broadcast.
+fn sfl_model_exchange(inp: &LatencyInputs) -> f64 {
+    let u = inp.profile.client_model_bits(inp.cut);
+    let up_max = inp
+        .uplink
+        .iter()
+        .map(|r| u / r.max(1e-9))
+        .fold(0.0, f64::max);
+    let down = u / inp.broadcast.max(1e-9);
+    up_max + down
+}
+
+/// Vanilla SL "round": one sequential pass over all C clients (each trains
+/// with the server alone on one mini-batch), with the client-side model
+/// relayed to the next client via the server between turns. Reported as a
+/// single [`StageLatencies`] whose fields hold the *summed* sequential
+/// terms so `round_total()` stays comparable.
+fn vanilla_sl_round(inp: &LatencyInputs) -> StageLatencies {
+    let p = inp.profile;
+    let j = inp.cut;
+    let b = inp.batch as f64;
+    let u = p.client_model_bits(j);
+    let mut total_cf = 0.0;
+    let mut total_up = 0.0;
+    let mut server_fp = 0.0;
+    let mut server_bp = 0.0;
+    let mut total_dn = 0.0;
+    let mut total_cb = 0.0;
+    let mut relay = 0.0;
+    let n = inp.n_clients();
+    for i in 0..n {
+        let fi = inp.f_clients[i];
+        total_cf += b * inp.kappa_client * p.client_fp_flops(j) / fi;
+        total_up += b * p.psi_bits(j) / inp.uplink[i].max(1e-9);
+        // server trains alone with this client: C = 1, φ = 0
+        server_fp += b * inp.kappa_server * p.server_fp_flops(j)
+            / inp.f_server;
+        server_bp += (b * inp.kappa_server * p.server_bp_flops(j)
+            + b * inp.kappa_server * p.last_layer_bp_flops())
+            / inp.f_server;
+        total_dn += b * p.chi_bits(j) / inp.downlink[i].max(1e-9);
+        total_cb += b * inp.kappa_client * p.client_bp_flops(j) / fi;
+        // model relay to the next client: up over i's link, down over i+1's
+        if i + 1 < n {
+            relay += u / inp.uplink[i].max(1e-9)
+                + u / inp.downlink[i + 1].max(1e-9);
+        }
+    }
+    StageLatencies {
+        client_fp: vec![total_cf],
+        uplink: vec![total_up],
+        server_fp,
+        server_bp,
+        broadcast: 0.0,
+        downlink: vec![total_dn],
+        client_bp: vec![total_cb],
+        model_exchange: relay,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::resnet18;
+    use crate::profile::NetworkProfile;
+
+    fn inputs<'a>(p: &'a NetworkProfile, f: &'a [f64], up: &'a [f64],
+                  dn: &'a [f64]) -> LatencyInputs<'a> {
+        LatencyInputs {
+            profile: p,
+            cut: 2,
+            batch: 64,
+            phi: 0.5,
+            f_server: 5e9,
+            kappa_server: 1.0 / 32.0,
+            kappa_client: 1.0 / 16.0,
+            f_clients: f,
+            uplink: up,
+            downlink: dn,
+            broadcast: 2e8,
+        }
+    }
+
+    #[test]
+    fn paper_ordering_epsl_fastest_vanilla_slowest() {
+        // Fig. 4b / Fig. 9: EPSL < PSL < SFL < vanilla SL per round.
+        let p = resnet18::profile();
+        let f = [1e9, 1.2e9, 1.4e9, 1.6e9, 1.1e9];
+        let up = [1.5e8; 5];
+        let dn = [1.5e8; 5];
+        let inp = inputs(&p, &f, &up, &dn);
+        let epsl =
+            round_latency(Framework::Epsl { phi: 0.5 }, &inp).round_total();
+        let psl = round_latency(Framework::Psl, &inp).round_total();
+        let sfl = round_latency(Framework::Sfl, &inp).round_total();
+        let vsl = round_latency(Framework::VanillaSl, &inp).round_total();
+        assert!(epsl < psl, "EPSL {epsl} !< PSL {psl}");
+        assert!(psl < sfl, "PSL {psl} !< SFL {sfl}");
+        assert!(sfl < vsl, "SFL {sfl} !< vanilla {vsl}");
+    }
+
+    #[test]
+    fn psl_equals_epsl_phi0() {
+        let p = resnet18::profile();
+        let f = [1e9; 4];
+        let up = [1e8; 4];
+        let dn = [1e8; 4];
+        let inp = inputs(&p, &f, &up, &dn);
+        let a = round_latency(Framework::Psl, &inp).round_total();
+        let b =
+            round_latency(Framework::Epsl { phi: 0.0 }, &inp).round_total();
+        assert!((a - b).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sfl_adds_model_exchange_over_psl() {
+        let p = resnet18::profile();
+        let f = [1e9; 3];
+        let up = [1e8; 3];
+        let dn = [1e8; 3];
+        let inp = inputs(&p, &f, &up, &dn);
+        let psl = round_latency(Framework::Psl, &inp);
+        let sfl = round_latency(Framework::Sfl, &inp);
+        assert_eq!(psl.model_exchange, 0.0);
+        assert!(sfl.model_exchange > 0.0);
+        assert!(
+            (sfl.round_total() - psl.round_total() - sfl.model_exchange)
+                .abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn vanilla_scales_linearly_with_clients() {
+        let p = resnet18::profile();
+        let f2 = [1e9; 2];
+        let f4 = [1e9; 4];
+        let up2 = [1e8; 2];
+        let up4 = [1e8; 4];
+        let dn2 = [1e8; 2];
+        let dn4 = [1e8; 4];
+        let t2 = round_latency(Framework::VanillaSl, &inputs(&p, &f2, &up2, &dn2))
+            .round_total();
+        let t4 = round_latency(Framework::VanillaSl, &inputs(&p, &f4, &up4, &dn4))
+            .round_total();
+        assert!(t4 > 1.8 * t2, "t4={t4} vs t2={t2}");
+    }
+
+    #[test]
+    fn epsl_pt_flips_phi() {
+        assert_eq!(Framework::EpslPt { early: true }.phi(), 1.0);
+        assert_eq!(Framework::EpslPt { early: false }.phi(), 0.0);
+    }
+
+    #[test]
+    fn capability_matrix_matches_table1() {
+        // (offload, parallel, model exchange, dim reduction, raw access)
+        assert_eq!(
+            Framework::VanillaSl.capabilities(),
+            (true, false, false, false, false)
+        );
+        assert_eq!(
+            Framework::Sfl.capabilities(),
+            (true, true, true, false, false)
+        );
+        assert_eq!(
+            Framework::Psl.capabilities(),
+            (true, true, false, false, false)
+        );
+        assert_eq!(
+            Framework::Epsl { phi: 0.5 }.capabilities(),
+            (true, true, false, true, false)
+        );
+    }
+
+    #[test]
+    fn higher_phi_strictly_faster_round() {
+        let p = resnet18::profile();
+        let f = [1e9; 5];
+        let up = [1e8; 5];
+        let dn = [1e8; 5];
+        let inp = inputs(&p, &f, &up, &dn);
+        let mut last = f64::INFINITY;
+        for phi in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let t = round_latency(Framework::Epsl { phi }, &inp).round_total();
+            assert!(t < last, "phi={phi}: {t} !< {last}");
+            last = t;
+        }
+    }
+}

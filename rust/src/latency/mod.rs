@@ -1,0 +1,305 @@
+//! Per-round training-latency model — paper §V-A, eqs. (13)–(23).
+//!
+//! Seven stages per EPSL round (Fig. 5):
+//! 1. client-side FP (eq. 13) — parallel across clients
+//! 2. smashed-data uplink (eq. 15)
+//! 3. server-side FP over C·b samples (eq. 16)
+//! 4. server-side BP with last-layer aggregation (eq. 17)
+//! 5. aggregated-gradient broadcast (eq. 19)
+//! 6. unaggregated-gradient unicast (eq. 21)
+//! 7. client-side BP (eq. 22)
+//!
+//! Round total (eq. 23):
+//! `max_i(T_i^F + T_i^U) + T_s^F + T_s^B + T^B + max_i(T_i^D + T_i^B)`.
+
+pub mod frameworks;
+
+use crate::profile::NetworkProfile;
+
+/// Everything the stage-latency formulas consume for one configuration.
+#[derive(Debug, Clone)]
+pub struct LatencyInputs<'a> {
+    pub profile: &'a NetworkProfile,
+    /// Cut layer j (1-based; must be a cut candidate).
+    pub cut: usize,
+    /// Mini-batch size b per client.
+    pub batch: usize,
+    /// Aggregation ratio φ ∈ [0, 1].
+    pub phi: f64,
+    /// Server compute f_s (cycles/s) and intensity κ_s (cycles/FLOP).
+    pub f_server: f64,
+    pub kappa_server: f64,
+    /// Client compute intensity κ (cycles/FLOP), equal across clients.
+    pub kappa_client: f64,
+    /// Per-client compute f_i (cycles/s).
+    pub f_clients: &'a [f64],
+    /// Per-client uplink rates R_i^U (bits/s) — eq. 14.
+    pub uplink: &'a [f64],
+    /// Per-client downlink rates R_i^D (bits/s) — eq. 20.
+    pub downlink: &'a [f64],
+    /// Broadcast rate R^B (bits/s) — eq. 18.
+    pub broadcast: f64,
+}
+
+impl<'a> LatencyInputs<'a> {
+    pub fn n_clients(&self) -> usize {
+        self.f_clients.len()
+    }
+
+    /// ⌈φb⌉.
+    pub fn aggregated_count(&self) -> usize {
+        (self.phi * self.batch as f64).ceil() as usize
+    }
+}
+
+/// Per-stage latencies of one round (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageLatencies {
+    /// T_i^F — client FP (eq. 13).
+    pub client_fp: Vec<f64>,
+    /// T_i^U — smashed uplink (eq. 15).
+    pub uplink: Vec<f64>,
+    /// T_s^F — server FP (eq. 16).
+    pub server_fp: f64,
+    /// T_s^B — server BP (eq. 17).
+    pub server_bp: f64,
+    /// T^B — aggregated-gradient broadcast (eq. 19).
+    pub broadcast: f64,
+    /// T_i^D — unaggregated-gradient unicast (eq. 21).
+    pub downlink: Vec<f64>,
+    /// T_i^B — client BP (eq. 22).
+    pub client_bp: Vec<f64>,
+    /// Extra serial term (model exchange for SFL, relay for vanilla SL).
+    pub model_exchange: f64,
+}
+
+impl StageLatencies {
+    /// Eq. (23) round total (+ any model-exchange term).
+    pub fn round_total(&self) -> f64 {
+        self.uplink_phase_max()
+            + self.server_fp
+            + self.server_bp
+            + self.broadcast
+            + self.downlink_phase_max()
+            + self.model_exchange
+    }
+
+    /// `max_i (T_i^F + T_i^U)` — the uplink-side straggler.
+    pub fn uplink_phase_max(&self) -> f64 {
+        self.client_fp
+            .iter()
+            .zip(&self.uplink)
+            .map(|(f, u)| f + u)
+            .fold(0.0, f64::max)
+    }
+
+    /// `max_i (T_i^D + T_i^B)` — the downlink-side straggler.
+    pub fn downlink_phase_max(&self) -> f64 {
+        self.downlink
+            .iter()
+            .zip(&self.client_bp)
+            .map(|(d, b)| d + b)
+            .fold(0.0, f64::max)
+    }
+
+    /// Index of the uplink-phase straggler.
+    pub fn uplink_straggler(&self) -> usize {
+        let mut best = 0;
+        let mut bestv = f64::NEG_INFINITY;
+        for (i, (f, u)) in self.client_fp.iter().zip(&self.uplink).enumerate()
+        {
+            if f + u > bestv {
+                bestv = f + u;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Total communication seconds (uplink max + broadcast + downlink max
+    /// + exchange) — for the paper's comm/compute split discussion.
+    pub fn comm_seconds(&self) -> f64 {
+        let umax = self.uplink.iter().cloned().fold(0.0, f64::max);
+        let dmax = self.downlink.iter().cloned().fold(0.0, f64::max);
+        umax + self.broadcast + dmax + self.model_exchange
+    }
+}
+
+/// Compute the seven EPSL stage latencies (eqs. 13, 15–17, 19, 21–22).
+pub fn epsl_stage_latencies(inp: &LatencyInputs) -> StageLatencies {
+    let p = inp.profile;
+    let j = inp.cut;
+    let b = inp.batch as f64;
+    let c = inp.n_clients() as f64;
+    let m = inp.aggregated_count() as f64; // ⌈φb⌉
+
+    // eq. 13: T_i^F = b κ_i Φ_c^F / f_i
+    let phi_cf = p.client_fp_flops(j);
+    let client_fp: Vec<f64> = inp
+        .f_clients
+        .iter()
+        .map(|fi| b * inp.kappa_client * phi_cf / fi)
+        .collect();
+
+    // eq. 15: T_i^U = b ψ_j / R_i^U
+    let psi = p.psi_bits(j);
+    let uplink: Vec<f64> =
+        inp.uplink.iter().map(|r| b * psi / r.max(1e-9)).collect();
+
+    // eq. 16: T_s^F = C b κ_s Φ_s^F / f_s
+    let server_fp =
+        c * b * inp.kappa_server * p.server_fp_flops(j) / inp.f_server;
+
+    // eq. 17: T_s^B = [(⌈φb⌉ + C(b−⌈φb⌉)) κ_s Φ_s^B + C b κ_s Φ_s^L] / f_s
+    let eff_samples = m + c * (b - m);
+    let server_bp = (eff_samples * inp.kappa_server * p.server_bp_flops(j)
+        + c * b * inp.kappa_server * p.last_layer_bp_flops())
+        / inp.f_server;
+
+    // eq. 19: T^B = ⌈φb⌉ χ_j / R^B
+    let chi = p.chi_bits(j);
+    let broadcast = m * chi / inp.broadcast.max(1e-9);
+
+    // eq. 21: T_i^D = (b − ⌈φb⌉) χ_j / R_i^D
+    let downlink: Vec<f64> = inp
+        .downlink
+        .iter()
+        .map(|r| (b - m) * chi / r.max(1e-9))
+        .collect();
+
+    // eq. 22: T_i^B = b κ_i Φ_c^B / f_i
+    let phi_cb = p.client_bp_flops(j);
+    let client_bp: Vec<f64> = inp
+        .f_clients
+        .iter()
+        .map(|fi| b * inp.kappa_client * phi_cb / fi)
+        .collect();
+
+    StageLatencies {
+        client_fp,
+        uplink,
+        server_fp,
+        server_bp,
+        broadcast,
+        downlink,
+        client_bp,
+        model_exchange: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::resnet18;
+
+    fn inputs<'a>(p: &'a NetworkProfile, f: &'a [f64], up: &'a [f64],
+                  dn: &'a [f64], phi: f64) -> LatencyInputs<'a> {
+        LatencyInputs {
+            profile: p,
+            cut: 3,
+            batch: 64,
+            phi,
+            f_server: 5e9,
+            kappa_server: 1.0 / 32.0,
+            kappa_client: 1.0 / 16.0,
+            f_clients: f,
+            uplink: up,
+            downlink: dn,
+            broadcast: 2e8,
+        }
+    }
+
+    #[test]
+    fn stage13_formula() {
+        let p = resnet18::profile();
+        let f = [1e9, 2e9];
+        let up = [1e8, 1e8];
+        let dn = [1e8, 1e8];
+        let inp = inputs(&p, &f, &up, &dn, 0.5);
+        let s = epsl_stage_latencies(&inp);
+        // T_0^F = 64 * (1/16) * rho_3 / 1e9 ; faster client exactly half.
+        let expect = 64.0 * (1.0 / 16.0) * p.rho(3) / 1e9;
+        assert!((s.client_fp[0] - expect).abs() / expect < 1e-12);
+        assert!((s.client_fp[1] - expect / 2.0).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn phi_zero_kills_broadcast_phi_one_kills_unicast() {
+        let p = resnet18::profile();
+        let f = [1e9; 3];
+        let up = [1e8; 3];
+        let dn = [1e8; 3];
+        let s0 = epsl_stage_latencies(&inputs(&p, &f, &up, &dn, 0.0));
+        assert_eq!(s0.broadcast, 0.0);
+        assert!(s0.downlink[0] > 0.0);
+        let s1 = epsl_stage_latencies(&inputs(&p, &f, &up, &dn, 1.0));
+        assert!(s1.broadcast > 0.0);
+        assert_eq!(s1.downlink[0], 0.0);
+    }
+
+    #[test]
+    fn higher_phi_less_server_bp() {
+        // eq. 17: effective samples shrink from C·b (φ=0) to
+        // ⌈φb⌉ + C(b−⌈φb⌉); last-layer term constant.
+        let p = resnet18::profile();
+        let f = [1e9; 5];
+        let up = [1e8; 5];
+        let dn = [1e8; 5];
+        let s0 = epsl_stage_latencies(&inputs(&p, &f, &up, &dn, 0.0));
+        let s5 = epsl_stage_latencies(&inputs(&p, &f, &up, &dn, 0.5));
+        let s1 = epsl_stage_latencies(&inputs(&p, &f, &up, &dn, 1.0));
+        assert!(s5.server_bp < s0.server_bp);
+        assert!(s1.server_bp < s5.server_bp);
+    }
+
+    #[test]
+    fn round_total_is_eq23() {
+        let p = resnet18::profile();
+        let f = [1e9, 1.5e9];
+        let up = [5e7, 2e8];
+        let dn = [5e7, 2e8];
+        let inp = inputs(&p, &f, &up, &dn, 0.5);
+        let s = epsl_stage_latencies(&inp);
+        let manual = s
+            .client_fp
+            .iter()
+            .zip(&s.uplink)
+            .map(|(a, b)| a + b)
+            .fold(0.0, f64::max)
+            + s.server_fp
+            + s.server_bp
+            + s.broadcast
+            + s.downlink
+                .iter()
+                .zip(&s.client_bp)
+                .map(|(a, b)| a + b)
+                .fold(0.0, f64::max);
+        assert!((s.round_total() - manual).abs() < 1e-15);
+    }
+
+    #[test]
+    fn straggler_is_slowest_client() {
+        let p = resnet18::profile();
+        let f = [2e9, 1e9, 2e9]; // client 1 slowest compute
+        let up = [2e8; 3];
+        let dn = [2e8; 3];
+        let s = epsl_stage_latencies(&inputs(&p, &f, &up, &dn, 0.5));
+        assert_eq!(s.uplink_straggler(), 1);
+    }
+
+    #[test]
+    fn faster_server_lowers_server_terms_only() {
+        let p = resnet18::profile();
+        let f = [1e9; 2];
+        let up = [1e8; 2];
+        let dn = [1e8; 2];
+        let mut inp = inputs(&p, &f, &up, &dn, 0.5);
+        let a = epsl_stage_latencies(&inp);
+        inp.f_server = 10e9;
+        let b = epsl_stage_latencies(&inp);
+        assert!(b.server_fp < a.server_fp);
+        assert!(b.server_bp < a.server_bp);
+        assert_eq!(a.client_fp, b.client_fp);
+        assert_eq!(a.uplink, b.uplink);
+    }
+}

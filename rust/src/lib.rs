@@ -1,0 +1,50 @@
+//! # EPSL — Efficient Parallel Split Learning over wireless edge networks
+//!
+//! A from-scratch reproduction of Lin et al., *"Efficient Parallel Split
+//! Learning over Resource-constrained Wireless Edge Networks"* (2023), as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)**: the split-learning coordinator — round
+//!   orchestration across client workers and the edge server, the wireless
+//!   channel simulator, the per-round latency model (paper eqs. 13–23), the
+//!   joint subchannel/power/cut-layer optimizer (Algorithms 2–3, problems
+//!   P1–P4), and the experiment harness that regenerates every table and
+//!   figure in the paper's evaluation.
+//! - **L2 (python/compile/model.py)**: the split model's forward/backward
+//!   graphs, AOT-lowered to HLO text at build time.
+//! - **L1 (python/compile/kernels/)**: the EPSL last-layer
+//!   gradient-aggregation Pallas kernel embedded in those graphs.
+//!
+//! Python never runs at training time: [`runtime`] loads the AOT artifacts
+//! through the PJRT C API and the whole training loop is rust-native.
+//!
+//! ## Crate map
+//!
+//! | module | contents |
+//! |---|---|
+//! | [`util`] | substrates built from scratch for the offline environment: PRNG, stats, JSON, ASCII tables/plots, micro-bench + property-test harnesses |
+//! | [`config`] | typed experiment configuration (paper Table III defaults), TOML-subset parser, CLI |
+//! | [`profile`] | NN layer profiles: FLOPs ρ/ϖ and payloads ψ/χ — the paper's exact ResNet-18 Table IV plus the trainable SplitNet |
+//! | [`channel`] | mmWave wireless model: path loss, shadowing, subchannels, link rates (eqs. 14, 18, 20) |
+//! | [`latency`] | the seven per-stage latencies and the round total (eqs. 13–23) for EPSL and every baseline framework |
+//! | [`optim`] | the resource-management solver: greedy subchannel allocation (Alg. 2), convex power control (P2), cut-layer B&B MILP (P3), closed-form LP (P4), BCD (Alg. 3), baselines a–d |
+//! | [`data`] | synthetic datasets + IID / non-IID partitioners |
+//! | [`runtime`] | PJRT execution of the AOT artifacts (HLO text → compile → execute) |
+//! | [`coordinator`] | the training system: leader + client workers, full EPSL/PSL/SFL/vanilla-SL drivers |
+//! | [`metrics`] | round records, curves, CSV emission |
+//! | [`experiments`] | one registered generator per paper table/figure |
+
+pub mod channel;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod latency;
+pub mod metrics;
+pub mod optim;
+pub mod profile;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Error, Result};

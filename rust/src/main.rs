@@ -1,0 +1,308 @@
+//! `repro` — the EPSL reproduction CLI.
+//!
+//! Subcommands:
+//!   train     run one training experiment (framework/φ/C/cut configurable)
+//!   optimize  run the resource-management optimizer on a deployment
+//!   figures   regenerate paper tables/figures into `results/`
+//!   profile   print network profiles (ResNet-18 Table IV / SplitNet)
+//!   info      artifact + platform information
+
+use epsl::channel::{ChannelRealization, Deployment};
+use epsl::config::cli::{render_help, Args, FlagSpec};
+use epsl::config::Config;
+use epsl::coordinator::{train, TrainerOptions};
+use epsl::experiments::{self, Ctx};
+use epsl::latency::frameworks::Framework;
+use epsl::optim::baselines::Scheme;
+use epsl::optim::{baselines, bcd, Problem};
+use epsl::profile::{resnet18, splitnet};
+use epsl::runtime::artifact::Manifest;
+use epsl::runtime::Runtime;
+use epsl::util::rng::Rng;
+use epsl::util::table::Table;
+
+fn flag_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "config", takes_value: true, help: "TOML config file" },
+        FlagSpec { name: "id", takes_value: true, help: "figure/table id" },
+        FlagSpec { name: "all", takes_value: false, help: "all figures" },
+        FlagSpec { name: "full", takes_value: false, help: "full-budget experiments (default: quick)" },
+        FlagSpec { name: "out", takes_value: true, help: "results directory" },
+        FlagSpec { name: "framework", takes_value: true, help: "epsl|psl|sfl|vanilla|epsl-pt" },
+        FlagSpec { name: "phi", takes_value: true, help: "aggregation ratio" },
+        FlagSpec { name: "clients", takes_value: true, help: "client count C" },
+        FlagSpec { name: "cut", takes_value: true, help: "cut layer (splitnet 1..4)" },
+        FlagSpec { name: "rounds", takes_value: true, help: "training rounds" },
+        FlagSpec { name: "family", takes_value: true, help: "mnist|ham" },
+        FlagSpec { name: "non-iid", takes_value: false, help: "2-class non-IID sharding" },
+        FlagSpec { name: "seed", takes_value: true, help: "RNG seed" },
+        FlagSpec { name: "lr", takes_value: true, help: "learning rate (both sides)" },
+        FlagSpec { name: "dataset", takes_value: true, help: "dataset size D" },
+        FlagSpec { name: "optimize", takes_value: false, help: "use BCD for latency accounting" },
+        FlagSpec { name: "scheme", takes_value: true, help: "a|b|c|d|proposed (optimize)" },
+        FlagSpec { name: "artifacts", takes_value: true, help: "artifacts dir" },
+        FlagSpec { name: "help", takes_value: false, help: "print help" },
+    ]
+}
+
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("train", "run one training experiment end-to-end"),
+    ("optimize", "run resource management on a simulated deployment"),
+    ("figures", "regenerate paper tables/figures (--id X | --all)"),
+    ("profile", "print ResNet-18 / SplitNet profiles"),
+    ("info", "artifact + platform info"),
+];
+
+fn parse_framework(s: &str, phi: f64) -> Result<Framework, String> {
+    Ok(match s {
+        "epsl" => Framework::Epsl { phi },
+        "psl" => Framework::Psl,
+        "sfl" => Framework::Sfl,
+        "vanilla" => Framework::VanillaSl,
+        "epsl-pt" => Framework::EpslPt { early: true },
+        other => return Err(format!("unknown framework '{other}'")),
+    })
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let specs = flag_specs();
+    let args = match Args::parse(&argv, &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n");
+            eprintln!("{}", render_help("repro", SUBCOMMANDS, &specs));
+            std::process::exit(2);
+        }
+    };
+    if args.has("help") || args.subcommand.is_empty() {
+        println!("{}", render_help("repro", SUBCOMMANDS, &specs));
+        return;
+    }
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::new(),
+    };
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    Ok(cfg)
+}
+
+fn dispatch(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_str() {
+        "train" => cmd_train(args),
+        "optimize" => cmd_optimize(args),
+        "figures" => cmd_figures(args),
+        "profile" => cmd_profile(args),
+        "info" => cmd_info(args),
+        other => {
+            anyhow::bail!("unknown subcommand '{other}' (try --help)")
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let phi = args.f64("phi")?.unwrap_or(0.5);
+    let fw = parse_framework(args.get("framework").unwrap_or("epsl"), phi)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let lr = args.f64("lr")?.unwrap_or(0.1) as f32;
+    let opts = TrainerOptions {
+        family: args.get("family").unwrap_or("mnist").to_string(),
+        framework: fw,
+        n_clients: args.usize("clients")?.unwrap_or(5),
+        cut: args.usize("cut")?.unwrap_or(2),
+        iid: !args.has("non-iid"),
+        dataset_size: args.usize("dataset")?.unwrap_or(2000),
+        rounds: args.usize("rounds")?.unwrap_or(200),
+        eta_c: lr,
+        eta_s: lr,
+        seed: args.usize("seed")?.unwrap_or(2023) as u64,
+        optimize_resources: args.has("optimize"),
+        ..Default::default()
+    };
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    println!(
+        "training {} C={} cut={} rounds={} family={}",
+        opts.framework.name(),
+        opts.n_clients,
+        opts.cut,
+        opts.rounds,
+        opts.family
+    );
+    let run = train(&rt, &manifest, &cfg, &opts)?;
+    for r in &run.rounds {
+        if !r.test_acc.is_nan() {
+            println!(
+                "round {:>4}: loss {:.4}  train {:.3}  test {:.3}  sim {:.2}s",
+                r.round, r.loss, r.train_acc, r.test_acc, r.sim_latency
+            );
+        }
+    }
+    println!(
+        "converged accuracy {:.3}; total simulated latency {:.1}s",
+        run.converged_accuracy(3),
+        run.total_latency()
+    );
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let mut net = cfg.net.clone();
+    if let Some(c) = args.usize("clients")? {
+        net.n_clients = c;
+    }
+    let profile = resnet18::profile();
+    let mut rng = Rng::new(args.usize("seed")?.unwrap_or(11) as u64);
+    let dep = Deployment::generate(&net, &mut rng);
+    let ch = ChannelRealization::average(&dep);
+    let prob = Problem {
+        cfg: &net,
+        profile: &profile,
+        dep: &dep,
+        ch: &ch,
+        batch: cfg.train.batch,
+        phi: args.f64("phi")?.unwrap_or(cfg.train.phi),
+    };
+    let scheme = match args.get("scheme").unwrap_or("proposed") {
+        "a" => Scheme::BaselineA,
+        "b" => Scheme::BaselineB,
+        "c" => Scheme::BaselineC,
+        "d" => Scheme::BaselineD,
+        _ => Scheme::Proposed,
+    };
+    let d = if scheme == Scheme::Proposed {
+        let res = bcd::solve(&prob, bcd::BcdOptions::default())?;
+        println!(
+            "BCD converged in {} iterations; trajectory: {:?}",
+            res.iterations,
+            res.trajectory
+                .iter()
+                .map(|t| format!("{t:.3}"))
+                .collect::<Vec<_>>()
+        );
+        res.decision
+    } else {
+        let mut srng = Rng::new(7);
+        baselines::solve(&prob, scheme, &mut srng)?
+    };
+    let s = prob.stage_latencies(&d);
+    println!("scheme: {}", scheme.name());
+    println!("cut layer: {} ({})", d.cut, profile.layers[d.cut - 1].name);
+    let mut t = Table::new("per-client allocation").header(&[
+        "client", "f (GHz)", "d (m)", "channels", "power (W)", "T_F+T_U (s)",
+        "T_D+T_B (s)",
+    ]);
+    for i in 0..prob.n_clients() {
+        t.row(&[
+            i.to_string(),
+            format!("{:.2}", dep.clients[i].f_client / 1e9),
+            format!("{:.0}", dep.clients[i].distance_m),
+            d.alloc.count_of(i).to_string(),
+            format!("{:.3}", prob.client_power_w(&d, i)),
+            format!("{:.3}", s.client_fp[i] + s.uplink[i]),
+            format!("{:.3}", s.downlink[i] + s.client_bp[i]),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "round latency: {:.3}s  (uplink phase {:.3} + server fp {:.3} + \
+         server bp {:.3} + broadcast {:.3} + downlink phase {:.3})",
+        s.round_total(),
+        s.uplink_phase_max(),
+        s.server_fp,
+        s.server_bp,
+        s.broadcast,
+        s.downlink_phase_max()
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let out = args.get("out").unwrap_or("results").to_string();
+    let quick = !args.has("full");
+    // Runtime is optional: latency-only figures run without artifacts.
+    let loaded = Manifest::load(&cfg.artifacts_dir)
+        .ok()
+        .and_then(|m| Runtime::new(&cfg.artifacts_dir).ok().map(|rt| (m, rt)));
+    let (manifest, rt) = match &loaded {
+        Some((m, r)) => (Some(m), Some(r)),
+        None => (None, None),
+    };
+    let mut ctx = Ctx::new(cfg, rt, manifest, &out, quick);
+    if args.has("all") {
+        for id in experiments::ALL_IDS {
+            experiments::run(id, &mut ctx)?;
+        }
+    } else if let Some(id) = args.get("id") {
+        experiments::run(id, &mut ctx)?;
+    } else {
+        anyhow::bail!("figures: pass --id <id> or --all");
+    }
+    Ok(())
+}
+
+fn cmd_profile(_args: &Args) -> anyhow::Result<()> {
+    for p in [
+        resnet18::profile(),
+        splitnet::profile(splitnet::SplitNetConfig::mnist_like()),
+    ] {
+        let mut t = Table::new(p.name).header(&[
+            "layer", "params (MiB)", "FP (MFLOP)", "smashed (MiB)",
+        ]);
+        for l in &p.layers {
+            t.row(&[
+                l.name.to_string(),
+                format!("{:.4}", l.params_mib),
+                format!("{:.4}", l.fp_mflops),
+                format!("{:.4}", l.smashed_mib),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "total: {:.2} MFLOP fwd, {:.2} MiB params, cuts {:?}\n",
+            p.rho_total() / 1e6,
+            p.model_bits() / 8.0 / 1024.0 / 1024.0,
+            p.cut_candidates
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    match Manifest::load(&cfg.artifacts_dir) {
+        Ok(m) => {
+            println!("artifacts: {}", cfg.artifacts_dir);
+            println!("client counts: {:?}", m.client_counts);
+            println!("cuts: {:?}", m.cuts);
+            for (name, fam) in &m.families {
+                println!(
+                    "family {name}: {} params ({} tensors), batch {}, \
+                     {} classes",
+                    fam.param_elements(),
+                    fam.params.len(),
+                    fam.batch,
+                    fam.num_classes
+                );
+            }
+        }
+        Err(e) => println!("no artifacts: {e}"),
+    }
+    match Runtime::new(&cfg.artifacts_dir) {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    Ok(())
+}

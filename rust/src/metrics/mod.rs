@@ -1,0 +1,188 @@
+//! Training metrics: per-round records, curves, CSV emission.
+
+use std::fmt::Write as _;
+
+use crate::util::stats;
+
+/// One training round's record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Global weighted training loss (eq. 1).
+    pub loss: f64,
+    /// Training mini-batch accuracy over C·b samples.
+    pub train_acc: f64,
+    /// Test accuracy (NaN when not evaluated this round).
+    pub test_acc: f64,
+    /// Simulated per-round latency from the §V model (seconds).
+    pub sim_latency: f64,
+    /// Wall-clock milliseconds actually spent executing the round.
+    pub wall_ms: f64,
+}
+
+/// A full training run's record.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub name: String,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunMetrics {
+    pub fn new(name: &str) -> Self {
+        RunMetrics { name: name.to_string(), rounds: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    /// Cumulative simulated latency up to and including round `idx`.
+    pub fn cumulative_latency(&self, idx: usize) -> f64 {
+        self.rounds[..=idx].iter().map(|r| r.sim_latency).sum()
+    }
+
+    pub fn total_latency(&self) -> f64 {
+        self.rounds.iter().map(|r| r.sim_latency).sum()
+    }
+
+    /// Test-accuracy curve as (round, acc) over evaluated rounds.
+    pub fn accuracy_curve(&self) -> Vec<(f64, f64)> {
+        self.rounds
+            .iter()
+            .filter(|r| !r.test_acc.is_nan())
+            .map(|r| (r.round as f64, r.test_acc))
+            .collect()
+    }
+
+    /// Loss curve as (round, loss).
+    pub fn loss_curve(&self) -> Vec<(f64, f64)> {
+        self.rounds.iter().map(|r| (r.round as f64, r.loss)).collect()
+    }
+
+    /// Final test accuracy: mean of the last `k` evaluated points
+    /// (the paper's "converged test accuracy").
+    pub fn converged_accuracy(&self, k: usize) -> f64 {
+        let pts: Vec<f64> = self
+            .rounds
+            .iter()
+            .filter(|r| !r.test_acc.is_nan())
+            .map(|r| r.test_acc)
+            .collect();
+        if pts.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &pts[pts.len().saturating_sub(k)..];
+        stats::mean(tail)
+    }
+
+    /// Simulated latency (seconds) until the EMA-smoothed test accuracy
+    /// first reaches `target`; `None` if never reached.
+    pub fn latency_to_accuracy(&self, target: f64) -> Option<f64> {
+        let evaluated: Vec<(usize, f64)> = self
+            .rounds
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !r.test_acc.is_nan())
+            .map(|(i, r)| (i, r.test_acc))
+            .collect();
+        let series: Vec<f64> = evaluated.iter().map(|(_, a)| *a).collect();
+        let hit = stats::rounds_to_target(&series, target, 0.5)?;
+        let round_idx = evaluated[hit].0;
+        Some(self.cumulative_latency(round_idx))
+    }
+
+    /// Rounds until the smoothed test accuracy reaches `target`.
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<usize> {
+        let evaluated: Vec<(usize, f64)> = self
+            .rounds
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !r.test_acc.is_nan())
+            .map(|(i, r)| (i, r.test_acc))
+            .collect();
+        let series: Vec<f64> = evaluated.iter().map(|(_, a)| *a).collect();
+        let hit = stats::rounds_to_target(&series, target, 0.5)?;
+        Some(self.rounds[evaluated[hit].0].round)
+    }
+
+    /// CSV dump (one row per round).
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("round,loss,train_acc,test_acc,sim_latency_s,wall_ms\n");
+        for r in &self.rounds {
+            let _ = writeln!(
+                out,
+                "{},{:.6},{:.4},{:.4},{:.6},{:.3}",
+                r.round, r.loss, r.train_acc, r.test_acc, r.sim_latency,
+                r.wall_ms
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_with(accs: &[f64]) -> RunMetrics {
+        let mut m = RunMetrics::new("test");
+        for (i, &a) in accs.iter().enumerate() {
+            m.push(RoundRecord {
+                round: i,
+                loss: 1.0 / (i + 1) as f64,
+                train_acc: a,
+                test_acc: a,
+                sim_latency: 2.0,
+                wall_ms: 1.0,
+            });
+        }
+        m
+    }
+
+    #[test]
+    fn cumulative_latency_sums() {
+        let m = run_with(&[0.1, 0.2, 0.3]);
+        assert_eq!(m.cumulative_latency(1), 4.0);
+        assert_eq!(m.total_latency(), 6.0);
+    }
+
+    #[test]
+    fn latency_to_accuracy_crossing() {
+        let accs: Vec<f64> = (0..10).map(|i| i as f64 / 10.0).collect();
+        let m = run_with(&accs);
+        // EMA(0.5) crosses 0.5 a bit after raw would.
+        let lat = m.latency_to_accuracy(0.5).unwrap();
+        assert!(lat >= 2.0 * 6.0 && lat <= 2.0 * 10.0, "{lat}");
+        assert!(m.latency_to_accuracy(0.99).is_none());
+    }
+
+    #[test]
+    fn converged_accuracy_tail_mean() {
+        let m = run_with(&[0.0, 0.0, 0.8, 0.9]);
+        assert!((m.converged_accuracy(2) - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_test_acc_skipped_in_curves() {
+        let mut m = run_with(&[0.1]);
+        m.push(RoundRecord {
+            round: 1,
+            loss: 0.5,
+            train_acc: 0.5,
+            test_acc: f64::NAN,
+            sim_latency: 1.0,
+            wall_ms: 1.0,
+        });
+        assert_eq!(m.accuracy_curve().len(), 1);
+        assert_eq!(m.loss_curve().len(), 2);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let m = run_with(&[0.1, 0.2]);
+        let csv = m.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("round,"));
+    }
+}

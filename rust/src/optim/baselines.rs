@@ -1,0 +1,284 @@
+//! Comparison schemes a)–d) from the paper's §VII-C (Figs. 11–12), plus the
+//! proposed full BCD solution.
+//!
+//! - **a)** RSS-based subchannel allocation, uniform PSD, random cut.
+//! - **b)** greedy allocation (Alg. 2) + optimized power (P2), random cut.
+//! - **c)** RSS-based allocation + optimized cut (P3) + optimized power.
+//! - **d)** greedy allocation + optimized cut, uniform PSD.
+//! - **proposed**: the full BCD of Algorithm 3.
+//!
+//! RSS-based allocation assigns each subchannel to the client with the
+//! highest received signal strength on it (∝ mean gain at equal PSD). To
+//! keep every client served (an implicit assumption in the paper — latency
+//! would otherwise be unbounded), each client is first granted its best
+//! subchannel, then the rest go by RSS.
+
+use crate::channel::rate::{uniform_psd_dbm_hz, Allocation};
+use crate::config::dbm_to_w;
+use crate::error::Result;
+use crate::util::rng::Rng;
+
+use super::bcd::{self, BcdOptions};
+use super::power::PSD_OFF_DBM_HZ;
+use super::{cutlayer, greedy, power, Decision, Problem};
+
+/// The five schemes of Figs. 11–12.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    BaselineA,
+    BaselineB,
+    BaselineC,
+    BaselineD,
+    Proposed,
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::BaselineA => "baseline a (RSS+uniform+rand cut)",
+            Scheme::BaselineB => "baseline b (greedy+power+rand cut)",
+            Scheme::BaselineC => "baseline c (RSS+cut+power)",
+            Scheme::BaselineD => "baseline d (greedy+cut+uniform)",
+            Scheme::Proposed => "proposed (BCD)",
+        }
+    }
+
+    pub fn all() -> [Scheme; 5] {
+        [
+            Scheme::BaselineA,
+            Scheme::BaselineB,
+            Scheme::BaselineC,
+            Scheme::BaselineD,
+            Scheme::Proposed,
+        ]
+    }
+}
+
+/// RSS-based subchannel allocation.
+pub fn rss_allocation(prob: &Problem) -> Allocation {
+    let c = prob.n_clients();
+    let m = prob.n_subchannels();
+    let mut alloc = Allocation::empty(m);
+    let mut taken = vec![false; m];
+    // Serve every client its best channel first.
+    let mut order: Vec<usize> = (0..c).collect();
+    // Weakest average link first so it gets a genuine pick.
+    order.sort_by(|&a, &b| {
+        let ga: f64 = prob.ch.gain[a].iter().sum();
+        let gb: f64 = prob.ch.gain[b].iter().sum();
+        ga.partial_cmp(&gb).unwrap()
+    });
+    for &i in &order {
+        let k = (0..m)
+            .filter(|&k| !taken[k])
+            .max_by(|&a, &b| {
+                prob.ch.gain[i][a].partial_cmp(&prob.ch.gain[i][b]).unwrap()
+            })
+            .expect("M >= C");
+        alloc.assign(k, i);
+        taken[k] = true;
+    }
+    // Remaining channels: highest RSS owner.
+    for k in 0..m {
+        if !taken[k] {
+            let i = (0..c)
+                .max_by(|&a, &b| {
+                    prob.ch.gain[a][k].partial_cmp(&prob.ch.gain[b][k]).unwrap()
+                })
+                .unwrap();
+            alloc.assign(k, i);
+        }
+    }
+    alloc
+}
+
+/// Uniform PSD plan: every client spreads its power budget evenly over its
+/// subchannels; globally scaled down if C6 would be violated.
+pub fn uniform_power(prob: &Problem, alloc: &Allocation) -> Vec<f64> {
+    let m = prob.n_subchannels();
+    let c = prob.n_clients();
+    let p_max_w = dbm_to_w(prob.cfg.p_max_dbm);
+    let p_th_w = dbm_to_w(prob.cfg.p_th_dbm);
+    let scale = (p_th_w / (c as f64 * p_max_w)).min(1.0);
+    let mut psd = vec![PSD_OFF_DBM_HZ; m];
+    for i in 0..c {
+        let chs = alloc.channels_of(i);
+        if chs.is_empty() {
+            continue;
+        }
+        let dbm_budget =
+            prob.cfg.p_max_dbm + 10.0 * scale.log10();
+        let v = uniform_psd_dbm_hz(
+            dbm_budget,
+            chs.len(),
+            prob.cfg.subchannel_bw_hz,
+        );
+        for k in chs {
+            psd[k] = v;
+        }
+    }
+    psd
+}
+
+/// Random cut among the candidates (baselines a/b).
+pub fn random_cut(prob: &Problem, rng: &mut Rng) -> usize {
+    let cands = &prob.profile.cut_candidates;
+    cands[rng.below(cands.len())]
+}
+
+/// Solve one scheme. `rng` drives the random cut draws of a)/b).
+pub fn solve(prob: &Problem, scheme: Scheme, rng: &mut Rng)
+    -> Result<Decision> {
+    match scheme {
+        Scheme::BaselineA => {
+            let cut = random_cut(prob, rng);
+            let alloc = rss_allocation(prob);
+            let psd = uniform_power(prob, &alloc);
+            Ok(Decision { alloc, psd_dbm_hz: psd, cut })
+        }
+        Scheme::BaselineB => {
+            let cut = random_cut(prob, rng);
+            let seed_psd = uniform_power(prob, &rss_allocation(prob));
+            let alloc = greedy::allocate(prob, &seed_psd, cut);
+            let sol = power::solve(prob, &alloc, cut)?;
+            Ok(Decision { alloc, psd_dbm_hz: sol.psd_dbm_hz, cut })
+        }
+        Scheme::BaselineC => {
+            let alloc = rss_allocation(prob);
+            // Iterate cut ↔ power to a joint fixed point (2 passes suffice).
+            let mut psd = uniform_power(prob, &alloc);
+            let mut cut = prob.profile.cut_candidates
+                [prob.profile.cut_candidates.len() / 2];
+            for _ in 0..3 {
+                let (new_cut, _) = cutlayer::solve(prob, &alloc, &psd)?;
+                cut = new_cut;
+                let sol = power::solve(prob, &alloc, cut)?;
+                psd = sol.psd_dbm_hz;
+            }
+            Ok(Decision { alloc, psd_dbm_hz: psd, cut })
+        }
+        Scheme::BaselineD => {
+            let mut cut = prob.profile.cut_candidates
+                [prob.profile.cut_candidates.len() / 2];
+            let mut alloc = rss_allocation(prob);
+            let mut psd = uniform_power(prob, &alloc);
+            for _ in 0..3 {
+                alloc = greedy::allocate(prob, &psd, cut);
+                psd = uniform_power(prob, &alloc);
+                let (new_cut, _) = cutlayer::solve(prob, &alloc, &psd)?;
+                cut = new_cut;
+            }
+            Ok(Decision { alloc, psd_dbm_hz: psd, cut })
+        }
+        Scheme::Proposed => {
+            Ok(bcd::solve(prob, BcdOptions::default())?.decision)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkConfig;
+    use crate::optim::test_support::fixture;
+    use crate::profile::resnet18;
+
+    fn prob<'a>(
+        cfg: &'a NetworkConfig,
+        profile: &'a crate::profile::NetworkProfile,
+        dep: &'a crate::channel::Deployment,
+        ch: &'a crate::channel::ChannelRealization,
+    ) -> Problem<'a> {
+        Problem { cfg, profile, dep, ch, batch: 64, phi: 0.5 }
+    }
+
+    #[test]
+    fn all_schemes_feasible() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let p = prob(&cfg, &profile, &dep, &ch);
+        let mut rng = Rng::new(77);
+        for scheme in Scheme::all() {
+            let d = solve(&p, scheme, &mut rng).unwrap();
+            p.check_feasible(&d)
+                .unwrap_or_else(|e| panic!("{}: {e}", scheme.name()));
+        }
+    }
+
+    #[test]
+    fn rss_allocation_serves_everyone() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let p = prob(&cfg, &profile, &dep, &ch);
+        let alloc = rss_allocation(&p);
+        assert!(alloc.is_complete());
+        for i in 0..cfg.n_clients {
+            assert!(alloc.count_of(i) >= 1);
+        }
+    }
+
+    #[test]
+    fn proposed_no_worse_than_every_baseline() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let p = prob(&cfg, &profile, &dep, &ch);
+        let mut rng = Rng::new(123);
+        let t_prop =
+            p.objective(&solve(&p, Scheme::Proposed, &mut rng).unwrap());
+        // Average the random-cut baselines over a few draws.
+        for scheme in [
+            Scheme::BaselineA,
+            Scheme::BaselineB,
+            Scheme::BaselineC,
+            Scheme::BaselineD,
+        ] {
+            let mut ts = Vec::new();
+            for s in 0..5 {
+                let mut r = Rng::new(1000 + s);
+                ts.push(p.objective(&solve(&p, scheme, &mut r).unwrap()));
+            }
+            let avg = crate::util::stats::mean(&ts);
+            assert!(
+                t_prop <= avg * 1.02,
+                "{}: proposed {t_prop} vs baseline avg {avg}",
+                scheme.name()
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_power_respects_c5_c6() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let p = prob(&cfg, &profile, &dep, &ch);
+        let alloc = rss_allocation(&p);
+        let psd = uniform_power(&p, &alloc);
+        let d = Decision { alloc, psd_dbm_hz: psd, cut: 3 };
+        p.check_feasible(&d).unwrap();
+    }
+
+    #[test]
+    fn cut_optimized_schemes_beat_random_cut_schemes() {
+        // The paper's key observation (Figs. 11–12): cut-layer optimization
+        // dominates power/subchannel optimization.
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let p = prob(&cfg, &profile, &dep, &ch);
+        let avg_over = |scheme: Scheme| {
+            let mut ts = Vec::new();
+            for s in 0..8 {
+                let mut r = Rng::new(500 + s);
+                ts.push(p.objective(&solve(&p, scheme, &mut r).unwrap()));
+            }
+            crate::util::stats::mean(&ts)
+        };
+        let a = avg_over(Scheme::BaselineA);
+        let c = avg_over(Scheme::BaselineC);
+        assert!(c < a, "cut-optimized c ({c}) !< random-cut a ({a})");
+    }
+}

@@ -1,0 +1,224 @@
+//! Algorithm 3 — block-coordinate descent over (r, p, μ, T₁, T₂).
+//!
+//! Each iteration updates the four blocks in the paper's order:
+//! 1. `r`  ← greedy subchannel allocation (Algorithm 2)
+//! 2. `θ/p` ← exact power control (P2)
+//! 3. `μ`  ← cut-layer MILP via B&B (P3)
+//! 4. `(T₁, T₂)` ← closed form (P4, eqs. 33–34)
+//!
+//! Hardening over the paper's pseudocode: every block update is accepted
+//! only if it does not increase the true objective (eq. 23), which makes
+//! the trajectory provably non-increasing — BCD on a non-convex problem
+//! can otherwise oscillate between blocks.
+
+use crate::channel::rate;
+use crate::error::Result;
+
+use super::{cutlayer, greedy, power, Decision, Problem};
+
+/// BCD options.
+#[derive(Debug, Clone, Copy)]
+pub struct BcdOptions {
+    pub max_iters: usize,
+    /// Convergence tolerance ε on |ΔT̃| (seconds).
+    pub tol: f64,
+}
+
+impl Default for BcdOptions {
+    fn default() -> Self {
+        BcdOptions { max_iters: 20, tol: 1e-6 }
+    }
+}
+
+/// BCD outcome.
+#[derive(Debug, Clone)]
+pub struct BcdResult {
+    pub decision: Decision,
+    pub objective: f64,
+    /// Objective after each iteration (non-increasing).
+    pub trajectory: Vec<f64>,
+    pub iterations: usize,
+}
+
+/// Initial decision: middle cut candidate, round-robin-ish greedy at a
+/// conservative uniform PSD.
+fn initial(prob: &Problem) -> Decision {
+    let cands = &prob.profile.cut_candidates;
+    let cut = cands[cands.len() / 2];
+    let per_client =
+        (prob.n_subchannels() / prob.n_clients()).max(1);
+    let psd = vec![
+        rate::uniform_psd_dbm_hz(
+            prob.cfg.p_max_dbm - 3.0,
+            per_client,
+            prob.cfg.subchannel_bw_hz
+        );
+        prob.n_subchannels()
+    ];
+    greedy::allocate_decision(prob, psd, cut)
+}
+
+/// Run Algorithm 3.
+pub fn solve(prob: &Problem, opts: BcdOptions) -> Result<BcdResult> {
+    let mut d = initial(prob);
+    let mut best = prob.objective(&d);
+    let mut trajectory = vec![best];
+    let mut iterations = 0;
+
+    for _ in 0..opts.max_iters {
+        iterations += 1;
+        let before = best;
+
+        // Block 1: subchannel allocation (Algorithm 2).
+        let alloc = greedy::allocate(prob, &d.psd_dbm_hz, d.cut);
+        let cand = Decision { alloc, ..d.clone() };
+        if prob.check_feasible(&cand).is_ok() {
+            let t = prob.objective(&cand);
+            if t <= best {
+                d = cand;
+                best = t;
+            }
+        }
+
+        // Block 2: power control (P2).
+        if let Ok(sol) = power::solve(prob, &d.alloc, d.cut) {
+            let cand = Decision { psd_dbm_hz: sol.psd_dbm_hz, ..d.clone() };
+            if prob.check_feasible(&cand).is_ok() {
+                let t = prob.objective(&cand);
+                if t <= best {
+                    d = cand;
+                    best = t;
+                }
+            }
+        }
+
+        // Block 3: cut layer (P3 via B&B). Re-run power for the new cut so
+        // the comparison is fair (the cut changes the uplink payload).
+        if let Ok((cut, _stats)) =
+            cutlayer::solve(prob, &d.alloc, &d.psd_dbm_hz)
+        {
+            if cut != d.cut {
+                let mut cand = Decision { cut, ..d.clone() };
+                if let Ok(sol) = power::solve(prob, &cand.alloc, cut) {
+                    cand.psd_dbm_hz = sol.psd_dbm_hz;
+                }
+                if prob.check_feasible(&cand).is_ok() {
+                    let t = prob.objective(&cand);
+                    if t <= best {
+                        d = cand;
+                        best = t;
+                    }
+                }
+            }
+        }
+
+        // Block 4: (T1, T2) are implicit in `objective` (P4 closed form).
+        trajectory.push(best);
+        if (before - best).abs() < opts.tol {
+            break;
+        }
+    }
+    Ok(BcdResult { decision: d, objective: best, trajectory, iterations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkConfig;
+    use crate::optim::test_support::{fixture, round_robin};
+    use crate::profile::resnet18;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+    use crate::channel::{ChannelRealization, Deployment};
+
+    fn prob_fixture<'a>(
+        cfg: &'a NetworkConfig,
+        profile: &'a crate::profile::NetworkProfile,
+        dep: &'a Deployment,
+        ch: &'a ChannelRealization,
+    ) -> Problem<'a> {
+        Problem { cfg, profile, dep, ch, batch: 64, phi: 0.5 }
+    }
+
+    #[test]
+    fn trajectory_non_increasing_and_feasible() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = prob_fixture(&cfg, &profile, &dep, &ch);
+        let res = solve(&prob, BcdOptions::default()).unwrap();
+        for w in res.trajectory.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "trajectory increased: {w:?}");
+        }
+        prob.check_feasible(&res.decision).unwrap();
+        assert!(res.objective > 0.0);
+        assert!(
+            (prob.objective(&res.decision) - res.objective).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn beats_naive_baseline_decision() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = prob_fixture(&cfg, &profile, &dep, &ch);
+        let res = solve(&prob, BcdOptions::default()).unwrap();
+        // Naive: round-robin channels, uniform mild PSD, shallow cut.
+        let naive = Decision {
+            alloc: round_robin(&cfg),
+            psd_dbm_hz: vec![-65.0; 20],
+            cut: 1,
+        };
+        assert!(
+            res.objective < prob.objective(&naive),
+            "BCD {} !< naive {}",
+            res.objective,
+            prob.objective(&naive)
+        );
+    }
+
+    #[test]
+    fn converges_within_max_iters() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = prob_fixture(&cfg, &profile, &dep, &ch);
+        let res = solve(&prob, BcdOptions { max_iters: 30, tol: 1e-9 })
+            .unwrap();
+        assert!(res.iterations <= 30);
+        // Last two iterations should be ~converged.
+        let n = res.trajectory.len();
+        if n >= 2 {
+            assert!(res.trajectory[n - 2] - res.trajectory[n - 1] < 1e-3);
+        }
+    }
+
+    #[test]
+    fn property_bcd_feasible_and_monotone_across_deployments() {
+        check("BCD invariants", 10, |g| {
+            let mut cfg = NetworkConfig::default();
+            cfg.n_clients = g.usize_in(2, 6);
+            cfg.n_subchannels = cfg.n_clients + g.usize_in(1, 12);
+            cfg.f_server = g.f64_in(1e9, 9e9);
+            let profile = resnet18::profile();
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let dep = Deployment::generate(&cfg, &mut rng);
+            let ch = ChannelRealization::average(&dep);
+            let prob = Problem {
+                cfg: &cfg,
+                profile: &profile,
+                dep: &dep,
+                ch: &ch,
+                batch: 64,
+                phi: *g.choose(&[0.0, 0.5, 1.0]),
+            };
+            let res =
+                solve(&prob, BcdOptions { max_iters: 8, tol: 1e-6 }).unwrap();
+            prob.check_feasible(&res.decision).unwrap();
+            for w in res.trajectory.windows(2) {
+                assert!(w[1] <= w[0] + 1e-12);
+            }
+        });
+    }
+}

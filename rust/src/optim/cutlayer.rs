@@ -1,0 +1,254 @@
+//! P3 — cut-layer selection as a MILP solved by branch-and-bound
+//! (paper problem (31)).
+//!
+//! With allocation and powers fixed, the remaining decision is the one-hot
+//! cut vector μ plus the auxiliary straggler bounds T₁, T₂:
+//!
+//!   minimize   T₁ + Σ_j μ_j·(T_s^F(j) + T_s^B(j) + T^B(j)) + T₂
+//!   s.t.       Σ_j μ_j = 1                                   (C4)
+//!              Σ_j μ_j·(T_i^F(j) + bψ_j/R_i^U) ≤ T₁   ∀i     (C8)
+//!              Σ_j μ_j·((b−⌈φb⌉)χ_j/R_i^D + T_i^B(j)) ≤ T₂ ∀i (C9)
+//!              μ_j ∈ {0,1}
+//!
+//! Everything is linear in (μ, T₁, T₂), so this is exactly the MILP the
+//! paper hands to B&B; we hand it to [`super::milp`]. An exhaustive
+//! reference solver cross-checks optimality in tests (the candidate set is
+//! small — the paper makes the same observation about AlexNet/GoogLeNet).
+
+use crate::channel::rate::Allocation;
+use crate::error::{Error, Result};
+
+use super::milp::{solve_milp, Lp, Milp, MilpStats};
+use super::{Decision, Problem};
+
+/// Per-candidate server-side cost `T_s^F + T_s^B + T^B` (the μ-weighted
+/// part of the objective).
+fn server_cost(prob: &Problem, cut: usize, broadcast_rate: f64) -> f64 {
+    let p = prob.profile;
+    let b = prob.batch as f64;
+    let c = prob.n_clients() as f64;
+    let m = (prob.phi * b).ceil();
+    let t_sf =
+        c * b * prob.cfg.kappa_server * p.server_fp_flops(cut) / prob.cfg.f_server;
+    let eff = m + c * (b - m);
+    let t_sb = (eff * prob.cfg.kappa_server * p.server_bp_flops(cut)
+        + c * b * prob.cfg.kappa_server * p.last_layer_bp_flops())
+        / prob.cfg.f_server;
+    let t_b = m * p.chi_bits(cut) / broadcast_rate.max(1e-9);
+    t_sf + t_sb + t_b
+}
+
+/// Solve P3 by B&B. Returns the optimal cut and the solver statistics.
+pub fn solve(prob: &Problem, alloc: &Allocation, psd_dbm_hz: &[f64])
+    -> Result<(usize, MilpStats)> {
+    let cands = &prob.profile.cut_candidates;
+    if cands.is_empty() {
+        return Err(Error::Optim("no cut candidates".into()));
+    }
+    let d0 = Decision {
+        alloc: alloc.clone(),
+        psd_dbm_hz: psd_dbm_hz.to_vec(),
+        cut: cands[0],
+    };
+    let (up, dn, bc) = prob.rates(&d0);
+    let nj = cands.len();
+    let c = prob.n_clients();
+    // Variables: μ_0..μ_{nj-1}, T1, T2.
+    let n = nj + 2;
+    let mut obj = vec![0.0; n];
+    for (jj, &cut) in cands.iter().enumerate() {
+        obj[jj] = server_cost(prob, cut, bc);
+    }
+    obj[nj] = 1.0; // T1
+    obj[nj + 1] = 1.0; // T2
+    let mut lp = Lp::new(n, obj);
+    // C4: Σ μ = 1.
+    let mut ones = vec![0.0; n];
+    ones[..nj].fill(1.0);
+    lp.eq(ones, 1.0);
+    // C8 / C9 per client.
+    for i in 0..c {
+        let mut c8 = vec![0.0; n];
+        let mut c9 = vec![0.0; n];
+        for (jj, &cut) in cands.iter().enumerate() {
+            c8[jj] = prob.client_fp_seconds(i, cut)
+                + prob.uplink_bits(cut) / up[i].max(1e-9);
+            c9[jj] = prob.downlink_bits(cut) / dn[i].max(1e-9)
+                + prob.client_bp_seconds(i, cut);
+        }
+        c8[nj] = -1.0;
+        lp.leq(c8, 0.0);
+        c9[nj + 1] = -1.0;
+        lp.leq(c9, 0.0);
+    }
+    let milp = Milp { lp, binary: (0..nj).collect() };
+    let (sol, stats) = solve_milp(&milp);
+    let (x, _) = sol.ok_or_else(|| {
+        Error::Optim("P3 MILP infeasible (should never happen)".into())
+    })?;
+    let jj = (0..nj)
+        .max_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap())
+        .unwrap();
+    Ok((cands[jj], stats))
+}
+
+/// Exhaustive reference: evaluate the true round objective at every cut.
+pub fn exhaustive(prob: &Problem, alloc: &Allocation, psd_dbm_hz: &[f64])
+    -> (usize, f64) {
+    let mut best = (prob.profile.cut_candidates[0], f64::INFINITY);
+    for &cut in &prob.profile.cut_candidates {
+        let d = Decision {
+            alloc: alloc.clone(),
+            psd_dbm_hz: psd_dbm_hz.to_vec(),
+            cut,
+        };
+        let t = prob.objective(&d);
+        if t < best.1 {
+            best = (cut, t);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkConfig;
+    use crate::optim::test_support::{fixture, round_robin};
+    use crate::profile::{resnet18, splitnet};
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+    use crate::channel::{ChannelRealization, Deployment};
+
+    #[test]
+    fn milp_matches_exhaustive_resnet() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let alloc = round_robin(&cfg);
+        let psd = vec![-65.0; 20];
+        let (cut_milp, stats) = solve(&prob, &alloc, &psd).unwrap();
+        let (cut_ex, _) = exhaustive(&prob, &alloc, &psd);
+        assert_eq!(cut_milp, cut_ex);
+        assert!(stats.lp_solves >= 1);
+    }
+
+    #[test]
+    fn milp_matches_exhaustive_splitnet() {
+        let cfg = NetworkConfig::default();
+        let profile = splitnet::profile(splitnet::SplitNetConfig::mnist_like());
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 32,
+            phi: 0.5,
+        };
+        let alloc = round_robin(&cfg);
+        let psd = vec![-65.0; 20];
+        let (cut_milp, _) = solve(&prob, &alloc, &psd).unwrap();
+        let (cut_ex, _) = exhaustive(&prob, &alloc, &psd);
+        assert_eq!(cut_milp, cut_ex);
+    }
+
+    #[test]
+    fn property_milp_equals_exhaustive() {
+        check("P3 B&B == exhaustive", 15, |g| {
+            let mut cfg = NetworkConfig::default();
+            cfg.n_clients = g.usize_in(2, 6);
+            cfg.n_subchannels = cfg.n_clients * g.usize_in(1, 3);
+            cfg.f_server = g.f64_in(1e9, 9e9);
+            let profile = resnet18::profile();
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let dep = Deployment::generate(&cfg, &mut rng);
+            let ch = ChannelRealization::average(&dep);
+            let phi = *g.choose(&[0.0, 0.5, 1.0]);
+            let prob = Problem {
+                cfg: &cfg,
+                profile: &profile,
+                dep: &dep,
+                ch: &ch,
+                batch: 64,
+                phi,
+            };
+            let mut alloc = Allocation::empty(cfg.n_subchannels);
+            for k in 0..cfg.n_subchannels {
+                alloc.assign(k, k % cfg.n_clients);
+            }
+            let psd = vec![g.f64_in(-75.0, -58.0); cfg.n_subchannels];
+            let (cut_milp, _) = solve(&prob, &alloc, &psd).unwrap();
+            let (cut_ex, t_ex) = exhaustive(&prob, &alloc, &psd);
+            // Objectives must agree even if ties pick different cuts.
+            let d = Decision {
+                alloc: alloc.clone(),
+                psd_dbm_hz: psd.clone(),
+                cut: cut_milp,
+            };
+            let t_milp = prob.objective(&d);
+            assert!(
+                (t_milp - t_ex).abs() / t_ex < 1e-6,
+                "milp cut {cut_milp} ({t_milp}) vs exhaustive {cut_ex} ({t_ex})"
+            );
+        });
+    }
+
+    #[test]
+    fn weak_uplink_pushes_cut_deeper() {
+        // With a starved uplink, the optimizer should prefer deeper cuts
+        // (smaller smashed payload), despite more client compute.
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, _) = fixture(&cfg);
+        // Artificially weak channel: scale gains down hard.
+        let weak = ChannelRealization {
+            gain: (0..cfg.n_clients)
+                .map(|i| {
+                    (0..cfg.n_subchannels)
+                        .map(|k| {
+                            ChannelRealization::average(&dep).gain[i][k] * 1e-4
+                        })
+                        .collect()
+                })
+                .collect(),
+        };
+        let strong = ChannelRealization::average(&dep);
+        let alloc = round_robin(&cfg);
+        let psd = vec![-65.0; 20];
+        let cut_weak = {
+            let prob = Problem {
+                cfg: &cfg,
+                profile: &profile,
+                dep: &dep,
+                ch: &weak,
+                batch: 64,
+                phi: 0.5,
+            };
+            solve(&prob, &alloc, &psd).unwrap().0
+        };
+        let cut_strong = {
+            let prob = Problem {
+                cfg: &cfg,
+                profile: &profile,
+                dep: &dep,
+                ch: &strong,
+                batch: 64,
+                phi: 0.5,
+            };
+            solve(&prob, &alloc, &psd).unwrap().0
+        };
+        assert!(
+            cut_weak >= cut_strong,
+            "weak channel cut {cut_weak} < strong channel cut {cut_strong}"
+        );
+    }
+}

@@ -1,0 +1,81 @@
+//! P4 — the auxiliary linear program, closed form (paper eqs. 33–34).
+//!
+//! With (r, p, μ) fixed, the optimal straggler bounds are simply the
+//! realized maxima:
+//!
+//!   T₁* = max_i { T_i^F + T_i^U }      (eq. 33)
+//!   T₂* = max_i { T_i^D + T_i^B }      (eq. 34)
+
+use super::{Decision, Problem};
+
+/// Compute (T₁*, T₂*) for a complete decision.
+pub fn optimal_t1_t2(prob: &Problem, d: &Decision) -> (f64, f64) {
+    let s = prob.stage_latencies(d);
+    (s.uplink_phase_max(), s.downlink_phase_max())
+}
+
+/// The linearized objective T̃ = T₁ + T_s^F + T_s^B + T^B + T₂ evaluated at
+/// the optimal (T₁*, T₂*) — must equal the true eq. 23 round latency (the
+/// paper's equivalence argument for problem (27)).
+pub fn objective_tilde(prob: &Problem, d: &Decision) -> f64 {
+    let s = prob.stage_latencies(d);
+    let (t1, t2) = (s.uplink_phase_max(), s.downlink_phase_max());
+    t1 + s.server_fp + s.server_bp + s.broadcast + t2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkConfig;
+    use crate::optim::test_support::{fixture, round_robin};
+    use crate::profile::resnet18;
+
+    #[test]
+    fn tilde_equals_eq23() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let d = Decision {
+            alloc: round_robin(&cfg),
+            psd_dbm_hz: vec![-62.0; 20],
+            cut: 5,
+        };
+        let direct = prob.objective(&d);
+        let tilde = objective_tilde(&prob, &d);
+        assert!((direct - tilde).abs() < 1e-12);
+    }
+
+    #[test]
+    fn t1_t2_are_maxima() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let d = Decision {
+            alloc: round_robin(&cfg),
+            psd_dbm_hz: vec![-62.0; 20],
+            cut: 5,
+        };
+        let (t1, t2) = optimal_t1_t2(&prob, &d);
+        let s = prob.stage_latencies(&d);
+        for i in 0..prob.n_clients() {
+            assert!(s.client_fp[i] + s.uplink[i] <= t1 + 1e-12);
+            assert!(s.downlink[i] + s.client_bp[i] <= t2 + 1e-12);
+        }
+    }
+}

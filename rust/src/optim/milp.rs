@@ -1,0 +1,467 @@
+//! Small dense LP / MILP substrate: two-phase tableau simplex +
+//! branch-and-bound.
+//!
+//! The paper solves P3 (cut-layer selection) "with the branch-and-bound
+//! algorithm"; CVX/MATLAB are unavailable here, so this module is the
+//! from-scratch replacement. It is a general 0/1 MILP solver:
+//!
+//! - [`solve_lp`]: minimize `c·x` s.t. `A x ≤ b`, `x ≥ 0`, via two-phase
+//!   primal simplex with Bland's anti-cycling rule.
+//! - [`solve_milp`]: depth-first branch-and-bound over declared binary
+//!   variables, LP relaxation for bounds, incumbent pruning.
+//!
+//! Sizes in this system are tiny (≤ ~20 binaries, ≤ ~60 rows), so a dense
+//! tableau is the right tool — exactness and debuggability over sparsity.
+
+/// `minimize c·x  s.t.  rows[i].0 · x ≤ rows[i].1,  x ≥ 0`.
+#[derive(Debug, Clone)]
+pub struct Lp {
+    /// Number of structural variables.
+    pub n: usize,
+    /// Objective coefficients (length n).
+    pub c: Vec<f64>,
+    /// Constraints as (coefficients, rhs).
+    pub rows: Vec<(Vec<f64>, f64)>,
+}
+
+impl Lp {
+    pub fn new(n: usize, c: Vec<f64>) -> Self {
+        assert_eq!(c.len(), n);
+        Lp { n, c, rows: Vec::new() }
+    }
+
+    /// Add `a · x ≤ b`.
+    pub fn leq(&mut self, a: Vec<f64>, b: f64) -> &mut Self {
+        assert_eq!(a.len(), self.n);
+        self.rows.push((a, b));
+        self
+    }
+
+    /// Add `a · x ≥ b` (stored as `−a · x ≤ −b`).
+    pub fn geq(&mut self, a: Vec<f64>, b: f64) -> &mut Self {
+        self.leq(a.iter().map(|v| -v).collect(), -b)
+    }
+
+    /// Add `a · x = b` (two inequalities).
+    pub fn eq(&mut self, a: Vec<f64>, b: f64) -> &mut Self {
+        self.leq(a.clone(), b);
+        self.geq(a, b)
+    }
+}
+
+/// LP outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpResult {
+    Optimal { x: Vec<f64>, obj: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Two-phase primal simplex on the dense tableau.
+pub fn solve_lp(lp: &Lp) -> LpResult {
+    let m = lp.rows.len();
+    let n = lp.n;
+    // Columns: [x_0..x_{n-1} | slack_0..slack_{m-1} | artificial...] + rhs.
+    // Normalize rows to b >= 0 (flip sign; slack coefficient then -1 and an
+    // artificial variable is required for a starting basis).
+    let mut need_art: Vec<bool> = Vec::with_capacity(m);
+    let mut a_rows: Vec<Vec<f64>> = Vec::with_capacity(m);
+    let mut rhs: Vec<f64> = Vec::with_capacity(m);
+    let mut slack_sign: Vec<f64> = Vec::with_capacity(m);
+    for (coefs, b) in &lp.rows {
+        if *b >= 0.0 {
+            a_rows.push(coefs.clone());
+            rhs.push(*b);
+            slack_sign.push(1.0);
+            need_art.push(false);
+        } else {
+            a_rows.push(coefs.iter().map(|v| -v).collect());
+            rhs.push(-b);
+            slack_sign.push(-1.0);
+            need_art.push(true);
+        }
+    }
+    let n_art: usize = need_art.iter().filter(|x| **x).count();
+    let total = n + m + n_art;
+    // tableau[row][col], plus rhs column at index `total`.
+    let mut t = vec![vec![0.0; total + 1]; m];
+    let mut basis = vec![0usize; m];
+    let mut art_idx = n + m;
+    for i in 0..m {
+        for j in 0..n {
+            t[i][j] = a_rows[i][j];
+        }
+        t[i][n + i] = slack_sign[i];
+        t[i][total] = rhs[i];
+        if need_art[i] {
+            t[i][art_idx] = 1.0;
+            basis[i] = art_idx;
+            art_idx += 1;
+        } else {
+            basis[i] = n + i;
+        }
+    }
+
+    // Phase 1: minimize sum of artificials (if any).
+    if n_art > 0 {
+        let mut cost = vec![0.0; total];
+        for j in (n + m)..total {
+            cost[j] = 1.0;
+        }
+        match simplex_core(&mut t, &mut basis, &cost, total) {
+            SimplexOutcome::Optimal(obj) => {
+                if obj > 1e-7 {
+                    return LpResult::Infeasible;
+                }
+            }
+            SimplexOutcome::Unbounded => return LpResult::Infeasible,
+        }
+        // Pivot any artificial still in the basis out (degenerate rows).
+        for i in 0..m {
+            if basis[i] >= n + m {
+                if let Some(j) = (0..n + m)
+                    .find(|&j| t[i][j].abs() > EPS)
+                {
+                    pivot(&mut t, &mut basis, i, j, total);
+                } // else: zero row, harmless
+            }
+        }
+    }
+
+    // Phase 2: original objective (artificial columns frozen at zero).
+    let mut cost = vec![0.0; total];
+    cost[..n].copy_from_slice(&lp.c);
+    // Forbid re-entering artificials by making them very expensive.
+    for cj in cost.iter_mut().take(total).skip(n + m) {
+        *cj = 1e30;
+    }
+    match simplex_core(&mut t, &mut basis, &cost, total) {
+        SimplexOutcome::Unbounded => LpResult::Unbounded,
+        SimplexOutcome::Optimal(_) => {
+            let mut x = vec![0.0; n];
+            for i in 0..m {
+                if basis[i] < n {
+                    x[basis[i]] = t[i][total];
+                }
+            }
+            let obj =
+                x.iter().zip(&lp.c).map(|(xi, ci)| xi * ci).sum::<f64>();
+            LpResult::Optimal { x, obj }
+        }
+    }
+}
+
+enum SimplexOutcome {
+    Optimal(f64),
+    Unbounded,
+}
+
+/// Primal simplex iterations on an existing feasible tableau; returns the
+/// achieved objective value for `cost`.
+fn simplex_core(t: &mut [Vec<f64>], basis: &mut [usize], cost: &[f64],
+                total: usize) -> SimplexOutcome {
+    let m = t.len();
+    let max_iters = 200 * (total + m + 8);
+    for _ in 0..max_iters {
+        // Reduced costs: r_j = c_j − c_B · B^{-1} A_j (computed from the
+        // tableau since rows are already B^{-1}A).
+        let mut entering = None;
+        for j in 0..total {
+            let mut rj = cost[j];
+            for i in 0..m {
+                rj -= cost[basis[i]] * t[i][j];
+            }
+            if rj < -1e-9 {
+                // Bland: smallest index.
+                entering = Some(j);
+                break;
+            }
+        }
+        let Some(e) = entering else {
+            let obj = (0..m).map(|i| cost[basis[i]] * t[i][total]).sum();
+            return SimplexOutcome::Optimal(obj);
+        };
+        // Ratio test (Bland tie-break on basis index).
+        let mut leave: Option<usize> = None;
+        let mut best = f64::INFINITY;
+        for i in 0..m {
+            if t[i][e] > EPS {
+                let ratio = t[i][total] / t[i][e];
+                if ratio < best - EPS
+                    || (ratio < best + EPS
+                        && leave.map(|l| basis[i] < basis[l]).unwrap_or(true))
+                {
+                    best = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(l) = leave else {
+            return SimplexOutcome::Unbounded;
+        };
+        pivot(t, basis, l, e, total);
+    }
+    // Iteration cap hit: return current (still feasible) point as optimal —
+    // with Bland's rule this should be unreachable; the cap is a backstop.
+    let obj = (0..m).map(|i| cost[basis[i]] * t[i][total]).sum();
+    SimplexOutcome::Optimal(obj)
+}
+
+fn pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize,
+         total: usize) {
+    let m = t.len();
+    let pv = t[row][col];
+    debug_assert!(pv.abs() > EPS);
+    for j in 0..=total {
+        t[row][j] /= pv;
+    }
+    for i in 0..m {
+        if i != row && t[i][col].abs() > EPS {
+            let f = t[i][col];
+            for j in 0..=total {
+                t[i][j] -= f * t[row][j];
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+/// 0/1 MILP: the LP plus a set of variable indices constrained to {0, 1}.
+#[derive(Debug, Clone)]
+pub struct Milp {
+    pub lp: Lp,
+    pub binary: Vec<usize>,
+}
+
+/// Branch-and-bound search statistics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MilpStats {
+    pub nodes: usize,
+    pub lp_solves: usize,
+    pub pruned: usize,
+}
+
+/// Solve via depth-first B&B. Returns `(Some((x, obj)), stats)` or
+/// `(None, stats)` if infeasible.
+pub fn solve_milp(milp: &Milp) -> (Option<(Vec<f64>, f64)>, MilpStats) {
+    let mut base = milp.lp.clone();
+    // x_j ≤ 1 for binaries.
+    for &j in &milp.binary {
+        let mut a = vec![0.0; base.n];
+        a[j] = 1.0;
+        base.leq(a, 1.0);
+    }
+    let mut stats = MilpStats::default();
+    let mut incumbent: Option<(Vec<f64>, f64)> = None;
+    // Stack of (fixed assignments) frames: Vec<(var, value)>.
+    let mut stack: Vec<Vec<(usize, f64)>> = vec![vec![]];
+    while let Some(fixes) = stack.pop() {
+        stats.nodes += 1;
+        let mut lp = base.clone();
+        for &(j, v) in &fixes {
+            let mut a = vec![0.0; lp.n];
+            a[j] = 1.0;
+            lp.eq(a, v);
+        }
+        stats.lp_solves += 1;
+        let sol = match solve_lp(&lp) {
+            LpResult::Optimal { x, obj } => (x, obj),
+            LpResult::Infeasible => continue,
+            LpResult::Unbounded => {
+                // Relaxation unbounded with binaries bounded means the
+                // continuous part is unbounded: give up on this node.
+                continue;
+            }
+        };
+        if let Some((_, best)) = &incumbent {
+            if sol.1 >= *best - 1e-12 {
+                stats.pruned += 1;
+                continue;
+            }
+        }
+        // Most-fractional branching.
+        let frac = milp
+            .binary
+            .iter()
+            .map(|&j| (j, (sol.0[j] - sol.0[j].round()).abs()))
+            .filter(|(_, f)| *f > 1e-6)
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        match frac {
+            None => {
+                // Integral: candidate incumbent.
+                if incumbent
+                    .as_ref()
+                    .map(|(_, best)| sol.1 < *best - 1e-12)
+                    .unwrap_or(true)
+                {
+                    incumbent = Some(sol);
+                }
+            }
+            Some((j, _)) => {
+                let mut f0 = fixes.clone();
+                f0.push((j, 0.0));
+                let mut f1 = fixes;
+                f1.push((j, 1.0));
+                // Explore x_j = 1 first (one-hot problems resolve fast).
+                stack.push(f0);
+                stack.push(f1);
+            }
+        }
+    }
+    (incumbent, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+
+    #[test]
+    fn lp_textbook_max_problem() {
+        // max 3x + 5y s.t. x ≤ 4, 2y ≤ 12, 3x + 2y ≤ 18 → (2, 6), 36.
+        // As minimize −3x − 5y.
+        let mut lp = Lp::new(2, vec![-3.0, -5.0]);
+        lp.leq(vec![1.0, 0.0], 4.0);
+        lp.leq(vec![0.0, 2.0], 12.0);
+        lp.leq(vec![3.0, 2.0], 18.0);
+        match solve_lp(&lp) {
+            LpResult::Optimal { x, obj } => {
+                assert_close(x[0], 2.0);
+                assert_close(x[1], 6.0);
+                assert_close(obj, -36.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn lp_with_geq_needs_phase1() {
+        // min x + y s.t. x + y ≥ 2, x ≤ 5, y ≤ 5 → obj 2.
+        let mut lp = Lp::new(2, vec![1.0, 1.0]);
+        lp.geq(vec![1.0, 1.0], 2.0);
+        lp.leq(vec![1.0, 0.0], 5.0);
+        lp.leq(vec![0.0, 1.0], 5.0);
+        match solve_lp(&lp) {
+            LpResult::Optimal { obj, .. } => assert_close(obj, 2.0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn lp_infeasible_detected() {
+        // x ≤ 1 and x ≥ 3.
+        let mut lp = Lp::new(1, vec![1.0]);
+        lp.leq(vec![1.0], 1.0);
+        lp.geq(vec![1.0], 3.0);
+        assert_eq!(solve_lp(&lp), LpResult::Infeasible);
+    }
+
+    #[test]
+    fn lp_unbounded_detected() {
+        // min −x, x ≥ 0 unbounded below.
+        let lp = Lp::new(1, vec![-1.0]);
+        assert_eq!(solve_lp(&lp), LpResult::Unbounded);
+    }
+
+    #[test]
+    fn lp_equality_constraint() {
+        // min 2x + 3y s.t. x + y = 4, x ≤ 3 → y ≥ 1; optimum x=3,y=1 → 9.
+        let mut lp = Lp::new(2, vec![2.0, 3.0]);
+        lp.eq(vec![1.0, 1.0], 4.0);
+        lp.leq(vec![1.0, 0.0], 3.0);
+        match solve_lp(&lp) {
+            LpResult::Optimal { x, obj } => {
+                assert_close(x[0], 3.0);
+                assert_close(x[1], 1.0);
+                assert_close(obj, 9.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn milp_knapsack() {
+        // max 10a + 13b + 7c, weight 3a + 4b + 2c ≤ 6, binary.
+        // Best: a + c? 17 w5; b + c = 20 w6 ✓; a+b w7 infeasible → 20.
+        let mut lp = Lp::new(3, vec![-10.0, -13.0, -7.0]);
+        lp.leq(vec![3.0, 4.0, 2.0], 6.0);
+        let milp = Milp { lp, binary: vec![0, 1, 2] };
+        let (sol, stats) = solve_milp(&milp);
+        let (x, obj) = sol.unwrap();
+        assert_close(obj, -20.0);
+        assert_close(x[0], 0.0);
+        assert_close(x[1], 1.0);
+        assert_close(x[2], 1.0);
+        assert!(stats.nodes >= 1);
+    }
+
+    #[test]
+    fn milp_one_hot_selection() {
+        // Exactly one of 4 options, each with cost; mixed continuous slack
+        // var T ≥ cost_j of the chosen option: min T.
+        // Variables: mu_0..3, T.
+        let costs = [7.0, 3.0, 5.0, 9.0];
+        let mut lp = Lp::new(5, vec![0.0, 0.0, 0.0, 0.0, 1.0]);
+        lp.eq(vec![1.0, 1.0, 1.0, 1.0, 0.0], 1.0);
+        // T ≥ Σ mu_j cost_j  →  Σ mu_j cost_j − T ≤ 0.
+        lp.leq(vec![costs[0], costs[1], costs[2], costs[3], -1.0], 0.0);
+        let milp = Milp { lp, binary: vec![0, 1, 2, 3] };
+        let (sol, _) = solve_milp(&milp);
+        let (x, obj) = sol.unwrap();
+        assert_close(obj, 3.0);
+        assert_close(x[1], 1.0);
+    }
+
+    #[test]
+    fn milp_matches_exhaustive_on_random_instances() {
+        use crate::util::prop::{check, Gen};
+        check("milp == brute force", 40, |g: &mut Gen| {
+            let nb = g.usize_in(2, 6);
+            let c: Vec<f64> =
+                (0..nb).map(|_| g.f64_in(-10.0, 10.0)).collect();
+            // One ≤ row with positive weights keeps it bounded + feasible
+            // (x = 0 is always feasible).
+            let w: Vec<f64> = (0..nb).map(|_| g.f64_in(0.5, 4.0)).collect();
+            let cap = g.f64_in(1.0, 8.0);
+            let mut lp = Lp::new(nb, c.clone());
+            lp.leq(w.clone(), cap);
+            let milp = Milp { lp, binary: (0..nb).collect() };
+            let (sol, _) = solve_milp(&milp);
+            let (_, obj) = sol.expect("x=0 feasible");
+            // Brute force.
+            let mut best = f64::INFINITY;
+            for mask in 0..(1u32 << nb) {
+                let mut wsum = 0.0;
+                let mut csum = 0.0;
+                for j in 0..nb {
+                    if mask & (1 << j) != 0 {
+                        wsum += w[j];
+                        csum += c[j];
+                    }
+                }
+                if wsum <= cap + 1e-9 {
+                    best = best.min(csum);
+                }
+            }
+            assert!(
+                (obj - best).abs() < 1e-5,
+                "milp {obj} vs brute {best} (c={c:?}, w={w:?}, cap={cap})"
+            );
+        });
+    }
+
+    #[test]
+    fn milp_infeasible() {
+        // a + b ≥ 3 with binaries can reach at most 2.
+        let mut lp = Lp::new(2, vec![1.0, 1.0]);
+        lp.geq(vec![1.0, 1.0], 3.0);
+        let milp = Milp { lp, binary: vec![0, 1] };
+        let (sol, _) = solve_milp(&milp);
+        assert!(sol.is_none());
+    }
+}

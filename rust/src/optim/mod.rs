@@ -1,0 +1,326 @@
+//! Resource management for EPSL — paper §V–§VI.
+//!
+//! The joint problem (24) minimizes per-round latency over subchannel
+//! allocation `r`, transmit PSDs `p`, and the cut layer `μ`, subject to:
+//!
+//! - C1/C2: each subchannel exclusively owned by one client
+//! - C3/C4: exactly one cut layer
+//! - C5: per-device power `Σ_k r_i^k p_k B_k ≤ p_i^max`
+//! - C6: total uplink power `Σ_i Σ_k r_i^k p_k B_k ≤ p_th`
+//! - C7: non-negative PSDs
+//!
+//! NP-hard MINLP → block-coordinate descent (Algorithm 3) over four
+//! subproblems: [`greedy`] (P1, Algorithm 2), [`power`] (P2, exact KKT
+//! water-filling), [`cutlayer`] (P3, MILP via the [`milp`] branch-and-bound
+//! substrate with a two-phase simplex LP relaxation), and [`lp`] (P4,
+//! closed form eqs. 33–34). [`baselines`] implements comparison schemes
+//! a–d of §VII-C.
+
+pub mod baselines;
+pub mod bcd;
+pub mod cutlayer;
+pub mod greedy;
+pub mod lp;
+pub mod milp;
+pub mod power;
+
+use crate::channel::rate::{self, Allocation};
+use crate::channel::{ChannelRealization, Deployment};
+use crate::config::{dbm_to_w, NetworkConfig};
+use crate::error::{Error, Result};
+use crate::latency::{epsl_stage_latencies, LatencyInputs, StageLatencies};
+use crate::profile::NetworkProfile;
+
+/// One resource-management problem instance (fixed deployment + channel).
+#[derive(Debug, Clone)]
+pub struct Problem<'a> {
+    pub cfg: &'a NetworkConfig,
+    pub profile: &'a NetworkProfile,
+    pub dep: &'a Deployment,
+    /// The gains the optimizer sees (the paper's average γ(F_k, d_i)).
+    pub ch: &'a ChannelRealization,
+    pub batch: usize,
+    pub phi: f64,
+}
+
+/// A complete decision: (r, p, μ).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    pub alloc: Allocation,
+    /// Per-subchannel transmit PSD (dBm/Hz).
+    pub psd_dbm_hz: Vec<f64>,
+    /// Cut layer j.
+    pub cut: usize,
+}
+
+impl<'a> Problem<'a> {
+    pub fn n_clients(&self) -> usize {
+        self.dep.n_clients()
+    }
+
+    pub fn n_subchannels(&self) -> usize {
+        self.dep.n_subchannels()
+    }
+
+    /// Uplink power of client `i` in watts: `Σ_{k∈M_i} p_k B_k` (C5 LHS).
+    pub fn client_power_w(&self, d: &Decision, i: usize) -> f64 {
+        d.alloc
+            .channels_of(i)
+            .iter()
+            .map(|&k| {
+                dbm_to_w(d.psd_dbm_hz[k])
+                    * self.dep.subchannels[k].bandwidth_hz
+            })
+            .sum()
+    }
+
+    /// Total uplink power in watts (C6 LHS).
+    pub fn total_power_w(&self, d: &Decision) -> f64 {
+        (0..self.n_clients()).map(|i| self.client_power_w(d, i)).sum()
+    }
+
+    /// Check C1–C7 feasibility.
+    pub fn check_feasible(&self, d: &Decision) -> Result<()> {
+        if d.alloc.owner.len() != self.n_subchannels() {
+            return Err(Error::Optim("allocation size mismatch".into()));
+        }
+        if !d.alloc.is_complete() {
+            return Err(Error::Optim("C2: unassigned subchannel".into()));
+        }
+        if !self.profile.cut_candidates.contains(&d.cut) {
+            return Err(Error::Optim(format!(
+                "C3/C4: cut {} not a candidate",
+                d.cut
+            )));
+        }
+        let p_max = dbm_to_w(self.cfg.p_max_dbm);
+        for i in 0..self.n_clients() {
+            let pw = self.client_power_w(d, i);
+            if pw > p_max * (1.0 + 1e-6) {
+                return Err(Error::Optim(format!(
+                    "C5: client {i} power {pw:.3} W > {p_max:.3} W"
+                )));
+            }
+        }
+        let pth = dbm_to_w(self.cfg.p_th_dbm);
+        let total = self.total_power_w(d);
+        if total > pth * (1.0 + 1e-6) {
+            return Err(Error::Optim(format!(
+                "C6: total power {total:.3} W > {pth:.3} W"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Link rates implied by a decision: (uplink R_i^U, downlink R_i^D,
+    /// broadcast R^B).
+    pub fn rates(&self, d: &Decision) -> (Vec<f64>, Vec<f64>, f64) {
+        let up = rate::uplink_rates(self.cfg, self.ch, &d.alloc, &d.psd_dbm_hz);
+        let dn = rate::downlink_rates(self.cfg, self.ch, &d.alloc);
+        let bc = rate::broadcast_rate(self.cfg, self.ch);
+        (up, dn, bc)
+    }
+
+    /// Full EPSL stage latencies for a decision (objective eq. 23).
+    pub fn stage_latencies(&self, d: &Decision) -> StageLatencies {
+        let (up, dn, bc) = self.rates(d);
+        let f_clients = self.dep.f_clients();
+        let inp = LatencyInputs {
+            profile: self.profile,
+            cut: d.cut,
+            batch: self.batch,
+            phi: self.phi,
+            f_server: self.cfg.f_server,
+            kappa_server: self.cfg.kappa_server,
+            kappa_client: self.cfg.kappa_client,
+            f_clients: &f_clients,
+            uplink: &up,
+            downlink: &dn,
+            broadcast: bc,
+        };
+        epsl_stage_latencies(&inp)
+    }
+
+    /// Objective value T(r, μ, p).
+    pub fn objective(&self, d: &Decision) -> f64 {
+        self.stage_latencies(d).round_total()
+    }
+
+    /// Per-Hz SNR coefficient for client i on subchannel k:
+    /// rate_k = B log2(1 + p_k · coeff) with p_k the linear PSD (W/Hz).
+    /// coeff = G_c G_s γ_ik / σ²  (σ² converted from dBm/Hz to W/Hz).
+    pub fn snr_coeff(&self, i: usize, k: usize) -> f64 {
+        let noise_w_hz = dbm_to_w(self.cfg.noise_dbm_hz);
+        self.cfg.antenna_gain * self.ch.gain[i][k] / noise_w_hz
+    }
+
+    /// T_i^F (seconds) — cut-dependent client forward time.
+    pub fn client_fp_seconds(&self, i: usize, cut: usize) -> f64 {
+        self.batch as f64
+            * self.cfg.kappa_client
+            * self.profile.client_fp_flops(cut)
+            / self.dep.clients[i].f_client
+    }
+
+    /// T_i^B (seconds) — cut-dependent client backward time.
+    pub fn client_bp_seconds(&self, i: usize, cut: usize) -> f64 {
+        self.batch as f64
+            * self.cfg.kappa_client
+            * self.profile.client_bp_flops(cut)
+            / self.dep.clients[i].f_client
+    }
+
+    /// Uplink payload bits for one round: b·ψ_j.
+    pub fn uplink_bits(&self, cut: usize) -> f64 {
+        self.batch as f64 * self.profile.psi_bits(cut)
+    }
+
+    /// Unicast downlink payload bits: (b − ⌈φb⌉)·χ_j.
+    pub fn downlink_bits(&self, cut: usize) -> f64 {
+        let m = (self.phi * self.batch as f64).ceil();
+        (self.batch as f64 - m) * self.profile.chi_bits(cut)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Shared fixture: default deployment + average channel.
+    pub fn fixture(cfg: &NetworkConfig) -> (Deployment, ChannelRealization) {
+        let mut rng = Rng::new(11);
+        let dep = Deployment::generate(cfg, &mut rng);
+        let ch = ChannelRealization::average(&dep);
+        (dep, ch)
+    }
+
+    /// Round-robin complete allocation.
+    pub fn round_robin(cfg: &NetworkConfig) -> Allocation {
+        let mut alloc = Allocation::empty(cfg.n_subchannels);
+        for k in 0..cfg.n_subchannels {
+            alloc.assign(k, k % cfg.n_clients);
+        }
+        alloc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::*;
+    use super::*;
+    use crate::profile::resnet18;
+
+    #[test]
+    fn feasibility_checks_fire() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        // incomplete allocation
+        let d = Decision {
+            alloc: Allocation::empty(cfg.n_subchannels),
+            psd_dbm_hz: vec![-60.0; cfg.n_subchannels],
+            cut: 3,
+        };
+        assert!(prob.check_feasible(&d).is_err());
+        // complete, sane powers
+        let d = Decision {
+            alloc: round_robin(&cfg),
+            psd_dbm_hz: vec![-60.0; cfg.n_subchannels],
+            cut: 3,
+        };
+        prob.check_feasible(&d).unwrap();
+        // hot PSD violates C5: -35 dBm/Hz * 10 MHz = 35 dBm per channel.
+        let d_hot = Decision { psd_dbm_hz: vec![-35.0; 20], ..d.clone() };
+        assert!(prob.check_feasible(&d_hot).is_err());
+        // bad cut (last layer)
+        let d_cut = Decision { cut: 18, ..d };
+        assert!(prob.check_feasible(&d_cut).is_err());
+    }
+
+    #[test]
+    fn objective_positive_and_cut_sensitive() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let mk = |cut| Decision {
+            alloc: round_robin(&cfg),
+            psd_dbm_hz: vec![-60.0; 20],
+            cut,
+        };
+        let t1 = prob.objective(&mk(1));
+        let t9 = prob.objective(&mk(9));
+        assert!(t1 > 0.0 && t9 > 0.0);
+        assert_ne!(t1, t9);
+    }
+
+    #[test]
+    fn power_accounting_watts() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let mut alloc = Allocation::empty(20);
+        alloc.assign(0, 0);
+        let d = Decision { alloc, psd_dbm_hz: vec![-60.0; 20], cut: 3 };
+        // -60 dBm/Hz over 10 MHz = -60 + 70 = 10 dBm = 10 mW.
+        let pw = prob.client_power_w(&d, 0);
+        assert!((pw - 0.01).abs() < 1e-6, "{pw}");
+        assert_eq!(prob.client_power_w(&d, 1), 0.0);
+        assert!((prob.total_power_w(&d) - pw).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snr_coeff_matches_rate_module() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        // B log2(1 + p_lin * coeff) must equal rate::subchannel_rate at the
+        // same dBm/Hz PSD.
+        let psd = -60.0;
+        let p_lin = dbm_to_w(psd);
+        let coeff = prob.snr_coeff(2, 3);
+        let direct = rate::subchannel_rate(
+            cfg.subchannel_bw_hz,
+            rate::snr_linear(
+                psd,
+                cfg.antenna_gain,
+                ch.gain[2][3],
+                cfg.noise_dbm_hz,
+            ),
+        );
+        let via_coeff = cfg.subchannel_bw_hz * (1.0 + p_lin * coeff).log2();
+        assert!((direct - via_coeff).abs() / direct < 1e-9);
+    }
+}

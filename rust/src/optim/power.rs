@@ -1,0 +1,402 @@
+//! P2 — power control (paper problem (30)).
+//!
+//! After the θ-substitution the paper's P2 is convex; instead of handing it
+//! to CVX we solve its exact KKT structure from scratch:
+//!
+//! The real objective of the power block is to minimize the uplink-phase
+//! straggler `T₁ = max_i (T_i^F + T_i^U)` subject to C5/C6/C7 (downlink
+//! powers are the server's fixed PSD, so T₂ is unaffected by `p`). For a
+//! fixed target `T₁` the minimal power for client i is a classic
+//! *water-filling* problem over its subchannels:
+//!
+//!   minimize  Σ_k p_k B       s.t.  Σ_k B log2(1 + p_k g_k) ≥ R_i(T₁)
+//!
+//! with `p_k = (w − 1/g_k)⁺` at water level `w`, and the feasibility of
+//! `T₁` is monotone — so an outer bisection on `T₁` plus inner bisections
+//! on the water levels yields the global optimum of the min-max problem,
+//! with KKT residuals checkable to machine precision (see tests).
+
+use crate::channel::rate::Allocation;
+use crate::config::{dbm_to_w, lin_to_db};
+use crate::error::{Error, Result};
+
+use super::Problem;
+
+/// Numeric floor for "zero" PSD in dBm/Hz (≈ 1e-40 W/Hz).
+pub const PSD_OFF_DBM_HZ: f64 = -400.0;
+
+/// Result of the power-control block.
+#[derive(Debug, Clone)]
+pub struct PowerSolution {
+    /// Per-subchannel PSD (dBm/Hz); unowned/unpowered channels at
+    /// [`PSD_OFF_DBM_HZ`].
+    pub psd_dbm_hz: Vec<f64>,
+    /// Achieved uplink-phase straggler time T₁* (seconds).
+    pub t1: f64,
+}
+
+/// Water-filling: minimum total power (W) achieving `target_rate` (bits/s)
+/// over channels with per-Hz SNR coefficients `g` and bandwidth `bw`.
+/// Returns per-channel linear PSDs (W/Hz) and the total power.
+pub fn min_power_for_rate(g: &[f64], bw: f64, target_rate: f64)
+    -> (Vec<f64>, f64) {
+    assert!(!g.is_empty());
+    if target_rate <= 0.0 {
+        return (vec![0.0; g.len()], 0.0);
+    }
+    let rate_at = |w: f64| -> f64 {
+        g.iter()
+            .map(|&gk| {
+                let p = (w - 1.0 / gk).max(0.0);
+                bw * (1.0 + p * gk).log2()
+            })
+            .sum()
+    };
+    // Bracket the water level.
+    let mut lo = g.iter().map(|gk| 1.0 / gk).fold(f64::INFINITY, f64::min);
+    let mut hi = lo.max(1e-30);
+    while rate_at(hi) < target_rate {
+        hi *= 2.0;
+        if hi > 1e30 {
+            break;
+        }
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if rate_at(mid) >= target_rate {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let w = hi;
+    let psd: Vec<f64> = g.iter().map(|&gk| (w - 1.0 / gk).max(0.0)).collect();
+    let total: f64 = psd.iter().map(|p| p * bw).sum();
+    (psd, total)
+}
+
+/// Water-filling dual: maximum rate achievable with total power budget
+/// `power_w` over the channels. Returns (per-channel PSD W/Hz, rate bits/s).
+pub fn max_rate_at_power(g: &[f64], bw: f64, power_w: f64)
+    -> (Vec<f64>, f64) {
+    assert!(!g.is_empty());
+    if power_w <= 0.0 {
+        return (vec![0.0; g.len()], 0.0);
+    }
+    let power_at = |w: f64| -> f64 {
+        g.iter().map(|&gk| (w - 1.0 / gk).max(0.0) * bw).sum()
+    };
+    let mut lo = 0.0;
+    let mut hi = g.iter().map(|gk| 1.0 / gk).fold(0.0, f64::max)
+        + power_w / (bw * g.len() as f64)
+        + 1.0;
+    while power_at(hi) < power_w {
+        hi *= 2.0;
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if power_at(mid) >= power_w {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let w = hi;
+    let psd: Vec<f64> = g.iter().map(|&gk| (w - 1.0 / gk).max(0.0)).collect();
+    let rate: f64 = psd
+        .iter()
+        .zip(g)
+        .map(|(&p, &gk)| bw * (1.0 + p * gk).log2())
+        .sum();
+    (psd, rate)
+}
+
+/// Solve the power block for a fixed allocation and cut layer.
+pub fn solve(prob: &Problem, alloc: &Allocation, cut: usize)
+    -> Result<PowerSolution> {
+    let c = prob.n_clients();
+    let bw = prob.cfg.subchannel_bw_hz;
+    let p_max_w = dbm_to_w(prob.cfg.p_max_dbm);
+    let p_th_w = dbm_to_w(prob.cfg.p_th_dbm);
+
+    // Per-client channel sets and SNR coefficients.
+    let channels: Vec<Vec<usize>> =
+        (0..c).map(|i| alloc.channels_of(i)).collect();
+    for (i, chs) in channels.iter().enumerate() {
+        if chs.is_empty() {
+            return Err(Error::Optim(format!(
+                "client {i} owns no subchannel — allocation must precede \
+                 power control"
+            )));
+        }
+    }
+    let coeffs: Vec<Vec<f64>> = (0..c)
+        .map(|i| channels[i].iter().map(|&k| prob.snr_coeff(i, k)).collect())
+        .collect();
+    let a: Vec<f64> =
+        (0..c).map(|i| prob.client_fp_seconds(i, cut)).collect();
+    let bits = prob.uplink_bits(cut);
+
+    // Feasibility of a target T1: per-client minimal powers must satisfy
+    // C5 individually and C6 in aggregate.
+    let min_powers = |t1: f64| -> Option<Vec<(Vec<f64>, f64)>> {
+        let mut out = Vec::with_capacity(c);
+        for i in 0..c {
+            if t1 <= a[i] {
+                return None;
+            }
+            let need = bits / (t1 - a[i]);
+            let (psd, total) = min_power_for_rate(&coeffs[i], bw, need);
+            if total > p_max_w * (1.0 + 1e-9) {
+                return None;
+            }
+            out.push((psd, total));
+        }
+        let total: f64 = out.iter().map(|(_, t)| t).sum();
+        if total > p_th_w * (1.0 + 1e-9) {
+            return None;
+        }
+        Some(out)
+    };
+
+    // Upper bound: T1 at per-client max power (then grow until C6 holds).
+    let mut hi = (0..c)
+        .map(|i| {
+            let (_, r) = max_rate_at_power(&coeffs[i], bw, p_max_w);
+            a[i] + bits / r.max(1e-9)
+        })
+        .fold(0.0, f64::max)
+        * (1.0 + 1e-6);
+    let mut guard = 0;
+    while min_powers(hi).is_none() {
+        hi *= 2.0;
+        guard += 1;
+        if guard > 60 {
+            return Err(Error::Optim(
+                "power control: no feasible T1 found".into(),
+            ));
+        }
+    }
+    let mut lo = a.iter().cloned().fold(0.0, f64::max);
+    for _ in 0..100 {
+        let mid = 0.5 * (lo + hi);
+        if min_powers(mid).is_some() {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let t1 = hi;
+    let sols = min_powers(t1).expect("hi is feasible by construction");
+
+    let mut psd_dbm = vec![PSD_OFF_DBM_HZ; prob.n_subchannels()];
+    for i in 0..c {
+        for (slot, &k) in channels[i].iter().enumerate() {
+            let p_w_hz = sols[i].0[slot];
+            psd_dbm[k] = if p_w_hz > 0.0 {
+                lin_to_db(p_w_hz * 1e3) // W/Hz → dBm/Hz
+            } else {
+                PSD_OFF_DBM_HZ
+            };
+        }
+    }
+    Ok(PowerSolution { psd_dbm_hz: psd_dbm, t1 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkConfig;
+    use crate::optim::greedy;
+    use crate::optim::test_support::fixture;
+    use crate::optim::Decision;
+    use crate::profile::resnet18;
+    use crate::util::prop::check;
+
+    #[test]
+    fn waterfill_hits_target_rate() {
+        let g = vec![1e10, 3e9, 5e8];
+        let bw = 10e6;
+        let target = 2e8;
+        let (psd, _total) = min_power_for_rate(&g, bw, target);
+        let rate: f64 = psd
+            .iter()
+            .zip(&g)
+            .map(|(&p, &gk)| bw * (1.0 + p * gk).log2())
+            .sum();
+        assert!((rate - target).abs() / target < 1e-6, "rate {rate}");
+    }
+
+    #[test]
+    fn waterfill_kkt_equal_water_level() {
+        let g = vec![8e9, 2e9, 9e8, 1e8];
+        let (psd, _) = min_power_for_rate(&g, 10e6, 3e8);
+        // Active channels share the water level w = p_k + 1/g_k.
+        let levels: Vec<f64> = psd
+            .iter()
+            .zip(&g)
+            .filter(|(&p, _)| p > 0.0)
+            .map(|(&p, &gk)| p + 1.0 / gk)
+            .collect();
+        assert!(levels.len() >= 2);
+        let w0 = levels[0];
+        for w in &levels {
+            assert!((w - w0).abs() / w0 < 1e-6);
+        }
+        // Inactive channels must have 1/g above the water level.
+        for (p, gk) in psd.iter().zip(&g) {
+            if *p == 0.0 {
+                assert!(1.0 / gk >= w0 * (1.0 - 1e-6));
+            }
+        }
+    }
+
+    #[test]
+    fn waterfill_beats_uniform_on_asymmetric_channels() {
+        let g = vec![1e10, 1e7];
+        let bw = 10e6;
+        let target = 3e8;
+        let (_, wf_total) = min_power_for_rate(&g, bw, target);
+        // Uniform split of the same total must deliver <= target rate.
+        let per = wf_total / 2.0 / bw;
+        let uni_rate: f64 =
+            g.iter().map(|&gk| bw * (1.0 + per * gk).log2()).sum();
+        assert!(uni_rate <= target * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn max_rate_exhausts_budget() {
+        let g = vec![5e9, 5e8];
+        let (psd, rate) = max_rate_at_power(&g, 10e6, 0.5);
+        let spent: f64 = psd.iter().map(|p| p * 10e6).sum();
+        assert!((spent - 0.5).abs() < 1e-6);
+        assert!(rate > 0.0);
+    }
+
+    #[test]
+    fn duality_roundtrip() {
+        // min_power(rate = max_rate(P)) == P.
+        let g = vec![4e9, 7e8, 6e9];
+        let (_, rate) = max_rate_at_power(&g, 10e6, 1.0);
+        let (_, back) = min_power_for_rate(&g, 10e6, rate);
+        assert!((back - 1.0).abs() < 1e-4, "{back}");
+    }
+
+    #[test]
+    fn solve_satisfies_constraints_and_t1() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let cut = 3;
+        let alloc = greedy::allocate(&prob, &vec![-65.0; 20], cut);
+        let sol = solve(&prob, &alloc, cut).unwrap();
+        let d = Decision {
+            alloc,
+            psd_dbm_hz: sol.psd_dbm_hz.clone(),
+            cut,
+        };
+        prob.check_feasible(&d).unwrap();
+        // T1 reported must match the realized uplink-phase straggler time.
+        let s = prob.stage_latencies(&d);
+        assert!(
+            (s.uplink_phase_max() - sol.t1).abs() / sol.t1 < 1e-3,
+            "reported {} vs realized {}",
+            sol.t1,
+            s.uplink_phase_max()
+        );
+    }
+
+    #[test]
+    fn optimized_power_beats_uniform() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let cut = 3;
+        let alloc = greedy::allocate(&prob, &vec![-65.0; 20], cut);
+        let sol = solve(&prob, &alloc, cut).unwrap();
+        // Uniform: each client spreads p_max over its channels, scaled for
+        // C6 if needed.
+        let mut psd_uni = vec![PSD_OFF_DBM_HZ; 20];
+        let scale =
+            (dbm_to_w(cfg.p_th_dbm) / (5.0 * dbm_to_w(cfg.p_max_dbm))).min(1.0);
+        for i in 0..cfg.n_clients {
+            let chs = alloc.channels_of(i);
+            let per_w_hz = dbm_to_w(cfg.p_max_dbm) * scale
+                / (chs.len() as f64 * cfg.subchannel_bw_hz);
+            for k in chs {
+                psd_uni[k] = lin_to_db(per_w_hz * 1e3);
+            }
+        }
+        let d_uni = Decision {
+            alloc: alloc.clone(),
+            psd_dbm_hz: psd_uni,
+            cut,
+        };
+        prob.check_feasible(&d_uni).unwrap();
+        let t1_uni = prob.stage_latencies(&d_uni).uplink_phase_max();
+        assert!(
+            sol.t1 <= t1_uni * (1.0 + 1e-6),
+            "optimized {} vs uniform {}",
+            sol.t1,
+            t1_uni
+        );
+    }
+
+    #[test]
+    fn t1_monotone_in_power_budget() {
+        let mut cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let cut = 3;
+        let mut t1s = Vec::new();
+        for pmax in [20.0, 26.0, 31.76] {
+            cfg.p_max_dbm = pmax;
+            let prob = Problem {
+                cfg: &cfg,
+                profile: &profile,
+                dep: &dep,
+                ch: &ch,
+                batch: 64,
+                phi: 0.5,
+            };
+            let alloc = greedy::allocate(&prob, &vec![-70.0; 20], cut);
+            t1s.push(solve(&prob, &alloc, cut).unwrap().t1);
+        }
+        assert!(t1s[0] >= t1s[1] && t1s[1] >= t1s[2], "{t1s:?}");
+    }
+
+    #[test]
+    fn property_waterfill_never_negative_and_meets_rate() {
+        check("waterfilling valid", 60, |g| {
+            let n = g.usize_in(1, 8);
+            let coeffs: Vec<f64> =
+                (0..n).map(|_| g.f64_log(1e6, 1e12)).collect();
+            let target = g.f64_log(1e6, 5e8);
+            let (psd, total) = min_power_for_rate(&coeffs, 10e6, target);
+            assert!(psd.iter().all(|&p| p >= 0.0));
+            assert!(total >= 0.0);
+            let rate: f64 = psd
+                .iter()
+                .zip(&coeffs)
+                .map(|(&p, &gk)| 10e6 * (1.0 + p * gk).log2())
+                .sum();
+            assert!(rate >= target * (1.0 - 1e-5));
+        });
+    }
+}

@@ -1,0 +1,88 @@
+//! First-principles FLOP / payload calculators for CNN layers.
+//!
+//! Used to derive the SplitNet profile (matching the AOT-exported model
+//! exactly) and to cross-check the paper's Table IV orders of magnitude.
+
+/// MACs of a same-padded 2-D convolution.
+/// `h, w`: input spatial dims; `cin -> cout`; square kernel `k`, stride `s`.
+pub fn conv2d_macs(h: usize, w: usize, cin: usize, cout: usize, k: usize,
+                   s: usize) -> f64 {
+    let oh = h.div_ceil(s);
+    let ow = w.div_ceil(s);
+    (k * k * cin * cout * oh * ow) as f64
+}
+
+/// FLOPs of the same conv (2 FLOPs per MAC: multiply + add).
+pub fn conv2d_flops(h: usize, w: usize, cin: usize, cout: usize, k: usize,
+                    s: usize) -> f64 {
+    2.0 * conv2d_macs(h, w, cin, cout, k, s)
+}
+
+/// FLOPs of a pooling layer over `h×w×c` input with window `k`, stride `s`
+/// (one compare/accumulate per element in each window).
+pub fn pool_flops(h: usize, w: usize, c: usize, k: usize, s: usize) -> f64 {
+    let oh = h.div_ceil(s);
+    let ow = w.div_ceil(s);
+    (k * k * c * oh * ow) as f64
+}
+
+/// FLOPs of a dense layer `cin -> cout` (2 per MAC).
+pub fn fc_flops(cin: usize, cout: usize) -> f64 {
+    2.0 * (cin * cout) as f64
+}
+
+/// Parameter count of a conv layer (+bias).
+pub fn conv2d_params(cin: usize, cout: usize, k: usize) -> usize {
+    k * k * cin * cout + cout
+}
+
+/// Parameter count of a dense layer (+bias).
+pub fn fc_params(cin: usize, cout: usize) -> usize {
+    cin * cout + cout
+}
+
+/// Activation tensor bits for `h×w×c` float32.
+pub fn activation_bits(h: usize, w: usize, c: usize) -> f64 {
+    (h * w * c) as f64 * 32.0
+}
+
+/// Parameter bits for `n` float32 parameters.
+pub fn param_bits(n: usize) -> f64 {
+    n as f64 * 32.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_macs_formula() {
+        // 3x3, 8->8, 16x16, stride 1: 9*8*8*256 = 147456 MACs.
+        assert_eq!(conv2d_macs(16, 16, 8, 8, 3, 1), 147_456.0);
+        // stride 2 halves each spatial dim.
+        assert_eq!(conv2d_macs(16, 16, 8, 16, 3, 2), 9.0 * 8.0 * 16.0 * 64.0);
+    }
+
+    #[test]
+    fn fc_flops_formula() {
+        assert_eq!(fc_flops(32, 10), 640.0);
+        assert_eq!(fc_params(32, 10), 330);
+    }
+
+    #[test]
+    fn conv_params_formula() {
+        assert_eq!(conv2d_params(3, 64, 7), 7 * 7 * 3 * 64 + 64);
+    }
+
+    #[test]
+    fn activation_bits_f32() {
+        // 16x16x8 f32 = 2048 floats = 65536 bits.
+        assert_eq!(activation_bits(16, 16, 8), 65_536.0);
+    }
+
+    #[test]
+    fn odd_sizes_ceil_division() {
+        // 15x15 stride 2 -> 8x8 output.
+        assert_eq!(conv2d_macs(15, 15, 1, 1, 1, 2), 64.0);
+    }
+}

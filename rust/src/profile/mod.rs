@@ -1,0 +1,228 @@
+//! Neural-network layer profiles: the quantities the paper's latency model
+//! consumes.
+//!
+//! For a network of L layers and a cut at layer j (client owns layers 1..j):
+//!
+//! - `ρ_j`  — FP FLOPs of propagating the first j layers, one sample
+//! - `ϖ_j`  — BP FLOPs of the first j layers, one sample
+//! - `ψ_j`  — smashed-data bits at cut layer j (uplink payload, eq. 15)
+//! - `χ_j`  — activations'-gradient bits at cut layer j (downlink, eq. 19/21)
+//! - `u_j`  — client-side model bits (SFL model exchange / vanilla-SL relay)
+//!
+//! Two profiles ship: the paper's exact **ResNet-18 Table IV**
+//! ([`resnet18`]) driving every latency/optimizer experiment, and the
+//! trainable **SplitNet** ([`splitnet`]) whose numbers are derived from
+//! first principles by [`flops`] and which matches the AOT artifacts the
+//! coordinator actually executes.
+
+pub mod flops;
+pub mod resnet18;
+pub mod splitnet;
+
+/// Layer category (affects BP cost accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Pool,
+    Fc,
+}
+
+/// One layer's profile entries (paper Table IV row).
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: &'static str,
+    pub kind: LayerKind,
+    /// Parameter size in MiB (Table IV "Layer size (MB)").
+    pub params_mib: f64,
+    /// Forward FLOPs for one sample, in MFLOPs (Table IV "FP FLOPs").
+    pub fp_mflops: f64,
+    /// Output (smashed-data) size in MiB for one sample.
+    pub smashed_mib: f64,
+}
+
+const MIB_BITS: f64 = 8.0 * 1024.0 * 1024.0;
+const MFLOP: f64 = 1e6;
+
+/// BP cost multiplier relative to FP (standard 2x approximation: gradient
+/// wrt inputs + gradient wrt weights each cost about one forward pass).
+pub const BP_FP_RATIO: f64 = 2.0;
+
+/// A complete network profile.
+#[derive(Debug, Clone)]
+pub struct NetworkProfile {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+    /// Cut-layer candidates (1-based layer indices after which the split may
+    /// be placed). The last layer is never a candidate — the server must own
+    /// at least the output layer for loss computation / label privacy.
+    pub cut_candidates: Vec<usize>,
+}
+
+impl NetworkProfile {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn check_cut(&self, j: usize) {
+        debug_assert!(
+            j >= 1 && j < self.n_layers(),
+            "cut {} out of range 1..{} for {}",
+            j,
+            self.n_layers(),
+            self.name
+        );
+    }
+
+    /// ρ_j: cumulative FP FLOPs of layers 1..=j (one sample).
+    pub fn rho(&self, j: usize) -> f64 {
+        self.layers[..j].iter().map(|l| l.fp_mflops * MFLOP).sum()
+    }
+
+    /// Total FP FLOPs ρ_L.
+    pub fn rho_total(&self) -> f64 {
+        self.rho(self.n_layers())
+    }
+
+    /// ϖ_j: cumulative BP FLOPs of layers 1..=j (one sample).
+    pub fn varpi(&self, j: usize) -> f64 {
+        self.layers[..j]
+            .iter()
+            .map(|l| l.fp_mflops * MFLOP * BP_FP_RATIO)
+            .sum()
+    }
+
+    /// Total BP FLOPs ϖ_L.
+    pub fn varpi_total(&self) -> f64 {
+        self.varpi(self.n_layers())
+    }
+
+    /// ψ_j: smashed-data bits at cut j (one sample).
+    pub fn psi_bits(&self, j: usize) -> f64 {
+        self.check_cut(j);
+        self.layers[j - 1].smashed_mib * MIB_BITS
+    }
+
+    /// χ_j: activations'-gradient bits at cut j (one sample). Gradients have
+    /// the same dimensionality as activations.
+    pub fn chi_bits(&self, j: usize) -> f64 {
+        self.psi_bits(j)
+    }
+
+    /// u_j: client-side model bits with the cut at j (layers 1..=j).
+    pub fn client_model_bits(&self, j: usize) -> f64 {
+        self.check_cut(j);
+        self.layers[..j].iter().map(|l| l.params_mib * MIB_BITS).sum()
+    }
+
+    /// Full-model bits.
+    pub fn model_bits(&self) -> f64 {
+        self.layers.iter().map(|l| l.params_mib * MIB_BITS).sum()
+    }
+
+    /// Client-side FP workload Φ_c^F(j) = ρ_j (FLOPs).
+    pub fn client_fp_flops(&self, j: usize) -> f64 {
+        self.check_cut(j);
+        self.rho(j)
+    }
+
+    /// Server-side FP workload Φ_s^F(j) = ρ_L − ρ_j.
+    pub fn server_fp_flops(&self, j: usize) -> f64 {
+        self.check_cut(j);
+        self.rho_total() - self.rho(j)
+    }
+
+    /// Server-side BP workload excluding the last layer:
+    /// Φ_s^B(j) = ϖ_{L−1} − ϖ_j.
+    pub fn server_bp_flops(&self, j: usize) -> f64 {
+        self.check_cut(j);
+        (self.varpi(self.n_layers() - 1) - self.varpi(j)).max(0.0)
+    }
+
+    /// Last-layer BP workload Φ_s^L = ϖ_L − ϖ_{L−1}.
+    pub fn last_layer_bp_flops(&self) -> f64 {
+        self.varpi_total() - self.varpi(self.n_layers() - 1)
+    }
+
+    /// Client-side BP workload Φ_c^B(j) = ϖ_j.
+    pub fn client_bp_flops(&self, j: usize) -> f64 {
+        self.check_cut(j);
+        self.varpi(j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> NetworkProfile {
+        NetworkProfile {
+            name: "toy",
+            layers: vec![
+                Layer {
+                    name: "l1",
+                    kind: LayerKind::Conv,
+                    params_mib: 0.5,
+                    fp_mflops: 10.0,
+                    smashed_mib: 0.25,
+                },
+                Layer {
+                    name: "l2",
+                    kind: LayerKind::Conv,
+                    params_mib: 1.0,
+                    fp_mflops: 20.0,
+                    smashed_mib: 0.125,
+                },
+                Layer {
+                    name: "l3",
+                    kind: LayerKind::Fc,
+                    params_mib: 0.25,
+                    fp_mflops: 5.0,
+                    smashed_mib: 0.01,
+                },
+            ],
+            cut_candidates: vec![1, 2],
+        }
+    }
+
+    #[test]
+    fn cumulative_rho_varpi() {
+        let p = toy();
+        assert_eq!(p.rho(1), 10e6);
+        assert_eq!(p.rho(2), 30e6);
+        assert_eq!(p.rho_total(), 35e6);
+        assert_eq!(p.varpi(2), 60e6);
+        assert_eq!(p.varpi_total(), 70e6);
+    }
+
+    #[test]
+    fn split_workloads_sum_to_totals() {
+        let p = toy();
+        for j in [1usize, 2] {
+            assert!(
+                (p.client_fp_flops(j) + p.server_fp_flops(j) - p.rho_total())
+                    .abs()
+                    < 1e-6
+            );
+            let bp_sum = p.client_bp_flops(j)
+                + p.server_bp_flops(j)
+                + p.last_layer_bp_flops();
+            assert!((bp_sum - p.varpi_total()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn payload_bits() {
+        let p = toy();
+        assert_eq!(p.psi_bits(1), 0.25 * 8.0 * 1024.0 * 1024.0);
+        assert_eq!(p.chi_bits(2), p.psi_bits(2));
+        assert_eq!(p.client_model_bits(2), 1.5 * 8.0 * 1024.0 * 1024.0);
+        assert!((p.model_bits() - 1.75 * 8.0 * 1024.0 * 1024.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn deeper_cut_more_client_work() {
+        let p = toy();
+        assert!(p.client_fp_flops(2) > p.client_fp_flops(1));
+        assert!(p.server_fp_flops(2) < p.server_fp_flops(1));
+    }
+}

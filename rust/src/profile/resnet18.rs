@@ -1,0 +1,129 @@
+//! The paper's exact ResNet-18 profile — Table IV, reproduced row-for-row.
+//!
+//! Input images are resized to 64×64 (paper §VII-A). The table lists layer
+//! parameter size (MB), forward FLOPs (MFLOP) and smashed-data size (MB)
+//! per sample. The forward order follows Fig. 6: CONV1 → MAXPOOL →
+//! stage-1 (CONV2,3) → stage-2 (CONV4,5,6 twice — the table repeats those
+//! rows for the two residual blocks) → stage-3 (CONV7,8,9) → stage-4
+//! (CONV10,11,12) → AVGPOOL → FC.
+//!
+//! These numbers feed every latency/optimizer experiment; they are the
+//! paper's own, not re-derived (Table IV has quirks — e.g. identical rows
+//! for the two stage-2 blocks — which we reproduce rather than "fix" so the
+//! latency results match the paper's model). [`flops`] cross-checks the
+//! orders of magnitude.
+
+use super::{Layer, LayerKind, NetworkProfile};
+
+/// Rows exactly as printed in Table IV, in forward order.
+/// (name, kind, params MB, FP MFLOPs, smashed MB)
+const ROWS: &[(&str, LayerKind, f64, f64, f64)] = &[
+    ("CONV1", LayerKind::Conv, 0.0364, 9.8304, 0.25),
+    ("MAXPOOL", LayerKind::Pool, 0.0, 0.0655, 0.0625),
+    ("CONV2", LayerKind::Conv, 0.1411, 9.5027, 0.0625),
+    ("CONV3", LayerKind::Conv, 0.1414, 9.4863, 0.0625),
+    ("CONV4", LayerKind::Conv, 0.2827, 4.7432, 0.0313),
+    ("CONV5", LayerKind::Conv, 0.564, 9.4618, 0.0313),
+    ("CONV6", LayerKind::Conv, 0.0327, 0.5489, 0.0313),
+    ("CONV4b", LayerKind::Conv, 0.2827, 4.7432, 0.0313),
+    ("CONV5b", LayerKind::Conv, 0.564, 9.4618, 0.0313),
+    ("CONV6b", LayerKind::Conv, 0.0327, 0.5489, 0.0313),
+    ("CONV7", LayerKind::Conv, 1.1279, 4.7309, 0.0156),
+    ("CONV8", LayerKind::Conv, 2.2529, 9.4495, 0.0156),
+    ("CONV9", LayerKind::Conv, 0.1279, 0.5366, 0.0156),
+    ("CONV10", LayerKind::Conv, 4.5059, 4.7247, 0.0078),
+    ("CONV11", LayerKind::Conv, 9.0059, 9.4433, 0.0078),
+    ("CONV12", LayerKind::Conv, 0.5059, 0.5304, 0.0078),
+    ("AVGPOOL", LayerKind::Pool, 0.0, 0.001, 0.0020),
+    ("FC", LayerKind::Fc, 0.0137, 0.0036, 2.67e-5),
+];
+
+/// Build the ResNet-18 profile from Table IV.
+pub fn profile() -> NetworkProfile {
+    let layers: Vec<Layer> = ROWS
+        .iter()
+        .map(|&(name, kind, params_mib, fp_mflops, smashed_mib)| Layer {
+            name,
+            kind,
+            params_mib,
+            fp_mflops,
+            smashed_mib,
+        })
+        .collect();
+    // Fig. 6: a cut may be placed after any layer except the final FC
+    // (the server keeps at least the output layer; labels go to the server).
+    let cut_candidates = (1..layers.len()).collect();
+    NetworkProfile { name: "resnet18-64", layers, cut_candidates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::flops;
+
+    #[test]
+    fn row_count_matches_table() {
+        let p = profile();
+        assert_eq!(p.n_layers(), 18);
+        assert_eq!(p.cut_candidates.len(), 17);
+    }
+
+    #[test]
+    fn totals_are_plausible_resnet18_at_64() {
+        let p = profile();
+        // ~88 MFLOPs FP/sample at 64x64 (ResNet-18 at 224x224 is ~1.8G;
+        // (64/224)^2 scaling ≈ 0.082 -> ~150M; the paper's table sums lower
+        // because stage repeats are collapsed). Sanity: order of magnitude.
+        let total_mflops = p.rho_total() / 1e6;
+        assert!(
+            (50.0..200.0).contains(&total_mflops),
+            "total FP = {total_mflops} MFLOPs"
+        );
+        // Model size ~ 19.6 MB per the table rows (paper quotes ResNet-18 at
+        // ~44MB full; Table IV lists one conv per repeated pair).
+        let mb = p.model_bits() / (8.0 * 1024.0 * 1024.0);
+        assert!((15.0..25.0).contains(&mb), "model = {mb} MiB");
+    }
+
+    #[test]
+    fn conv1_flops_cross_check() {
+        // CONV1: 7x7, 3->64, stride 2 on 64x64 input -> 32x32 output.
+        // MACs = 49*3*64*32*32 ≈ 9.6M, paper lists 9.8304 MFLOP.
+        let macs = flops::conv2d_macs(64, 64, 3, 64, 7, 2);
+        let paper = 9.8304e6;
+        let ratio = macs / paper;
+        assert!(
+            (0.8..1.25).contains(&ratio),
+            "conv1 macs={macs:.3e} vs paper {paper:.3e}"
+        );
+    }
+
+    #[test]
+    fn smashed_monotone_nonincreasing_after_stage1() {
+        let p = profile();
+        // Downsampling stages shrink activations: cut deeper => smaller
+        // uplink payload (the paper's core cut-layer trade-off).
+        assert!(p.psi_bits(1) > p.psi_bits(5));
+        assert!(p.psi_bits(5) > p.psi_bits(11));
+        assert!(p.psi_bits(11) > p.psi_bits(14));
+        assert!(p.psi_bits(17) > p.psi_bits(p.n_layers() - 1) * 0.9);
+    }
+
+    #[test]
+    fn conv1_smashed_is_quarter_mib() {
+        let p = profile();
+        // 32*32*64 f32 = 256 KiB = 0.25 MiB.
+        assert!((p.psi_bits(1) - 0.25 * 8.0 * 1024.0 * 1024.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn client_model_grows_with_cut() {
+        let p = profile();
+        let mut prev = 0.0;
+        for j in 1..p.n_layers() {
+            let u = p.client_model_bits(j);
+            assert!(u >= prev);
+            prev = u;
+        }
+    }
+}

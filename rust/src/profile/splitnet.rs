@@ -1,0 +1,208 @@
+//! SplitNet profile — the trainable reproduction-scale residual CNN.
+//!
+//! This profile is derived from first principles ([`flops`]) and must match
+//! the AOT-exported model in `python/compile/model.py` *exactly* in shapes:
+//! the coordinator uses it to account latency for the rounds it actually
+//! executes through PJRT. The four stages mirror ResNet-18's block topology;
+//! stage boundaries are the four cut candidates exported as artifacts.
+//!
+//! Layer granularity note: the python model treats one *stage* as one layer
+//! for cut purposes, so this profile has 5 "layers" (4 stages + head) and
+//! cut candidates {1,2,3,4}.
+
+use super::flops::*;
+use super::{Layer, LayerKind, NetworkProfile};
+
+/// Shape configuration mirroring `python/compile/model.py::ModelConfig`.
+#[derive(Debug, Clone, Copy)]
+pub struct SplitNetConfig {
+    pub channels: usize,
+    pub num_classes: usize,
+    pub img: usize,
+    pub width: usize,
+}
+
+impl SplitNetConfig {
+    pub fn mnist_like() -> Self {
+        SplitNetConfig { channels: 1, num_classes: 10, img: 16, width: 8 }
+    }
+
+    pub fn ham_like() -> Self {
+        SplitNetConfig { channels: 3, num_classes: 7, img: 16, width: 8 }
+    }
+
+    pub fn for_family(family: &str) -> Self {
+        match family {
+            "mnist" => Self::mnist_like(),
+            _ => Self::ham_like(),
+        }
+    }
+
+    fn stage_widths(&self) -> [usize; 4] {
+        [self.width, self.width, 2 * self.width, 4 * self.width]
+    }
+
+    /// (h, w, c) of the smashed activations after stage `cut` (1..=4).
+    pub fn smashed_shape(&self, cut: usize) -> (usize, usize, usize) {
+        let ws = self.stage_widths();
+        match cut {
+            1 => (self.img, self.img, ws[0]),
+            2 => (self.img, self.img, ws[1]),
+            3 => (self.img / 2, self.img / 2, ws[2]),
+            4 => (self.img / 4, self.img / 4, ws[3]),
+            _ => panic!("cut {cut} out of 1..=4"),
+        }
+    }
+
+    /// Total parameter count (must equal the python model's).
+    pub fn param_count(&self) -> usize {
+        let [w1, w2, w3, w4] = self.stage_widths();
+        let mut n = conv2d_params(self.channels, w1, 3); // s1
+        n += conv2d_params(w1, w2, 3) + conv2d_params(w2, w2, 3); // s2
+        n += conv2d_params(w2, w3, 3)
+            + conv2d_params(w3, w3, 3)
+            + conv2d_params(w2, w3, 1); // s3 (+proj)
+        n += conv2d_params(w3, w4, 3)
+            + conv2d_params(w4, w4, 3)
+            + conv2d_params(w3, w4, 1); // s4 (+proj)
+        n += fc_params(w4, self.num_classes); // head
+        n
+    }
+}
+
+const MIB: f64 = 1024.0 * 1024.0;
+
+/// Build the 5-layer (4 stages + head) profile for a family config.
+pub fn profile(cfg: SplitNetConfig) -> NetworkProfile {
+    let [w1, w2, w3, w4] = cfg.stage_widths();
+    let img = cfg.img;
+
+    // stage 1: conv3x3 ch->w1 @ img
+    let s1_flops = conv2d_flops(img, img, cfg.channels, w1, 3, 1);
+    let s1_params = conv2d_params(cfg.channels, w1, 3);
+
+    // stage 2: two 3x3 convs w1->w2->w2 @ img (+skip add, negligible)
+    let s2_flops =
+        conv2d_flops(img, img, w1, w2, 3, 1) + conv2d_flops(img, img, w2, w2, 3, 1);
+    let s2_params = conv2d_params(w1, w2, 3) + conv2d_params(w2, w2, 3);
+
+    // stage 3: conv stride2 w2->w3, conv w3->w3 @ img/2, 1x1 proj stride2
+    let s3_flops = conv2d_flops(img, img, w2, w3, 3, 2)
+        + conv2d_flops(img / 2, img / 2, w3, w3, 3, 1)
+        + conv2d_flops(img, img, w2, w3, 1, 2);
+    let s3_params = conv2d_params(w2, w3, 3)
+        + conv2d_params(w3, w3, 3)
+        + conv2d_params(w2, w3, 1);
+
+    // stage 4: same shape at img/2 -> img/4
+    let s4_flops = conv2d_flops(img / 2, img / 2, w3, w4, 3, 2)
+        + conv2d_flops(img / 4, img / 4, w4, w4, 3, 1)
+        + conv2d_flops(img / 2, img / 2, w3, w4, 1, 2);
+    let s4_params = conv2d_params(w3, w4, 3)
+        + conv2d_params(w4, w4, 3)
+        + conv2d_params(w3, w4, 1);
+
+    // head: GAP + FC
+    let head_flops = pool_flops(img / 4, img / 4, w4, img / 4, img / 4)
+        + fc_flops(w4, cfg.num_classes);
+    let head_params = fc_params(w4, cfg.num_classes);
+
+    let smashed = |cut: usize| {
+        let (h, w, c) = cfg.smashed_shape(cut);
+        activation_bits(h, w, c) / 8.0 / MIB
+    };
+
+    let layers = vec![
+        Layer {
+            name: "stage1",
+            kind: LayerKind::Conv,
+            params_mib: param_bits(s1_params) / 8.0 / MIB,
+            fp_mflops: s1_flops / 1e6,
+            smashed_mib: smashed(1),
+        },
+        Layer {
+            name: "stage2",
+            kind: LayerKind::Conv,
+            params_mib: param_bits(s2_params) / 8.0 / MIB,
+            fp_mflops: s2_flops / 1e6,
+            smashed_mib: smashed(2),
+        },
+        Layer {
+            name: "stage3",
+            kind: LayerKind::Conv,
+            params_mib: param_bits(s3_params) / 8.0 / MIB,
+            fp_mflops: s3_flops / 1e6,
+            smashed_mib: smashed(3),
+        },
+        Layer {
+            name: "stage4",
+            kind: LayerKind::Conv,
+            params_mib: param_bits(s4_params) / 8.0 / MIB,
+            fp_mflops: s4_flops / 1e6,
+            smashed_mib: smashed(4),
+        },
+        Layer {
+            name: "head",
+            kind: LayerKind::Fc,
+            params_mib: param_bits(head_params) / 8.0 / MIB,
+            fp_mflops: head_flops / 1e6,
+            smashed_mib: cfg.num_classes as f64 * 4.0 / MIB,
+        },
+    ];
+    NetworkProfile {
+        name: "splitnet",
+        layers,
+        cut_candidates: vec![1, 2, 3, 4],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_python_model() {
+        // python smoke run reported 19642 params for mnist-like (w=8, ch=1,
+        // nc=10). This constant is the cross-language contract.
+        assert_eq!(SplitNetConfig::mnist_like().param_count(), 19_642);
+    }
+
+    #[test]
+    fn smashed_shapes_match_python() {
+        let c = SplitNetConfig::mnist_like();
+        assert_eq!(c.smashed_shape(1), (16, 16, 8));
+        assert_eq!(c.smashed_shape(2), (16, 16, 8));
+        assert_eq!(c.smashed_shape(3), (8, 8, 16));
+        assert_eq!(c.smashed_shape(4), (4, 4, 32));
+    }
+
+    #[test]
+    fn profile_has_four_cuts() {
+        let p = profile(SplitNetConfig::mnist_like());
+        assert_eq!(p.n_layers(), 5);
+        assert_eq!(p.cut_candidates, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn deeper_cut_smaller_payload() {
+        let p = profile(SplitNetConfig::mnist_like());
+        assert!(p.psi_bits(2) > p.psi_bits(3));
+        assert!(p.psi_bits(3) > p.psi_bits(4));
+    }
+
+    #[test]
+    fn ham_family_differs_only_in_io() {
+        let m = profile(SplitNetConfig::mnist_like());
+        let h = profile(SplitNetConfig::ham_like());
+        // stage-2..4 smashed payloads identical; stage-1 FLOPs differ (3ch).
+        assert_eq!(m.psi_bits(2), h.psi_bits(2));
+        assert!(h.layers[0].fp_mflops > m.layers[0].fp_mflops);
+    }
+
+    #[test]
+    fn totals_small_enough_to_train_on_cpu() {
+        let p = profile(SplitNetConfig::mnist_like());
+        // < 10 MFLOPs/sample forward: hundreds of rounds on CPU PJRT is fine
+        assert!(p.rho_total() < 10e6, "rho_total = {}", p.rho_total());
+    }
+}

@@ -1,0 +1,399 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.
+//!
+//! `artifacts/manifest.json` describes every exported HLO graph — file
+//! name, input/output tensor specs (name, dtype, shape) — plus the model
+//! family metadata (parameter list, per-cut client/server split, smashed
+//! shapes). The coordinator never guesses a shape: everything flows from
+//! here.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Tensor element type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+    Bf16,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            "u32" => Ok(DType::U32),
+            "bf16" => Ok(DType::Bf16),
+            other => Err(Error::Artifact(format!("unknown dtype '{other}'"))),
+        }
+    }
+}
+
+/// One tensor's spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| Error::Artifact("spec name".into()))?
+                .to_string(),
+            dtype: DType::parse(
+                j.req("dtype")?
+                    .as_str()
+                    .ok_or_else(|| Error::Artifact("spec dtype".into()))?,
+            )?,
+            shape: j.req("shape")?.usize_vec()?,
+        })
+    }
+}
+
+/// One exported graph.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactEntry {
+    fn parse(j: &Json) -> Result<ArtifactEntry> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.req(key)?
+                .as_arr()
+                .ok_or_else(|| Error::Artifact(format!("{key} not array")))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect()
+        };
+        Ok(ArtifactEntry {
+            file: j
+                .req("file")?
+                .as_str()
+                .ok_or_else(|| Error::Artifact("file".into()))?
+                .to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+/// One model family's manifest subtree.
+#[derive(Debug, Clone)]
+pub struct FamilyManifest {
+    pub name: String,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub img: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    /// Canonical parameter order: (name, shape).
+    pub params: Vec<(String, Vec<usize>)>,
+    /// cut → number of client-side parameter tensors (canonical prefix).
+    pub client_param_count: BTreeMap<usize, usize>,
+    /// cut → smashed (h, w, c).
+    pub smashed_shape: BTreeMap<usize, Vec<usize>>,
+    pub init: ArtifactEntry,
+    pub eval: ArtifactEntry,
+    /// cut → entry.
+    pub client_fwd: BTreeMap<usize, ArtifactEntry>,
+    pub client_step: BTreeMap<usize, ArtifactEntry>,
+    pub phi_agg: BTreeMap<usize, ArtifactEntry>,
+    /// cut → (C → entry).
+    pub server_train: BTreeMap<usize, BTreeMap<usize, ArtifactEntry>>,
+}
+
+impl FamilyManifest {
+    pub fn cuts(&self) -> Vec<usize> {
+        self.client_fwd.keys().copied().collect()
+    }
+
+    pub fn client_counts(&self, cut: usize) -> Vec<usize> {
+        self.server_train
+            .get(&cut)
+            .map(|m| m.keys().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// Server_train entry for (cut, C) with a clear error.
+    pub fn server_train_entry(&self, cut: usize, c: usize)
+        -> Result<&ArtifactEntry> {
+        self.server_train
+            .get(&cut)
+            .and_then(|m| m.get(&c))
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no server_train artifact for cut={cut}, C={c} \
+                     (exported counts: {:?})",
+                    self.client_counts(cut)
+                ))
+            })
+    }
+
+    /// Total parameter element count.
+    pub fn param_elements(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub client_counts: Vec<usize>,
+    pub cuts: Vec<usize>,
+    pub families: BTreeMap<String, FamilyManifest>,
+}
+
+fn parse_cut_map(j: &Json) -> Result<BTreeMap<usize, ArtifactEntry>> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| Error::Artifact("expected object".into()))?;
+    let mut out = BTreeMap::new();
+    for (k, v) in obj {
+        let cut: usize = k
+            .parse()
+            .map_err(|_| Error::Artifact(format!("bad cut key '{k}'")))?;
+        out.insert(cut, ArtifactEntry::parse(v)?);
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "{}: {e} — run `make artifacts` first",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j.req("version")?.as_usize().unwrap_or(0);
+        if version != 1 {
+            return Err(Error::Artifact(format!(
+                "manifest version {version} != 1"
+            )));
+        }
+        let client_counts = j.req("client_counts")?.usize_vec()?;
+        let cuts = j.req("cuts")?.usize_vec()?;
+        let mut families = BTreeMap::new();
+        let fams = j
+            .req("families")?
+            .as_obj()
+            .ok_or_else(|| Error::Artifact("families".into()))?;
+        for (name, fj) in fams {
+            let arts = fj.req("artifacts")?;
+            let params = fj
+                .req("params")?
+                .as_arr()
+                .ok_or_else(|| Error::Artifact("params".into()))?
+                .iter()
+                .map(|p| {
+                    Ok((
+                        p.req("name")?
+                            .as_str()
+                            .ok_or_else(|| {
+                                Error::Artifact("param name".into())
+                            })?
+                            .to_string(),
+                        p.req("shape")?.usize_vec()?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let cpc = fj
+                .req("client_param_count")?
+                .as_obj()
+                .ok_or_else(|| Error::Artifact("client_param_count".into()))?
+                .iter()
+                .map(|(k, v)| {
+                    Ok((
+                        k.parse::<usize>().map_err(|_| {
+                            Error::Artifact(format!("cut key {k}"))
+                        })?,
+                        v.as_usize().ok_or_else(|| {
+                            Error::Artifact("param count".into())
+                        })?,
+                    ))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            let smashed = fj
+                .req("smashed_shape")?
+                .as_obj()
+                .ok_or_else(|| Error::Artifact("smashed_shape".into()))?
+                .iter()
+                .map(|(k, v)| {
+                    Ok((
+                        k.parse::<usize>().map_err(|_| {
+                            Error::Artifact(format!("cut key {k}"))
+                        })?,
+                        v.usize_vec()?,
+                    ))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            let mut server_train = BTreeMap::new();
+            let st = arts
+                .req("server_train")?
+                .as_obj()
+                .ok_or_else(|| Error::Artifact("server_train".into()))?;
+            for (cut_key, by_c) in st {
+                let cut: usize = cut_key.parse().map_err(|_| {
+                    Error::Artifact(format!("cut key {cut_key}"))
+                })?;
+                let mut inner = BTreeMap::new();
+                for (c_key, entry) in by_c
+                    .as_obj()
+                    .ok_or_else(|| Error::Artifact("server_train map".into()))?
+                {
+                    let c: usize = c_key.parse().map_err(|_| {
+                        Error::Artifact(format!("C key {c_key}"))
+                    })?;
+                    inner.insert(c, ArtifactEntry::parse(entry)?);
+                }
+                server_train.insert(cut, inner);
+            }
+            families.insert(
+                name.clone(),
+                FamilyManifest {
+                    name: name.clone(),
+                    channels: fj.req("channels")?.as_usize().unwrap_or(1),
+                    num_classes: fj
+                        .req("num_classes")?
+                        .as_usize()
+                        .unwrap_or(10),
+                    img: fj.req("img")?.as_usize().unwrap_or(16),
+                    batch: fj.req("batch")?.as_usize().unwrap_or(32),
+                    eval_batch: fj
+                        .req("eval_batch")?
+                        .as_usize()
+                        .unwrap_or(256),
+                    params,
+                    client_param_count: cpc,
+                    smashed_shape: smashed,
+                    init: ArtifactEntry::parse(arts.req("init")?)?,
+                    eval: ArtifactEntry::parse(arts.req("eval")?)?,
+                    client_fwd: parse_cut_map(arts.req("client_fwd")?)?,
+                    client_step: parse_cut_map(arts.req("client_step")?)?,
+                    phi_agg: parse_cut_map(arts.req("phi_agg")?)?,
+                    server_train,
+                },
+            );
+        }
+        Ok(Manifest { client_counts, cuts, families })
+    }
+
+    pub fn family(&self, name: &str) -> Result<&FamilyManifest> {
+        self.families.get(name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "family '{name}' not in manifest (have: {:?})",
+                self.families.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    /// Closest exported client count ≥ requested (exact match preferred).
+    pub fn nearest_client_count(&self, c: usize) -> usize {
+        if self.client_counts.contains(&c) {
+            return c;
+        }
+        self.client_counts
+            .iter()
+            .copied()
+            .filter(|&x| x >= c)
+            .min()
+            .or_else(|| self.client_counts.iter().copied().max())
+            .unwrap_or(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "client_counts": [1, 2, 5],
+      "cuts": [2],
+      "families": {
+        "mnist": {
+          "channels": 1, "num_classes": 10, "img": 16, "width": 8,
+          "batch": 32, "eval_batch": 256,
+          "params": [{"name": "s1.w", "shape": [3,3,1,8]},
+                     {"name": "s1.b", "shape": [8]}],
+          "client_param_count": {"2": 1},
+          "smashed_shape": {"2": [16,16,8]},
+          "artifacts": {
+            "init": {"file": "i.hlo.txt",
+                     "inputs": [{"name":"seed","dtype":"u32","shape":[2]}],
+                     "outputs": [{"name":"s1.w","dtype":"f32","shape":[3,3,1,8]}]},
+            "eval": {"file": "e.hlo.txt", "inputs": [], "outputs": []},
+            "client_fwd": {"2": {"file": "cf.hlo.txt", "inputs": [],
+                                  "outputs": []}},
+            "client_step": {"2": {"file": "cs.hlo.txt", "inputs": [],
+                                   "outputs": []}},
+            "phi_agg": {"2": {"file": "pa.hlo.txt", "inputs": [],
+                               "outputs": []}},
+            "server_train": {"2": {"5": {"file": "st.hlo.txt",
+                                          "inputs": [], "outputs": []}}}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.client_counts, vec![1, 2, 5]);
+        let fam = m.family("mnist").unwrap();
+        assert_eq!(fam.batch, 32);
+        assert_eq!(fam.params.len(), 2);
+        assert_eq!(fam.client_param_count[&2], 1);
+        assert_eq!(fam.smashed_shape[&2], vec![16, 16, 8]);
+        assert_eq!(fam.init.inputs[0].dtype, DType::U32);
+        assert!(fam.server_train_entry(2, 5).is_ok());
+        assert!(fam.server_train_entry(2, 3).is_err());
+        assert!(m.family("nope").is_err());
+    }
+
+    #[test]
+    fn nearest_client_count_rounds_up() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.nearest_client_count(2), 2);
+        assert_eq!(m.nearest_client_count(3), 5);
+        assert_eq!(m.nearest_client_count(7), 5); // above max → max
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        if let Ok(m) = Manifest::load("artifacts") {
+            let fam = m.family("mnist").unwrap();
+            assert_eq!(fam.params.len(), 20);
+            assert_eq!(fam.cuts(), vec![1, 2, 3, 4]);
+            // cross-check the split contract with the profile module
+            assert_eq!(fam.client_param_count[&2], 6);
+            let spec = &fam.server_train_entry(2, 5).unwrap().inputs;
+            let names: Vec<&str> =
+                spec.iter().map(|s| s.name.as_str()).collect();
+            assert!(names.ends_with(&["smashed", "y", "lam", "mask", "lr"]));
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the training hot path.
+//!
+//! Mirrors `/opt/xla-example/load_hlo`: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Compiled executables are cached by file
+//! name; every graph was lowered with `return_tuple=True`, so execution
+//! returns one tuple literal that we decompose and validate against the
+//! manifest's output specs.
+
+pub mod artifact;
+pub mod tensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable,
+          XlaComputation};
+
+use crate::error::{Error, Result};
+
+use artifact::ArtifactEntry;
+
+/// Cumulative runtime counters (perf visibility).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub executions: usize,
+    pub compile_seconds: f64,
+    pub execute_seconds: f64,
+}
+
+/// The PJRT runtime handle. Not `Send` (PJRT client is thread-affine in the
+/// `xla` crate); the coordinator is an event-driven single-thread loop.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at the artifact directory.
+    pub fn new(artifacts_dir: &str) -> Result<Runtime> {
+        let client = PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: PathBuf::from(artifacts_dir),
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact file (cached).
+    pub fn load(&self, file: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&path).map_err(|e| {
+            Error::Artifact(format!("{}: {e}", path.display()))
+        })?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        let mut stats = self.stats.borrow_mut();
+        stats.compiles += 1;
+        stats.compile_seconds += t0.elapsed().as_secs_f64();
+        drop(stats);
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (hides compile latency from the
+    /// per-round timings).
+    pub fn warmup<'a, I: IntoIterator<Item = &'a ArtifactEntry>>(
+        &self, entries: I,
+    ) -> Result<()> {
+        for e in entries {
+            self.load(&e.file)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with the given input literals; returns the
+    /// decomposed output tuple, validated against the manifest specs.
+    pub fn call(&self, entry: &ArtifactEntry, inputs: &[Literal])
+        -> Result<Vec<Literal>> {
+        if inputs.len() != entry.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                entry.file,
+                entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (lit, spec) in inputs.iter().zip(&entry.inputs) {
+            let n = lit.element_count();
+            if n != spec.numel() {
+                return Err(Error::Runtime(format!(
+                    "{}: input '{}' has {} elements, spec wants {} {:?}",
+                    entry.file, spec.name, n, spec.numel(), spec.shape
+                )));
+            }
+        }
+        let exe = self.load(&entry.file)?;
+        let t0 = Instant::now();
+        let result = exe.execute::<Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let mut stats = self.stats.borrow_mut();
+        stats.executions += 1;
+        stats.execute_seconds += t0.elapsed().as_secs_f64();
+        drop(stats);
+        let outs = tuple.to_tuple()?;
+        if outs.len() != entry.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} outputs, got {}",
+                entry.file,
+                entry.outputs.len(),
+                outs.len()
+            )));
+        }
+        Ok(outs)
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::artifact::Manifest;
+    use super::tensor::*;
+    use super::*;
+
+    /// These tests require `make artifacts` to have run; they are the
+    /// rust-side half of the AOT contract.
+    fn runtime_and_manifest() -> Option<(Runtime, Manifest)> {
+        let m = Manifest::load("artifacts").ok()?;
+        let rt = Runtime::new("artifacts").ok()?;
+        Some((rt, m))
+    }
+
+    #[test]
+    fn init_executes_and_shapes_match() {
+        let Some((rt, m)) = runtime_and_manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let fam = m.family("mnist").unwrap();
+        let seed = literal_u32(&[2], &[0, 42]).unwrap();
+        let params = rt.call(&fam.init, &[seed]).unwrap();
+        assert_eq!(params.len(), fam.params.len());
+        for (lit, (name, shape)) in params.iter().zip(&fam.params) {
+            assert_eq!(
+                lit.element_count(),
+                shape.iter().product::<usize>(),
+                "param {name}"
+            );
+        }
+        // determinism
+        let seed2 = literal_u32(&[2], &[0, 42]).unwrap();
+        let params2 = rt.call(&fam.init, &[seed2]).unwrap();
+        assert_eq!(
+            to_f32_vec(&params[0]).unwrap(),
+            to_f32_vec(&params2[0]).unwrap()
+        );
+    }
+
+    #[test]
+    fn phi_agg_artifact_matches_rust_reference() {
+        let Some((rt, m)) = runtime_and_manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let fam = m.family("mnist").unwrap();
+        let entry = fam.phi_agg.get(&2).unwrap();
+        let zspec = &entry.inputs[0];
+        let (c, b, q) = (zspec.shape[0], zspec.shape[1], zspec.shape[2]);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let z: Vec<f32> =
+            (0..c * b * q).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let lam: Vec<f32> = vec![1.0 / c as f32; c];
+        let m_agg = b / 2;
+        let mask: Vec<f32> = (0..b)
+            .map(|j| if j < m_agg { 1.0 } else { 0.0 })
+            .collect();
+        let out = rt
+            .call(
+                entry,
+                &[
+                    literal_f32(&[c, b, q], &z).unwrap(),
+                    literal_f32(&[c], &lam).unwrap(),
+                    literal_f32(&[b], &mask).unwrap(),
+                ],
+            )
+            .unwrap();
+        let got = to_f32_vec(&out[0]).unwrap();
+        // Rust-side oracle of eq. (5)-(6).
+        for i in 0..c {
+            for j in 0..b {
+                for x in 0..q.min(7) {
+                    let idx = (i * b + j) * q + x;
+                    let expect = if j < m_agg {
+                        (0..c)
+                            .map(|k| lam[k] * z[(k * b + j) * q + x])
+                            .sum::<f32>()
+                    } else {
+                        z[idx]
+                    };
+                    assert!(
+                        (got[idx] - expect).abs() < 1e-4,
+                        "mismatch at ({i},{j},{x}): {} vs {expect}",
+                        got[idx]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some((rt, m)) = runtime_and_manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let fam = m.family("mnist").unwrap();
+        let seed = literal_u32(&[2], &[1, 2]).unwrap();
+        rt.call(&fam.init, &[seed]).unwrap();
+        let before = rt.stats().compiles;
+        let seed = literal_u32(&[2], &[1, 3]).unwrap();
+        rt.call(&fam.init, &[seed]).unwrap();
+        assert_eq!(rt.stats().compiles, before, "second call recompiled");
+        assert_eq!(rt.stats().executions, 2);
+    }
+
+    #[test]
+    fn input_arity_and_shape_validated() {
+        let Some((rt, m)) = runtime_and_manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let fam = m.family("mnist").unwrap();
+        // wrong arity
+        assert!(rt.call(&fam.init, &[]).is_err());
+        // wrong element count
+        let bad = literal_u32(&[3], &[1, 2, 3]).unwrap();
+        assert!(rt.call(&fam.init, &[bad]).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Host tensors and Literal conversion helpers.
+//!
+//! The coordinator works with flat `f32`/`i32`/`u32` buffers; this module
+//! is the single crossing point between host memory and XLA literals, with
+//! shape/dtype checking against the manifest specs.
+
+use xla::{ElementType, Literal};
+
+use crate::error::{Error, Result};
+
+use super::artifact::{DType, TensorSpec};
+
+/// A host-side tensor (always f32 — labels/seeds use dedicated builders).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        HostTensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(
+            v.as_ptr() as *const u8,
+            std::mem::size_of_val(v),
+        )
+    }
+}
+
+/// f32 tensor → literal.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        shape,
+        bytes_of(data),
+    )?)
+}
+
+/// i32 tensor → literal.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        shape,
+        bytes_of(data),
+    )?)
+}
+
+/// u32 tensor → literal.
+pub fn literal_u32(shape: &[usize], data: &[u32]) -> Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::U32,
+        shape,
+        bytes_of(data),
+    )?)
+}
+
+/// Build a literal matching `spec` from f32 data (spec must be f32).
+pub fn literal_for_spec(spec: &TensorSpec, data: &[f32]) -> Result<Literal> {
+    if spec.dtype != DType::F32 {
+        return Err(Error::Runtime(format!(
+            "spec {} is {:?}, not f32",
+            spec.name, spec.dtype
+        )));
+    }
+    if spec.numel() != data.len() {
+        return Err(Error::Runtime(format!(
+            "spec {} wants {} elements, got {}",
+            spec.name,
+            spec.numel(),
+            data.len()
+        )));
+    }
+    literal_f32(&spec.shape, data)
+}
+
+/// Literal → f32 vec (with count check).
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32 from a literal.
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Elementwise λ-weighted average of equally-shaped f32 buffers
+/// (the SFL FedAvg and the evaluation-model average).
+pub fn weighted_average(buffers: &[Vec<f32>], weights: &[f32]) -> Vec<f32> {
+    assert_eq!(buffers.len(), weights.len());
+    assert!(!buffers.is_empty());
+    let n = buffers[0].len();
+    let mut out = vec![0.0f32; n];
+    for (buf, &w) in buffers.iter().zip(weights) {
+        assert_eq!(buf.len(), n);
+        for (o, &v) in out.iter_mut().zip(buf) {
+            *o += w * v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checked() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        let z = HostTensor::zeros(vec![4, 4]);
+        assert_eq!(z.data.len(), 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_bad_shape_panics() {
+        let _ = HostTensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0, 9.0, 7.5];
+        let lit = literal_f32(&[2, 3], &data).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let data = vec![1i32, -7, 42];
+        let lit = literal_i32(&[3], &data).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn literal_roundtrip_u32() {
+        let data = vec![0u32, 4_000_000_000];
+        let lit = literal_u32(&[2], &data).unwrap();
+        assert_eq!(lit.to_vec::<u32>().unwrap(), data);
+    }
+
+    #[test]
+    fn spec_mismatch_rejected() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            dtype: DType::F32,
+            shape: vec![2, 2],
+        };
+        assert!(literal_for_spec(&spec, &[1.0; 3]).is_err());
+        assert!(literal_for_spec(&spec, &[1.0; 4]).is_ok());
+        let ispec = TensorSpec {
+            name: "y".into(),
+            dtype: DType::I32,
+            shape: vec![1],
+        };
+        assert!(literal_for_spec(&ispec, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn weighted_average_math() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 6.0];
+        let avg = weighted_average(&[a, b], &[0.25, 0.75]);
+        assert_eq!(avg, vec![2.5, 5.0]);
+    }
+}

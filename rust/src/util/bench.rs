@@ -1,0 +1,188 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are built with `harness = false` and call
+//! [`Bencher::run`] per case: warmup, adaptive iteration-count calibration to
+//! a target measurement time, then batched timing with summary statistics.
+//! Results print as a table and can be appended to a log file for the
+//! EXPERIMENTS.md §Perf records.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::{summarize, Summary};
+use super::table::Table;
+
+/// One benchmark's measured result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Nanoseconds per iteration.
+    pub summary: Summary,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn ns_per_iter(&self) -> f64 {
+        self.summary.mean
+    }
+
+    /// Human units.
+    pub fn pretty_time(&self) -> String {
+        format_ns(self.summary.mean)
+    }
+}
+
+/// Format nanoseconds with adaptive units.
+pub fn format_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with fixed warmup / measurement budgets.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1500),
+            max_samples: 50,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile for slow end-to-end cases.
+    pub fn slow() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_millis(2000),
+            max_samples: 12,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one case. `f` returns a value that is black-boxed.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F)
+        -> &BenchResult {
+        // Warmup + calibration: how many iters fit in ~1/10 of measure?
+        let wstart = Instant::now();
+        let mut calib_iters = 0u64;
+        while wstart.elapsed() < self.warmup {
+            black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter =
+            self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        let target_sample_ns =
+            self.measure.as_nanos() as f64 / self.max_samples as f64;
+        let iters_per_sample =
+            ((target_sample_ns / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.max_samples);
+        let mstart = Instant::now();
+        while mstart.elapsed() < self.measure && samples.len() < self.max_samples
+        {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            samples.push(dt / iters_per_sample as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            summary: summarize(&samples),
+            iters_per_sample,
+            samples: samples.len(),
+        };
+        println!(
+            "bench {:<44} {:>12}/iter  (p50 {:>12}, n={})",
+            res.name,
+            res.pretty_time(),
+            format_ns(res.summary.p50),
+            res.samples
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Render all results as a table.
+    pub fn report(&self) -> String {
+        let mut t = Table::new("benchmark results")
+            .header(&["name", "mean", "p50", "p90", "min", "samples"]);
+        for r in &self.results {
+            t.row(&[
+                r.name.clone(),
+                format_ns(r.summary.mean),
+                format_ns(r.summary.p50),
+                format_ns(r.summary.p90),
+                format_ns(r.summary.min),
+                r.samples.to_string(),
+            ]);
+        }
+        t.render()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_cheap_op() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(10),
+            measure: Duration::from_millis(50),
+            max_samples: 10,
+            results: Vec::new(),
+        };
+        let r = b.run("add", || black_box(1u64) + black_box(2u64));
+        assert!(r.summary.mean > 0.0);
+        assert!(r.summary.mean < 1e6, "1 add should be << 1ms");
+    }
+
+    #[test]
+    fn report_contains_names() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            max_samples: 5,
+            results: Vec::new(),
+        };
+        b.run("case_a", || 1 + 1);
+        b.run("case_b", || 2 + 2);
+        let rep = b.report();
+        assert!(rep.contains("case_a") && rep.contains("case_b"));
+    }
+
+    #[test]
+    fn format_units() {
+        assert!(format_ns(5.0).contains("ns"));
+        assert!(format_ns(5e4).contains("µs"));
+        assert!(format_ns(5e7).contains("ms"));
+        assert!(format_ns(5e9).contains(" s"));
+    }
+}

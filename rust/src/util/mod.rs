@@ -1,0 +1,19 @@
+//! From-scratch substrates for the offline build environment.
+//!
+//! The vendored registry only ships the `xla` crate's dependency closure, so
+//! the usual ecosystem crates (rand, serde, criterion, proptest, clap…) are
+//! unavailable. Everything the system needs is implemented here:
+//!
+//! - [`rng`] — splitmix64 / xoshiro256** PRNG with distributions
+//! - [`stats`] — descriptive statistics and simple fits
+//! - [`json`] — minimal JSON writer *and* parser (for the artifact manifest)
+//! - [`table`] — ASCII tables and terminal line/bar plots for figures
+//! - [`bench`] — micro-benchmark harness behind `cargo bench`
+//! - [`prop`] — property-based testing mini-framework
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

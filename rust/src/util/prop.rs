@@ -1,0 +1,167 @@
+//! Property-based testing mini-framework (proptest is unavailable offline).
+//!
+//! A [`Gen`] wraps the crate PRNG with sized generators; [`check`] runs a
+//! property over many random cases and, on failure, reports the seed so the
+//! case replays deterministically. Shrinking is intentionally out of scope —
+//! failures print the generating seed, which is enough to reproduce and
+//! debug in a deterministic system.
+//!
+//! ```
+//! use epsl::util::prop::{check, Gen};
+//! check("sum is commutative", 200, |g: &mut Gen| {
+//!     let a = g.f64_in(-1e6, 1e6);
+//!     let b = g.f64_in(-1e6, 1e6);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Random-case generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint: grows over the run so later cases are larger.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen { rng: Rng::new(seed), size }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_incl: usize) -> usize {
+        self.rng.range(lo, hi_incl + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Positive f64 log-uniform across several orders of magnitude.
+    pub fn f64_log(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (self.rng.uniform(lo.ln(), hi.ln())).exp()
+    }
+
+    /// A vector of length in [1, max_len] of values from `f`.
+    pub fn vec_of<T>(&mut self, max_len: usize,
+                     mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_in(1, max_len.max(1));
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Simplex vector (non-negative, sums to 1) — dataset weights λ.
+    pub fn simplex(&mut self, n: usize) -> Vec<f64> {
+        let mut v: Vec<f64> =
+            (0..n).map(|_| self.rng.uniform(0.01, 1.0)).collect();
+        let s: f64 = v.iter().sum();
+        for x in &mut v {
+            *x /= s;
+        }
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (with the replay seed) if any
+/// case panics. The base seed is derived from the property name so distinct
+/// properties explore distinct streams but remain reproducible run-to-run.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base = name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+    });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let size = 2 + case * 30 / cases.max(1);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, size);
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (replay seed \
+                 {seed:#x}, size {size}):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Replay one failing case by seed (debugging helper).
+pub fn replay(seed: u64, size: usize, mut prop: impl FnMut(&mut Gen)) {
+    let mut g = Gen::new(seed, size);
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("assoc", 100, |g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn simplex_sums_to_one() {
+        check("simplex", 100, |g| {
+            let n = g.usize_in(1, 20);
+            let v = g.simplex(n);
+            let s: f64 = v.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(v.iter().all(|&x| x > 0.0));
+        });
+    }
+
+    #[test]
+    fn f64_log_spans_orders() {
+        let mut g = Gen::new(1, 10);
+        let mut small = false;
+        let mut large = false;
+        for _ in 0..1000 {
+            let x = g.f64_log(1e-3, 1e3);
+            assert!((1e-3..=1e3).contains(&x));
+            small |= x < 1e-1;
+            large |= x > 1e1;
+        }
+        assert!(small && large);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut v1 = 0;
+        replay(42, 5, |g| v1 = g.usize_in(0, 1000));
+        let mut v2 = 0;
+        replay(42, 5, |g| v2 = g.usize_in(0, 1000));
+        assert_eq!(v1, v2);
+    }
+}

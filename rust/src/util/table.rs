@@ -1,0 +1,286 @@
+//! ASCII tables, line plots, and bar charts for terminal figure rendering.
+//!
+//! Every `repro figures --id …` invocation emits both a CSV (machine) and an
+//! ASCII rendering (human) built with these helpers, so the paper's figures
+//! can be eyeballed straight from the terminal.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned ASCII table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Table { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn header<S: ToString>(mut self, cols: &[S]) -> Self {
+        self.header = cols.iter().map(|c| c.to_string()).collect();
+        self
+    }
+
+    pub fn row<S: ToString>(&mut self, cols: &[S]) -> &mut Self {
+        self.rows.push(cols.iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    /// Row from f64s with fixed precision.
+    pub fn row_f64(&mut self, label: &str, vals: &[f64], prec: usize) {
+        let mut r = vec![label.to_string()];
+        for v in vals {
+            r.push(format!("{v:.prec$}"));
+        }
+        self.rows.push(r);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .rows
+            .iter()
+            .map(|r| r.len())
+            .chain(std::iter::once(self.header.len()))
+            .max()
+            .unwrap_or(0);
+        let mut widths = vec![0usize; ncols];
+        for r in std::iter::once(&self.header).chain(self.rows.iter()) {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let line = |out: &mut String| {
+            for w in &widths {
+                out.push('+');
+                out.push_str(&"-".repeat(w + 2));
+            }
+            out.push_str("+\n");
+        };
+        let emit = |out: &mut String, row: &[String]| {
+            for (i, w) in widths.iter().enumerate() {
+                let cell = row.get(i).map(String::as_str).unwrap_or("");
+                let _ = write!(out, "| {cell:w$} ");
+            }
+            out.push_str("|\n");
+        };
+        line(&mut out);
+        if !self.header.is_empty() {
+            emit(&mut out, &self.header);
+            line(&mut out);
+        }
+        for r in &self.rows {
+            emit(&mut out, r);
+        }
+        line(&mut out);
+        out
+    }
+
+    /// CSV rendering (header + rows).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        if !self.header.is_empty() {
+            let _ = writeln!(
+                out,
+                "{}",
+                self.header.iter().map(|c| esc(c)).collect::<Vec<_>>()
+                    .join(",")
+            );
+        }
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+}
+
+/// Multi-series ASCII line plot on a character grid.
+pub struct LinePlot {
+    title: String,
+    xlabel: String,
+    ylabel: String,
+    width: usize,
+    height: usize,
+    series: Vec<(String, Vec<(f64, f64)>)>,
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+impl LinePlot {
+    pub fn new(title: &str, xlabel: &str, ylabel: &str) -> Self {
+        LinePlot {
+            title: title.to_string(),
+            xlabel: xlabel.to_string(),
+            ylabel: ylabel.to_string(),
+            width: 72,
+            height: 20,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn series(&mut self, name: &str, pts: &[(f64, f64)]) -> &mut Self {
+        self.series.push((name.to_string(), pts.to_vec()));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let all: Vec<(f64, f64)> =
+            self.series.iter().flat_map(|(_, p)| p.iter().cloned()).collect();
+        if all.is_empty() {
+            return format!("== {} == (no data)\n", self.title);
+        }
+        let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &all {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+        if (xmax - xmin).abs() < 1e-12 {
+            xmax = xmin + 1.0;
+        }
+        if (ymax - ymin).abs() < 1e-12 {
+            ymax = ymin + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (si, (_, pts)) in self.series.iter().enumerate() {
+            let mark = MARKS[si % MARKS.len()];
+            for &(x, y) in pts {
+                let cx = ((x - xmin) / (xmax - xmin)
+                    * (self.width - 1) as f64)
+                    .round() as usize;
+                let cy = ((y - ymin) / (ymax - ymin)
+                    * (self.height - 1) as f64)
+                    .round() as usize;
+                let row = self.height - 1 - cy.min(self.height - 1);
+                grid[row][cx.min(self.width - 1)] = mark;
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==  [y: {}]", self.title, self.ylabel);
+        for (i, row) in grid.iter().enumerate() {
+            let yv = ymax
+                - (ymax - ymin) * i as f64 / (self.height - 1) as f64;
+            let _ = writeln!(
+                out,
+                "{yv:>10.3} |{}",
+                row.iter().collect::<String>()
+            );
+        }
+        let _ = writeln!(
+            out,
+            "{:>10} +{}",
+            "",
+            "-".repeat(self.width)
+        );
+        let _ = writeln!(
+            out,
+            "{:>12}{:<.3}  ..  {:.3}  [x: {}]",
+            "", xmin, xmax, self.xlabel
+        );
+        for (si, (name, _)) in self.series.iter().enumerate() {
+            let _ = writeln!(out, "    {} {}", MARKS[si % MARKS.len()], name);
+        }
+        out
+    }
+}
+
+/// Horizontal ASCII bar chart (used for Fig. 4b latency bars).
+pub fn bar_chart(title: &str, items: &[(String, f64)], unit: &str) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    let maxv = items.iter().map(|(_, v)| *v).fold(0.0_f64, f64::max);
+    let maxw = items.iter().map(|(n, _)| n.chars().count()).max().unwrap_or(0);
+    for (name, v) in items {
+        let bars = if maxv > 0.0 {
+            ((v / maxv) * 46.0).round() as usize
+        } else {
+            0
+        };
+        let _ = writeln!(
+            out,
+            "{name:>maxw$} | {} {v:.3} {unit}",
+            "#".repeat(bars)
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo").header(&["name", "v1", "v2"]);
+        t.row(&["alpha", "1", "2"]);
+        t.row_f64("beta", &[1.23456, 7.0], 2);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("alpha"));
+        assert!(s.contains("1.23"));
+        // every data line same width
+        let lines: Vec<&str> =
+            s.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("x").header(&["a", "b"]);
+        t.row(&["hello, world", "2"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"hello, world\""));
+    }
+
+    #[test]
+    fn lineplot_renders_marks() {
+        let mut p = LinePlot::new("t", "x", "y");
+        p.series("s1", &[(0.0, 0.0), (1.0, 1.0)]);
+        p.series("s2", &[(0.0, 1.0), (1.0, 0.0)]);
+        let s = p.render();
+        assert!(s.contains('*'));
+        assert!(s.contains('o'));
+        assert!(s.contains("s1"));
+    }
+
+    #[test]
+    fn lineplot_empty_ok() {
+        let p = LinePlot::new("t", "x", "y");
+        assert!(p.render().contains("no data"));
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart(
+            "lat",
+            &[("EPSL".into(), 1.0), ("PSL".into(), 2.0)],
+            "s",
+        );
+        assert!(s.contains("EPSL"));
+        let epsl_bars =
+            s.lines().find(|l| l.contains("EPSL")).unwrap().matches('#').count();
+        let psl_bars =
+            s.lines().find(|l| l.contains("PSL") && !l.contains("EPSL"))
+                .unwrap().matches('#').count();
+        assert!(psl_bars > epsl_bars);
+    }
+}

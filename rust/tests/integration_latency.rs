@@ -1,0 +1,145 @@
+//! Cross-module integration: channel → rates → latency model, and the
+//! paper-shape invariants of the framework latency ordering.
+
+use epsl::channel::rate::{broadcast_rate, downlink_rates, uplink_rates,
+                          Allocation};
+use epsl::channel::{ChannelRealization, Deployment};
+use epsl::config::NetworkConfig;
+use epsl::latency::frameworks::{round_latency, Framework};
+use epsl::latency::LatencyInputs;
+use epsl::profile::resnet18;
+use epsl::util::prop::check;
+use epsl::util::rng::Rng;
+
+fn round_robin(cfg: &NetworkConfig) -> Allocation {
+    let mut alloc = Allocation::empty(cfg.n_subchannels);
+    for k in 0..cfg.n_subchannels {
+        alloc.assign(k, k % cfg.n_clients);
+    }
+    alloc
+}
+
+/// Build latency inputs straight from a simulated deployment.
+fn latency_of(cfg: &NetworkConfig, fw: Framework, cut: usize, seed: u64)
+    -> f64 {
+    let profile = resnet18::profile();
+    let mut rng = Rng::new(seed);
+    let dep = Deployment::generate(cfg, &mut rng);
+    let ch = ChannelRealization::average(&dep);
+    let alloc = round_robin(cfg);
+    let psd = vec![-62.0; cfg.n_subchannels];
+    let up = uplink_rates(cfg, &ch, &alloc, &psd);
+    let dn = downlink_rates(cfg, &ch, &alloc);
+    let bc = broadcast_rate(cfg, &ch);
+    let f = dep.f_clients();
+    let inp = LatencyInputs {
+        profile: &profile,
+        cut,
+        batch: 64,
+        phi: 0.5,
+        f_server: cfg.f_server,
+        kappa_server: cfg.kappa_server,
+        kappa_client: cfg.kappa_client,
+        f_clients: &f,
+        uplink: &up,
+        downlink: &dn,
+        broadcast: bc,
+    };
+    round_latency(fw, &inp).round_total()
+}
+
+#[test]
+fn paper_ordering_holds_across_deployments() {
+    // Fig. 4b / Fig. 9 ordering: EPSL < PSL <= SFL < vanilla, across many
+    // random deployments and cut layers.
+    check("framework ordering", 25, |g| {
+        let mut cfg = NetworkConfig::default();
+        cfg.n_clients = g.usize_in(2, 8);
+        cfg.n_subchannels = cfg.n_clients * g.usize_in(1, 4);
+        let cut = g.usize_in(1, 17);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let epsl = latency_of(&cfg, Framework::Epsl { phi: 0.5 }, cut, seed);
+        let psl = latency_of(&cfg, Framework::Psl, cut, seed);
+        let sfl = latency_of(&cfg, Framework::Sfl, cut, seed);
+        let vsl = latency_of(&cfg, Framework::VanillaSl, cut, seed);
+        assert!(epsl < psl, "EPSL {epsl} !< PSL {psl} (cut {cut})");
+        assert!(psl < sfl, "PSL {psl} !< SFL {sfl} (cut {cut})");
+        assert!(psl < vsl, "PSL {psl} !< vanilla {vsl} (cut {cut})");
+        // SFL < vanilla holds at practically-chosen cuts; at very deep cuts
+        // the client model is nearly the whole network and SFL's model
+        // exchange can exceed vanilla's relay (both are then far from the
+        // optimum anyway — the optimizer never picks those cuts).
+        if cut <= 12 {
+            assert!(sfl < vsl, "SFL {sfl} !< vanilla {vsl} (cut {cut})");
+        }
+    });
+}
+
+#[test]
+fn epsl_gap_grows_with_clients() {
+    // The paper: EPSL's advantage over PSL widens as C grows (server BP
+    // and unicast savings scale with C).
+    let mut gaps = Vec::new();
+    for c in [2usize, 5, 10, 15] {
+        let mut cfg = NetworkConfig::default();
+        cfg.n_clients = c;
+        cfg.n_subchannels = c * 4;
+        let epsl = latency_of(&cfg, Framework::Epsl { phi: 1.0 }, 4, 7);
+        let psl = latency_of(&cfg, Framework::Psl, 4, 7);
+        gaps.push(psl - epsl);
+    }
+    for w in gaps.windows(2) {
+        assert!(w[1] > w[0] * 0.99, "gap shrank: {gaps:?}");
+    }
+}
+
+#[test]
+fn more_bandwidth_never_hurts() {
+    check("bandwidth monotone", 15, |g| {
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let cut = g.usize_in(1, 17);
+        let mut last = f64::INFINITY;
+        for mhz in [100.0, 200.0, 300.0] {
+            let cfg = NetworkConfig::default()
+                .with_total_bandwidth(mhz * 1e6);
+            let t = latency_of(&cfg, Framework::Epsl { phi: 0.5 }, cut, seed);
+            assert!(
+                t <= last * (1.0 + 1e-9),
+                "latency rose with bandwidth at {mhz} MHz"
+            );
+            last = t;
+        }
+    });
+}
+
+#[test]
+fn faster_server_never_hurts() {
+    check("server compute monotone", 15, |g| {
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let cut = g.usize_in(1, 17);
+        let mut last = f64::INFINITY;
+        for ghz in [1.0, 3.0, 5.0, 9.0] {
+            let mut cfg = NetworkConfig::default();
+            cfg.f_server = ghz * 1e9;
+            let t = latency_of(&cfg, Framework::Epsl { phi: 0.5 }, cut, seed);
+            assert!(t <= last * (1.0 + 1e-9));
+            last = t;
+        }
+    });
+}
+
+#[test]
+fn deeper_cut_shifts_work_to_clients() {
+    // Monotone structure check across all cut candidates.
+    let profile = resnet18::profile();
+    let mut prev_client = 0.0;
+    let mut prev_server = f64::INFINITY;
+    for &j in &profile.cut_candidates {
+        let c = profile.client_fp_flops(j);
+        let s = profile.server_fp_flops(j);
+        assert!(c >= prev_client);
+        assert!(s <= prev_server);
+        prev_client = c;
+        prev_server = s;
+    }
+}

@@ -1,0 +1,176 @@
+//! Cross-module integration for the resource-management stack:
+//! BCD vs baselines, paper-shape claims of Figs. 11–12, feasibility under
+//! stress, and solver cross-validation.
+
+use epsl::channel::{ChannelRealization, Deployment};
+use epsl::config::{dbm_to_w, NetworkConfig};
+use epsl::optim::baselines::{self, Scheme};
+use epsl::optim::{bcd, cutlayer, greedy, power, Problem};
+use epsl::profile::resnet18;
+use epsl::util::prop::check;
+use epsl::util::rng::Rng;
+use epsl::util::stats::mean;
+
+fn avg_scheme_latency(cfg: &NetworkConfig, scheme: Scheme, seeds: u64)
+    -> f64 {
+    let profile = resnet18::profile();
+    let mut vals = Vec::new();
+    for s in 0..seeds {
+        let mut rng = Rng::new(100 + s);
+        let dep = Deployment::generate(cfg, &mut rng);
+        let ch = ChannelRealization::average(&dep);
+        let prob = Problem {
+            cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let mut srng = Rng::new(1000 + s);
+        if let Ok(d) = baselines::solve(&prob, scheme, &mut srng) {
+            vals.push(prob.objective(&d));
+        }
+    }
+    mean(&vals)
+}
+
+#[test]
+fn fig11_shape_proposed_best_baseline_a_worst() {
+    let cfg = NetworkConfig::default();
+    let a = avg_scheme_latency(&cfg, Scheme::BaselineA, 6);
+    let b = avg_scheme_latency(&cfg, Scheme::BaselineB, 6);
+    let c = avg_scheme_latency(&cfg, Scheme::BaselineC, 6);
+    let d = avg_scheme_latency(&cfg, Scheme::BaselineD, 6);
+    let p = avg_scheme_latency(&cfg, Scheme::Proposed, 6);
+    assert!(p <= d * 1.01, "proposed {p} !<= d {d}");
+    assert!(d < b, "cut-opt d {d} !< random-cut b {b}");
+    assert!(c < a, "cut-opt c {c} !< random-cut a {a}");
+    assert!(p < a * 0.8, "proposed {p} not well below baseline a {a}");
+}
+
+#[test]
+fn fig12_gap_vs_server_compute() {
+    // Paper Fig. 12: "with a more powerful server, the performance
+    // improvements brought by power control and subchannel allocation
+    // grow" — when the server stops being the bottleneck, the round is
+    // comm-dominated and the power-control margin (baseline d = uniform
+    // power vs proposed) widens.
+    let mut ratios = Vec::new();
+    for ghz in [1.0, 9.0] {
+        let mut cfg = NetworkConfig::default();
+        cfg.f_server = ghz * 1e9;
+        let d = avg_scheme_latency(&cfg, Scheme::BaselineD, 6);
+        let p = avg_scheme_latency(&cfg, Scheme::Proposed, 6);
+        ratios.push(d / p);
+    }
+    assert!(
+        ratios[1] >= ratios[0] * 0.999,
+        "power-control gain should grow with server compute: {ratios:?}"
+    );
+}
+
+#[test]
+fn bcd_follows_bandwidth_trend() {
+    let mut last = f64::INFINITY;
+    for mhz in [100.0, 200.0, 300.0] {
+        let cfg =
+            NetworkConfig::default().with_total_bandwidth(mhz * 1e6);
+        let t = avg_scheme_latency(&cfg, Scheme::Proposed, 4);
+        assert!(t <= last * 1.02, "latency rose with bandwidth: {t} @ {mhz}");
+        last = t;
+    }
+}
+
+#[test]
+fn stress_feasibility_tight_power_budget() {
+    // Slash the power budgets; every scheme must stay feasible.
+    let mut cfg = NetworkConfig::default();
+    cfg.p_max_dbm = 15.0; // ~32 mW per device
+    cfg.p_th_dbm = 18.0;
+    let profile = resnet18::profile();
+    let mut rng = Rng::new(3);
+    let dep = Deployment::generate(&cfg, &mut rng);
+    let ch = ChannelRealization::average(&dep);
+    let prob = Problem {
+        cfg: &cfg,
+        profile: &profile,
+        dep: &dep,
+        ch: &ch,
+        batch: 64,
+        phi: 0.5,
+    };
+    for scheme in Scheme::all() {
+        let mut srng = Rng::new(5);
+        let d = baselines::solve(&prob, scheme, &mut srng)
+            .unwrap_or_else(|e| panic!("{}: {e}", scheme.name()));
+        prob.check_feasible(&d)
+            .unwrap_or_else(|e| panic!("{}: {e}", scheme.name()));
+        // C6 must really bind below the threshold.
+        assert!(prob.total_power_w(&d) <= dbm_to_w(cfg.p_th_dbm) * 1.01);
+    }
+}
+
+#[test]
+fn power_then_cut_consistency() {
+    // After BCD converges, neither P2 nor P3 alone can improve by > tol:
+    // a genuine block-coordinate fixed point.
+    let cfg = NetworkConfig::default();
+    let profile = resnet18::profile();
+    let mut rng = Rng::new(17);
+    let dep = Deployment::generate(&cfg, &mut rng);
+    let ch = ChannelRealization::average(&dep);
+    let prob = Problem {
+        cfg: &cfg,
+        profile: &profile,
+        dep: &dep,
+        ch: &ch,
+        batch: 64,
+        phi: 0.5,
+    };
+    let res = bcd::solve(&prob, bcd::BcdOptions::default()).unwrap();
+    let d = res.decision;
+    // P3 can't improve:
+    let (best_cut, _) = cutlayer::solve(&prob, &d.alloc, &d.psd_dbm_hz).unwrap();
+    let mut d_cut = d.clone();
+    d_cut.cut = best_cut;
+    assert!(prob.objective(&d_cut) >= res.objective - 1e-6);
+    // P2 can't improve:
+    if let Ok(sol) = power::solve(&prob, &d.alloc, d.cut) {
+        let mut d_pow = d.clone();
+        d_pow.psd_dbm_hz = sol.psd_dbm_hz;
+        assert!(prob.objective(&d_pow) >= res.objective - 1e-6);
+    }
+}
+
+#[test]
+fn property_greedy_power_pipeline_feasible() {
+    check("greedy→power pipeline", 12, |g| {
+        let mut cfg = NetworkConfig::default();
+        cfg.n_clients = g.usize_in(2, 8);
+        cfg.n_subchannels = cfg.n_clients + g.usize_in(0, 14);
+        cfg.f_server = g.f64_in(1e9, 9e9);
+        let profile = resnet18::profile();
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let dep = Deployment::generate(&cfg, &mut rng);
+        let ch = ChannelRealization::average(&dep);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: g.f64_in(0.0, 1.0),
+        };
+        let cut = g.usize_in(1, 17);
+        let alloc = greedy::allocate(&prob, &vec![-65.0; cfg.n_subchannels], cut);
+        let sol = power::solve(&prob, &alloc, cut).unwrap();
+        let d = epsl::optim::Decision {
+            alloc,
+            psd_dbm_hz: sol.psd_dbm_hz,
+            cut,
+        };
+        prob.check_feasible(&d).unwrap();
+        assert!(prob.objective(&d).is_finite());
+    });
+}

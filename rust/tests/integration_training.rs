@@ -1,0 +1,154 @@
+//! End-to-end training integration over the real PJRT runtime.
+//!
+//! These tests need `make artifacts`; they skip (with a note) otherwise so
+//! `cargo test` stays runnable on a fresh checkout.
+
+use epsl::config::Config;
+use epsl::coordinator::{train, TrainerOptions};
+use epsl::latency::frameworks::Framework;
+use epsl::metrics::RunMetrics;
+use epsl::runtime::artifact::Manifest;
+use epsl::runtime::Runtime;
+
+fn setup() -> Option<(Runtime, Manifest, Config)> {
+    let m = Manifest::load("artifacts").ok()?;
+    let rt = Runtime::new("artifacts").ok()?;
+    Some((rt, m, Config::new()))
+}
+
+fn short_opts(fw: Framework, rounds: usize) -> TrainerOptions {
+    TrainerOptions {
+        framework: fw,
+        n_clients: 2,
+        rounds,
+        eval_every: rounds,
+        dataset_size: 600,
+        test_size: 256,
+        eta_c: 0.1,
+        eta_s: 0.1,
+        seed: 99,
+        ..Default::default()
+    }
+}
+
+fn run(rt: &Runtime, m: &Manifest, cfg: &Config, opts: &TrainerOptions)
+    -> RunMetrics {
+    train(rt, m, cfg, opts).expect("training failed")
+}
+
+#[test]
+fn epsl_loss_decreases_over_training() {
+    let Some((rt, m, cfg)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let r = run(&rt, &m, &cfg, &short_opts(Framework::Epsl { phi: 0.5 }, 40));
+    let early = epsl::util::stats::mean(
+        &r.rounds[..8].iter().map(|x| x.loss).collect::<Vec<_>>(),
+    );
+    let late = epsl::util::stats::mean(
+        &r.rounds[32..].iter().map(|x| x.loss).collect::<Vec<_>>(),
+    );
+    assert!(late < early, "loss did not decrease: {early} -> {late}");
+}
+
+#[test]
+fn epsl_phi0_bitwise_matches_psl_run() {
+    // PSL is EPSL(φ=0) — with the same seed, the two drivers must produce
+    // the exact same loss trajectory end-to-end through PJRT. This is the
+    // strongest cross-layer determinism + semantics check in the system.
+    let Some((rt, m, cfg)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let a = run(&rt, &m, &cfg, &short_opts(Framework::Psl, 10));
+    let b = run(&rt, &m, &cfg, &short_opts(Framework::Epsl { phi: 0.0 }, 10));
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(ra.loss, rb.loss, "round {} diverged", ra.round);
+        assert_eq!(ra.train_acc, rb.train_acc);
+    }
+}
+
+#[test]
+fn same_seed_same_run() {
+    let Some((rt, m, cfg)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let opts = short_opts(Framework::Epsl { phi: 0.5 }, 6);
+    let a = run(&rt, &m, &cfg, &opts);
+    let b = run(&rt, &m, &cfg, &opts);
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(ra.loss, rb.loss);
+    }
+}
+
+#[test]
+fn different_phi_different_dynamics() {
+    let Some((rt, m, cfg)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let a = run(&rt, &m, &cfg, &short_opts(Framework::Epsl { phi: 0.0 }, 6));
+    let b = run(&rt, &m, &cfg, &short_opts(Framework::Epsl { phi: 1.0 }, 6));
+    // φ changes the BP path, so trajectories must differ after round 0
+    // (losses at round 0 agree: the FP path is identical).
+    assert!((a.rounds[0].loss - b.rounds[0].loss).abs() < 1e-5);
+    assert!(
+        a.rounds[5].loss != b.rounds[5].loss,
+        "phi had no effect on training"
+    );
+}
+
+#[test]
+fn non_iid_trains_and_is_harder() {
+    let Some((rt, m, cfg)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut iid_opts = short_opts(Framework::Epsl { phi: 0.5 }, 30);
+    iid_opts.eval_every = 10;
+    let mut niid_opts = iid_opts.clone();
+    niid_opts.iid = false;
+    let iid = run(&rt, &m, &cfg, &iid_opts);
+    let niid = run(&rt, &m, &cfg, &niid_opts);
+    assert!(iid.rounds.iter().all(|r| r.loss.is_finite()));
+    assert!(niid.rounds.iter().all(|r| r.loss.is_finite()));
+    // Paper Fig. 7b/8b: non-IID converges more slowly. With only 30 rounds
+    // just require it not be dramatically better.
+    let acc_iid = iid.converged_accuracy(2);
+    let acc_niid = niid.converged_accuracy(2);
+    assert!(
+        acc_niid <= acc_iid + 0.15,
+        "non-IID unexpectedly easier: {acc_niid} vs {acc_iid}"
+    );
+}
+
+#[test]
+fn epsl_pt_switches_phase() {
+    let Some((rt, m, cfg)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut opts = short_opts(Framework::EpslPt { early: true }, 8);
+    opts.pt_switch = 4;
+    let r = run(&rt, &m, &cfg, &opts);
+    // φ=1 rounds broadcast everything: unicast time 0 → lower sim latency
+    // in the early phase than the φ=0 phase.
+    assert!(
+        r.rounds[0].sim_latency < r.rounds[7].sim_latency,
+        "PT early phase should be faster per round: {} vs {}",
+        r.rounds[0].sim_latency,
+        r.rounds[7].sim_latency
+    );
+}
+
+#[test]
+fn wall_clock_recorded() {
+    let Some((rt, m, cfg)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let r = run(&rt, &m, &cfg, &short_opts(Framework::Psl, 3));
+    assert!(r.rounds.iter().all(|x| x.wall_ms > 0.0));
+}
