@@ -19,7 +19,8 @@ fn main() {
     }
     let psd = vec![-62.0; cfg.n_subchannels];
 
-    let mut b = Bencher::new();
+    let smoke = std::env::args().any(|a| a == "--test");
+    let mut b = if smoke { Bencher::smoke() } else { Bencher::new() };
     let mut rng2 = Rng::new(2);
     b.run("deployment_generate (C=5, M=20)", || {
         Deployment::generate(&cfg, &mut rng2)

@@ -12,13 +12,18 @@ use epsl::runtime::Runtime;
 use epsl::util::bench::Bencher;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
     let cfg = Config::new();
-    let mut b = Bencher::slow();
+    let mut b = if smoke { Bencher::smoke() } else { Bencher::slow() };
 
     // Pure latency-model figures (no artifacts needed). fig12/fig13 share
     // fig11's machinery (scheme sweep / BCD loop) and take minutes per
-    // iteration — fig11 is the representative timing.
-    for id in ["table1", "table4", "fig11"] {
+    // iteration — fig11 is the representative timing. The sweep grids fan
+    // across cores (EPSL_THREADS=1 to time the serial path); smoke mode
+    // sticks to the cheap table generators.
+    let figure_ids: &[&str] =
+        if smoke { &["table1", "table4"] } else { &["table1", "table4", "fig11"] };
+    for &id in figure_ids {
         b.run(&format!("figure {id} (quick)"), || {
             let mut ctx =
                 Ctx::new(Config::new(), None, None, "/tmp/epsl_bench", true);

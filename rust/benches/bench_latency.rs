@@ -27,7 +27,8 @@ fn main() {
         broadcast: 2e8,
     };
 
-    let mut b = Bencher::new();
+    let smoke = std::env::args().any(|a| a == "--test");
+    let mut b = if smoke { Bencher::smoke() } else { Bencher::new() };
     let inp18 = mk(&p18, 10);
     let inpsn = mk(&psn, 2);
     b.run("epsl_stages resnet18 (18 layers)", || {

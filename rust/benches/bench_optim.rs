@@ -2,16 +2,29 @@
 //!
 //! Paper-relevant targets: the BCD solver must be negligible next to a
 //! training round (it runs once per deployment); per-block costs are
-//! broken out so §Perf can attribute regressions.
+//! broken out so §Perf can attribute regressions. Every stage that gained
+//! an `optim::eval` fast path is benchmarked in reference/fast pairs, and
+//! the speedup table at the end is the PR's acceptance artifact (target:
+//! ≥5× on the BCD solve).
+//!
+//! `cargo bench --bench bench_optim -- --test` runs a smoke pass;
+//! `BENCH_JSON=BENCH_1.json cargo bench --bench bench_optim` records the
+//! results for the perf trajectory (see PERF.md).
+
+use std::collections::BTreeMap;
 
 use epsl::channel::{ChannelRealization, Deployment};
 use epsl::config::NetworkConfig;
-use epsl::optim::{baselines, bcd, cutlayer, greedy, power, Problem};
+use epsl::util::json::Json;
+use epsl::optim::eval::Evaluator;
+use epsl::optim::{baselines, bcd, cutlayer, greedy, power, Decision,
+                  Problem};
 use epsl::profile::resnet18;
 use epsl::util::bench::Bencher;
 use epsl::util::rng::Rng;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
     let cfg = NetworkConfig::default();
     let profile = resnet18::profile();
     let mut rng = Rng::new(42);
@@ -27,21 +40,38 @@ fn main() {
     };
     let psd = vec![-65.0; cfg.n_subchannels];
     let alloc = greedy::allocate(&prob, &psd, 4);
+    let mut ev = Evaluator::new(&prob);
+    let d = Decision { alloc: alloc.clone(), psd_dbm_hz: psd.clone(), cut: 4 };
 
-    let mut b = Bencher::new();
-    b.run("greedy_allocation (Alg 2)", || {
-        greedy::allocate(&prob, &psd, 4)
+    let mut b = if smoke { Bencher::smoke() } else { Bencher::new() };
+    b.run("evaluator_build (C=5, M=20)", || Evaluator::new(&prob));
+    b.run("objective_eval reference (eq 23)", || prob.objective(&d));
+    b.run("objective_eval evaluator", || ev.objective(&d));
+    b.run("greedy_allocation reference (Alg 2)", || {
+        greedy::allocate_reference(&prob, &psd, 4)
+    });
+    b.run("greedy_allocation evaluator (Alg 2)", || {
+        greedy::allocate_with(&prob, &ev, &psd, 4)
     });
     b.run("power_control (P2 waterfill+bisect)", || {
-        power::solve(&prob, &alloc, 4).unwrap()
+        power::solve_with(&prob, &ev, &alloc, 4).unwrap()
     });
-    b.run("cutlayer_milp (P3 B&B, 17 candidates)", || {
+    b.run("cutlayer_milp reference (P3 B&B)", || {
         cutlayer::solve(&prob, &alloc, &psd).unwrap()
     });
-    b.run("cutlayer_exhaustive (reference)", || {
+    b.run("cutlayer_milp evaluator (P3 B&B)", || {
+        cutlayer::solve_with(&prob, &ev, &alloc, &psd).unwrap()
+    });
+    b.run("cutlayer_exhaustive reference", || {
         cutlayer::exhaustive(&prob, &alloc, &psd)
     });
-    b.run("bcd_full (Alg 3)", || {
+    b.run("cutlayer_exhaustive evaluator", || {
+        cutlayer::exhaustive_with(&prob, &ev, &alloc, &psd)
+    });
+    b.run("bcd_reference (pre-PR pipeline, Alg 3)", || {
+        bcd::solve_reference(&prob, bcd::BcdOptions::default()).unwrap()
+    });
+    b.run("bcd_full evaluator (Alg 3)", || {
         bcd::solve(&prob, bcd::BcdOptions::default()).unwrap()
     });
     let mut srng = Rng::new(7);
@@ -49,13 +79,65 @@ fn main() {
         baselines::solve(&prob, baselines::Scheme::BaselineA, &mut srng)
             .unwrap()
     });
-    b.run("objective_eval (eq 23)", || {
-        let d = epsl::optim::Decision {
-            alloc: alloc.clone(),
-            psd_dbm_hz: psd.clone(),
-            cut: 4,
-        };
-        prob.objective(&d)
-    });
     println!("\n{}", b.report());
+
+    // Speedup attribution — reference vs evaluator pairs. The BCD row is
+    // the PR acceptance number (target ≥ 5×).
+    let pairs = [
+        ("objective_eval reference (eq 23)", "objective_eval evaluator"),
+        (
+            "greedy_allocation reference (Alg 2)",
+            "greedy_allocation evaluator (Alg 2)",
+        ),
+        (
+            "cutlayer_exhaustive reference",
+            "cutlayer_exhaustive evaluator",
+        ),
+        (
+            "cutlayer_milp reference (P3 B&B)",
+            "cutlayer_milp evaluator (P3 B&B)",
+        ),
+        (
+            "bcd_reference (pre-PR pipeline, Alg 3)",
+            "bcd_full evaluator (Alg 3)",
+        ),
+    ];
+    let ns_of = |name: &str| {
+        b.results()
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.ns_per_iter())
+    };
+    println!("speedups (reference / evaluator):");
+    for (slow, fast) in pairs {
+        if let (Some(s), Some(f)) = (ns_of(slow), ns_of(fast)) {
+            println!("  {:<44} {:>7.2}x", fast, s / f.max(1e-9));
+        }
+    }
+
+    // Optional perf-trajectory record (see PERF.md) through the crate's
+    // JSON writer (proper string escaping).
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let records: Vec<Json> = b
+            .results()
+            .iter()
+            .map(|r| {
+                let mut obj = BTreeMap::new();
+                obj.insert("name".to_string(), Json::Str(r.name.clone()));
+                obj.insert(
+                    "ns_per_iter".to_string(),
+                    Json::Num(r.summary.mean),
+                );
+                obj.insert("p50_ns".to_string(), Json::Num(r.summary.p50));
+                obj.insert(
+                    "samples".to_string(),
+                    Json::Num(r.samples as f64),
+                );
+                Json::Obj(obj)
+            })
+            .collect();
+        let doc = Json::Arr(records).to_string_pretty();
+        std::fs::write(&path, doc).expect("write BENCH_JSON");
+        println!("wrote {path}");
+    }
 }

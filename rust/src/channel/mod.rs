@@ -38,9 +38,19 @@ pub struct ClientLink {
 pub struct Deployment {
     pub clients: Vec<ClientLink>,
     pub subchannels: Vec<Subchannel>,
+    /// Cached per-client compute capabilities (kept in sync with `clients`;
+    /// call [`Deployment::refresh_f_clients`] after mutating them in place).
+    f_clients: Vec<f64>,
 }
 
 impl Deployment {
+    /// Assemble a deployment, building the `f_clients` cache.
+    pub fn new(clients: Vec<ClientLink>, subchannels: Vec<Subchannel>)
+        -> Deployment {
+        let f_clients = clients.iter().map(|c| c.f_client).collect();
+        Deployment { clients, subchannels, f_clients }
+    }
+
     /// Generate per the paper's simulation setup (§VII-A): clients uniform
     /// in the coverage disc, f_i uniform in the configured range, LoS drawn
     /// from the distance-dependent probability, contiguous subchannels from
@@ -64,7 +74,7 @@ impl Deployment {
                 bandwidth_hz: cfg.subchannel_bw_hz,
             })
             .collect();
-        Deployment { clients, subchannels }
+        Deployment::new(clients, subchannels)
     }
 
     pub fn n_clients(&self) -> usize {
@@ -82,9 +92,26 @@ impl Deployment {
         pathloss::mean_gain(s.center_freq_hz, c.distance_m, c.los)
     }
 
-    /// Client compute capabilities as a vector.
-    pub fn f_clients(&self) -> Vec<f64> {
-        self.clients.iter().map(|c| c.f_client).collect()
+    /// Client compute capabilities as a slice (no per-call allocation —
+    /// this sits on the optimizer's objective hot path).
+    pub fn f_clients(&self) -> &[f64] {
+        debug_assert!(
+            self.f_clients.len() == self.clients.len()
+                && self
+                    .f_clients
+                    .iter()
+                    .zip(&self.clients)
+                    .all(|(f, c)| *f == c.f_client),
+            "f_clients cache desynced — call refresh_f_clients() after \
+             mutating clients"
+        );
+        &self.f_clients
+    }
+
+    /// Re-sync the cached `f_clients` after mutating `clients` in place.
+    pub fn refresh_f_clients(&mut self) {
+        self.f_clients.clear();
+        self.f_clients.extend(self.clients.iter().map(|c| c.f_client));
     }
 }
 
@@ -205,17 +232,30 @@ mod tests {
     #[test]
     fn nearer_clients_have_higher_gain_on_average() {
         // construct two clients at fixed distances with LoS
-        let dep = Deployment {
-            clients: vec![
+        let dep = Deployment::new(
+            vec![
                 ClientLink { distance_m: 20.0, f_client: 1e9, los: true },
                 ClientLink { distance_m: 180.0, f_client: 1e9, los: true },
             ],
-            subchannels: vec![Subchannel {
+            vec![Subchannel {
                 index: 0,
                 center_freq_hz: 28e9,
                 bandwidth_hz: 10e6,
             }],
-        };
+        );
         assert!(dep.mean_gain(0, 0) > dep.mean_gain(1, 0));
+    }
+
+    #[test]
+    fn f_clients_cache_tracks_clients() {
+        let mut rng = Rng::new(8);
+        let mut dep = Deployment::generate(&cfg(), &mut rng);
+        let expect: Vec<f64> =
+            dep.clients.iter().map(|c| c.f_client).collect();
+        assert_eq!(dep.f_clients(), expect.as_slice());
+        dep.clients[1].f_client = 0.7e9;
+        dep.refresh_f_clients();
+        assert_eq!(dep.f_clients()[1], 0.7e9);
+        assert_eq!(dep.f_clients().len(), dep.n_clients());
     }
 }

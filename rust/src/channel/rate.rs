@@ -59,7 +59,9 @@ pub fn subchannel_rate(bandwidth_hz: f64, snr: f64) -> f64 {
 }
 
 /// Eq. (14): uplink rate of every client under allocation `alloc` with
-/// per-subchannel transmit PSDs `p_dbm_hz[k]`.
+/// per-subchannel transmit PSDs `p_dbm_hz[k]`. (The optimizer's
+/// allocation-free fast path lives in `optim::eval::Evaluator::fill_rates`,
+/// which mirrors this summation bit-for-bit.)
 pub fn uplink_rates(cfg: &NetworkConfig, ch: &ChannelRealization,
                     alloc: &Allocation, p_dbm_hz: &[f64]) -> Vec<f64> {
     let n_clients = ch.gain.len();

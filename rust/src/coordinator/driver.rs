@@ -107,9 +107,11 @@ struct SimLatency {
 
 impl SimLatency {
     fn round_seconds(&self, fw: Framework, phi: f64) -> f64 {
-        let profile = resnet18::profile();
+        // Cached profile: this runs once per training round, and the old
+        // per-call Table IV rebuild dominated the simulated-latency cost.
+        let profile = resnet18::profile_static();
         let inp = LatencyInputs {
-            profile: &profile,
+            profile,
             cut: self.cut,
             batch: self.batch,
             phi,
@@ -139,11 +141,11 @@ fn build_sim_latency(cfg: &Config, opts: &TrainerOptions, rng: &mut Rng)
     }
     let dep = Deployment::generate(&net, rng);
     let ch = ChannelRealization::average(&dep);
-    let profile = resnet18::profile();
+    let profile = resnet18::profile_static();
     let cut = resnet18_cut_for_splitnet(opts.cut);
     let prob = Problem {
         cfg: &net,
-        profile: &profile,
+        profile,
         dep: &dep,
         ch: &ch,
         batch: cfg.train.batch,
@@ -161,7 +163,7 @@ fn build_sim_latency(cfg: &Config, opts: &TrainerOptions, rng: &mut Rng)
     };
     let (up, dn, bc) = prob.rates(&decision);
     Ok(SimLatency {
-        f_clients: dep.f_clients(),
+        f_clients: dep.f_clients().to_vec(),
         uplink: up,
         downlink: dn,
         broadcast: bc,

@@ -6,67 +6,47 @@
 //! the paper's own latency numbers likewise come from the analytical model
 //! fed by Table IV; see EXPERIMENTS.md for the documented approximation
 //! (rounds-to-target measured at the anchor C, per-round latency swept).
+//!
+//! Every experiment grid here is *embarrassingly parallel*: each cell draws
+//! its own deployment from a cell-local seed and solves independently. The
+//! grids are therefore fanned across cores through [`super::sweep`] — the
+//! outputs are bit-identical to the serial path for any thread count
+//! (`EPSL_THREADS=1` forces serial).
 
 use crate::channel::{ChannelRealization, Deployment};
 use crate::error::Result;
-use crate::latency::frameworks::{round_latency, Framework};
-use crate::latency::LatencyInputs;
-use crate::optim::baselines::{self, Scheme};
+use crate::latency::frameworks::Framework;
+use crate::optim::baselines::Scheme;
 use crate::optim::{bcd, Problem};
 use crate::profile::resnet18;
+use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::stats::mean;
 use crate::util::table::{LinePlot, Table};
 
 use super::accuracy::curve_run;
+use super::sweep::{self, FrameworkCell, SchemeCell};
 use super::Ctx;
 
-/// Per-round latency of a framework, averaged over deployments.
-fn framework_round_latency(ctx: &Ctx, fw: Framework, n_clients: usize,
-                           seeds: u64) -> f64 {
+/// Build the Figs. 9–10 per-round latency cells for one client count:
+/// `seeds` deployment draws per framework.
+fn framework_cells(ctx: &Ctx, fws: &[Framework], n_clients: usize,
+                   seeds: u64, out: &mut Vec<FrameworkCell>) {
     let mut net = ctx.cfg.net.clone();
     net.n_clients = n_clients;
     if net.n_subchannels < n_clients {
         net.n_subchannels = n_clients;
     }
-    let profile = resnet18::profile();
-    let mut vals = Vec::new();
-    for s in 0..seeds {
-        let mut rng = Rng::new(0xF16_0000 + s);
-        let dep = Deployment::generate(&net, &mut rng);
-        let ch = ChannelRealization::average(&dep);
-        let prob = Problem {
-            cfg: &net,
-            profile: &profile,
-            dep: &dep,
-            ch: &ch,
-            batch: ctx.cfg.train.batch,
-            phi: fw.phi(),
-        };
-        // Optimized resources (the paper's frameworks all ride the same
-        // resource manager in Figs. 9–10).
-        let d = match bcd::solve(&prob, bcd::BcdOptions::default()) {
-            Ok(r) => r.decision,
-            Err(_) => continue,
-        };
-        let (up, dn, bc) = prob.rates(&d);
-        let f_clients = dep.f_clients();
-        let inp = LatencyInputs {
-            profile: &profile,
-            cut: d.cut,
-            batch: ctx.cfg.train.batch,
-            phi: fw.phi(),
-            f_server: net.f_server,
-            kappa_server: net.kappa_server,
-            kappa_client: net.kappa_client,
-            f_clients: &f_clients,
-            uplink: &up,
-            downlink: &dn,
-            broadcast: bc,
-        };
-        vals.push(round_latency(fw, &inp).round_total());
+    for &fw in fws {
+        for s in 0..seeds {
+            out.push(FrameworkCell {
+                net: net.clone(),
+                fw,
+                dep_seed: 0xF16_0000 + s,
+                batch: ctx.cfg.train.batch,
+            });
+        }
     }
-    mean(&vals)
 }
 
 /// Fig. 9 — total training latency to reach target accuracy vs C.
@@ -78,8 +58,8 @@ fn framework_round_latency(ctx: &Ctx, fw: Framework, n_clients: usize,
 pub fn fig9(ctx: &mut Ctx) -> Result<()> {
     let rounds = if ctx.quick { 250 } else { 400 };
     let dataset = if ctx.quick { 1500 } else { 8000 };
-    let target = if ctx.quick { 0.75 } else { 0.75 };
-    let sweep: Vec<usize> =
+    let target = 0.75;
+    let sweep_c: Vec<usize> =
         if ctx.quick { vec![2, 5, 10, 20] } else { vec![2, 5, 10, 15, 20] };
     let frameworks = super::accuracy::curve_frameworks();
 
@@ -98,6 +78,20 @@ pub fn fig9(ctx: &mut Ctx) -> Result<()> {
         rounds_to.push((name.clone(), *fw, r2t));
     }
 
+    // Fan the full (C × framework × seed) per-round latency grid across
+    // cores in one batch.
+    let seeds_per = 3u64;
+    let fws: Vec<Framework> = rounds_to.iter().map(|(_, fw, _)| *fw).collect();
+    let mut cells = Vec::new();
+    for &c in &sweep_c {
+        framework_cells(ctx, &fws, c, seeds_per, &mut cells);
+    }
+    let outs = sweep::run_framework_cells(
+        resnet18::profile_static(),
+        &cells,
+        par::max_threads(),
+    );
+
     let mut plot = LinePlot::new(
         "Fig 9: total latency to target accuracy vs #clients",
         "clients C",
@@ -112,10 +106,15 @@ pub fn fig9(ctx: &mut Ctx) -> Result<()> {
         .iter()
         .map(|(n, _, _)| (n.clone(), Vec::new()))
         .collect();
-    for &c in &sweep {
+    // Consume in the exact construction order: C-major, then framework,
+    // with one `seeds_per`-sized chunk per (C, framework) pair.
+    let mut chunks = outs.chunks(seeds_per as usize);
+    for &c in &sweep_c {
         let mut row = vec![c.to_string()];
-        for (i, (_, fw, r2t)) in rounds_to.iter().enumerate() {
-            let per_round = framework_round_latency(ctx, *fw, c, 3);
+        for (i, (_, _fw, r2t)) in rounds_to.iter().enumerate() {
+            let chunk = chunks.next().expect("fig9 cell grid shape mismatch");
+            let vals: Vec<f64> = chunk.iter().flatten().copied().collect();
+            let per_round = mean(&vals);
             // Per-client data shrinks with C (D fixed): rounds per epoch
             // scale with D/(C·b); epochs-to-target held at the anchor.
             let scale = 5.0 / c as f64;
@@ -138,8 +137,8 @@ pub fn fig9(ctx: &mut Ctx) -> Result<()> {
 pub fn fig10(ctx: &mut Ctx) -> Result<()> {
     let rounds = if ctx.quick { 250 } else { 400 };
     let dataset_anchor = if ctx.quick { 1500 } else { 8000 };
-    let target = if ctx.quick { 0.75 } else { 0.75 };
-    let sweep: Vec<usize> = if ctx.quick {
+    let target = 0.75;
+    let sweep_d: Vec<usize> = if ctx.quick {
         vec![2000, 4000, 8000]
     } else {
         vec![2000, 4000, 6000, 8000, 10000]
@@ -156,6 +155,27 @@ pub fn fig10(ctx: &mut Ctx) -> Result<()> {
             run.rounds_to_accuracy(target).unwrap_or(rounds).max(1) as f64;
         anchors.push((name.clone(), *fw, r2t));
     }
+
+    // Per-round latency is independent of D: evaluate each framework's
+    // (C = 5) cell batch once, in parallel, and reuse across the D sweep.
+    let seeds_per = 3u64;
+    let fws: Vec<Framework> = anchors.iter().map(|(_, fw, _)| *fw).collect();
+    let mut cells = Vec::new();
+    framework_cells(ctx, &fws, 5, seeds_per, &mut cells);
+    let outs = sweep::run_framework_cells(
+        resnet18::profile_static(),
+        &cells,
+        par::max_threads(),
+    );
+    let per_round_by_fw: Vec<f64> = outs
+        .chunks(seeds_per as usize)
+        .map(|chunk| {
+            let vals: Vec<f64> = chunk.iter().flatten().copied().collect();
+            mean(&vals)
+        })
+        .collect();
+    assert_eq!(per_round_by_fw.len(), anchors.len(), "fig10 cell grid");
+
     let mut plot = LinePlot::new(
         "Fig 10: total latency to target accuracy vs dataset size",
         "dataset size D",
@@ -168,10 +188,10 @@ pub fn fig10(ctx: &mut Ctx) -> Result<()> {
     );
     let mut series: Vec<(String, Vec<(f64, f64)>)> =
         anchors.iter().map(|(n, _, _)| (n.clone(), Vec::new())).collect();
-    for &d in &sweep {
+    for &d in &sweep_d {
         let mut row = vec![d.to_string()];
-        for (i, (_, fw, r2t)) in anchors.iter().enumerate() {
-            let per_round = framework_round_latency(ctx, *fw, 5, 3);
+        for (i, (_, _fw, r2t)) in anchors.iter().enumerate() {
+            let per_round = per_round_by_fw[i];
             // rounds-to-target scales with D (rounds/epoch ∝ D at fixed
             // C·b; epochs-to-target anchored).
             let total =
@@ -190,13 +210,33 @@ pub fn fig10(ctx: &mut Ctx) -> Result<()> {
     ctx.save("fig10.txt", &plot.render())
 }
 
-/// Shared sweep driver for Figs. 11–12.
+/// Shared sweep driver for Figs. 11–12: builds the full
+/// (x × scheme × seed) cell grid, fans it across cores, aggregates in
+/// deterministic order.
 fn scheme_sweep(ctx: &Ctx, xlabel: &str,
                 xs: &[f64],
                 mut make_net: impl FnMut(f64) -> crate::config::NetworkConfig,
                 id: &str, title: &str) -> Result<()> {
-    let profile = resnet18::profile();
+    let profile = resnet18::profile_static();
     let seeds: u64 = if ctx.quick { 3 } else { 10 };
+    let mut cells = Vec::new();
+    for &x in xs {
+        let net = make_net(x);
+        for scheme in Scheme::all() {
+            for s in 0..seeds {
+                cells.push(SchemeCell {
+                    net: net.clone(),
+                    scheme,
+                    dep_seed: 0xBA5E + s,
+                    scheme_seed: 0xC0DE + s,
+                    batch: ctx.cfg.train.batch,
+                    phi: ctx.cfg.train.phi,
+                });
+            }
+        }
+    }
+    let outs = sweep::run_scheme_cells(profile, &cells, par::max_threads());
+
     let mut t = Table::new(id).header(
         &std::iter::once(xlabel.to_string())
             .chain(Scheme::all().iter().map(|s| s.name().to_string()))
@@ -207,28 +247,15 @@ fn scheme_sweep(ctx: &Ctx, xlabel: &str,
         .iter()
         .map(|s| (s.name().to_string(), Vec::new()))
         .collect();
+    // Consume in the exact construction order: x-major, then scheme, with
+    // one `seeds`-sized chunk per (x, scheme) pair.
+    let mut chunks = outs.chunks(seeds as usize);
     for &x in xs {
-        let net = make_net(x);
         let mut row = vec![format!("{x}")];
-        for (si, scheme) in Scheme::all().into_iter().enumerate() {
-            let mut vals = Vec::new();
-            for s in 0..seeds {
-                let mut rng = Rng::new(0xBA5E + s);
-                let dep = Deployment::generate(&net, &mut rng);
-                let ch = ChannelRealization::average(&dep);
-                let prob = Problem {
-                    cfg: &net,
-                    profile: &profile,
-                    dep: &dep,
-                    ch: &ch,
-                    batch: ctx.cfg.train.batch,
-                    phi: ctx.cfg.train.phi,
-                };
-                let mut srng = Rng::new(0xC0DE + s);
-                if let Ok(d) = baselines::solve(&prob, scheme, &mut srng) {
-                    vals.push(prob.objective(&d));
-                }
-            }
+        for (si, _) in Scheme::all().iter().enumerate() {
+            let chunk =
+                chunks.next().expect("scheme sweep cell grid shape mismatch");
+            let vals: Vec<f64> = chunk.iter().flatten().copied().collect();
             let v = mean(&vals);
             series[si].1.push((x, v));
             row.push(format!("{v:.3}"));
@@ -294,13 +321,17 @@ pub fn fig12(ctx: &mut Ctx) -> Result<()> {
 /// - oracle: re-optimized per realization (upper bound on what adapting
 ///   every round could buy).
 /// Robustness = the fixed decision tracks the oracle closely.
+///
+/// The per-realization oracle solves are independent; the realizations are
+/// pre-sampled serially (preserving the RNG stream) and the BCD solves fan
+/// across cores.
 pub fn fig13(ctx: &mut Ctx) -> Result<()> {
     let xs: Vec<f64> = if ctx.quick {
         vec![100.0, 200.0, 300.0]
     } else {
         vec![100.0, 150.0, 200.0, 250.0, 300.0]
     };
-    let profile = resnet18::profile();
+    let profile = resnet18::profile_static();
     let n_rounds = if ctx.quick { 15 } else { 60 };
     let mut t = Table::new("fig13").header(&[
         "total bandwidth (MHz)",
@@ -324,7 +355,7 @@ pub fn fig13(ctx: &mut Ctx) -> Result<()> {
         let avg = ChannelRealization::average(&dep);
         let prob = Problem {
             cfg: &net,
-            profile: &profile,
+            profile,
             dep: &dep,
             ch: &avg,
             batch: ctx.cfg.train.batch,
@@ -333,20 +364,24 @@ pub fn fig13(ctx: &mut Ctx) -> Result<()> {
         // Optimize ONCE on average gains — the decision then stays fixed.
         let d = bcd::solve(&prob, bcd::BcdOptions::default())?.decision;
         let t_static = prob.objective(&d);
-        // Evaluate under per-round fading realizations: fixed vs oracle.
-        let mut fixed_vals = Vec::new();
-        let mut oracle_vals = Vec::new();
-        for _ in 0..n_rounds {
-            let ch = ChannelRealization::sample(&dep, &mut rng);
-            let p2 = Problem { ch: &ch, ..prob.clone() };
-            fixed_vals.push(p2.objective(&d));
-            if let Ok(o) = bcd::solve(&p2, bcd::BcdOptions {
-                max_iters: 6,
-                tol: 1e-4,
-            }) {
-                oracle_vals.push(o.objective);
-            }
-        }
+        // Pre-sample the fading realizations in RNG-stream order, then
+        // evaluate fixed vs oracle per realization.
+        let chs: Vec<ChannelRealization> = (0..n_rounds)
+            .map(|_| ChannelRealization::sample(&dep, &mut rng))
+            .collect();
+        let fixed_vals: Vec<f64> = chs
+            .iter()
+            .map(|ch| Problem { ch, ..prob.clone() }.objective(&d))
+            .collect();
+        let oracle_vals: Vec<f64> = sweep::run_oracle_cells(
+            &prob,
+            &chs,
+            bcd::BcdOptions { max_iters: 6, tol: 1e-4 },
+            par::max_threads(),
+        )
+        .into_iter()
+        .flatten()
+        .collect();
         let t_fixed = mean(&fixed_vals);
         let t_oracle = mean(&oracle_vals);
         s_static.push((mhz, t_static));

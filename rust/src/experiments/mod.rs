@@ -23,6 +23,7 @@
 
 pub mod accuracy;
 pub mod latency_figs;
+pub mod sweep;
 pub mod tables;
 
 use std::collections::BTreeMap;

@@ -1,0 +1,227 @@
+//! Parallel sweep engine for the §V-model experiment grids.
+//!
+//! Figs. 9–13 evaluate hundreds of independent cells — each one a full
+//! deployment draw plus a resource-management solve over the *analytical*
+//! latency model (no PJRT runtime is involved, so the work is `Send`). The
+//! engine fans those cells across cores via [`par::parallel_map`] with
+//! deterministic per-cell seeding: every cell derives its RNGs from seeds
+//! stored in the cell itself, so the result vector is **bit-identical** to
+//! the serial loop for any thread count (set `EPSL_THREADS=1` to force
+//! serial execution).
+
+use crate::channel::{ChannelRealization, Deployment};
+use crate::config::NetworkConfig;
+use crate::latency::frameworks::{round_latency, Framework};
+use crate::latency::LatencyInputs;
+use crate::optim::baselines::{self, Scheme};
+use crate::optim::{bcd, Problem};
+use crate::profile::NetworkProfile;
+use crate::util::par;
+use crate::util::rng::Rng;
+
+/// One (deployment seed × scheme) cell of a Figs. 11–12-style sweep.
+#[derive(Debug, Clone)]
+pub struct SchemeCell {
+    pub net: NetworkConfig,
+    pub scheme: Scheme,
+    /// Seed for the deployment draw.
+    pub dep_seed: u64,
+    /// Seed for the scheme's own randomness (random-cut baselines).
+    pub scheme_seed: u64,
+    pub batch: usize,
+    pub phi: f64,
+}
+
+/// Evaluate one scheme cell: draw the deployment, solve the scheme, return
+/// the reference eq. 23 objective (`None` if the scheme solve fails).
+pub fn eval_scheme_cell(profile: &NetworkProfile, cell: &SchemeCell)
+    -> Option<f64> {
+    let mut rng = Rng::new(cell.dep_seed);
+    let dep = Deployment::generate(&cell.net, &mut rng);
+    let ch = ChannelRealization::average(&dep);
+    let prob = Problem {
+        cfg: &cell.net,
+        profile,
+        dep: &dep,
+        ch: &ch,
+        batch: cell.batch,
+        phi: cell.phi,
+    };
+    let mut srng = Rng::new(cell.scheme_seed);
+    baselines::solve(&prob, cell.scheme, &mut srng)
+        .ok()
+        .map(|d| prob.objective(&d))
+}
+
+/// Fan a batch of scheme cells across `threads` workers; results come back
+/// in input order.
+pub fn run_scheme_cells(profile: &NetworkProfile, cells: &[SchemeCell],
+                        threads: usize) -> Vec<Option<f64>> {
+    par::parallel_map(cells, threads, |_, cell| {
+        eval_scheme_cell(profile, cell)
+    })
+}
+
+/// One (deployment seed × framework) cell of the Figs. 9–10 per-round
+/// latency sweeps: BCD-optimized resources, framework-specific round
+/// latency.
+#[derive(Debug, Clone)]
+pub struct FrameworkCell {
+    pub net: NetworkConfig,
+    pub fw: Framework,
+    pub dep_seed: u64,
+    pub batch: usize,
+}
+
+/// Evaluate one framework cell (`None` if the BCD solve fails).
+pub fn eval_framework_cell(profile: &NetworkProfile, cell: &FrameworkCell)
+    -> Option<f64> {
+    let mut rng = Rng::new(cell.dep_seed);
+    let dep = Deployment::generate(&cell.net, &mut rng);
+    let ch = ChannelRealization::average(&dep);
+    let prob = Problem {
+        cfg: &cell.net,
+        profile,
+        dep: &dep,
+        ch: &ch,
+        batch: cell.batch,
+        phi: cell.fw.phi(),
+    };
+    let d = bcd::solve(&prob, bcd::BcdOptions::default()).ok()?.decision;
+    let (up, dn, bc) = prob.rates(&d);
+    let inp = LatencyInputs {
+        profile,
+        cut: d.cut,
+        batch: cell.batch,
+        phi: cell.fw.phi(),
+        f_server: cell.net.f_server,
+        kappa_server: cell.net.kappa_server,
+        kappa_client: cell.net.kappa_client,
+        f_clients: dep.f_clients(),
+        uplink: &up,
+        downlink: &dn,
+        broadcast: bc,
+    };
+    Some(round_latency(cell.fw, &inp).round_total())
+}
+
+/// Fan a batch of framework cells across `threads` workers (input order
+/// preserved).
+pub fn run_framework_cells(profile: &NetworkProfile, cells: &[FrameworkCell],
+                           threads: usize) -> Vec<Option<f64>> {
+    par::parallel_map(cells, threads, |_, cell| {
+        eval_framework_cell(profile, cell)
+    })
+}
+
+/// Oracle re-optimization for Fig. 13: solve BCD per channel realization
+/// in parallel, each cell a copy of `base` with its own channel
+/// (realizations are pre-sampled serially to preserve the RNG stream).
+pub fn run_oracle_cells(base: &Problem, chs: &[ChannelRealization],
+                        opts: bcd::BcdOptions, threads: usize)
+    -> Vec<Option<f64>> {
+    par::parallel_map(chs, threads, |_, ch| {
+        let prob = Problem { ch, ..base.clone() };
+        bcd::solve(&prob, opts).ok().map(|r| r.objective)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::resnet18;
+    use crate::util::table::Table;
+
+    fn small_cells() -> (NetworkProfile, Vec<SchemeCell>) {
+        let mut net = NetworkConfig::default();
+        net.n_clients = 3;
+        net.n_subchannels = 6;
+        let profile = resnet18::profile();
+        let mut cells = Vec::new();
+        for scheme in [Scheme::BaselineA, Scheme::BaselineB, Scheme::BaselineD]
+        {
+            for s in 0..3u64 {
+                cells.push(SchemeCell {
+                    net: net.clone(),
+                    scheme,
+                    dep_seed: 0xBA5E + s,
+                    scheme_seed: 0xC0DE + s,
+                    batch: 64,
+                    phi: 0.5,
+                });
+            }
+        }
+        (profile, cells)
+    }
+
+    #[test]
+    fn parallel_sweep_bit_identical_to_serial() {
+        let (profile, cells) = small_cells();
+        let serial = run_scheme_cells(&profile, &cells, 1);
+        let par4 = run_scheme_cells(&profile, &cells, 4);
+        assert_eq!(serial.len(), par4.len());
+        for (i, (a, b)) in serial.iter().zip(&par4).enumerate() {
+            match (a, b) {
+                (Some(x), Some(y)) => assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "cell {i}: serial {x} vs parallel {y}"
+                ),
+                (None, None) => {}
+                _ => panic!("cell {i}: success/failure diverged"),
+            }
+        }
+        // All these schemes solve on the default-config fixture.
+        assert!(serial.iter().all(|v| v.is_some()));
+    }
+
+    #[test]
+    fn parallel_sweep_renders_byte_identical_tables() {
+        // The figure pipeline formats cell means into ASCII tables; the
+        // rendered artifact must not depend on the thread count.
+        let (profile, cells) = small_cells();
+        let render = |objs: &[Option<f64>]| {
+            let mut t = Table::new("sweep determinism")
+                .header(&["scheme", "mean latency (s)"]);
+            let per_scheme = 3;
+            for (si, chunk) in objs.chunks(per_scheme).enumerate() {
+                let vals: Vec<f64> = chunk.iter().flatten().copied().collect();
+                t.row(&[
+                    format!("scheme {si}"),
+                    format!("{:.6}", crate::util::stats::mean(&vals)),
+                ]);
+            }
+            t.render()
+        };
+        let serial = render(&run_scheme_cells(&profile, &cells, 1));
+        let par3 = render(&run_scheme_cells(&profile, &cells, 3));
+        let par8 = render(&run_scheme_cells(&profile, &cells, 8));
+        assert_eq!(serial, par3);
+        assert_eq!(serial, par8);
+    }
+
+    #[test]
+    fn framework_cells_deterministic_across_threads() {
+        let mut net = NetworkConfig::default();
+        net.n_clients = 3;
+        net.n_subchannels = 6;
+        let profile = resnet18::profile();
+        let mut cells = Vec::new();
+        for fw in [Framework::Psl, Framework::Epsl { phi: 0.5 }] {
+            for s in 0..2u64 {
+                cells.push(FrameworkCell {
+                    net: net.clone(),
+                    fw,
+                    dep_seed: 0xF16_0000 + s,
+                    batch: 64,
+                });
+            }
+        }
+        let serial = run_framework_cells(&profile, &cells, 1);
+        let par4 = run_framework_cells(&profile, &cells, 4);
+        for (a, b) in serial.iter().zip(&par4) {
+            assert_eq!(a.map(f64::to_bits), b.map(f64::to_bits));
+        }
+        assert!(serial.iter().all(|v| v.is_some()));
+    }
+}

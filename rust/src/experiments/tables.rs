@@ -69,7 +69,7 @@ pub fn table1(ctx: &mut Ctx) -> Result<()> {
 
 /// Table IV — the ResNet-18 profile with derived ρ/ϖ/ψ columns.
 pub fn table4(ctx: &mut Ctx) -> Result<()> {
-    let p = resnet18::profile();
+    let p = resnet18::profile_static();
     let mut t = Table::new("Table IV: ResNet-18 network parameters").header(&[
         "layer", "size (MiB)", "FP (MFLOP)", "smashed (MiB)", "rho_j (MFLOP)",
         "varpi_j (MFLOP)", "psi_j (Mbit)",

@@ -19,6 +19,7 @@ use crate::error::Result;
 use crate::util::rng::Rng;
 
 use super::bcd::{self, BcdOptions};
+use super::eval::Evaluator;
 use super::power::PSD_OFF_DBM_HZ;
 use super::{cutlayer, greedy, power, Decision, Problem};
 
@@ -126,21 +127,38 @@ pub fn random_cut(prob: &Problem, rng: &mut Rng) -> usize {
     cands[rng.below(cands.len())]
 }
 
-/// Solve one scheme. `rng` drives the random cut draws of a)/b).
+/// Scheme a): RSS allocation + uniform PSD + random cut — no solver, no
+/// evaluator. Shared by [`solve`] and [`solve_with`].
+fn baseline_a(prob: &Problem, rng: &mut Rng) -> Decision {
+    let cut = random_cut(prob, rng);
+    let alloc = rss_allocation(prob);
+    let psd = uniform_power(prob, &alloc);
+    Decision { alloc, psd_dbm_hz: psd, cut }
+}
+
+/// Solve one scheme. `rng` drives the random cut draws of a)/b). Builds a
+/// throwaway [`Evaluator`] for the schemes that optimize anything; callers
+/// evaluating several schemes on one deployment should use [`solve_with`].
 pub fn solve(prob: &Problem, scheme: Scheme, rng: &mut Rng)
     -> Result<Decision> {
+    if scheme == Scheme::BaselineA {
+        // Touches no solver — skip the evaluator build entirely.
+        return Ok(baseline_a(prob, rng));
+    }
+    let mut ev = Evaluator::new(prob);
+    solve_with(prob, &mut ev, scheme, rng)
+}
+
+/// Solve one scheme on the shared evaluator fast path.
+pub fn solve_with(prob: &Problem, ev: &mut Evaluator, scheme: Scheme,
+                  rng: &mut Rng) -> Result<Decision> {
     match scheme {
-        Scheme::BaselineA => {
-            let cut = random_cut(prob, rng);
-            let alloc = rss_allocation(prob);
-            let psd = uniform_power(prob, &alloc);
-            Ok(Decision { alloc, psd_dbm_hz: psd, cut })
-        }
+        Scheme::BaselineA => Ok(baseline_a(prob, rng)),
         Scheme::BaselineB => {
             let cut = random_cut(prob, rng);
             let seed_psd = uniform_power(prob, &rss_allocation(prob));
-            let alloc = greedy::allocate(prob, &seed_psd, cut);
-            let sol = power::solve(prob, &alloc, cut)?;
+            let alloc = greedy::allocate_with(prob, ev, &seed_psd, cut);
+            let sol = power::solve_with(prob, ev, &alloc, cut)?;
             Ok(Decision { alloc, psd_dbm_hz: sol.psd_dbm_hz, cut })
         }
         Scheme::BaselineC => {
@@ -150,9 +168,9 @@ pub fn solve(prob: &Problem, scheme: Scheme, rng: &mut Rng)
             let mut cut = prob.profile.cut_candidates
                 [prob.profile.cut_candidates.len() / 2];
             for _ in 0..3 {
-                let (new_cut, _) = cutlayer::solve(prob, &alloc, &psd)?;
+                let (new_cut, _) = cutlayer::solve_with(prob, ev, &alloc, &psd)?;
                 cut = new_cut;
-                let sol = power::solve(prob, &alloc, cut)?;
+                let sol = power::solve_with(prob, ev, &alloc, cut)?;
                 psd = sol.psd_dbm_hz;
             }
             Ok(Decision { alloc, psd_dbm_hz: psd, cut })
@@ -163,15 +181,15 @@ pub fn solve(prob: &Problem, scheme: Scheme, rng: &mut Rng)
             let mut alloc = rss_allocation(prob);
             let mut psd = uniform_power(prob, &alloc);
             for _ in 0..3 {
-                alloc = greedy::allocate(prob, &psd, cut);
+                alloc = greedy::allocate_with(prob, ev, &psd, cut);
                 psd = uniform_power(prob, &alloc);
-                let (new_cut, _) = cutlayer::solve(prob, &alloc, &psd)?;
+                let (new_cut, _) = cutlayer::solve_with(prob, ev, &alloc, &psd)?;
                 cut = new_cut;
             }
             Ok(Decision { alloc, psd_dbm_hz: psd, cut })
         }
         Scheme::Proposed => {
-            Ok(bcd::solve(prob, BcdOptions::default())?.decision)
+            Ok(bcd::solve_with(prob, ev, BcdOptions::default())?.decision)
         }
     }
 }

@@ -10,10 +10,19 @@
 //! only if it does not increase the true objective (eq. 23), which makes
 //! the trajectory provably non-increasing — BCD on a non-convex problem
 //! can otherwise oscillate between blocks.
+//!
+//! [`solve`] runs on the [`Evaluator`] fast path: one evaluator is built
+//! per problem, all objective checks are table-driven and allocation-free,
+//! and one scratch candidate [`Decision`] is reused across blocks and
+//! iterations (the pre-PR code cloned the incumbent three times per
+//! iteration). [`solve_reference`] preserves the from-scratch evaluation
+//! pipeline; the two return identical results because every fast-path
+//! quantity is computed to the same bits as its reference counterpart.
 
 use crate::channel::rate;
 use crate::error::Result;
 
+use super::eval::Evaluator;
 use super::{cutlayer, greedy, power, Decision, Problem};
 
 /// BCD options.
@@ -40,27 +49,125 @@ pub struct BcdResult {
     pub iterations: usize,
 }
 
-/// Initial decision: middle cut candidate, round-robin-ish greedy at a
-/// conservative uniform PSD.
-fn initial(prob: &Problem) -> Decision {
-    let cands = &prob.profile.cut_candidates;
-    let cut = cands[cands.len() / 2];
-    let per_client =
-        (prob.n_subchannels() / prob.n_clients()).max(1);
-    let psd = vec![
+/// Initial uniform PSD plan shared by both pipelines.
+fn initial_psd(prob: &Problem) -> Vec<f64> {
+    let per_client = (prob.n_subchannels() / prob.n_clients()).max(1);
+    vec![
         rate::uniform_psd_dbm_hz(
             prob.cfg.p_max_dbm - 3.0,
             per_client,
             prob.cfg.subchannel_bw_hz
         );
         prob.n_subchannels()
-    ];
-    greedy::allocate_decision(prob, psd, cut)
+    ]
 }
 
-/// Run Algorithm 3.
+/// Initial decision: middle cut candidate, round-robin-ish greedy at a
+/// conservative uniform PSD (fast-path greedy).
+fn initial_with(prob: &Problem, ev: &Evaluator) -> Decision {
+    let cands = &prob.profile.cut_candidates;
+    let cut = cands[cands.len() / 2];
+    let psd = initial_psd(prob);
+    let alloc = greedy::allocate_with(prob, ev, &psd, cut);
+    Decision { alloc, psd_dbm_hz: psd, cut }
+}
+
+/// Copy `src` into `dst` reusing `dst`'s buffers (no allocation once the
+/// shapes match, which they always do within one solve).
+fn copy_decision(dst: &mut Decision, src: &Decision) {
+    dst.alloc.owner.clone_from(&src.alloc.owner);
+    dst.psd_dbm_hz.clone_from(&src.psd_dbm_hz);
+    dst.cut = src.cut;
+}
+
+/// Run Algorithm 3 on the evaluator fast path.
 pub fn solve(prob: &Problem, opts: BcdOptions) -> Result<BcdResult> {
-    let mut d = initial(prob);
+    let mut ev = Evaluator::new(prob);
+    solve_with(prob, &mut ev, opts)
+}
+
+/// Run Algorithm 3 reusing a caller-owned [`Evaluator`] (e.g. across the
+/// schemes of one sweep cell).
+pub fn solve_with(prob: &Problem, ev: &mut Evaluator, opts: BcdOptions)
+    -> Result<BcdResult> {
+    let mut d = initial_with(prob, ev);
+    let mut best = ev.objective(&d);
+    let mut trajectory = vec![best];
+    let mut iterations = 0;
+    // One scratch candidate, cloned once and mutated block-by-block.
+    let mut cand = d.clone();
+
+    for _ in 0..opts.max_iters {
+        iterations += 1;
+        let before = best;
+
+        // Block 1: subchannel allocation (Algorithm 2).
+        cand.alloc = greedy::allocate_with(prob, ev, &d.psd_dbm_hz, d.cut);
+        cand.psd_dbm_hz.clone_from(&d.psd_dbm_hz);
+        cand.cut = d.cut;
+        if prob.check_feasible(&cand).is_ok() {
+            let t = ev.objective(&cand);
+            if t <= best {
+                copy_decision(&mut d, &cand);
+                best = t;
+            }
+        }
+
+        // Block 2: power control (P2).
+        if let Ok(sol) = power::solve_with(prob, ev, &d.alloc, d.cut) {
+            cand.alloc.owner.clone_from(&d.alloc.owner);
+            cand.psd_dbm_hz = sol.psd_dbm_hz;
+            cand.cut = d.cut;
+            if prob.check_feasible(&cand).is_ok() {
+                let t = ev.objective(&cand);
+                if t <= best {
+                    copy_decision(&mut d, &cand);
+                    best = t;
+                }
+            }
+        }
+
+        // Block 3: cut layer (P3 via B&B). Re-run power for the new cut so
+        // the comparison is fair (the cut changes the uplink payload).
+        if let Ok((cut, _stats)) =
+            cutlayer::solve_with(prob, ev, &d.alloc, &d.psd_dbm_hz)
+        {
+            if cut != d.cut {
+                cand.alloc.owner.clone_from(&d.alloc.owner);
+                cand.psd_dbm_hz.clone_from(&d.psd_dbm_hz);
+                cand.cut = cut;
+                if let Ok(sol) = power::solve_with(prob, ev, &cand.alloc, cut)
+                {
+                    cand.psd_dbm_hz = sol.psd_dbm_hz;
+                }
+                if prob.check_feasible(&cand).is_ok() {
+                    let t = ev.objective(&cand);
+                    if t <= best {
+                        copy_decision(&mut d, &cand);
+                        best = t;
+                    }
+                }
+            }
+        }
+
+        // Block 4: (T1, T2) are implicit in `objective` (P4 closed form).
+        trajectory.push(best);
+        if (before - best).abs() < opts.tol {
+            break;
+        }
+    }
+    Ok(BcdResult { decision: d, objective: best, trajectory, iterations })
+}
+
+/// The pre-fast-path Algorithm 3: every block evaluated through
+/// [`Problem::objective`] with per-candidate decision clones. Kept as the
+/// oracle for the equivalence test and the before/after benchmark.
+pub fn solve_reference(prob: &Problem, opts: BcdOptions) -> Result<BcdResult> {
+    let cands = &prob.profile.cut_candidates;
+    let cut = cands[cands.len() / 2];
+    let psd = initial_psd(prob);
+    let alloc = greedy::allocate_reference(prob, &psd, cut);
+    let mut d = Decision { alloc, psd_dbm_hz: psd, cut };
     let mut best = prob.objective(&d);
     let mut trajectory = vec![best];
     let mut iterations = 0;
@@ -70,7 +177,7 @@ pub fn solve(prob: &Problem, opts: BcdOptions) -> Result<BcdResult> {
         let before = best;
 
         // Block 1: subchannel allocation (Algorithm 2).
-        let alloc = greedy::allocate(prob, &d.psd_dbm_hz, d.cut);
+        let alloc = greedy::allocate_reference(prob, &d.psd_dbm_hz, d.cut);
         let cand = Decision { alloc, ..d.clone() };
         if prob.check_feasible(&cand).is_ok() {
             let t = prob.objective(&cand);
@@ -192,6 +299,28 @@ mod tests {
         if n >= 2 {
             assert!(res.trajectory[n - 2] - res.trajectory[n - 1] < 1e-3);
         }
+    }
+
+    #[test]
+    fn fast_path_matches_reference_pipeline() {
+        // Same deployment, same options: the fast solve and the pre-PR
+        // reference pipeline must take the same trajectory (every compared
+        // quantity is bit-identical) and land on the same decision.
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = prob_fixture(&cfg, &profile, &dep, &ch);
+        let fast = solve(&prob, BcdOptions::default()).unwrap();
+        let reference = solve_reference(&prob, BcdOptions::default()).unwrap();
+        assert_eq!(fast.decision, reference.decision);
+        assert_eq!(
+            fast.objective.to_bits(),
+            reference.objective.to_bits(),
+            "fast {} vs reference {}",
+            fast.objective,
+            reference.objective
+        );
+        assert_eq!(fast.trajectory.len(), reference.trajectory.len());
     }
 
     #[test]

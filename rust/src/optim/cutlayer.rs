@@ -18,6 +18,7 @@
 use crate::channel::rate::Allocation;
 use crate::error::{Error, Result};
 
+use super::eval::Evaluator;
 use super::milp::{solve_milp, Lp, Milp, MilpStats};
 use super::{Decision, Problem};
 
@@ -38,7 +39,8 @@ fn server_cost(prob: &Problem, cut: usize, broadcast_rate: f64) -> f64 {
     t_sf + t_sb + t_b
 }
 
-/// Solve P3 by B&B. Returns the optimal cut and the solver statistics.
+/// Solve P3 by B&B, deriving rates and stage terms from the [`Problem`]
+/// (reference setup). Returns the optimal cut and the solver statistics.
 pub fn solve(prob: &Problem, alloc: &Allocation, psd_dbm_hz: &[f64])
     -> Result<(usize, MilpStats)> {
     let cands = &prob.profile.cut_candidates;
@@ -53,12 +55,54 @@ pub fn solve(prob: &Problem, alloc: &Allocation, psd_dbm_hz: &[f64])
     let (up, dn, bc) = prob.rates(&d0);
     let nj = cands.len();
     let c = prob.n_clients();
-    // Variables: μ_0..μ_{nj-1}, T1, T2.
+    let costs: Vec<f64> =
+        cands.iter().map(|&cut| server_cost(prob, cut, bc)).collect();
+    let mut c8m = vec![0.0; c * nj];
+    let mut c9m = vec![0.0; c * nj];
+    for i in 0..c {
+        for (jj, &cut) in cands.iter().enumerate() {
+            c8m[i * nj + jj] = prob.client_fp_seconds(i, cut)
+                + prob.uplink_bits(cut) / up[i].max(1e-9);
+            c9m[i * nj + jj] = prob.downlink_bits(cut) / dn[i].max(1e-9)
+                + prob.client_bp_seconds(i, cut);
+        }
+    }
+    solve_milp_core(cands, c, &costs, &c8m, &c9m)
+}
+
+/// Solve P3 with rates and stage terms served from a prebuilt
+/// [`Evaluator`] — bit-identical coefficients, no per-call rate rebuild.
+pub fn solve_with(prob: &Problem, ev: &Evaluator, alloc: &Allocation,
+                  psd_dbm_hz: &[f64]) -> Result<(usize, MilpStats)> {
+    let cands = &prob.profile.cut_candidates;
+    if cands.is_empty() {
+        return Err(Error::Optim("no cut candidates".into()));
+    }
+    let c = prob.n_clients();
+    let mut up = Vec::new();
+    let mut dn = Vec::new();
+    ev.fill_rates(alloc, psd_dbm_hz, &mut up, &mut dn);
+    let nj = cands.len();
+    let costs: Vec<f64> =
+        cands.iter().map(|&cut| ev.server_cost(cut)).collect();
+    let mut c8m = vec![0.0; c * nj];
+    let mut c9m = vec![0.0; c * nj];
+    for i in 0..c {
+        for (jj, &cut) in cands.iter().enumerate() {
+            c8m[i * nj + jj] = ev.uplink_phase_time(i, cut, up[i]);
+            c9m[i * nj + jj] = ev.downlink_phase_time(i, cut, dn[i]);
+        }
+    }
+    solve_milp_core(cands, c, &costs, &c8m, &c9m)
+}
+
+/// Shared MILP assembly + B&B over variables μ_0..μ_{nj−1}, T₁, T₂.
+fn solve_milp_core(cands: &[usize], n_clients: usize, costs: &[f64],
+                   c8m: &[f64], c9m: &[f64]) -> Result<(usize, MilpStats)> {
+    let nj = cands.len();
     let n = nj + 2;
     let mut obj = vec![0.0; n];
-    for (jj, &cut) in cands.iter().enumerate() {
-        obj[jj] = server_cost(prob, cut, bc);
-    }
+    obj[..nj].copy_from_slice(costs);
     obj[nj] = 1.0; // T1
     obj[nj + 1] = 1.0; // T2
     let mut lp = Lp::new(n, obj);
@@ -67,15 +111,11 @@ pub fn solve(prob: &Problem, alloc: &Allocation, psd_dbm_hz: &[f64])
     ones[..nj].fill(1.0);
     lp.eq(ones, 1.0);
     // C8 / C9 per client.
-    for i in 0..c {
+    for i in 0..n_clients {
         let mut c8 = vec![0.0; n];
         let mut c9 = vec![0.0; n];
-        for (jj, &cut) in cands.iter().enumerate() {
-            c8[jj] = prob.client_fp_seconds(i, cut)
-                + prob.uplink_bits(cut) / up[i].max(1e-9);
-            c9[jj] = prob.downlink_bits(cut) / dn[i].max(1e-9)
-                + prob.client_bp_seconds(i, cut);
-        }
+        c8[..nj].copy_from_slice(&c8m[i * nj..(i + 1) * nj]);
+        c9[..nj].copy_from_slice(&c9m[i * nj..(i + 1) * nj]);
         c8[nj] = -1.0;
         lp.leq(c8, 0.0);
         c9[nj + 1] = -1.0;
@@ -92,7 +132,8 @@ pub fn solve(prob: &Problem, alloc: &Allocation, psd_dbm_hz: &[f64])
     Ok((cands[jj], stats))
 }
 
-/// Exhaustive reference: evaluate the true round objective at every cut.
+/// Exhaustive reference: evaluate the true round objective at every cut
+/// (rates recomputed from scratch per candidate).
 pub fn exhaustive(prob: &Problem, alloc: &Allocation, psd_dbm_hz: &[f64])
     -> (usize, f64) {
     let mut best = (prob.profile.cut_candidates[0], f64::INFINITY);
@@ -103,6 +144,24 @@ pub fn exhaustive(prob: &Problem, alloc: &Allocation, psd_dbm_hz: &[f64])
             cut,
         };
         let t = prob.objective(&d);
+        if t < best.1 {
+            best = (cut, t);
+        }
+    }
+    best
+}
+
+/// Exhaustive cut sweep on the fast path: rates computed once, then each
+/// candidate is an O(C) table evaluation. Bit-identical result to
+/// [`exhaustive`].
+pub fn exhaustive_with(prob: &Problem, ev: &Evaluator, alloc: &Allocation,
+                       psd_dbm_hz: &[f64]) -> (usize, f64) {
+    let mut up = Vec::new();
+    let mut dn = Vec::new();
+    ev.fill_rates(alloc, psd_dbm_hz, &mut up, &mut dn);
+    let mut best = (prob.profile.cut_candidates[0], f64::INFINITY);
+    for &cut in &prob.profile.cut_candidates {
+        let t = ev.objective_with_rates(cut, &up, &dn);
         if t < best.1 {
             best = (cut, t);
         }
@@ -200,6 +259,32 @@ mod tests {
                 "milp cut {cut_milp} ({t_milp}) vs exhaustive {cut_ex} ({t_ex})"
             );
         });
+    }
+
+    #[test]
+    fn fast_paths_match_reference_solvers() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let ev = Evaluator::new(&prob);
+        let alloc = round_robin(&cfg);
+        let psd = vec![-63.0; 20];
+        let (cut_ref, _) = solve(&prob, &alloc, &psd).unwrap();
+        let (cut_fast, stats) = solve_with(&prob, &ev, &alloc, &psd).unwrap();
+        assert_eq!(cut_ref, cut_fast);
+        assert!(stats.lp_solves >= 1);
+        let (ex_cut, ex_t) = exhaustive(&prob, &alloc, &psd);
+        let (fx_cut, fx_t) = exhaustive_with(&prob, &ev, &alloc, &psd);
+        assert_eq!(ex_cut, fx_cut);
+        assert_eq!(ex_t.to_bits(), fx_t.to_bits());
     }
 
     #[test]

@@ -1,0 +1,500 @@
+//! Decision-evaluation fast path for the §V resource optimizer.
+//!
+//! [`Problem::objective`] is the *reference* implementation of the eq. 23
+//! round latency: it recomputes every uplink/downlink rate, rebuilds the
+//! per-stage latency vectors, and allocates fresh buffers on every call —
+//! fine for one evaluation, ruinous inside BCD's inner loops where the same
+//! deployment is evaluated thousands of times with only one block changed.
+//!
+//! [`Evaluator`] precomputes, per [`Problem`]:
+//!
+//! - the per-(client, subchannel) channel-gain terms of eq. 14, so one
+//!   subchannel's uplink rate at a given PSD is two transcendentals;
+//! - the decision-independent downlink rates (eq. 20; the server PSD is
+//!   fixed) and the constant broadcast rate (eq. 18);
+//! - the per-cut FLOP/payload tables (ρ_j, ϖ_j, ψ_j, χ_j aggregates) and
+//!   per-(client, cut) FP/BP seconds, so the cut-dependent stage terms of
+//!   eqs. 13, 15–17, 19, 21–22 are table lookups;
+//! - the per-(client, subchannel) linear SNR coefficients the P2 power
+//!   solver consumes.
+//!
+//! Every arithmetic expression mirrors the reference implementation
+//! operation-for-operation, so a full evaluation through the fast path is
+//! **bit-identical** to `Problem::objective` — the optimizer's trajectory,
+//! the accepted decisions, and the generated figures do not change, they
+//! only arrive faster. Scratch buffers live inside the evaluator; steady
+//! state evaluation performs no heap allocation.
+
+use crate::channel::rate::{self, Allocation};
+use crate::config::dbm_to_w;
+
+use super::{Decision, Problem};
+
+/// Precomputed evaluation tables for one [`Problem`] instance. Owns its
+/// data — no borrows of the originating problem — so it can be built once
+/// and moved freely (e.g. into a sweep worker).
+#[derive(Debug, Clone)]
+pub struct Evaluator {
+    n_clients: usize,
+    n_subchannels: usize,
+    /// Per-subchannel bandwidth B (Hz) — uniform, from the config.
+    bw: f64,
+    noise_dbm_hz: f64,
+    /// `10·log10(G·γ_ik)` — the dB gain term of eq. 14, `[i·M + k]`.
+    gdb: Vec<f64>,
+    /// Decision-independent downlink rate of subchannel k for client i
+    /// (eq. 20 at the fixed server PSD), `[i·M + k]`.
+    dlr: Vec<f64>,
+    /// Linear SNR coefficient `G·γ_ik / σ²` for P2, `[i·M + k]`.
+    coeff: Vec<f64>,
+    /// Constant broadcast rate R^B (eq. 18).
+    bc_rate: f64,
+    /// Cut-layer candidates of the profile (copied).
+    cut_candidates: Vec<usize>,
+    // ---- per-cut tables, 1-based cut index j (slot 0 unused) ----
+    /// Uplink payload bits b·ψ_j.
+    ub: Vec<f64>,
+    /// Unicast downlink payload bits (b − ⌈φb⌉)·χ_j.
+    db: Vec<f64>,
+    /// T_s^F(j) — eq. 16.
+    sfp: Vec<f64>,
+    /// T_s^B(j) — eq. 17.
+    sbp: Vec<f64>,
+    /// T^B(j) — eq. 19 (constant broadcast rate folded in).
+    tbc: Vec<f64>,
+    /// T_i^F(j) — eq. 13, `[j·C + i]`.
+    cfp: Vec<f64>,
+    /// T_i^B(j) — eq. 22, `[j·C + i]`.
+    cbp: Vec<f64>,
+    // ---- reusable scratch (steady-state evaluation is allocation-free) --
+    up: Vec<f64>,
+    dn: Vec<f64>,
+}
+
+impl Evaluator {
+    /// Precompute all tables for `prob`. O(C·M) transcendentals plus
+    /// O(L·C) table fills — amortized over every objective evaluation that
+    /// follows.
+    pub fn new(prob: &Problem) -> Evaluator {
+        let c = prob.n_clients();
+        let m = prob.n_subchannels();
+        let cfg = prob.cfg;
+        let p = prob.profile;
+        let nl = p.n_layers();
+        let b = prob.batch as f64;
+        let cc = c as f64;
+        // ⌈φb⌉ exactly as the latency model computes it.
+        let magg = (prob.phi * b).ceil() as usize as f64;
+
+        let noise_w_hz = dbm_to_w(cfg.noise_dbm_hz);
+        let mut gdb = vec![0.0; c * m];
+        let mut dlr = vec![0.0; c * m];
+        let mut coeff = vec![0.0; c * m];
+        for i in 0..c {
+            for k in 0..m {
+                let g = prob.ch.gain[i][k];
+                gdb[i * m + k] = 10.0 * (cfg.antenna_gain * g).log10();
+                let snr = rate::snr_linear(
+                    cfg.p_dl_dbm_hz,
+                    cfg.antenna_gain,
+                    g,
+                    cfg.noise_dbm_hz,
+                );
+                dlr[i * m + k] =
+                    rate::subchannel_rate(cfg.subchannel_bw_hz, snr);
+                coeff[i * m + k] = cfg.antenna_gain * g / noise_w_hz;
+            }
+        }
+        let bc_rate = rate::broadcast_rate(cfg, prob.ch);
+
+        let f = prob.dep.f_clients();
+        let mut ub = vec![0.0; nl];
+        let mut db = vec![0.0; nl];
+        let mut sfp = vec![0.0; nl];
+        let mut sbp = vec![0.0; nl];
+        let mut tbc = vec![0.0; nl];
+        let mut cfp = vec![0.0; nl * c];
+        let mut cbp = vec![0.0; nl * c];
+        for j in 1..nl {
+            let psi = p.psi_bits(j);
+            let chi = p.chi_bits(j);
+            ub[j] = b * psi;
+            db[j] = (b - magg) * chi;
+            sfp[j] = cc * b * cfg.kappa_server * p.server_fp_flops(j)
+                / cfg.f_server;
+            let eff_samples = magg + cc * (b - magg);
+            sbp[j] = (eff_samples * cfg.kappa_server * p.server_bp_flops(j)
+                + cc * b * cfg.kappa_server * p.last_layer_bp_flops())
+                / cfg.f_server;
+            tbc[j] = magg * chi / bc_rate.max(1e-9);
+            let phi_cf = p.client_fp_flops(j);
+            let phi_cb = p.client_bp_flops(j);
+            for i in 0..c {
+                cfp[j * c + i] = b * cfg.kappa_client * phi_cf / f[i];
+                cbp[j * c + i] = b * cfg.kappa_client * phi_cb / f[i];
+            }
+        }
+
+        Evaluator {
+            n_clients: c,
+            n_subchannels: m,
+            bw: cfg.subchannel_bw_hz,
+            noise_dbm_hz: cfg.noise_dbm_hz,
+            gdb,
+            dlr,
+            coeff,
+            bc_rate,
+            cut_candidates: p.cut_candidates.clone(),
+            ub,
+            db,
+            sfp,
+            sbp,
+            tbc,
+            cfp,
+            cbp,
+            up: vec![0.0; c],
+            dn: vec![0.0; c],
+        }
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.n_clients
+    }
+
+    pub fn n_subchannels(&self) -> usize {
+        self.n_subchannels
+    }
+
+    /// Constant broadcast rate R^B (eq. 18).
+    pub fn broadcast_rate(&self) -> f64 {
+        self.bc_rate
+    }
+
+    pub fn cut_candidates(&self) -> &[usize] {
+        &self.cut_candidates
+    }
+
+    /// Uplink rate of subchannel k for client i at PSD `psd_dbm_hz`
+    /// (one eq. 14 summand) — bit-identical to
+    /// `subchannel_rate(B, snr_linear(p, G, γ, σ²))`.
+    #[inline]
+    pub fn chan_uplink_rate(&self, i: usize, k: usize, psd_dbm_hz: f64)
+        -> f64 {
+        let num_db = psd_dbm_hz + self.gdb[i * self.n_subchannels + k];
+        let snr = 10f64.powf((num_db - self.noise_dbm_hz) / 10.0);
+        self.bw * (1.0 + snr).log2()
+    }
+
+    /// Downlink rate of subchannel k for client i (decision-independent).
+    #[inline]
+    pub fn chan_downlink_rate(&self, i: usize, k: usize) -> f64 {
+        self.dlr[i * self.n_subchannels + k]
+    }
+
+    /// Linear SNR coefficient `G·γ_ik / σ²` — the P2 water-filling input;
+    /// bit-identical to [`Problem::snr_coeff`].
+    #[inline]
+    pub fn snr_coeff(&self, i: usize, k: usize) -> f64 {
+        self.coeff[i * self.n_subchannels + k]
+    }
+
+    /// Client i's total uplink rate under `alloc`/`psd` — accumulated in
+    /// ascending-k order, matching `rate::uplink_rates` bit-for-bit.
+    pub fn uplink_rate_of(&self, i: usize, alloc: &Allocation, psd: &[f64])
+        -> f64 {
+        let mut r = 0.0;
+        for k in 0..self.n_subchannels {
+            if alloc.owner[k] == Some(i) {
+                r += self.chan_uplink_rate(i, k, psd[k]);
+            }
+        }
+        r
+    }
+
+    /// Client i's total downlink rate under `alloc`.
+    pub fn downlink_rate_of(&self, i: usize, alloc: &Allocation) -> f64 {
+        let mut r = 0.0;
+        for k in 0..self.n_subchannels {
+            if alloc.owner[k] == Some(i) {
+                r += self.chan_downlink_rate(i, k);
+            }
+        }
+        r
+    }
+
+    /// Fill per-client uplink/downlink rates into caller buffers (resized
+    /// here) — one pass over the subchannels, no allocation in steady
+    /// state.
+    pub fn fill_rates(&self, alloc: &Allocation, psd: &[f64],
+                      up: &mut Vec<f64>, dn: &mut Vec<f64>) {
+        up.clear();
+        up.resize(self.n_clients, 0.0);
+        dn.clear();
+        dn.resize(self.n_clients, 0.0);
+        for k in 0..self.n_subchannels {
+            if let Some(i) = alloc.owner[k] {
+                up[i] += self.chan_uplink_rate(i, k, psd[k]);
+                dn[i] += self.chan_downlink_rate(i, k);
+            }
+        }
+    }
+
+    /// T_i^F(j) (seconds) — table lookup.
+    #[inline]
+    pub fn client_fp_seconds(&self, i: usize, cut: usize) -> f64 {
+        self.cfp[cut * self.n_clients + i]
+    }
+
+    /// T_i^B(j) (seconds) — table lookup.
+    #[inline]
+    pub fn client_bp_seconds(&self, i: usize, cut: usize) -> f64 {
+        self.cbp[cut * self.n_clients + i]
+    }
+
+    /// Uplink payload bits b·ψ_j.
+    #[inline]
+    pub fn uplink_bits(&self, cut: usize) -> f64 {
+        self.ub[cut]
+    }
+
+    /// Unicast downlink payload bits (b − ⌈φb⌉)·χ_j.
+    #[inline]
+    pub fn downlink_bits(&self, cut: usize) -> f64 {
+        self.db[cut]
+    }
+
+    /// Client i's uplink-phase time T_i^F + T_i^U at uplink rate `up_i`.
+    #[inline]
+    pub fn uplink_phase_time(&self, i: usize, cut: usize, up_i: f64) -> f64 {
+        self.client_fp_seconds(i, cut) + self.ub[cut] / up_i.max(1e-9)
+    }
+
+    /// Client i's downlink-phase time T_i^D + T_i^B at downlink rate
+    /// `dn_i`.
+    #[inline]
+    pub fn downlink_phase_time(&self, i: usize, cut: usize, dn_i: f64)
+        -> f64 {
+        self.db[cut] / dn_i.max(1e-9) + self.client_bp_seconds(i, cut)
+    }
+
+    /// μ-weighted server-side cost `T_s^F(j) + T_s^B(j) + T^B(j)` — the P3
+    /// objective coefficient for candidate `cut`.
+    #[inline]
+    pub fn server_cost(&self, cut: usize) -> f64 {
+        self.sfp[cut] + self.sbp[cut] + self.tbc[cut]
+    }
+
+    /// Eq. 23 round total given per-client rates — O(C), no allocation.
+    pub fn objective_with_rates(&self, cut: usize, up: &[f64], dn: &[f64])
+        -> f64 {
+        let c = self.n_clients;
+        let mut upmax = 0.0f64;
+        for i in 0..c {
+            upmax = upmax.max(self.uplink_phase_time(i, cut, up[i]));
+        }
+        let mut dnmax = 0.0f64;
+        for i in 0..c {
+            dnmax = dnmax.max(self.downlink_phase_time(i, cut, dn[i]));
+        }
+        upmax + self.sfp[cut] + self.sbp[cut] + self.tbc[cut] + dnmax
+    }
+
+    /// Full objective of a decision — bit-identical to
+    /// [`Problem::objective`], allocation-free in steady state.
+    pub fn objective(&mut self, d: &Decision) -> f64 {
+        let mut up = std::mem::take(&mut self.up);
+        let mut dn = std::mem::take(&mut self.dn);
+        self.fill_rates(&d.alloc, &d.psd_dbm_hz, &mut up, &mut dn);
+        let t = self.objective_with_rates(d.cut, &up, &dn);
+        self.up = up;
+        self.dn = dn;
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{ChannelRealization, Deployment};
+    use crate::config::NetworkConfig;
+    use crate::optim::test_support::{fixture, round_robin};
+    use crate::profile::resnet18;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn default_prob<'a>(
+        cfg: &'a NetworkConfig,
+        profile: &'a crate::profile::NetworkProfile,
+        dep: &'a Deployment,
+        ch: &'a ChannelRealization,
+    ) -> Problem<'a> {
+        Problem { cfg, profile, dep, ch, batch: 64, phi: 0.5 }
+    }
+
+    #[test]
+    fn matches_reference_on_fixture() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = default_prob(&cfg, &profile, &dep, &ch);
+        let mut ev = Evaluator::new(&prob);
+        for cut in [1usize, 4, 9, 14, 17] {
+            let d = Decision {
+                alloc: round_robin(&cfg),
+                psd_dbm_hz: vec![-62.0; cfg.n_subchannels],
+                cut,
+            };
+            let reference = prob.objective(&d);
+            let fast = ev.objective(&d);
+            assert!(
+                (fast - reference).abs() <= 1e-13 * reference,
+                "cut {cut}: fast {fast} vs reference {reference}"
+            );
+        }
+    }
+
+    #[test]
+    fn rates_match_rate_module() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = default_prob(&cfg, &profile, &dep, &ch);
+        let ev = Evaluator::new(&prob);
+        let alloc = round_robin(&cfg);
+        let psd: Vec<f64> =
+            (0..cfg.n_subchannels).map(|k| -70.0 + k as f64 * 0.5).collect();
+        let up_ref = rate::uplink_rates(&cfg, &ch, &alloc, &psd);
+        let dn_ref = rate::downlink_rates(&cfg, &ch, &alloc);
+        let mut up = Vec::new();
+        let mut dn = Vec::new();
+        ev.fill_rates(&alloc, &psd, &mut up, &mut dn);
+        assert_eq!(up, up_ref, "uplink rates must be bit-identical");
+        assert_eq!(dn, dn_ref, "downlink rates must be bit-identical");
+        assert_eq!(ev.broadcast_rate(), rate::broadcast_rate(&cfg, &ch));
+        for i in 0..cfg.n_clients {
+            let r = ev.uplink_rate_of(i, &alloc, &psd);
+            assert_eq!(r, up_ref[i]);
+            assert_eq!(ev.downlink_rate_of(i, &alloc), dn_ref[i]);
+        }
+    }
+
+    #[test]
+    fn tables_match_problem_accessors() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = default_prob(&cfg, &profile, &dep, &ch);
+        let ev = Evaluator::new(&prob);
+        for &cut in &profile.cut_candidates {
+            assert_eq!(ev.uplink_bits(cut), prob.uplink_bits(cut));
+            assert_eq!(ev.downlink_bits(cut), prob.downlink_bits(cut));
+            for i in 0..cfg.n_clients {
+                assert_eq!(
+                    ev.client_fp_seconds(i, cut),
+                    prob.client_fp_seconds(i, cut)
+                );
+                assert_eq!(
+                    ev.client_bp_seconds(i, cut),
+                    prob.client_bp_seconds(i, cut)
+                );
+                for k in 0..cfg.n_subchannels {
+                    assert_eq!(ev.snr_coeff(i, k), prob.snr_coeff(i, k));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_evaluator_matches_reference_objective() {
+        // The satellite acceptance check: ≤ 1e-9 relative error across
+        // random deployments, allocations, PSDs, cuts and φ ∈ {0, ½, 1}.
+        check("evaluator == reference objective", 40, |g| {
+            let mut cfg = NetworkConfig::default();
+            cfg.n_clients = g.usize_in(1, 6);
+            cfg.n_subchannels = cfg.n_clients + g.usize_in(0, 10);
+            cfg.f_server = g.f64_in(1e9, 9e9);
+            let profile = resnet18::profile();
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let dep = Deployment::generate(&cfg, &mut rng);
+            let ch = ChannelRealization::average(&dep);
+            let phi = *g.choose(&[0.0, 0.5, 1.0]);
+            let batch = g.usize_in(1, 128);
+            let prob = Problem {
+                cfg: &cfg,
+                profile: &profile,
+                dep: &dep,
+                ch: &ch,
+                batch,
+                phi,
+            };
+            let mut ev = Evaluator::new(&prob);
+            // Random (possibly starving) complete-ownership allocation.
+            let mut alloc = Allocation::empty(cfg.n_subchannels);
+            for k in 0..cfg.n_subchannels {
+                alloc.assign(k, g.usize_in(0, cfg.n_clients - 1));
+            }
+            let psd: Vec<f64> = (0..cfg.n_subchannels)
+                .map(|_| g.f64_in(-78.0, -55.0))
+                .collect();
+            let cut = *g.choose(&profile.cut_candidates);
+            let d = Decision { alloc, psd_dbm_hz: psd, cut };
+            let reference = prob.objective(&d);
+            let fast = ev.objective(&d);
+            assert!(
+                (fast - reference).abs()
+                    <= 1e-9 * reference.abs().max(1e-12),
+                "fast {fast} vs reference {reference} \
+                 (C={} M={} cut={cut} phi={phi})",
+                cfg.n_clients,
+                cfg.n_subchannels
+            );
+        });
+    }
+
+    #[test]
+    fn objective_with_rates_sweeps_cuts_consistently() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = default_prob(&cfg, &profile, &dep, &ch);
+        let mut ev = Evaluator::new(&prob);
+        let alloc = round_robin(&cfg);
+        let psd = vec![-62.0; cfg.n_subchannels];
+        let mut up = Vec::new();
+        let mut dn = Vec::new();
+        ev.fill_rates(&alloc, &psd, &mut up, &mut dn);
+        for &cut in &profile.cut_candidates {
+            let d = Decision {
+                alloc: alloc.clone(),
+                psd_dbm_hz: psd.clone(),
+                cut,
+            };
+            let full = ev.objective(&d);
+            let via_rates = ev.objective_with_rates(cut, &up, &dn);
+            assert_eq!(full.to_bits(), via_rates.to_bits());
+        }
+    }
+
+    #[test]
+    fn server_cost_matches_stage_terms() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = default_prob(&cfg, &profile, &dep, &ch);
+        let ev = Evaluator::new(&prob);
+        for &cut in &profile.cut_candidates {
+            let d = Decision {
+                alloc: round_robin(&cfg),
+                psd_dbm_hz: vec![-62.0; cfg.n_subchannels],
+                cut,
+            };
+            let s = prob.stage_latencies(&d);
+            let expect = s.server_fp + s.server_bp + s.broadcast;
+            let got = ev.server_cost(cut);
+            assert!(
+                (got - expect).abs() <= 1e-12 * expect.max(1e-12),
+                "cut {cut}: {got} vs {expect}"
+            );
+        }
+    }
+}

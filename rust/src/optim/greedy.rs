@@ -11,15 +11,156 @@
 //! subchannel with the highest mean gain for that client. A client whose
 //! power budget (C5) can no longer cover an extra subchannel at the current
 //! PSD is removed from the candidate set (line 13–14).
+//!
+//! Two implementations share the algorithm: [`allocate_with`] rides the
+//! [`Evaluator`] fast path (incremental per-client rates, table-lookup
+//! stage terms, no per-iteration allocation) and is what BCD and the
+//! baselines use; [`allocate_reference`] recomputes everything from scratch
+//! each iteration and is kept as the bit-for-bit oracle — the two produce
+//! *identical* allocations because every compared quantity is computed to
+//! the same bits.
 
 use crate::channel::rate::{self, Allocation};
 use crate::config::dbm_to_w;
 
+use super::eval::Evaluator;
 use super::{Decision, Problem};
 
 /// Greedy allocation under the decision's current PSD plan and cut layer.
 /// Returns a complete allocation (C2) respecting C5 for the given PSDs.
+/// Builds a throwaway [`Evaluator`]; callers that already hold one should
+/// use [`allocate_with`].
 pub fn allocate(prob: &Problem, psd_dbm_hz: &[f64], cut: usize) -> Allocation {
+    let ev = Evaluator::new(prob);
+    allocate_with(prob, &ev, psd_dbm_hz, cut)
+}
+
+/// Algorithm 2 on the evaluator fast path.
+pub fn allocate_with(prob: &Problem, ev: &Evaluator, psd_dbm_hz: &[f64],
+                     cut: usize) -> Allocation {
+    let c = prob.n_clients();
+    let m = prob.n_subchannels();
+    assert!(m >= c, "need at least one subchannel per client");
+    let mut alloc = Allocation::empty(m);
+    let mut idle: Vec<usize> = (0..m).collect();
+
+    // ---- Phase 1: one subchannel each, slowest client first (lines 2–7).
+    let mut order: Vec<usize> = (0..c).collect();
+    order.sort_by(|&a, &b| {
+        prob.dep.clients[a]
+            .f_client
+            .partial_cmp(&prob.dep.clients[b].f_client)
+            .unwrap()
+    });
+    for &i in &order {
+        // "best propagation characteristics": lowest F_k / B_k.
+        let (pos, &k) = idle
+            .iter()
+            .enumerate()
+            .min_by(|(_, &ka), (_, &kb)| {
+                let fa = prob.dep.subchannels[ka].center_freq_hz
+                    / prob.dep.subchannels[ka].bandwidth_hz;
+                let fb = prob.dep.subchannels[kb].center_freq_hz
+                    / prob.dep.subchannels[kb].bandwidth_hz;
+                fa.partial_cmp(&fb).unwrap()
+            })
+            .unwrap();
+        alloc.assign(k, i);
+        idle.remove(pos);
+    }
+
+    // ---- Phase 2: feed the straggler (lines 8–18) with incrementally
+    // maintained rates — only the straggler's sums change per assignment.
+    let p_max_w = dbm_to_w(prob.cfg.p_max_dbm);
+    let mut active: Vec<bool> = vec![true; c];
+    let mut up: Vec<f64> = (0..c)
+        .map(|i| ev.uplink_rate_of(i, &alloc, psd_dbm_hz))
+        .collect();
+    let mut dn: Vec<f64> =
+        (0..c).map(|i| ev.downlink_rate_of(i, &alloc)).collect();
+    let mut candidates: Vec<usize> = Vec::with_capacity(c);
+    while !idle.is_empty() {
+        // Straggler selection (lines 9–11) from the maintained rates.
+        let phase_time = |i: usize| {
+            (
+                ev.uplink_phase_time(i, cut, up[i]),
+                ev.downlink_phase_time(i, cut, dn[i]),
+            )
+        };
+        candidates.clear();
+        candidates.extend((0..c).filter(|&i| active[i]));
+        if candidates.is_empty() {
+            break;
+        }
+        let n1 = *candidates
+            .iter()
+            .max_by(|&&a, &&b| {
+                phase_time(a).0.partial_cmp(&phase_time(b).0).unwrap()
+            })
+            .unwrap();
+        let n2 = *candidates
+            .iter()
+            .max_by(|&&a, &&b| {
+                phase_time(a).1.partial_cmp(&phase_time(b).1).unwrap()
+            })
+            .unwrap();
+        let total = |i: usize| {
+            let (a, b) = phase_time(i);
+            a + b
+        };
+        let n = if total(n1) >= total(n2) { n1 } else { n2 };
+        // Best idle subchannel for the straggler: highest mean gain.
+        let (pos, &k) = idle
+            .iter()
+            .enumerate()
+            .max_by(|(_, &ka), (_, &kb)| {
+                prob.ch.gain[n][ka].partial_cmp(&prob.ch.gain[n][kb]).unwrap()
+            })
+            .unwrap();
+        // C5 check at the current PSD (lines 13–16). The ascending-k scan
+        // reproduces the reference's `channels_of` summation order.
+        let extra_w = dbm_to_w(psd_dbm_hz[k])
+            * prob.dep.subchannels[k].bandwidth_hz;
+        let current_w: f64 = (0..m)
+            .filter(|&kk| alloc.owner[kk] == Some(n))
+            .map(|kk| {
+                dbm_to_w(psd_dbm_hz[kk])
+                    * prob.dep.subchannels[kk].bandwidth_hz
+            })
+            .sum();
+        if current_w + extra_w > p_max_w {
+            active[n] = false;
+            if active.iter().all(|a| !a) {
+                // Nobody can take more power: dump remaining channels on
+                // the best-gain owners without power (PSD 0 handled by the
+                // caller's next power-control pass).
+                for &kk in &idle {
+                    let best = (0..c)
+                        .max_by(|&a, &b| {
+                            prob.ch.gain[a][kk]
+                                .partial_cmp(&prob.ch.gain[b][kk])
+                                .unwrap()
+                        })
+                        .unwrap();
+                    alloc.assign(kk, best);
+                }
+                idle.clear();
+            }
+            continue;
+        }
+        alloc.assign(k, n);
+        idle.remove(pos);
+        up[n] = ev.uplink_rate_of(n, &alloc, psd_dbm_hz);
+        dn[n] = ev.downlink_rate_of(n, &alloc);
+    }
+    alloc
+}
+
+/// The pre-fast-path implementation, recomputing all C×M rates and stage
+/// terms from scratch on every inner iteration. Kept as the oracle for the
+/// equivalence property test and the before/after benchmark.
+pub fn allocate_reference(prob: &Problem, psd_dbm_hz: &[f64], cut: usize)
+    -> Allocation {
     let c = prob.n_clients();
     let m = prob.n_subchannels();
     assert!(m >= c, "need at least one subchannel per client");
@@ -266,6 +407,7 @@ mod tests {
             c.los = true;
         }
         dep.clients[2].f_client = 0.4e9; // straggler
+        dep.refresh_f_clients();
         let ch = ChannelRealization::average(&dep);
         let prob = Problem {
             cfg: &cfg,
@@ -311,6 +453,42 @@ mod tests {
             for i in 0..cfg.n_clients {
                 assert!(alloc.count_of(i) >= 1);
             }
+        });
+    }
+
+    #[test]
+    fn property_fast_path_equals_reference_allocation() {
+        // The fast path must reproduce the reference decision process
+        // exactly — same straggler picks, same C5 freezes, same dumps —
+        // because every compared quantity is computed to the same bits.
+        check("greedy fast == reference", 20, |g| {
+            let mut cfg = NetworkConfig::default();
+            cfg.n_clients = g.usize_in(1, 8);
+            cfg.n_subchannels = cfg.n_clients + g.usize_in(0, 16);
+            cfg.f_server = g.f64_in(1e9, 9e9);
+            let profile = resnet18::profile();
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let dep = Deployment::generate(&cfg, &mut rng);
+            let ch = ChannelRealization::average(&dep);
+            let prob = Problem {
+                cfg: &cfg,
+                profile: &profile,
+                dep: &dep,
+                ch: &ch,
+                batch: 64,
+                phi: *g.choose(&[0.0, 0.5, 1.0]),
+            };
+            // Mix mild and hot PSDs so the C5-freeze and dump branches
+            // are exercised too.
+            let level = *g.choose(&[-70.0, -62.0, -40.0]);
+            let psd = vec![level; cfg.n_subchannels];
+            let cut = *g.choose(&profile.cut_candidates);
+            let fast = allocate(&prob, &psd, cut);
+            let reference = allocate_reference(&prob, &psd, cut);
+            assert_eq!(
+                fast.owner, reference.owner,
+                "allocations diverged (level {level}, cut {cut})"
+            );
         });
     }
 }

@@ -14,11 +14,15 @@
 //! water-filling), [`cutlayer`] (P3, MILP via the [`milp`] branch-and-bound
 //! substrate with a two-phase simplex LP relaxation), and [`lp`] (P4,
 //! closed form eqs. 33–34). [`baselines`] implements comparison schemes
-//! a–d of §VII-C.
+//! a–d of §VII-C. [`eval`] is the decision-evaluation fast path: per-problem
+//! precomputed SNR/FLOP/payload tables serving allocation-free objective
+//! evaluation to all of the above (with [`Problem::objective`] kept as the
+//! from-scratch reference).
 
 pub mod baselines;
 pub mod bcd;
 pub mod cutlayer;
+pub mod eval;
 pub mod greedy;
 pub mod lp;
 pub mod milp;
@@ -124,7 +128,6 @@ impl<'a> Problem<'a> {
     /// Full EPSL stage latencies for a decision (objective eq. 23).
     pub fn stage_latencies(&self, d: &Decision) -> StageLatencies {
         let (up, dn, bc) = self.rates(d);
-        let f_clients = self.dep.f_clients();
         let inp = LatencyInputs {
             profile: self.profile,
             cut: d.cut,
@@ -133,7 +136,7 @@ impl<'a> Problem<'a> {
             f_server: self.cfg.f_server,
             kappa_server: self.cfg.kappa_server,
             kappa_client: self.cfg.kappa_client,
-            f_clients: &f_clients,
+            f_clients: self.dep.f_clients(),
             uplink: &up,
             downlink: &dn,
             broadcast: bc,

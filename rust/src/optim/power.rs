@@ -20,6 +20,7 @@ use crate::channel::rate::Allocation;
 use crate::config::{dbm_to_w, lin_to_db};
 use crate::error::{Error, Result};
 
+use super::eval::Evaluator;
 use super::Problem;
 
 /// Numeric floor for "zero" PSD in dBm/Hz (≈ 1e-40 W/Hz).
@@ -111,14 +112,11 @@ pub fn max_rate_at_power(g: &[f64], bw: f64, power_w: f64)
     (psd, rate)
 }
 
-/// Solve the power block for a fixed allocation and cut layer.
+/// Solve the power block for a fixed allocation and cut layer, deriving
+/// the per-client coefficients from the [`Problem`] (reference setup).
 pub fn solve(prob: &Problem, alloc: &Allocation, cut: usize)
     -> Result<PowerSolution> {
     let c = prob.n_clients();
-    let bw = prob.cfg.subchannel_bw_hz;
-    let p_max_w = dbm_to_w(prob.cfg.p_max_dbm);
-    let p_th_w = dbm_to_w(prob.cfg.p_th_dbm);
-
     // Per-client channel sets and SNR coefficients.
     let channels: Vec<Vec<usize>> =
         (0..c).map(|i| alloc.channels_of(i)).collect();
@@ -136,6 +134,44 @@ pub fn solve(prob: &Problem, alloc: &Allocation, cut: usize)
     let a: Vec<f64> =
         (0..c).map(|i| prob.client_fp_seconds(i, cut)).collect();
     let bits = prob.uplink_bits(cut);
+    solve_core(prob, channels, coeffs, a, bits)
+}
+
+/// Solve the power block with the coefficients served from a prebuilt
+/// [`Evaluator`] — bit-identical to [`solve`] (the evaluator's tables are
+/// computed with the same expressions), but without re-deriving the SNR
+/// coefficients and client FP times on every BCD iteration.
+pub fn solve_with(prob: &Problem, ev: &Evaluator, alloc: &Allocation,
+                  cut: usize) -> Result<PowerSolution> {
+    let c = prob.n_clients();
+    let channels: Vec<Vec<usize>> =
+        (0..c).map(|i| alloc.channels_of(i)).collect();
+    for (i, chs) in channels.iter().enumerate() {
+        if chs.is_empty() {
+            return Err(Error::Optim(format!(
+                "client {i} owns no subchannel — allocation must precede \
+                 power control"
+            )));
+        }
+    }
+    let coeffs: Vec<Vec<f64>> = (0..c)
+        .map(|i| channels[i].iter().map(|&k| ev.snr_coeff(i, k)).collect())
+        .collect();
+    let a: Vec<f64> =
+        (0..c).map(|i| ev.client_fp_seconds(i, cut)).collect();
+    let bits = ev.uplink_bits(cut);
+    solve_core(prob, channels, coeffs, a, bits)
+}
+
+/// Shared KKT solver: outer bisection on T₁, inner water-filling per
+/// client.
+fn solve_core(prob: &Problem, channels: Vec<Vec<usize>>,
+              coeffs: Vec<Vec<f64>>, a: Vec<f64>, bits: f64)
+    -> Result<PowerSolution> {
+    let c = prob.n_clients();
+    let bw = prob.cfg.subchannel_bw_hz;
+    let p_max_w = dbm_to_w(prob.cfg.p_max_dbm);
+    let p_th_w = dbm_to_w(prob.cfg.p_th_dbm);
 
     // Feasibility of a target T1: per-client minimal powers must satisfy
     // C5 individually and C6 in aggregate.
@@ -379,6 +415,29 @@ mod tests {
             t1s.push(solve(&prob, &alloc, cut).unwrap().t1);
         }
         assert!(t1s[0] >= t1s[1] && t1s[1] >= t1s[2], "{t1s:?}");
+    }
+
+    #[test]
+    fn solve_with_evaluator_matches_reference_setup() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let ev = crate::optim::eval::Evaluator::new(&prob);
+        for cut in [2usize, 7, 13] {
+            let alloc = greedy::allocate(&prob, &vec![-65.0; 20], cut);
+            let a = solve(&prob, &alloc, cut).unwrap();
+            let b = solve_with(&prob, &ev, &alloc, cut).unwrap();
+            assert_eq!(a.t1.to_bits(), b.t1.to_bits(), "cut {cut}");
+            assert_eq!(a.psd_dbm_hz, b.psd_dbm_hz, "cut {cut}");
+        }
     }
 
     #[test]

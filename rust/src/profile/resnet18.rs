@@ -13,6 +13,8 @@
 //! latency results match the paper's model). [`flops`] cross-checks the
 //! orders of magnitude.
 
+use std::sync::OnceLock;
+
 use super::{Layer, LayerKind, NetworkProfile};
 
 /// Rows exactly as printed in Table IV, in forward order.
@@ -38,8 +40,9 @@ const ROWS: &[(&str, LayerKind, f64, f64, f64)] = &[
     ("FC", LayerKind::Fc, 0.0137, 0.0036, 2.67e-5),
 ];
 
-/// Build the ResNet-18 profile from Table IV.
-pub fn profile() -> NetworkProfile {
+static PROFILE: OnceLock<NetworkProfile> = OnceLock::new();
+
+fn build() -> NetworkProfile {
     let layers: Vec<Layer> = ROWS
         .iter()
         .map(|&(name, kind, params_mib, fp_mflops, smashed_mib)| Layer {
@@ -56,6 +59,17 @@ pub fn profile() -> NetworkProfile {
     NetworkProfile { name: "resnet18-64", layers, cut_candidates }
 }
 
+/// The cached ResNet-18 profile from Table IV — the zero-copy accessor for
+/// hot paths (the §V latency model evaluates it on every simulated round).
+pub fn profile_static() -> &'static NetworkProfile {
+    PROFILE.get_or_init(build)
+}
+
+/// Owned copy of the ResNet-18 profile (cached build, cloned per call).
+pub fn profile() -> NetworkProfile {
+    profile_static().clone()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -66,6 +80,15 @@ mod tests {
         let p = profile();
         assert_eq!(p.n_layers(), 18);
         assert_eq!(p.cut_candidates.len(), 17);
+    }
+
+    #[test]
+    fn static_profile_is_cached_and_identical() {
+        let a = profile_static();
+        let b = profile_static();
+        assert!(std::ptr::eq(a, b), "OnceLock must hand out one instance");
+        assert_eq!(a.n_layers(), profile().n_layers());
+        assert_eq!(a.rho_total(), profile().rho_total());
     }
 
     #[test]

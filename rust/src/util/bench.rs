@@ -80,6 +80,17 @@ impl Bencher {
         }
     }
 
+    /// Tiny budgets for CI smoke runs (`cargo bench -- --test` just checks
+    /// the bench binaries execute, not the numbers).
+    pub fn smoke() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(10),
+            measure: Duration::from_millis(40),
+            max_samples: 4,
+            results: Vec::new(),
+        }
+    }
+
     /// Run one case. `f` returns a value that is black-boxed.
     pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F)
         -> &BenchResult {

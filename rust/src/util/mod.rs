@@ -4,6 +4,7 @@
 //! the usual ecosystem crates (rand, serde, criterion, proptest, clap…) are
 //! unavailable. Everything the system needs is implemented here:
 //!
+//! - [`par`] — deterministic scoped-thread fork-join parallelism
 //! - [`rng`] — splitmix64 / xoshiro256** PRNG with distributions
 //! - [`stats`] — descriptive statistics and simple fits
 //! - [`json`] — minimal JSON writer *and* parser (for the artifact manifest)
@@ -13,6 +14,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,122 @@
+//! Deterministic fork-join parallelism on `std::thread::scope`.
+//!
+//! The offline registry ships no rayon, so the sweep engine gets its own
+//! minimal work-stealing executor: an atomic cursor hands out item indices,
+//! each worker writes its result into the item's dedicated slot, and the
+//! caller receives results **in input order** — so a parallel map over
+//! pure, per-item-seeded work is bit-identical to the serial loop it
+//! replaces, regardless of thread count or scheduling.
+//!
+//! Thread count resolution: the `EPSL_THREADS` environment variable wins
+//! (set `EPSL_THREADS=1` to force the serial path), otherwise
+//! `std::thread::available_parallelism()`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker-count default: `EPSL_THREADS` override or the machine's
+/// available parallelism.
+pub fn max_threads() -> usize {
+    match std::env::var("EPSL_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    }
+}
+
+/// Order-preserving parallel map: `out[i] = f(i, &items[i])` for every
+/// item, computed on up to `threads` scoped workers. `threads <= 1` runs
+/// the plain serial loop (no thread machinery at all).
+///
+/// A panic in any worker propagates to the caller when the scope joins, so
+/// test assertions inside `f` surface normally.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap()
+                .expect("parallel_map: every slot is filled before join")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order_across_thread_counts() {
+        let items: Vec<usize> = (0..97).collect();
+        let expect: Vec<usize> = items.iter().map(|x| x * x + 1).collect();
+        for threads in [1, 2, 4, 16] {
+            let got = parallel_map(&items, threads, |i, &x| {
+                assert_eq!(i, x);
+                x * x + 1
+            });
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let got: Vec<u32> = parallel_map(&[] as &[u32], 8, |_, &x| x);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items_is_fine() {
+        let got = parallel_map(&[10u64, 20], 64, |_, &x| x + 1);
+        assert_eq!(got, vec![11, 21]);
+    }
+
+    #[test]
+    fn parallel_equals_serial_on_float_work() {
+        // The determinism contract: per-item pure work gives bit-identical
+        // results under any thread count.
+        let items: Vec<f64> = (0..64).map(|i| 0.1 + i as f64).collect();
+        let work = |_: usize, &x: &f64| (x.sqrt().ln_1p() * 1e6).sin();
+        let serial = parallel_map(&items, 1, work);
+        let par = parallel_map(&items, 8, work);
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn max_threads_is_positive() {
+        assert!(max_threads() >= 1);
+    }
+}

@@ -31,7 +31,6 @@ fn latency_of(cfg: &NetworkConfig, fw: Framework, cut: usize, seed: u64)
     let up = uplink_rates(cfg, &ch, &alloc, &psd);
     let dn = downlink_rates(cfg, &ch, &alloc);
     let bc = broadcast_rate(cfg, &ch);
-    let f = dep.f_clients();
     let inp = LatencyInputs {
         profile: &profile,
         cut,
@@ -40,7 +39,7 @@ fn latency_of(cfg: &NetworkConfig, fw: Framework, cut: usize, seed: u64)
         f_server: cfg.f_server,
         kappa_server: cfg.kappa_server,
         kappa_client: cfg.kappa_client,
-        f_clients: &f,
+        f_clients: dep.f_clients(),
         uplink: &up,
         downlink: &dn,
         broadcast: bc,

@@ -2,10 +2,12 @@
 //! BCD vs baselines, paper-shape claims of Figs. 11–12, feasibility under
 //! stress, and solver cross-validation.
 
+use epsl::channel::rate::Allocation;
 use epsl::channel::{ChannelRealization, Deployment};
 use epsl::config::{dbm_to_w, NetworkConfig};
 use epsl::optim::baselines::{self, Scheme};
-use epsl::optim::{bcd, cutlayer, greedy, power, Problem};
+use epsl::optim::eval::Evaluator;
+use epsl::optim::{bcd, cutlayer, greedy, power, Decision, Problem};
 use epsl::profile::resnet18;
 use epsl::util::prop::check;
 use epsl::util::rng::Rng;
@@ -141,6 +143,77 @@ fn power_then_cut_consistency() {
         d_pow.psd_dbm_hz = sol.psd_dbm_hz;
         assert!(prob.objective(&d_pow) >= res.objective - 1e-6);
     }
+}
+
+#[test]
+fn property_evaluator_matches_reference_objective_cross_module() {
+    // Cross-module statement of the fast-path contract: the evaluator's
+    // objective tracks `Problem::objective` to ≤ 1e-9 relative error for
+    // random deployments, allocations, PSDs, cuts and φ ∈ {0, ½, 1}.
+    check("evaluator == reference (integration)", 25, |g| {
+        let mut cfg = NetworkConfig::default();
+        cfg.n_clients = g.usize_in(1, 7);
+        cfg.n_subchannels = cfg.n_clients + g.usize_in(0, 12);
+        cfg.f_server = g.f64_in(1e9, 9e9);
+        let profile = resnet18::profile();
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let dep = Deployment::generate(&cfg, &mut rng);
+        let ch = ChannelRealization::average(&dep);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: g.usize_in(1, 128),
+            phi: *g.choose(&[0.0, 0.5, 1.0]),
+        };
+        let mut ev = Evaluator::new(&prob);
+        let mut alloc = Allocation::empty(cfg.n_subchannels);
+        for k in 0..cfg.n_subchannels {
+            alloc.assign(k, g.usize_in(0, cfg.n_clients - 1));
+        }
+        let psd: Vec<f64> = (0..cfg.n_subchannels)
+            .map(|_| g.f64_in(-78.0, -55.0))
+            .collect();
+        let cut = *g.choose(&profile.cut_candidates);
+        let d = Decision { alloc, psd_dbm_hz: psd, cut };
+        let reference = prob.objective(&d);
+        let fast = ev.objective(&d);
+        assert!(
+            (fast - reference).abs() <= 1e-9 * reference.abs().max(1e-12),
+            "fast {fast} vs reference {reference}"
+        );
+    });
+}
+
+#[test]
+fn property_fast_bcd_equals_reference_bcd() {
+    // The optimizer rewiring must not change any decision: the fast BCD
+    // and the pre-fast-path pipeline agree bit-for-bit on the objective
+    // and land on the same (r, p, μ).
+    check("fast BCD == reference BCD", 6, |g| {
+        let mut cfg = NetworkConfig::default();
+        cfg.n_clients = g.usize_in(2, 5);
+        cfg.n_subchannels = cfg.n_clients + g.usize_in(1, 10);
+        cfg.f_server = g.f64_in(1e9, 9e9);
+        let profile = resnet18::profile();
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let dep = Deployment::generate(&cfg, &mut rng);
+        let ch = ChannelRealization::average(&dep);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: *g.choose(&[0.0, 0.5, 1.0]),
+        };
+        let opts = bcd::BcdOptions { max_iters: 6, tol: 1e-6 };
+        let fast = bcd::solve(&prob, opts).unwrap();
+        let reference = bcd::solve_reference(&prob, opts).unwrap();
+        assert_eq!(fast.decision, reference.decision);
+        assert_eq!(fast.objective.to_bits(), reference.objective.to_bits());
+    });
 }
 
 #[test]

@@ -1,0 +1,108 @@
+//! Minimal offline shim of the `anyhow` crate: just enough surface for the
+//! `repro` CLI and the examples — a string-backed [`Error`] that any
+//! `std::error::Error` converts into, the [`anyhow!`] and [`bail!`] macros,
+//! and the [`Result`] alias. Deliberately mirrors the real crate's design
+//! choice of *not* implementing `std::error::Error` for [`Error`] (that is
+//! what makes the blanket `From` impl coherent).
+
+use std::fmt;
+
+/// A string-backed error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a single printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn takes_result() -> Result<()> {
+        let io: std::io::Result<()> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "boom"));
+        io?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = takes_result().err().unwrap();
+        assert!(format!("{e}").contains("boom"));
+        assert!(format!("{e:?}").contains("boom"));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let who = "x";
+        let b = anyhow!("hello {who}");
+        assert_eq!(b.to_string(), "hello x");
+        let c = anyhow!("{} {}", 1, 2);
+        assert_eq!(c.to_string(), "1 2");
+        let msg = String::from("owned");
+        let d = anyhow!(msg);
+        assert_eq!(d.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("denied {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).err().unwrap().to_string(), "denied 7");
+    }
+}

@@ -1,0 +1,253 @@
+//! Offline stand-in for the `xla` (xla-rs) PJRT bindings.
+//!
+//! The real crate wraps the PJRT C API; this container does not ship it, so
+//! this stub keeps the dependency surface compiling with two behaviors:
+//!
+//! - **Host literals are fully functional.** [`Literal`] stores shape +
+//!   dtype + bytes, so every host-side conversion helper (and its tests)
+//!   works without PJRT.
+//! - **Device entry points fail fast.** [`PjRtClient::cpu`] and
+//!   [`HloModuleProto::from_text_file`] return a descriptive [`Error`], so
+//!   training-backed code paths degrade to the same "artifacts unavailable"
+//!   handling they already have for a fresh checkout.
+//!
+//! Swapping the real bindings back in is a one-line change in the
+//! workspace manifest; no call site references anything stub-specific.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`'s role (stringly, Display-able).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT bindings are not vendored in this build \
+             (offline xla stub)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla error: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element dtypes used by the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 | ElementType::U32 => 4,
+        }
+    }
+}
+
+/// Rust native types that map onto an [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+}
+
+/// A host-side literal: dtype + shape + raw bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType, shape: &[usize], data: &[u8],
+    ) -> Result<Literal, Error> {
+        let numel: usize = shape.iter().product();
+        if numel * ty.byte_size() != data.len() {
+            return Err(Error::msg(format!(
+                "shape {shape:?} ({numel} x {}B) does not match {} data bytes",
+                ty.byte_size(),
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, shape: shape.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        if self.ty != T::TY {
+            return Err(Error::msg(format!(
+                "dtype mismatch: literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let n = self.element_count();
+        let mut out: Vec<T> = Vec::with_capacity(n);
+        // Safety: the constructor guarantees data.len() == n * size_of::<T>()
+        // and the Vec allocation is aligned for T.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                self.data.len(),
+            );
+            out.set_len(n);
+        }
+        Ok(out)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, Error> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::msg("empty literal has no first element"))
+    }
+
+    /// Decompose a tuple literal. Tuple literals only arise from PJRT
+    /// execution, which the stub cannot perform.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+}
+
+/// PJRT client handle (always unavailable in the stub).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(
+        &self, _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(
+        &self, _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(
+        _path: P,
+    ) -> Result<HloModuleProto, Error> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping a module proto.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
+        unsafe {
+            std::slice::from_raw_parts(
+                v.as_ptr() as *const u8,
+                std::mem::size_of_val(v),
+            )
+        }
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = [1.5f32, -2.0, 0.25, 8.0];
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            bytes_of(&data),
+        )
+        .unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.5);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn bad_shape_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::U32,
+            &[3],
+            &[0u8; 8],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn pjrt_is_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("nope.hlo").is_err());
+    }
+}
