@@ -1,0 +1,100 @@
+//! Dynamic-channel walkthrough: expand one multi-round scenario (block
+//! fading + LoS flips + compute jitter) and compare re-optimization
+//! policies over the *same* realizations — when is "optimize once"
+//! (paper §VII, Fig. 13) still good enough, and what does adapting buy?
+//!
+//! Runs entirely on the analytical §V model — no artifacts needed.
+//!
+//! Usage: cargo run --release --example dynamic_channel [seed] [rounds]
+
+use epsl::config::NetworkConfig;
+use epsl::optim::bcd::BcdOptions;
+use epsl::profile::resnet18;
+use epsl::scenario::{
+    pair_latencies, run_policy, ComputeJitterSpec, LosFlipSpec, ReoptPolicy,
+    RunOptions, Scenario, ScenarioSpec,
+};
+use epsl::util::par;
+use epsl::util::table::{bar_chart, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0x13);
+    let rounds: usize =
+        args.get(2).and_then(|s| s.parse().ok()).unwrap_or(24);
+
+    let net = NetworkConfig::default();
+    let profile = resnet18::profile_static();
+    let spec = ScenarioSpec {
+        rounds,
+        redraw_period: Some(2),
+        los_flip: Some(LosFlipSpec { flip_prob: 0.2 }),
+        compute_jitter: Some(ComputeJitterSpec { amplitude: 0.1 }),
+        churn: None,
+    };
+    let sc = Scenario::generate(&net, &spec, seed)?;
+    println!(
+        "scenario (seed {seed}): {} rounds, fading redraw every 2 rounds, \
+         LoS Markov flips (p=0.2), ±10% compute jitter\n",
+        sc.n_rounds()
+    );
+
+    let policies = [
+        ReoptPolicy::Never,
+        ReoptPolicy::EveryK(4),
+        ReoptPolicy::OnRegression(1.2),
+        ReoptPolicy::EveryK(1), // oracle
+    ];
+    let mut t = Table::new("policy comparison (same realizations)").header(
+        &["policy", "mean latency (s)", "worst round (s)", "solves"],
+    );
+    let mut items = Vec::new();
+    let mut outcomes = Vec::new();
+    for policy in policies {
+        let out = run_policy(
+            &sc,
+            profile,
+            &RunOptions {
+                policy,
+                bcd: BcdOptions { max_iters: 6, tol: 1e-4 },
+                batch: 64,
+                phi: 0.5,
+                threads: par::max_threads(),
+            },
+        );
+        let worst = out
+            .rounds
+            .iter()
+            .filter_map(|r| r.latency)
+            .fold(0.0, f64::max);
+        t.row(&[
+            policy.name(),
+            format!("{:.3}", out.mean_latency()),
+            format!("{worst:.3}"),
+            out.n_solves.to_string(),
+        ]);
+        items.push((policy.name(), out.mean_latency()));
+        outcomes.push(out);
+    }
+    println!("{}", t.render());
+    println!(
+        "{}",
+        bar_chart("mean per-round latency by policy", &items, "s")
+    );
+
+    // Fixed-vs-oracle, paired per realization (the Fig. 13 robustness
+    // number for this scenario).
+    let fixed = &outcomes[0];
+    let oracle = &outcomes[policies.len() - 1];
+    let p = pair_latencies(&fixed.latencies(), &oracle.latencies());
+    println!(
+        "fixed/oracle over {} paired rounds: {:.3} (1.0 = adapting every \
+         round buys nothing)",
+        p.n_pairs,
+        p.ratio()
+    );
+    if p.n_dropped > 0 {
+        println!("({} rounds dropped from both means)", p.n_dropped);
+    }
+    Ok(())
+}

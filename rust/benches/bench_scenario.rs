@@ -1,0 +1,70 @@
+//! Scenario-engine benches: expansion cost, policy-run cost serial vs
+//! fanned, and the per-round evaluation fast path the runner sits on.
+
+use epsl::config::NetworkConfig;
+use epsl::optim::bcd::BcdOptions;
+use epsl::profile::resnet18;
+use epsl::scenario::{
+    run_policy, ReoptPolicy, RunOptions, Scenario, ScenarioSpec,
+};
+use epsl::util::bench::Bencher;
+use epsl::util::par;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let mut b = if smoke { Bencher::smoke() } else { Bencher::new() };
+    let net = NetworkConfig::default();
+    let profile = resnet18::profile_static();
+
+    // Expansion alone (no solves): the engine must stay negligible next
+    // to BCD.
+    let rounds = if smoke { 16 } else { 256 };
+    let full_spec = ScenarioSpec {
+        rounds,
+        redraw_period: Some(2),
+        los_flip: Some(epsl::scenario::LosFlipSpec { flip_prob: 0.2 }),
+        compute_jitter: Some(epsl::scenario::ComputeJitterSpec {
+            amplitude: 0.1,
+        }),
+        churn: None,
+    };
+    b.run(&format!("scenario expand {rounds} rounds (fading+los+jitter)"),
+          || Scenario::generate(&net, &full_spec, 0xBE7).unwrap());
+
+    // Policy runs over one pre-expanded scenario.
+    let run_rounds = if smoke { 8 } else { 32 };
+    let sc = Scenario::generate(
+        &net,
+        &ScenarioSpec::fading(run_rounds),
+        0xBE7,
+    )
+    .unwrap();
+    let opts = |policy, threads| RunOptions {
+        policy,
+        bcd: BcdOptions { max_iters: 6, tol: 1e-4 },
+        batch: 64,
+        phi: 0.5,
+        threads,
+    };
+    b.run(&format!("run_policy never ({run_rounds} rounds, serial)"), || {
+        run_policy(&sc, profile, &opts(ReoptPolicy::Never, 1))
+    });
+    if !smoke {
+        b.run(&format!("run_policy oracle ({run_rounds} rounds, serial)"),
+              || run_policy(&sc, profile, &opts(ReoptPolicy::EveryK(1), 1)));
+        b.run(
+            &format!(
+                "run_policy oracle ({run_rounds} rounds, {} threads)",
+                par::max_threads()
+            ),
+            || {
+                run_policy(
+                    &sc,
+                    profile,
+                    &opts(ReoptPolicy::EveryK(1), par::max_threads()),
+                )
+            },
+        );
+    }
+    println!("\n{}", b.report());
+}

@@ -93,6 +93,18 @@ impl NetworkConfig {
         self
     }
 
+    /// Set the client count, growing M so every client can own at least
+    /// one subchannel (the paper's implicit serving assumption — latency
+    /// is unbounded for an unserved client). The single home for the
+    /// clamp the driver / figure sweeps / scenario engine all need.
+    pub fn with_clients(mut self, n: usize) -> Self {
+        self.n_clients = n;
+        if self.n_subchannels < n {
+            self.n_subchannels = n;
+        }
+        self
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.n_clients == 0 {
             return Err(Error::Config("n_clients must be > 0".into()));
@@ -176,11 +188,81 @@ impl TrainConfig {
     }
 }
 
+/// Opt-in per-round network dynamics for the training driver's latency
+/// accounting (`scenario` module; knobs documented in EXPERIMENTS.md).
+/// Plain data here — the `scenario` module turns it into a typed
+/// `ScenarioSpec` + `ReoptPolicy` so config stays dependency-free.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSettings {
+    /// Master switch for the dynamic-channel training mode.
+    pub enabled: bool,
+    /// Block-fading redraw period in rounds (0 = channel stays at the
+    /// deterministic average gains).
+    pub redraw_period: usize,
+    /// Per-round LoS↔NLoS Markov flip probability scale (0 disables).
+    pub los_flip_prob: f64,
+    /// Client compute jitter amplitude as a fraction of f_i (0 disables).
+    pub compute_jitter: f64,
+    /// Per-round client dropout probability (0 disables churn).
+    pub drop_prob: f64,
+    /// Per-round re-arrival probability for dropped clients.
+    pub rejoin_prob: f64,
+    /// Churn never drops the active set below this many clients.
+    pub min_active: usize,
+    /// Re-optimization policy: "never" | "every:<k>" | "regress:<x>" |
+    /// "oracle" (parsed by `scenario::ReoptPolicy::parse`).
+    pub reopt: String,
+}
+
+impl Default for ScenarioSettings {
+    fn default() -> Self {
+        ScenarioSettings {
+            enabled: false,
+            redraw_period: 1,
+            los_flip_prob: 0.0,
+            compute_jitter: 0.0,
+            drop_prob: 0.0,
+            rejoin_prob: 0.0,
+            min_active: 1,
+            reopt: "never".into(),
+        }
+    }
+}
+
+impl ScenarioSettings {
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("los_flip_prob", self.los_flip_prob),
+            ("drop_prob", self.drop_prob),
+            ("rejoin_prob", self.rejoin_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::Config(format!(
+                    "scenario.{name}={p} out of [0,1]"
+                )));
+            }
+        }
+        if !(0.0..1.0).contains(&self.compute_jitter) {
+            return Err(Error::Config(format!(
+                "scenario.compute_jitter={} out of [0,1)",
+                self.compute_jitter
+            )));
+        }
+        if self.min_active == 0 {
+            return Err(Error::Config(
+                "scenario.min_active must be > 0".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
     pub net: NetworkConfig,
     pub train: TrainConfig,
+    pub scenario: ScenarioSettings,
     /// Artifact directory (default "artifacts").
     pub artifacts_dir: String,
     /// Results directory (default "results").
@@ -192,6 +274,7 @@ impl Config {
         Config {
             net: NetworkConfig::default(),
             train: TrainConfig::default(),
+            scenario: ScenarioSettings::default(),
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
         }
@@ -199,7 +282,8 @@ impl Config {
 
     pub fn validate(&self) -> Result<()> {
         self.net.validate()?;
-        self.train.validate()
+        self.train.validate()?;
+        self.scenario.validate()
     }
 
     /// Apply overrides from a parsed TOML doc (keys mirror field paths,
@@ -277,6 +361,30 @@ impl Config {
         }
         if let Some(v) = d.usize("train.seed") {
             self.train.seed = v as u64;
+        }
+        if let Some(v) = d.bool("scenario.enabled") {
+            self.scenario.enabled = v;
+        }
+        if let Some(v) = d.usize("scenario.redraw_period") {
+            self.scenario.redraw_period = v;
+        }
+        if let Some(v) = d.f64("scenario.los_flip_prob") {
+            self.scenario.los_flip_prob = v;
+        }
+        if let Some(v) = d.f64("scenario.compute_jitter") {
+            self.scenario.compute_jitter = v;
+        }
+        if let Some(v) = d.f64("scenario.drop_prob") {
+            self.scenario.drop_prob = v;
+        }
+        if let Some(v) = d.f64("scenario.rejoin_prob") {
+            self.scenario.rejoin_prob = v;
+        }
+        if let Some(v) = d.usize("scenario.min_active") {
+            self.scenario.min_active = v;
+        }
+        if let Some(v) = d.str("scenario.reopt") {
+            self.scenario.reopt = v.to_string();
         }
         if let Some(v) = d.str("artifacts_dir") {
             self.artifacts_dir = v.to_string();
@@ -382,5 +490,53 @@ mod tests {
         let n = NetworkConfig::default().with_total_bandwidth(100e6);
         assert!((n.subchannel_bw_hz - 5e6).abs() < 1.0);
         assert!((n.total_bandwidth_hz() - 100e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn with_clients_clamps_subchannels() {
+        // The one shared home for the M >= C clamp (previously hand-rolled
+        // in driver.rs and latency_figs.rs).
+        let n = NetworkConfig::default().with_clients(30);
+        assert_eq!(n.n_clients, 30);
+        assert_eq!(n.n_subchannels, 30);
+        assert!(n.validate().is_ok());
+        // Below the default M the subchannel plan is untouched.
+        let n = NetworkConfig::default().with_clients(3);
+        assert_eq!(n.n_clients, 3);
+        assert_eq!(n.n_subchannels, 20);
+    }
+
+    #[test]
+    fn scenario_settings_from_toml() {
+        let doc = toml::parse(
+            "[scenario]\nenabled = true\nredraw_period = 4\n\
+             los_flip_prob = 0.1\ncompute_jitter = 0.05\n\
+             drop_prob = 0.02\nrejoin_prob = 0.5\nmin_active = 2\n\
+             reopt = \"every:8\"\n",
+        )
+        .unwrap();
+        let mut c = Config::new();
+        c.apply_toml(&doc).unwrap();
+        assert!(c.scenario.enabled);
+        assert_eq!(c.scenario.redraw_period, 4);
+        assert_eq!(c.scenario.los_flip_prob, 0.1);
+        assert_eq!(c.scenario.compute_jitter, 0.05);
+        assert_eq!(c.scenario.drop_prob, 0.02);
+        assert_eq!(c.scenario.rejoin_prob, 0.5);
+        assert_eq!(c.scenario.min_active, 2);
+        assert_eq!(c.scenario.reopt, "every:8");
+    }
+
+    #[test]
+    fn scenario_settings_validated() {
+        let mut c = Config::new();
+        c.scenario.drop_prob = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::new();
+        c.scenario.compute_jitter = 1.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::new();
+        c.scenario.min_active = 0;
+        assert!(c.validate().is_err());
     }
 }

@@ -9,7 +9,7 @@ use std::time::Instant;
 use xla::Literal;
 
 use crate::channel::{ChannelRealization, Deployment};
-use crate::config::Config;
+use crate::config::{Config, NetworkConfig};
 use crate::data::partition::{iid, lambda_weights, non_iid_two_class};
 use crate::data::synth::{train_test, SynthSpec};
 use crate::data::{Dataset, Shard};
@@ -23,6 +23,8 @@ use crate::runtime::artifact::{FamilyManifest, Manifest};
 use crate::runtime::tensor::{literal_f32, literal_i32, literal_u32,
                              scalar_f32, to_f32_vec};
 use crate::runtime::Runtime;
+use crate::scenario::{self, DynamicChannel, Scenario};
+use crate::util::par;
 use crate::util::rng::Rng;
 
 use super::params::{fedavg, ParamSet};
@@ -49,6 +51,11 @@ pub struct TrainerOptions {
     /// Run the BCD resource optimizer for the latency accounting
     /// (otherwise a greedy + uniform-power decision is used).
     pub optimize_resources: bool,
+    /// Opt-in dynamic-channel mode: the §V latency accounting tracks a
+    /// per-round [`Scenario`] (block fading, LoS flips, compute jitter,
+    /// churn) under the given re-optimization policy, instead of one
+    /// frozen averaged draw. The scenario spans `rounds` rounds.
+    pub dynamic_channel: Option<DynamicChannel>,
 }
 
 impl Default for TrainerOptions {
@@ -68,6 +75,7 @@ impl Default for TrainerOptions {
             seed: 2023,
             pt_switch: 50,
             optimize_resources: false,
+            dynamic_channel: None,
         }
     }
 }
@@ -92,12 +100,19 @@ struct Session<'a> {
     mask_cache: std::collections::HashMap<u64, (Vec<f32>, Literal)>,
 }
 
-/// Pre-computed stage-latency inputs for the §V model.
-struct SimLatency {
+/// One round's link state for the §V model.
+struct SimRound {
     f_clients: Vec<f64>,
     uplink: Vec<f64>,
     downlink: Vec<f64>,
     broadcast: f64,
+}
+
+/// Pre-computed stage-latency inputs for the §V model: one [`SimRound`]
+/// per training round under a dynamic-channel scenario, a single frozen
+/// entry otherwise.
+struct SimLatency {
+    rounds: Vec<SimRound>,
     cut: usize,
     batch: usize,
     f_server: f64,
@@ -106,10 +121,11 @@ struct SimLatency {
 }
 
 impl SimLatency {
-    fn round_seconds(&self, fw: Framework, phi: f64) -> f64 {
+    fn round_seconds(&self, round: usize, fw: Framework, phi: f64) -> f64 {
         // Cached profile: this runs once per training round, and the old
         // per-call Table IV rebuild dominated the simulated-latency cost.
         let profile = resnet18::profile_static();
+        let r = &self.rounds[round.min(self.rounds.len() - 1)];
         let inp = LatencyInputs {
             profile,
             cut: self.cut,
@@ -118,10 +134,10 @@ impl SimLatency {
             f_server: self.f_server,
             kappa_server: self.kappa_server,
             kappa_client: self.kappa_client,
-            f_clients: &self.f_clients,
-            uplink: &self.uplink,
-            downlink: &self.downlink,
-            broadcast: self.broadcast,
+            f_clients: &r.f_clients,
+            uplink: &r.uplink,
+            downlink: &r.downlink,
+            broadcast: r.broadcast,
         };
         // For EPSL-PT the effective framework at this round is EPSL{phi}.
         let fw_eff = match fw {
@@ -134,15 +150,14 @@ impl SimLatency {
 
 fn build_sim_latency(cfg: &Config, opts: &TrainerOptions, rng: &mut Rng)
     -> Result<SimLatency> {
-    let mut net = cfg.net.clone();
-    net.n_clients = opts.n_clients;
-    if net.n_subchannels < net.n_clients {
-        net.n_subchannels = net.n_clients;
+    let net = cfg.net.clone().with_clients(opts.n_clients);
+    let profile = resnet18::profile_static();
+    let cut = resnet18_cut_for_splitnet(opts.cut);
+    if let Some(dc) = &opts.dynamic_channel {
+        return build_dynamic_sim_latency(cfg, opts, &net, cut, dc, rng);
     }
     let dep = Deployment::generate(&net, rng);
     let ch = ChannelRealization::average(&dep);
-    let profile = resnet18::profile_static();
-    let cut = resnet18_cut_for_splitnet(opts.cut);
     let prob = Problem {
         cfg: &net,
         profile,
@@ -154,25 +169,165 @@ fn build_sim_latency(cfg: &Config, opts: &TrainerOptions, rng: &mut Rng)
     let decision: Decision = if opts.optimize_resources {
         bcd::solve(&prob, bcd::BcdOptions::default())?.decision
     } else {
-        let psd = crate::optim::baselines::uniform_power(
-            &prob,
-            &crate::optim::baselines::rss_allocation(&prob),
-        );
-        let alloc = crate::optim::baselines::rss_allocation(&prob);
-        Decision { alloc, psd_dbm_hz: psd, cut }
+        // One shared allocation for both the PSD plan and the decision
+        // (the pre-fix code ran rss_allocation twice).
+        crate::optim::baselines::uniform_decision(&prob, cut)
     };
     let (up, dn, bc) = prob.rates(&decision);
     Ok(SimLatency {
-        f_clients: dep.f_clients().to_vec(),
-        uplink: up,
-        downlink: dn,
-        broadcast: bc,
+        rounds: vec![SimRound {
+            f_clients: dep.f_clients().to_vec(),
+            uplink: up,
+            downlink: dn,
+            broadcast: bc,
+        }],
         cut,
         batch: cfg.train.batch,
         f_server: net.f_server,
         kappa_server: net.kappa_server,
         kappa_client: net.kappa_client,
     })
+}
+
+/// Dynamic-channel mode: expand the scenario from the session RNG stream
+/// and track per-round realized rates. With `optimize_resources` the
+/// re-optimization policy drives BCD re-solves (blocks fan across cores);
+/// without it a fixed uniform-power decision at the training cut rides
+/// the varying channel (churn then has no valid meaning — rejected).
+fn build_dynamic_sim_latency(cfg: &Config, opts: &TrainerOptions,
+                             net: &NetworkConfig, cut: usize,
+                             dc: &DynamicChannel, rng: &mut Rng)
+    -> Result<SimLatency> {
+    let profile = resnet18::profile_static();
+    let mut spec = dc.spec.clone();
+    spec.rounds = opts.rounds; // the scenario spans the training run
+    let roster = Deployment::generate(net, rng);
+    let sc = Scenario::from_deployment(net.clone(), roster, spec, rng)?;
+    let rounds: Vec<SimRound> = if opts.optimize_resources {
+        let (outcome, rates) = scenario::run_policy_with_rates(
+            &sc,
+            profile,
+            &scenario::RunOptions {
+                policy: dc.policy,
+                bcd: bcd::BcdOptions::default(),
+                batch: cfg.train.batch,
+                phi: opts.framework.phi(),
+                threads: par::max_threads(),
+            },
+        );
+        println!(
+            "dynamic channel: {} optimizer solve(s) over {} rounds \
+             (policy {})",
+            outcome.n_solves,
+            sc.n_rounds(),
+            dc.policy.name()
+        );
+        // Latency accounting always prices the *training* cut (same
+        // semantics as the static --optimize path); when a re-solve picked
+        // a different cut its rates were tuned for that cut's payloads —
+        // surface the mismatch instead of silently mixing.
+        let cut_mismatch = rates
+            .iter()
+            .flatten()
+            .filter(|rr| rr.cut != cut)
+            .count();
+        if cut_mismatch > 0 {
+            println!(
+                "dynamic channel: optimizer preferred a different cut \
+                 layer in {cut_mismatch} round(s); accounting keeps the \
+                 training cut {cut}"
+            );
+        }
+        rates
+            .into_iter()
+            .enumerate()
+            .map(|(r, rr)| {
+                rr.ok_or_else(|| {
+                    Error::Optim(format!(
+                        "dynamic channel: resource solve failed at round {r}"
+                    ))
+                })
+            })
+            .collect::<Result<Vec<scenario::RoundRates>>>()?
+            .into_iter()
+            .map(|rr| SimRound {
+                f_clients: rr.f_clients,
+                uplink: rr.uplink,
+                downlink: rr.downlink,
+                broadcast: rr.broadcast,
+            })
+            .collect()
+    } else {
+        if !matches!(dc.policy, scenario::ReoptPolicy::Never) {
+            return Err(Error::Config(format!(
+                "dynamic channel: re-optimization policy '{}' requires \
+                 optimize_resources (without it a fixed uniform-power \
+                 decision rides the channel; pass --optimize, or use \
+                 --reopt never)",
+                dc.policy.name()
+            )));
+        }
+        if sc.rounds.iter().any(|r| r.membership_changed) {
+            return Err(Error::Config(
+                "dynamic channel with churn requires optimize_resources: a \
+                 fixed uniform decision cannot follow membership changes"
+                    .into(),
+            ));
+        }
+        let avg = ChannelRealization::average(&sc.roster);
+        let base = Problem {
+            cfg: net,
+            profile,
+            dep: &sc.roster,
+            ch: &avg,
+            batch: cfg.train.batch,
+            phi: opts.framework.phi(),
+        };
+        let d = crate::optim::baselines::uniform_decision(&base, cut);
+        sc.rounds
+            .iter()
+            .map(|round| {
+                let prob = Problem {
+                    cfg: net,
+                    profile,
+                    dep: &round.dep,
+                    ch: &round.ch,
+                    batch: cfg.train.batch,
+                    phi: opts.framework.phi(),
+                };
+                let (up, dn, bc) = prob.rates(&d);
+                SimRound {
+                    f_clients: round.dep.f_clients().to_vec(),
+                    uplink: up,
+                    downlink: dn,
+                    broadcast: bc,
+                }
+            })
+            .collect()
+    };
+    Ok(SimLatency {
+        rounds,
+        cut,
+        batch: cfg.train.batch,
+        f_server: net.f_server,
+        kappa_server: net.kappa_server,
+        kappa_client: net.kappa_client,
+    })
+}
+
+/// Fail fast when the fixed-shape eval artifact can never see one full
+/// chunk: every chunk would hit the ragged-tail `break` in
+/// [`Session::evaluate`] and the accuracy column would be silently
+/// all-NaN.
+fn check_eval_batch(test_size: usize, eval_batch: usize) -> Result<()> {
+    if test_size < eval_batch {
+        return Err(Error::Config(format!(
+            "test_size {test_size} < eval_batch {eval_batch}: evaluation \
+             would drop every chunk and report NaN accuracy — raise \
+             test_size to at least the artifact eval batch"
+        )));
+    }
+    Ok(())
 }
 
 /// Build the aggregation mask for ⌈φb⌉ slots.
@@ -382,7 +537,16 @@ impl<'a> Session<'a> {
             correct += scalar_f32(&out[1])? as f64;
             total += eb as f64;
         }
-        Ok(if total > 0.0 { correct / total } else { f64::NAN })
+        if total == 0.0 {
+            // train() rejects this up front (check_eval_batch); kept as a
+            // defensive guard against silently reporting NaN accuracy.
+            return Err(Error::Data(format!(
+                "evaluate: test set of {} samples yields no full \
+                 eval chunk (eval_batch {eb})",
+                self.test_set.n
+            )));
+        }
+        Ok(correct / total)
     }
 }
 
@@ -395,8 +559,10 @@ pub fn train(rt: &Runtime, manifest: &Manifest, cfg: &Config,
     } else {
         opts.n_clients
     };
-    // Fail fast if the needed artifact is missing.
+    // Fail fast if the needed artifact is missing, or if evaluation could
+    // never see a full chunk (all-NaN accuracy otherwise).
     fam.server_train_entry(opts.cut, st_c)?;
+    check_eval_batch(opts.test_size, fam.eval_batch)?;
 
     let mut rng = Rng::new(opts.seed);
     // Data.
@@ -465,7 +631,8 @@ pub fn train(rt: &Runtime, manifest: &Manifest, cfg: &Config,
         } else {
             f64::NAN
         };
-        let sim = session.sim_latency.round_seconds(opts.framework, phi);
+        let sim =
+            session.sim_latency.round_seconds(round, opts.framework, phi);
         metrics.push(RoundRecord {
             round,
             loss,
@@ -557,5 +724,135 @@ mod tests {
         assert_eq!(mask_vec(0.0, 32).iter().sum::<f32>(), 0.0);
         assert_eq!(mask_vec(1.0, 32).iter().sum::<f32>(), 32.0);
         assert_eq!(mask_vec(0.01, 32).iter().sum::<f32>(), 1.0);
+    }
+
+    #[test]
+    fn small_test_set_fails_fast() {
+        // Pre-fix, test_size < eval_batch made every eval chunk hit the
+        // ragged-tail break and the run reported an all-NaN accuracy
+        // column; now it is rejected up front with a descriptive error.
+        assert!(check_eval_batch(100, 256).is_err());
+        assert!(check_eval_batch(256, 256).is_ok());
+        assert!(check_eval_batch(300, 256).is_ok());
+        let e = check_eval_batch(10, 64).unwrap_err();
+        assert!(e.to_string().contains("NaN"), "{e}");
+        assert!(e.to_string().contains("eval_batch 64"), "{e}");
+    }
+
+    #[test]
+    fn sim_latency_static_is_single_frozen_entry() {
+        let cfg = Config::new();
+        let opts = TrainerOptions::default();
+        let mut rng = Rng::new(1);
+        let s = build_sim_latency(&cfg, &opts, &mut rng).unwrap();
+        assert_eq!(s.rounds.len(), 1);
+        let t = s.round_seconds(0, opts.framework, 0.5);
+        assert!(t > 0.0);
+        // Any round index maps onto the frozen entry.
+        assert_eq!(
+            t.to_bits(),
+            s.round_seconds(99, opts.framework, 0.5).to_bits()
+        );
+    }
+
+    #[test]
+    fn sim_latency_static_decision_bit_identical_to_prefix_construction() {
+        // Regression guard for the single-allocation fix: the frozen-draw
+        // rates must match the pre-fix double-rss_allocation construction
+        // bit for bit (same RNG stream, same decision).
+        let cfg = Config::new();
+        let opts = TrainerOptions::default();
+        let mut rng = Rng::new(3);
+        let s = build_sim_latency(&cfg, &opts, &mut rng).unwrap();
+        let mut rng = Rng::new(3);
+        let net = cfg.net.clone().with_clients(opts.n_clients);
+        let dep = Deployment::generate(&net, &mut rng);
+        let ch = ChannelRealization::average(&dep);
+        let profile = resnet18::profile_static();
+        let prob = Problem {
+            cfg: &net,
+            profile,
+            dep: &dep,
+            ch: &ch,
+            batch: cfg.train.batch,
+            phi: opts.framework.phi(),
+        };
+        // The pre-fix construction: two independent rss_allocation calls.
+        let psd = crate::optim::baselines::uniform_power(
+            &prob,
+            &crate::optim::baselines::rss_allocation(&prob),
+        );
+        let alloc = crate::optim::baselines::rss_allocation(&prob);
+        let legacy = Decision {
+            alloc,
+            psd_dbm_hz: psd,
+            cut: resnet18_cut_for_splitnet(opts.cut),
+        };
+        let (up, dn, bc) = prob.rates(&legacy);
+        assert_eq!(s.rounds[0].uplink, up);
+        assert_eq!(s.rounds[0].downlink, dn);
+        assert_eq!(s.rounds[0].broadcast.to_bits(), bc.to_bits());
+    }
+
+    #[test]
+    fn sim_latency_dynamic_tracks_the_scenario() {
+        use crate::scenario::{ReoptPolicy, ScenarioSpec};
+        let cfg = Config::new();
+        let opts = TrainerOptions {
+            rounds: 6,
+            dynamic_channel: Some(DynamicChannel {
+                spec: ScenarioSpec::fading(6),
+                policy: ReoptPolicy::Never,
+            }),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(2);
+        let s = build_sim_latency(&cfg, &opts, &mut rng).unwrap();
+        assert_eq!(s.rounds.len(), 6, "one entry per training round");
+        let t0 = s.round_seconds(0, opts.framework, 0.5);
+        assert!(t0 > 0.0);
+        assert!(
+            (1..6).any(|r| s.round_seconds(r, opts.framework, 0.5) != t0),
+            "per-round fading never moved the simulated latency"
+        );
+    }
+
+    #[test]
+    fn dynamic_policy_without_optimizer_rejected() {
+        use crate::scenario::{ReoptPolicy, ScenarioSpec};
+        let cfg = Config::new();
+        let opts = TrainerOptions {
+            rounds: 3,
+            dynamic_channel: Some(DynamicChannel {
+                spec: ScenarioSpec::fading(3),
+                policy: ReoptPolicy::EveryK(1),
+            }),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(5);
+        let e = build_sim_latency(&cfg, &opts, &mut rng).unwrap_err();
+        assert!(e.to_string().contains("optimize_resources"), "{e}");
+    }
+
+    #[test]
+    fn sim_latency_dynamic_with_optimizer_and_policy() {
+        use crate::scenario::{ReoptPolicy, ScenarioSpec};
+        let cfg = Config::new();
+        let opts = TrainerOptions {
+            n_clients: 3,
+            rounds: 4,
+            optimize_resources: true,
+            dynamic_channel: Some(DynamicChannel {
+                spec: ScenarioSpec::fading(4),
+                policy: ReoptPolicy::EveryK(2),
+            }),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(4);
+        let s = build_sim_latency(&cfg, &opts, &mut rng).unwrap();
+        assert_eq!(s.rounds.len(), 4);
+        for r in 0..4 {
+            assert!(s.round_seconds(r, opts.framework, 0.5) > 0.0);
+        }
     }
 }

@@ -13,12 +13,16 @@
 //! outputs are bit-identical to the serial path for any thread count
 //! (`EPSL_THREADS=1` forces serial).
 
-use crate::channel::{ChannelRealization, Deployment};
+use crate::channel::Deployment;
+use crate::config::NetworkConfig;
 use crate::error::Result;
 use crate::latency::frameworks::Framework;
 use crate::optim::baselines::Scheme;
-use crate::optim::{bcd, Problem};
+use crate::optim::bcd;
 use crate::profile::resnet18;
+use crate::scenario::{
+    self, ReoptPolicy, RunOptions, Scenario, ScenarioCell, ScenarioSpec,
+};
 use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::stats::mean;
@@ -32,11 +36,7 @@ use super::Ctx;
 /// `seeds` deployment draws per framework.
 fn framework_cells(ctx: &Ctx, fws: &[Framework], n_clients: usize,
                    seeds: u64, out: &mut Vec<FrameworkCell>) {
-    let mut net = ctx.cfg.net.clone();
-    net.n_clients = n_clients;
-    if net.n_subchannels < n_clients {
-        net.n_subchannels = n_clients;
-    }
+    let net = ctx.cfg.net.clone().with_clients(n_clients);
     for &fw in fws {
         for s in 0..seeds {
             out.push(FrameworkCell {
@@ -311,6 +311,80 @@ pub fn fig12(ctx: &mut Ctx) -> Result<()> {
     )
 }
 
+/// One bandwidth point of Fig. 13 through the scenario engine.
+///
+/// Returns `(static ideal latency, fixed per-round latencies, oracle
+/// per-round latencies)` over a **shared** realization sequence:
+/// - the deployment + fading draws replay the pre-scenario RNG discipline
+///   exactly (seed `0x13`, then per-round redraws), so the numbers are
+///   bit-identical to the pre-refactor inline loop;
+/// - "fixed" is [`ReoptPolicy::Never`] on a [`ScenarioSpec::fading`]
+///   scenario (one BCD solve on average gains, held fixed);
+/// - "oracle" is [`ReoptPolicy::EveryK`]`(1)` with the shortened BCD
+///   budget (re-solve on every realization).
+pub fn fig13_point(net: &NetworkConfig, batch: usize, phi: f64,
+                   n_rounds: usize, threads: usize)
+    -> Result<(f64, Vec<Option<f64>>, Vec<Option<f64>>)> {
+    let profile = resnet18::profile_static();
+    let mut rng = Rng::new(0x13);
+    let dep = Deployment::generate(net, &mut rng);
+    // The fading expansion continues `rng` exactly like the legacy
+    // per-round `ChannelRealization::sample` loop.
+    let fading = Scenario::from_deployment(
+        net.clone(),
+        dep.clone(),
+        ScenarioSpec::fading(n_rounds),
+        &mut rng,
+    )?;
+    // The static benchmark draws nothing further from the stream.
+    let ideal = Scenario::from_deployment(
+        net.clone(),
+        dep,
+        ScenarioSpec::static_channel(1),
+        &mut rng,
+    )?;
+    let fixed = scenario::run_policy(
+        &fading,
+        profile,
+        &RunOptions {
+            policy: ReoptPolicy::Never,
+            bcd: bcd::BcdOptions::default(),
+            batch,
+            phi,
+            threads,
+        },
+    );
+    let oracle = scenario::run_policy(
+        &fading,
+        profile,
+        &RunOptions {
+            policy: ReoptPolicy::EveryK(1),
+            bcd: bcd::BcdOptions { max_iters: 6, tol: 1e-4 },
+            batch,
+            phi,
+            threads,
+        },
+    );
+    // This repeats the fixed run's average-gains solve (bit-identical
+    // inputs → bit-identical decision): one redundant default-budget BCD
+    // per bandwidth point, ~2% of the oracle cost, accepted to keep the
+    // figure a pure composition of policy runs.
+    let stat = scenario::run_policy(
+        &ideal,
+        profile,
+        &RunOptions {
+            policy: ReoptPolicy::Never,
+            bcd: bcd::BcdOptions::default(),
+            batch,
+            phi,
+            threads,
+        },
+    );
+    let t_static =
+        stat.rounds.first().and_then(|r| r.latency).unwrap_or(f64::NAN);
+    Ok((t_static, fixed.latencies(), oracle.latencies()))
+}
+
 /// Fig. 13 — robustness of the layer-split decision to channel variation.
 ///
 /// The decision (subchannels, powers, cut) is optimized ONCE on average
@@ -322,16 +396,18 @@ pub fn fig12(ctx: &mut Ctx) -> Result<()> {
 ///   every round could buy).
 /// Robustness = the fixed decision tracks the oracle closely.
 ///
-/// The per-realization oracle solves are independent; the realizations are
-/// pre-sampled serially (preserving the RNG stream) and the BCD solves fan
-/// across cores.
+/// Since the scenario refactor this is a thin special case of the
+/// `scenario` engine (see [`fig13_point`]); the oracle's per-realization
+/// solve blocks fan across cores. Fixed and oracle means are **paired**
+/// per realization: if either side's solve fails, the realization is
+/// dropped from both means and reported (the pre-fix code `.flatten()`-ed
+/// oracle failures away, silently averaging different realization sets).
 pub fn fig13(ctx: &mut Ctx) -> Result<()> {
     let xs: Vec<f64> = if ctx.quick {
         vec![100.0, 200.0, 300.0]
     } else {
         vec![100.0, 150.0, 200.0, 250.0, 300.0]
     };
-    let profile = resnet18::profile_static();
     let n_rounds = if ctx.quick { 15 } else { 60 };
     let mut t = Table::new("fig13").header(&[
         "total bandwidth (MHz)",
@@ -350,49 +426,30 @@ pub fn fig13(ctx: &mut Ctx) -> Result<()> {
     let mut s_oracle = Vec::new();
     for &mhz in &xs {
         let net = ctx.cfg.net.clone().with_total_bandwidth(mhz * 1e6);
-        let mut rng = Rng::new(0x13);
-        let dep = Deployment::generate(&net, &mut rng);
-        let avg = ChannelRealization::average(&dep);
-        let prob = Problem {
-            cfg: &net,
-            profile,
-            dep: &dep,
-            ch: &avg,
-            batch: ctx.cfg.train.batch,
-            phi: ctx.cfg.train.phi,
-        };
-        // Optimize ONCE on average gains — the decision then stays fixed.
-        let d = bcd::solve(&prob, bcd::BcdOptions::default())?.decision;
-        let t_static = prob.objective(&d);
-        // Pre-sample the fading realizations in RNG-stream order, then
-        // evaluate fixed vs oracle per realization.
-        let chs: Vec<ChannelRealization> = (0..n_rounds)
-            .map(|_| ChannelRealization::sample(&dep, &mut rng))
-            .collect();
-        let fixed_vals: Vec<f64> = chs
-            .iter()
-            .map(|ch| Problem { ch, ..prob.clone() }.objective(&d))
-            .collect();
-        let oracle_vals: Vec<f64> = sweep::run_oracle_cells(
-            &prob,
-            &chs,
-            bcd::BcdOptions { max_iters: 6, tol: 1e-4 },
+        let (t_static, fixed, oracle) = fig13_point(
+            &net,
+            ctx.cfg.train.batch,
+            ctx.cfg.train.phi,
+            n_rounds,
             par::max_threads(),
-        )
-        .into_iter()
-        .flatten()
-        .collect();
-        let t_fixed = mean(&fixed_vals);
-        let t_oracle = mean(&oracle_vals);
+        )?;
+        let p = scenario::pair_latencies(&fixed, &oracle);
+        if p.n_dropped > 0 {
+            println!(
+                "  fig13 @ {mhz} MHz: dropped {}/{n_rounds} realizations \
+                 (solve failures) from both the fixed and oracle means",
+                p.n_dropped
+            );
+        }
         s_static.push((mhz, t_static));
-        s_fixed.push((mhz, t_fixed));
-        s_oracle.push((mhz, t_oracle));
+        s_fixed.push((mhz, p.fixed_mean));
+        s_oracle.push((mhz, p.oracle_mean));
         t.row(&[
             format!("{mhz}"),
             format!("{t_static:.3}"),
-            format!("{t_fixed:.3}"),
-            format!("{t_oracle:.3}"),
-            format!("{:.3}", t_fixed / t_oracle.max(1e-12)),
+            format!("{:.3}", p.fixed_mean),
+            format!("{:.3}", p.oracle_mean),
+            format!("{:.3}", p.ratio()),
         ]);
     }
     plot.series("static (ideal)", &s_static);
@@ -402,4 +459,223 @@ pub fn fig13(ctx: &mut Ctx) -> Result<()> {
     println!("{}", t.render());
     ctx.save("fig13.csv", &t.to_csv())?;
     ctx.save("fig13.txt", &plot.render())
+}
+
+/// Fig. 13b — when does "optimize once" stop being good enough?
+///
+/// Sweeps the block-fading redraw period (channel coherence, in rounds)
+/// against the re-optimization policy at the default bandwidth. Each cell
+/// is a full scenario run: expand the dynamics from the cell's seed, run
+/// the policy, average the per-round eq. 23 latency. All four policies
+/// see the *same* realization sequences (same seeds), so columns are
+/// directly comparable; the grid fans across cores via
+/// [`scenario::run_scenario_cells`] (bit-identical to serial).
+pub fn fig13b(ctx: &mut Ctx) -> Result<()> {
+    let profile = resnet18::profile_static();
+    let n_rounds = if ctx.quick { 16 } else { 64 };
+    let seeds: u64 = if ctx.quick { 2 } else { 5 };
+    let periods: Vec<usize> = if ctx.quick {
+        vec![1, 4, 16]
+    } else {
+        vec![1, 2, 4, 8, 16, 32]
+    };
+    let policies = [
+        ReoptPolicy::Never,
+        ReoptPolicy::EveryK(8),
+        ReoptPolicy::OnRegression(1.2),
+        ReoptPolicy::EveryK(1), // oracle — last so the ratio column reads off it
+    ];
+    let bcd_opts = bcd::BcdOptions { max_iters: 6, tol: 1e-4 };
+    let mut cells = Vec::new();
+    for &period in &periods {
+        for &policy in &policies {
+            for s in 0..seeds {
+                cells.push(ScenarioCell {
+                    net: ctx.cfg.net.clone(),
+                    spec: ScenarioSpec::block_fading(n_rounds, period),
+                    policy,
+                    bcd: bcd_opts,
+                    seed: 0x13B0 + s,
+                    batch: ctx.cfg.train.batch,
+                    phi: ctx.cfg.train.phi,
+                });
+            }
+        }
+    }
+    let outs =
+        scenario::run_scenario_cells(profile, &cells, par::max_threads());
+
+    let mut header = vec!["redraw period (rounds)".to_string()];
+    header.extend(policies.iter().map(|p| p.name()));
+    header.push("never/oracle".into());
+    let mut t = Table::new("fig13b").header(&header);
+    let mut solves_t = Table::new("fig13b optimizer invocations").header(
+        &std::iter::once("redraw period (rounds)".to_string())
+            .chain(policies.iter().map(|p| p.name()))
+            .collect::<Vec<_>>(),
+    );
+    let mut plot = LinePlot::new(
+        "Fig 13b: re-optimization policy vs channel coherence",
+        "fading redraw period (rounds)",
+        "mean per-round latency (s)",
+    );
+    let mut series: Vec<(String, Vec<(f64, f64)>)> =
+        policies.iter().map(|p| (p.name(), Vec::new())).collect();
+    // Consume in the exact construction order: period-major, then policy,
+    // with one `seeds`-sized chunk per (period, policy) pair.
+    let mut chunks = outs.chunks(seeds as usize);
+    for &period in &periods {
+        let mut row = vec![period.to_string()];
+        let mut solves_row = vec![period.to_string()];
+        let mut means = Vec::new();
+        for (pi, policy) in policies.iter().enumerate() {
+            let chunk =
+                chunks.next().expect("fig13b cell grid shape mismatch");
+            // A failed cell (invalid spec, or every solve failed) must
+            // not silently enter the mean as 0.0 — drop and report it,
+            // like fig13's paired statistics.
+            let mut vals = Vec::new();
+            let mut n_solves = 0usize;
+            let mut dropped_cells = 0usize;
+            let mut failed_rounds = 0usize;
+            for s in chunk.iter() {
+                match s {
+                    Some(sum) if sum.n_rounds > 0 => {
+                        vals.push(sum.mean_latency);
+                        n_solves += sum.n_solves;
+                        failed_rounds += sum.n_failed;
+                    }
+                    _ => dropped_cells += 1,
+                }
+            }
+            if dropped_cells > 0 || failed_rounds > 0 {
+                println!(
+                    "  fig13b period {period} / {}: dropped \
+                     {dropped_cells} cell(s), {failed_rounds} failed \
+                     round(s) (solve failures)",
+                    policy.name()
+                );
+            }
+            let v = if vals.is_empty() { f64::NAN } else { mean(&vals) };
+            means.push(v);
+            series[pi].1.push((period as f64, v));
+            row.push(format!("{v:.3}"));
+            // Mean solves per *surviving* cell (the same cell set the
+            // latency column averages).
+            solves_row.push(if vals.is_empty() {
+                "n/a".to_string()
+            } else {
+                format!("{:.1}", n_solves as f64 / vals.len() as f64)
+            });
+        }
+        let oracle_mean = means[policies.len() - 1];
+        let ratio = if oracle_mean.is_finite() {
+            means[0] / oracle_mean.max(1e-12)
+        } else {
+            f64::NAN
+        };
+        row.push(format!("{ratio:.3}"));
+        t.row(&row);
+        solves_t.row(&solves_row);
+    }
+    for (name, pts) in &series {
+        plot.series(name, pts);
+    }
+    println!("{}", plot.render());
+    println!("{}", t.render());
+    println!("{}", solves_t.render());
+    ctx.save("fig13b.csv", &t.to_csv())?;
+    ctx.save("fig13b.txt", &plot.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::ChannelRealization;
+    use crate::optim::Problem;
+
+    /// The acceptance test for the scenario refactor: `fig13_point` must
+    /// reproduce the pre-refactor inline fig13 pipeline bit for bit —
+    /// same RNG stream, same BCD solves, same fixed/oracle evaluations.
+    #[test]
+    fn fig13_point_matches_legacy_inline_pipeline() {
+        let mut net = NetworkConfig::default();
+        net.n_clients = 3;
+        net.n_subchannels = 6;
+        let profile = resnet18::profile_static();
+        let n_rounds = 4;
+
+        // --- the pre-refactor fig13 body, inlined verbatim ---
+        let mut rng = Rng::new(0x13);
+        let dep = Deployment::generate(&net, &mut rng);
+        let avg = ChannelRealization::average(&dep);
+        let prob = Problem {
+            cfg: &net,
+            profile,
+            dep: &dep,
+            ch: &avg,
+            batch: 64,
+            phi: 0.5,
+        };
+        let d = bcd::solve(&prob, bcd::BcdOptions::default())
+            .unwrap()
+            .decision;
+        let t_static_legacy = prob.objective(&d);
+        let chs: Vec<ChannelRealization> = (0..n_rounds)
+            .map(|_| ChannelRealization::sample(&dep, &mut rng))
+            .collect();
+        let fixed_legacy: Vec<f64> = chs
+            .iter()
+            .map(|ch| Problem { ch, ..prob.clone() }.objective(&d))
+            .collect();
+        let oracle_legacy = sweep::run_oracle_cells(
+            &prob,
+            &chs,
+            bcd::BcdOptions { max_iters: 6, tol: 1e-4 },
+            2,
+        );
+
+        // --- the scenario-engine path ---
+        let (t_static, fixed, oracle) =
+            fig13_point(&net, 64, 0.5, n_rounds, 2).unwrap();
+
+        assert_eq!(
+            t_static.to_bits(),
+            t_static_legacy.to_bits(),
+            "static ideal diverged: {t_static} vs {t_static_legacy}"
+        );
+        assert_eq!(fixed.len(), n_rounds);
+        for (i, (a, b)) in fixed.iter().zip(&fixed_legacy).enumerate() {
+            assert_eq!(
+                a.map(f64::to_bits),
+                Some(b.to_bits()),
+                "fixed series diverged at realization {i}"
+            );
+        }
+        assert_eq!(oracle.len(), n_rounds);
+        for (i, (a, b)) in oracle.iter().zip(&oracle_legacy).enumerate() {
+            assert_eq!(
+                a.map(f64::to_bits),
+                b.map(f64::to_bits),
+                "oracle series diverged at realization {i}"
+            );
+        }
+    }
+
+    /// The sweep path is bit-identical for any thread count.
+    #[test]
+    fn fig13_point_thread_invariant() {
+        let mut net = NetworkConfig::default();
+        net.n_clients = 3;
+        net.n_subchannels = 6;
+        let serial = fig13_point(&net, 64, 0.5, 4, 1).unwrap();
+        let par8 = fig13_point(&net, 64, 0.5, 4, 8).unwrap();
+        assert_eq!(serial.0.to_bits(), par8.0.to_bits());
+        for (a, b) in serial.1.iter().zip(&par8.1) {
+            assert_eq!(a.map(f64::to_bits), b.map(f64::to_bits));
+        }
+        for (a, b) in serial.2.iter().zip(&par8.2) {
+            assert_eq!(a.map(f64::to_bits), b.map(f64::to_bits));
+        }
+    }
 }

@@ -15,6 +15,7 @@
 //! | fig11  | per-round latency vs total bandwidth (5 schemes) |
 //! | fig12  | per-round latency vs server compute (5 schemes) |
 //! | fig13  | robustness to channel variation |
+//! | fig13b | re-optimization policy vs channel coherence (scenario sweep; repo extension) |
 //!
 //! Training-backed experiments (table5, fig4, fig7–10) run the real
 //! coordinator over PJRT; `quick` mode shrinks rounds/sweeps so the full
@@ -90,8 +91,8 @@ impl<'a> Ctx<'a> {
 
 /// All experiment ids in regeneration order.
 pub const ALL_IDS: &[&str] = &[
-    "table1", "table4", "fig11", "fig12", "fig13", "table5", "fig4", "fig7",
-    "fig8", "fig9", "fig10",
+    "table1", "table4", "fig11", "fig12", "fig13", "fig13b", "table5",
+    "fig4", "fig7", "fig8", "fig9", "fig10",
 ];
 
 /// Run one experiment by id.
@@ -110,6 +111,7 @@ pub fn run(id: &str, ctx: &mut Ctx) -> Result<()> {
         "fig11" => latency_figs::fig11(ctx),
         "fig12" => latency_figs::fig12(ctx),
         "fig13" => latency_figs::fig13(ctx),
+        "fig13b" => latency_figs::fig13b(ctx),
         other => Err(Error::Config(format!(
             "unknown experiment '{other}' (known: {ALL_IDS:?})"
         ))),

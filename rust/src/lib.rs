@@ -31,6 +31,7 @@
 //! | [`data`] | synthetic datasets + IID / non-IID partitioners |
 //! | [`runtime`] | PJRT execution of the AOT artifacts (HLO text → compile → execute) |
 //! | [`coordinator`] | the training system: leader + client workers, full EPSL/PSL/SFL/vanilla-SL drivers |
+//! | [`scenario`] | multi-round network dynamics: block fading, LoS flips, compute jitter, churn, re-optimization policies |
 //! | [`metrics`] | round records, curves, CSV emission |
 //! | [`experiments`] | one registered generator per paper table/figure |
 
@@ -45,6 +46,7 @@ pub mod metrics;
 pub mod optim;
 pub mod profile;
 pub mod runtime;
+pub mod scenario;
 pub mod util;
 
 pub use error::{Error, Result};

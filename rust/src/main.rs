@@ -18,6 +18,7 @@ use epsl::optim::{baselines, bcd, Problem};
 use epsl::profile::{resnet18, splitnet};
 use epsl::runtime::artifact::Manifest;
 use epsl::runtime::Runtime;
+use epsl::scenario::DynamicChannel;
 use epsl::util::rng::Rng;
 use epsl::util::table::Table;
 
@@ -39,6 +40,9 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "lr", takes_value: true, help: "learning rate (both sides)" },
         FlagSpec { name: "dataset", takes_value: true, help: "dataset size D" },
         FlagSpec { name: "optimize", takes_value: false, help: "use BCD for latency accounting" },
+        FlagSpec { name: "dynamic-channel", takes_value: false, help: "per-round channel dynamics for latency accounting" },
+        FlagSpec { name: "redraw", takes_value: true, help: "fading redraw period in rounds (0=static; implies --dynamic-channel)" },
+        FlagSpec { name: "reopt", takes_value: true, help: "re-opt policy: never|every:<k>|regress:<x>|oracle (implies --dynamic-channel)" },
         FlagSpec { name: "scheme", takes_value: true, help: "a|b|c|d|proposed (optimize)" },
         FlagSpec { name: "artifacts", takes_value: true, help: "artifacts dir" },
         FlagSpec { name: "help", takes_value: false, help: "print help" },
@@ -115,6 +119,27 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let fw = parse_framework(args.get("framework").unwrap_or("epsl"), phi)
         .map_err(|e| anyhow::anyhow!(e))?;
     let lr = args.f64("lr")?.unwrap_or(0.1) as f32;
+    let rounds = args.usize("rounds")?.unwrap_or(200);
+    // Dynamic-channel mode: the `[scenario]` config section, overridable
+    // (and implicitly enabled) by the --dynamic-channel/--redraw/--reopt
+    // flags.
+    let mut scn = cfg.scenario.clone();
+    if args.has("dynamic-channel") {
+        scn.enabled = true;
+    }
+    if let Some(k) = args.usize("redraw")? {
+        scn.redraw_period = k;
+        scn.enabled = true;
+    }
+    if let Some(p) = args.get("reopt") {
+        scn.reopt = p.to_string();
+        scn.enabled = true;
+    }
+    let dynamic_channel = if scn.enabled {
+        Some(DynamicChannel::from_settings(&scn, rounds)?)
+    } else {
+        None
+    };
     let opts = TrainerOptions {
         family: args.get("family").unwrap_or("mnist").to_string(),
         framework: fw,
@@ -122,11 +147,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cut: args.usize("cut")?.unwrap_or(2),
         iid: !args.has("non-iid"),
         dataset_size: args.usize("dataset")?.unwrap_or(2000),
-        rounds: args.usize("rounds")?.unwrap_or(200),
+        rounds,
         eta_c: lr,
         eta_s: lr,
         seed: args.usize("seed")?.unwrap_or(2023) as u64,
         optimize_resources: args.has("optimize"),
+        dynamic_channel,
         ..Default::default()
     };
     let manifest = Manifest::load(&cfg.artifacts_dir)?;

@@ -121,6 +121,17 @@ pub fn uniform_power(prob: &Problem, alloc: &Allocation) -> Vec<f64> {
     psd
 }
 
+/// The no-optimizer decision at a fixed cut: RSS allocation + the uniform
+/// PSD computed for it. The allocation is computed **once** and shared by
+/// the PSD plan and the decision — the training driver previously ran
+/// `rss_allocation` twice, pairing the shipped PSD with a second (equal,
+/// but separately computed) allocation.
+pub fn uniform_decision(prob: &Problem, cut: usize) -> Decision {
+    let alloc = rss_allocation(prob);
+    let psd = uniform_power(prob, &alloc);
+    Decision { alloc, psd_dbm_hz: psd, cut }
+}
+
 /// Random cut among the candidates (baselines a/b).
 pub fn random_cut(prob: &Problem, rng: &mut Rng) -> usize {
     let cands = &prob.profile.cut_candidates;
@@ -265,6 +276,35 @@ mod tests {
                 scheme.name()
             );
         }
+    }
+
+    #[test]
+    fn uniform_decision_single_allocation_bit_identical() {
+        // Regression guard for the driver's build_sim_latency fix: the one
+        // shared allocation must ship a decision bit-identical to the old
+        // compute-it-twice construction, and the PSD must be the one
+        // derived from the decision's own allocation.
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let p = prob(&cfg, &profile, &dep, &ch);
+        let d = uniform_decision(&p, 4);
+        // Pre-fix construction: two independent rss_allocation calls.
+        let legacy_psd = uniform_power(&p, &rss_allocation(&p));
+        let legacy_alloc = rss_allocation(&p);
+        assert_eq!(d.alloc, legacy_alloc);
+        assert_eq!(d.cut, 4);
+        assert_eq!(d.psd_dbm_hz.len(), legacy_psd.len());
+        for (a, b) in d.psd_dbm_hz.iter().zip(&legacy_psd) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Internal consistency: the shipped PSD is the uniform plan for
+        // the shipped allocation.
+        let re_psd = uniform_power(&p, &d.alloc);
+        for (a, b) in d.psd_dbm_hz.iter().zip(&re_psd) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        p.check_feasible(&d).unwrap();
     }
 
     #[test]

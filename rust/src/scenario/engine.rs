@@ -1,0 +1,573 @@
+//! Deterministic expansion of a [`ScenarioSpec`] into per-round network
+//! states.
+//!
+//! The expansion is serial and cheap (the expensive part — BCD solves and
+//! objective evaluations — happens in [`super::run`]); all randomness flows
+//! through the caller's [`Rng`] with one documented stream discipline:
+//!
+//! - when any of churn / LoS flips / compute jitter is enabled, exactly
+//!   one base stream is forked from the parent, and every enabled feature
+//!   derives its private sub-stream from a *clone* of that base with its
+//!   own tag — so the fading draws and each feature's draws are identical
+//!   no matter which other features are toggled;
+//! - block-fading redraws consume the parent stream directly, and a
+//!   feature-free spec forks nothing, which keeps a pure-fading spec
+//!   ([`ScenarioSpec::fading`]) on the **exact** RNG stream the
+//!   pre-scenario Fig. 13 loop used (`n` sequential
+//!   [`ChannelRealization::sample`] calls after the deployment draw) — the
+//!   refactored figure reproduces its numbers bit-for-bit.
+//!
+//! Round 0 is always the deployment as generated (dynamics start at round
+//! 1); under `redraw_period: Some(k)` the fading is redrawn at rounds
+//! `0, k, 2k, …` and held between redraws (block fading).
+
+use crate::channel::{ChannelRealization, ClientLink, Deployment};
+use crate::channel::pathloss;
+use crate::config::NetworkConfig;
+use crate::error::Result;
+use crate::util::rng::Rng;
+
+use super::spec::ScenarioSpec;
+
+/// One round's realized network state.
+#[derive(Debug, Clone)]
+pub struct ScenarioRound {
+    pub round: usize,
+    /// Deployment the round sees: active clients only, with this round's
+    /// LoS states and jittered compute capabilities.
+    pub dep: Deployment,
+    /// Channel gains the round experiences (rows follow `dep.clients`).
+    pub ch: ChannelRealization,
+    /// Roster indices of the active clients (`dep.clients[j]` is roster
+    /// client `active[j]`).
+    pub active: Vec<usize>,
+    /// Did the active client set change vs. the previous round? (Forces a
+    /// re-solve: the incumbent allocation maps subchannels to a client set
+    /// that no longer exists.)
+    pub membership_changed: bool,
+}
+
+/// A fully expanded scenario: the roster deployment plus every round's
+/// realized state.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub net: NetworkConfig,
+    pub spec: ScenarioSpec,
+    /// The generated roster (round-0 deployment; churn activates subsets
+    /// of it).
+    pub roster: Deployment,
+    pub rounds: Vec<ScenarioRound>,
+}
+
+impl Scenario {
+    /// Draw a fresh roster from `net` and expand `spec` — everything from
+    /// one seed.
+    pub fn generate(net: &NetworkConfig, spec: &ScenarioSpec, seed: u64)
+        -> Result<Scenario> {
+        let mut rng = Rng::new(seed);
+        let roster = Deployment::generate(net, &mut rng);
+        Scenario::from_deployment(net.clone(), roster, spec.clone(), &mut rng)
+    }
+
+    /// Expand `spec` over an existing deployment, continuing the caller's
+    /// RNG stream (the Fig. 13 entry point: the figure draws the
+    /// deployment itself, then hands the same `rng` over).
+    pub fn from_deployment(net: NetworkConfig, roster: Deployment,
+                           spec: ScenarioSpec, rng: &mut Rng)
+        -> Result<Scenario> {
+        spec.validate(roster.n_clients())?;
+        let c = roster.n_clients();
+
+        // Feature sub-streams (see module docs): one base fork when any
+        // feature is enabled; each feature derives from a clone of it, so
+        // its draws don't depend on which other features are on.
+        let any_feature = spec.churn.is_some()
+            || spec.los_flip.is_some()
+            || spec.compute_jitter.is_some();
+        let base = any_feature.then(|| rng.fork(0xFEA7));
+        let sub = |tag: u64| {
+            let mut b = base.clone().expect("feature stream without base");
+            b.fork(tag)
+        };
+        let mut churn_rng = spec.churn.is_some().then(|| sub(0xC42B));
+        let mut los_rng = spec.los_flip.is_some().then(|| sub(0x105F));
+        let mut jit_rng = spec.compute_jitter.is_some().then(|| sub(0x717E));
+
+        let base_f: Vec<f64> = roster.f_clients().to_vec();
+        let mut los: Vec<bool> = roster.clients.iter().map(|l| l.los).collect();
+        let mut active = vec![true; c];
+        let mut f_now = base_f.clone();
+        // Full-roster gains of the current fading block (set at round 0).
+        let mut block_gains: Vec<Vec<f64>> = Vec::new();
+
+        let mut rounds = Vec::with_capacity(spec.rounds);
+        for r in 0..spec.rounds {
+            let mut membership_changed = false;
+            if r > 0 {
+                // 1. Churn: roster-index order; an active client may drop
+                //    (never below min_active), an inactive one may rejoin.
+                if let (Some(cs), Some(crng)) =
+                    (spec.churn.as_ref(), churn_rng.as_mut())
+                {
+                    let mut n_active =
+                        active.iter().filter(|a| **a).count();
+                    for slot in active.iter_mut() {
+                        if *slot {
+                            if crng.chance(cs.drop_prob)
+                                && n_active > cs.min_active
+                            {
+                                *slot = false;
+                                n_active -= 1;
+                                membership_changed = true;
+                            }
+                        } else if crng.chance(cs.rejoin_prob) {
+                            *slot = true;
+                            n_active += 1;
+                            membership_changed = true;
+                        }
+                    }
+                }
+                // 2. LoS Markov flips (drawn for every roster client, so
+                //    the stream is independent of churn outcomes).
+                if let (Some(fs), Some(lrng)) =
+                    (spec.los_flip.as_ref(), los_rng.as_mut())
+                {
+                    for i in 0..c {
+                        let p_los = pathloss::los_probability(
+                            roster.clients[i].distance_m,
+                        );
+                        let p = if los[i] {
+                            fs.flip_prob * (1.0 - p_los)
+                        } else {
+                            fs.flip_prob * p_los
+                        };
+                        if lrng.chance(p) {
+                            los[i] = !los[i];
+                            // A flip changes the deterministic pathloss
+                            // immediately: rescale the held block-fading
+                            // row (keeping its shadowing realization) so
+                            // `ch` always agrees with `dep`'s LoS state
+                            // mid-block. The next redraw resamples fully;
+                            // the `None` (average-gain) branch recomputes
+                            // from `dep` every round anyway.
+                            if spec.redraw_period.is_some() {
+                                let d = roster.clients[i].distance_m;
+                                for (k, s) in
+                                    roster.subchannels.iter().enumerate()
+                                {
+                                    let old_mean = pathloss::mean_gain(
+                                        s.center_freq_hz,
+                                        d,
+                                        !los[i],
+                                    );
+                                    let new_mean = pathloss::mean_gain(
+                                        s.center_freq_hz,
+                                        d,
+                                        los[i],
+                                    );
+                                    block_gains[i][k] *=
+                                        new_mean / old_mean;
+                                }
+                            }
+                        }
+                    }
+                }
+                // 3. Compute jitter: memoryless around the base f_i.
+                if let (Some(js), Some(jrng)) =
+                    (spec.compute_jitter.as_ref(), jit_rng.as_mut())
+                {
+                    for i in 0..c {
+                        f_now[i] = base_f[i]
+                            * (1.0
+                                + jrng.uniform(-js.amplitude, js.amplitude));
+                    }
+                }
+            }
+
+            // 4. This round's full-roster deployment.
+            let clients_now: Vec<ClientLink> = (0..c)
+                .map(|i| ClientLink {
+                    distance_m: roster.clients[i].distance_m,
+                    f_client: f_now[i],
+                    los: los[i],
+                })
+                .collect();
+            let roster_now =
+                Deployment::new(clients_now, roster.subchannels.clone());
+
+            // 5. Channel: block-fading redraw or recomputed averages.
+            match spec.redraw_period {
+                Some(k) if r % k == 0 => {
+                    block_gains =
+                        ChannelRealization::sample(&roster_now, rng).gain;
+                }
+                Some(_) => {} // hold the block's gains
+                None => {
+                    block_gains =
+                        ChannelRealization::average(&roster_now).gain;
+                }
+            }
+
+            // 6. Project onto the active subset.
+            let idx: Vec<usize> = (0..c).filter(|&i| active[i]).collect();
+            let (dep, ch) = if idx.len() == c {
+                (
+                    roster_now,
+                    ChannelRealization { gain: block_gains.clone() },
+                )
+            } else {
+                let clients: Vec<ClientLink> =
+                    idx.iter().map(|&i| roster_now.clients[i]).collect();
+                let gain: Vec<Vec<f64>> =
+                    idx.iter().map(|&i| block_gains[i].clone()).collect();
+                (
+                    Deployment::new(clients, roster.subchannels.clone()),
+                    ChannelRealization { gain },
+                )
+            };
+            rounds.push(ScenarioRound {
+                round: r,
+                dep,
+                ch,
+                active: idx,
+                membership_changed,
+            });
+        }
+        Ok(Scenario { net, spec, roster, rounds })
+    }
+
+    pub fn n_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Subchannel;
+    use crate::scenario::spec::{ChurnSpec, ComputeJitterSpec, LosFlipSpec};
+
+    fn net() -> NetworkConfig {
+        NetworkConfig::default()
+    }
+
+    /// Hand-built roster with far (flippy) and near (stable) clients.
+    fn fixed_roster() -> Deployment {
+        let mk = |d, los| ClientLink { distance_m: d, f_client: 1.2e9, los };
+        let clients =
+            vec![mk(150.0, true), mk(10.0, true), mk(120.0, false)];
+        let subchannels = (0..6)
+            .map(|k| Subchannel {
+                index: k,
+                center_freq_hz: 28e9 + (k as f64 + 0.5) * 10e6,
+                bandwidth_hz: 10e6,
+            })
+            .collect();
+        Deployment::new(clients, subchannels)
+    }
+
+    #[test]
+    fn same_seed_same_sequence() {
+        let spec = ScenarioSpec {
+            rounds: 12,
+            redraw_period: Some(2),
+            los_flip: Some(LosFlipSpec { flip_prob: 0.5 }),
+            compute_jitter: Some(ComputeJitterSpec { amplitude: 0.2 }),
+            churn: Some(ChurnSpec {
+                drop_prob: 0.2,
+                rejoin_prob: 0.5,
+                min_active: 2,
+            }),
+        };
+        let a = Scenario::generate(&net(), &spec, 0xA11CE).unwrap();
+        let b = Scenario::generate(&net(), &spec, 0xA11CE).unwrap();
+        assert_eq!(a.n_rounds(), b.n_rounds());
+        for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(ra.active, rb.active);
+            assert_eq!(ra.membership_changed, rb.membership_changed);
+            assert_eq!(ra.dep.n_clients(), rb.dep.n_clients());
+            for (ga, gb) in ra.ch.gain.iter().zip(&rb.ch.gain) {
+                for (x, y) in ga.iter().zip(gb) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            for (x, y) in
+                ra.dep.f_clients().iter().zip(rb.dep.f_clients())
+            {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        let c = Scenario::generate(&net(), &spec, 0xB0B).unwrap();
+        assert_ne!(
+            a.rounds[0].ch.gain[0][0].to_bits(),
+            c.rounds[0].ch.gain[0][0].to_bits()
+        );
+    }
+
+    #[test]
+    fn pure_fading_matches_legacy_sample_stream() {
+        // The Fig. 13 parity contract: a fading-only spec consumes the
+        // caller's RNG exactly like the pre-scenario per-round
+        // `ChannelRealization::sample` loop.
+        let n = net();
+        let n_rounds = 7;
+        let mut rng_legacy = Rng::new(0x13);
+        let dep_legacy = Deployment::generate(&n, &mut rng_legacy);
+        let legacy: Vec<ChannelRealization> = (0..n_rounds)
+            .map(|_| ChannelRealization::sample(&dep_legacy, &mut rng_legacy))
+            .collect();
+
+        let mut rng = Rng::new(0x13);
+        let dep = Deployment::generate(&n, &mut rng);
+        let sc = Scenario::from_deployment(
+            n.clone(),
+            dep,
+            ScenarioSpec::fading(n_rounds),
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(sc.n_rounds(), n_rounds);
+        for (r, old) in sc.rounds.iter().zip(&legacy) {
+            assert!(!r.membership_changed);
+            assert_eq!(r.active.len(), n.n_clients);
+            for (ga, gb) in r.ch.gain.iter().zip(&old.gain) {
+                for (x, y) in ga.iter().zip(gb) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        }
+        // And both streams end in the same place.
+        assert_eq!(rng.next_u64(), rng_legacy.next_u64());
+    }
+
+    #[test]
+    fn static_spec_holds_average_gains() {
+        let sc =
+            Scenario::generate(&net(), &ScenarioSpec::static_channel(5), 9)
+                .unwrap();
+        let avg = ChannelRealization::average(&sc.roster);
+        for r in &sc.rounds {
+            assert_eq!(r.dep.n_clients(), sc.roster.n_clients());
+            for (ga, gb) in r.ch.gain.iter().zip(&avg.gain) {
+                for (x, y) in ga.iter().zip(gb) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            assert_eq!(
+                r.dep.f_clients(),
+                sc.roster.f_clients(),
+                "no jitter configured"
+            );
+        }
+    }
+
+    #[test]
+    fn block_fading_holds_within_blocks() {
+        let sc = Scenario::generate(
+            &net(),
+            &ScenarioSpec::block_fading(9, 3),
+            77,
+        )
+        .unwrap();
+        for r in 0..9 {
+            let block_start = (r / 3) * 3;
+            assert_eq!(
+                sc.rounds[r].ch.gain[0][0].to_bits(),
+                sc.rounds[block_start].ch.gain[0][0].to_bits(),
+                "round {r} left its fading block"
+            );
+        }
+        assert_ne!(
+            sc.rounds[0].ch.gain[0][0].to_bits(),
+            sc.rounds[3].ch.gain[0][0].to_bits(),
+            "blocks redraw"
+        );
+    }
+
+    #[test]
+    fn los_flips_change_states_and_average_gains() {
+        let spec = ScenarioSpec {
+            rounds: 60,
+            redraw_period: None,
+            los_flip: Some(LosFlipSpec { flip_prob: 1.0 }),
+            compute_jitter: None,
+            churn: None,
+        };
+        let mut rng = Rng::new(5);
+        let sc = Scenario::from_deployment(
+            net(),
+            fixed_roster(),
+            spec,
+            &mut rng,
+        )
+        .unwrap();
+        // The far clients (p_flip ≈ 0.87 / round) must flip at least once
+        // over 60 rounds with this deterministic seed.
+        let flipped = sc.rounds.iter().any(|r| {
+            r.dep.clients[0].los != sc.roster.clients[0].los
+                || r.dep.clients[2].los != sc.roster.clients[2].los
+        });
+        assert!(flipped, "no LoS flip in 60 rounds at flip_prob=1");
+        // A flip moves the deterministic average gains (no fading here).
+        let g0 = sc.rounds[0].ch.gain[0][0];
+        assert!(sc.rounds.iter().any(|r| r.ch.gain[0][0] != g0));
+    }
+
+    #[test]
+    fn los_flips_rescale_held_block_gains() {
+        // Regression: with block fading (gains held between redraws) a
+        // LoS flip must still move the realized gains immediately — the
+        // held row keeps its shadowing realization but the pathloss
+        // component follows the new state, so `ch` and `dep` never
+        // disagree mid-block.
+        let spec = ScenarioSpec {
+            rounds: 6,
+            redraw_period: Some(100), // one block for the whole scenario
+            los_flip: Some(LosFlipSpec { flip_prob: 1.0 }),
+            compute_jitter: None,
+            churn: None,
+        };
+        let mut rng = Rng::new(7);
+        let sc = Scenario::from_deployment(
+            net(),
+            fixed_roster(),
+            spec,
+            &mut rng,
+        )
+        .unwrap();
+        let r0 = &sc.rounds[0];
+        let mut saw_flip = false;
+        for r in &sc.rounds {
+            for (i, cl) in r.dep.clients.iter().enumerate() {
+                let cl0 = &r0.dep.clients[i];
+                let d = cl0.distance_m;
+                for (k, s) in r0.dep.subchannels.iter().enumerate() {
+                    // Held gain = round-0 gain × pathloss ratio of the
+                    // current vs round-0 LoS state (flips compose
+                    // multiplicatively, so flip-and-back cancels).
+                    let ratio = crate::channel::pathloss::mean_gain(
+                        s.center_freq_hz,
+                        d,
+                        cl.los,
+                    ) / crate::channel::pathloss::mean_gain(
+                        s.center_freq_hz,
+                        d,
+                        cl0.los,
+                    );
+                    let expect = r0.ch.gain[i][k] * ratio;
+                    let got = r.ch.gain[i][k];
+                    assert!(
+                        (got - expect).abs() <= 1e-9 * expect.abs(),
+                        "round {} client {i} subch {k}: {got} vs {expect}",
+                        r.round
+                    );
+                }
+                saw_flip |= cl.los != cl0.los;
+            }
+        }
+        assert!(saw_flip, "no LoS flip occurred over 6 rounds at p=1");
+    }
+
+    #[test]
+    fn jitter_stays_within_amplitude() {
+        let spec = ScenarioSpec {
+            rounds: 30,
+            redraw_period: None,
+            los_flip: None,
+            compute_jitter: Some(ComputeJitterSpec { amplitude: 0.25 }),
+            churn: None,
+        };
+        let sc = Scenario::generate(&net(), &spec, 3).unwrap();
+        let base = sc.roster.f_clients().to_vec();
+        let mut moved = false;
+        for r in &sc.rounds {
+            for (f, b) in r.dep.f_clients().iter().zip(&base) {
+                let ratio = f / b;
+                assert!(
+                    (0.75..=1.25).contains(&ratio),
+                    "jitter ratio {ratio} out of band"
+                );
+                if (ratio - 1.0).abs() > 1e-9 {
+                    moved = true;
+                }
+            }
+        }
+        assert!(moved, "jitter never moved f");
+    }
+
+    #[test]
+    fn feature_streams_are_independent() {
+        // Toggling one feature must not perturb another feature's draws
+        // or the fading stream: compare {fading + jitter} against
+        // {fading + jitter + no-op churn} — gains and jittered compute
+        // must match bit for bit (pre-fix, the chained forks shifted
+        // every downstream stream when churn was enabled).
+        let mk = |churn: Option<ChurnSpec>| ScenarioSpec {
+            rounds: 8,
+            redraw_period: Some(1),
+            los_flip: None,
+            compute_jitter: Some(ComputeJitterSpec { amplitude: 0.2 }),
+            churn,
+        };
+        let a = Scenario::generate(&net(), &mk(None), 0x1D).unwrap();
+        let b = Scenario::generate(
+            &net(),
+            &mk(Some(ChurnSpec {
+                drop_prob: 0.0,
+                rejoin_prob: 0.0,
+                min_active: 1,
+            })),
+            0x1D,
+        )
+        .unwrap();
+        for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(ra.active, rb.active);
+            for (ga, gb) in ra.ch.gain.iter().zip(&rb.ch.gain) {
+                for (x, y) in ga.iter().zip(gb) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            for (x, y) in
+                ra.dep.f_clients().iter().zip(rb.dep.f_clients())
+            {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn churn_respects_min_active_and_flags_changes() {
+        let spec = ScenarioSpec {
+            rounds: 50,
+            redraw_period: Some(1),
+            los_flip: None,
+            compute_jitter: None,
+            churn: Some(ChurnSpec {
+                drop_prob: 0.3,
+                rejoin_prob: 0.3,
+                min_active: 2,
+            }),
+        };
+        let sc = Scenario::generate(&net(), &spec, 21).unwrap();
+        let mut prev: Vec<usize> = (0..sc.roster.n_clients()).collect();
+        let mut changed_any = false;
+        for r in &sc.rounds {
+            assert!(r.active.len() >= 2, "fell below min_active");
+            assert_eq!(r.dep.n_clients(), r.active.len());
+            assert_eq!(r.ch.gain.len(), r.active.len());
+            assert_eq!(r.membership_changed, r.active != prev);
+            changed_any |= r.membership_changed;
+            prev = r.active.clone();
+        }
+        assert!(changed_any, "churn never changed membership at p=0.3");
+        // Projected rows match the roster client parameters.
+        for r in &sc.rounds {
+            for (j, &i) in r.active.iter().enumerate() {
+                assert_eq!(
+                    r.dep.clients[j].distance_m,
+                    sc.roster.clients[i].distance_m
+                );
+            }
+        }
+    }
+}

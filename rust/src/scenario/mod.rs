@@ -1,0 +1,44 @@
+//! Multi-round network dynamics as a first-class abstraction.
+//!
+//! The paper optimizes resources once, on average channel gains, and holds
+//! the decision — its Fig. 13 robustness claim is that this stays
+//! near-oracle under per-round channel variation. Before this module the
+//! repo could only ask that one question, through an ad-hoc loop inside
+//! `fig13`; the training driver froze a single averaged channel for every
+//! round. Here the dynamics themselves become data:
+//!
+//! - [`ScenarioSpec`] — *what varies*: block-fading redraw period,
+//!   distance-dependent LoS Markov flips, client compute jitter, and
+//!   client dropout/arrival churn ([`spec`]);
+//! - [`Scenario`] — a spec expanded from a seed into a deterministic
+//!   per-round sequence of deployments + channel realizations
+//!   ([`engine`]);
+//! - [`ReoptPolicy`] — *when the optimizer re-solves*: `Never`,
+//!   `EveryK(k)`, or `OnRegression(threshold)`, evaluated on the
+//!   `optim::eval` fast path with solve blocks fanned across cores
+//!   ([`run`]);
+//! - [`ScenarioCell`] — grid cells for parallel sweeps over
+//!   spec × policy × seed ([`sweep`]), feeding Fig. 13 / Fig. 13b.
+//!
+//! Everything is bit-identical for any thread count (`EPSL_THREADS=1`
+//! forces serial), and a pure-fading spec consumes the RNG stream exactly
+//! as the pre-scenario Fig. 13 loop did, so the refactored figure
+//! reproduces its numbers. Knobs are documented in EXPERIMENTS.md.
+
+pub mod engine;
+pub mod run;
+pub mod spec;
+pub mod sweep;
+
+pub use engine::{Scenario, ScenarioRound};
+pub use run::{
+    pair_latencies, run_policy, run_policy_with_rates, PairedStats,
+    RoundOutcome, RoundRates, RunOptions, ScenarioOutcome,
+};
+pub use spec::{
+    ChurnSpec, ComputeJitterSpec, DynamicChannel, LosFlipSpec, ReoptPolicy,
+    ScenarioSpec,
+};
+pub use sweep::{
+    eval_scenario_cell, run_scenario_cells, ScenarioCell, ScenarioSummary,
+};

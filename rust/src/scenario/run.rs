@@ -1,0 +1,605 @@
+//! Evaluate a re-optimization policy along an expanded [`Scenario`].
+//!
+//! The scenario is partitioned into *blocks*: a block starts at every
+//! round where the policy re-solves (round 0, every k-th round for
+//! [`ReoptPolicy::EveryK`], and every membership change, which forces a
+//! re-solve under any policy). Each block runs one BCD solve and then
+//! evaluates the resulting decision against every round in the block on
+//! the [`Evaluator`] fast path (`optim::eval`).
+//!
+//! For `Never` / `EveryK` the block boundaries are known up front, every
+//! block is a pure function of the scenario, and the blocks fan across
+//! cores via [`par::parallel_map`] — results are **bit-identical** to the
+//! serial loop for any thread count (`EPSL_THREADS=1` forces serial).
+//! [`ReoptPolicy::OnRegression`] is inherently sequential (whether round
+//! r re-solves depends on round r−1's outcome) and always runs serially.
+//!
+//! Solve bases mirror the paper's semantics: `Never` / `OnRegression`
+//! optimize on the *average* gains of the current deployment (resource
+//! management as deployed), while `EveryK` re-optimizes on the round's
+//! *realized* gains (`EveryK(1)` is exactly the Fig. 13 oracle).
+
+use crate::channel::ChannelRealization;
+use crate::optim::eval::Evaluator;
+use crate::optim::{bcd, Decision, Problem};
+use crate::profile::NetworkProfile;
+use crate::util::par;
+use crate::util::stats::mean;
+
+use super::engine::{Scenario, ScenarioRound};
+use super::spec::ReoptPolicy;
+
+/// One policy run's knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RunOptions {
+    pub policy: ReoptPolicy,
+    pub bcd: bcd::BcdOptions,
+    /// Mini-batch size b of the latency model.
+    pub batch: usize,
+    /// Aggregation ratio φ of the latency model.
+    pub phi: f64,
+    /// Worker threads for the block fan-out (`OnRegression` ignores this
+    /// and runs serially).
+    pub threads: usize,
+}
+
+impl RunOptions {
+    pub fn new(policy: ReoptPolicy, batch: usize, phi: f64) -> RunOptions {
+        RunOptions {
+            policy,
+            bcd: bcd::BcdOptions::default(),
+            batch,
+            phi,
+            threads: 1,
+        }
+    }
+}
+
+/// One round's result under the policy.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    pub round: usize,
+    /// Eq. 23 latency of the decision in force, on this round's realized
+    /// deployment + channel. `None` when the governing solve failed.
+    pub latency: Option<f64>,
+    /// Did the optimizer (re-)solve at this round?
+    pub reoptimized: bool,
+}
+
+/// Per-round link state for latency consumers (the training driver's
+/// dynamic-channel `SimLatency`).
+#[derive(Debug, Clone)]
+pub struct RoundRates {
+    pub cut: usize,
+    pub f_clients: Vec<f64>,
+    pub uplink: Vec<f64>,
+    pub downlink: Vec<f64>,
+    pub broadcast: f64,
+}
+
+/// A full policy run.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub rounds: Vec<RoundOutcome>,
+    /// Optimizer invocations along the run (failed solves included).
+    pub n_solves: usize,
+    /// Rounds left without a latency because their solve failed.
+    pub n_failed: usize,
+}
+
+impl ScenarioOutcome {
+    /// Per-round latencies in round order (`None` = failed solve).
+    pub fn latencies(&self) -> Vec<Option<f64>> {
+        self.rounds.iter().map(|r| r.latency).collect()
+    }
+
+    /// Mean over the successfully evaluated rounds.
+    pub fn mean_latency(&self) -> f64 {
+        let vals: Vec<f64> =
+            self.rounds.iter().filter_map(|r| r.latency).collect();
+        mean(&vals)
+    }
+}
+
+fn round_problem<'a>(sc: &'a Scenario, profile: &'a NetworkProfile,
+                     round: &'a ScenarioRound, opts: &RunOptions)
+    -> Problem<'a> {
+    Problem {
+        cfg: &sc.net,
+        profile,
+        dep: &round.dep,
+        ch: &round.ch,
+        batch: opts.batch,
+        phi: opts.phi,
+    }
+}
+
+/// Evaluate `d` on one round: fast-path rates + eq. 23 objective
+/// (bit-identical to `Evaluator::objective`, which is bit-identical to
+/// the reference `Problem::objective`).
+fn eval_round(sc: &Scenario, profile: &NetworkProfile,
+              round: &ScenarioRound, d: &Decision, opts: &RunOptions)
+    -> (f64, RoundRates) {
+    let prob = round_problem(sc, profile, round, opts);
+    let ev = Evaluator::new(&prob);
+    let mut up = Vec::new();
+    let mut dn = Vec::new();
+    ev.fill_rates(&d.alloc, &d.psd_dbm_hz, &mut up, &mut dn);
+    let t = ev.objective_with_rates(d.cut, &up, &dn);
+    let rates = RoundRates {
+        cut: d.cut,
+        f_clients: round.dep.f_clients().to_vec(),
+        uplink: up,
+        downlink: dn,
+        broadcast: ev.broadcast_rate(),
+    };
+    (t, rates)
+}
+
+/// Solve at `round` on the policy's basis gains (realized for `EveryK`,
+/// current averages otherwise).
+fn solve_at(sc: &Scenario, profile: &NetworkProfile, round: &ScenarioRound,
+            opts: &RunOptions) -> Option<Decision> {
+    let avg;
+    let basis_ch: &ChannelRealization = match opts.policy {
+        ReoptPolicy::EveryK(_) => &round.ch,
+        _ => {
+            avg = ChannelRealization::average(&round.dep);
+            &avg
+        }
+    };
+    let prob = Problem {
+        cfg: &sc.net,
+        profile,
+        dep: &round.dep,
+        ch: basis_ch,
+        batch: opts.batch,
+        phi: opts.phi,
+    };
+    bcd::solve(&prob, opts.bcd).ok().map(|r| r.decision)
+}
+
+/// Rounds where the policy re-solves (`Never` / `EveryK` only; membership
+/// changes force a solve under every policy).
+fn solve_points(sc: &Scenario, policy: ReoptPolicy) -> Vec<usize> {
+    let mut pts = vec![0];
+    for r in 1..sc.n_rounds() {
+        let periodic =
+            matches!(policy, ReoptPolicy::EveryK(k) if r % k == 0);
+        if periodic || sc.rounds[r].membership_changed {
+            pts.push(r);
+        }
+    }
+    pts
+}
+
+/// One block's outcomes + rates (pure function of the scenario).
+fn eval_block(sc: &Scenario, profile: &NetworkProfile, opts: &RunOptions,
+              start: usize, end: usize)
+    -> Vec<(RoundOutcome, Option<RoundRates>)> {
+    let mut out = Vec::with_capacity(end - start);
+    match solve_at(sc, profile, &sc.rounds[start], opts) {
+        Some(d) => {
+            for r in start..end {
+                let (t, rates) =
+                    eval_round(sc, profile, &sc.rounds[r], &d, opts);
+                out.push((
+                    RoundOutcome {
+                        round: r,
+                        latency: Some(t),
+                        reoptimized: r == start,
+                    },
+                    Some(rates),
+                ));
+            }
+        }
+        None => {
+            for r in start..end {
+                out.push((
+                    RoundOutcome {
+                        round: r,
+                        latency: None,
+                        reoptimized: r == start,
+                    },
+                    None,
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Run the policy over the scenario; see the module docs for the block
+/// decomposition and determinism contract.
+pub fn run_policy(sc: &Scenario, profile: &NetworkProfile,
+                  opts: &RunOptions) -> ScenarioOutcome {
+    run_policy_with_rates(sc, profile, opts).0
+}
+
+/// [`run_policy`] variant that also returns per-round link rates for the
+/// training driver's dynamic-channel latency accounting (`None` for
+/// rounds whose solve failed).
+pub fn run_policy_with_rates(sc: &Scenario, profile: &NetworkProfile,
+                             opts: &RunOptions)
+    -> (ScenarioOutcome, Vec<Option<RoundRates>>) {
+    if let ReoptPolicy::OnRegression(threshold) = opts.policy {
+        return run_on_regression(sc, profile, opts, threshold);
+    }
+    let pts = solve_points(sc, opts.policy);
+    let n = sc.n_rounds();
+    let blocks: Vec<(usize, usize)> = pts
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| (s, pts.get(i + 1).copied().unwrap_or(n)))
+        .collect();
+    let results = par::parallel_map(&blocks, opts.threads, |_, &(s, e)| {
+        eval_block(sc, profile, opts, s, e)
+    });
+    let n_solves = blocks.len();
+    let mut rounds = Vec::with_capacity(n);
+    let mut rates = Vec::with_capacity(n);
+    for block in results {
+        for (o, r) in block {
+            rounds.push(o);
+            rates.push(r);
+        }
+    }
+    let n_failed = rounds.iter().filter(|r| r.latency.is_none()).count();
+    (ScenarioOutcome { rounds, n_solves, n_failed }, rates)
+}
+
+/// Serial `OnRegression` loop: evaluate with the incumbent; if the round
+/// regressed past `threshold ×` the latency recorded at the last solve,
+/// re-solve on the round's realized gains and re-evaluate.
+fn run_on_regression(sc: &Scenario, profile: &NetworkProfile,
+                     opts: &RunOptions, threshold: f64)
+    -> (ScenarioOutcome, Vec<Option<RoundRates>>) {
+    let mut rounds = Vec::with_capacity(sc.n_rounds());
+    let mut rates = Vec::with_capacity(sc.n_rounds());
+    let mut incumbent: Option<Decision> = None;
+    let mut baseline = f64::INFINITY;
+    let mut n_solves = 0usize;
+    for round in &sc.rounds {
+        let mut reoptimized = false;
+        if incumbent.is_none() || round.membership_changed {
+            n_solves += 1;
+            reoptimized = true;
+            incumbent = solve_at(sc, profile, round, opts);
+            baseline = f64::INFINITY; // reset on the first evaluation below
+        }
+        let current = incumbent.clone();
+        let (latency, rate) = match current {
+            None => (None, None),
+            Some(d) => {
+                let (mut t, mut r) =
+                    eval_round(sc, profile, round, &d, opts);
+                if baseline.is_finite() && t > threshold * baseline {
+                    // Regressed: re-solve on this round's realized gains.
+                    n_solves += 1;
+                    reoptimized = true;
+                    let realized =
+                        round_problem(sc, profile, round, opts);
+                    if let Ok(res) = bcd::solve(&realized, opts.bcd) {
+                        let d2 = res.decision;
+                        let (t2, r2) =
+                            eval_round(sc, profile, round, &d2, opts);
+                        t = t2;
+                        r = r2;
+                        baseline = t2;
+                        incumbent = Some(d2);
+                    }
+                } else if !baseline.is_finite() {
+                    baseline = t;
+                }
+                (Some(t), Some(r))
+            }
+        };
+        rounds.push(RoundOutcome { round: round.round, latency, reoptimized });
+        rates.push(rate);
+    }
+    let n_failed = rounds.iter().filter(|r| r.latency.is_none()).count();
+    (ScenarioOutcome { rounds, n_solves, n_failed }, rates)
+}
+
+/// Paired fixed/oracle statistics over a shared realization sequence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PairedStats {
+    pub fixed_mean: f64,
+    pub oracle_mean: f64,
+    /// Realizations where both sides evaluated.
+    pub n_pairs: usize,
+    /// Realizations dropped from *both* means because either side failed.
+    pub n_dropped: usize,
+}
+
+impl PairedStats {
+    /// fixed/oracle latency ratio (the Fig. 13 robustness number).
+    pub fn ratio(&self) -> f64 {
+        self.fixed_mean / self.oracle_mean.max(1e-12)
+    }
+}
+
+/// Pair per-realization fixed/oracle latencies, dropping **both** halves
+/// of any realization where either side failed, so the two means always
+/// average the same realization set. (The pre-scenario Fig. 13 silently
+/// `.flatten()`-ed oracle failures, letting the fixed and oracle means
+/// average over different realizations.)
+pub fn pair_latencies(fixed: &[Option<f64>], oracle: &[Option<f64>])
+    -> PairedStats {
+    debug_assert_eq!(
+        fixed.len(),
+        oracle.len(),
+        "paired series must cover the same realizations"
+    );
+    let mut f_vals = Vec::with_capacity(fixed.len());
+    let mut o_vals = Vec::with_capacity(oracle.len());
+    let mut n_dropped = 0usize;
+    for (f, o) in fixed.iter().zip(oracle) {
+        match (f, o) {
+            (Some(fv), Some(ov)) => {
+                f_vals.push(*fv);
+                o_vals.push(*ov);
+            }
+            _ => n_dropped += 1,
+        }
+    }
+    // No surviving pair ⇒ NaN means (not a silent 0.0-second latency).
+    let (fixed_mean, oracle_mean) = if f_vals.is_empty() {
+        (f64::NAN, f64::NAN)
+    } else {
+        (mean(&f_vals), mean(&o_vals))
+    };
+    PairedStats {
+        fixed_mean,
+        oracle_mean,
+        n_pairs: f_vals.len(),
+        n_dropped,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkConfig;
+    use crate::experiments::sweep;
+    use crate::profile::resnet18;
+    use crate::scenario::spec::ScenarioSpec;
+    use crate::util::rng::Rng;
+    use crate::channel::Deployment;
+
+    fn small_net() -> NetworkConfig {
+        NetworkConfig::default().with_clients(3)
+    }
+
+    fn fading_scenario(rounds: usize, seed: u64) -> Scenario {
+        Scenario::generate(&small_net(), &ScenarioSpec::fading(rounds), seed)
+            .unwrap()
+    }
+
+    fn opts(policy: ReoptPolicy, threads: usize) -> RunOptions {
+        RunOptions {
+            policy,
+            bcd: bcd::BcdOptions { max_iters: 4, tol: 1e-4 },
+            batch: 64,
+            phi: 0.5,
+            threads,
+        }
+    }
+
+    #[test]
+    fn never_on_static_scenario_is_constant() {
+        let sc = Scenario::generate(
+            &small_net(),
+            &ScenarioSpec::static_channel(6),
+            5,
+        )
+        .unwrap();
+        let profile = resnet18::profile();
+        let out = run_policy(&sc, &profile, &opts(ReoptPolicy::Never, 1));
+        assert_eq!(out.n_solves, 1);
+        assert_eq!(out.n_failed, 0);
+        assert_eq!(out.rounds.len(), 6);
+        let t0 = out.rounds[0].latency.unwrap();
+        assert!(t0 > 0.0);
+        for r in &out.rounds {
+            assert_eq!(r.latency.unwrap().to_bits(), t0.to_bits());
+            assert_eq!(r.reoptimized, r.round == 0);
+        }
+    }
+
+    #[test]
+    fn every_k_counts_solves() {
+        let sc = fading_scenario(12, 0xE7);
+        let profile = resnet18::profile();
+        let out =
+            run_policy(&sc, &profile, &opts(ReoptPolicy::EveryK(4), 1));
+        assert_eq!(out.n_solves, 3, "solves at rounds 0, 4, 8");
+        let solved: Vec<usize> = out
+            .rounds
+            .iter()
+            .filter(|r| r.reoptimized)
+            .map(|r| r.round)
+            .collect();
+        assert_eq!(solved, vec![0, 4, 8]);
+    }
+
+    #[test]
+    fn parallel_blocks_bit_identical_to_serial() {
+        let sc = fading_scenario(10, 0xDE7);
+        let profile = resnet18::profile();
+        for policy in [ReoptPolicy::Never, ReoptPolicy::EveryK(3)] {
+            let serial = run_policy(&sc, &profile, &opts(policy, 1));
+            for threads in [2, 4, 8] {
+                let par = run_policy(&sc, &profile, &opts(policy, threads));
+                assert_eq!(serial.n_solves, par.n_solves);
+                for (a, b) in serial.rounds.iter().zip(&par.rounds) {
+                    assert_eq!(
+                        a.latency.map(f64::to_bits),
+                        b.latency.map(f64::to_bits),
+                        "round {} diverged at {threads} threads",
+                        a.round
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_matches_legacy_oracle_cells() {
+        // EveryK(1) through the scenario runner must reproduce the
+        // pre-scenario fig13 oracle path (sweep::run_oracle_cells)
+        // bit-for-bit on the same realizations.
+        let net = small_net();
+        let n_rounds = 5;
+        let mut rng = Rng::new(0x13);
+        let dep = Deployment::generate(&net, &mut rng);
+        let sc = Scenario::from_deployment(
+            net.clone(),
+            dep,
+            ScenarioSpec::fading(n_rounds),
+            &mut rng,
+        )
+        .unwrap();
+        let profile = resnet18::profile();
+        let bcd_opts = bcd::BcdOptions { max_iters: 6, tol: 1e-4 };
+        let avg = ChannelRealization::average(&sc.roster);
+        let base = Problem {
+            cfg: &net,
+            profile: &profile,
+            dep: &sc.roster,
+            ch: &avg,
+            batch: 64,
+            phi: 0.5,
+        };
+        let chs: Vec<ChannelRealization> =
+            sc.rounds.iter().map(|r| r.ch.clone()).collect();
+        let legacy = sweep::run_oracle_cells(&base, &chs, bcd_opts, 2);
+        let out = run_policy(
+            &sc,
+            &profile,
+            &RunOptions {
+                policy: ReoptPolicy::EveryK(1),
+                bcd: bcd_opts,
+                batch: 64,
+                phi: 0.5,
+                threads: 2,
+            },
+        );
+        assert_eq!(out.rounds.len(), legacy.len());
+        for (r, l) in out.rounds.iter().zip(&legacy) {
+            assert_eq!(
+                r.latency.map(f64::to_bits),
+                l.map(f64::to_bits),
+                "oracle diverged at round {}",
+                r.round
+            );
+        }
+    }
+
+    #[test]
+    fn on_regression_with_huge_threshold_acts_like_never() {
+        let sc = fading_scenario(8, 0x0A);
+        let profile = resnet18::profile();
+        let out = run_policy(
+            &sc,
+            &profile,
+            &opts(ReoptPolicy::OnRegression(1e9), 1),
+        );
+        assert_eq!(out.n_solves, 1);
+        assert_eq!(out.n_failed, 0);
+        let fixed =
+            run_policy(&sc, &profile, &opts(ReoptPolicy::Never, 1));
+        // Same initial solve basis (average gains) → same decision: the
+        // evaluated rounds agree bit-for-bit (no regression ever fires).
+        for (a, b) in out.rounds.iter().zip(&fixed.rounds) {
+            assert_eq!(
+                a.latency.map(f64::to_bits),
+                b.latency.map(f64::to_bits)
+            );
+        }
+    }
+
+    #[test]
+    fn on_regression_is_deterministic() {
+        let sc = fading_scenario(10, 0x5EED);
+        let profile = resnet18::profile();
+        let a = run_policy(
+            &sc,
+            &profile,
+            &opts(ReoptPolicy::OnRegression(1.05), 4),
+        );
+        let b = run_policy(
+            &sc,
+            &profile,
+            &opts(ReoptPolicy::OnRegression(1.05), 1),
+        );
+        assert_eq!(a.n_solves, b.n_solves);
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(
+                x.latency.map(f64::to_bits),
+                y.latency.map(f64::to_bits)
+            );
+        }
+        assert!(a.n_solves >= 1);
+        assert_eq!(a.n_failed, 0);
+    }
+
+    #[test]
+    fn rates_variant_fills_rates() {
+        let sc = fading_scenario(4, 3);
+        let profile = resnet18::profile();
+        let (out, rates) = run_policy_with_rates(
+            &sc,
+            &profile,
+            &opts(ReoptPolicy::Never, 1),
+        );
+        assert_eq!(rates.len(), out.rounds.len());
+        for r in rates.iter().flatten() {
+            assert_eq!(r.uplink.len(), 3);
+            assert_eq!(r.downlink.len(), 3);
+            assert_eq!(r.f_clients.len(), 3);
+            assert!(r.broadcast > 0.0);
+            assert!(r.uplink.iter().all(|v| *v > 0.0));
+        }
+    }
+
+    #[test]
+    fn pair_latencies_drops_both_halves() {
+        let fixed = vec![Some(2.0), Some(4.0), Some(6.0), None];
+        let oracle = vec![Some(1.0), None, Some(3.0), Some(9.0)];
+        let p = pair_latencies(&fixed, &oracle);
+        // Realizations 1 and 3 drop entirely: means over {0, 2} only.
+        assert_eq!(p.n_pairs, 2);
+        assert_eq!(p.n_dropped, 2);
+        assert_eq!(p.fixed_mean, 4.0);
+        assert_eq!(p.oracle_mean, 2.0);
+        assert_eq!(p.ratio(), 2.0);
+        // The pre-fix `.flatten()` would have averaged the fixed mean
+        // over {2,4,6}=4 and the oracle mean over {1,3,9}≈4.33 — unpaired
+        // sets. The paired means must differ from that.
+        let unpaired_oracle = (1.0 + 3.0 + 9.0) / 3.0;
+        assert!((p.oracle_mean - unpaired_oracle).abs() > 1.0);
+    }
+
+    #[test]
+    fn pair_latencies_empty_pairing_is_nan_not_zero() {
+        // All realizations dropped ⇒ NaN means and NaN ratio, never a
+        // silent 0.000-second latency row.
+        let p = pair_latencies(&[None, Some(1.0)], &[Some(2.0), None]);
+        assert_eq!(p.n_pairs, 0);
+        assert_eq!(p.n_dropped, 2);
+        assert!(p.fixed_mean.is_nan());
+        assert!(p.oracle_mean.is_nan());
+        assert!(p.ratio().is_nan());
+    }
+
+    #[test]
+    fn pair_latencies_all_good_matches_plain_means() {
+        let fixed = vec![Some(1.0), Some(3.0)];
+        let oracle = vec![Some(0.5), Some(1.5)];
+        let p = pair_latencies(&fixed, &oracle);
+        assert_eq!(p.n_dropped, 0);
+        assert_eq!(p.fixed_mean, 2.0);
+        assert_eq!(p.oracle_mean, 1.0);
+    }
+}

@@ -1,0 +1,310 @@
+//! Scenario specifications: *what* varies round to round, and *when* the
+//! resource optimizer re-solves.
+//!
+//! A [`ScenarioSpec`] is pure data — each enabled dynamic is expanded into
+//! a deterministic per-round sequence by [`super::engine`]. A
+//! [`ReoptPolicy`] decides at which rounds BCD re-runs; policies are
+//! parsed from the `"never" | "every:<k>" | "regress:<x>" | "oracle"`
+//! strings used by the CLI and the `[scenario]` config section.
+
+use crate::config::ScenarioSettings;
+use crate::error::{Error, Result};
+
+/// Per-round LoS↔NLoS Markov flips. Each round, client `i` at distance
+/// `d_i` flips LoS→NLoS with probability
+/// `flip_prob · (1 − P_LoS(d_i))` and NLoS→LoS with probability
+/// `flip_prob · P_LoS(d_i)`, so the chain's stationary distribution is the
+/// 3GPP distance-dependent LoS probability the deployment was drawn from —
+/// far clients spend more rounds blocked, near clients barely flip.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LosFlipSpec {
+    /// Flip-rate scale in (0, 1]: expected time between state changes is
+    /// roughly `1 / flip_prob` rounds.
+    pub flip_prob: f64,
+}
+
+/// Per-round multiplicative client-compute jitter: round `r` runs client
+/// `i` at `f_i · (1 + U(−amplitude, +amplitude))`, memoryless around the
+/// deployment's base capability (thermal throttling / background load).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComputeJitterSpec {
+    /// Fractional amplitude in [0, 1).
+    pub amplitude: f64,
+}
+
+/// Client dropout / re-arrival churn over a fixed roster: an active client
+/// drops with `drop_prob` per round, a dropped client re-joins with
+/// `rejoin_prob`; the active set never shrinks below `min_active`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnSpec {
+    pub drop_prob: f64,
+    pub rejoin_prob: f64,
+    pub min_active: usize,
+}
+
+/// Multi-round network dynamics, expanded by [`super::Scenario`] into a
+/// per-round sequence of deployments + channel realizations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Number of rounds the scenario spans.
+    pub rounds: usize,
+    /// Block-fading redraw period: a fresh shadow-fading realization every
+    /// `k` rounds (`Some(1)` = every round, the Fig. 13 setting). `None`
+    /// holds the channel at the deterministic average gains.
+    pub redraw_period: Option<usize>,
+    pub los_flip: Option<LosFlipSpec>,
+    pub compute_jitter: Option<ComputeJitterSpec>,
+    pub churn: Option<ChurnSpec>,
+}
+
+impl ScenarioSpec {
+    /// Fully static scenario: average gains, fixed deployment — the
+    /// "ideal static channel" benchmark of Fig. 13.
+    pub fn static_channel(rounds: usize) -> ScenarioSpec {
+        ScenarioSpec {
+            rounds,
+            redraw_period: None,
+            los_flip: None,
+            compute_jitter: None,
+            churn: None,
+        }
+    }
+
+    /// Pure per-round shadow-fading redraws (the pre-scenario Fig. 13
+    /// loop): no LoS flips, jitter, or churn, so the expansion consumes
+    /// the caller's RNG stream exactly as `n` sequential
+    /// `ChannelRealization::sample` calls.
+    pub fn fading(rounds: usize) -> ScenarioSpec {
+        ScenarioSpec { redraw_period: Some(1), ..Self::static_channel(rounds) }
+    }
+
+    /// Block-fading variant: redraw every `period` rounds.
+    pub fn block_fading(rounds: usize, period: usize) -> ScenarioSpec {
+        ScenarioSpec {
+            redraw_period: Some(period.max(1)),
+            ..Self::static_channel(rounds)
+        }
+    }
+
+    /// Typed spec from the plain `[scenario]` config section (the section
+    /// validates ranges; this adds the structural checks).
+    pub fn from_settings(s: &ScenarioSettings, rounds: usize)
+        -> Result<ScenarioSpec> {
+        s.validate()?;
+        let spec = ScenarioSpec {
+            rounds,
+            redraw_period: if s.redraw_period == 0 {
+                None
+            } else {
+                Some(s.redraw_period)
+            },
+            los_flip: (s.los_flip_prob > 0.0)
+                .then_some(LosFlipSpec { flip_prob: s.los_flip_prob }),
+            compute_jitter: (s.compute_jitter > 0.0)
+                .then_some(ComputeJitterSpec { amplitude: s.compute_jitter }),
+            churn: (s.drop_prob > 0.0 || s.rejoin_prob > 0.0).then_some(
+                ChurnSpec {
+                    drop_prob: s.drop_prob,
+                    rejoin_prob: s.rejoin_prob,
+                    min_active: s.min_active,
+                },
+            ),
+        };
+        spec.validate(usize::MAX)?;
+        Ok(spec)
+    }
+
+    /// Structural validation against a roster of `n_clients`.
+    pub fn validate(&self, n_clients: usize) -> Result<()> {
+        if self.rounds == 0 {
+            return Err(Error::Config("scenario rounds must be > 0".into()));
+        }
+        if self.redraw_period == Some(0) {
+            return Err(Error::Config(
+                "scenario redraw period must be > 0 (use None for a \
+                 static channel)"
+                    .into(),
+            ));
+        }
+        if let Some(f) = &self.los_flip {
+            if !(0.0..=1.0).contains(&f.flip_prob) {
+                return Err(Error::Config(format!(
+                    "los flip_prob {} out of [0,1]",
+                    f.flip_prob
+                )));
+            }
+        }
+        if let Some(j) = &self.compute_jitter {
+            if !(0.0..1.0).contains(&j.amplitude) {
+                return Err(Error::Config(format!(
+                    "compute jitter amplitude {} out of [0,1)",
+                    j.amplitude
+                )));
+            }
+        }
+        if let Some(c) = &self.churn {
+            if !(0.0..=1.0).contains(&c.drop_prob)
+                || !(0.0..=1.0).contains(&c.rejoin_prob)
+            {
+                return Err(Error::Config(
+                    "churn probabilities out of [0,1]".into(),
+                ));
+            }
+            if c.min_active == 0 || c.min_active > n_clients {
+                return Err(Error::Config(format!(
+                    "churn min_active {} out of 1..={n_clients}",
+                    c.min_active
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// When the BCD optimizer re-solves along a scenario.
+///
+/// A membership change (churn) always forces a re-solve regardless of the
+/// policy — a decision's subchannel→client map is meaningless for a
+/// different client set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReoptPolicy {
+    /// Optimize once on the round-0 average gains, never again — the
+    /// paper's "the cut layer decision, once determined, could last for a
+    /// long period".
+    Never,
+    /// Re-solve every `k` rounds on that round's realized gains
+    /// (`EveryK(1)` is the Fig. 13 oracle).
+    EveryK(usize),
+    /// Re-solve (on current realized gains) whenever the round latency
+    /// exceeds `threshold ×` the latency observed at the last solve.
+    OnRegression(f64),
+}
+
+impl ReoptPolicy {
+    /// Parse the CLI / config string form.
+    pub fn parse(s: &str) -> Result<ReoptPolicy> {
+        match s {
+            "never" => return Ok(ReoptPolicy::Never),
+            "oracle" => return Ok(ReoptPolicy::EveryK(1)),
+            _ => {}
+        }
+        if let Some(k) = s.strip_prefix("every:") {
+            let k: usize = k.parse().map_err(|_| {
+                Error::Config(format!("reopt every:<k>: bad k in '{s}'"))
+            })?;
+            if k == 0 {
+                return Err(Error::Config("reopt every:0 is invalid".into()));
+            }
+            return Ok(ReoptPolicy::EveryK(k));
+        }
+        if let Some(x) = s.strip_prefix("regress:") {
+            let x: f64 = x.parse().map_err(|_| {
+                Error::Config(format!("reopt regress:<x>: bad x in '{s}'"))
+            })?;
+            if !x.is_finite() || x < 1.0 {
+                return Err(Error::Config(format!(
+                    "reopt regress threshold {x} must be >= 1"
+                )));
+            }
+            return Ok(ReoptPolicy::OnRegression(x));
+        }
+        Err(Error::Config(format!(
+            "unknown reopt policy '{s}' (never | every:<k> | regress:<x> | \
+             oracle)"
+        )))
+    }
+
+    /// Short display name for tables.
+    pub fn name(&self) -> String {
+        match self {
+            ReoptPolicy::Never => "never".into(),
+            ReoptPolicy::EveryK(1) => "oracle".into(),
+            ReoptPolicy::EveryK(k) => format!("every:{k}"),
+            ReoptPolicy::OnRegression(x) => format!("regress:{x}"),
+        }
+    }
+}
+
+/// Driver-facing bundle: the spec plus the re-optimization policy the
+/// training run tracks (`TrainerOptions::dynamic_channel`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DynamicChannel {
+    pub spec: ScenarioSpec,
+    pub policy: ReoptPolicy,
+}
+
+impl DynamicChannel {
+    /// From the `[scenario]` config section for a run of `rounds` rounds.
+    pub fn from_settings(s: &ScenarioSettings, rounds: usize)
+        -> Result<DynamicChannel> {
+        Ok(DynamicChannel {
+            spec: ScenarioSpec::from_settings(s, rounds)?,
+            policy: ReoptPolicy::parse(&s.reopt)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        assert_eq!(ReoptPolicy::parse("never").unwrap(), ReoptPolicy::Never);
+        assert_eq!(
+            ReoptPolicy::parse("oracle").unwrap(),
+            ReoptPolicy::EveryK(1)
+        );
+        assert_eq!(
+            ReoptPolicy::parse("every:5").unwrap(),
+            ReoptPolicy::EveryK(5)
+        );
+        assert_eq!(
+            ReoptPolicy::parse("regress:1.2").unwrap(),
+            ReoptPolicy::OnRegression(1.2)
+        );
+        assert!(ReoptPolicy::parse("every:0").is_err());
+        assert!(ReoptPolicy::parse("regress:0.5").is_err());
+        assert!(ReoptPolicy::parse("sometimes").is_err());
+        assert_eq!(ReoptPolicy::EveryK(1).name(), "oracle");
+        assert_eq!(ReoptPolicy::EveryK(4).name(), "every:4");
+    }
+
+    #[test]
+    fn spec_validation() {
+        assert!(ScenarioSpec::static_channel(10).validate(5).is_ok());
+        assert!(ScenarioSpec::fading(10).validate(5).is_ok());
+        assert!(ScenarioSpec::static_channel(0).validate(5).is_err());
+        let mut s = ScenarioSpec::fading(10);
+        s.redraw_period = Some(0);
+        assert!(s.validate(5).is_err());
+        let mut s = ScenarioSpec::fading(10);
+        s.churn = Some(ChurnSpec {
+            drop_prob: 0.1,
+            rejoin_prob: 0.5,
+            min_active: 6,
+        });
+        assert!(s.validate(5).is_err(), "min_active above roster");
+        assert!(s.validate(6).is_ok());
+    }
+
+    #[test]
+    fn spec_from_settings() {
+        let mut st = crate::config::ScenarioSettings::default();
+        st.redraw_period = 0;
+        let spec = ScenarioSpec::from_settings(&st, 8).unwrap();
+        assert_eq!(spec.redraw_period, None);
+        assert!(spec.los_flip.is_none());
+        st.redraw_period = 3;
+        st.los_flip_prob = 0.2;
+        st.compute_jitter = 0.1;
+        st.drop_prob = 0.05;
+        let spec = ScenarioSpec::from_settings(&st, 8).unwrap();
+        assert_eq!(spec.redraw_period, Some(3));
+        assert_eq!(spec.los_flip.unwrap().flip_prob, 0.2);
+        assert_eq!(spec.compute_jitter.unwrap().amplitude, 0.1);
+        assert_eq!(spec.churn.unwrap().drop_prob, 0.05);
+        let dc = DynamicChannel::from_settings(&st, 8).unwrap();
+        assert_eq!(dc.policy, ReoptPolicy::Never);
+    }
+}

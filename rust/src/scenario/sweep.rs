@@ -1,0 +1,148 @@
+//! Parallel sweep over scenario cells — the Fig. 13b-style grids.
+//!
+//! One [`ScenarioCell`] is a full experiment: expand a scenario from the
+//! cell's own seed, run one re-optimization policy along it, and summarize.
+//! Cells are independent and carry all of their randomness in the cell
+//! itself, so a batch fans across cores via [`par::parallel_map`] with
+//! results **bit-identical** to the serial loop for any thread count
+//! (`EPSL_THREADS=1` forces serial). Each cell runs its own policy loop
+//! serially (`threads: 1`) — the parallelism lives at the grid level,
+//! matching the Figs. 9–12 sweep engine.
+
+use crate::config::NetworkConfig;
+use crate::optim::bcd::BcdOptions;
+use crate::profile::NetworkProfile;
+use crate::util::par;
+
+use super::engine::Scenario;
+use super::run::{run_policy, RunOptions};
+use super::spec::{ReoptPolicy, ScenarioSpec};
+
+/// One (spec × policy × seed) cell.
+#[derive(Debug, Clone)]
+pub struct ScenarioCell {
+    pub net: NetworkConfig,
+    pub spec: ScenarioSpec,
+    pub policy: ReoptPolicy,
+    pub bcd: BcdOptions,
+    /// Seed for the roster draw + scenario expansion.
+    pub seed: u64,
+    pub batch: usize,
+    pub phi: f64,
+}
+
+/// Aggregate result of one cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScenarioSummary {
+    /// Mean eq. 23 latency over the evaluated rounds.
+    pub mean_latency: f64,
+    /// Optimizer invocations along the run.
+    pub n_solves: usize,
+    /// Rounds dropped because their governing solve failed.
+    pub n_failed: usize,
+    /// Rounds that entered the mean.
+    pub n_rounds: usize,
+}
+
+/// Evaluate one cell (`None` if the spec is invalid for the drawn roster).
+pub fn eval_scenario_cell(profile: &NetworkProfile, cell: &ScenarioCell)
+    -> Option<ScenarioSummary> {
+    let sc = Scenario::generate(&cell.net, &cell.spec, cell.seed).ok()?;
+    let out = run_policy(
+        &sc,
+        profile,
+        &RunOptions {
+            policy: cell.policy,
+            bcd: cell.bcd,
+            batch: cell.batch,
+            phi: cell.phi,
+            threads: 1,
+        },
+    );
+    Some(ScenarioSummary {
+        mean_latency: out.mean_latency(),
+        n_solves: out.n_solves,
+        n_failed: out.n_failed,
+        n_rounds: out.rounds.len() - out.n_failed,
+    })
+}
+
+/// Fan a batch of scenario cells across `threads` workers; results come
+/// back in input order.
+pub fn run_scenario_cells(profile: &NetworkProfile, cells: &[ScenarioCell],
+                          threads: usize) -> Vec<Option<ScenarioSummary>> {
+    par::parallel_map(cells, threads, |_, cell| {
+        eval_scenario_cell(profile, cell)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::resnet18;
+
+    fn cells() -> Vec<ScenarioCell> {
+        let net = NetworkConfig::default().with_clients(3);
+        let mut cells = Vec::new();
+        for policy in [
+            ReoptPolicy::Never,
+            ReoptPolicy::EveryK(2),
+            ReoptPolicy::OnRegression(1.1),
+        ] {
+            for s in 0..2u64 {
+                cells.push(ScenarioCell {
+                    net: net.clone(),
+                    spec: ScenarioSpec::fading(6),
+                    policy,
+                    bcd: BcdOptions { max_iters: 4, tol: 1e-4 },
+                    seed: 0x13B + s,
+                    batch: 64,
+                    phi: 0.5,
+                });
+            }
+        }
+        cells
+    }
+
+    #[test]
+    fn scenario_cells_bit_identical_across_threads() {
+        let profile = resnet18::profile();
+        let cells = cells();
+        let serial = run_scenario_cells(&profile, &cells, 1);
+        for threads in [3, 8] {
+            let par_out = run_scenario_cells(&profile, &cells, threads);
+            assert_eq!(serial.len(), par_out.len());
+            for (i, (a, b)) in serial.iter().zip(&par_out).enumerate() {
+                match (a, b) {
+                    (Some(x), Some(y)) => {
+                        assert_eq!(
+                            x.mean_latency.to_bits(),
+                            y.mean_latency.to_bits(),
+                            "cell {i} diverged at {threads} threads"
+                        );
+                        assert_eq!(x.n_solves, y.n_solves);
+                        assert_eq!(x.n_failed, y.n_failed);
+                    }
+                    (None, None) => {}
+                    _ => panic!("cell {i}: success/failure diverged"),
+                }
+            }
+        }
+        assert!(serial.iter().all(|c| c.is_some()));
+    }
+
+    #[test]
+    fn invalid_spec_yields_none() {
+        let profile = resnet18::profile();
+        let cell = ScenarioCell {
+            net: NetworkConfig::default().with_clients(3),
+            spec: ScenarioSpec::static_channel(0), // rounds=0 is invalid
+            policy: ReoptPolicy::Never,
+            bcd: BcdOptions::default(),
+            seed: 1,
+            batch: 64,
+            phi: 0.5,
+        };
+        assert!(eval_scenario_cell(&profile, &cell).is_none());
+    }
+}

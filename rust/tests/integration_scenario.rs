@@ -1,0 +1,147 @@
+//! Cross-module integration for the scenario subsystem: expansion →
+//! policy runner → figure pipeline, with the determinism contracts the
+//! experiment harness depends on (same seed ⇒ same realizations; parallel
+//! == serial bit-for-bit for any thread count).
+
+use epsl::config::NetworkConfig;
+use epsl::experiments::latency_figs::fig13_point;
+use epsl::optim::bcd::BcdOptions;
+use epsl::profile::resnet18;
+use epsl::scenario::{
+    run_policy, run_scenario_cells, ChurnSpec, ReoptPolicy, RunOptions,
+    Scenario, ScenarioCell, ScenarioSpec,
+};
+
+fn small_net() -> NetworkConfig {
+    NetworkConfig::default().with_clients(3)
+}
+
+fn opts(policy: ReoptPolicy, threads: usize) -> RunOptions {
+    RunOptions {
+        policy,
+        bcd: BcdOptions { max_iters: 4, tol: 1e-4 },
+        batch: 64,
+        phi: 0.5,
+        threads,
+    }
+}
+
+#[test]
+fn seed_determinism_end_to_end() {
+    // Same seed through the whole pipeline (expansion + policy run) gives
+    // bit-identical per-round latencies; a different seed does not.
+    let net = small_net();
+    let spec = ScenarioSpec::block_fading(10, 2);
+    let profile = resnet18::profile_static();
+    let run = |seed: u64| {
+        let sc = Scenario::generate(&net, &spec, seed).unwrap();
+        run_policy(&sc, profile, &opts(ReoptPolicy::EveryK(2), 1))
+    };
+    let a = run(0x5EED);
+    let b = run(0x5EED);
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.latency.map(f64::to_bits), y.latency.map(f64::to_bits));
+    }
+    let c = run(0xD1FF);
+    assert!(
+        a.rounds
+            .iter()
+            .zip(&c.rounds)
+            .any(|(x, y)| x.latency.map(f64::to_bits)
+                != y.latency.map(f64::to_bits)),
+        "different seeds produced identical runs"
+    );
+}
+
+#[test]
+fn parallel_equals_serial_across_the_stack() {
+    // Policy runner blocks AND the cell-grid sweep must both be
+    // bit-identical to their serial paths.
+    let net = small_net();
+    let profile = resnet18::profile_static();
+    let sc =
+        Scenario::generate(&net, &ScenarioSpec::fading(8), 0xF00D).unwrap();
+    let serial = run_policy(&sc, profile, &opts(ReoptPolicy::EveryK(1), 1));
+    let par8 = run_policy(&sc, profile, &opts(ReoptPolicy::EveryK(1), 8));
+    for (a, b) in serial.rounds.iter().zip(&par8.rounds) {
+        assert_eq!(a.latency.map(f64::to_bits), b.latency.map(f64::to_bits));
+    }
+
+    let cells: Vec<ScenarioCell> = (0..6)
+        .map(|i| ScenarioCell {
+            net: net.clone(),
+            spec: ScenarioSpec::block_fading(6, 1 + (i % 3)),
+            policy: if i % 2 == 0 {
+                ReoptPolicy::Never
+            } else {
+                ReoptPolicy::EveryK(3)
+            },
+            bcd: BcdOptions { max_iters: 4, tol: 1e-4 },
+            seed: 0xCE11 + i as u64,
+            batch: 64,
+            phi: 0.5,
+        })
+        .collect();
+    let s = run_scenario_cells(profile, &cells, 1);
+    let p = run_scenario_cells(profile, &cells, 4);
+    for (a, b) in s.iter().zip(&p) {
+        match (a, b) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.mean_latency.to_bits(), y.mean_latency.to_bits());
+                assert_eq!(x.n_solves, y.n_solves);
+            }
+            (None, None) => {}
+            _ => panic!("cell success/failure diverged across threads"),
+        }
+    }
+}
+
+#[test]
+fn churn_forces_resolves_and_keeps_runs_valid() {
+    let net = small_net();
+    let profile = resnet18::profile_static();
+    let spec = ScenarioSpec {
+        rounds: 30,
+        redraw_period: Some(1),
+        los_flip: None,
+        compute_jitter: None,
+        churn: Some(ChurnSpec {
+            drop_prob: 0.25,
+            rejoin_prob: 0.4,
+            min_active: 2,
+        }),
+    };
+    let sc = Scenario::generate(&net, &spec, 0xC0FE).unwrap();
+    let changes =
+        sc.rounds.iter().filter(|r| r.membership_changed).count();
+    assert!(changes > 0, "no membership change at 25% churn over 30 rounds");
+    // Even under Never, every membership change re-solves.
+    let out = run_policy(&sc, profile, &opts(ReoptPolicy::Never, 4));
+    assert_eq!(out.n_solves, 1 + changes);
+    assert_eq!(out.n_failed, 0);
+    for r in &out.rounds {
+        let t = r.latency.expect("round evaluated");
+        assert!(t.is_finite() && t > 0.0);
+    }
+}
+
+#[test]
+fn fig13_pipeline_is_reproducible() {
+    // Two invocations of the figure helper are bit-identical regardless
+    // of thread count (the helper reseeds internally).
+    let net = small_net();
+    let a = fig13_point(&net, 64, 0.5, 3, 2).unwrap();
+    let b = fig13_point(&net, 64, 0.5, 3, 4).unwrap();
+    assert_eq!(a.0.to_bits(), b.0.to_bits());
+    assert_eq!(
+        a.1.iter().map(|v| v.map(f64::to_bits)).collect::<Vec<_>>(),
+        b.1.iter().map(|v| v.map(f64::to_bits)).collect::<Vec<_>>()
+    );
+    assert_eq!(
+        a.2.iter().map(|v| v.map(f64::to_bits)).collect::<Vec<_>>(),
+        b.2.iter().map(|v| v.map(f64::to_bits)).collect::<Vec<_>>()
+    );
+    assert!(a.0 > 0.0);
+    assert_eq!(a.1.len(), 3);
+    assert_eq!(a.2.len(), 3);
+}
