@@ -7,8 +7,7 @@
 use epsl::config::Config;
 use epsl::coordinator::{train, TrainerOptions};
 use epsl::latency::frameworks::Framework;
-use epsl::runtime::artifact::Manifest;
-use epsl::runtime::Runtime;
+use epsl::runtime::{select_backend, BackendChoice};
 use epsl::util::table::{LinePlot, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -17,8 +16,10 @@ fn main() -> anyhow::Result<()> {
         args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
     let target: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.6);
 
-    let manifest = Manifest::load("artifacts")?;
-    let rt = Runtime::new("artifacts")?;
+    // PJRT artifacts when built, the pure-Rust native backend otherwise.
+    let sel = select_backend("artifacts", BackendChoice::Auto)?;
+    let (rt, manifest) = (sel.backend.as_ref(), &sel.manifest);
+    println!("backend: {}", sel.describe());
     let cfg = Config::new();
 
     let frameworks = [
@@ -55,7 +56,7 @@ fn main() -> anyhow::Result<()> {
             pt_switch: rounds / 3,
             ..Default::default()
         };
-        let run = train(&rt, &manifest, &cfg, &opts)?;
+        let run = train(rt, manifest, &cfg, &opts)?;
         plot.series(name, &run.accuracy_curve());
         let r2t = run.rounds_to_accuracy(target);
         let l2t = run.latency_to_accuracy(target);

@@ -9,15 +9,16 @@ use epsl::config::Config;
 use epsl::coordinator::{train, TrainerOptions};
 use epsl::optim::{bcd, Problem};
 use epsl::profile::resnet18;
-use epsl::runtime::artifact::Manifest;
-use epsl::runtime::Runtime;
+use epsl::runtime::{select_backend, Backend, BackendChoice};
 use epsl::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the build-time artifacts (python never runs from here on).
-    let manifest = Manifest::load("artifacts")?;
-    let rt = Runtime::new("artifacts")?;
-    println!("PJRT platform: {}", rt.platform());
+    // 1. Select a backend: the PJRT build-time artifacts when present,
+    //    the pure-Rust native backend otherwise (python never runs at
+    //    training time either way).
+    let sel = select_backend("artifacts", BackendChoice::Auto)?;
+    let (rt, manifest) = (sel.backend.as_ref(), &sel.manifest);
+    println!("platform: {}", rt.platform());
     let fam = manifest.family("mnist")?;
     println!(
         "model: {} parameter tensors ({} floats), batch {}",
@@ -36,7 +37,7 @@ fn main() -> anyhow::Result<()> {
         test_size: 256,
         ..Default::default()
     };
-    let run = train(&rt, &manifest, &cfg, &opts)?;
+    let run = train(rt, manifest, &cfg, &opts)?;
     let r = &run.rounds[0];
     println!(
         "round 0: loss {:.4}, train acc {:.3}, test acc {:.3}",

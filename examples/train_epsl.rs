@@ -9,8 +9,7 @@
 use epsl::config::Config;
 use epsl::coordinator::{train, TrainerOptions};
 use epsl::latency::frameworks::Framework;
-use epsl::runtime::artifact::Manifest;
-use epsl::runtime::Runtime;
+use epsl::runtime::{select_backend, Backend, BackendChoice};
 use epsl::util::table::LinePlot;
 
 fn main() -> anyhow::Result<()> {
@@ -22,8 +21,8 @@ fn main() -> anyhow::Result<()> {
         args.get(3).and_then(|s| s.parse().ok()).unwrap_or(5);
     let eta: f32 = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(0.08);
 
-    let manifest = Manifest::load("artifacts")?;
-    let rt = Runtime::new("artifacts")?;
+    let sel = select_backend("artifacts", BackendChoice::Auto)?;
+    let (rt, manifest) = (sel.backend.as_ref(), &sel.manifest);
     let cfg = Config::new();
     println!(
         "EPSL e2e: {} rounds, phi={}, C={}, platform={}",
@@ -48,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let run = train(&rt, &manifest, &cfg, &opts)?;
+    let run = train(rt, manifest, &cfg, &opts)?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\nround   loss    train_acc  test_acc  sim_latency(s)");
@@ -82,13 +81,6 @@ fn main() -> anyhow::Result<()> {
         "wall-clock: {wall:.1} s  ({:.0} ms/round)",
         1e3 * wall / rounds as f64
     );
-    let stats = rt.stats();
-    println!(
-        "runtime: {} compiles ({:.1}s), {} executions ({:.1}s)",
-        stats.compiles,
-        stats.compile_seconds,
-        stats.executions,
-        stats.execute_seconds
-    );
+    println!("{}", rt.stats_summary());
     Ok(())
 }

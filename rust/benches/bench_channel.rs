@@ -40,4 +40,5 @@ fn main() {
         pathloss::mean_gain(28e9, 120.0, false)
     });
     println!("\n{}", b.report());
+    b.write_bench_json_if_requested();
 }

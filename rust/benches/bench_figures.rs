@@ -7,8 +7,7 @@ use epsl::config::Config;
 use epsl::coordinator::{train, TrainerOptions};
 use epsl::experiments::{self, Ctx};
 use epsl::latency::frameworks::Framework;
-use epsl::runtime::artifact::Manifest;
-use epsl::runtime::Runtime;
+use epsl::runtime::{select_backend, BackendChoice};
 use epsl::util::bench::Bencher;
 
 fn main() {
@@ -31,13 +30,12 @@ fn main() {
         });
     }
 
-    // Training-figure slices (table5 / fig4 / fig7-10 share this path).
-    let Ok(manifest) = Manifest::load("artifacts") else {
-        eprintln!("artifacts missing: skipping training-figure benches");
-        println!("\n{}", b.report());
-        return;
-    };
-    let rt = Runtime::new("artifacts").expect("PJRT");
+    // Training-figure slices (table5 / fig4 / fig7-10 share this path) —
+    // on PJRT when artifacts exist, else on the native backend.
+    let sel = select_backend("artifacts", BackendChoice::Auto)
+        .expect("backend selection");
+    let (rt, manifest) = (sel.backend.as_ref(), &sel.manifest);
+    println!("training slices on the {} backend", sel.kind);
     for (name, fw) in [
         ("PSL", Framework::Psl),
         ("EPSL(0.5)", Framework::Epsl { phi: 0.5 }),
@@ -54,8 +52,9 @@ fn main() {
                 test_size: 256,
                 ..Default::default()
             };
-            train(&rt, &manifest, &cfg, &opts).unwrap()
+            train(rt, manifest, &cfg, &opts).unwrap()
         });
     }
     println!("\n{}", b.report());
+    b.write_bench_json_if_requested();
 }

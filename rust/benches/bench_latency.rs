@@ -55,4 +55,5 @@ fn main() {
         acc
     });
     println!("\n{}", b.report());
+    b.write_bench_json_if_requested();
 }

@@ -11,11 +11,8 @@
 //! `BENCH_JSON=BENCH_1.json cargo bench --bench bench_optim` records the
 //! results for the perf trajectory (see PERF.md).
 
-use std::collections::BTreeMap;
-
 use epsl::channel::{ChannelRealization, Deployment};
 use epsl::config::NetworkConfig;
-use epsl::util::json::Json;
 use epsl::optim::eval::Evaluator;
 use epsl::optim::{baselines, bcd, cutlayer, greedy, power, Decision,
                   Problem};
@@ -115,29 +112,7 @@ fn main() {
         }
     }
 
-    // Optional perf-trajectory record (see PERF.md) through the crate's
-    // JSON writer (proper string escaping).
-    if let Ok(path) = std::env::var("BENCH_JSON") {
-        let records: Vec<Json> = b
-            .results()
-            .iter()
-            .map(|r| {
-                let mut obj = BTreeMap::new();
-                obj.insert("name".to_string(), Json::Str(r.name.clone()));
-                obj.insert(
-                    "ns_per_iter".to_string(),
-                    Json::Num(r.summary.mean),
-                );
-                obj.insert("p50_ns".to_string(), Json::Num(r.summary.p50));
-                obj.insert(
-                    "samples".to_string(),
-                    Json::Num(r.samples as f64),
-                );
-                Json::Obj(obj)
-            })
-            .collect();
-        let doc = Json::Arr(records).to_string_pretty();
-        std::fs::write(&path, doc).expect("write BENCH_JSON");
-        println!("wrote {path}");
-    }
+    // Optional perf-trajectory record (see PERF.md) through the shared
+    // writer in util::bench (single home for the record format).
+    b.write_bench_json_if_requested();
 }

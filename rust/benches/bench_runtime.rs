@@ -1,23 +1,24 @@
-//! Runtime benches (L1/L2 through PJRT): per-artifact execution cost and
-//! the full EPSL round — the measured counterpart of the §V latency model
-//! and the focus of the §Perf pass.
+//! Runtime benches: per-entry execution cost and the full EPSL round —
+//! the measured counterpart of the §V latency model and the focus of the
+//! §Perf pass.
 //!
-//! Requires `make artifacts`.
+//! Runs on whatever backend `auto` selects: PJRT when `make artifacts`
+//! has been run (the L1/L2 measurement), the pure-Rust native backend
+//! otherwise — so the training hot path has perf coverage on every
+//! checkout (PERF.md §4 records the native per-round wall numbers).
 
 use epsl::config::Config;
 use epsl::coordinator::{train, TrainerOptions};
-use epsl::runtime::artifact::Manifest;
 use epsl::runtime::tensor::{literal_f32, literal_i32, literal_u32};
-use epsl::runtime::Runtime;
+use epsl::runtime::{select_backend, Backend, BackendChoice};
 use epsl::util::bench::Bencher;
 use epsl::util::rng::Rng;
 
 fn main() {
-    let Ok(manifest) = Manifest::load("artifacts") else {
-        eprintln!("skipping bench_runtime: run `make artifacts` first");
-        return;
-    };
-    let rt = Runtime::new("artifacts").expect("PJRT cpu client");
+    let sel = select_backend("artifacts", BackendChoice::Auto)
+        .expect("backend selection");
+    let (rt, manifest) = (sel.backend.as_ref(), &sel.manifest);
+    println!("bench_runtime backend: {}", sel.describe());
     let fam = manifest.family("mnist").expect("mnist family");
     let b = fam.batch;
     let cut = 2;
@@ -91,7 +92,7 @@ fn main() {
         literal_f32(&[zc], &vec![0.2; zc]).unwrap(),
         literal_f32(&[zb], &vec![1.0; zb]).unwrap(),
     ];
-    bench.run("phi_aggregate kernel (pallas, C=5)", || {
+    bench.run("phi_aggregate kernel (C=5)", || {
         rt.call(pa, &pa_inputs).unwrap()
     });
 
@@ -106,14 +107,11 @@ fn main() {
             test_size: 256,
             ..Default::default()
         };
-        train(&rt, &manifest, &cfg, &opts).unwrap()
+        train(rt, manifest, &cfg, &opts).unwrap()
     });
 
     println!("\n{}", bench.report());
-    let s = rt.stats();
-    println!(
-        "runtime totals: {} executions, {:.2}s execute, {} compiles, \
-         {:.2}s compile",
-        s.executions, s.execute_seconds, s.compiles, s.compile_seconds
-    );
+    println!("{}", rt.stats_summary());
+    // Optional perf-trajectory record (see PERF.md §5).
+    bench.write_bench_json_if_requested();
 }

@@ -67,4 +67,5 @@ fn main() {
         );
     }
     println!("\n{}", b.report());
+    b.write_bench_json_if_requested();
 }

@@ -263,6 +263,11 @@ pub struct Config {
     pub net: NetworkConfig,
     pub train: TrainConfig,
     pub scenario: ScenarioSettings,
+    /// Execution backend: "auto" (PJRT artifacts when present, else the
+    /// pure-Rust native backend), "native", or "pjrt". TOML:
+    /// `[backend] mode = "native"` (or a top-level `backend = "native"`);
+    /// CLI: `--backend`.
+    pub backend: String,
     /// Artifact directory (default "artifacts").
     pub artifacts_dir: String,
     /// Results directory (default "results").
@@ -275,12 +280,19 @@ impl Config {
             net: NetworkConfig::default(),
             train: TrainConfig::default(),
             scenario: ScenarioSettings::default(),
+            backend: "auto".into(),
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
         }
     }
 
     pub fn validate(&self) -> Result<()> {
+        if !matches!(self.backend.as_str(), "auto" | "native" | "pjrt") {
+            return Err(Error::Config(format!(
+                "backend '{}' unknown (auto|native|pjrt)",
+                self.backend
+            )));
+        }
         self.net.validate()?;
         self.train.validate()?;
         self.scenario.validate()
@@ -385,6 +397,9 @@ impl Config {
         }
         if let Some(v) = d.str("scenario.reopt") {
             self.scenario.reopt = v.to_string();
+        }
+        if let Some(v) = d.str("backend").or_else(|| d.str("backend.mode")) {
+            self.backend = v.to_string();
         }
         if let Some(v) = d.str("artifacts_dir") {
             self.artifacts_dir = v.to_string();
@@ -504,6 +519,22 @@ mod tests {
         let n = NetworkConfig::default().with_clients(3);
         assert_eq!(n.n_clients, 3);
         assert_eq!(n.n_subchannels, 20);
+    }
+
+    #[test]
+    fn backend_from_toml_and_validated() {
+        let mut c = Config::new();
+        assert_eq!(c.backend, "auto");
+        c.apply_toml(&toml::parse("[backend]\nmode = \"native\"\n").unwrap())
+            .unwrap();
+        assert_eq!(c.backend, "native");
+        c.apply_toml(&toml::parse("backend = \"pjrt\"\n").unwrap())
+            .unwrap();
+        assert_eq!(c.backend, "pjrt");
+        let e = c
+            .apply_toml(&toml::parse("backend = \"tpu\"\n").unwrap())
+            .unwrap_err();
+        assert!(e.to_string().contains("auto|native|pjrt"), "{e}");
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::profile::resnet18;
 use crate::runtime::artifact::{FamilyManifest, Manifest};
 use crate::runtime::tensor::{literal_f32, literal_i32, literal_u32,
                              scalar_f32, to_f32_vec};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::scenario::{self, DynamicChannel, Scenario};
 use crate::util::par;
 use crate::util::rng::Rng;
@@ -82,7 +82,7 @@ impl Default for TrainerOptions {
 
 /// Everything fixed across rounds.
 struct Session<'a> {
-    rt: &'a Runtime,
+    rt: &'a dyn Backend,
     fam: &'a FamilyManifest,
     opts: &'a TrainerOptions,
     train_set: Dataset,
@@ -373,21 +373,27 @@ impl<'a> Session<'a> {
         let smash = &fam.smashed_shape[&cut];
         let smash_len: usize = smash.iter().product();
 
-        // Stage 1-2: client FP + uplink.
+        // Stage 1-2: client FP + uplink. Batches are sampled serially
+        // (the session RNG stream stays deterministic), then the C
+        // independent forward passes fan across cores via call_many
+        // (order-preserving, so bit-identical to the old serial loop).
         let cf_entry = fam.client_fwd.get(&cut).ok_or_else(|| {
             Error::Artifact(format!("no client_fwd for cut {cut}"))
         })?;
         let mut smashed_host = Vec::with_capacity(c * b * smash_len);
         let mut labels_host: Vec<i32> = Vec::with_capacity(c * b);
         let mut xs = Vec::with_capacity(c);
+        let mut fwd_batches: Vec<Vec<Literal>> = Vec::with_capacity(c);
         for i in 0..c {
             let (x, _imgs, labels) = self.batch_literals(i)?;
             let mut inputs: Vec<Literal> = client_params[i].to_vec();
             inputs.push(x.clone());
-            let out = self.rt.call(cf_entry, &inputs)?;
-            smashed_host.extend(to_f32_vec(&out[0])?);
+            fwd_batches.push(inputs);
             labels_host.extend(labels);
             xs.push(x);
+        }
+        for out in self.rt.call_many(cf_entry, &fwd_batches)? {
+            smashed_host.extend(to_f32_vec(&out[0])?);
         }
 
         // Stage 3-4: server FP + EPSL BP.
@@ -410,11 +416,15 @@ impl<'a> Session<'a> {
         out.truncate(n_sp);
         *server_params = out;
 
-        // Stage 5-7: gradient routing + client BP.
+        // Stage 5-7: gradient routing + client BP (fanned across cores —
+        // each client's step is independent).
         let cs_entry = fam.client_step.get(&cut).ok_or_else(|| {
             Error::Artifact(format!("no client_step for cut {cut}"))
         })?;
         let mut g_cut = vec![0.0f32; b * smash_len];
+        let mut g_shape = vec![b];
+        g_shape.extend(smash.iter());
+        let mut step_batches: Vec<Vec<Literal>> = Vec::with_capacity(c);
         for (i, x) in xs.into_iter().enumerate() {
             for j in 0..b {
                 let dst = &mut g_cut[j * smash_len..(j + 1) * smash_len];
@@ -431,13 +441,16 @@ impl<'a> Session<'a> {
                     );
                 }
             }
-            let mut g_shape = vec![b];
-            g_shape.extend(smash.iter());
             let mut inputs: Vec<Literal> = client_params[i].to_vec();
             inputs.push(x);
             inputs.push(literal_f32(&g_shape, &g_cut)?);
             inputs.push(self.lr_c_lit.clone());
-            client_params[i] = self.rt.call(cs_entry, &inputs)?;
+            step_batches.push(inputs);
+        }
+        for (i, out) in
+            self.rt.call_many(cs_entry, &step_batches)?.into_iter().enumerate()
+        {
+            client_params[i] = out;
         }
 
         // SFL: client-side model FedAvg (the model exchange).
@@ -461,9 +474,15 @@ impl<'a> Session<'a> {
         let fam = self.fam;
         let smash = &fam.smashed_shape[&cut];
         let smash_len: usize = smash.iter().product();
-        let cf_entry = fam.client_fwd.get(&cut).unwrap();
+        // Same descriptive error path as parallel_round (these were
+        // unwraps that panicked on a manifest missing the cut).
+        let cf_entry = fam.client_fwd.get(&cut).ok_or_else(|| {
+            Error::Artifact(format!("no client_fwd for cut {cut}"))
+        })?;
         let st_entry = fam.server_train_entry(cut, 1)?;
-        let cs_entry = fam.client_step.get(&cut).unwrap();
+        let cs_entry = fam.client_step.get(&cut).ok_or_else(|| {
+            Error::Artifact(format!("no client_step for cut {cut}"))
+        })?;
         let (_mask, mask_lit) = self.mask_for(0.0)?;
         let lam1 = literal_f32(&[1], &[1.0])?;
         let mut loss_sum = 0.0;
@@ -550,9 +569,24 @@ impl<'a> Session<'a> {
     }
 }
 
+/// Final model state of a run (exposed for tests and checkpointing-style
+/// consumers; the driver itself only needs it internally).
+pub struct TrainState {
+    /// Per-client client-side parameters (single entry for vanilla SL).
+    pub client_params: Vec<Vec<Literal>>,
+    pub server_params: Vec<Literal>,
+}
+
 /// Run one full training experiment.
-pub fn train(rt: &Runtime, manifest: &Manifest, cfg: &Config,
+pub fn train(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
              opts: &TrainerOptions) -> Result<RunMetrics> {
+    train_with_state(rt, manifest, cfg, opts).map(|(m, _)| m)
+}
+
+/// [`train`], also returning the final parameter state.
+pub fn train_with_state(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
+                        opts: &TrainerOptions)
+    -> Result<(RunMetrics, TrainState)> {
     let fam = manifest.family(&opts.family)?;
     let st_c = if matches!(opts.framework, Framework::VanillaSl) {
         1
@@ -570,7 +604,7 @@ pub fn train(rt: &Runtime, manifest: &Manifest, cfg: &Config,
     let (train_set, test_set) =
         train_test(&spec, opts.test_size, opts.seed ^ 0xDA7A);
     let shards = if opts.iid {
-        iid(&train_set, opts.n_clients, &mut rng)
+        iid(&train_set, opts.n_clients, &mut rng)?
     } else {
         non_iid_two_class(&train_set, opts.n_clients, &mut rng)?
     };
@@ -642,34 +676,35 @@ pub fn train(rt: &Runtime, manifest: &Manifest, cfg: &Config,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         });
     }
-    Ok(metrics)
+    Ok((metrics, TrainState { client_params, server_params }))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::native::{self, NativeBackend};
 
-    fn setup() -> Option<(Runtime, Manifest, Config)> {
-        let m = Manifest::load("artifacts").ok()?;
-        let rt = Runtime::new("artifacts").ok()?;
-        Some((rt, m, Config::new()))
+    /// The smoke tests run for real on the native backend (no skipping):
+    /// the training path is exercised on every `cargo test`.
+    fn setup() -> (NativeBackend, Manifest, Config) {
+        (NativeBackend::new(), native::manifest(), Config::new())
     }
 
-    #[test]
-    fn epsl_smoke_two_clients() {
-        let Some((rt, m, cfg)) = setup() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let opts = TrainerOptions {
+    fn smoke_opts() -> TrainerOptions {
+        TrainerOptions {
             n_clients: 2,
             rounds: 4,
             eval_every: 2,
             dataset_size: 400,
             test_size: 256,
             ..Default::default()
-        };
-        let run = train(&rt, &m, &cfg, &opts).unwrap();
+        }
+    }
+
+    #[test]
+    fn epsl_smoke_two_clients() {
+        let (rt, m, cfg) = setup();
+        let run = train(&rt, &m, &cfg, &smoke_opts()).unwrap();
         assert_eq!(run.rounds.len(), 4);
         assert!(run.rounds.iter().all(|r| r.loss.is_finite()));
         assert!(run.rounds.iter().all(|r| r.sim_latency > 0.0));
@@ -679,18 +714,11 @@ mod tests {
 
     #[test]
     fn vanilla_smoke() {
-        let Some((rt, m, cfg)) = setup() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let (rt, m, cfg) = setup();
         let opts = TrainerOptions {
             framework: Framework::VanillaSl,
-            n_clients: 2,
             rounds: 2,
-            eval_every: 2,
-            dataset_size: 400,
-            test_size: 256,
-            ..Default::default()
+            ..smoke_opts()
         };
         let run = train(&rt, &m, &cfg, &opts).unwrap();
         assert_eq!(run.rounds.len(), 2);
@@ -699,23 +727,107 @@ mod tests {
 
     #[test]
     fn sfl_keeps_clients_synchronized() {
-        let Some((rt, m, cfg)) = setup() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let (rt, m, cfg) = setup();
         let opts = TrainerOptions {
             framework: Framework::Sfl,
-            n_clients: 2,
             rounds: 2,
             eval_every: 10,
-            dataset_size: 400,
-            test_size: 256,
-            ..Default::default()
+            ..smoke_opts()
         };
-        // After a round the FedAvg makes client models identical — verified
-        // indirectly: the run completes and losses are finite.
-        let run = train(&rt, &m, &cfg, &opts).unwrap();
+        // The per-round FedAvg must leave every client with bit-identical
+        // client-side parameters (previously only finiteness was checked).
+        let (run, state) = train_with_state(&rt, &m, &cfg, &opts).unwrap();
         assert!(run.rounds.iter().all(|r| r.loss.is_finite()));
+        assert_eq!(state.client_params.len(), 2);
+        let reference: Vec<Vec<f32>> = state.client_params[0]
+            .iter()
+            .map(|l| to_f32_vec(l).unwrap())
+            .collect();
+        for (ci, cp) in state.client_params.iter().enumerate().skip(1) {
+            for (t, lit) in cp.iter().enumerate() {
+                assert_eq!(
+                    to_f32_vec(lit).unwrap(),
+                    reference[t],
+                    "client {ci} tensor {t} diverged after SFL FedAvg"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn psl_clients_do_diverge() {
+        // Control for the SFL assertion: without the model exchange the
+        // client models must NOT be synchronized (distinct shards).
+        let (rt, m, cfg) = setup();
+        let opts = TrainerOptions {
+            framework: Framework::Psl,
+            rounds: 2,
+            eval_every: 10,
+            ..smoke_opts()
+        };
+        let (_, state) = train_with_state(&rt, &m, &cfg, &opts).unwrap();
+        let a = to_f32_vec(&state.client_params[0][0]).unwrap();
+        let b = to_f32_vec(&state.client_params[1][0]).unwrap();
+        assert_ne!(a, b, "PSL clients unexpectedly synchronized");
+    }
+
+    #[test]
+    fn missing_cut_is_an_error_not_a_panic() {
+        // Both round shapes must fail with Error::Artifact when the
+        // manifest has no entries for the requested cut (vanilla_round
+        // used to unwrap and panic here). Each entry kind is removed
+        // separately so both lookup sites stay covered — client_fwd is
+        // checked first, so a combined removal would never reach the
+        // client_step path.
+        let (rt, _, cfg) = setup();
+        for missing in ["client_fwd", "client_step"] {
+            let mut m = native::manifest();
+            let fam = m.families.get_mut("mnist").unwrap();
+            match missing {
+                "client_fwd" => fam.client_fwd.remove(&2),
+                _ => fam.client_step.remove(&2),
+            };
+            for fw in [Framework::VanillaSl, Framework::Epsl { phi: 0.5 }] {
+                let opts = TrainerOptions {
+                    framework: fw,
+                    rounds: 1,
+                    ..smoke_opts()
+                };
+                let e = train(&rt, &m, &cfg, &opts).unwrap_err();
+                assert!(
+                    matches!(e, Error::Artifact(_)),
+                    "{fw:?}/{missing}: unexpected error kind: {e}"
+                );
+                assert!(
+                    e.to_string()
+                        .contains(&format!("no {missing} for cut 2")),
+                    "{fw:?}/{missing}: {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn native_run_is_seed_deterministic_and_thread_invariant() {
+        // Acceptance criterion: same seed ⇒ bit-identical run, for any
+        // thread budget.
+        let (_, m, cfg) = setup();
+        let opts = smoke_opts();
+        let serial = NativeBackend::with_threads(1);
+        let fanned = NativeBackend::with_threads(7);
+        let a = train(&serial, &m, &cfg, &opts).unwrap();
+        let b = train(&fanned, &m, &cfg, &opts).unwrap();
+        let c = train(&fanned, &m, &cfg, &opts).unwrap();
+        for ((ra, rb), rc) in
+            a.rounds.iter().zip(&b.rounds).zip(&c.rounds)
+        {
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+            assert_eq!(ra.train_acc.to_bits(), rb.train_acc.to_bits());
+            assert_eq!(rb.loss.to_bits(), rc.loss.to_bits());
+            if !ra.test_acc.is_nan() || !rb.test_acc.is_nan() {
+                assert_eq!(ra.test_acc.to_bits(), rb.test_acc.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! drives client-side forward passes, smashed-data concatenation, the
 //! EPSL server step (with the φ-aggregation Pallas kernel inside the AOT
 //! graph), gradient routing (broadcast vs unicast), and client-side
-//! updates — all through PJRT-compiled artifacts, with python long gone.
+//! updates — all through the `runtime::Backend` seam: PJRT-compiled
+//! artifacts when they exist, the pure-Rust native backend otherwise.
+//! Python never runs at training time either way.
 //!
 //! Latency semantics: this testbed's CPU is not five heterogeneous edge
 //! devices behind a 28 GHz FDMA uplink, so per-round *latency* is accounted

@@ -77,7 +77,16 @@ impl Shard {
 
     /// Sample a mini-batch of `b` indices (with replacement if the shard is
     /// smaller than `b` — mirrors random mini-batch draws in Alg. 1).
+    ///
+    /// Empty shards are rejected at partition time ([`partition::iid`] /
+    /// [`partition::non_iid_two_class`] return `Error::Data`); the assert
+    /// here is a named backstop instead of the old modulo-by-zero panic.
     pub fn sample_batch(&self, b: usize, rng: &mut Rng) -> Vec<usize> {
+        assert!(
+            !self.is_empty(),
+            "sample_batch on an empty shard — partitioning should have \
+             rejected this client count (Error::Data)"
+        );
         if self.len() >= b {
             rng.sample_indices(self.len(), b)
                 .into_iter()

@@ -12,7 +12,18 @@ use crate::util::rng::Rng;
 use super::{Dataset, Shard};
 
 /// IID partition into `c` near-equal shards.
-pub fn iid(ds: &Dataset, c: usize, rng: &mut Rng) -> Vec<Shard> {
+///
+/// Fails fast when `c > ds.n`: some shard would be empty, and an empty
+/// shard panics later inside `Shard::sample_batch` (modulo-by-zero /
+/// out-of-bounds) — far from the configuration mistake that caused it.
+pub fn iid(ds: &Dataset, c: usize, rng: &mut Rng) -> Result<Vec<Shard>> {
+    if c == 0 || ds.n < c {
+        return Err(Error::Data(format!(
+            "iid partition: {} samples cannot fill {c} client shards \
+             (every client needs at least one sample)",
+            ds.n
+        )));
+    }
     let mut idx: Vec<usize> = (0..ds.n).collect();
     rng.shuffle(&mut idx);
     let base = ds.n / c;
@@ -24,7 +35,7 @@ pub fn iid(ds: &Dataset, c: usize, rng: &mut Rng) -> Vec<Shard> {
         shards.push(Shard { indices: idx[cursor..cursor + take].to_vec() });
         cursor += take;
     }
-    shards
+    Ok(shards)
 }
 
 /// Non-IID partition: exactly 2 classes per client.
@@ -78,8 +89,13 @@ pub fn non_iid_two_class(ds: &Dataset, c: usize, rng: &mut Rng)
             cursors[cls] = end;
         }
         if indices.is_empty() {
+            // An empty shard would panic much later in sample_batch
+            // (modulo-by-zero); name the cause here instead.
             return Err(Error::Data(format!(
-                "empty non-IID shard (classes {a},{b})"
+                "empty non-IID shard (classes {a},{b}): {c} clients over \
+                 {} samples in {} classes leave this client no data — \
+                 lower the client count or enlarge the dataset",
+                ds.n, ds.n_classes
             )));
         }
         shards.push(Shard { indices });
@@ -109,7 +125,7 @@ mod tests {
     fn iid_covers_everything_once() {
         let d = ds();
         let mut rng = Rng::new(1);
-        let shards = iid(&d, 7, &mut rng);
+        let shards = iid(&d, 7, &mut rng).unwrap();
         assert_eq!(shards.len(), 7);
         let mut all: Vec<usize> =
             shards.iter().flat_map(|s| s.indices.clone()).collect();
@@ -124,7 +140,7 @@ mod tests {
     fn iid_shards_see_all_classes() {
         let d = ds();
         let mut rng = Rng::new(2);
-        let shards = iid(&d, 5, &mut rng);
+        let shards = iid(&d, 5, &mut rng).unwrap();
         for s in &shards {
             let mut classes: Vec<i32> =
                 s.indices.iter().map(|&i| d.labels[i]).collect();
@@ -163,6 +179,29 @@ mod tests {
     }
 
     #[test]
+    fn empty_shards_fail_fast_at_partition_time() {
+        // Pre-fix these configurations produced empty shards that blew up
+        // rounds later inside Shard::sample_batch (rng.below(0) → panic);
+        // now partitioning reports a descriptive Error::Data up front.
+        let small = generate(&SynthSpec::mnist_like(3), 8);
+        let mut rng = Rng::new(7);
+        let e = iid(&small, 5, &mut rng).unwrap_err();
+        assert!(matches!(e, crate::error::Error::Data(_)), "{e}");
+        assert!(e.to_string().contains("5 client shards"), "{e}");
+
+        // non-IID at an awkward client count: 40 clients each demand two
+        // class half-shards of a 20-sample/2-class corpus — some client
+        // ends up with no data.
+        let mut spec = SynthSpec::mnist_like(20);
+        spec.n_classes = 2;
+        let tiny = generate(&spec, 9);
+        let mut rng = Rng::new(8);
+        let e = non_iid_two_class(&tiny, 40, &mut rng).unwrap_err();
+        assert!(matches!(e, crate::error::Error::Data(_)), "{e}");
+        assert!(e.to_string().contains("empty non-IID shard"), "{e}");
+    }
+
+    #[test]
     fn non_iid_handles_more_clients_than_class_pairs() {
         let d = ds();
         let mut rng = Rng::new(5);
@@ -178,7 +217,7 @@ mod tests {
     fn lambda_sums_to_one() {
         let d = ds();
         let mut rng = Rng::new(6);
-        let shards = iid(&d, 5, &mut rng);
+        let shards = iid(&d, 5, &mut rng).unwrap();
         let lam = lambda_weights(&shards);
         let sum: f32 = lam.iter().sum();
         assert!((sum - 1.0).abs() < 1e-6);

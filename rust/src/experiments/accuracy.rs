@@ -129,6 +129,52 @@ pub fn fig7(ctx: &mut Ctx) -> Result<()> {
     accuracy_fig(ctx, "fig7", "mnist")
 }
 
+/// CI accuracy smoke: a short fig4-style run (all five frameworks, tiny
+/// budget) that asserts finite loss/accuracy and emits the curve CSV —
+/// the guard that keeps the training path from regressing to all-skip.
+pub fn accuracy_smoke(ctx: &mut Ctx) -> Result<()> {
+    let (rounds, dataset, clients) = (24, 480, 2);
+    let mut runs = Vec::new();
+    for (name, fw) in curve_frameworks() {
+        let opts = TrainerOptions {
+            family: "mnist".into(),
+            framework: fw,
+            n_clients: clients,
+            rounds,
+            eval_every: 8,
+            dataset_size: dataset,
+            test_size: 256,
+            eta_c: 0.1,
+            eta_s: 0.1,
+            ..Default::default()
+        };
+        println!("  smoke-training {name} …");
+        let run = train(ctx.runtime()?, ctx.manifest()?, &ctx.cfg, &opts)?;
+        if run.rounds.iter().any(|r| !r.loss.is_finite()) {
+            return Err(crate::error::Error::Runtime(format!(
+                "accuracy smoke: {name} produced a non-finite loss"
+            )));
+        }
+        let evaluated: Vec<f64> = run
+            .rounds
+            .iter()
+            .filter(|r| !r.test_acc.is_nan())
+            .map(|r| r.test_acc)
+            .collect();
+        if evaluated.is_empty()
+            || evaluated.iter().any(|a| !a.is_finite())
+        {
+            return Err(crate::error::Error::Runtime(format!(
+                "accuracy smoke: {name} produced no finite test accuracy"
+            )));
+        }
+        runs.push((name, run));
+    }
+    emit_curves(ctx, "accuracy_smoke",
+                "Accuracy smoke: test accuracy (MNIST-like, IID, C=2)",
+                &runs)
+}
+
 /// Fig. 8 — HAM-like accuracy curves, IID (a) and non-IID (b).
 pub fn fig8(ctx: &mut Ctx) -> Result<()> {
     accuracy_fig(ctx, "fig8", "ham")

@@ -18,9 +18,12 @@
 //! | fig13b | re-optimization policy vs channel coherence (scenario sweep; repo extension) |
 //!
 //! Training-backed experiments (table5, fig4, fig7–10) run the real
-//! coordinator over PJRT; `quick` mode shrinks rounds/sweeps so the full
-//! set completes in minutes (the full-fidelity settings are the documented
-//! defaults in EXPERIMENTS.md).
+//! coordinator over the selected backend — PJRT when artifacts exist,
+//! the pure-Rust native backend otherwise, so they run offline and in
+//! CI; `quick` mode shrinks rounds/sweeps so the full set completes in
+//! minutes (the full-fidelity settings are the documented defaults in
+//! EXPERIMENTS.md). The extra `accuracy-smoke` id is the CI guard that
+//! keeps the training path executable.
 
 pub mod accuracy;
 pub mod latency_figs;
@@ -34,12 +37,14 @@ use crate::config::Config;
 use crate::error::{Error, Result};
 use crate::metrics::RunMetrics;
 use crate::runtime::artifact::Manifest;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 
 /// Shared context handed to every experiment.
 pub struct Ctx<'a> {
     pub cfg: Config,
-    pub rt: Option<&'a Runtime>,
+    /// Training backend (PJRT or native). `None` only in latency-only
+    /// contexts (e.g. unit tests) — `repro figures` always selects one.
+    pub rt: Option<&'a dyn Backend>,
     pub manifest: Option<&'a Manifest>,
     pub out_dir: String,
     /// Reduced-budget mode (fewer rounds / sweep points).
@@ -50,7 +55,7 @@ pub struct Ctx<'a> {
 }
 
 impl<'a> Ctx<'a> {
-    pub fn new(cfg: Config, rt: Option<&'a Runtime>,
+    pub fn new(cfg: Config, rt: Option<&'a dyn Backend>,
                manifest: Option<&'a Manifest>, out_dir: &str, quick: bool)
         -> Self {
         Ctx {
@@ -63,11 +68,12 @@ impl<'a> Ctx<'a> {
         }
     }
 
-    pub fn runtime(&self) -> Result<&'a Runtime> {
+    pub fn runtime(&self) -> Result<&'a dyn Backend> {
         self.rt.ok_or_else(|| {
             Error::Artifact(
-                "this experiment trains models: build artifacts first \
-                 (`make artifacts`)"
+                "this experiment trains models but no backend was \
+                 selected (pass --backend native, or build artifacts for \
+                 PJRT)"
                     .into(),
             )
         })
@@ -100,6 +106,10 @@ pub fn run(id: &str, ctx: &mut Ctx) -> Result<()> {
     println!("\n=== experiment {id} ({}) ===",
              if ctx.quick { "quick" } else { "full" });
     match id {
+        // CI guard, not a paper figure (hence not in ALL_IDS): a short
+        // fig4-style run that fails loudly if the training path cannot
+        // execute — so it can never silently regress to all-skip.
+        "accuracy-smoke" => accuracy::accuracy_smoke(ctx),
         "table1" => tables::table1(ctx),
         "table4" => tables::table4(ctx),
         "table5" => tables::table5(ctx),

@@ -29,7 +29,7 @@
 //! | [`latency`] | the seven per-stage latencies and the round total (eqs. 13–23) for EPSL and every baseline framework |
 //! | [`optim`] | the resource-management solver: greedy subchannel allocation (Alg. 2), convex power control (P2), cut-layer B&B MILP (P3), closed-form LP (P4), BCD (Alg. 3), baselines a–d |
 //! | [`data`] | synthetic datasets + IID / non-IID partitioners |
-//! | [`runtime`] | PJRT execution of the AOT artifacts (HLO text → compile → execute) |
+//! | [`runtime`] | the execution-backend seam: PJRT execution of the AOT artifacts (HLO text → compile → execute) and the pure-Rust native backend (`runtime::native`) that implements the same entry-point contract on host f32 buffers — auto-selected when artifacts are absent |
 //! | [`coordinator`] | the training system: leader + client workers, full EPSL/PSL/SFL/vanilla-SL drivers |
 //! | [`scenario`] | multi-round network dynamics: block fading, LoS flips, compute jitter, churn, re-optimization policies |
 //! | [`metrics`] | round records, curves, CSV emission |

@@ -17,7 +17,7 @@ use epsl::optim::baselines::Scheme;
 use epsl::optim::{baselines, bcd, Problem};
 use epsl::profile::{resnet18, splitnet};
 use epsl::runtime::artifact::Manifest;
-use epsl::runtime::Runtime;
+use epsl::runtime::{select_backend, BackendChoice, SelectedBackend};
 use epsl::scenario::DynamicChannel;
 use epsl::util::rng::Rng;
 use epsl::util::table::Table;
@@ -44,6 +44,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "redraw", takes_value: true, help: "fading redraw period in rounds (0=static; implies --dynamic-channel)" },
         FlagSpec { name: "reopt", takes_value: true, help: "re-opt policy: never|every:<k>|regress:<x>|oracle (implies --dynamic-channel)" },
         FlagSpec { name: "scheme", takes_value: true, help: "a|b|c|d|proposed (optimize)" },
+        FlagSpec { name: "backend", takes_value: true, help: "auto|native|pjrt (training backend)" },
         FlagSpec { name: "artifacts", takes_value: true, help: "artifacts dir" },
         FlagSpec { name: "help", takes_value: false, help: "print help" },
     ]
@@ -97,7 +98,19 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
     if let Some(dir) = args.get("artifacts") {
         cfg.artifacts_dir = dir.to_string();
     }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.to_string();
+        cfg.validate()?;
+    }
     Ok(cfg)
+}
+
+/// Resolve the configured backend choice (`[backend]` TOML / `--backend`).
+fn pick_backend(cfg: &Config) -> anyhow::Result<SelectedBackend> {
+    let choice = BackendChoice::parse(&cfg.backend)?;
+    let sel = select_backend(&cfg.artifacts_dir, choice)?;
+    println!("backend: {}", sel.describe());
+    Ok(sel)
 }
 
 fn dispatch(args: &Args) -> anyhow::Result<()> {
@@ -155,8 +168,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         dynamic_channel,
         ..Default::default()
     };
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
-    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let sel = pick_backend(&cfg)?;
     println!(
         "training {} C={} cut={} rounds={} family={}",
         opts.framework.name(),
@@ -165,7 +177,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         opts.rounds,
         opts.family
     );
-    let run = train(&rt, &manifest, &cfg, &opts)?;
+    let run = train(sel.backend.as_ref(), &sel.manifest, &cfg, &opts)?;
     for r in &run.rounds {
         if !r.test_acc.is_nan() {
             println!(
@@ -258,15 +270,27 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let out = args.get("out").unwrap_or("results").to_string();
     let quick = !args.has("full");
-    // Runtime is optional: latency-only figures run without artifacts.
-    let loaded = Manifest::load(&cfg.artifacts_dir)
-        .ok()
-        .and_then(|m| Runtime::new(&cfg.artifacts_dir).ok().map(|rt| (m, rt)));
-    let (manifest, rt) = match &loaded {
-        Some((m, r)) => (Some(m), Some(r)),
-        None => (None, None),
+    // Backend selection (auto prefers PJRT artifacts, falls back to the
+    // native backend). Latency-only figures need no backend at all, so a
+    // failed explicit choice (e.g. --backend pjrt without artifacts)
+    // degrades to a no-backend context instead of blocking them;
+    // training-backed ids then fail with the usual Ctx::runtime error.
+    let sel = match pick_backend(&cfg) {
+        Ok(sel) => Some(sel),
+        Err(e) => {
+            eprintln!(
+                "backend unavailable ({e}); latency-only figures still run"
+            );
+            None
+        }
     };
-    let mut ctx = Ctx::new(cfg, rt, manifest, &out, quick);
+    let mut ctx = Ctx::new(
+        cfg,
+        sel.as_ref().map(|s| s.backend.as_ref()),
+        sel.as_ref().map(|s| &s.manifest),
+        &out,
+        quick,
+    );
     if args.has("all") {
         for id in experiments::ALL_IDS {
             experiments::run(id, &mut ctx)?;
@@ -326,9 +350,21 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
         }
         Err(e) => println!("no artifacts: {e}"),
     }
-    match Runtime::new(&cfg.artifacts_dir) {
-        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
-        Err(e) => println!("PJRT unavailable: {e}"),
+    // Report what the configured backend choice resolves to (this also
+    // covers PJRT availability — `describe()` names the platform). info
+    // is a diagnostic command: selection failure is a status line, not
+    // an error.
+    match BackendChoice::parse(&cfg.backend)
+        .and_then(|c| select_backend(&cfg.artifacts_dir, c))
+    {
+        Ok(sel) => println!(
+            "backend ({}): {} — {} famil{} available",
+            cfg.backend,
+            sel.describe(),
+            sel.manifest.families.len(),
+            if sel.manifest.families.len() == 1 { "y" } else { "ies" }
+        ),
+        Err(e) => println!("backend ({}): unavailable — {e}", cfg.backend),
     }
     Ok(())
 }

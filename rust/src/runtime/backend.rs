@@ -1,0 +1,178 @@
+//! The execution-backend seam: everything above it (driver, fedavg,
+//! experiments) speaks `Manifest` + `Literal` entry points; everything
+//! below is either the PJRT artifact path or the pure-Rust native
+//! backend.
+//!
+//! Selection (`--backend native|pjrt|auto` on the CLI, `[backend]` in
+//! TOML): `pjrt` requires built artifacts and fails otherwise, `native`
+//! always works, `auto` prefers PJRT artifacts when present and falls
+//! back to native — so the training stack runs on any machine, in CI,
+//! and on a fresh checkout.
+
+use xla::Literal;
+
+use crate::error::{Error, Result};
+
+use super::artifact::{ArtifactEntry, Manifest};
+use super::native::{self, NativeBackend};
+use super::Runtime;
+
+/// An execution backend for the manifest entry points.
+///
+/// Implementations must be deterministic: identical inputs produce
+/// bit-identical outputs (the driver's reproducibility contract rests on
+/// this).
+pub trait Backend {
+    /// Human-readable platform string ("Host CPU" / "native-f32 …").
+    fn platform(&self) -> String;
+
+    /// Execute one entry with the given inputs; returns the outputs in
+    /// manifest order.
+    fn call(&self, entry: &ArtifactEntry, inputs: &[Literal])
+        -> Result<Vec<Literal>>;
+
+    /// Execute one entry over many independent input sets (one per
+    /// client). The default runs serially; backends that are `Sync` (the
+    /// native one) fan the sets across cores with order-preserving
+    /// results, so callers may rely on `out[i] == call(entry, &sets[i])`
+    /// bit for bit.
+    fn call_many(&self, entry: &ArtifactEntry, batches: &[Vec<Literal>])
+        -> Result<Vec<Vec<Literal>>> {
+        batches.iter().map(|b| self.call(entry, b)).collect()
+    }
+
+    /// One-line execution-stats summary for logs and benches.
+    fn stats_summary(&self) -> String;
+}
+
+/// Which backend the user asked for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// PJRT when artifacts are present, native otherwise.
+    #[default]
+    Auto,
+    Native,
+    Pjrt,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Result<BackendChoice> {
+        match s {
+            "auto" => Ok(BackendChoice::Auto),
+            "native" => Ok(BackendChoice::Native),
+            "pjrt" => Ok(BackendChoice::Pjrt),
+            other => Err(Error::Config(format!(
+                "unknown backend '{other}' (auto|native|pjrt)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendChoice::Auto => "auto",
+            BackendChoice::Native => "native",
+            BackendChoice::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// A selected backend plus the manifest it executes.
+pub struct SelectedBackend {
+    pub backend: Box<dyn Backend>,
+    pub manifest: Manifest,
+    /// Which implementation was picked: "pjrt" or "native".
+    pub kind: &'static str,
+}
+
+impl SelectedBackend {
+    pub fn describe(&self) -> String {
+        format!("{} ({})", self.kind, self.backend.platform())
+    }
+}
+
+/// Resolve a [`BackendChoice`] against the artifacts directory.
+pub fn select_backend(artifacts_dir: &str, choice: BackendChoice)
+    -> Result<SelectedBackend> {
+    let pjrt = || -> Result<SelectedBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let rt = Runtime::new(artifacts_dir)?;
+        Ok(SelectedBackend {
+            backend: Box::new(rt),
+            manifest,
+            kind: "pjrt",
+        })
+    };
+    let native_sel = || SelectedBackend {
+        backend: Box::new(NativeBackend::new()),
+        manifest: native::manifest(),
+        kind: "native",
+    };
+    match choice {
+        BackendChoice::Pjrt => pjrt(),
+        BackendChoice::Native => Ok(native_sel()),
+        BackendChoice::Auto => match pjrt() {
+            Ok(sel) => Ok(sel),
+            Err(e) => {
+                // A missing manifest is the expected offline state and
+                // falls back silently; artifacts that exist but fail to
+                // load mean the measured PJRT system is being replaced —
+                // surface why instead of degrading silently.
+                if std::path::Path::new(artifacts_dir)
+                    .join("manifest.json")
+                    .exists()
+                {
+                    eprintln!(
+                        "backend auto: PJRT path unavailable ({e}); \
+                         falling back to the native backend"
+                    );
+                }
+                Ok(native_sel())
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parses() {
+        assert_eq!(BackendChoice::parse("auto").unwrap(),
+                   BackendChoice::Auto);
+        assert_eq!(BackendChoice::parse("native").unwrap(),
+                   BackendChoice::Native);
+        assert_eq!(BackendChoice::parse("pjrt").unwrap(),
+                   BackendChoice::Pjrt);
+        assert!(BackendChoice::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn native_always_selectable() {
+        let sel =
+            select_backend("artifacts", BackendChoice::Native).unwrap();
+        assert_eq!(sel.kind, "native");
+        assert!(sel.manifest.family("mnist").is_ok());
+        assert!(sel.describe().contains("native"));
+    }
+
+    #[test]
+    fn auto_never_fails() {
+        // With or without artifacts on disk, auto yields a usable backend.
+        let sel = select_backend("artifacts", BackendChoice::Auto).unwrap();
+        assert!(sel.manifest.family("ham").is_ok());
+    }
+
+    #[test]
+    fn pjrt_requires_artifacts() {
+        // In an offline checkout (no artifacts, stub PJRT) the explicit
+        // pjrt choice must fail loudly rather than fall back.
+        if Manifest::load("artifacts").is_err()
+            || Runtime::new("artifacts").is_err()
+        {
+            assert!(
+                select_backend("artifacts", BackendChoice::Pjrt).is_err()
+            );
+        }
+    }
+}

@@ -1,15 +1,25 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
-//! the training hot path.
+//! Execution runtimes for the AOT entry-point contract.
 //!
-//! Mirrors `/opt/xla-example/load_hlo`: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. Compiled executables are cached by file
-//! name; every graph was lowered with `return_tuple=True`, so execution
-//! returns one tuple literal that we decompose and validate against the
-//! manifest's output specs.
+//! Two implementations sit behind the [`backend::Backend`] seam:
+//!
+//! - **[`Runtime`] (PJRT)**: load AOT HLO-text artifacts, compile once,
+//!   execute from the training hot path. Mirrors
+//!   `/opt/xla-example/load_hlo`: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!   `client.compile` → `execute`. Compiled executables are cached by
+//!   file name; every graph was lowered with `return_tuple=True`, so
+//!   execution returns one tuple literal that we decompose and validate
+//!   against the manifest's output specs. Preferred when artifacts exist.
+//! - **[`native`]**: the pure-Rust host-f32 backend — the same splitnet
+//!   graphs implemented directly, selected automatically when artifacts
+//!   are absent so the training stack always runs.
 
 pub mod artifact;
+pub mod backend;
+pub mod native;
 pub mod tensor;
+
+pub use backend::{select_backend, Backend, BackendChoice, SelectedBackend};
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -93,23 +103,7 @@ impl Runtime {
     /// decomposed output tuple, validated against the manifest specs.
     pub fn call(&self, entry: &ArtifactEntry, inputs: &[Literal])
         -> Result<Vec<Literal>> {
-        if inputs.len() != entry.inputs.len() {
-            return Err(Error::Runtime(format!(
-                "{}: expected {} inputs, got {}",
-                entry.file,
-                entry.inputs.len(),
-                inputs.len()
-            )));
-        }
-        for (lit, spec) in inputs.iter().zip(&entry.inputs) {
-            let n = lit.element_count();
-            if n != spec.numel() {
-                return Err(Error::Runtime(format!(
-                    "{}: input '{}' has {} elements, spec wants {} {:?}",
-                    entry.file, spec.name, n, spec.numel(), spec.shape
-                )));
-            }
-        }
+        validate_inputs(entry, inputs)?;
         let exe = self.load(&entry.file)?;
         let t0 = Instant::now();
         let result = exe.execute::<Literal>(inputs)?;
@@ -136,6 +130,53 @@ impl Runtime {
 
     pub fn cached_executables(&self) -> usize {
         self.cache.borrow().len()
+    }
+}
+
+/// Shared input validation (arity + element counts vs the manifest
+/// specs), used by both the PJRT and native backends.
+pub(crate) fn validate_inputs(entry: &ArtifactEntry, inputs: &[Literal])
+    -> Result<()> {
+    if inputs.len() != entry.inputs.len() {
+        return Err(Error::Runtime(format!(
+            "{}: expected {} inputs, got {}",
+            entry.file,
+            entry.inputs.len(),
+            inputs.len()
+        )));
+    }
+    for (lit, spec) in inputs.iter().zip(&entry.inputs) {
+        let n = lit.element_count();
+        if n != spec.numel() {
+            return Err(Error::Runtime(format!(
+                "{}: input '{}' has {} elements, spec wants {} {:?}",
+                entry.file, spec.name, n, spec.numel(), spec.shape
+            )));
+        }
+    }
+    Ok(())
+}
+
+impl Backend for Runtime {
+    fn platform(&self) -> String {
+        Runtime::platform(self)
+    }
+
+    fn call(&self, entry: &ArtifactEntry, inputs: &[Literal])
+        -> Result<Vec<Literal>> {
+        Runtime::call(self, entry, inputs)
+    }
+
+    // call_many keeps the serial default: the PJRT client is
+    // thread-affine (the coordinator is an event-driven single-thread
+    // loop around it).
+
+    fn stats_summary(&self) -> String {
+        let s = self.stats();
+        format!(
+            "pjrt backend: {} compiles ({:.2}s), {} executions ({:.2}s)",
+            s.compiles, s.compile_seconds, s.executions, s.execute_seconds
+        )
     }
 }
 

@@ -1,0 +1,671 @@
+//! The pure-Rust native training backend.
+//!
+//! Implements the splitnet family end-to-end on host f32 buffers against
+//! the same `Manifest`/`Literal` entry-point contract the PJRT path
+//! speaks, so `coordinator::driver`, `fedavg`, and
+//! `experiments::accuracy` run unmodified above the [`Backend`] seam —
+//! with no artifacts on disk. [`manifest`] synthesizes the full manifest
+//! (both families, cuts 1..=4, server_train for C = 1..=32) with entry
+//! files in a `native://{family}/{op}` grammar that [`NativeBackend`]
+//! dispatches on.
+//!
+//! Determinism: everything is a pure function of the inputs (init of the
+//! seed literal), per-sample fan-out goes through the order-preserving
+//! [`crate::util::par::parallel_map`], and all cross-sample reductions run
+//! serially in sample order — results are bit-identical for any
+//! `EPSL_THREADS`. Unlike the PJRT client the backend is `Send + Sync`,
+//! so the driver's `call_many` fans client FP/BP across cores.
+
+pub mod model;
+pub mod ops;
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use xla::Literal;
+
+use crate::error::{Error, Result};
+use crate::profile::splitnet::SplitNetConfig;
+use crate::runtime::artifact::{ArtifactEntry, DType, FamilyManifest,
+                               Manifest, TensorSpec};
+use crate::runtime::backend::Backend;
+use crate::runtime::tensor::{literal_f32, to_f32_vec};
+use crate::runtime::{validate_inputs, RuntimeStats};
+use crate::util::par;
+
+/// Training mini-batch b baked into the graph contract (matches the AOT
+/// export in `python/compile/aot.py`).
+pub const BATCH: usize = 32;
+/// Fixed eval chunk size.
+pub const EVAL_BATCH: usize = 256;
+/// server_train graphs are synthesized for C = 1..=MAX_CLIENTS.
+pub const MAX_CLIENTS: usize = 32;
+/// Client count baked into the standalone `phi_agg` entries.
+const PHI_AGG_CLIENTS: usize = 5;
+
+/// The native backend: stateless apart from perf counters.
+pub struct NativeBackend {
+    threads: usize,
+    stats: Mutex<RuntimeStats>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    /// Thread budget from `EPSL_THREADS` / available parallelism.
+    pub fn new() -> Self {
+        Self::with_threads(par::max_threads())
+    }
+
+    /// Explicit thread budget (determinism tests pin this).
+    pub fn with_threads(threads: usize) -> Self {
+        NativeBackend {
+            threads: threads.max(1),
+            stats: Mutex::new(RuntimeStats::default()),
+        }
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    fn dispatch(&self, entry: &ArtifactEntry, inputs: &[Literal])
+        -> Result<Vec<Literal>> {
+        let op = NativeOp::parse(&entry.file)?;
+        let cfg = op.cfg();
+        match op.kind {
+            OpKind::Init => {
+                let seed = inputs[0].to_vec::<u32>()?;
+                let seed = ((seed[0] as u64) << 32) | seed[1] as u64;
+                let params = model::init_params(&cfg, seed);
+                model::param_specs(&cfg)
+                    .iter()
+                    .zip(&params)
+                    .map(|((_, shape), data)| literal_f32(shape, data))
+                    .collect()
+            }
+            OpKind::ClientFwd { cut } => {
+                let n = model::client_param_count(cut);
+                let params = to_host(&inputs[..n])?;
+                let x = to_f32_vec(&inputs[n])?;
+                let smashed =
+                    model::client_fwd(&cfg, cut, &params, &x, BATCH);
+                Ok(vec![literal_f32(&entry.outputs[0].shape, &smashed)?])
+            }
+            OpKind::ClientStep { cut } => {
+                let n = model::client_param_count(cut);
+                let params = to_host(&inputs[..n])?;
+                let x = to_f32_vec(&inputs[n])?;
+                let g_cut = to_f32_vec(&inputs[n + 1])?;
+                let lr = inputs[n + 2].get_first_element::<f32>()?;
+                let new =
+                    model::client_step(&cfg, cut, &params, &x, &g_cut, lr,
+                                       BATCH);
+                entry
+                    .outputs
+                    .iter()
+                    .zip(&new)
+                    .map(|(spec, data)| literal_f32(&spec.shape, data))
+                    .collect()
+            }
+            OpKind::ServerTrain { cut, c } => {
+                let n_sp = model::param_specs(&cfg).len()
+                    - model::client_param_count(cut);
+                let params = to_host(&inputs[..n_sp])?;
+                let smashed = to_f32_vec(&inputs[n_sp])?;
+                let labels = inputs[n_sp + 1].to_vec::<i32>()?;
+                let lam = to_f32_vec(&inputs[n_sp + 2])?;
+                let mask = to_f32_vec(&inputs[n_sp + 3])?;
+                let lr = inputs[n_sp + 4].get_first_element::<f32>()?;
+                let out = model::server_train(&cfg, cut, c, BATCH,
+                                              self.threads, &params,
+                                              &smashed, &labels, &lam,
+                                              &mask, lr);
+                let mut lits: Vec<Literal> = entry.outputs[..n_sp]
+                    .iter()
+                    .zip(&out.new_params)
+                    .map(|(spec, data)| literal_f32(&spec.shape, data))
+                    .collect::<Result<_>>()?;
+                lits.push(literal_f32(&entry.outputs[n_sp].shape,
+                                      &out.cut_agg)?);
+                lits.push(literal_f32(&entry.outputs[n_sp + 1].shape,
+                                      &out.cut_unagg)?);
+                lits.push(literal_f32(&[], &[out.loss])?);
+                lits.push(literal_f32(&[], &[out.ncorrect])?);
+                Ok(lits)
+            }
+            OpKind::Eval => {
+                let np = model::param_specs(&cfg).len();
+                let params = to_host(&inputs[..np])?;
+                let x = to_f32_vec(&inputs[np])?;
+                let labels = inputs[np + 1].to_vec::<i32>()?;
+                let (loss, ncorr) =
+                    model::eval(&cfg, &params, &x, &labels, self.threads);
+                Ok(vec![
+                    literal_f32(&[], &[loss])?,
+                    literal_f32(&[], &[ncorr])?,
+                ])
+            }
+            OpKind::PhiAgg { cut } => {
+                let z = to_f32_vec(&inputs[0])?;
+                let lam = to_f32_vec(&inputs[1])?;
+                let mask = to_f32_vec(&inputs[2])?;
+                let (sh, sw, sc) = model::stage_out_dims(&cfg, cut);
+                let out = model::phi_agg(lam.len(), mask.len(),
+                                         sh * sw * sc, &z, &lam, &mask);
+                Ok(vec![literal_f32(&entry.outputs[0].shape, &out)?])
+            }
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        format!("native-f32 ({} threads)", self.threads)
+    }
+
+    fn call(&self, entry: &ArtifactEntry, inputs: &[Literal])
+        -> Result<Vec<Literal>> {
+        validate_inputs(entry, inputs)?;
+        let t0 = Instant::now();
+        let outs = self.dispatch(entry, inputs)?;
+        let mut stats = self.stats.lock().unwrap();
+        stats.executions += 1;
+        stats.execute_seconds += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    fn call_many(&self, entry: &ArtifactEntry, batches: &[Vec<Literal>])
+        -> Result<Vec<Vec<Literal>>> {
+        // Per-batch work is pure and parallel_map is order-preserving, so
+        // the fan-out is bit-identical to the serial loop.
+        par::parallel_map(batches, self.threads, |_, inputs| {
+            self.call(entry, inputs)
+        })
+        .into_iter()
+        .collect()
+    }
+
+    fn stats_summary(&self) -> String {
+        let s = self.stats();
+        format!(
+            "native backend: {} executions ({:.2}s)",
+            s.executions, s.execute_seconds
+        )
+    }
+}
+
+/// Convert a parameter-literal prefix to host buffers.
+fn to_host(lits: &[Literal]) -> Result<Vec<Vec<f32>>> {
+    lits.iter().map(to_f32_vec).collect()
+}
+
+/// Which graph a `native://` entry file names.
+struct NativeOp {
+    family: String,
+    kind: OpKind,
+}
+
+enum OpKind {
+    Init,
+    Eval,
+    ClientFwd { cut: usize },
+    ClientStep { cut: usize },
+    ServerTrain { cut: usize, c: usize },
+    PhiAgg { cut: usize },
+}
+
+impl NativeOp {
+    fn parse(file: &str) -> Result<NativeOp> {
+        let bad = || {
+            Error::Artifact(format!(
+                "'{file}' is not a native:// entry — this manifest was \
+                 built for the PJRT backend (run with --backend pjrt or \
+                 rebuild artifacts)"
+            ))
+        };
+        let rest = file.strip_prefix("native://").ok_or_else(bad)?;
+        let (family, op) = rest.split_once('/').ok_or_else(bad)?;
+        let cut_of = |s: &str| -> Result<usize> {
+            let cut: usize = s.parse().map_err(|_| bad())?;
+            if (1..=4).contains(&cut) {
+                Ok(cut)
+            } else {
+                Err(bad())
+            }
+        };
+        let kind = if op == "init" {
+            OpKind::Init
+        } else if op == "eval" {
+            OpKind::Eval
+        } else if let Some(s) = op.strip_prefix("client_fwd_cut") {
+            OpKind::ClientFwd { cut: cut_of(s)? }
+        } else if let Some(s) = op.strip_prefix("client_step_cut") {
+            OpKind::ClientStep { cut: cut_of(s)? }
+        } else if let Some(s) = op.strip_prefix("phi_agg_cut") {
+            OpKind::PhiAgg { cut: cut_of(s)? }
+        } else if let Some(s) = op.strip_prefix("server_train_cut") {
+            let (cut_s, c_s) = s.split_once("_c").ok_or_else(bad)?;
+            let c: usize = c_s.parse().map_err(|_| bad())?;
+            if c == 0 {
+                return Err(bad());
+            }
+            OpKind::ServerTrain { cut: cut_of(cut_s)?, c }
+        } else {
+            return Err(bad());
+        };
+        Ok(NativeOp { family: family.to_string(), kind })
+    }
+
+    fn cfg(&self) -> SplitNetConfig {
+        SplitNetConfig::for_family(&self.family)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Manifest synthesis
+// ---------------------------------------------------------------------------
+
+fn f32_spec(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.into(), dtype: DType::F32, shape: shape.to_vec() }
+}
+
+fn i32_spec(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.into(), dtype: DType::I32, shape: shape.to_vec() }
+}
+
+fn param_input_specs(specs: &[(String, Vec<usize>)], range: std::ops::Range<usize>)
+    -> Vec<TensorSpec> {
+    specs[range].iter().map(|(n, s)| f32_spec(n, s)).collect()
+}
+
+fn family_manifest(cfg: &SplitNetConfig, name: &str) -> FamilyManifest {
+    let specs = model::param_specs(cfg);
+    let file = |op: &str| format!("native://{name}/{op}");
+    let entry = |op: &str, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| {
+        ArtifactEntry { file: file(op), inputs, outputs }
+    };
+    let x_spec = |b: usize| {
+        f32_spec("x", &[b, cfg.img, cfg.img, cfg.channels])
+    };
+    let smash_of = |cut: usize| -> Vec<usize> {
+        let (h, w, c) = cfg.smashed_shape(cut);
+        vec![h, w, c]
+    };
+    let all_params: Vec<TensorSpec> =
+        param_input_specs(&specs, 0..specs.len());
+
+    let init = entry(
+        "init",
+        vec![TensorSpec { name: "seed".into(), dtype: DType::U32,
+                          shape: vec![2] }],
+        all_params.clone(),
+    );
+    let eval = entry(
+        "eval",
+        {
+            let mut v = all_params.clone();
+            v.push(x_spec(EVAL_BATCH));
+            v.push(i32_spec("y", &[EVAL_BATCH]));
+            v
+        },
+        vec![f32_spec("loss", &[]), f32_spec("ncorrect", &[])],
+    );
+
+    let mut client_fwd = std::collections::BTreeMap::new();
+    let mut client_step = std::collections::BTreeMap::new();
+    let mut phi_agg = std::collections::BTreeMap::new();
+    let mut server_train = std::collections::BTreeMap::new();
+    let mut client_param_count = std::collections::BTreeMap::new();
+    let mut smashed_shape = std::collections::BTreeMap::new();
+    for cut in 1..=4usize {
+        let n_c = model::client_param_count(cut);
+        let smash = smash_of(cut);
+        let smash_len: usize = smash.iter().product();
+        client_param_count.insert(cut, n_c);
+        smashed_shape.insert(cut, smash.clone());
+
+        let mut cf_in = param_input_specs(&specs, 0..n_c);
+        cf_in.push(x_spec(BATCH));
+        let mut smash_b = vec![BATCH];
+        smash_b.extend(&smash);
+        client_fwd.insert(
+            cut,
+            entry(&format!("client_fwd_cut{cut}"), cf_in,
+                  vec![f32_spec("smashed", &smash_b)]),
+        );
+
+        let mut cs_in = param_input_specs(&specs, 0..n_c);
+        cs_in.push(x_spec(BATCH));
+        cs_in.push(f32_spec("g_cut", &smash_b));
+        cs_in.push(f32_spec("lr", &[]));
+        client_step.insert(
+            cut,
+            entry(&format!("client_step_cut{cut}"), cs_in,
+                  param_input_specs(&specs, 0..n_c)),
+        );
+
+        phi_agg.insert(
+            cut,
+            entry(
+                &format!("phi_agg_cut{cut}"),
+                vec![
+                    f32_spec("z", &[PHI_AGG_CLIENTS, BATCH, smash_len]),
+                    f32_spec("lam", &[PHI_AGG_CLIENTS]),
+                    f32_spec("mask", &[BATCH]),
+                ],
+                vec![f32_spec("z_mixed",
+                              &[PHI_AGG_CLIENTS, BATCH, smash_len])],
+            ),
+        );
+
+        let mut by_c = std::collections::BTreeMap::new();
+        for c in 1..=MAX_CLIENTS {
+            let mut st_in = param_input_specs(&specs, n_c..specs.len());
+            let mut smash_cb = vec![c, BATCH];
+            smash_cb.extend(&smash);
+            st_in.push(f32_spec("smashed", &smash_cb));
+            st_in.push(i32_spec("y", &[c, BATCH]));
+            st_in.push(f32_spec("lam", &[c]));
+            st_in.push(f32_spec("mask", &[BATCH]));
+            st_in.push(f32_spec("lr", &[]));
+            let mut st_out = param_input_specs(&specs, n_c..specs.len());
+            st_out.push(f32_spec("cut_agg", &smash_b));
+            st_out.push(f32_spec("cut_unagg", &smash_cb));
+            st_out.push(f32_spec("loss", &[]));
+            st_out.push(f32_spec("ncorrect", &[]));
+            by_c.insert(
+                c,
+                entry(&format!("server_train_cut{cut}_c{c}"), st_in,
+                      st_out),
+            );
+        }
+        server_train.insert(cut, by_c);
+    }
+
+    FamilyManifest {
+        name: name.into(),
+        channels: cfg.channels,
+        num_classes: cfg.num_classes,
+        img: cfg.img,
+        batch: BATCH,
+        eval_batch: EVAL_BATCH,
+        params: specs,
+        client_param_count,
+        smashed_shape,
+        init,
+        eval,
+        client_fwd,
+        client_step,
+        phi_agg,
+        server_train,
+    }
+}
+
+/// Synthesize the native backend's manifest: both families, cuts 1..=4,
+/// server_train for every C in 1..=[`MAX_CLIENTS`]. Same shape contract
+/// as `artifacts/manifest.json`, no files on disk.
+pub fn manifest() -> Manifest {
+    let mut families = std::collections::BTreeMap::new();
+    for name in ["mnist", "ham"] {
+        families.insert(
+            name.to_string(),
+            family_manifest(&SplitNetConfig::for_family(name), name),
+        );
+    }
+    Manifest {
+        client_counts: (1..=MAX_CLIENTS).collect(),
+        cuts: vec![1, 2, 3, 4],
+        families,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::{literal_i32, literal_u32, scalar_f32};
+
+    fn init_full(fam: &FamilyManifest, be: &NativeBackend, seed: u32)
+        -> Vec<Literal> {
+        let seed = literal_u32(&[2], &[0, seed]).unwrap();
+        be.call(&fam.init, &[seed]).unwrap()
+    }
+
+    #[test]
+    fn manifest_mirrors_the_aot_contract() {
+        let m = manifest();
+        let fam = m.family("mnist").unwrap();
+        assert_eq!(fam.params.len(), 20);
+        assert_eq!(fam.cuts(), vec![1, 2, 3, 4]);
+        assert_eq!(fam.client_param_count[&2], 6);
+        assert_eq!(fam.smashed_shape[&2], vec![16, 16, 8]);
+        assert_eq!(fam.param_elements(), 19_642);
+        assert!(fam.server_train_entry(2, 5).is_ok());
+        assert!(fam.server_train_entry(2, MAX_CLIENTS + 1).is_err());
+        let names: Vec<&str> = fam
+            .server_train_entry(2, 5)
+            .unwrap()
+            .inputs
+            .iter()
+            .map(|s| s.name.as_str())
+            .collect();
+        assert!(names.ends_with(&["smashed", "y", "lam", "mask", "lr"]));
+        let ham = m.family("ham").unwrap();
+        assert_eq!(ham.num_classes, 7);
+        assert_eq!(ham.channels, 3);
+    }
+
+    #[test]
+    fn init_executes_and_shapes_match() {
+        let m = manifest();
+        let fam = m.family("mnist").unwrap();
+        let be = NativeBackend::new();
+        let params = init_full(fam, &be, 42);
+        assert_eq!(params.len(), fam.params.len());
+        for (lit, (name, shape)) in params.iter().zip(&fam.params) {
+            assert_eq!(
+                lit.element_count(),
+                shape.iter().product::<usize>(),
+                "param {name}"
+            );
+        }
+        let params2 = init_full(fam, &be, 42);
+        assert_eq!(
+            to_f32_vec(&params[0]).unwrap(),
+            to_f32_vec(&params2[0]).unwrap()
+        );
+        assert!(be.stats().executions >= 2);
+    }
+
+    #[test]
+    fn input_arity_and_shape_validated() {
+        let m = manifest();
+        let fam = m.family("mnist").unwrap();
+        let be = NativeBackend::new();
+        assert!(be.call(&fam.init, &[]).is_err());
+        let bad = literal_u32(&[3], &[1, 2, 3]).unwrap();
+        assert!(be.call(&fam.init, &[bad]).is_err());
+    }
+
+    #[test]
+    fn non_native_entry_rejected_with_hint() {
+        let be = NativeBackend::new();
+        let entry = ArtifactEntry {
+            file: "init.hlo.txt".into(),
+            inputs: vec![],
+            outputs: vec![],
+        };
+        let e = be.call(&entry, &[]).unwrap_err();
+        assert!(e.to_string().contains("native://"), "{e}");
+    }
+
+    #[test]
+    fn full_training_cycle_through_entries() {
+        // init → client_fwd → server_train → client_step → eval, all via
+        // the manifest entry points (what the driver does per round).
+        let m = manifest();
+        let fam = m.family("mnist").unwrap();
+        let be = NativeBackend::new();
+        let cut = 2;
+        let c = 2;
+        let params = init_full(fam, &be, 7);
+        let n_c = fam.client_param_count[&cut];
+        let (client_p, server_p) =
+            (params[..n_c].to_vec(), params[n_c..].to_vec());
+
+        let mut rng = crate::util::rng::Rng::new(3);
+        let x: Vec<f32> = (0..BATCH * 16 * 16)
+            .map(|_| rng.normal(0.0, 1.0) as f32)
+            .collect();
+        let x_lit = literal_f32(&[BATCH, 16, 16, 1], &x).unwrap();
+        let cf = fam.client_fwd.get(&cut).unwrap();
+        let mut inputs = client_p.clone();
+        inputs.push(x_lit.clone());
+        let smashed = be.call(cf, &inputs).unwrap();
+        let one = to_f32_vec(&smashed[0]).unwrap();
+
+        let mut all = one.clone();
+        all.extend_from_slice(&one);
+        let smash = &fam.smashed_shape[&cut];
+        let smash_len: usize = smash.iter().product();
+        let mut st_shape = vec![c, BATCH];
+        st_shape.extend(smash.iter());
+        let labels: Vec<i32> =
+            (0..c * BATCH).map(|i| (i % 10) as i32).collect();
+        let st = fam.server_train_entry(cut, c).unwrap();
+        let mut st_in = server_p.clone();
+        st_in.push(literal_f32(&st_shape, &all).unwrap());
+        st_in.push(literal_i32(&[c, BATCH], &labels).unwrap());
+        st_in.push(literal_f32(&[c], &[0.5, 0.5]).unwrap());
+        let mask: Vec<f32> = (0..BATCH)
+            .map(|j| if j < BATCH / 2 { 1.0 } else { 0.0 })
+            .collect();
+        st_in.push(literal_f32(&[BATCH], &mask).unwrap());
+        st_in.push(literal_f32(&[], &[0.05]).unwrap());
+        let out = be.call(st, &st_in).unwrap();
+        let n_sp = server_p.len();
+        assert_eq!(out.len(), n_sp + 4);
+        let loss = scalar_f32(&out[n_sp + 2]).unwrap();
+        let ncorr = scalar_f32(&out[n_sp + 3]).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=(c * BATCH) as f32).contains(&ncorr));
+        let cut_agg = to_f32_vec(&out[n_sp]).unwrap();
+        assert_eq!(cut_agg.len(), BATCH * smash_len);
+
+        let cs = fam.client_step.get(&cut).unwrap();
+        let mut g_shape = vec![BATCH];
+        g_shape.extend(smash.iter());
+        let mut cs_in = client_p.clone();
+        cs_in.push(x_lit);
+        cs_in.push(
+            literal_f32(&g_shape, &cut_agg).unwrap(),
+        );
+        cs_in.push(literal_f32(&[], &[0.05]).unwrap());
+        let new_client = be.call(cs, &cs_in).unwrap();
+        assert_eq!(new_client.len(), n_c);
+        // Parameters moved.
+        assert_ne!(
+            to_f32_vec(&new_client[0]).unwrap(),
+            to_f32_vec(&client_p[0]).unwrap()
+        );
+
+        let ex: Vec<f32> = (0..EVAL_BATCH * 256)
+            .map(|_| rng.normal(0.0, 1.0) as f32)
+            .collect();
+        let ey: Vec<i32> =
+            (0..EVAL_BATCH).map(|i| (i % 10) as i32).collect();
+        let mut ev_in = params.clone();
+        ev_in.push(literal_f32(&[EVAL_BATCH, 16, 16, 1], &ex).unwrap());
+        ev_in.push(literal_i32(&[EVAL_BATCH], &ey).unwrap());
+        let ev = be.call(&fam.eval, &ev_in).unwrap();
+        assert!(scalar_f32(&ev[0]).unwrap().is_finite());
+    }
+
+    #[test]
+    fn call_many_is_bit_identical_to_serial_calls() {
+        let m = manifest();
+        let fam = m.family("mnist").unwrap();
+        let be1 = NativeBackend::with_threads(1);
+        let be8 = NativeBackend::with_threads(8);
+        let cut = 2;
+        let params = init_full(fam, &be1, 5);
+        let n_c = fam.client_param_count[&cut];
+        let cf = fam.client_fwd.get(&cut).unwrap();
+        let mut rng = crate::util::rng::Rng::new(9);
+        let batches: Vec<Vec<Literal>> = (0..5)
+            .map(|_| {
+                let x: Vec<f32> = (0..BATCH * 16 * 16)
+                    .map(|_| rng.normal(0.0, 1.0) as f32)
+                    .collect();
+                let mut v = params[..n_c].to_vec();
+                v.push(literal_f32(&[BATCH, 16, 16, 1], &x).unwrap());
+                v
+            })
+            .collect();
+        let serial: Vec<Vec<Literal>> = batches
+            .iter()
+            .map(|b| be1.call(cf, b).unwrap())
+            .collect();
+        let fanned = be8.call_many(cf, &batches).unwrap();
+        for (a, b) in serial.iter().zip(&fanned) {
+            assert_eq!(
+                to_f32_vec(&a[0]).unwrap(),
+                to_f32_vec(&b[0]).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn phi_agg_entry_matches_rust_reference() {
+        // The native twin of the PJRT `phi_agg_artifact_matches_rust_
+        // reference` test (eq. 5–6 oracle).
+        let m = manifest();
+        let fam = m.family("mnist").unwrap();
+        let be = NativeBackend::new();
+        let entry = fam.phi_agg.get(&2).unwrap();
+        let zspec = &entry.inputs[0];
+        let (c, b, q) = (zspec.shape[0], zspec.shape[1], zspec.shape[2]);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let z: Vec<f32> =
+            (0..c * b * q).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let lam: Vec<f32> = vec![1.0 / c as f32; c];
+        let m_agg = b / 2;
+        let mask: Vec<f32> = (0..b)
+            .map(|j| if j < m_agg { 1.0 } else { 0.0 })
+            .collect();
+        let out = be
+            .call(
+                entry,
+                &[
+                    literal_f32(&[c, b, q], &z).unwrap(),
+                    literal_f32(&[c], &lam).unwrap(),
+                    literal_f32(&[b], &mask).unwrap(),
+                ],
+            )
+            .unwrap();
+        let got = to_f32_vec(&out[0]).unwrap();
+        for i in 0..c {
+            for j in 0..b {
+                for x in 0..q.min(7) {
+                    let idx = (i * b + j) * q + x;
+                    let expect = if j < m_agg {
+                        (0..c)
+                            .map(|k| lam[k] * z[(k * b + j) * q + x])
+                            .sum::<f32>()
+                    } else {
+                        z[idx]
+                    };
+                    assert!(
+                        (got[idx] - expect).abs() < 1e-4,
+                        "mismatch at ({i},{j},{x}): {} vs {expect}",
+                        got[idx]
+                    );
+                }
+            }
+        }
+    }
+}

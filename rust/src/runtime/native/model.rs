@@ -1,0 +1,642 @@
+//! The SplitNet family on host buffers: parameter specs, He-normal init,
+//! and the five exported graph semantics (`client_fwd`, `server_train`,
+//! `client_step`, `eval`, `phi_agg`) exactly as `python/compile/model.py`
+//! defines them — including the λ-weighted softmax-CE loss (eq. 1), the
+//! ⌈φb⌉ last-layer gradient aggregation (eq. 5–6) over a virtual
+//! aggregated batch, and the per-row 1/b weighting of eq. 9.
+//!
+//! Parallelism: heavy per-sample work (server FP/BP, eval FP) fans across
+//! cores with [`par::parallel_map`], whose output is ordered; every
+//! cross-sample reduction then runs serially in sample order, so results
+//! are bit-identical for any `EPSL_THREADS`.
+
+use crate::profile::splitnet::SplitNetConfig;
+use crate::util::par;
+use crate::util::rng::Rng;
+
+use super::ops::{self, Dims};
+
+/// Parameter tensors per stage (s1, s2, s3, s4) + head — the canonical
+/// prefix bookkeeping shared with `python/compile/model.py`.
+pub const STAGE_PARAM_COUNTS: [usize; 4] = [2, 4, 6, 6];
+
+/// Number of client-side tensors for a cut (canonical prefix).
+pub fn client_param_count(cut: usize) -> usize {
+    STAGE_PARAM_COUNTS[..cut].iter().sum()
+}
+
+/// Canonical ordered `(name, shape)` list, mirroring `param_specs` in
+/// `model.py` (HWIO conv weights, `(in, out)` FC weight).
+pub fn param_specs(cfg: &SplitNetConfig) -> Vec<(String, Vec<usize>)> {
+    let w = cfg.width;
+    let (w1, w2, w3, w4) = (w, w, 2 * w, 4 * w);
+    let mut s: Vec<(String, Vec<usize>)> = Vec::with_capacity(20);
+    let mut push = |n: &str, shape: Vec<usize>| s.push((n.into(), shape));
+    push("s1.w", vec![3, 3, cfg.channels, w1]);
+    push("s1.b", vec![w1]);
+    push("s2.wa", vec![3, 3, w1, w2]);
+    push("s2.ba", vec![w2]);
+    push("s2.wb", vec![3, 3, w2, w2]);
+    push("s2.bb", vec![w2]);
+    push("s3.wa", vec![3, 3, w2, w3]);
+    push("s3.ba", vec![w3]);
+    push("s3.wb", vec![3, 3, w3, w3]);
+    push("s3.bb", vec![w3]);
+    push("s3.wp", vec![1, 1, w2, w3]);
+    push("s3.bp", vec![w3]);
+    push("s4.wa", vec![3, 3, w3, w4]);
+    push("s4.ba", vec![w4]);
+    push("s4.wb", vec![3, 3, w4, w4]);
+    push("s4.bb", vec![w4]);
+    push("s4.wp", vec![1, 1, w3, w4]);
+    push("s4.bp", vec![w4]);
+    push("fc.w", vec![w4, cfg.num_classes]);
+    push("fc.b", vec![cfg.num_classes]);
+    s
+}
+
+/// He-normal init (biases zero), deterministic in `seed`. The native
+/// backend's init need not match JAX's PRNG bit for bit — only the
+/// *contract* (shape list, determinism from the run seed) is shared.
+pub fn init_params(cfg: &SplitNetConfig, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed ^ 0x5EED_1417);
+    param_specs(cfg)
+        .iter()
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            let leaf = name.rsplit('.').next().unwrap_or("");
+            if leaf.starts_with('b') {
+                vec![0.0f32; n]
+            } else {
+                let fan_in: usize =
+                    shape[..shape.len() - 1].iter().product();
+                let std = (2.0 / fan_in as f64).sqrt();
+                (0..n).map(|_| rng.normal(0.0, std) as f32).collect()
+            }
+        })
+        .collect()
+}
+
+/// Input feature-map dims of stage `s` (1..=4).
+fn stage_in_dims(cfg: &SplitNetConfig, s: usize) -> Dims {
+    let img = cfg.img;
+    let w = cfg.width;
+    match s {
+        1 => (img, img, cfg.channels),
+        2 => (img, img, w),
+        3 => (img, img, w),
+        4 => (img / 2, img / 2, 2 * w),
+        _ => panic!("stage {s} out of 1..=4"),
+    }
+}
+
+/// Output dims of stage `s` — also the smashed shape at cut `s`.
+pub fn stage_out_dims(cfg: &SplitNetConfig, s: usize) -> Dims {
+    let (h, w, c) = cfg.smashed_shape(s);
+    (h, w, c)
+}
+
+/// Backward cache for one executed stage.
+enum StageCache {
+    /// stage 1: conv + relu. Caches input and post-relu output.
+    Conv { x: Vec<f32>, y: Vec<f32> },
+    /// stages 2–4: residual block. Caches input, post-relu `a`, output.
+    Res { x: Vec<f32>, a: Vec<f32>, out: Vec<f32> },
+}
+
+/// Per-sample activation cache for stages `[first..=last]` (+ head).
+pub struct Cache {
+    stages: Vec<StageCache>,
+    /// `(pooled, head input dims)` when the head ran.
+    head: Option<(Vec<f32>, Dims)>,
+}
+
+/// Per-sample forward through stages `[first..=last]`, then the head if
+/// `with_head`. `params` is the canonical subset for exactly that range.
+/// Returns `(output, cache)`.
+pub fn forward(cfg: &SplitNetConfig, params: &[Vec<f32>], first: usize,
+               last: usize, with_head: bool, x: &[f32])
+    -> (Vec<f32>, Cache) {
+    let mut cache = Cache { stages: Vec::with_capacity(last + 1 - first),
+                            head: None };
+    let mut h = x.to_vec();
+    let mut off = 0;
+    for s in first..=last {
+        let xd = stage_in_dims(cfg, s);
+        let (_, _, cout) = stage_out_dims(cfg, s);
+        if s == 1 {
+            let (w, b) = (&params[off], &params[off + 1]);
+            let mut y = ops::conv2d(&h, xd, w, 3, cout, b, 1);
+            ops::relu(&mut y);
+            cache.stages.push(StageCache::Conv { x: h, y: y.clone() });
+            h = y;
+        } else {
+            let stride = if s >= 3 { 2 } else { 1 };
+            let project = s >= 3;
+            let (wa, ba) = (&params[off], &params[off + 1]);
+            let (wb, bb) = (&params[off + 2], &params[off + 3]);
+            let mut a = ops::conv2d(&h, xd, wa, 3, cout, ba, stride);
+            ops::relu(&mut a);
+            let ad = (ops::out_size(xd.0, stride),
+                      ops::out_size(xd.1, stride), cout);
+            let mut out = ops::conv2d(&a, ad, wb, 3, cout, bb, 1);
+            if project {
+                let (wp, bp) = (&params[off + 4], &params[off + 5]);
+                let skip = ops::conv2d(&h, xd, wp, 1, cout, bp, stride);
+                ops::add_assign(&mut out, &skip);
+            } else {
+                ops::add_assign(&mut out, &h);
+            }
+            ops::relu(&mut out);
+            cache.stages.push(StageCache::Res { x: h, a, out: out.clone() });
+            h = out;
+        }
+        off += STAGE_PARAM_COUNTS[s - 1];
+    }
+    if with_head {
+        debug_assert_eq!(last, 4, "the head always follows stage 4");
+        let xd = stage_out_dims(cfg, 4);
+        let (fc_w, fc_b) = (&params[off], &params[off + 1]);
+        let (logits, pooled) =
+            ops::gap_fc(&h, xd, fc_w, fc_b, cfg.num_classes);
+        cache.head = Some((pooled, xd));
+        h = logits;
+    }
+    (h, cache)
+}
+
+/// Per-sample backward for the same range: given the output cotangent,
+/// returns `(param gradients aligned with `params`, input cotangent)`.
+pub fn backward(cfg: &SplitNetConfig, params: &[Vec<f32>], first: usize,
+                last: usize, with_head: bool, cache: &Cache, cot: &[f32])
+    -> (Vec<Vec<f32>>, Vec<f32>) {
+    let mut grads: Vec<Vec<f32>> = Vec::with_capacity(params.len());
+    let mut g = cot.to_vec();
+    let mut off = params.len();
+    if with_head {
+        let (pooled, xd) = cache.head.as_ref().expect("head cache");
+        let fc_w = &params[off - 2];
+        let (gw, gb, gx) =
+            ops::gap_fc_bwd(pooled, *xd, fc_w, cfg.num_classes, &g);
+        grads.push(gb);
+        grads.push(gw);
+        g = gx;
+        off -= 2;
+    }
+    for s in (first..=last).rev() {
+        let xd = stage_in_dims(cfg, s);
+        let (_, _, cout) = stage_out_dims(cfg, s);
+        let sc = &cache.stages[s - first];
+        off -= STAGE_PARAM_COUNTS[s - 1];
+        match sc {
+            StageCache::Conv { x, y } => {
+                ops::relu_bwd(&mut g, y);
+                let w = &params[off];
+                let (gw, gb, gx) =
+                    ops::conv2d_bwd(x, xd, w, 3, cout, 1, &g);
+                grads.push(gb);
+                grads.push(gw);
+                g = gx;
+            }
+            StageCache::Res { x, a, out } => {
+                let stride = if s >= 3 { 2 } else { 1 };
+                let project = s >= 3;
+                ops::relu_bwd(&mut g, out); // g_sum = g ⊙ (out > 0)
+                let ad = (ops::out_size(xd.0, stride),
+                          ops::out_size(xd.1, stride), cout);
+                let wb = &params[off + 2];
+                let (gwb, gbb, mut ga) =
+                    ops::conv2d_bwd(a, ad, wb, 3, cout, 1, &g);
+                ops::relu_bwd(&mut ga, a);
+                let wa = &params[off];
+                let (gwa, gba, mut gx) =
+                    ops::conv2d_bwd(x, xd, wa, 3, cout, stride, &ga);
+                if project {
+                    let wp = &params[off + 4];
+                    let (gwp, gbp, gxp) =
+                        ops::conv2d_bwd(x, xd, wp, 1, cout, stride, &g);
+                    ops::add_assign(&mut gx, &gxp);
+                    grads.push(gbp);
+                    grads.push(gwp);
+                } else {
+                    ops::add_assign(&mut gx, &g);
+                }
+                grads.push(gbb);
+                grads.push(gwb);
+                grads.push(gba);
+                grads.push(gwa);
+                g = gx;
+            }
+        }
+    }
+    grads.reverse();
+    (grads, g)
+}
+
+/// Client-side FP (stages 1..cut) over a batch: `x (b,img,img,ch)` →
+/// smashed `(b,*smash)`.
+pub fn client_fwd(cfg: &SplitNetConfig, cut: usize, params: &[Vec<f32>],
+                  x: &[f32], b: usize) -> Vec<f32> {
+    let in_len = cfg.img * cfg.img * cfg.channels;
+    let (sh, sw, sc) = stage_out_dims(cfg, cut);
+    let smash_len = sh * sw * sc;
+    let mut out = Vec::with_capacity(b * smash_len);
+    for j in 0..b {
+        let (s, _) = forward(cfg, params, 1, cut, false,
+                             &x[j * in_len..][..in_len]);
+        out.extend_from_slice(&s);
+    }
+    out
+}
+
+/// Client-side BP + SGD (eq. 8–12): cotangent `g_cut/b` per row, then
+/// `w ← w − η_c · gw` with gradients accumulated in sample order.
+pub fn client_step(cfg: &SplitNetConfig, cut: usize, params: &[Vec<f32>],
+                   x: &[f32], g_cut: &[f32], lr: f32, b: usize)
+    -> Vec<Vec<f32>> {
+    let in_len = cfg.img * cfg.img * cfg.channels;
+    let (sh, sw, sc) = stage_out_dims(cfg, cut);
+    let smash_len = sh * sw * sc;
+    let mut acc: Vec<Vec<f32>> =
+        params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+    let inv_b = 1.0 / b as f32;
+    for j in 0..b {
+        let xs = &x[j * in_len..][..in_len];
+        let (_, cache) = forward(cfg, params, 1, cut, false, xs);
+        let cot: Vec<f32> = g_cut[j * smash_len..][..smash_len]
+            .iter()
+            .map(|&v| v * inv_b)
+            .collect();
+        let (grads, _) = backward(cfg, params, 1, cut, false, &cache, &cot);
+        for (a, gr) in acc.iter_mut().zip(&grads) {
+            ops::add_assign(a, gr);
+        }
+    }
+    params
+        .iter()
+        .zip(&acc)
+        .map(|(p, g)| {
+            p.iter().zip(g).map(|(&w, &gv)| w - lr * gv).collect()
+        })
+        .collect()
+}
+
+/// Output bundle of [`server_train`], in manifest output order.
+pub struct ServerTrainOut {
+    pub new_params: Vec<Vec<f32>>,
+    /// `(b, *smash)` broadcast cut-layer gradient (masked rows; others 0).
+    pub cut_agg: Vec<f32>,
+    /// `(C, b, *smash)` unicast gradients (masked slots zero).
+    pub cut_unagg: Vec<f32>,
+    pub loss: f32,
+    pub ncorrect: f32,
+}
+
+/// Per-sample result of the real-batch FP/BP pass.
+struct RealSample {
+    ce: f32,
+    correct: bool,
+    dlogits: Vec<f32>,
+    /// `(gw, gs)` when the unicast cotangent was nonzero.
+    bp: Option<(Vec<Vec<f32>>, Vec<f32>)>,
+}
+
+/// EPSL server step (paper §IV stages 3–6, eq. 5–7) — the semantics of
+/// the `server_train_cut{k}_c{C}` graph.
+#[allow(clippy::too_many_arguments)]
+pub fn server_train(cfg: &SplitNetConfig, cut: usize, c: usize, b: usize,
+                    threads: usize, params: &[Vec<f32>], smashed: &[f32],
+                    labels: &[i32], lam: &[f32], mask: &[f32], lr: f32)
+    -> ServerTrainOut {
+    let (sh, sw, sc) = stage_out_dims(cfg, cut);
+    let smash_len = sh * sw * sc;
+    let nc = cfg.num_classes;
+    let inv_b = 1.0 / b as f32;
+
+    // --- real pass: FP over all C·b samples; BP of the unaggregated
+    // slots with row weight λ_i/b (eq. 5 remaining blocks) ---
+    let idx: Vec<usize> = (0..c * b).collect();
+    let real: Vec<RealSample> = par::parallel_map(&idx, threads, |_, &k| {
+        let (i, j) = (k / b, k % b);
+        let row = &smashed[k * smash_len..][..smash_len];
+        let (logits, cache) =
+            forward(cfg, params, cut + 1, 4, true, row);
+        let (ce, dlogits, correct) = ops::softmax_xent(&logits, labels[k]);
+        let unmask = 1.0 - mask[j];
+        let weight = unmask * lam[i] * inv_b;
+        let bp = if weight != 0.0 {
+            let cot: Vec<f32> =
+                dlogits.iter().map(|&z| weight * z).collect();
+            let (gw, gs) =
+                backward(cfg, params, cut + 1, 4, true, &cache, &cot);
+            Some((gw, gs))
+        } else {
+            None
+        };
+        RealSample { ce, correct, dlogits, bp }
+    });
+
+    // Loss / accuracy reductions in flat sample order (eq. 1 weighting).
+    let mut loss = 0.0f32;
+    let mut ncorrect = 0.0f32;
+    for (k, r) in real.iter().enumerate() {
+        loss += lam[k / b] * r.ce;
+        ncorrect += r.correct as u32 as f32;
+    }
+    loss *= inv_b;
+
+    // --- virtual aggregated batch (eq. 6): λ-aggregate the smashed rows
+    // and last-layer gradients for the ⌈φb⌉ masked slots, one BP row each
+    // (eq. 5 first block, row weight 1/b) ---
+    let masked: Vec<usize> =
+        (0..b).filter(|&j| mask[j] != 0.0).collect();
+    let virt = par::parallel_map(&masked, threads, |_, &j| {
+        let mut sbar = vec![0.0f32; smash_len];
+        let mut zbar = vec![0.0f32; nc];
+        for i in 0..c {
+            ops::axpy(&mut sbar, lam[i],
+                      &smashed[(i * b + j) * smash_len..][..smash_len]);
+            ops::axpy(&mut zbar, lam[i], &real[i * b + j].dlogits);
+        }
+        let (_, cache) = forward(cfg, params, cut + 1, 4, true, &sbar);
+        let cot: Vec<f32> =
+            zbar.iter().map(|&z| mask[j] * z * inv_b).collect();
+        backward(cfg, params, cut + 1, 4, true, &cache, &cot)
+    });
+
+    // --- outputs ---
+    let bf = b as f32;
+    let mut cut_agg = vec![0.0f32; b * smash_len];
+    for (&j, (_, gs)) in masked.iter().zip(&virt) {
+        for (dst, &g) in
+            cut_agg[j * smash_len..][..smash_len].iter_mut().zip(gs)
+        {
+            *dst = g * bf; // raw activations' gradients for the broadcast
+        }
+    }
+    let mut cut_unagg = vec![0.0f32; c * b * smash_len];
+    for (k, r) in real.iter().enumerate() {
+        if let Some((_, gs)) = &r.bp {
+            let (i, j) = (k / b, k % b);
+            // Divide the λ_i/b row weight back out (unicast payload);
+            // masked slots stay zero.
+            let scale = (1.0 - mask[j]) * bf / lam[i].max(1e-12);
+            for (dst, &g) in cut_unagg[k * smash_len..][..smash_len]
+                .iter_mut()
+                .zip(gs)
+            {
+                *dst = g * scale;
+            }
+        }
+    }
+
+    // --- parameter update (eq. 7): g = Σ virtual rows + Σ real samples,
+    // both in ascending order ---
+    let mut acc: Vec<Vec<f32>> =
+        params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+    for (gw, _) in &virt {
+        for (a, g) in acc.iter_mut().zip(gw) {
+            ops::add_assign(a, g);
+        }
+    }
+    for r in &real {
+        if let Some((gw, _)) = &r.bp {
+            for (a, g) in acc.iter_mut().zip(gw) {
+                ops::add_assign(a, g);
+            }
+        }
+    }
+    let new_params = params
+        .iter()
+        .zip(&acc)
+        .map(|(p, g)| {
+            p.iter().zip(g).map(|(&w, &gv)| w - lr * gv).collect()
+        })
+        .collect();
+
+    ServerTrainOut { new_params, cut_agg, cut_unagg, loss, ncorrect }
+}
+
+/// Full-model eval on a fixed-size batch: `(mean CE, ncorrect)`.
+pub fn eval(cfg: &SplitNetConfig, params: &[Vec<f32>], x: &[f32],
+            labels: &[i32], threads: usize) -> (f32, f32) {
+    let in_len = cfg.img * cfg.img * cfg.channels;
+    let n = labels.len();
+    let idx: Vec<usize> = (0..n).collect();
+    let per: Vec<(f32, bool)> = par::parallel_map(&idx, threads, |_, &j| {
+        let (logits, _) = forward(cfg, params, 1, 4, true,
+                                  &x[j * in_len..][..in_len]);
+        let (ce, _, correct) = ops::softmax_xent(&logits, labels[j]);
+        (ce, correct)
+    });
+    let mut loss = 0.0f32;
+    let mut ncorr = 0.0f32;
+    for (ce, correct) in per {
+        loss += ce;
+        ncorr += correct as u32 as f32;
+    }
+    (loss / n as f32, ncorr)
+}
+
+/// The φ-aggregation kernel semantics (`phi_aggregate_nd`): masked rows of
+/// every client hold the λ-aggregate, unmasked rows pass through.
+pub fn phi_agg(c: usize, b: usize, q: usize, z: &[f32], lam: &[f32],
+               mask: &[f32]) -> Vec<f32> {
+    let mut out = z.to_vec();
+    for j in 0..b {
+        if mask[j] == 0.0 {
+            continue;
+        }
+        let mut zbar = vec![0.0f32; q];
+        for i in 0..c {
+            ops::axpy(&mut zbar, lam[i], &z[(i * b + j) * q..][..q]);
+        }
+        for i in 0..c {
+            out[(i * b + j) * q..][..q].copy_from_slice(&zbar);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SplitNetConfig {
+        SplitNetConfig::mnist_like()
+    }
+
+    #[test]
+    fn param_specs_match_the_python_contract() {
+        let specs = param_specs(&cfg());
+        assert_eq!(specs.len(), 20);
+        let total: usize =
+            specs.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        // Cross-language constant (profile::splitnet::param_count).
+        assert_eq!(total, 19_642);
+        assert_eq!(client_param_count(1), 2);
+        assert_eq!(client_param_count(2), 6);
+        assert_eq!(client_param_count(3), 12);
+        assert_eq!(client_param_count(4), 18);
+        assert_eq!(specs[0].0, "s1.w");
+        assert_eq!(specs[19].0, "fc.b");
+    }
+
+    #[test]
+    fn init_is_deterministic_and_he_scaled() {
+        let a = init_params(&cfg(), 42);
+        let b = init_params(&cfg(), 42);
+        assert_eq!(a, b);
+        let c = init_params(&cfg(), 43);
+        assert_ne!(a[0], c[0]);
+        // biases zero
+        assert!(a[1].iter().all(|&v| v == 0.0));
+        // He std for s1.w: sqrt(2 / (3*3*1)) ≈ 0.471
+        let std = (a[0].iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / a[0].len() as f64)
+            .sqrt();
+        assert!((std - 0.471).abs() < 0.15, "std={std}");
+    }
+
+    #[test]
+    fn full_forward_shapes() {
+        let p = init_params(&cfg(), 1);
+        let x = vec![0.1f32; 16 * 16];
+        let (logits, _) = forward(&cfg(), &p, 1, 4, true, &x);
+        assert_eq!(logits.len(), 10);
+        // split at cut 2: client stages 1-2 then server 3-4+head compose
+        // to the same logits
+        let n = client_param_count(2);
+        let (smash, _) = forward(&cfg(), &p[..n], 1, 2, false, &x);
+        assert_eq!(smash.len(), 16 * 16 * 8);
+        let (logits2, _) = forward(&cfg(), &p[n..], 3, 4, true, &smash);
+        assert_eq!(logits, logits2, "split forward must compose exactly");
+    }
+
+    #[test]
+    fn client_backward_matches_finite_difference() {
+        let cfg = cfg();
+        let p = init_params(&cfg, 5);
+        let n = client_param_count(1); // stage 1 only: cheap FD
+        let x: Vec<f32> =
+            (0..256).map(|i| ((i % 13) as f32 - 6.0) / 7.0).collect();
+        let cot: Vec<f32> = (0..16 * 16 * 8)
+            .map(|i| ((i % 7) as f32 - 3.0) / 50.0)
+            .collect();
+        let loss = |params: &[Vec<f32>]| -> f64 {
+            let (y, _) = forward(&cfg, params, 1, 1, false, &x);
+            y.iter().zip(&cot).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+        let (_, cache) = forward(&cfg, &p[..n], 1, 1, false, &x);
+        let (grads, _) =
+            backward(&cfg, &p[..n], 1, 1, false, &cache, &cot);
+        assert_eq!(grads.len(), 2);
+        let eps = 1e-3;
+        let base = loss(&p[..n]);
+        for t in 0..2 {
+            for i in [0usize, 3] {
+                let mut pp: Vec<Vec<f32>> = p[..n].to_vec();
+                pp[t][i] += eps;
+                let num = (loss(&pp) - base) / eps as f64;
+                assert!(
+                    (num - grads[t][i] as f64).abs() < 2e-2,
+                    "grad[{t}][{i}]: num {num} vs {}",
+                    grads[t][i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn server_train_is_thread_count_invariant() {
+        let cfg = cfg();
+        let (cut, c, b) = (2, 3, 8);
+        let p = init_params(&cfg, 9);
+        let n = client_param_count(cut);
+        let smash_len = 16 * 16 * 8;
+        let mut rng = Rng::new(4);
+        let smashed: Vec<f32> = (0..c * b * smash_len)
+            .map(|_| rng.normal(0.0, 1.0) as f32)
+            .collect();
+        let labels: Vec<i32> =
+            (0..c * b).map(|k| (k % 10) as i32).collect();
+        let lam = vec![1.0 / c as f32; c];
+        let mask: Vec<f32> =
+            (0..b).map(|j| if j < b / 2 { 1.0 } else { 0.0 }).collect();
+        let a = server_train(&cfg, cut, c, b, 1, &p[n..], &smashed,
+                             &labels, &lam, &mask, 0.05);
+        let z = server_train(&cfg, cut, c, b, 7, &p[n..], &smashed,
+                             &labels, &lam, &mask, 0.05);
+        assert_eq!(a.loss.to_bits(), z.loss.to_bits());
+        assert_eq!(a.cut_agg, z.cut_agg);
+        assert_eq!(a.cut_unagg, z.cut_unagg);
+        assert_eq!(a.new_params, z.new_params);
+    }
+
+    #[test]
+    fn phi1_broadcast_rows_bit_identical_to_mask_path_aggregated_rows() {
+        // Acceptance criterion: the φ=1.0 all-broadcast gradients must be
+        // bit-identical to the aggregated rows the masked path produces —
+        // each virtual row depends only on that row's data, not the mask
+        // of other rows.
+        let cfg = cfg();
+        let (cut, c, b) = (2, 2, 8);
+        let p = init_params(&cfg, 11);
+        let n = client_param_count(cut);
+        let smash_len = 16 * 16 * 8;
+        let mut rng = Rng::new(6);
+        let smashed: Vec<f32> = (0..c * b * smash_len)
+            .map(|_| rng.normal(0.0, 1.0) as f32)
+            .collect();
+        let labels: Vec<i32> =
+            (0..c * b).map(|k| ((k * 3) % 10) as i32).collect();
+        let lam = vec![0.25f32, 0.75];
+        let m = b / 2;
+        let half: Vec<f32> =
+            (0..b).map(|j| if j < m { 1.0 } else { 0.0 }).collect();
+        let full = vec![1.0f32; b];
+        let a = server_train(&cfg, cut, c, b, 2, &p[n..], &smashed,
+                             &labels, &lam, &half, 0.05);
+        let f = server_train(&cfg, cut, c, b, 2, &p[n..], &smashed,
+                             &labels, &lam, &full, 0.05);
+        for j in 0..m {
+            assert_eq!(
+                a.cut_agg[j * smash_len..(j + 1) * smash_len],
+                f.cut_agg[j * smash_len..(j + 1) * smash_len],
+                "aggregated row {j} diverged between φ=0.5 and φ=1.0"
+            );
+        }
+        // φ=1.0 has no unicast payload at all.
+        assert!(f.cut_unagg.iter().all(|&v| v == 0.0));
+        // masked slots of the half-mask unicast payload are zero.
+        for i in 0..c {
+            for j in 0..m {
+                let row = &a.cut_unagg
+                    [(i * b + j) * smash_len..(i * b + j + 1) * smash_len];
+                assert!(row.iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn phi_agg_semantics() {
+        let (c, b, q) = (2, 4, 3);
+        let z: Vec<f32> = (0..c * b * q).map(|i| i as f32).collect();
+        let lam = [0.5f32, 0.5];
+        let mask = [1.0f32, 1.0, 0.0, 0.0];
+        let out = phi_agg(c, b, q, &z, &lam, &mask);
+        for i in 0..c {
+            for j in 0..b {
+                for x in 0..q {
+                    let idx = (i * b + j) * q + x;
+                    let expect = if mask[j] > 0.0 {
+                        0.5 * z[(j) * q + x] + 0.5 * z[(b + j) * q + x]
+                    } else {
+                        z[idx]
+                    };
+                    assert_eq!(out[idx], expect);
+                }
+            }
+        }
+    }
+}

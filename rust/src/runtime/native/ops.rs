@@ -1,0 +1,338 @@
+//! Host f32 NN primitives for the native backend: NHWC conv2d (SAME
+//! padding, HWIO weights), global-average-pool + FC head, and the stable
+//! softmax cross-entropy — forward and backward, mirroring the JAX graphs
+//! in `python/compile/model.py` operation for operation.
+//!
+//! All loops run in a fixed order over one sample, so every function is a
+//! pure deterministic map: the backend parallelizes *across* samples /
+//! clients (via `util::par`, order-preserving), never inside a reduction,
+//! which is what makes results bit-identical for any `EPSL_THREADS`.
+
+/// (height, width, channels) of one NHWC feature map.
+pub type Dims = (usize, usize, usize);
+
+/// SAME-padding low offset for one spatial axis (JAX convention:
+/// `pad_total = max((out-1)*stride + k - in, 0)`, low = total/2).
+fn pad_lo(input: usize, k: usize, stride: usize) -> isize {
+    let out = input.div_ceil(stride);
+    let total = ((out - 1) * stride + k).saturating_sub(input);
+    (total / 2) as isize
+}
+
+/// Output spatial size under SAME padding.
+pub fn out_size(input: usize, stride: usize) -> usize {
+    input.div_ceil(stride)
+}
+
+/// conv2d + bias, one sample. `x` is HWC `(h,w,cin)`, `w` is HWIO
+/// `(k,k,cin,cout)`, returns `(oh,ow,cout)`.
+pub fn conv2d(x: &[f32], xd: Dims, w: &[f32], k: usize, cout: usize,
+              bias: &[f32], stride: usize) -> Vec<f32> {
+    let (h, ww, cin) = xd;
+    let (oh, ow) = (out_size(h, stride), out_size(ww, stride));
+    let (py, px) = (pad_lo(h, k, stride), pad_lo(ww, k, stride));
+    let mut out = vec![0.0f32; oh * ow * cout];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let o = &mut out[(oy * ow + ox) * cout..][..cout];
+            o.copy_from_slice(bias);
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - py;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - px;
+                    if ix < 0 || ix >= ww as isize {
+                        continue;
+                    }
+                    let xrow =
+                        &x[((iy as usize) * ww + ix as usize) * cin..][..cin];
+                    let wbase = (ky * k + kx) * cin * cout;
+                    for (ci, &xv) in xrow.iter().enumerate() {
+                        let wrow = &w[wbase + ci * cout..][..cout];
+                        for (ov, &wv) in o.iter_mut().zip(wrow) {
+                            *ov += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// conv2d backward, one sample: given `gy` `(oh,ow,cout)` returns
+/// `(gw (k,k,cin,cout), gb (cout), gx (h,w,cin))`.
+pub fn conv2d_bwd(x: &[f32], xd: Dims, w: &[f32], k: usize, cout: usize,
+                  stride: usize, gy: &[f32])
+    -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (h, ww, cin) = xd;
+    let (oh, ow) = (out_size(h, stride), out_size(ww, stride));
+    let (py, px) = (pad_lo(h, k, stride), pad_lo(ww, k, stride));
+    let mut gw = vec![0.0f32; k * k * cin * cout];
+    let mut gb = vec![0.0f32; cout];
+    let mut gx = vec![0.0f32; h * ww * cin];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let gyr = &gy[(oy * ow + ox) * cout..][..cout];
+            for (b, &g) in gb.iter_mut().zip(gyr) {
+                *b += g;
+            }
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - py;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - px;
+                    if ix < 0 || ix >= ww as isize {
+                        continue;
+                    }
+                    let xi = ((iy as usize) * ww + ix as usize) * cin;
+                    let wbase = (ky * k + kx) * cin * cout;
+                    for ci in 0..cin {
+                        let xv = x[xi + ci];
+                        let wrow = &w[wbase + ci * cout..][..cout];
+                        let gwrow = &mut gw[wbase + ci * cout..][..cout];
+                        let mut acc = 0.0f32;
+                        for ((gwv, &wv), &g) in
+                            gwrow.iter_mut().zip(wrow).zip(gyr)
+                        {
+                            *gwv += xv * g;
+                            acc += wv * g;
+                        }
+                        gx[xi + ci] += acc;
+                    }
+                }
+            }
+        }
+    }
+    (gw, gb, gx)
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Gate a cotangent by a forward ReLU output (`relu'(0) = 0`, matching
+/// `jax.nn.relu`'s VJP).
+pub fn relu_bwd(cot: &mut [f32], fwd_out: &[f32]) {
+    for (g, &y) in cot.iter_mut().zip(fwd_out) {
+        if y <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Global average pool `(h,w,c) → (c)`, then FC `(c × nc)` + bias.
+/// Returns `(logits, pooled)` — `pooled` is the head's backward cache.
+pub fn gap_fc(x: &[f32], xd: Dims, fc_w: &[f32], fc_b: &[f32], nc: usize)
+    -> (Vec<f32>, Vec<f32>) {
+    let (h, w, c) = xd;
+    let hw = (h * w) as f32;
+    let mut pooled = vec![0.0f32; c];
+    for p in 0..h * w {
+        let row = &x[p * c..][..c];
+        for (s, &v) in pooled.iter_mut().zip(row) {
+            *s += v;
+        }
+    }
+    for s in pooled.iter_mut() {
+        *s /= hw;
+    }
+    let mut logits = fc_b.to_vec();
+    for (ci, &p) in pooled.iter().enumerate() {
+        let wrow = &fc_w[ci * nc..][..nc];
+        for (l, &wv) in logits.iter_mut().zip(wrow) {
+            *l += p * wv;
+        }
+    }
+    (logits, pooled)
+}
+
+/// Backward of [`gap_fc`]: `(g_fc_w, g_fc_b, g_x)`.
+pub fn gap_fc_bwd(pooled: &[f32], xd: Dims, fc_w: &[f32], nc: usize,
+                  dlogits: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (h, w, c) = xd;
+    let hw = (h * w) as f32;
+    let mut gw = vec![0.0f32; c * nc];
+    let mut dpooled = vec![0.0f32; c];
+    for ci in 0..c {
+        let wrow = &fc_w[ci * nc..][..nc];
+        let gwrow = &mut gw[ci * nc..][..nc];
+        let mut acc = 0.0f32;
+        for ((gwv, &wv), &g) in gwrow.iter_mut().zip(wrow).zip(dlogits) {
+            *gwv += pooled[ci] * g;
+            acc += wv * g;
+        }
+        dpooled[ci] = acc / hw;
+    }
+    let mut gx = vec![0.0f32; h * w * c];
+    for p in 0..h * w {
+        gx[p * c..][..c].copy_from_slice(&dpooled);
+    }
+    (gw, dlogits.to_vec(), gx)
+}
+
+/// Stable softmax cross-entropy for one sample:
+/// `(ce, dlogits = softmax − onehot, correct)`. Argmax ties resolve to the
+/// first maximum (`jnp.argmax` convention).
+pub fn softmax_xent(logits: &[f32], label: i32) -> (f32, Vec<f32>, bool) {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut d: Vec<f32> = logits.iter().map(|&l| (l - m).exp()).collect();
+    let sum: f32 = d.iter().sum();
+    let logsum = sum.ln();
+    let y = label as usize;
+    let ce = -(logits[y] - m - logsum);
+    let mut argmax = 0;
+    for (i, &l) in logits.iter().enumerate() {
+        if l > logits[argmax] {
+            argmax = i;
+        }
+    }
+    for v in d.iter_mut() {
+        *v /= sum;
+    }
+    d[y] -= 1.0;
+    (ce, d, argmax == y)
+}
+
+/// `a += b` elementwise.
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// `a += s * b` elementwise.
+pub fn axpy(a: &mut [f32], s: f32, b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += s * y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_shapes() {
+        assert_eq!(out_size(16, 1), 16);
+        assert_eq!(out_size(16, 2), 8);
+        assert_eq!(pad_lo(16, 3, 1), 1);
+        assert_eq!(pad_lo(16, 3, 2), 0); // total 1 → low 0, high 1
+        assert_eq!(pad_lo(16, 1, 2), 0); // 1x1 stride-2 needs no padding
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weights reproduces the input.
+        let x: Vec<f32> = (0..2 * 2 * 3).map(|i| i as f32).collect();
+        let mut w = vec![0.0f32; 3 * 3]; // (1,1,3,3) HWIO
+        for c in 0..3 {
+            w[c * 3 + c] = 1.0;
+        }
+        let y = conv2d(&x, (2, 2, 3), &w, 1, 3, &[0.0; 3], 1);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn conv_bwd_matches_finite_difference() {
+        let xd = (4, 4, 2);
+        let (k, cout, stride) = (3, 3, 2);
+        let x: Vec<f32> = (0..4 * 4 * 2)
+            .map(|i| ((i * 37 % 11) as f32 - 5.0) / 7.0)
+            .collect();
+        let w: Vec<f32> = (0..k * k * 2 * cout)
+            .map(|i| ((i * 13 % 17) as f32 - 8.0) / 23.0)
+            .collect();
+        let b = vec![0.05f32, -0.1, 0.2];
+        let gy: Vec<f32> = (0..2 * 2 * cout)
+            .map(|i| ((i * 7 % 5) as f32 - 2.0) / 3.0)
+            .collect();
+        let loss = |x: &[f32], w: &[f32], b: &[f32]| -> f64 {
+            conv2d(x, xd, w, k, cout, b, stride)
+                .iter()
+                .zip(&gy)
+                .map(|(&y, &g)| (y * g) as f64)
+                .sum()
+        };
+        let (gw, gb, gx) = conv2d_bwd(&x, xd, &w, k, cout, stride, &gy);
+        let eps = 1e-3;
+        // spot-check a few coordinates of each gradient
+        for i in [0usize, 5, 17, 31] {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let num = (loss(&xp, &w, &b) - loss(&x, &w, &b)) / eps as f64;
+            assert!(
+                (num - gx[i] as f64).abs() < 1e-2,
+                "gx[{i}]: num {num} vs {}",
+                gx[i]
+            );
+        }
+        for i in [0usize, 10, 25] {
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let num = (loss(&x, &wp, &b) - loss(&x, &w, &b)) / eps as f64;
+            assert!(
+                (num - gw[i] as f64).abs() < 1e-2,
+                "gw[{i}]: num {num} vs {}",
+                gw[i]
+            );
+        }
+        let mut bp = b.clone();
+        bp[1] += eps;
+        let num = (loss(&x, &w, &bp) - loss(&x, &w, &b)) / eps as f64;
+        assert!((num - gb[1] as f64).abs() < 1e-2);
+    }
+
+    #[test]
+    fn softmax_xent_gradient_sums_to_zero() {
+        let (ce, d, correct) = softmax_xent(&[1.0, 3.0, -2.0, 0.5], 1);
+        assert!(ce > 0.0);
+        assert!(correct);
+        assert!(d.iter().sum::<f32>().abs() < 1e-6);
+        assert!(d[1] < 0.0, "true-class gradient must be negative");
+        let (_, _, c2) = softmax_xent(&[5.0, 1.0], 1);
+        assert!(!c2);
+    }
+
+    #[test]
+    fn gap_fc_bwd_matches_finite_difference() {
+        let xd = (2, 2, 3);
+        let nc = 4;
+        let x: Vec<f32> =
+            (0..12).map(|i| (i as f32 - 6.0) / 5.0).collect();
+        let w: Vec<f32> =
+            (0..12).map(|i| ((i * 5 % 7) as f32 - 3.0) / 4.0).collect();
+        let b = vec![0.1f32; nc];
+        let dlog = vec![0.3f32, -0.2, 0.5, -0.6];
+        let loss = |x: &[f32], w: &[f32]| -> f64 {
+            let (l, _) = gap_fc(x, xd, w, &b, nc);
+            l.iter().zip(&dlog).map(|(&y, &g)| (y * g) as f64).sum()
+        };
+        let (logits, pooled) = gap_fc(&x, xd, &w, &b, nc);
+        assert_eq!(logits.len(), nc);
+        let (gw, gb, gx) = gap_fc_bwd(&pooled, xd, &w, nc, &dlog);
+        assert_eq!(gb, dlog);
+        let eps = 1e-3;
+        for i in [0usize, 7, 11] {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let num = (loss(&xp, &w) - loss(&x, &w)) / eps as f64;
+            assert!((num - gx[i] as f64).abs() < 1e-2, "gx[{i}]");
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let num = (loss(&x, &wp) - loss(&x, &w)) / eps as f64;
+            assert!((num - gw[i] as f64).abs() < 1e-2, "gw[{i}]");
+        }
+    }
+}

@@ -156,6 +156,56 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Write every result as the PERF.md perf-trajectory JSON record
+    /// (`[{"name", "ns_per_iter", "p50_ns", "samples"}, ...]`) when the
+    /// `BENCH_JSON` environment variable names a path. The single home
+    /// for the record format — every bench binary calls this, and records
+    /// already in the file are **merged by name** (same-name entries
+    /// replaced, others kept), so `BENCH_JSON=x cargo bench` accumulates
+    /// across bench binaries instead of each clobbering the last.
+    pub fn write_bench_json_if_requested(&self) {
+        let Ok(path) = std::env::var("BENCH_JSON") else {
+            return;
+        };
+        use super::json::Json;
+        use std::collections::BTreeMap;
+        // Existing records (if the file parses as the expected array),
+        // keyed by name and kept in insertion order.
+        let mut order: Vec<String> = Vec::new();
+        let mut by_name: BTreeMap<String, Json> = BTreeMap::new();
+        if let Ok(prev) = std::fs::read_to_string(&path) {
+            if let Ok(doc) = Json::parse(&prev) {
+                if let Some(arr) = doc.as_arr() {
+                    for rec in arr {
+                        if let Some(name) =
+                            rec.get("name").and_then(Json::as_str)
+                        {
+                            order.push(name.to_string());
+                            by_name.insert(name.to_string(), rec.clone());
+                        }
+                    }
+                }
+            }
+        }
+        for r in &self.results {
+            let mut obj = BTreeMap::new();
+            obj.insert("name".to_string(), Json::Str(r.name.clone()));
+            obj.insert("ns_per_iter".to_string(), Json::Num(r.summary.mean));
+            obj.insert("p50_ns".to_string(), Json::Num(r.summary.p50));
+            obj.insert("samples".to_string(), Json::Num(r.samples as f64));
+            if by_name.insert(r.name.clone(), Json::Obj(obj)).is_none() {
+                order.push(r.name.clone());
+            }
+        }
+        let records: Vec<Json> = order
+            .iter()
+            .filter_map(|name| by_name.get(name).cloned())
+            .collect();
+        std::fs::write(&path, Json::Arr(records).to_string_pretty())
+            .expect("write BENCH_JSON");
+        println!("wrote {path} ({} records)", records.len());
+    }
 }
 
 #[cfg(test)]

@@ -33,12 +33,16 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile via linear interpolation on the sorted copy. `q` in [0,100].
+///
+/// NaN entries are dropped before sorting: metrics series legitimately
+/// carry NaN sentinels (`test_acc` on non-eval rounds), and the previous
+/// `partial_cmp(..).unwrap()` comparator panicked on them.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+    let mut s: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if s.is_empty() {
         return 0.0;
     }
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let rank = (q / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -50,8 +54,14 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
-/// Full summary in one pass over a copy.
+/// Full summary in one pass over a copy. NaN sentinels are excluded from
+/// every statistic (`n` reports the finite count), so summarizing a
+/// metrics column that interleaves NaN (e.g. `test_acc` on non-eval
+/// rounds) yields the summary of the evaluated points.
 pub fn summarize(xs: &[f64]) -> Summary {
+    let finite: Vec<f64> =
+        xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    let xs = &finite[..];
     let n = xs.len();
     if n == 0 {
         return Summary {
@@ -144,6 +154,30 @@ mod tests {
         let s = summarize(&[]);
         assert_eq!(s.n, 0);
         assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_ignores_nan_sentinels() {
+        // Pre-fix this panicked in partial_cmp(..).unwrap(); a metrics
+        // accuracy column looks exactly like this (NaN on non-eval rounds).
+        let xs = [f64::NAN, 1.0, f64::NAN, 2.0, 3.0, 4.0, f64::NAN];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        // All-NaN behaves like empty.
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 50.0), 0.0);
+    }
+
+    #[test]
+    fn summarize_curve_with_nan_sentinels() {
+        let curve = [0.1, f64::NAN, 0.3, f64::NAN, 0.5];
+        let s = summarize(&curve);
+        assert_eq!(s.n, 3, "NaN rounds must not count");
+        assert!((s.mean - 0.3).abs() < 1e-12);
+        assert_eq!(s.min, 0.1);
+        assert_eq!(s.max, 0.5);
+        assert!((s.p50 - 0.3).abs() < 1e-12);
+        assert!(s.std.is_finite());
     }
 
     #[test]
