@@ -1,20 +1,150 @@
-//! Runtime benches: per-entry execution cost and the full EPSL round —
-//! the measured counterpart of the §V latency model and the focus of the
-//! §Perf pass.
+//! Runtime benches: per-entry execution cost, the full EPSL round, and —
+//! since PR 4 — **reference-vs-fast kernel pairs** for the native
+//! backend's im2col + blocked-GEMM compute core.
 //!
-//! Runs on whatever backend `auto` selects: PJRT when `make artifacts`
-//! has been run (the L1/L2 measurement), the pure-Rust native backend
-//! otherwise — so the training hot path has perf coverage on every
-//! checkout (PERF.md §4 records the native per-round wall numbers).
+//! Runs on whatever backend `auto` selects for the entry-point section
+//! (PJRT when `make artifacts` has been run, the pure-Rust native
+//! backend otherwise); the kernel A/B section always measures the native
+//! model paths directly. Before timing, the fast outputs are verified
+//! **bitwise** against the retained naive reference and for finiteness —
+//! the bench binary exits non-zero on any mismatch, which is what the CI
+//! smoke run (`cargo bench --bench bench_runtime -- --test`) enforces.
+//!
+//! `BENCH_JSON=BENCH_4.json cargo bench --bench bench_runtime` records
+//! the perf trajectory; the acceptance row for PR 4 is the
+//! `server_train cut2 C=4` pair (target ≥5× reference/fast).
 
 use epsl::config::Config;
 use epsl::coordinator::{train, TrainerOptions};
+use epsl::profile::splitnet::SplitNetConfig;
+use epsl::runtime::native::kernels::ScratchPool;
+use epsl::runtime::native::model;
 use epsl::runtime::tensor::{literal_f32, literal_i32, literal_u32};
 use epsl::runtime::{select_backend, Backend, BackendChoice};
-use epsl::util::bench::Bencher;
+use epsl::util::bench::{format_ns, Bencher};
+use epsl::util::par;
 use epsl::util::rng::Rng;
 
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_finite(name: &str, v: &[f32]) {
+    assert!(
+        v.iter().all(|x| x.is_finite()),
+        "{name}: non-finite output from the fast kernels"
+    );
+}
+
+/// Reference-vs-GEMM pairs on the native model paths (the PR 4
+/// acceptance measurement), preceded by a bitwise verification pass.
+fn kernel_pairs(bench: &mut Bencher) {
+    let cfg = SplitNetConfig::mnist_like();
+    let pool = ScratchPool::new();
+    let threads = par::max_threads();
+    let (cut, c, b) = (2usize, 4usize, 32usize);
+    let n_c = model::client_param_count(cut);
+    let params = model::init_params(&cfg, 1);
+    let in_len = cfg.img * cfg.img * cfg.channels;
+    let (sh, sw, sc) = cfg.smashed_shape(cut);
+    let smash_len = sh * sw * sc;
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..b * in_len)
+        .map(|_| rng.normal(0.0, 1.0) as f32)
+        .collect();
+    let smashed: Vec<f32> = (0..c * b * smash_len)
+        .map(|_| rng.normal(0.0, 1.0) as f32)
+        .collect();
+    let labels: Vec<i32> =
+        (0..c * b).map(|i| (i % 10) as i32).collect();
+    let lam = vec![1.0 / c as f32; c];
+    let mask: Vec<f32> = (0..b)
+        .map(|j| if j < b / 2 { 1.0 } else { 0.0 })
+        .collect();
+
+    // --- verification: fast ≡ reference, bitwise, before timing ---
+    let f_smash =
+        model::client_fwd(&cfg, cut, &params[..n_c], &x, b, &pool);
+    let r_smash =
+        model::client_fwd_reference(&cfg, cut, &params[..n_c], &x, b);
+    assert_eq!(bits(&r_smash), bits(&f_smash),
+               "client_fwd fast != reference");
+    assert_finite("client_fwd", &f_smash);
+    let f = model::server_train(&cfg, cut, c, b, threads, &params[n_c..],
+                                &smashed, &labels, &lam, &mask, 0.05,
+                                &pool)
+        .expect("valid labels");
+    let r = model::server_train_reference(&cfg, cut, c, b, threads,
+                                          &params[n_c..], &smashed,
+                                          &labels, &lam, &mask, 0.05);
+    assert_eq!(f.loss.to_bits(), r.loss.to_bits(),
+               "server_train loss fast != reference");
+    assert_eq!(bits(&f.cut_agg), bits(&r.cut_agg),
+               "server_train cut_agg fast != reference");
+    assert_eq!(bits(&f.cut_unagg), bits(&r.cut_unagg),
+               "server_train cut_unagg fast != reference");
+    for (t, (fp, rp)) in f.new_params.iter().zip(&r.new_params).enumerate()
+    {
+        assert_eq!(bits(fp), bits(rp),
+                   "server_train new_params[{t}] fast != reference");
+        assert_finite("server_train new_params", fp);
+    }
+    assert_finite("server_train cut_agg", &f.cut_agg);
+    assert_finite("server_train cut_unagg", &f.cut_unagg);
+    println!("kernel verification: fast == reference (bitwise), finite\n");
+
+    // --- timed pairs ---
+    bench.run("client_fwd cut2 b=32 reference (naive)", || {
+        model::client_fwd_reference(&cfg, cut, &params[..n_c], &x, b)
+    });
+    bench.run("client_fwd cut2 b=32 fast (im2col+GEMM)", || {
+        model::client_fwd(&cfg, cut, &params[..n_c], &x, b, &pool)
+    });
+    bench.run("server_train cut2 C=4 reference (naive)", || {
+        model::server_train_reference(&cfg, cut, c, b, threads,
+                                      &params[n_c..], &smashed, &labels,
+                                      &lam, &mask, 0.05)
+    });
+    bench.run("server_train cut2 C=4 fast (im2col+GEMM)", || {
+        model::server_train(&cfg, cut, c, b, threads, &params[n_c..],
+                            &smashed, &labels, &lam, &mask, 0.05, &pool)
+            .unwrap()
+    });
+    let ex: Vec<f32> = (0..256 * in_len)
+        .map(|_| rng.normal(0.0, 1.0) as f32)
+        .collect();
+    let ey: Vec<i32> = (0..256).map(|i| (i % 10) as i32).collect();
+    bench.run("eval n=256 reference (naive)", || {
+        model::eval_reference(&cfg, &params, &ex, &ey, threads)
+    });
+    bench.run("eval n=256 fast (im2col+GEMM)", || {
+        model::eval(&cfg, &params, &ex, &ey, threads, &pool).unwrap()
+    });
+}
+
+/// Print `reference / fast` ratios for every adjacent pair.
+fn speedup_table(bench: &Bencher) {
+    println!("\nspeedups (reference / fast):");
+    let rs = bench.results();
+    for pair in rs.windows(2) {
+        let (a, b) = (&pair[0], &pair[1]);
+        if let (Some(stem), true) = (
+            a.name.strip_suffix(" reference (naive)"),
+            b.name.ends_with(" fast (im2col+GEMM)"),
+        ) {
+            println!(
+                "  {:<32} {:>10} -> {:>10}  {:5.1}x",
+                stem,
+                format_ns(a.ns_per_iter()),
+                format_ns(b.ns_per_iter()),
+                a.ns_per_iter() / b.ns_per_iter()
+            );
+        }
+    }
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
     let sel = select_backend("artifacts", BackendChoice::Auto)
         .expect("backend selection");
     let (rt, manifest) = (sel.backend.as_ref(), &sel.manifest);
@@ -37,7 +167,11 @@ fn main() {
     let smash = &fam.smashed_shape[&cut];
     let smash_len: usize = smash.iter().product();
 
-    let mut bench = Bencher::slow();
+    let mut bench = if smoke { Bencher::smoke() } else { Bencher::slow() };
+
+    // Reference-vs-fast kernel pairs (native model level) — also the
+    // bitwise verification gate the CI smoke run relies on.
+    kernel_pairs(&mut bench);
 
     let cf = fam.client_fwd.get(&cut).unwrap();
     let mut inputs = client_p.clone();
@@ -111,7 +245,8 @@ fn main() {
     });
 
     println!("\n{}", bench.report());
+    speedup_table(&bench);
     println!("{}", rt.stats_summary());
-    // Optional perf-trajectory record (see PERF.md §5).
+    // Optional perf-trajectory record (see PERF.md §6).
     bench.write_bench_json_if_requested();
 }

@@ -150,6 +150,49 @@ impl FamilyManifest {
     pub fn param_elements(&self) -> usize {
         self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
     }
+
+    /// Reject degenerate shapes before they reach the kernels. The
+    /// splitnet stages halve the spatial dims twice, so `img < 4`
+    /// produces zero-sized feature maps whose SAME-padding arithmetic
+    /// (`(out − 1) · stride`) would underflow; zero channels / classes /
+    /// batch are equally meaningless. A corrupt or hand-edited
+    /// manifest.json surfaces here as `Error::Artifact` instead of a
+    /// debug-overflow panic (or garbage in release) mid-round.
+    fn validate(&self) -> Result<()> {
+        let bad = |what: &str, got: usize, min: usize| {
+            Err(Error::Artifact(format!(
+                "family '{}': {what} = {got} is below the minimum {min} \
+                 — degenerate shapes would underflow the SAME-padding \
+                 arithmetic in the conv kernels",
+                self.name
+            )))
+        };
+        if self.img < 4 {
+            return bad("img", self.img, 4);
+        }
+        if self.channels == 0 {
+            return bad("channels", 0, 1);
+        }
+        if self.num_classes == 0 {
+            return bad("num_classes", 0, 1);
+        }
+        if self.batch == 0 {
+            return bad("batch", 0, 1);
+        }
+        if self.eval_batch == 0 {
+            return bad("eval_batch", 0, 1);
+        }
+        for (cut, shape) in &self.smashed_shape {
+            if shape.iter().any(|&d| d == 0) {
+                return Err(Error::Artifact(format!(
+                    "family '{}': smashed_shape[{cut}] = {shape:?} has a \
+                     zero dim",
+                    self.name
+                )));
+            }
+        }
+        Ok(())
+    }
 }
 
 /// The whole manifest.
@@ -271,32 +314,31 @@ impl Manifest {
                 }
                 server_train.insert(cut, inner);
             }
-            families.insert(
-                name.clone(),
-                FamilyManifest {
-                    name: name.clone(),
-                    channels: fj.req("channels")?.as_usize().unwrap_or(1),
-                    num_classes: fj
-                        .req("num_classes")?
-                        .as_usize()
-                        .unwrap_or(10),
-                    img: fj.req("img")?.as_usize().unwrap_or(16),
-                    batch: fj.req("batch")?.as_usize().unwrap_or(32),
-                    eval_batch: fj
-                        .req("eval_batch")?
-                        .as_usize()
-                        .unwrap_or(256),
-                    params,
-                    client_param_count: cpc,
-                    smashed_shape: smashed,
-                    init: ArtifactEntry::parse(arts.req("init")?)?,
-                    eval: ArtifactEntry::parse(arts.req("eval")?)?,
-                    client_fwd: parse_cut_map(arts.req("client_fwd")?)?,
-                    client_step: parse_cut_map(arts.req("client_step")?)?,
-                    phi_agg: parse_cut_map(arts.req("phi_agg")?)?,
-                    server_train,
-                },
-            );
+            let fam = FamilyManifest {
+                name: name.clone(),
+                channels: fj.req("channels")?.as_usize().unwrap_or(1),
+                num_classes: fj
+                    .req("num_classes")?
+                    .as_usize()
+                    .unwrap_or(10),
+                img: fj.req("img")?.as_usize().unwrap_or(16),
+                batch: fj.req("batch")?.as_usize().unwrap_or(32),
+                eval_batch: fj
+                    .req("eval_batch")?
+                    .as_usize()
+                    .unwrap_or(256),
+                params,
+                client_param_count: cpc,
+                smashed_shape: smashed,
+                init: ArtifactEntry::parse(arts.req("init")?)?,
+                eval: ArtifactEntry::parse(arts.req("eval")?)?,
+                client_fwd: parse_cut_map(arts.req("client_fwd")?)?,
+                client_step: parse_cut_map(arts.req("client_step")?)?,
+                phi_agg: parse_cut_map(arts.req("phi_agg")?)?,
+                server_train,
+            };
+            fam.validate()?;
+            families.insert(name.clone(), fam);
         }
         Ok(Manifest { client_counts, cuts, families })
     }
@@ -372,6 +414,24 @@ mod tests {
         assert!(fam.server_train_entry(2, 5).is_ok());
         assert!(fam.server_train_entry(2, 3).is_err());
         assert!(m.family("nope").is_err());
+    }
+
+    #[test]
+    fn degenerate_shapes_rejected_at_parse_time() {
+        // img below the two spatial halvings → Error::Artifact, not a
+        // later conv-kernel underflow.
+        let bad_img = SAMPLE.replace(r#""img": 16"#, r#""img": 3"#);
+        let e = Manifest::parse(&bad_img).unwrap_err();
+        assert!(e.to_string().contains("img"), "{e}");
+        let bad_ch =
+            SAMPLE.replace(r#""channels": 1"#, r#""channels": 0"#);
+        let e = Manifest::parse(&bad_ch).unwrap_err();
+        assert!(e.to_string().contains("channels"), "{e}");
+        let bad_smash = SAMPLE
+            .replace(r#""smashed_shape": {"2": [16,16,8]}"#,
+                     r#""smashed_shape": {"2": [16,0,8]}"#);
+        let e = Manifest::parse(&bad_smash).unwrap_err();
+        assert!(e.to_string().contains("smashed_shape"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,455 @@
+//! im2col + cache-blocked f32 GEMM kernels for the native backend, plus
+//! the reusable [`Scratch`] arena that eliminates per-sample allocation
+//! churn in the training hot path.
+//!
+//! ## Bit-identity contract
+//!
+//! Every kernel here reproduces the *exact* floating-point summation
+//! order of the naive reference ops in [`super::ops`], so the fast path
+//! is bitwise equal to the reference per sample (property-tested in
+//! `tests/property_kernels.rs`):
+//!
+//! - [`gemm_bias`] initializes each output element from the bias and
+//!   accumulates `a[m][t] * b[t][n]` with `t` strictly ascending — the
+//!   same `bias; += x·w` order as `ops::conv2d` when the im2col patch is
+//!   laid out `(ky, kx, ci)` (the HWIO tap order).
+//! - [`gemm_at_b_acc`] accumulates `gw[t][n] += patch[r][t] * gy[r][n]`
+//!   with `r` (output position) strictly ascending, matching the
+//!   `oy, ox` loop of `ops::conv2d_bwd`.
+//! - [`gemm_b_bt`] computes each `dpatch[r][t]` as a sequential dot over
+//!   `cout` — the reference's scalar `acc += wv * g` loop.
+//! - [`col2im_acc`] scatters `dpatch` into `gx` in `(row, tap)` order and
+//!   *skips* out-of-bounds taps, exactly like the reference's bounds
+//!   `continue`s.
+//!
+//! Padding taps are materialized as `0.0` in the patch buffer; the
+//! reference skips them instead. `acc + 0.0·w` is bitwise `acc` for every
+//! value reachable from the model's init/update rules (biases are never
+//! `-0.0`), and a `gw` row of a padding tap sums `±0.0` terms from a
+//! `+0.0` start, which is `+0.0` — the reference's untouched zero.
+//! **Contract limit:** this argument assumes finite weights. If training
+//! diverges to `±inf`/NaN, `0.0 · inf = NaN` makes the fast path go NaN
+//! one step before the tap-skipping reference would — both paths are
+//! garbage at that point, but no longer the *same* garbage.
+//!
+//! Blocking: the microkernel tiles M×N into `MR`×`NR` register tiles and
+//! runs the full K loop per tile, so each output element owns one
+//! accumulator for its entire reduction — blocking never reassociates the
+//! sum. There is deliberately no FMA contraction (separate mul/add, like
+//! the reference); the speedup comes from register/L1 reuse, not from
+//! changing the arithmetic.
+
+use std::sync::Mutex;
+
+use super::ops::{out_size, pad_lo, Dims};
+
+/// Number of im2col columns for a `k`×`k` conv over `cin` channels.
+pub fn patch_cols(k: usize, cin: usize) -> usize {
+    k * k * cin
+}
+
+/// Lower one sample's HWC input into an im2col patch matrix:
+/// `patch[(oy·ow + ox) · K + (ky·k + kx)·cin + ci] = x[iy, ix, ci]`
+/// (or `0.0` when the tap is out of bounds). `patch` must hold
+/// `oh·ow·k·k·cin` elements.
+pub fn im2col(x: &[f32], xd: Dims, k: usize, stride: usize,
+              patch: &mut [f32]) {
+    let (h, w, cin) = xd;
+    let (oh, ow) = (out_size(h, stride), out_size(w, stride));
+    let (py, px) = (pad_lo(h, k, stride), pad_lo(w, k, stride));
+    let kc = patch_cols(k, cin);
+    debug_assert_eq!(patch.len(), oh * ow * kc);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = &mut patch[(oy * ow + ox) * kc..][..kc];
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - py;
+                let dst = &mut row[ky * k * cin..][..k * cin];
+                if iy < 0 || iy >= h as isize {
+                    dst.fill(0.0);
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - px;
+                    let cell = &mut dst[kx * cin..][..cin];
+                    if ix < 0 || ix >= w as isize {
+                        cell.fill(0.0);
+                    } else {
+                        let src = ((iy as usize) * w + ix as usize) * cin;
+                        cell.copy_from_slice(&x[src..][..cin]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Register-tile rows (M) and columns (N) of the microkernel. `NR` covers
+/// a full SIMD-friendly span of `cout`; both divide nothing — edge tiles
+/// are handled by the same code with shorter bounds.
+const MR: usize = 4;
+const NR: usize = 16;
+
+/// `out[m][n] = bias[n] + Σ_t a[m][t]·b[t][n]`, `t` ascending per output
+/// element. `a` is M×K row-major, `b` is K×N row-major (an HWIO conv
+/// weight reshaped to `(k·k·cin, cout)` is already in this layout), `out`
+/// is M×N row-major and fully overwritten.
+pub fn gemm_bias(m: usize, kdim: usize, n: usize, a: &[f32], b: &[f32],
+                 bias: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * kdim);
+    debug_assert_eq!(b.len(), kdim * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    let mut acc = [[0.0f32; NR]; MR];
+    let mut i0 = 0;
+    while i0 < m {
+        let mr = MR.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            // init tile from bias
+            for row in acc.iter_mut().take(mr) {
+                row[..nr].copy_from_slice(&bias[j0..j0 + nr]);
+            }
+            // full-K accumulation: one accumulator per element, t ascending
+            for t in 0..kdim {
+                let brow = &b[t * n + j0..][..nr];
+                for (i, row) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(i0 + i) * kdim + t];
+                    for (c, &bv) in row[..nr].iter_mut().zip(brow) {
+                        *c += av * bv;
+                    }
+                }
+            }
+            for (i, row) in acc.iter().enumerate().take(mr) {
+                out[(i0 + i) * n + j0..][..nr].copy_from_slice(&row[..nr]);
+            }
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+/// `gw[t][n] += Σ_r patch[r][t]·gy[r][n]`, `r` ascending per output
+/// element — the weight-gradient GEMM (`patchᵀ · gy`). `gw` accumulates
+/// in place (callers zero it per sample, matching the reference's fresh
+/// buffer).
+pub fn gemm_at_b_acc(rows: usize, kdim: usize, n: usize, patch: &[f32],
+                     gy: &[f32], gw: &mut [f32]) {
+    debug_assert_eq!(patch.len(), rows * kdim);
+    debug_assert_eq!(gy.len(), rows * n);
+    debug_assert_eq!(gw.len(), kdim * n);
+    // Tile over the (t, n) output; full row loop per tile keeps each
+    // element's reduction sequential in r.
+    let mut t0 = 0;
+    while t0 < kdim {
+        let tr = MR.min(kdim - t0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            let mut acc = [[0.0f32; NR]; MR];
+            for (ti, row) in acc.iter_mut().enumerate().take(tr) {
+                row[..nr]
+                    .copy_from_slice(&gw[(t0 + ti) * n + j0..][..nr]);
+            }
+            for r in 0..rows {
+                let gyr = &gy[r * n + j0..][..nr];
+                for (ti, row) in acc.iter_mut().enumerate().take(tr) {
+                    let pv = patch[r * kdim + t0 + ti];
+                    for (c, &g) in row[..nr].iter_mut().zip(gyr) {
+                        *c += pv * g;
+                    }
+                }
+            }
+            for (ti, row) in acc.iter().enumerate().take(tr) {
+                gw[(t0 + ti) * n + j0..][..nr]
+                    .copy_from_slice(&row[..nr]);
+            }
+            j0 += NR;
+        }
+        t0 += MR;
+    }
+}
+
+/// `dpatch[r][t] = Σ_c gy[r][c]·w[t][c]`, `c` ascending sequentially per
+/// element (`gy · wᵀ` with both operands row-major) — the input-gradient
+/// cols. Matches the reference's scalar `acc += wv · g` dot.
+pub fn gemm_b_bt(rows: usize, kdim: usize, n: usize, gy: &[f32],
+                 w: &[f32], dpatch: &mut [f32]) {
+    debug_assert_eq!(gy.len(), rows * n);
+    debug_assert_eq!(w.len(), kdim * n);
+    debug_assert_eq!(dpatch.len(), rows * kdim);
+    for r in 0..rows {
+        let gyr = &gy[r * n..][..n];
+        let drow = &mut dpatch[r * kdim..][..kdim];
+        for (t, d) in drow.iter_mut().enumerate() {
+            let wrow = &w[t * n..][..n];
+            let mut acc = 0.0f32;
+            for (&wv, &g) in wrow.iter().zip(gyr) {
+                acc += wv * g;
+            }
+            *d = acc;
+        }
+    }
+}
+
+/// Scatter-accumulate `dpatch` (rows × k·k·cin) back into `gx` (h·w·cin),
+/// skipping out-of-bounds taps — `(row, tap)` ascending, the reference's
+/// `oy, ox, ky, kx` order. `gx` accumulates in place.
+pub fn col2im_acc(dpatch: &[f32], xd: Dims, k: usize, stride: usize,
+                  gx: &mut [f32]) {
+    let (h, w, cin) = xd;
+    let (oh, ow) = (out_size(h, stride), out_size(w, stride));
+    let (py, px) = (pad_lo(h, k, stride), pad_lo(w, k, stride));
+    let kc = patch_cols(k, cin);
+    debug_assert_eq!(dpatch.len(), oh * ow * kc);
+    debug_assert_eq!(gx.len(), h * w * cin);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = &dpatch[(oy * ow + ox) * kc..][..kc];
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - py;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - px;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let dst = ((iy as usize) * w + ix as usize) * cin;
+                    let src = &row[(ky * k + kx) * cin..][..cin];
+                    for (g, &d) in
+                        gx[dst..][..cin].iter_mut().zip(src)
+                    {
+                        *g += d;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fast conv2d for one sample via im2col + [`gemm_bias`], bit-identical
+/// to `ops::conv2d`. Writes into `out` (`oh·ow·cout`), using the pooled
+/// `patch` buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_fast(x: &[f32], xd: Dims, w: &[f32], k: usize, cout: usize,
+                   bias: &[f32], stride: usize, patch: &mut Buf,
+                   out: &mut [f32]) {
+    let (h, ww, cin) = xd;
+    let (oh, ow) = (out_size(h, stride), out_size(ww, stride));
+    let rows = oh * ow;
+    let kc = patch_cols(k, cin);
+    let patch = patch.get(rows * kc);
+    im2col(x, xd, k, stride, patch);
+    gemm_bias(rows, kc, cout, patch, w, bias, out);
+}
+
+/// Fast conv2d backward for one sample, bit-identical to
+/// `ops::conv2d_bwd`: `gw`/`gb` are freshly zeroed here (reference
+/// allocates fresh buffers), `gx` accumulates into a zeroed buffer.
+/// Returns nothing; results land in the provided slices.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bwd_fast(x: &[f32], xd: Dims, w: &[f32], k: usize,
+                       cout: usize, stride: usize, gy: &[f32],
+                       patch: &mut Buf, dpatch: &mut Buf, gw: &mut [f32],
+                       gb: &mut [f32], gx: &mut [f32]) {
+    let (h, ww, cin) = xd;
+    let (oh, ow) = (out_size(h, stride), out_size(ww, stride));
+    let rows = oh * ow;
+    let kc = patch_cols(k, cin);
+    gw.fill(0.0);
+    gb.fill(0.0);
+    gx.fill(0.0);
+    // gb: row sums, rows ascending (reference interleaves this with the
+    // tap loops but per-element order is identical).
+    for r in 0..rows {
+        for (b, &g) in gb.iter_mut().zip(&gy[r * cout..][..cout]) {
+            *b += g;
+        }
+    }
+    let patch = patch.get(rows * kc);
+    im2col(x, xd, k, stride, patch);
+    gemm_at_b_acc(rows, kc, cout, patch, gy, gw);
+    let dpatch = dpatch.get(rows * kc);
+    gemm_b_bt(rows, kc, cout, gy, w, dpatch);
+    col2im_acc(dpatch, xd, k, stride, gx);
+}
+
+/// One growable, reusable f32 buffer of the arena.
+#[derive(Default)]
+pub struct Buf(Vec<f32>);
+
+impl Buf {
+    /// Borrow `len` elements, growing (never shrinking) the backing
+    /// storage. Contents are unspecified — callers fully overwrite or
+    /// explicitly zero.
+    pub fn get(&mut self, len: usize) -> &mut [f32] {
+        if self.0.len() < len {
+            self.0.resize(len, 0.0);
+        }
+        &mut self.0[..len]
+    }
+}
+
+/// Per-worker scratch arena: every kernel buffer the fast paths need,
+/// allocated once and grown to the high-water mark, reused across
+/// samples and rounds (via [`ScratchPool`]). Distinct fields exist for
+/// buffers that must be live simultaneously (disjoint `&mut` borrows).
+#[derive(Default)]
+pub struct Scratch {
+    /// im2col patch matrix (forward and `gw` backward).
+    pub patch: Buf,
+    /// Backward cols (`gy · wᵀ`) before the col2im scatter.
+    pub dpatch: Buf,
+    /// Skip-branch output during batched forward.
+    pub skip: Buf,
+    /// Residual-block intermediate cotangent `ga` (backward).
+    pub ga: Buf,
+    /// Projection-branch input cotangent `gxp` (backward).
+    pub gproj: Buf,
+}
+
+/// A checkout/checkin pool of [`Scratch`] arenas shared by all workers of
+/// a backend. Pop order is irrelevant to results (arenas carry no state
+/// that reaches outputs), so the pool is determinism-neutral; what it
+/// buys is that once every worker's arena has hit its high-water mark,
+/// the kernels' *work* buffers (patches, cols, intermediate cotangents)
+/// are never allocated again — only the per-sample gradient tensors the
+/// callers return (and later reduce serially) remain owned allocations.
+#[derive(Default)]
+pub struct ScratchPool {
+    pool: Mutex<Vec<Scratch>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f` with a pooled arena (created on first use per concurrent
+    /// worker), returning the arena afterwards.
+    pub fn with<R>(&self, f: impl FnOnce(&mut Scratch) -> R) -> R {
+        let mut s = self
+            .pool
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
+            .unwrap_or_default();
+        let r = f(&mut s);
+        self.pool.lock().unwrap_or_else(|e| e.into_inner()).push(s);
+        r
+    }
+
+    /// Number of idle arenas (test/debug visibility).
+    pub fn idle(&self) -> usize {
+        self.pool.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ops;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn conv2d_fast_bit_identical_to_reference() {
+        let mut rng = Rng::new(71);
+        let mut patch = Buf::default();
+        for &(h, w, cin, cout, k, stride) in &[
+            (5usize, 7usize, 3usize, 16usize, 3usize, 1usize),
+            (9, 9, 8, 8, 3, 2),
+            (4, 4, 2, 32, 1, 2),
+            (1, 1, 1, 4, 3, 1),
+        ] {
+            let x = rand_vec(&mut rng, h * w * cin);
+            let wt = rand_vec(&mut rng, k * k * cin * cout);
+            let bias = rand_vec(&mut rng, cout);
+            let reference = ops::conv2d(&x, (h, w, cin), &wt, k, cout,
+                                        &bias, stride);
+            let mut fast = vec![0.0f32; reference.len()];
+            conv2d_fast(&x, (h, w, cin), &wt, k, cout, &bias, stride,
+                        &mut patch, &mut fast);
+            assert_eq!(
+                reference.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                fast.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "conv mismatch at h={h} w={w} cin={cin} cout={cout} \
+                 k={k} stride={stride}"
+            );
+        }
+    }
+
+    #[test]
+    fn conv2d_bwd_fast_bit_identical_to_reference() {
+        let mut rng = Rng::new(72);
+        let mut patch = Buf::default();
+        let mut dpatch = Buf::default();
+        for &(h, w, cin, cout, k, stride) in &[
+            (5usize, 7usize, 3usize, 16usize, 3usize, 1usize),
+            (9, 9, 8, 8, 3, 2),
+            (4, 4, 2, 32, 1, 2),
+        ] {
+            let x = rand_vec(&mut rng, h * w * cin);
+            let wt = rand_vec(&mut rng, k * k * cin * cout);
+            let (oh, ow) =
+                (out_size(h, stride), out_size(w, stride));
+            let gy = rand_vec(&mut rng, oh * ow * cout);
+            let (rgw, rgb, rgx) = ops::conv2d_bwd(&x, (h, w, cin), &wt, k,
+                                                  cout, stride, &gy);
+            let mut gw = vec![1.0f32; rgw.len()]; // nonzero: fill check
+            let mut gb = vec![1.0f32; rgb.len()];
+            let mut gx = vec![1.0f32; rgx.len()];
+            conv2d_bwd_fast(&x, (h, w, cin), &wt, k, cout, stride, &gy,
+                            &mut patch, &mut dpatch, &mut gw, &mut gb,
+                            &mut gx);
+            for (name, r, f) in
+                [("gw", &rgw, &gw), ("gb", &rgb, &gb), ("gx", &rgx, &gx)]
+            {
+                assert_eq!(
+                    r.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    f.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{name} mismatch at h={h} w={w} cin={cin} \
+                     cout={cout} k={k} stride={stride}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_edge_tiles_cover_all_shapes() {
+        // M, N not multiples of MR/NR; K = 1.
+        let mut rng = Rng::new(73);
+        let (m, k, n) = (7, 1, 5);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let bias = rand_vec(&mut rng, n);
+        let mut out = vec![0.0f32; m * n];
+        gemm_bias(m, k, n, &a, &b, &bias, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let want = bias[j] + a[i] * b[j];
+                assert_eq!(out[i * n + j].to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_pool_reuses_arenas() {
+        let pool = ScratchPool::new();
+        pool.with(|s| {
+            s.patch.get(1024);
+        });
+        assert_eq!(pool.idle(), 1);
+        pool.with(|s| {
+            // Arena returns with capacity intact.
+            assert!(s.patch.0.capacity() >= 1024);
+        });
+        assert_eq!(pool.idle(), 1);
+    }
+}

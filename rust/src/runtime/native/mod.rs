@@ -16,6 +16,7 @@
 //! `EPSL_THREADS`. Unlike the PJRT client the backend is `Send + Sync`,
 //! so the driver's `call_many` fans client FP/BP across cores.
 
+pub mod kernels;
 pub mod model;
 pub mod ops;
 
@@ -43,10 +44,14 @@ pub const MAX_CLIENTS: usize = 32;
 /// Client count baked into the standalone `phi_agg` entries.
 const PHI_AGG_CLIENTS: usize = 5;
 
-/// The native backend: stateless apart from perf counters.
+/// The native backend: stateless apart from perf counters and the
+/// reusable kernel scratch arenas.
 pub struct NativeBackend {
     threads: usize,
     stats: Mutex<RuntimeStats>,
+    /// Pooled [`kernels::Scratch`] arenas: im2col/GEMM buffers allocated
+    /// once per concurrent worker and reused across samples and rounds.
+    pool: kernels::ScratchPool,
 }
 
 impl Default for NativeBackend {
@@ -66,11 +71,17 @@ impl NativeBackend {
         NativeBackend {
             threads: threads.max(1),
             stats: Mutex::new(RuntimeStats::default()),
+            pool: kernels::ScratchPool::new(),
         }
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.lock().unwrap().clone()
+        // A panicked worker must not cascade into poison panics on
+        // unrelated stats reads — recover the guard.
+        self.stats
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
     }
 
     fn dispatch(&self, entry: &ArtifactEntry, inputs: &[Literal])
@@ -92,8 +103,8 @@ impl NativeBackend {
                 let n = model::client_param_count(cut);
                 let params = to_host(&inputs[..n])?;
                 let x = to_f32_vec(&inputs[n])?;
-                let smashed =
-                    model::client_fwd(&cfg, cut, &params, &x, BATCH);
+                let smashed = model::client_fwd(&cfg, cut, &params, &x,
+                                                BATCH, &self.pool);
                 Ok(vec![literal_f32(&entry.outputs[0].shape, &smashed)?])
             }
             OpKind::ClientStep { cut } => {
@@ -104,7 +115,7 @@ impl NativeBackend {
                 let lr = inputs[n + 2].get_first_element::<f32>()?;
                 let new =
                     model::client_step(&cfg, cut, &params, &x, &g_cut, lr,
-                                       BATCH);
+                                       BATCH, &self.pool);
                 entry
                     .outputs
                     .iter()
@@ -124,7 +135,7 @@ impl NativeBackend {
                 let out = model::server_train(&cfg, cut, c, BATCH,
                                               self.threads, &params,
                                               &smashed, &labels, &lam,
-                                              &mask, lr);
+                                              &mask, lr, &self.pool)?;
                 let mut lits: Vec<Literal> = entry.outputs[..n_sp]
                     .iter()
                     .zip(&out.new_params)
@@ -143,8 +154,9 @@ impl NativeBackend {
                 let params = to_host(&inputs[..np])?;
                 let x = to_f32_vec(&inputs[np])?;
                 let labels = inputs[np + 1].to_vec::<i32>()?;
-                let (loss, ncorr) =
-                    model::eval(&cfg, &params, &x, &labels, self.threads);
+                let (loss, ncorr) = model::eval(&cfg, &params, &x,
+                                                &labels, self.threads,
+                                                &self.pool)?;
                 Ok(vec![
                     literal_f32(&[], &[loss])?,
                     literal_f32(&[], &[ncorr])?,
@@ -173,7 +185,10 @@ impl Backend for NativeBackend {
         validate_inputs(entry, inputs)?;
         let t0 = Instant::now();
         let outs = self.dispatch(entry, inputs)?;
-        let mut stats = self.stats.lock().unwrap();
+        // into_inner on poison: one panicked worker must not turn every
+        // later stats update into a cascade of unrelated panics.
+        let mut stats =
+            self.stats.lock().unwrap_or_else(|e| e.into_inner());
         stats.executions += 1;
         stats.execute_seconds += t0.elapsed().as_secs_f64();
         Ok(outs)

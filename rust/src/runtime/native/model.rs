@@ -9,11 +9,31 @@
 //! cores with [`par::parallel_map`], whose output is ordered; every
 //! cross-sample reduction then runs serially in sample order, so results
 //! are bit-identical for any `EPSL_THREADS`.
+//!
+//! ## Fast path vs reference
+//!
+//! The public entry points (`client_fwd`, `server_train`, `eval`,
+//! `client_step`) run on the im2col + blocked-GEMM kernels of
+//! [`super::kernels`]: the forward pass is **batched** — one im2col +
+//! one GEMM per layer over the whole virtual batch `C·b` (the paper's
+//! server-side parallelism), with GEMM row-blocks fanned across cores —
+//! and the backward pass runs per sample on the same kernels with a
+//! pooled [`kernels::Scratch`] arena, eliminating the per-call
+//! `vec![0.0; ..]` churn of every kernel work buffer (im2col patches,
+//! backward cols, intermediate cotangents); only the gradient tensors a
+//! sample *returns* into the serial reduction are still owned
+//! allocations. Every kernel preserves the reference
+//! summation order, so the fast path is **bit-identical** to the
+//! retained `*_reference` implementations (property-tested in
+//! `tests/property_kernels.rs`) and all PR 3 determinism guarantees
+//! (seed-reproducible, `EPSL_THREADS`-invariant) carry over unchanged.
 
+use crate::error::Result;
 use crate::profile::splitnet::SplitNetConfig;
 use crate::util::par;
 use crate::util::rng::Rng;
 
+use super::kernels::{self, Buf, Scratch, ScratchPool};
 use super::ops::{self, Dims};
 
 /// Parameter tensors per stage (s1, s2, s3, s4) + head — the canonical
@@ -233,10 +253,11 @@ pub fn backward(cfg: &SplitNetConfig, params: &[Vec<f32>], first: usize,
     (grads, g)
 }
 
-/// Client-side FP (stages 1..cut) over a batch: `x (b,img,img,ch)` →
-/// smashed `(b,*smash)`.
-pub fn client_fwd(cfg: &SplitNetConfig, cut: usize, params: &[Vec<f32>],
-                  x: &[f32], b: usize) -> Vec<f32> {
+/// Reference client-side FP (stages 1..cut) over a batch — the retained
+/// naive per-sample oracle of [`client_fwd`].
+pub fn client_fwd_reference(cfg: &SplitNetConfig, cut: usize,
+                            params: &[Vec<f32>], x: &[f32], b: usize)
+    -> Vec<f32> {
     let in_len = cfg.img * cfg.img * cfg.channels;
     let (sh, sw, sc) = stage_out_dims(cfg, cut);
     let smash_len = sh * sw * sc;
@@ -249,10 +270,12 @@ pub fn client_fwd(cfg: &SplitNetConfig, cut: usize, params: &[Vec<f32>],
     out
 }
 
-/// Client-side BP + SGD (eq. 8–12): cotangent `g_cut/b` per row, then
-/// `w ← w − η_c · gw` with gradients accumulated in sample order.
-pub fn client_step(cfg: &SplitNetConfig, cut: usize, params: &[Vec<f32>],
-                   x: &[f32], g_cut: &[f32], lr: f32, b: usize)
+/// Reference client-side BP + SGD (eq. 8–12) — the retained naive
+/// per-sample oracle of [`client_step`]: cotangent `g_cut/b` per row,
+/// then `w ← w − η_c · gw` with gradients accumulated in sample order.
+pub fn client_step_reference(cfg: &SplitNetConfig, cut: usize,
+                             params: &[Vec<f32>], x: &[f32],
+                             g_cut: &[f32], lr: f32, b: usize)
     -> Vec<Vec<f32>> {
     let in_len = cfg.img * cfg.img * cfg.channels;
     let (sh, sw, sc) = stage_out_dims(cfg, cut);
@@ -301,12 +324,16 @@ struct RealSample {
     bp: Option<(Vec<Vec<f32>>, Vec<f32>)>,
 }
 
-/// EPSL server step (paper §IV stages 3–6, eq. 5–7) — the semantics of
-/// the `server_train_cut{k}_c{C}` graph.
+/// Reference EPSL server step (paper §IV stages 3–6, eq. 5–7) — the
+/// retained naive per-sample oracle of [`server_train`]. Labels must be
+/// pre-validated (the fast public path does this and returns
+/// `Error::Data`; the oracle asserts).
 #[allow(clippy::too_many_arguments)]
-pub fn server_train(cfg: &SplitNetConfig, cut: usize, c: usize, b: usize,
-                    threads: usize, params: &[Vec<f32>], smashed: &[f32],
-                    labels: &[i32], lam: &[f32], mask: &[f32], lr: f32)
+pub fn server_train_reference(cfg: &SplitNetConfig, cut: usize, c: usize,
+                              b: usize, threads: usize,
+                              params: &[Vec<f32>], smashed: &[f32],
+                              labels: &[i32], lam: &[f32], mask: &[f32],
+                              lr: f32)
     -> ServerTrainOut {
     let (sh, sw, sc) = stage_out_dims(cfg, cut);
     let smash_len = sh * sw * sc;
@@ -417,9 +444,11 @@ pub fn server_train(cfg: &SplitNetConfig, cut: usize, c: usize, b: usize,
     ServerTrainOut { new_params, cut_agg, cut_unagg, loss, ncorrect }
 }
 
-/// Full-model eval on a fixed-size batch: `(mean CE, ncorrect)`.
-pub fn eval(cfg: &SplitNetConfig, params: &[Vec<f32>], x: &[f32],
-            labels: &[i32], threads: usize) -> (f32, f32) {
+/// Reference full-model eval on a fixed-size batch — the retained naive
+/// per-sample oracle of [`eval`]: `(mean CE, ncorrect)`.
+pub fn eval_reference(cfg: &SplitNetConfig, params: &[Vec<f32>],
+                      x: &[f32], labels: &[i32], threads: usize)
+    -> (f32, f32) {
     let in_len = cfg.img * cfg.img * cfg.channels;
     let n = labels.len();
     let idx: Vec<usize> = (0..n).collect();
@@ -436,6 +465,533 @@ pub fn eval(cfg: &SplitNetConfig, params: &[Vec<f32>], x: &[f32],
         ncorr += correct as u32 as f32;
     }
     (loss / n as f32, ncorr)
+}
+
+// ---------------------------------------------------------------------
+// Fast path: batched im2col + blocked-GEMM forward, per-sample GEMM
+// backward on pooled scratch arenas. Bit-identical to the reference
+// implementations above (property-tested in tests/property_kernels.rs).
+// ---------------------------------------------------------------------
+
+/// Patch-buffer budget of one batched conv (f32 elements, 8 MiB): the
+/// sample group is sized so the im2col buffer stays bounded even for the
+/// C=32 virtual batch.
+const MAX_PATCH_F32: usize = 2 << 20;
+/// Output rows per blocked-GEMM work item in the batched forward.
+const GEMM_BLOCK_ROWS: usize = 128;
+/// Elementwise-op chunk (relu / residual-add fan-out).
+const ELEM_CHUNK: usize = 1 << 16;
+
+/// One batched conv layer: im2col across a group of samples (fanned per
+/// sample), then one blocked GEMM over the group's rows (fanned per
+/// row-block). Groups run in ascending order and every output element
+/// keeps the reference summation order, so the result is bit-identical
+/// to per-sample `ops::conv2d` for any thread count.
+#[allow(clippy::too_many_arguments)]
+fn conv_batch(n: usize, x_all: &[f32], xd: Dims, w: &[f32], k: usize,
+              cout: usize, bias: &[f32], stride: usize, threads: usize,
+              patch: &mut Buf, y_all: &mut [f32]) {
+    let (h, ww, cin) = xd;
+    let in_len = h * ww * cin;
+    let rows = ops::out_size(h, stride) * ops::out_size(ww, stride);
+    let kc = kernels::patch_cols(k, cin);
+    let per = rows * kc;
+    debug_assert_eq!(x_all.len(), n * in_len);
+    debug_assert_eq!(y_all.len(), n * rows * cout);
+    if n == 0 || per == 0 {
+        return;
+    }
+    let group = (MAX_PATCH_F32 / per).clamp(1, n);
+    let p = patch.get(group * per);
+    let mut s0 = 0;
+    while s0 < n {
+        let gn = group.min(n - s0);
+        let pg = &mut p[..gn * per];
+        par::parallel_chunks_mut(pg, per, threads, |si, chunk| {
+            kernels::im2col(&x_all[(s0 + si) * in_len..][..in_len], xd,
+                            k, stride, chunk);
+        });
+        let pg: &[f32] = pg;
+        let out_g = &mut y_all[s0 * rows * cout..][..gn * rows * cout];
+        par::parallel_chunks_mut(
+            out_g, GEMM_BLOCK_ROWS * cout, threads, |bi, chunk| {
+                let r0 = bi * GEMM_BLOCK_ROWS;
+                let m = chunk.len() / cout;
+                kernels::gemm_bias(m, kc, cout,
+                                   &pg[r0 * kc..][..m * kc], w, bias,
+                                   chunk);
+            },
+        );
+        s0 += gn;
+    }
+}
+
+fn relu_batch(x: &mut [f32], threads: usize) {
+    par::parallel_chunks_mut(x, ELEM_CHUNK, threads, |_, c| ops::relu(c));
+}
+
+fn add_batch(a: &mut [f32], b: &[f32], threads: usize) {
+    debug_assert_eq!(a.len(), b.len());
+    par::parallel_chunks_mut(a, ELEM_CHUNK, threads, |i, c| {
+        ops::add_assign(c, &b[i * ELEM_CHUNK..][..c.len()]);
+    });
+}
+
+/// Batched activation cache of [`forward_batch`]: per executed stage the
+/// post-relu activations of all `n` samples — exactly what the reference
+/// per-sample [`Cache`] retains — plus the pooled head inputs.
+pub struct BatchCache {
+    n: usize,
+    /// Per-sample element count of each stage's output.
+    out_lens: Vec<usize>,
+    stages: Vec<BatchStage>,
+    /// Pooled GAP outputs (`n · c4`) when the head ran.
+    pooled: Option<Vec<f32>>,
+}
+
+enum BatchStage {
+    /// stage 1: post-relu output.
+    Conv { y: Vec<f32> },
+    /// stages 2–4: post-relu `a` and block output.
+    Res { a: Vec<f32>, out: Vec<f32> },
+}
+
+impl BatchStage {
+    fn out(&self) -> &[f32] {
+        match self {
+            BatchStage::Conv { y } => y,
+            BatchStage::Res { out, .. } => out,
+        }
+    }
+}
+
+impl BatchCache {
+    /// Move the final stage's batched output out of the cache — the
+    /// smashed activations for [`client_fwd`].
+    fn into_last_out(mut self) -> Vec<f32> {
+        match self.stages.pop().expect("at least one stage ran") {
+            BatchStage::Conv { y } => y,
+            BatchStage::Res { out, .. } => out,
+        }
+    }
+}
+
+/// Batched forward through stages `[first..=last]` (+ head) over `n`
+/// samples: one im2col + blocked GEMM per conv layer across the whole
+/// batch — the server-side parallelism of the paper, generalized to
+/// every forward. Bit-identical per sample to the reference
+/// [`forward`]. Returns `(logits (n·nc; empty unless with_head), cache)`.
+///
+/// `keep` retains the full activation cache for a following
+/// [`backward_sample`] pass; inference callers (`eval`, `client_fwd`)
+/// pass `false`, which keeps only the rolling last stage output (the
+/// next layer's input), so the live footprint stays at two stage
+/// buffers instead of the whole batch's intermediates.
+#[allow(clippy::too_many_arguments)]
+fn forward_batch(cfg: &SplitNetConfig, params: &[Vec<f32>], first: usize,
+                 last: usize, with_head: bool, keep: bool, xs: &[f32],
+                 n: usize, threads: usize, ws: &mut Scratch)
+    -> (Vec<f32>, BatchCache) {
+    let mut cache = BatchCache {
+        n,
+        out_lens: Vec::new(),
+        stages: Vec::new(),
+        pooled: None,
+    };
+    let mut off = 0;
+    for s in first..=last {
+        let xd = stage_in_dims(cfg, s);
+        let (oh, ow, cout) = stage_out_dims(cfg, s);
+        let out_len = oh * ow * cout;
+        let x_all: &[f32] = match cache.stages.last() {
+            Some(st) => st.out(),
+            None => xs,
+        };
+        if s == 1 {
+            let (w, b) = (&params[off], &params[off + 1]);
+            let mut y = vec![0.0f32; n * out_len];
+            conv_batch(n, x_all, xd, w, 3, cout, b, 1, threads,
+                       &mut ws.patch, &mut y);
+            relu_batch(&mut y, threads);
+            cache.stages.push(BatchStage::Conv { y });
+        } else {
+            let stride = if s >= 3 { 2 } else { 1 };
+            let project = s >= 3;
+            let (wa, ba) = (&params[off], &params[off + 1]);
+            let (wb, bb) = (&params[off + 2], &params[off + 3]);
+            let mut a = vec![0.0f32; n * out_len];
+            conv_batch(n, x_all, xd, wa, 3, cout, ba, stride, threads,
+                       &mut ws.patch, &mut a);
+            relu_batch(&mut a, threads);
+            let ad = (oh, ow, cout);
+            let mut out = vec![0.0f32; n * out_len];
+            conv_batch(n, &a, ad, wb, 3, cout, bb, 1, threads,
+                       &mut ws.patch, &mut out);
+            if project {
+                let (wp, bp) = (&params[off + 4], &params[off + 5]);
+                let skip = ws.skip.get(n * out_len);
+                conv_batch(n, x_all, xd, wp, 1, cout, bp, stride, threads,
+                           &mut ws.patch, skip);
+                add_batch(&mut out, skip, threads);
+            } else {
+                add_batch(&mut out, x_all, threads);
+            }
+            relu_batch(&mut out, threads);
+            // Inference never revisits `a`; drop it immediately.
+            let a = if keep { a } else { Vec::new() };
+            cache.stages.push(BatchStage::Res { a, out });
+        }
+        if !keep && cache.stages.len() >= 2 {
+            // The stage before the one just pushed has served its turn
+            // as layer input; release it.
+            let idx = cache.stages.len() - 2;
+            cache.stages.remove(idx);
+        }
+        cache.out_lens.push(out_len);
+        off += STAGE_PARAM_COUNTS[s - 1];
+    }
+    let mut logits_all = Vec::new();
+    if with_head {
+        let xd = stage_out_dims(cfg, 4);
+        let hlen = xd.0 * xd.1 * xd.2;
+        let nc = cfg.num_classes;
+        let (fc_w, fc_b) = (&params[off], &params[off + 1]);
+        let h_all: &[f32] = match cache.stages.last() {
+            Some(st) => st.out(),
+            None => xs,
+        };
+        let mut pooled_all = vec![0.0f32; n * xd.2];
+        logits_all = vec![0.0f32; n * nc];
+        for j in 0..n {
+            let (lg, pl) = ops::gap_fc(&h_all[j * hlen..][..hlen], xd,
+                                       fc_w, fc_b, nc);
+            logits_all[j * nc..][..nc].copy_from_slice(&lg);
+            pooled_all[j * xd.2..][..xd.2].copy_from_slice(&pl);
+        }
+        cache.pooled = Some(pooled_all);
+    }
+    (logits_all, cache)
+}
+
+/// Per-sample backward on the fast kernels, reading activations from the
+/// batch cache and running every conv gradient as im2col + GEMM with the
+/// pooled scratch arena — bit-identical to the reference [`backward`]
+/// (same gradient layout and summation orders). `xs_sample` is this
+/// sample's stage-`first` input.
+#[allow(clippy::too_many_arguments)]
+fn backward_sample(cfg: &SplitNetConfig, params: &[Vec<f32>],
+                   first: usize, last: usize, with_head: bool,
+                   xs_sample: &[f32], cache: &BatchCache, j: usize,
+                   cot: &[f32], scratch: &mut Scratch)
+    -> (Vec<Vec<f32>>, Vec<f32>) {
+    debug_assert!(j < cache.n);
+    let Scratch {
+        ref mut patch, ref mut dpatch, ref mut ga, ref mut gproj, ..
+    } = *scratch;
+    let (ga_buf, gproj_buf) = (ga, gproj);
+    let mut grads: Vec<Vec<f32>> = Vec::with_capacity(params.len());
+    let mut g = cot.to_vec();
+    let mut off = params.len();
+    if with_head {
+        let xd = stage_out_dims(cfg, 4);
+        let pooled_all = cache.pooled.as_ref().expect("head cache");
+        let pooled = &pooled_all[j * xd.2..][..xd.2];
+        let fc_w = &params[off - 2];
+        let (gw, gb, gx) =
+            ops::gap_fc_bwd(pooled, xd, fc_w, cfg.num_classes, &g);
+        grads.push(gb);
+        grads.push(gw);
+        g = gx;
+        off -= 2;
+    }
+    for s in (first..=last).rev() {
+        let xd = stage_in_dims(cfg, s);
+        let (_, _, cout) = stage_out_dims(cfg, s);
+        let si = s - first;
+        let out_len = cache.out_lens[si];
+        let in_len = xd.0 * xd.1 * xd.2;
+        let x: &[f32] = if si == 0 {
+            xs_sample
+        } else {
+            &cache.stages[si - 1].out()[j * in_len..][..in_len]
+        };
+        off -= STAGE_PARAM_COUNTS[s - 1];
+        match &cache.stages[si] {
+            BatchStage::Conv { y } => {
+                ops::relu_bwd(&mut g, &y[j * out_len..][..out_len]);
+                let w = &params[off];
+                let mut gw = vec![0.0f32; w.len()];
+                let mut gb = vec![0.0f32; cout];
+                let mut gx = vec![0.0f32; in_len];
+                kernels::conv2d_bwd_fast(x, xd, w, 3, cout, 1, &g, patch,
+                                         dpatch, &mut gw, &mut gb,
+                                         &mut gx);
+                grads.push(gb);
+                grads.push(gw);
+                g = gx;
+            }
+            BatchStage::Res { a, out } => {
+                let stride = if s >= 3 { 2 } else { 1 };
+                let project = s >= 3;
+                ops::relu_bwd(&mut g, &out[j * out_len..][..out_len]);
+                let ad = (ops::out_size(xd.0, stride),
+                          ops::out_size(xd.1, stride), cout);
+                let a_s = &a[j * out_len..][..out_len];
+                let wb = &params[off + 2];
+                let mut gwb = vec![0.0f32; wb.len()];
+                let mut gbb = vec![0.0f32; cout];
+                let ga = ga_buf.get(out_len);
+                kernels::conv2d_bwd_fast(a_s, ad, wb, 3, cout, 1, &g,
+                                         patch, dpatch, &mut gwb,
+                                         &mut gbb, ga);
+                ops::relu_bwd(ga, a_s);
+                let wa = &params[off];
+                let mut gwa = vec![0.0f32; wa.len()];
+                let mut gba = vec![0.0f32; cout];
+                let mut gx = vec![0.0f32; in_len];
+                kernels::conv2d_bwd_fast(x, xd, wa, 3, cout, stride, ga,
+                                         patch, dpatch, &mut gwa,
+                                         &mut gba, &mut gx);
+                if project {
+                    let wp = &params[off + 4];
+                    let mut gwp = vec![0.0f32; wp.len()];
+                    let mut gbp = vec![0.0f32; cout];
+                    let gxp = gproj_buf.get(in_len);
+                    kernels::conv2d_bwd_fast(x, xd, wp, 1, cout, stride,
+                                             &g, patch, dpatch, &mut gwp,
+                                             &mut gbp, gxp);
+                    ops::add_assign(&mut gx, gxp);
+                    grads.push(gbp);
+                    grads.push(gwp);
+                } else {
+                    ops::add_assign(&mut gx, &g);
+                }
+                grads.push(gbb);
+                grads.push(gwb);
+                grads.push(gba);
+                grads.push(gwa);
+                g = gx;
+            }
+        }
+    }
+    grads.reverse();
+    (grads, g)
+}
+
+/// Client-side FP (stages 1..cut) over a batch on the fast batched
+/// kernels: `x (b,img,img,ch)` → smashed `(b,*smash)`. Bit-identical to
+/// [`client_fwd_reference`]. Runs single-threaded internally — the
+/// driver already fans whole clients across cores via `call_many`.
+pub fn client_fwd(cfg: &SplitNetConfig, cut: usize, params: &[Vec<f32>],
+                  x: &[f32], b: usize, pool: &ScratchPool) -> Vec<f32> {
+    pool.with(|ws| {
+        let (_, cache) =
+            forward_batch(cfg, params, 1, cut, false, false, x, b, 1, ws);
+        cache.into_last_out()
+    })
+}
+
+/// Client-side BP + SGD (eq. 8–12) on the fast kernels — bit-identical
+/// to [`client_step_reference`]: batched FP, per-sample GEMM BP with
+/// gradients accumulated in sample order, then `w ← w − η_c · gw`.
+#[allow(clippy::too_many_arguments)]
+pub fn client_step(cfg: &SplitNetConfig, cut: usize, params: &[Vec<f32>],
+                   x: &[f32], g_cut: &[f32], lr: f32, b: usize,
+                   pool: &ScratchPool) -> Vec<Vec<f32>> {
+    let in_len = cfg.img * cfg.img * cfg.channels;
+    let (sh, sw, sc) = stage_out_dims(cfg, cut);
+    let smash_len = sh * sw * sc;
+    let inv_b = 1.0 / b as f32;
+    pool.with(|ws| {
+        let (_, cache) =
+            forward_batch(cfg, params, 1, cut, false, true, x, b, 1, ws);
+        let mut acc: Vec<Vec<f32>> =
+            params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        for j in 0..b {
+            let xs = &x[j * in_len..][..in_len];
+            let cot: Vec<f32> = g_cut[j * smash_len..][..smash_len]
+                .iter()
+                .map(|&v| v * inv_b)
+                .collect();
+            let (grads, _) = backward_sample(cfg, params, 1, cut, false,
+                                             xs, &cache, j, &cot, ws);
+            for (a, gr) in acc.iter_mut().zip(&grads) {
+                ops::add_assign(a, gr);
+            }
+        }
+        params
+            .iter()
+            .zip(&acc)
+            .map(|(p, g)| {
+                p.iter().zip(g).map(|(&w, &gv)| w - lr * gv).collect()
+            })
+            .collect()
+    })
+}
+
+/// EPSL server step (paper §IV stages 3–6, eq. 5–7) on the fast batched
+/// kernels — the semantics of the `server_train_cut{k}_c{C}` graph and
+/// the drop-in replacement for [`server_train_reference`], bit-identical
+/// to it (property-tested). The FP over the `C·b` virtual batch runs as
+/// one im2col + blocked GEMM per layer; the per-sample BP fans across
+/// cores with pooled scratch arenas; all reductions stay serial in
+/// sample order, so results are `EPSL_THREADS`-invariant. Labels are
+/// validated up front and surface as `Error::Data` instead of panicking
+/// a worker mid-round.
+#[allow(clippy::too_many_arguments)]
+pub fn server_train(cfg: &SplitNetConfig, cut: usize, c: usize, b: usize,
+                    threads: usize, params: &[Vec<f32>], smashed: &[f32],
+                    labels: &[i32], lam: &[f32], mask: &[f32], lr: f32,
+                    pool: &ScratchPool) -> Result<ServerTrainOut> {
+    ops::check_labels(labels, cfg.num_classes)?;
+    let (sh, sw, sc) = stage_out_dims(cfg, cut);
+    let smash_len = sh * sw * sc;
+    let nc = cfg.num_classes;
+    let inv_b = 1.0 / b as f32;
+
+    // --- real pass: batched FP over all C·b rows, then BP of the
+    // unaggregated slots with row weight λ_i/b, fanned per sample ---
+    let (real, bps) = pool.with(|ws| {
+        let (logits_all, cache) = forward_batch(cfg, params, cut + 1, 4,
+                                                true, true, smashed,
+                                                c * b, threads, ws);
+        let real: Vec<(f32, bool, Vec<f32>)> = (0..c * b)
+            .map(|k| {
+                let (ce, d, correct) = ops::softmax_xent(
+                    &logits_all[k * nc..][..nc], labels[k]);
+                (ce, correct, d)
+            })
+            .collect();
+        let todo: Vec<usize> = (0..c * b)
+            .filter(|&k| {
+                (1.0 - mask[k % b]) * lam[k / b] * inv_b != 0.0
+            })
+            .collect();
+        let bps = par::parallel_map(&todo, threads, |_, &k| {
+                let (i, j) = (k / b, k % b);
+                let weight = (1.0 - mask[j]) * lam[i] * inv_b;
+                let cot: Vec<f32> =
+                    real[k].2.iter().map(|&z| weight * z).collect();
+                let xs = &smashed[k * smash_len..][..smash_len];
+                let out = pool.with(|scratch| {
+                    backward_sample(cfg, params, cut + 1, 4, true, xs,
+                                    &cache, k, &cot, scratch)
+                });
+                (k, out)
+            });
+        (real, bps)
+    });
+
+    // Loss / accuracy reductions in flat sample order (eq. 1 weighting).
+    let mut loss = 0.0f32;
+    let mut ncorrect = 0.0f32;
+    for (k, r) in real.iter().enumerate() {
+        loss += lam[k / b] * r.0;
+        ncorrect += r.1 as u32 as f32;
+    }
+    loss *= inv_b;
+
+    // --- virtual aggregated batch (eq. 6): λ-aggregate the smashed rows
+    // and last-layer gradients per masked slot, batched FP over the
+    // virtual rows, one BP row each (row weight 1/b) ---
+    let masked: Vec<usize> =
+        (0..b).filter(|&j| mask[j] != 0.0).collect();
+    let nm = masked.len();
+    let mut sbar_all = vec![0.0f32; nm * smash_len];
+    let mut zbar_all = vec![0.0f32; nm * nc];
+    for (mi, &j) in masked.iter().enumerate() {
+        let sbar = &mut sbar_all[mi * smash_len..][..smash_len];
+        let zbar = &mut zbar_all[mi * nc..][..nc];
+        for i in 0..c {
+            ops::axpy(sbar, lam[i],
+                      &smashed[(i * b + j) * smash_len..][..smash_len]);
+            ops::axpy(zbar, lam[i], &real[i * b + j].2);
+        }
+    }
+    let virt = pool.with(|ws| {
+        let (_, vcache) = forward_batch(cfg, params, cut + 1, 4, true,
+                                        true, &sbar_all, nm, threads, ws);
+        par::parallel_map(&masked, threads, |mi, &j| {
+            let cot: Vec<f32> = zbar_all[mi * nc..][..nc]
+                .iter()
+                .map(|&z| mask[j] * z * inv_b)
+                .collect();
+            let xs = &sbar_all[mi * smash_len..][..smash_len];
+            pool.with(|scratch| {
+                backward_sample(cfg, params, cut + 1, 4, true, xs,
+                                &vcache, mi, &cot, scratch)
+            })
+        })
+    });
+
+    // --- outputs (identical reduction orders to the reference) ---
+    let bf = b as f32;
+    let mut cut_agg = vec![0.0f32; b * smash_len];
+    for (&j, (_, gs)) in masked.iter().zip(&virt) {
+        for (dst, &g) in
+            cut_agg[j * smash_len..][..smash_len].iter_mut().zip(gs)
+        {
+            *dst = g * bf;
+        }
+    }
+    let mut cut_unagg = vec![0.0f32; c * b * smash_len];
+    for (k, (_, gs)) in bps.iter().map(|(k, o)| (*k, o)) {
+        let (i, j) = (k / b, k % b);
+        let scale = (1.0 - mask[j]) * bf / lam[i].max(1e-12);
+        for (dst, &g) in cut_unagg[k * smash_len..][..smash_len]
+            .iter_mut()
+            .zip(gs)
+        {
+            *dst = g * scale;
+        }
+    }
+
+    // --- parameter update (eq. 7): virtual rows then real samples, both
+    // ascending ---
+    let mut acc: Vec<Vec<f32>> =
+        params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+    for (gw, _) in &virt {
+        for (a, g) in acc.iter_mut().zip(gw) {
+            ops::add_assign(a, g);
+        }
+    }
+    for (_, (gw, _)) in &bps {
+        for (a, g) in acc.iter_mut().zip(gw) {
+            ops::add_assign(a, g);
+        }
+    }
+    let new_params = params
+        .iter()
+        .zip(&acc)
+        .map(|(p, g)| {
+            p.iter().zip(g).map(|(&w, &gv)| w - lr * gv).collect()
+        })
+        .collect();
+
+    Ok(ServerTrainOut { new_params, cut_agg, cut_unagg, loss, ncorrect })
+}
+
+/// Full-model eval on a fixed-size batch, batched on the fast kernels —
+/// bit-identical to [`eval_reference`]: `(mean CE, ncorrect)`. Labels
+/// are validated up front and surface as `Error::Data`.
+pub fn eval(cfg: &SplitNetConfig, params: &[Vec<f32>], x: &[f32],
+            labels: &[i32], threads: usize, pool: &ScratchPool)
+    -> Result<(f32, f32)> {
+    ops::check_labels(labels, cfg.num_classes)?;
+    let n = labels.len();
+    let nc = cfg.num_classes;
+    let logits_all = pool.with(|ws| {
+        forward_batch(cfg, params, 1, 4, true, false, x, n, threads, ws).0
+    });
+    let mut loss = 0.0f32;
+    let mut ncorr = 0.0f32;
+    for (j, &y) in labels.iter().enumerate() {
+        let (ce, _, correct) =
+            ops::softmax_xent(&logits_all[j * nc..][..nc], y);
+        loss += ce;
+        ncorr += correct as u32 as f32;
+    }
+    Ok((loss / n as f32, ncorr))
 }
 
 /// The φ-aggregation kernel semantics (`phi_aggregate_nd`): masked rows of
@@ -563,14 +1119,50 @@ mod tests {
         let lam = vec![1.0 / c as f32; c];
         let mask: Vec<f32> =
             (0..b).map(|j| if j < b / 2 { 1.0 } else { 0.0 }).collect();
+        let pool = ScratchPool::new();
         let a = server_train(&cfg, cut, c, b, 1, &p[n..], &smashed,
-                             &labels, &lam, &mask, 0.05);
+                             &labels, &lam, &mask, 0.05, &pool)
+            .unwrap();
         let z = server_train(&cfg, cut, c, b, 7, &p[n..], &smashed,
-                             &labels, &lam, &mask, 0.05);
+                             &labels, &lam, &mask, 0.05, &pool)
+            .unwrap();
         assert_eq!(a.loss.to_bits(), z.loss.to_bits());
         assert_eq!(a.cut_agg, z.cut_agg);
         assert_eq!(a.cut_unagg, z.cut_unagg);
         assert_eq!(a.new_params, z.new_params);
+        // ... and bit-identical to the retained naive reference.
+        let r = server_train_reference(&cfg, cut, c, b, 3, &p[n..],
+                                       &smashed, &labels, &lam, &mask,
+                                       0.05);
+        assert_eq!(a.loss.to_bits(), r.loss.to_bits());
+        assert_eq!(a.cut_agg, r.cut_agg);
+        assert_eq!(a.cut_unagg, r.cut_unagg);
+        assert_eq!(a.new_params, r.new_params);
+    }
+
+    #[test]
+    fn server_train_rejects_corrupt_labels() {
+        let cfg = cfg();
+        let (cut, c, b) = (2, 2, 4);
+        let p = init_params(&cfg, 9);
+        let n = client_param_count(cut);
+        let smash_len = 16 * 16 * 8;
+        let smashed = vec![0.1f32; c * b * smash_len];
+        let lam = vec![0.5f32; c];
+        let mask = vec![1.0f32; b];
+        let pool = ScratchPool::new();
+        for bad in [-1i32, 10, i32::MIN] {
+            let mut labels: Vec<i32> = vec![0; c * b];
+            labels[3] = bad;
+            let e = server_train(&cfg, cut, c, b, 1, &p[n..], &smashed,
+                                 &labels, &lam, &mask, 0.05, &pool)
+                .unwrap_err();
+            assert!(matches!(e, crate::error::Error::Data(_)),
+                    "label {bad}: {e}");
+        }
+        let ex = vec![0.0f32; 2 * 256];
+        let e = eval(&cfg, &p, &ex, &[0, 12], 1, &pool).unwrap_err();
+        assert!(matches!(e, crate::error::Error::Data(_)), "{e}");
     }
 
     #[test]
@@ -595,10 +1187,13 @@ mod tests {
         let half: Vec<f32> =
             (0..b).map(|j| if j < m { 1.0 } else { 0.0 }).collect();
         let full = vec![1.0f32; b];
+        let pool = ScratchPool::new();
         let a = server_train(&cfg, cut, c, b, 2, &p[n..], &smashed,
-                             &labels, &lam, &half, 0.05);
+                             &labels, &lam, &half, 0.05, &pool)
+            .unwrap();
         let f = server_train(&cfg, cut, c, b, 2, &p[n..], &smashed,
-                             &labels, &lam, &full, 0.05);
+                             &labels, &lam, &full, 0.05, &pool)
+            .unwrap();
         for j in 0..m {
             assert_eq!(
                 a.cut_agg[j * smash_len..(j + 1) * smash_len],

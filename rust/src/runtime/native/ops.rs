@@ -13,8 +13,21 @@ pub type Dims = (usize, usize, usize);
 
 /// SAME-padding low offset for one spatial axis (JAX convention:
 /// `pad_total = max((out-1)*stride + k - in, 0)`, low = total/2).
-fn pad_lo(input: usize, k: usize, stride: usize) -> isize {
+///
+/// Guarded against the degenerate `input == 0` case, where `out == 0`
+/// and `(out - 1) * stride` would wrap (debug overflow panic / garbage
+/// padding in release). Zero-sized spatial dims are rejected up front by
+/// manifest shape validation; the guard here is defense in depth so the
+/// kernels can never be driven into the underflow.
+///
+/// `pub(super)` so the im2col/col2im kernels in [`super::kernels`] share
+/// this exact computation — the bitwise fast==reference contract hinges
+/// on the two paths padding identically.
+pub(super) fn pad_lo(input: usize, k: usize, stride: usize) -> isize {
     let out = input.div_ceil(stride);
+    if out == 0 {
+        return 0;
+    }
     let total = ((out - 1) * stride + k).saturating_sub(input);
     (total / 2) as isize
 }
@@ -180,10 +193,34 @@ pub fn gap_fc_bwd(pooled: &[f32], xd: Dims, fc_w: &[f32], nc: usize,
     (gw, dlogits.to_vec(), gx)
 }
 
+/// Validate a label batch against the class count: every label must lie
+/// in `[0, nc)`. A corrupt shard or bad literal used to panic the worker
+/// thread mid-round on the `logits[label as usize]` index in
+/// [`softmax_xent`]; callers (`server_train`, `eval`) surface this as
+/// `Error::Data` instead.
+pub fn check_labels(labels: &[i32], nc: usize) -> crate::error::Result<()> {
+    for (i, &y) in labels.iter().enumerate() {
+        if y < 0 || y as usize >= nc {
+            return Err(crate::error::Error::Data(format!(
+                "label {y} at flat index {i} is outside [0, {nc}) — \
+                 corrupt shard or bad label literal"
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// Stable softmax cross-entropy for one sample:
 /// `(ce, dlogits = softmax − onehot, correct)`. Argmax ties resolve to the
-/// first maximum (`jnp.argmax` convention).
+/// first maximum (`jnp.argmax` convention). The label must be
+/// pre-validated (see [`check_labels`]); an out-of-range label is a
+/// caller bug here.
 pub fn softmax_xent(logits: &[f32], label: i32) -> (f32, Vec<f32>, bool) {
+    debug_assert!(
+        label >= 0 && (label as usize) < logits.len(),
+        "softmax_xent: unvalidated label {label} for {} classes",
+        logits.len()
+    );
     let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
     let mut d: Vec<f32> = logits.iter().map(|&l| (l - m).exp()).collect();
     let sum: f32 = d.iter().sum();
@@ -230,6 +267,28 @@ mod tests {
         assert_eq!(pad_lo(16, 3, 1), 1);
         assert_eq!(pad_lo(16, 3, 2), 0); // total 1 → low 0, high 1
         assert_eq!(pad_lo(16, 1, 2), 0); // 1x1 stride-2 needs no padding
+    }
+
+    #[test]
+    fn degenerate_zero_dim_does_not_underflow() {
+        // input 0 → out 0: `(out - 1) * stride` used to wrap.
+        assert_eq!(pad_lo(0, 3, 1), 0);
+        assert_eq!(pad_lo(0, 3, 2), 0);
+        assert_eq!(out_size(0, 2), 0);
+        // A zero-sized conv is a no-op, not a panic.
+        let y = conv2d(&[], (0, 0, 1), &[0.0; 9], 3, 1, &[0.0], 1);
+        assert!(y.is_empty());
+    }
+
+    #[test]
+    fn check_labels_catches_corrupt_shards() {
+        assert!(check_labels(&[0, 3, 9], 10).is_ok());
+        assert!(check_labels(&[], 10).is_ok());
+        let e = check_labels(&[0, -1], 10).unwrap_err();
+        assert!(matches!(e, crate::error::Error::Data(_)), "{e}");
+        assert!(e.to_string().contains("-1"), "{e}");
+        let e = check_labels(&[10], 10).unwrap_err();
+        assert!(e.to_string().contains("10"), "{e}");
     }
 
     #[test]

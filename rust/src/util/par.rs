@@ -73,6 +73,50 @@ where
         .collect()
 }
 
+/// Parallel for-each over disjoint mutable chunks of `data`:
+/// `f(chunk_index, chunk)` for every `chunk`-sized piece (last may be
+/// shorter), on up to `threads` scoped workers. Because the chunks are
+/// disjoint and `f` writes only its own chunk, the result is identical
+/// to the serial loop for any thread count — the primitive under the
+/// batched im2col / blocked-GEMM fan-out, where output rows partition
+/// cleanly but must land in one shared buffer.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk: usize,
+                                 threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "parallel_chunks_mut: chunk must be positive");
+    if data.is_empty() {
+        return;
+    }
+    let n_chunks = data.len().div_ceil(chunk);
+    let threads = threads.clamp(1, n_chunks);
+    if threads == 1 {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    // One shared work iterator: each (index, chunk) pair is handed to
+    // exactly one worker. The guard is dropped before `f` runs (the lock
+    // temporary dies at the end of the `let` statement), so workers
+    // compute unlocked; no per-chunk allocation is involved.
+    let work = Mutex::new(data.chunks_mut(chunk).enumerate());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let next =
+                    work.lock().unwrap_or_else(|e| e.into_inner()).next();
+                let Some((i, c)) = next else {
+                    break;
+                };
+                f(i, c);
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +162,38 @@ mod tests {
     #[test]
     fn max_threads_is_positive() {
         assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn chunks_mut_equals_serial_for_any_thread_count() {
+        let serial: Vec<u64> = {
+            let mut v = vec![0u64; 103];
+            parallel_chunks_mut(&mut v, 8, 1, |i, c| {
+                for (j, x) in c.iter_mut().enumerate() {
+                    *x = (i * 1000 + j) as u64;
+                }
+            });
+            v
+        };
+        for threads in [2, 4, 16] {
+            let mut v = vec![0u64; 103];
+            parallel_chunks_mut(&mut v, 8, threads, |i, c| {
+                for (j, x) in c.iter_mut().enumerate() {
+                    *x = (i * 1000 + j) as u64;
+                }
+            });
+            assert_eq!(v, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn chunks_mut_empty_and_short_tail() {
+        let mut empty: Vec<u8> = vec![];
+        parallel_chunks_mut(&mut empty, 4, 8, |_, _| panic!("no chunks"));
+        let mut v = vec![0u8; 5];
+        parallel_chunks_mut(&mut v, 4, 8, |i, c| {
+            c.fill(i as u8 + 1);
+        });
+        assert_eq!(v, vec![1, 1, 1, 1, 2]);
     }
 }

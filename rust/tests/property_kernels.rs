@@ -1,0 +1,206 @@
+//! Bit-identity property tests for the native backend's im2col +
+//! blocked-GEMM fast path (PR 4): every fast kernel and every fast
+//! model entry point must be **bitwise** equal to the retained naive
+//! reference implementations — across all cuts (1..=4), both families,
+//! odd spatial sizes, and strides 1–2 — so the PR 3 determinism
+//! guarantees (seed-reproducible, `EPSL_THREADS`-invariant) survive the
+//! kernel rewrite unchanged.
+
+use epsl::profile::splitnet::SplitNetConfig;
+use epsl::runtime::native::kernels::{self, Buf, ScratchPool};
+use epsl::runtime::native::model;
+use epsl::runtime::native::ops;
+use epsl::util::prop::{check, Gen};
+use epsl::util::rng::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect()
+}
+
+#[test]
+fn property_conv2d_fast_bit_identical_on_random_shapes() {
+    // Random (odd and even) spatial sizes, strides 1–2, 1×1 and 3×3
+    // kernels — the full shape envelope the model uses, plus odd sizes
+    // it doesn't, to pin the padding arithmetic.
+    check("conv2d fast == reference", 120, |g: &mut Gen| {
+        let h = g.usize_in(1, 11);
+        let w = g.usize_in(1, 11);
+        let cin = g.usize_in(1, 9);
+        let cout = g.usize_in(1, 20);
+        let k = *g.choose(&[1usize, 3]);
+        let stride = g.usize_in(1, 2);
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let x = rand_vec(&mut rng, h * w * cin);
+        let wt = rand_vec(&mut rng, k * k * cin * cout);
+        let bias = rand_vec(&mut rng, cout);
+        let reference =
+            ops::conv2d(&x, (h, w, cin), &wt, k, cout, &bias, stride);
+        let mut fast = vec![0.0f32; reference.len()];
+        let mut patch = Buf::default();
+        kernels::conv2d_fast(&x, (h, w, cin), &wt, k, cout, &bias,
+                             stride, &mut patch, &mut fast);
+        assert_eq!(
+            bits(&reference),
+            bits(&fast),
+            "h={h} w={w} cin={cin} cout={cout} k={k} stride={stride}"
+        );
+    });
+}
+
+#[test]
+fn property_conv2d_bwd_fast_bit_identical_on_random_shapes() {
+    check("conv2d_bwd fast == reference", 80, |g: &mut Gen| {
+        let h = g.usize_in(1, 9);
+        let w = g.usize_in(1, 9);
+        let cin = g.usize_in(1, 8);
+        let cout = g.usize_in(1, 18);
+        let k = *g.choose(&[1usize, 3]);
+        let stride = g.usize_in(1, 2);
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let x = rand_vec(&mut rng, h * w * cin);
+        let wt = rand_vec(&mut rng, k * k * cin * cout);
+        let (oh, ow) = (ops::out_size(h, stride), ops::out_size(w, stride));
+        let gy = rand_vec(&mut rng, oh * ow * cout);
+        let (rgw, rgb, rgx) =
+            ops::conv2d_bwd(&x, (h, w, cin), &wt, k, cout, stride, &gy);
+        let (mut patch, mut dpatch) = (Buf::default(), Buf::default());
+        let mut gw = vec![0.0f32; rgw.len()];
+        let mut gb = vec![0.0f32; rgb.len()];
+        let mut gx = vec![0.0f32; rgx.len()];
+        kernels::conv2d_bwd_fast(&x, (h, w, cin), &wt, k, cout, stride,
+                                 &gy, &mut patch, &mut dpatch, &mut gw,
+                                 &mut gb, &mut gx);
+        let tag = format!(
+            "h={h} w={w} cin={cin} cout={cout} k={k} stride={stride}"
+        );
+        assert_eq!(bits(&rgw), bits(&gw), "gw {tag}");
+        assert_eq!(bits(&rgb), bits(&gb), "gb {tag}");
+        assert_eq!(bits(&rgx), bits(&gx), "gx {tag}");
+    });
+}
+
+/// Fast vs reference across every model entry point, all cuts, both
+/// families — the end-to-end half of the bit-identity contract.
+#[test]
+fn fast_model_paths_bit_identical_to_reference_all_cuts_both_families() {
+    let pool = ScratchPool::new();
+    let b = 4usize;
+    let c = 2usize;
+    for family in ["mnist", "ham"] {
+        let cfg = SplitNetConfig::for_family(family);
+        let in_len = cfg.img * cfg.img * cfg.channels;
+        for cut in 1..=4usize {
+            let seed = (cut * 31) as u64 + if family == "mnist" { 0 } else { 7 };
+            let params = model::init_params(&cfg, seed);
+            let n_c = model::client_param_count(cut);
+            let mut rng = Rng::new(seed ^ 0xABCD);
+            let x = rand_vec(&mut rng, b * in_len);
+
+            // client_fwd
+            let fast = model::client_fwd(&cfg, cut, &params[..n_c], &x, b,
+                                         &pool);
+            let reference = model::client_fwd_reference(
+                &cfg, cut, &params[..n_c], &x, b);
+            assert_eq!(bits(&reference), bits(&fast),
+                       "client_fwd {family} cut{cut}");
+
+            // server_train (mixed mask: aggregated + unicast rows)
+            let (sh, sw, sc) = cfg.smashed_shape(cut);
+            let smash_len = sh * sw * sc;
+            let smashed = rand_vec(&mut rng, c * b * smash_len);
+            let labels: Vec<i32> = (0..c * b)
+                .map(|k| ((k * 3 + cut) % cfg.num_classes) as i32)
+                .collect();
+            let lam = vec![0.3f32, 0.7];
+            let mask: Vec<f32> = (0..b)
+                .map(|j| if j % 2 == 0 { 1.0 } else { 0.0 })
+                .collect();
+            let f = model::server_train(&cfg, cut, c, b, 3,
+                                        &params[n_c..], &smashed,
+                                        &labels, &lam, &mask, 0.05,
+                                        &pool)
+                .unwrap();
+            let r = model::server_train_reference(&cfg, cut, c, b, 2,
+                                                  &params[n_c..],
+                                                  &smashed, &labels,
+                                                  &lam, &mask, 0.05);
+            assert_eq!(f.loss.to_bits(), r.loss.to_bits(),
+                       "loss {family} cut{cut}");
+            assert_eq!(f.ncorrect.to_bits(), r.ncorrect.to_bits(),
+                       "ncorrect {family} cut{cut}");
+            assert_eq!(bits(&f.cut_agg), bits(&r.cut_agg),
+                       "cut_agg {family} cut{cut}");
+            assert_eq!(bits(&f.cut_unagg), bits(&r.cut_unagg),
+                       "cut_unagg {family} cut{cut}");
+            for (t, (fp, rp)) in
+                f.new_params.iter().zip(&r.new_params).enumerate()
+            {
+                assert_eq!(bits(fp), bits(rp),
+                           "new_params[{t}] {family} cut{cut}");
+            }
+
+            // client_step driven by the broadcast gradient
+            let new_fast = model::client_step(&cfg, cut, &params[..n_c],
+                                              &x, &f.cut_agg[..b * smash_len],
+                                              0.05, b, &pool);
+            let new_ref = model::client_step_reference(
+                &cfg, cut, &params[..n_c], &x,
+                &r.cut_agg[..b * smash_len], 0.05, b);
+            for (t, (fp, rp)) in new_fast.iter().zip(&new_ref).enumerate()
+            {
+                assert_eq!(bits(fp), bits(rp),
+                           "client_step[{t}] {family} cut{cut}");
+            }
+        }
+
+        // eval (full model, odd-sized label batch)
+        let params = model::init_params(&cfg, 5);
+        let n = 9usize;
+        let mut rng = Rng::new(99);
+        let ex = rand_vec(&mut rng, n * in_len);
+        let ey: Vec<i32> =
+            (0..n).map(|j| (j % cfg.num_classes) as i32).collect();
+        let (fl, fc) =
+            model::eval(&cfg, &params, &ex, &ey, 4, &pool).unwrap();
+        let (rl, rc) = model::eval_reference(&cfg, &params, &ex, &ey, 1);
+        assert_eq!(fl.to_bits(), rl.to_bits(), "eval loss {family}");
+        assert_eq!(fc.to_bits(), rc.to_bits(), "eval ncorrect {family}");
+    }
+}
+
+/// The φ=1.0 (all-aggregated) and φ=0 (all-unicast) mask corners also
+/// match the reference exactly.
+#[test]
+fn fast_server_train_mask_corners_match_reference() {
+    let cfg = SplitNetConfig::mnist_like();
+    let pool = ScratchPool::new();
+    let (cut, c, b) = (2usize, 3usize, 4usize);
+    let n_c = model::client_param_count(cut);
+    let params = model::init_params(&cfg, 13);
+    let (sh, sw, sc) = cfg.smashed_shape(cut);
+    let smash_len = sh * sw * sc;
+    let mut rng = Rng::new(17);
+    let smashed = rand_vec(&mut rng, c * b * smash_len);
+    let labels: Vec<i32> =
+        (0..c * b).map(|k| (k % cfg.num_classes) as i32).collect();
+    let lam = vec![1.0 / c as f32; c];
+    for mask in [vec![1.0f32; b], vec![0.0f32; b]] {
+        let f = model::server_train(&cfg, cut, c, b, 2, &params[n_c..],
+                                    &smashed, &labels, &lam, &mask, 0.1,
+                                    &pool)
+            .unwrap();
+        let r = model::server_train_reference(&cfg, cut, c, b, 1,
+                                              &params[n_c..], &smashed,
+                                              &labels, &lam, &mask, 0.1);
+        assert_eq!(bits(&f.cut_agg), bits(&r.cut_agg));
+        assert_eq!(bits(&f.cut_unagg), bits(&r.cut_unagg));
+        assert_eq!(f.loss.to_bits(), r.loss.to_bits());
+        for (fp, rp) in f.new_params.iter().zip(&r.new_params) {
+            assert_eq!(bits(fp), bits(rp));
+        }
+    }
+}
