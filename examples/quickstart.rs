@@ -41,7 +41,17 @@ fn main() -> anyhow::Result<()> {
     let r = &run.rounds[0];
     println!(
         "round 0: loss {:.4}, train acc {:.3}, test acc {:.3}",
-        r.loss, r.train_acc, r.test_acc
+        r.loss,
+        r.train_acc,
+        r.test_acc.unwrap_or(f64::NAN)
+    );
+    println!(
+        "simulated round: {:.3}s total (uplink phase {:.3}s, server \
+         fp+bp {:.3}s, gradient return {:.3}s)",
+        r.sim_latency,
+        r.stages.uplink_phase,
+        r.stages.server_fp + r.stages.server_bp,
+        r.stages.broadcast + r.stages.downlink_phase
     );
 
     // 3. Resource management on a simulated wireless deployment.

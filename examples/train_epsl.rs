@@ -58,10 +58,9 @@ fn main() -> anyhow::Result<()> {
                 r.round,
                 r.loss,
                 r.train_acc,
-                if r.test_acc.is_nan() {
-                    "  -  ".to_string()
-                } else {
-                    format!("{:.3}", r.test_acc)
+                match r.test_acc {
+                    None => "  -  ".to_string(),
+                    Some(a) => format!("{a:.3}"),
                 },
                 r.sim_latency
             );

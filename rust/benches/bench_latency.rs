@@ -1,10 +1,16 @@
 //! Latency-model benches: stage-latency evaluation for every framework
 //! (these run inside every optimizer objective evaluation — the tightest
-//! L3 inner loop after the rate computations).
+//! L3 inner loop after the rate computations), plus the timeline event
+//! engine in both modes (barrier must stay ~free next to the closed
+//! form; pipelined pays an O(C²) FIFO-slot scan per round).
+//!
+//! `BENCH_JSON=BENCH_5.json cargo bench --bench bench_latency` records
+//! the PR 5 perf row set.
 
 use epsl::latency::frameworks::{round_latency, Framework};
 use epsl::latency::{epsl_stage_latencies, LatencyInputs};
 use epsl::profile::{resnet18, splitnet};
+use epsl::timeline::{simulate, Mode};
 use epsl::util::bench::Bencher;
 
 fn main() {
@@ -47,6 +53,55 @@ fn main() {
             round_latency(fw, &inp18).round_total()
         });
     }
+
+    // Timeline engine: barrier parity smoke (the closed form plus event
+    // emission) and the pipelined overlapped schedule, C=5 and C=32.
+    for fw in [Framework::Epsl { phi: 0.5 }, Framework::Sfl] {
+        b.run(&format!("timeline barrier {} C=5", fw.name()), || {
+            simulate(fw, &inp18, Mode::Barrier).total
+        });
+        b.run(&format!("timeline pipelined {} C=5", fw.name()), || {
+            simulate(fw, &inp18, Mode::Pipelined).total
+        });
+    }
+    let f32c: Vec<f64> =
+        (0..32).map(|i| 0.8e9 + 4e7 * i as f64).collect();
+    let up32: Vec<f64> =
+        (0..32).map(|i| 5e7 + 1e7 * i as f64).collect();
+    let dn32: Vec<f64> =
+        (0..32).map(|i| 5e7 + 9e6 * i as f64).collect();
+    let inp32 = LatencyInputs {
+        profile: &p18,
+        cut: 10,
+        batch: 64,
+        phi: 0.5,
+        f_server: 5e9,
+        kappa_server: 1.0 / 32.0,
+        kappa_client: 1.0 / 16.0,
+        f_clients: &f32c,
+        uplink: &up32,
+        downlink: &dn32,
+        broadcast: 2e8,
+    };
+    b.run("timeline barrier EPSL C=32", || {
+        simulate(Framework::Epsl { phi: 0.5 }, &inp32, Mode::Barrier)
+            .total
+    });
+    b.run("timeline pipelined EPSL C=32", || {
+        simulate(Framework::Epsl { phi: 0.5 }, &inp32, Mode::Pipelined)
+            .total
+    });
+    // Correctness gate before timing is trusted: parity + dominance on
+    // the bench fixtures themselves.
+    let bar =
+        simulate(Framework::Epsl { phi: 0.5 }, &inp32, Mode::Barrier);
+    let pipe =
+        simulate(Framework::Epsl { phi: 0.5 }, &inp32, Mode::Pipelined);
+    let closed =
+        round_latency(Framework::Epsl { phi: 0.5 }, &inp32).round_total();
+    assert_eq!(bar.total.to_bits(), closed.to_bits(), "barrier parity");
+    assert!(pipe.total <= bar.total, "pipelined dominance");
+
     b.run("profile rho/varpi scan (all cuts)", || {
         let mut acc = 0.0;
         for &j in &p18.cut_candidates {

@@ -247,6 +247,6 @@ fn main() {
     println!("\n{}", bench.report());
     speedup_table(&bench);
     println!("{}", rt.stats_summary());
-    // Optional perf-trajectory record (see PERF.md §6).
+    // Optional perf-trajectory record (see PERF.md §7).
     bench.write_bench_json_if_requested();
 }

@@ -7,6 +7,7 @@ use epsl::profile::resnet18;
 use epsl::scenario::{
     run_policy, ReoptPolicy, RunOptions, Scenario, ScenarioSpec,
 };
+use epsl::timeline::Mode;
 use epsl::util::bench::Bencher;
 use epsl::util::par;
 
@@ -45,6 +46,7 @@ fn main() {
         batch: 64,
         phi: 0.5,
         threads,
+        timeline_mode: Mode::Barrier,
     };
     b.run(&format!("run_policy never ({run_rounds} rounds, serial)"), || {
         run_policy(&sc, profile, &opts(ReoptPolicy::Never, 1))

@@ -268,6 +268,11 @@ pub struct Config {
     /// `[backend] mode = "native"` (or a top-level `backend = "native"`);
     /// CLI: `--backend`.
     pub backend: String,
+    /// Latency timeline mode: "barrier" (eq. 23 phase synchronization,
+    /// bit-identical to the closed forms) or "pipelined" (per-client /
+    /// per-link overlap). TOML: `[timeline] mode = "pipelined"` (or a
+    /// top-level `timeline = "pipelined"`); CLI: `--timeline`.
+    pub timeline_mode: String,
     /// Artifact directory (default "artifacts").
     pub artifacts_dir: String,
     /// Results directory (default "results").
@@ -281,6 +286,7 @@ impl Config {
             train: TrainConfig::default(),
             scenario: ScenarioSettings::default(),
             backend: "auto".into(),
+            timeline_mode: "barrier".into(),
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
         }
@@ -293,6 +299,7 @@ impl Config {
                 self.backend
             )));
         }
+        crate::timeline::Mode::parse(&self.timeline_mode)?;
         self.net.validate()?;
         self.train.validate()?;
         self.scenario.validate()
@@ -400,6 +407,11 @@ impl Config {
         }
         if let Some(v) = d.str("backend").or_else(|| d.str("backend.mode")) {
             self.backend = v.to_string();
+        }
+        if let Some(v) =
+            d.str("timeline").or_else(|| d.str("timeline.mode"))
+        {
+            self.timeline_mode = v.to_string();
         }
         if let Some(v) = d.str("artifacts_dir") {
             self.artifacts_dir = v.to_string();
@@ -556,6 +568,24 @@ mod tests {
         assert_eq!(c.scenario.rejoin_prob, 0.5);
         assert_eq!(c.scenario.min_active, 2);
         assert_eq!(c.scenario.reopt, "every:8");
+    }
+
+    #[test]
+    fn timeline_mode_from_toml_and_validated() {
+        let mut c = Config::new();
+        assert_eq!(c.timeline_mode, "barrier");
+        c.apply_toml(
+            &toml::parse("[timeline]\nmode = \"pipelined\"\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.timeline_mode, "pipelined");
+        c.apply_toml(&toml::parse("timeline = \"barrier\"\n").unwrap())
+            .unwrap();
+        assert_eq!(c.timeline_mode, "barrier");
+        let e = c
+            .apply_toml(&toml::parse("timeline = \"overlap\"\n").unwrap())
+            .unwrap_err();
+        assert!(e.to_string().contains("barrier|pipelined"), "{e}");
     }
 
     #[test]

@@ -17,12 +17,19 @@
 //!
 //! Frameworks ([`frameworks`]): EPSL (any φ), PSL (φ=0), SFL (PSL +
 //! client-model FedAvg each round), vanilla SL (sequential with model
-//! relay), EPSL-PT (φ=1 → φ=0 switch).
+//! relay), EPSL-PT (φ=1 → φ=0 switch). Every framework's round is a
+//! declarative [`RoundPlan`] (turn scheduling × φ × model sync) executed
+//! by the single engine in [`rounds`]; round-invariant state and the §V
+//! latency accounting (timeline barrier/pipelined modes) live in
+//! [`session`]; [`driver`] is the thin entry point.
 
 pub mod driver;
 pub mod params;
+pub mod rounds;
+pub mod session;
 
-pub use driver::{train, TrainerOptions};
+pub use driver::{train, train_with_state, TrainState, TrainerOptions};
+pub use rounds::{RoundPlan, SyncStyle, TurnStyle};
 
 use crate::latency::frameworks::Framework;
 

@@ -1,0 +1,425 @@
+//! Declarative round plans and the one engine that executes them.
+//!
+//! Every framework's training round used to be one of two divergent
+//! hand-rolled functions (`parallel_round` / `vanilla_round`). Now a
+//! round is data — a [`RoundPlan`] of turn scheduling, effective φ, and
+//! end-of-round model synchronization — and [`execute_round`] is the
+//! single engine that runs any plan through the shared stage sequence:
+//! client FP fan-out → smashed-data concat → fused server step (with the
+//! φ-aggregation inside the graph) → gradient routing (broadcast vs
+//! unicast by the φ-mask) → client BP fan-out → model sync.
+//!
+//! The engine is bit-identical to both legacy round functions: batches
+//! are sampled in the same RNG-stream order, parallel plans run one
+//! C-client turn (one fused server call, `call_many` fan-out), and
+//! sequential plans run C single-client turns against one shared relayed
+//! client model with φ = 0 (all-unicast routing).
+
+use xla::Literal;
+
+use crate::error::{Error, Result};
+use crate::latency::frameworks::Framework;
+use crate::runtime::tensor::{literal_f32, literal_i32, scalar_f32,
+                             to_f32_vec};
+
+use super::params::fedavg;
+use super::phi_at_round;
+use super::session::Session;
+
+/// How a round's client work is scheduled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TurnStyle {
+    /// All C clients advance together: one fused server step over the
+    /// concatenated C·b smashed batch.
+    Parallel,
+    /// One client at a time against the server (vanilla SL), sharing a
+    /// single relayed client-side model.
+    Sequential,
+}
+
+/// End-of-round client-side model synchronization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncStyle {
+    /// Client models never synchronize during training (PSL / EPSL;
+    /// vanilla SL needs none because the model is shared by relay).
+    None,
+    /// λ-weighted FedAvg of the client-side models (SFL).
+    FedAvg,
+}
+
+/// A declarative description of one training round — every framework in
+/// the paper's evaluation is one of these, executed by [`execute_round`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundPlan {
+    pub framework: Framework,
+    /// Effective aggregation ratio φ this round (EPSL-PT flips by round).
+    pub phi: f64,
+    pub turns: TurnStyle,
+    pub sync: SyncStyle,
+}
+
+impl RoundPlan {
+    /// The plan `fw` runs at training round `round`.
+    pub fn for_round(fw: Framework, round: usize, pt_switch: usize)
+        -> RoundPlan {
+        RoundPlan {
+            framework: fw,
+            phi: phi_at_round(fw, round, pt_switch),
+            turns: if matches!(fw, Framework::VanillaSl) {
+                TurnStyle::Sequential
+            } else {
+                TurnStyle::Parallel
+            },
+            sync: if matches!(fw, Framework::Sfl) {
+                SyncStyle::FedAvg
+            } else {
+                SyncStyle::None
+            },
+        }
+    }
+
+    /// Client-side parameter replicas this plan trains: one shared model
+    /// for sequential relay, C independent models otherwise.
+    pub fn param_replicas(&self, n_clients: usize) -> usize {
+        match self.turns {
+            TurnStyle::Parallel => n_clients,
+            TurnStyle::Sequential => 1,
+        }
+    }
+
+    /// Clients per fused server step (C for parallel, 1 for sequential).
+    pub fn server_clients(&self, n_clients: usize) -> usize {
+        match self.turns {
+            TurnStyle::Parallel => n_clients,
+            TurnStyle::Sequential => 1,
+        }
+    }
+
+    /// Which parameter replica `client` trains under this plan.
+    fn param_index(&self, client: usize) -> usize {
+        match self.turns {
+            TurnStyle::Parallel => client,
+            TurnStyle::Sequential => 0,
+        }
+    }
+}
+
+/// Execute one round of `plan`. Returns (weighted loss, train accuracy
+/// over all C·b samples).
+pub(crate) fn execute_round(
+    sess: &mut Session, plan: &RoundPlan,
+    client_params: &mut [Vec<Literal>], server_params: &mut Vec<Literal>,
+) -> Result<(f64, f64)> {
+    let c = sess.opts.n_clients;
+    let b = sess.fam.batch;
+    let cut = sess.opts.cut;
+    let fam = sess.fam;
+    let smash = &fam.smashed_shape[&cut];
+    let smash_len: usize = smash.iter().product();
+
+    let cf_entry = fam.client_fwd.get(&cut).ok_or_else(|| {
+        Error::Artifact(format!("no client_fwd for cut {cut}"))
+    })?;
+    let cs_entry = fam.client_step.get(&cut).ok_or_else(|| {
+        Error::Artifact(format!("no client_step for cut {cut}"))
+    })?;
+
+    let turns: Vec<Vec<usize>> = match plan.turns {
+        TurnStyle::Parallel => vec![(0..c).collect()],
+        TurnStyle::Sequential => (0..c).map(|i| vec![i]).collect(),
+    };
+    let tc = plan.server_clients(c);
+    let st_entry = fam.server_train_entry(cut, tc)?;
+    let (mask, mask_lit) = sess.mask_for(plan.phi)?;
+    let agg_used = mask.iter().any(|m| *m > 0.5);
+    let lam_lit = match plan.turns {
+        TurnStyle::Parallel => sess.lam_lit.clone(),
+        TurnStyle::Sequential => literal_f32(&[1], &[1.0])?,
+    };
+
+    let n_turns = turns.len();
+    let mut loss_sum = 0.0f64;
+    let mut ncorr_sum = 0.0f64;
+    for turn in &turns {
+        // Stages 1-2: client FP + smashed-data uplink. Batches are
+        // sampled serially (the session RNG stream stays deterministic),
+        // then the independent forward passes fan across cores via
+        // call_many (order-preserving, bit-identical to a serial loop).
+        let mut smashed_host = Vec::with_capacity(tc * b * smash_len);
+        let mut labels_host: Vec<i32> = Vec::with_capacity(tc * b);
+        let mut xs = Vec::with_capacity(tc);
+        let mut fwd_batches: Vec<Vec<Literal>> = Vec::with_capacity(tc);
+        for &ci in turn {
+            let (x, _imgs, labels) = sess.batch_literals(ci)?;
+            let mut inputs: Vec<Literal> =
+                client_params[plan.param_index(ci)].to_vec();
+            inputs.push(x.clone());
+            fwd_batches.push(inputs);
+            labels_host.extend(labels);
+            xs.push(x);
+        }
+        for out in sess.rt.call_many(cf_entry, &fwd_batches)? {
+            smashed_host.extend(to_f32_vec(&out[0])?);
+        }
+
+        // Stages 3-4: fused server FP + BP (+ φ-aggregation kernel).
+        let mut smash_shape = vec![tc, b];
+        smash_shape.extend(smash.iter());
+        let mut inputs: Vec<Literal> = server_params.to_vec();
+        inputs.push(literal_f32(&smash_shape, &smashed_host)?);
+        inputs.push(literal_i32(&[tc, b], &labels_host)?);
+        inputs.push(lam_lit.clone());
+        inputs.push(mask_lit.clone());
+        inputs.push(sess.lr_s_lit.clone());
+        let mut out = sess.rt.call(st_entry, &inputs)?;
+        let n_sp = server_params.len();
+        ncorr_sum += scalar_f32(&out[n_sp + 3])? as f64;
+        loss_sum += scalar_f32(&out[n_sp + 2])? as f64;
+        let cut_unagg = to_f32_vec(&out[n_sp + 1])?;
+        // The aggregated payload is only materialized when some mask slot
+        // routes through the broadcast (φ > 0).
+        let cut_agg = if agg_used {
+            to_f32_vec(&out[n_sp])?
+        } else {
+            Vec::new()
+        };
+        out.truncate(n_sp);
+        *server_params = out;
+
+        // Stages 5-7: gradient routing (broadcast payload for aggregated
+        // slots, unicast otherwise) + client BP fan-out.
+        let mut g_cut = vec![0.0f32; b * smash_len];
+        let mut g_shape = vec![b];
+        g_shape.extend(smash.iter());
+        let mut step_batches: Vec<Vec<Literal>> = Vec::with_capacity(tc);
+        for (ti, x) in xs.into_iter().enumerate() {
+            for j in 0..b {
+                let dst = &mut g_cut[j * smash_len..(j + 1) * smash_len];
+                if mask[j] > 0.5 {
+                    // broadcast payload (identical for every client)
+                    dst.copy_from_slice(
+                        &cut_agg[j * smash_len..(j + 1) * smash_len],
+                    );
+                } else {
+                    // unicast payload
+                    let base = (ti * b + j) * smash_len;
+                    dst.copy_from_slice(
+                        &cut_unagg[base..base + smash_len],
+                    );
+                }
+            }
+            let mut inputs: Vec<Literal> =
+                client_params[plan.param_index(turn[ti])].to_vec();
+            inputs.push(x);
+            inputs.push(literal_f32(&g_shape, &g_cut)?);
+            inputs.push(sess.lr_c_lit.clone());
+            step_batches.push(inputs);
+        }
+        for (ti, out) in
+            sess.rt.call_many(cs_entry, &step_batches)?.into_iter().enumerate()
+        {
+            client_params[plan.param_index(turn[ti])] = out;
+        }
+    }
+
+    // Model sync: SFL's per-round client-side FedAvg.
+    if matches!(plan.sync, SyncStyle::FedAvg) {
+        let avg = fedavg(client_params, &sess.lam, fam, cut)?;
+        for cp in client_params.iter_mut() {
+            *cp = avg.clone();
+        }
+    }
+    Ok((
+        loss_sum / n_turns as f64,
+        ncorr_sum / (c * b) as f64,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::driver::{train, train_with_state,
+                                     TrainerOptions};
+    use crate::runtime::artifact::Manifest;
+    use crate::runtime::native::{self, NativeBackend};
+    use crate::scenario::{DynamicChannel, ReoptPolicy, ScenarioSpec};
+
+    /// The smoke tests run for real on the native backend (no skipping):
+    /// the training path is exercised on every `cargo test`.
+    fn setup() -> (NativeBackend, Manifest, Config) {
+        (NativeBackend::new(), native::manifest(), Config::new())
+    }
+
+    fn smoke_opts() -> TrainerOptions {
+        TrainerOptions {
+            n_clients: 2,
+            rounds: 4,
+            eval_every: 2,
+            dataset_size: 400,
+            test_size: 256,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn plans_match_framework_semantics() {
+        let p = RoundPlan::for_round(Framework::Epsl { phi: 0.5 }, 0, 10);
+        assert_eq!(p.turns, TurnStyle::Parallel);
+        assert_eq!(p.sync, SyncStyle::None);
+        assert_eq!(p.phi, 0.5);
+        assert_eq!(p.param_replicas(5), 5);
+        assert_eq!(p.server_clients(5), 5);
+
+        let p = RoundPlan::for_round(Framework::Sfl, 0, 10);
+        assert_eq!(p.sync, SyncStyle::FedAvg);
+        assert_eq!(p.phi, 0.0);
+
+        let p = RoundPlan::for_round(Framework::VanillaSl, 0, 10);
+        assert_eq!(p.turns, TurnStyle::Sequential);
+        assert_eq!(p.param_replicas(5), 1);
+        assert_eq!(p.server_clients(5), 1);
+
+        // EPSL-PT flips φ at the switch round.
+        let fw = Framework::EpslPt { early: true };
+        assert_eq!(RoundPlan::for_round(fw, 9, 10).phi, 1.0);
+        assert_eq!(RoundPlan::for_round(fw, 10, 10).phi, 0.0);
+    }
+
+    #[test]
+    fn sfl_keeps_clients_synchronized() {
+        let (rt, m, cfg) = setup();
+        let opts = TrainerOptions {
+            framework: Framework::Sfl,
+            rounds: 2,
+            eval_every: 10,
+            ..smoke_opts()
+        };
+        // The per-round FedAvg must leave every client with bit-identical
+        // client-side parameters (previously only finiteness was checked).
+        let (run, state) = train_with_state(&rt, &m, &cfg, &opts).unwrap();
+        assert!(run.rounds.iter().all(|r| r.loss.is_finite()));
+        assert_eq!(state.client_params.len(), 2);
+        let reference: Vec<Vec<f32>> = state.client_params[0]
+            .iter()
+            .map(|l| to_f32_vec(l).unwrap())
+            .collect();
+        for (ci, cp) in state.client_params.iter().enumerate().skip(1) {
+            for (t, lit) in cp.iter().enumerate() {
+                assert_eq!(
+                    to_f32_vec(lit).unwrap(),
+                    reference[t],
+                    "client {ci} tensor {t} diverged after SFL FedAvg"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn psl_clients_do_diverge() {
+        // Control for the SFL assertion: without the model exchange the
+        // client models must NOT be synchronized (distinct shards).
+        let (rt, m, cfg) = setup();
+        let opts = TrainerOptions {
+            framework: Framework::Psl,
+            rounds: 2,
+            eval_every: 10,
+            ..smoke_opts()
+        };
+        let (_, state) = train_with_state(&rt, &m, &cfg, &opts).unwrap();
+        let a = to_f32_vec(&state.client_params[0][0]).unwrap();
+        let b = to_f32_vec(&state.client_params[1][0]).unwrap();
+        assert_ne!(a, b, "PSL clients unexpectedly synchronized");
+    }
+
+    #[test]
+    fn missing_cut_is_an_error_not_a_panic() {
+        // Both plan shapes must fail with Error::Artifact when the
+        // manifest has no entries for the requested cut. Each entry kind
+        // is removed separately so both lookup sites stay covered —
+        // client_fwd is checked first, so a combined removal would never
+        // reach the client_step path.
+        let (rt, _, cfg) = setup();
+        for missing in ["client_fwd", "client_step"] {
+            let mut m = native::manifest();
+            let fam = m.families.get_mut("mnist").unwrap();
+            match missing {
+                "client_fwd" => fam.client_fwd.remove(&2),
+                _ => fam.client_step.remove(&2),
+            };
+            for fw in [Framework::VanillaSl, Framework::Epsl { phi: 0.5 }] {
+                let opts = TrainerOptions {
+                    framework: fw,
+                    rounds: 1,
+                    ..smoke_opts()
+                };
+                let e = train(&rt, &m, &cfg, &opts).unwrap_err();
+                assert!(
+                    matches!(e, Error::Artifact(_)),
+                    "{fw:?}/{missing}: unexpected error kind: {e}"
+                );
+                assert!(
+                    e.to_string()
+                        .contains(&format!("no {missing} for cut 2")),
+                    "{fw:?}/{missing}: {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn native_run_is_seed_deterministic_and_thread_invariant() {
+        // Acceptance criterion: same seed ⇒ bit-identical run, for any
+        // thread budget.
+        let (_, m, cfg) = setup();
+        let opts = smoke_opts();
+        let serial = NativeBackend::with_threads(1);
+        let fanned = NativeBackend::with_threads(7);
+        let a = train(&serial, &m, &cfg, &opts).unwrap();
+        let b = train(&fanned, &m, &cfg, &opts).unwrap();
+        let c = train(&fanned, &m, &cfg, &opts).unwrap();
+        for ((ra, rb), rc) in
+            a.rounds.iter().zip(&b.rounds).zip(&c.rounds)
+        {
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+            assert_eq!(ra.train_acc.to_bits(), rb.train_acc.to_bits());
+            assert_eq!(rb.loss.to_bits(), rc.loss.to_bits());
+            assert_eq!(
+                ra.test_acc.map(f64::to_bits),
+                rb.test_acc.map(f64::to_bits)
+            );
+        }
+    }
+
+    #[test]
+    fn sfl_dynamic_channel_smoke() {
+        // The scenario-tracked latency accounting used to be exercised
+        // only on EPSL paths; SFL adds the model-exchange term on top of
+        // the per-round realized rates.
+        let (rt, m, cfg) = setup();
+        let opts = TrainerOptions {
+            framework: Framework::Sfl,
+            rounds: 4,
+            eval_every: 10,
+            dynamic_channel: Some(DynamicChannel {
+                spec: ScenarioSpec::fading(4),
+                policy: ReoptPolicy::Never,
+            }),
+            ..smoke_opts()
+        };
+        let run = train(&rt, &m, &cfg, &opts).unwrap();
+        assert_eq!(run.rounds.len(), 4);
+        assert!(run
+            .rounds
+            .iter()
+            .all(|r| r.sim_latency > 0.0 && r.sim_latency.is_finite()));
+        // Per-round fading must move the simulated latency.
+        let t0 = run.rounds[0].sim_latency;
+        assert!(
+            run.rounds.iter().any(|r| r.sim_latency != t0),
+            "fading never moved the SFL simulated latency"
+        );
+        // SFL's stage breakdown carries the model exchange.
+        assert!(run.rounds.iter().all(|r| r.stages.model_exchange > 0.0));
+    }
+}

@@ -1,0 +1,567 @@
+//! Round-invariant training-session state: data shards, hoisted
+//! literals, the evaluation path, and the §V simulated-latency model
+//! (static frozen draw or per-round dynamic-channel tracking), now
+//! executed through the [`crate::timeline`] event engine in either
+//! `barrier` or `pipelined` mode.
+
+use std::collections::HashMap;
+
+use xla::Literal;
+
+use crate::channel::{ChannelRealization, Deployment};
+use crate::config::{Config, NetworkConfig};
+use crate::data::{Dataset, Shard};
+use crate::error::{Error, Result};
+use crate::latency::frameworks::Framework;
+use crate::latency::LatencyInputs;
+use crate::optim::{bcd, Decision, Problem};
+use crate::profile::resnet18;
+use crate::runtime::artifact::FamilyManifest;
+use crate::runtime::tensor::{literal_f32, literal_i32, scalar_f32};
+use crate::runtime::Backend;
+use crate::scenario::{self, DynamicChannel, Scenario};
+use crate::timeline::{self, Mode, RoundTimeline};
+use crate::util::par;
+use crate::util::rng::Rng;
+
+use super::driver::TrainerOptions;
+use super::params::{fedavg, ParamSet};
+use super::resnet18_cut_for_splitnet;
+
+/// Everything fixed across rounds.
+pub(crate) struct Session<'a> {
+    pub(crate) rt: &'a dyn Backend,
+    pub(crate) fam: &'a FamilyManifest,
+    pub(crate) opts: &'a TrainerOptions,
+    pub(crate) train_set: Dataset,
+    pub(crate) test_set: Dataset,
+    pub(crate) shards: Vec<Shard>,
+    pub(crate) lam: Vec<f32>,
+    /// Per-round simulated latency per φ value (resnet18 profile).
+    pub(crate) sim_latency: SimLatency,
+    pub(crate) rng: Rng,
+    /// Round-invariant literals, hoisted out of the hot loop (§Perf).
+    pub(crate) lam_lit: Literal,
+    pub(crate) lr_s_lit: Literal,
+    pub(crate) lr_c_lit: Literal,
+    /// (φ bits) → (mask host vector, mask literal).
+    pub(crate) mask_cache: HashMap<u64, (Vec<f32>, Literal)>,
+}
+
+/// One round's link state for the §V model.
+pub(crate) struct SimRound {
+    pub(crate) f_clients: Vec<f64>,
+    pub(crate) uplink: Vec<f64>,
+    pub(crate) downlink: Vec<f64>,
+    pub(crate) broadcast: f64,
+}
+
+/// Pre-computed stage-latency inputs for the §V model: one [`SimRound`]
+/// per training round under a dynamic-channel scenario, a single frozen
+/// entry otherwise. `mode` picks the timeline execution semantics
+/// (barrier reproduces the closed-form eq. 23 numbers bit-identically).
+pub(crate) struct SimLatency {
+    pub(crate) rounds: Vec<SimRound>,
+    pub(crate) cut: usize,
+    pub(crate) batch: usize,
+    pub(crate) f_server: f64,
+    pub(crate) kappa_server: f64,
+    pub(crate) kappa_client: f64,
+    pub(crate) mode: Mode,
+}
+
+impl SimLatency {
+    /// Simulate this round's timeline (per-stage events + total).
+    pub(crate) fn round_timeline(&self, round: usize, fw: Framework,
+                                 phi: f64) -> RoundTimeline {
+        // Cached profile: this runs once per training round, and the old
+        // per-call Table IV rebuild dominated the simulated-latency cost.
+        let profile = resnet18::profile_static();
+        let r = &self.rounds[round.min(self.rounds.len() - 1)];
+        let inp = LatencyInputs {
+            profile,
+            cut: self.cut,
+            batch: self.batch,
+            phi,
+            f_server: self.f_server,
+            kappa_server: self.kappa_server,
+            kappa_client: self.kappa_client,
+            f_clients: &r.f_clients,
+            uplink: &r.uplink,
+            downlink: &r.downlink,
+            broadcast: r.broadcast,
+        };
+        // For EPSL-PT the effective framework at this round is EPSL{phi}.
+        let fw_eff = match fw {
+            Framework::EpslPt { .. } => Framework::Epsl { phi },
+            other => other,
+        };
+        timeline::simulate(fw_eff, &inp, self.mode)
+    }
+
+    /// This round's simulated latency in seconds.
+    pub(crate) fn round_seconds(&self, round: usize, fw: Framework,
+                                phi: f64) -> f64 {
+        self.round_timeline(round, fw, phi).total
+    }
+}
+
+pub(crate) fn build_sim_latency(cfg: &Config, opts: &TrainerOptions,
+                                rng: &mut Rng) -> Result<SimLatency> {
+    let net = cfg.net.clone().with_clients(opts.n_clients);
+    let profile = resnet18::profile_static();
+    let cut = resnet18_cut_for_splitnet(opts.cut);
+    if let Some(dc) = &opts.dynamic_channel {
+        return build_dynamic_sim_latency(cfg, opts, &net, cut, dc, rng);
+    }
+    let dep = Deployment::generate(&net, rng);
+    let ch = ChannelRealization::average(&dep);
+    let prob = Problem {
+        cfg: &net,
+        profile,
+        dep: &dep,
+        ch: &ch,
+        batch: cfg.train.batch,
+        phi: opts.framework.phi(),
+    };
+    let decision: Decision = if opts.optimize_resources {
+        bcd::solve(&prob, bcd::BcdOptions::default())?.decision
+    } else {
+        // One shared allocation for both the PSD plan and the decision
+        // (the pre-fix code ran rss_allocation twice).
+        crate::optim::baselines::uniform_decision(&prob, cut)
+    };
+    let (up, dn, bc) = prob.rates(&decision);
+    Ok(SimLatency {
+        rounds: vec![SimRound {
+            f_clients: dep.f_clients().to_vec(),
+            uplink: up,
+            downlink: dn,
+            broadcast: bc,
+        }],
+        cut,
+        batch: cfg.train.batch,
+        f_server: net.f_server,
+        kappa_server: net.kappa_server,
+        kappa_client: net.kappa_client,
+        mode: opts.timeline_mode,
+    })
+}
+
+/// Dynamic-channel mode: expand the scenario from the session RNG stream
+/// and track per-round realized rates. With `optimize_resources` the
+/// re-optimization policy drives BCD re-solves (blocks fan across cores);
+/// without it a fixed uniform-power decision at the training cut rides
+/// the varying channel (churn then has no valid meaning — rejected).
+fn build_dynamic_sim_latency(cfg: &Config, opts: &TrainerOptions,
+                             net: &NetworkConfig, cut: usize,
+                             dc: &DynamicChannel, rng: &mut Rng)
+    -> Result<SimLatency> {
+    let profile = resnet18::profile_static();
+    let mut spec = dc.spec.clone();
+    spec.rounds = opts.rounds; // the scenario spans the training run
+    let roster = Deployment::generate(net, rng);
+    let sc = Scenario::from_deployment(net.clone(), roster, spec, rng)?;
+    let rounds: Vec<SimRound> = if opts.optimize_resources {
+        let (outcome, rates) = scenario::run_policy_with_rates(
+            &sc,
+            profile,
+            &scenario::RunOptions {
+                policy: dc.policy,
+                bcd: bcd::BcdOptions::default(),
+                batch: cfg.train.batch,
+                phi: opts.framework.phi(),
+                threads: par::max_threads(),
+                // The policy must react to the latency the run actually
+                // accounts (OnRegression triggers off eval_round's value).
+                timeline_mode: opts.timeline_mode,
+            },
+        );
+        println!(
+            "dynamic channel: {} optimizer solve(s) over {} rounds \
+             (policy {})",
+            outcome.n_solves,
+            sc.n_rounds(),
+            dc.policy.name()
+        );
+        // Latency accounting always prices the *training* cut (same
+        // semantics as the static --optimize path); when a re-solve picked
+        // a different cut its rates were tuned for that cut's payloads —
+        // surface the mismatch instead of silently mixing.
+        let cut_mismatch = rates
+            .iter()
+            .flatten()
+            .filter(|rr| rr.cut != cut)
+            .count();
+        if cut_mismatch > 0 {
+            println!(
+                "dynamic channel: optimizer preferred a different cut \
+                 layer in {cut_mismatch} round(s); accounting keeps the \
+                 training cut {cut}"
+            );
+        }
+        rates
+            .into_iter()
+            .enumerate()
+            .map(|(r, rr)| {
+                rr.ok_or_else(|| {
+                    Error::Optim(format!(
+                        "dynamic channel: resource solve failed at round {r}"
+                    ))
+                })
+            })
+            .collect::<Result<Vec<scenario::RoundRates>>>()?
+            .into_iter()
+            .map(|rr| SimRound {
+                f_clients: rr.f_clients,
+                uplink: rr.uplink,
+                downlink: rr.downlink,
+                broadcast: rr.broadcast,
+            })
+            .collect()
+    } else {
+        if !matches!(dc.policy, scenario::ReoptPolicy::Never) {
+            return Err(Error::Config(format!(
+                "dynamic channel: re-optimization policy '{}' requires \
+                 optimize_resources (without it a fixed uniform-power \
+                 decision rides the channel; pass --optimize, or use \
+                 --reopt never)",
+                dc.policy.name()
+            )));
+        }
+        if sc.rounds.iter().any(|r| r.membership_changed) {
+            return Err(Error::Config(
+                "dynamic channel with churn requires optimize_resources: a \
+                 fixed uniform decision cannot follow membership changes"
+                    .into(),
+            ));
+        }
+        let avg = ChannelRealization::average(&sc.roster);
+        let base = Problem {
+            cfg: net,
+            profile,
+            dep: &sc.roster,
+            ch: &avg,
+            batch: cfg.train.batch,
+            phi: opts.framework.phi(),
+        };
+        let d = crate::optim::baselines::uniform_decision(&base, cut);
+        sc.rounds
+            .iter()
+            .map(|round| {
+                let prob = Problem {
+                    cfg: net,
+                    profile,
+                    dep: &round.dep,
+                    ch: &round.ch,
+                    batch: cfg.train.batch,
+                    phi: opts.framework.phi(),
+                };
+                let (up, dn, bc) = prob.rates(&d);
+                SimRound {
+                    f_clients: round.dep.f_clients().to_vec(),
+                    uplink: up,
+                    downlink: dn,
+                    broadcast: bc,
+                }
+            })
+            .collect()
+    };
+    Ok(SimLatency {
+        rounds,
+        cut,
+        batch: cfg.train.batch,
+        f_server: net.f_server,
+        kappa_server: net.kappa_server,
+        kappa_client: net.kappa_client,
+        mode: opts.timeline_mode,
+    })
+}
+
+/// Fail fast when the fixed-shape eval artifact can never see one full
+/// chunk: every chunk would hit the ragged-tail `break` in
+/// [`Session::evaluate`] and the accuracy column would be silently
+/// missing for the whole run.
+pub(crate) fn check_eval_batch(test_size: usize, eval_batch: usize)
+    -> Result<()> {
+    if test_size < eval_batch {
+        return Err(Error::Config(format!(
+            "test_size {test_size} < eval_batch {eval_batch}: evaluation \
+             would drop every chunk and report NaN accuracy — raise \
+             test_size to at least the artifact eval batch"
+        )));
+    }
+    Ok(())
+}
+
+/// Build the aggregation mask for ⌈φb⌉ slots.
+pub(crate) fn mask_vec(phi: f64, b: usize) -> Vec<f32> {
+    let m = (phi * b as f64).ceil() as usize;
+    (0..b).map(|j| if j < m { 1.0 } else { 0.0 }).collect()
+}
+
+impl<'a> Session<'a> {
+    /// Cached aggregation mask for this φ (host copy + literal).
+    pub(crate) fn mask_for(&mut self, phi: f64)
+        -> Result<(Vec<f32>, Literal)> {
+        let key = phi.to_bits();
+        if let Some((v, l)) = self.mask_cache.get(&key) {
+            return Ok((v.clone(), l.clone()));
+        }
+        let v = mask_vec(phi, self.fam.batch);
+        let l = literal_f32(&[self.fam.batch], &v)?;
+        self.mask_cache.insert(key, (v.clone(), l.clone()));
+        Ok((v, l))
+    }
+
+    pub(crate) fn batch_literals(&mut self, client: usize)
+        -> Result<(Literal, Vec<f32>, Vec<i32>)> {
+        let b = self.fam.batch;
+        let idx = self.shards[client].sample_batch(b, &mut self.rng);
+        let (imgs, labels) = self.train_set.gather(&idx);
+        let x = literal_f32(
+            &[b, self.fam.img, self.fam.img, self.fam.channels],
+            &imgs,
+        )?;
+        Ok((x, imgs, labels))
+    }
+
+    /// Test accuracy of the λ-averaged model (full test set, chunked).
+    pub(crate) fn evaluate(&mut self, client_params: &[Vec<Literal>],
+                           server_params: &[Literal]) -> Result<f64> {
+        let fam = self.fam;
+        let cut = self.opts.cut;
+        let avg_client = if client_params.len() == 1 {
+            client_params[0].clone()
+        } else {
+            fedavg(client_params, &self.lam, fam, cut)?
+        };
+        let full = ParamSet::join(&avg_client, server_params);
+        let eb = fam.eval_batch;
+        let mut correct = 0.0;
+        let mut total = 0.0;
+        let img_len = self.test_set.image_len();
+        let n_chunks = self.test_set.n / eb;
+        for chunk in 0..n_chunks.max(1) {
+            let lo = chunk * eb;
+            let hi = ((chunk + 1) * eb).min(self.test_set.n);
+            if hi - lo < eb {
+                break; // artifacts are fixed-shape; drop the ragged tail
+            }
+            let idx: Vec<usize> = (lo..hi).collect();
+            let (imgs, labels) = self.test_set.gather(&idx);
+            debug_assert_eq!(imgs.len(), eb * img_len);
+            let mut inputs: Vec<Literal> = full.clone();
+            inputs.push(literal_f32(
+                &[eb, fam.img, fam.img, fam.channels],
+                &imgs,
+            )?);
+            inputs.push(literal_i32(&[eb], &labels)?);
+            let out = self.rt.call(&fam.eval, &inputs)?;
+            correct += scalar_f32(&out[1])? as f64;
+            total += eb as f64;
+        }
+        if total == 0.0 {
+            // train() rejects this up front (check_eval_batch); kept as a
+            // defensive guard against silently reporting NaN accuracy.
+            return Err(Error::Data(format!(
+                "evaluate: test set of {} samples yields no full \
+                 eval chunk (eval_batch {eb})",
+                self.test_set.n
+            )));
+        }
+        Ok(correct / total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_vec_counts() {
+        assert_eq!(mask_vec(0.5, 32).iter().sum::<f32>(), 16.0);
+        assert_eq!(mask_vec(0.0, 32).iter().sum::<f32>(), 0.0);
+        assert_eq!(mask_vec(1.0, 32).iter().sum::<f32>(), 32.0);
+        assert_eq!(mask_vec(0.01, 32).iter().sum::<f32>(), 1.0);
+    }
+
+    #[test]
+    fn small_test_set_fails_fast() {
+        // Pre-fix, test_size < eval_batch made every eval chunk hit the
+        // ragged-tail break and the run reported no accuracy at all; now
+        // it is rejected up front with a descriptive error.
+        assert!(check_eval_batch(100, 256).is_err());
+        assert!(check_eval_batch(256, 256).is_ok());
+        assert!(check_eval_batch(300, 256).is_ok());
+        let e = check_eval_batch(10, 64).unwrap_err();
+        assert!(e.to_string().contains("NaN"), "{e}");
+        assert!(e.to_string().contains("eval_batch 64"), "{e}");
+    }
+
+    #[test]
+    fn sim_latency_static_is_single_frozen_entry() {
+        let cfg = Config::new();
+        let opts = TrainerOptions::default();
+        let mut rng = Rng::new(1);
+        let s = build_sim_latency(&cfg, &opts, &mut rng).unwrap();
+        assert_eq!(s.rounds.len(), 1);
+        let t = s.round_seconds(0, opts.framework, 0.5);
+        assert!(t > 0.0);
+        // Any round index maps onto the frozen entry.
+        assert_eq!(
+            t.to_bits(),
+            s.round_seconds(99, opts.framework, 0.5).to_bits()
+        );
+    }
+
+    #[test]
+    fn sim_latency_static_decision_bit_identical_to_prefix_construction() {
+        // Regression guard for the single-allocation fix: the frozen-draw
+        // rates must match the pre-fix double-rss_allocation construction
+        // bit for bit (same RNG stream, same decision).
+        let cfg = Config::new();
+        let opts = TrainerOptions::default();
+        let mut rng = Rng::new(3);
+        let s = build_sim_latency(&cfg, &opts, &mut rng).unwrap();
+        let mut rng = Rng::new(3);
+        let net = cfg.net.clone().with_clients(opts.n_clients);
+        let dep = Deployment::generate(&net, &mut rng);
+        let ch = ChannelRealization::average(&dep);
+        let profile = resnet18::profile_static();
+        let prob = Problem {
+            cfg: &net,
+            profile,
+            dep: &dep,
+            ch: &ch,
+            batch: cfg.train.batch,
+            phi: opts.framework.phi(),
+        };
+        // The pre-fix construction: two independent rss_allocation calls.
+        let psd = crate::optim::baselines::uniform_power(
+            &prob,
+            &crate::optim::baselines::rss_allocation(&prob),
+        );
+        let alloc = crate::optim::baselines::rss_allocation(&prob);
+        let legacy = Decision {
+            alloc,
+            psd_dbm_hz: psd,
+            cut: resnet18_cut_for_splitnet(opts.cut),
+        };
+        let (up, dn, bc) = prob.rates(&legacy);
+        assert_eq!(s.rounds[0].uplink, up);
+        assert_eq!(s.rounds[0].downlink, dn);
+        assert_eq!(s.rounds[0].broadcast.to_bits(), bc.to_bits());
+    }
+
+    #[test]
+    fn barrier_sim_matches_closed_form_and_pipelined_is_leq() {
+        // The timeline refactor contract at the SimLatency layer: barrier
+        // mode reproduces round_latency bit for bit; pipelined mode (same
+        // RNG stream, same rates) never reports a slower round.
+        use crate::latency::frameworks::round_latency;
+        let cfg = Config::new();
+        let barrier_opts = TrainerOptions::default();
+        let pipe_opts = TrainerOptions {
+            timeline_mode: Mode::Pipelined,
+            ..TrainerOptions::default()
+        };
+        let mut rng = Rng::new(7);
+        let sb = build_sim_latency(&cfg, &barrier_opts, &mut rng).unwrap();
+        let mut rng = Rng::new(7);
+        let sp = build_sim_latency(&cfg, &pipe_opts, &mut rng).unwrap();
+        for fw in [
+            Framework::Epsl { phi: 0.5 },
+            Framework::Psl,
+            Framework::Sfl,
+            Framework::VanillaSl,
+        ] {
+            let tb = sb.round_seconds(0, fw, fw.phi());
+            let tp = sp.round_seconds(0, fw, fw.phi());
+            let r = &sb.rounds[0];
+            let inp = LatencyInputs {
+                profile: resnet18::profile_static(),
+                cut: sb.cut,
+                batch: sb.batch,
+                phi: fw.phi(),
+                f_server: sb.f_server,
+                kappa_server: sb.kappa_server,
+                kappa_client: sb.kappa_client,
+                f_clients: &r.f_clients,
+                uplink: &r.uplink,
+                downlink: &r.downlink,
+                broadcast: r.broadcast,
+            };
+            let closed = round_latency(fw, &inp).round_total();
+            assert_eq!(tb.to_bits(), closed.to_bits(), "{}", fw.name());
+            assert!(tp <= tb, "{}: {tp} > {tb}", fw.name());
+        }
+        // The Table-III deployment is heterogeneous (compute draws +
+        // distance-dependent gains): EPSL must strictly gain.
+        let tb = sb.round_seconds(0, Framework::Epsl { phi: 0.5 }, 0.5);
+        let tp = sp.round_seconds(0, Framework::Epsl { phi: 0.5 }, 0.5);
+        assert!(tp < tb, "no pipelining gain on heterogeneous fixture");
+    }
+
+    #[test]
+    fn sim_latency_dynamic_tracks_the_scenario() {
+        use crate::scenario::{ReoptPolicy, ScenarioSpec};
+        let cfg = Config::new();
+        let opts = TrainerOptions {
+            rounds: 6,
+            dynamic_channel: Some(DynamicChannel {
+                spec: ScenarioSpec::fading(6),
+                policy: ReoptPolicy::Never,
+            }),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(2);
+        let s = build_sim_latency(&cfg, &opts, &mut rng).unwrap();
+        assert_eq!(s.rounds.len(), 6, "one entry per training round");
+        let t0 = s.round_seconds(0, opts.framework, 0.5);
+        assert!(t0 > 0.0);
+        assert!(
+            (1..6).any(|r| s.round_seconds(r, opts.framework, 0.5) != t0),
+            "per-round fading never moved the simulated latency"
+        );
+    }
+
+    #[test]
+    fn dynamic_policy_without_optimizer_rejected() {
+        use crate::scenario::{ReoptPolicy, ScenarioSpec};
+        let cfg = Config::new();
+        let opts = TrainerOptions {
+            rounds: 3,
+            dynamic_channel: Some(DynamicChannel {
+                spec: ScenarioSpec::fading(3),
+                policy: ReoptPolicy::EveryK(1),
+            }),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(5);
+        let e = build_sim_latency(&cfg, &opts, &mut rng).unwrap_err();
+        assert!(e.to_string().contains("optimize_resources"), "{e}");
+    }
+
+    #[test]
+    fn sim_latency_dynamic_with_optimizer_and_policy() {
+        use crate::scenario::{ReoptPolicy, ScenarioSpec};
+        let cfg = Config::new();
+        let opts = TrainerOptions {
+            n_clients: 3,
+            rounds: 4,
+            optimize_resources: true,
+            dynamic_channel: Some(DynamicChannel {
+                spec: ScenarioSpec::fading(4),
+                policy: ReoptPolicy::EveryK(2),
+            }),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(4);
+        let s = build_sim_latency(&cfg, &opts, &mut rng).unwrap();
+        assert_eq!(s.rounds.len(), 4);
+        for r in 0..4 {
+            assert!(s.round_seconds(r, opts.framework, 0.5) > 0.0);
+        }
+    }
+}

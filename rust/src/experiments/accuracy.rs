@@ -158,8 +158,7 @@ pub fn accuracy_smoke(ctx: &mut Ctx) -> Result<()> {
         let evaluated: Vec<f64> = run
             .rounds
             .iter()
-            .filter(|r| !r.test_acc.is_nan())
-            .map(|r| r.test_acc)
+            .filter_map(|r| r.test_acc)
             .collect();
         if evaluated.is_empty()
             || evaluated.iter().any(|a| !a.is_finite())

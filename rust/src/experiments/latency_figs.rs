@@ -23,6 +23,7 @@ use crate::profile::resnet18;
 use crate::scenario::{
     self, ReoptPolicy, RunOptions, Scenario, ScenarioCell, ScenarioSpec,
 };
+use crate::timeline::Mode;
 use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::stats::mean;
@@ -352,6 +353,7 @@ pub fn fig13_point(net: &NetworkConfig, batch: usize, phi: f64,
             batch,
             phi,
             threads,
+            timeline_mode: Mode::Barrier,
         },
     );
     let oracle = scenario::run_policy(
@@ -363,6 +365,7 @@ pub fn fig13_point(net: &NetworkConfig, batch: usize, phi: f64,
             batch,
             phi,
             threads,
+            timeline_mode: Mode::Barrier,
         },
     );
     // This repeats the fixed run's average-gains solve (bit-identical
@@ -378,6 +381,7 @@ pub fn fig13_point(net: &NetworkConfig, batch: usize, phi: f64,
             batch,
             phi,
             threads,
+            timeline_mode: Mode::Barrier,
         },
     );
     let t_static =
@@ -498,6 +502,7 @@ pub fn fig13b(ctx: &mut Ctx) -> Result<()> {
                     seed: 0x13B0 + s,
                     batch: ctx.cfg.train.batch,
                     phi: ctx.cfg.train.phi,
+                    timeline_mode: Mode::Barrier,
                 });
             }
         }

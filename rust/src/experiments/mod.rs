@@ -16,6 +16,7 @@
 //! | fig12  | per-round latency vs server compute (5 schemes) |
 //! | fig13  | robustness to channel variation |
 //! | fig13b | re-optimization policy vs channel coherence (scenario sweep; repo extension) |
+//! | fig_pipeline | barrier vs pipelined timeline latency across cuts and C (repo extension) |
 //!
 //! Training-backed experiments (table5, fig4, fig7–10) run the real
 //! coordinator over the selected backend — PJRT when artifacts exist,
@@ -27,6 +28,7 @@
 
 pub mod accuracy;
 pub mod latency_figs;
+pub mod pipeline;
 pub mod sweep;
 pub mod tables;
 
@@ -97,8 +99,8 @@ impl<'a> Ctx<'a> {
 
 /// All experiment ids in regeneration order.
 pub const ALL_IDS: &[&str] = &[
-    "table1", "table4", "fig11", "fig12", "fig13", "fig13b", "table5",
-    "fig4", "fig7", "fig8", "fig9", "fig10",
+    "table1", "table4", "fig11", "fig12", "fig13", "fig13b",
+    "fig_pipeline", "table5", "fig4", "fig7", "fig8", "fig9", "fig10",
 ];
 
 /// Run one experiment by id.
@@ -122,9 +124,40 @@ pub fn run(id: &str, ctx: &mut Ctx) -> Result<()> {
         "fig12" => latency_figs::fig12(ctx),
         "fig13" => latency_figs::fig13(ctx),
         "fig13b" => latency_figs::fig13b(ctx),
+        "fig_pipeline" => pipeline::fig_pipeline(ctx),
         other => Err(Error::Config(format!(
             "unknown experiment '{other}' (known: {ALL_IDS:?})"
         ))),
+    }
+}
+
+/// Run every registered experiment, collecting per-figure failures
+/// instead of aborting the sweep on the first one. Failures are reported
+/// together at the end and propagate as one error (→ non-zero exit), so
+/// a single broken figure can no longer take down the regeneration of
+/// everything after it.
+pub fn run_all(ctx: &mut Ctx) -> Result<()> {
+    run_ids(ALL_IDS, ctx)
+}
+
+/// [`run_all`] over an explicit id list (exposed for tests).
+pub fn run_ids(ids: &[&str], ctx: &mut Ctx) -> Result<()> {
+    let mut failed: Vec<String> = Vec::new();
+    for id in ids {
+        if let Err(e) = run(id, ctx) {
+            eprintln!("experiment {id} FAILED: {e}");
+            failed.push(format!("{id}: {e}"));
+        }
+    }
+    if failed.is_empty() {
+        Ok(())
+    } else {
+        Err(Error::Runtime(format!(
+            "{}/{} experiments failed:\n  {}",
+            failed.len(),
+            ids.len(),
+            failed.join("\n  ")
+        )))
     }
 }
 
@@ -152,5 +185,27 @@ mod tests {
     fn training_experiments_require_runtime() {
         let mut ctx = Ctx::new(Config::new(), None, None, "/tmp/epsl_res", true);
         assert!(run("table5", &mut ctx).is_err());
+    }
+
+    #[test]
+    fn run_ids_collects_failures_and_keeps_going() {
+        // A failing id in the middle must not stop the sweep: the ids
+        // after it still run, and the aggregate error names the failure.
+        let dir = "/tmp/epsl_res_run_ids";
+        let _ = std::fs::remove_dir_all(dir);
+        let mut ctx = Ctx::new(Config::new(), None, None, dir, true);
+        let e = run_ids(&["table1", "nope", "table4"], &mut ctx)
+            .unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("1/3"), "{msg}");
+        assert!(msg.contains("nope"), "{msg}");
+        // table4 (after the failure) still produced its artifact.
+        assert!(
+            std::path::Path::new(dir).join("table4.csv").exists()
+                || std::path::Path::new(dir).join("table4.txt").exists(),
+            "table4 did not run after the failed id"
+        );
+        // An all-good list is Ok.
+        assert!(run_ids(&["table1", "table4"], &mut ctx).is_ok());
     }
 }

@@ -89,16 +89,24 @@ pub fn round_latency(fw: Framework, inp: &LatencyInputs) -> StageLatencies {
     }
 }
 
+/// SFL model-exchange components: per-client model upload seconds
+/// (unicast over each client's own subchannels) and the aggregated-model
+/// broadcast seconds. Exposed separately so the timeline engine can
+/// overlap the uploads with the round tail; [`round_latency`] composes
+/// them into the single serial term the closed form uses.
+pub fn sfl_exchange_parts(inp: &LatencyInputs) -> (Vec<f64>, f64) {
+    let u = inp.profile.client_model_bits(inp.cut);
+    let uploads: Vec<f64> =
+        inp.uplink.iter().map(|r| u / r.max(1e-9)).collect();
+    let down = u / inp.broadcast.max(1e-9);
+    (uploads, down)
+}
+
 /// SFL model-exchange time: slowest client-model upload (unicast over the
 /// client's own subchannels) + aggregated-model broadcast.
 fn sfl_model_exchange(inp: &LatencyInputs) -> f64 {
-    let u = inp.profile.client_model_bits(inp.cut);
-    let up_max = inp
-        .uplink
-        .iter()
-        .map(|r| u / r.max(1e-9))
-        .fold(0.0, f64::max);
-    let down = u / inp.broadcast.max(1e-9);
+    let (uploads, down) = sfl_exchange_parts(inp);
+    let up_max = uploads.iter().cloned().fold(0.0, f64::max);
     up_max + down
 }
 

@@ -123,6 +123,19 @@ impl StageLatencies {
         let dmax = self.downlink.iter().cloned().fold(0.0, f64::max);
         umax + self.broadcast + dmax + self.model_exchange
     }
+
+    /// Total computation seconds (client FP straggler + server FP/BP +
+    /// client BP straggler) — the complement of [`comm_seconds`]. Because
+    /// the round total pairs each client's compute with its own links
+    /// (`max_i(T_i^F + T_i^U)`), the split satisfies
+    /// `comm_seconds + compute_seconds ≥ round_total`, with equality when
+    /// the per-client stage maxima are achieved by the same client (e.g.
+    /// homogeneous clients, or C = 1).
+    pub fn compute_seconds(&self) -> f64 {
+        let fmax = self.client_fp.iter().cloned().fold(0.0, f64::max);
+        let bmax = self.client_bp.iter().cloned().fold(0.0, f64::max);
+        fmax + self.server_fp + self.server_bp + bmax
+    }
 }
 
 /// Compute the seven EPSL stage latencies (eqs. 13, 15–17, 19, 21–22).

@@ -27,6 +27,7 @@
 //! | [`profile`] | NN layer profiles: FLOPs ρ/ϖ and payloads ψ/χ — the paper's exact ResNet-18 Table IV plus the trainable SplitNet |
 //! | [`channel`] | mmWave wireless model: path loss, shadowing, subchannels, link rates (eqs. 14, 18, 20) |
 //! | [`latency`] | the seven per-stage latencies and the round total (eqs. 13–23) for EPSL and every baseline framework |
+//! | [`timeline`] | event-timeline round engine: a deterministic discrete-event simulator over typed events; `barrier` mode reproduces eq. 23 bit-identically, `pipelined` mode overlaps phases per client/link |
 //! | [`optim`] | the resource-management solver: greedy subchannel allocation (Alg. 2), convex power control (P2), cut-layer B&B MILP (P3), closed-form LP (P4), BCD (Alg. 3), baselines a–d |
 //! | [`data`] | synthetic datasets + IID / non-IID partitioners |
 //! | [`runtime`] | the execution-backend seam: PJRT execution of the AOT artifacts (HLO text → compile → execute) and the pure-Rust native backend (`runtime::native`) that implements the same entry-point contract on host f32 buffers — auto-selected when artifacts are absent |
@@ -47,6 +48,7 @@ pub mod optim;
 pub mod profile;
 pub mod runtime;
 pub mod scenario;
+pub mod timeline;
 pub mod util;
 
 pub use error::{Error, Result};

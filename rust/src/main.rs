@@ -45,6 +45,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "reopt", takes_value: true, help: "re-opt policy: never|every:<k>|regress:<x>|oracle (implies --dynamic-channel)" },
         FlagSpec { name: "scheme", takes_value: true, help: "a|b|c|d|proposed (optimize)" },
         FlagSpec { name: "backend", takes_value: true, help: "auto|native|pjrt (training backend)" },
+        FlagSpec { name: "timeline", takes_value: true, help: "latency timeline mode: barrier|pipelined" },
         FlagSpec { name: "artifacts", takes_value: true, help: "artifacts dir" },
         FlagSpec { name: "help", takes_value: false, help: "print help" },
     ]
@@ -127,7 +128,12 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    if let Some(t) = args.get("timeline") {
+        cfg.timeline_mode = t.to_string();
+        cfg.validate()?;
+    }
+    let timeline_mode = epsl::timeline::Mode::parse(&cfg.timeline_mode)?;
     let phi = args.f64("phi")?.unwrap_or(0.5);
     let fw = parse_framework(args.get("framework").unwrap_or("epsl"), phi)
         .map_err(|e| anyhow::anyhow!(e))?;
@@ -166,23 +172,25 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         seed: args.usize("seed")?.unwrap_or(2023) as u64,
         optimize_resources: args.has("optimize"),
         dynamic_channel,
+        timeline_mode,
         ..Default::default()
     };
     let sel = pick_backend(&cfg)?;
     println!(
-        "training {} C={} cut={} rounds={} family={}",
+        "training {} C={} cut={} rounds={} family={} timeline={}",
         opts.framework.name(),
         opts.n_clients,
         opts.cut,
         opts.rounds,
-        opts.family
+        opts.family,
+        opts.timeline_mode.name()
     );
     let run = train(sel.backend.as_ref(), &sel.manifest, &cfg, &opts)?;
     for r in &run.rounds {
-        if !r.test_acc.is_nan() {
+        if let Some(acc) = r.test_acc {
             println!(
                 "round {:>4}: loss {:.4}  train {:.3}  test {:.3}  sim {:.2}s",
-                r.round, r.loss, r.train_acc, r.test_acc, r.sim_latency
+                r.round, r.loss, r.train_acc, acc, r.sim_latency
             );
         }
     }
@@ -292,9 +300,9 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
         quick,
     );
     if args.has("all") {
-        for id in experiments::ALL_IDS {
-            experiments::run(id, &mut ctx)?;
-        }
+        // One failed figure must not abort the sweep: failures are
+        // collected, reported at the end, and propagate a non-zero exit.
+        experiments::run_all(&mut ctx)?;
     } else if let Some(id) = args.get("id") {
         experiments::run(id, &mut ctx)?;
     } else {

@@ -2,6 +2,7 @@
 
 use std::fmt::Write as _;
 
+use crate::timeline::StageSpans;
 use crate::util::stats;
 
 /// One training round's record.
@@ -12,10 +13,14 @@ pub struct RoundRecord {
     pub loss: f64,
     /// Training mini-batch accuracy over C·b samples.
     pub train_acc: f64,
-    /// Test accuracy (NaN when not evaluated this round).
-    pub test_acc: f64,
-    /// Simulated per-round latency from the §V model (seconds).
+    /// Test accuracy (`None` when the round was not evaluated — emitted
+    /// as an empty CSV cell, never a NaN sentinel).
+    pub test_acc: Option<f64>,
+    /// Simulated per-round latency from the timeline engine (seconds).
     pub sim_latency: f64,
+    /// Per-stage breakdown of `sim_latency` (uplink phase, server FP/BP,
+    /// broadcast, downlink phase, model exchange).
+    pub stages: StageSpans,
     /// Wall-clock milliseconds actually spent executing the round.
     pub wall_ms: f64,
 }
@@ -49,8 +54,7 @@ impl RunMetrics {
     pub fn accuracy_curve(&self) -> Vec<(f64, f64)> {
         self.rounds
             .iter()
-            .filter(|r| !r.test_acc.is_nan())
-            .map(|r| (r.round as f64, r.test_acc))
+            .filter_map(|r| r.test_acc.map(|a| (r.round as f64, a)))
             .collect()
     }
 
@@ -59,15 +63,21 @@ impl RunMetrics {
         self.rounds.iter().map(|r| (r.round as f64, r.loss)).collect()
     }
 
-    /// Final test accuracy: mean of the last `k` evaluated points
-    /// (the paper's "converged test accuracy").
-    pub fn converged_accuracy(&self, k: usize) -> f64 {
-        let pts: Vec<f64> = self
-            .rounds
+    /// Evaluated (record index, accuracy) pairs in round order.
+    fn evaluated(&self) -> Vec<(usize, f64)> {
+        self.rounds
             .iter()
-            .filter(|r| !r.test_acc.is_nan())
-            .map(|r| r.test_acc)
-            .collect();
+            .enumerate()
+            .filter_map(|(i, r)| r.test_acc.map(|a| (i, a)))
+            .collect()
+    }
+
+    /// Final test accuracy: mean of the last `k` evaluated points
+    /// (the paper's "converged test accuracy"). NaN when the run was
+    /// never evaluated.
+    pub fn converged_accuracy(&self, k: usize) -> f64 {
+        let pts: Vec<f64> =
+            self.evaluated().into_iter().map(|(_, a)| a).collect();
         if pts.is_empty() {
             return f64::NAN;
         }
@@ -78,13 +88,7 @@ impl RunMetrics {
     /// Simulated latency (seconds) until the EMA-smoothed test accuracy
     /// first reaches `target`; `None` if never reached.
     pub fn latency_to_accuracy(&self, target: f64) -> Option<f64> {
-        let evaluated: Vec<(usize, f64)> = self
-            .rounds
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| !r.test_acc.is_nan())
-            .map(|(i, r)| (i, r.test_acc))
-            .collect();
+        let evaluated = self.evaluated();
         let series: Vec<f64> = evaluated.iter().map(|(_, a)| *a).collect();
         let hit = stats::rounds_to_target(&series, target, 0.5)?;
         let round_idx = evaluated[hit].0;
@@ -93,27 +97,41 @@ impl RunMetrics {
 
     /// Rounds until the smoothed test accuracy reaches `target`.
     pub fn rounds_to_accuracy(&self, target: f64) -> Option<usize> {
-        let evaluated: Vec<(usize, f64)> = self
-            .rounds
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| !r.test_acc.is_nan())
-            .map(|(i, r)| (i, r.test_acc))
-            .collect();
+        let evaluated = self.evaluated();
         let series: Vec<f64> = evaluated.iter().map(|(_, a)| *a).collect();
         let hit = stats::rounds_to_target(&series, target, 0.5)?;
         Some(self.rounds[evaluated[hit].0].round)
     }
 
-    /// CSV dump (one row per round).
+    /// CSV dump (one row per round; unevaluated `test_acc` is an empty
+    /// cell; the six timeline stage spans follow the total).
     pub fn to_csv(&self) -> String {
-        let mut out =
-            String::from("round,loss,train_acc,test_acc,sim_latency_s,wall_ms\n");
+        let mut out = String::from(
+            "round,loss,train_acc,test_acc,sim_latency_s,t_uplink_s,\
+             t_server_fp_s,t_server_bp_s,t_broadcast_s,t_downlink_s,\
+             t_exchange_s,wall_ms\n",
+        );
         for r in &self.rounds {
+            let acc = match r.test_acc {
+                Some(a) => format!("{a:.4}"),
+                None => String::new(),
+            };
+            let s = &r.stages;
             let _ = writeln!(
                 out,
-                "{},{:.6},{:.4},{:.4},{:.6},{:.3}",
-                r.round, r.loss, r.train_acc, r.test_acc, r.sim_latency,
+                "{},{:.6},{:.4},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},\
+                 {:.6},{:.3}",
+                r.round,
+                r.loss,
+                r.train_acc,
+                acc,
+                r.sim_latency,
+                s.uplink_phase,
+                s.server_fp,
+                s.server_bp,
+                s.broadcast,
+                s.downlink_phase,
+                s.model_exchange,
                 r.wall_ms
             );
         }
@@ -125,17 +143,29 @@ impl RunMetrics {
 mod tests {
     use super::*;
 
+    fn record(i: usize, acc: Option<f64>) -> RoundRecord {
+        RoundRecord {
+            round: i,
+            loss: 1.0 / (i + 1) as f64,
+            train_acc: acc.unwrap_or(0.0),
+            test_acc: acc,
+            sim_latency: 2.0,
+            stages: StageSpans {
+                uplink_phase: 0.5,
+                server_fp: 0.5,
+                server_bp: 0.5,
+                broadcast: 0.25,
+                downlink_phase: 0.25,
+                model_exchange: 0.0,
+            },
+            wall_ms: 1.0,
+        }
+    }
+
     fn run_with(accs: &[f64]) -> RunMetrics {
         let mut m = RunMetrics::new("test");
         for (i, &a) in accs.iter().enumerate() {
-            m.push(RoundRecord {
-                round: i,
-                loss: 1.0 / (i + 1) as f64,
-                train_acc: a,
-                test_acc: a,
-                sim_latency: 2.0,
-                wall_ms: 1.0,
-            });
+            m.push(record(i, Some(a)));
         }
         m
     }
@@ -161,28 +191,43 @@ mod tests {
     fn converged_accuracy_tail_mean() {
         let m = run_with(&[0.0, 0.0, 0.8, 0.9]);
         assert!((m.converged_accuracy(2) - 0.85).abs() < 1e-12);
+        assert!(RunMetrics::new("empty").converged_accuracy(3).is_nan());
     }
 
     #[test]
-    fn nan_test_acc_skipped_in_curves() {
+    fn unevaluated_rounds_skipped_in_curves() {
         let mut m = run_with(&[0.1]);
-        m.push(RoundRecord {
-            round: 1,
-            loss: 0.5,
-            train_acc: 0.5,
-            test_acc: f64::NAN,
-            sim_latency: 1.0,
-            wall_ms: 1.0,
-        });
+        m.push(record(1, None));
         assert_eq!(m.accuracy_curve().len(), 1);
         assert_eq!(m.loss_curve().len(), 2);
+        // Unevaluated rounds do not shift the latency-to-accuracy map.
+        m.push(record(2, Some(0.9)));
+        assert_eq!(m.rounds_to_accuracy(0.05), Some(0));
     }
 
     #[test]
-    fn csv_shape() {
-        let m = run_with(&[0.1, 0.2]);
+    fn csv_shape_and_empty_cells() {
+        let mut m = run_with(&[0.1, 0.2]);
+        m.push(record(2, None));
         let csv = m.to_csv();
-        assert_eq!(csv.lines().count(), 3);
+        assert_eq!(csv.lines().count(), 4);
         assert!(csv.starts_with("round,"));
+        let header_cols = csv.lines().next().unwrap().split(',').count();
+        assert_eq!(header_cols, 12);
+        for line in csv.lines().skip(1) {
+            assert_eq!(line.split(',').count(), header_cols, "{line}");
+        }
+        // The unevaluated round has an empty test_acc cell, not NaN.
+        let last = csv.lines().nth(3).unwrap();
+        assert!(last.starts_with("2,"));
+        assert!(!last.to_lowercase().contains("nan"), "{last}");
+        assert_eq!(last.split(',').nth(3), Some(""));
+    }
+
+    #[test]
+    fn stage_columns_sum_to_total() {
+        let m = run_with(&[0.1]);
+        let r = &m.rounds[0];
+        assert_eq!(r.stages.total(), r.sim_latency);
     }
 }

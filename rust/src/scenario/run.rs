@@ -20,9 +20,12 @@
 //! *realized* gains (`EveryK(1)` is exactly the Fig. 13 oracle).
 
 use crate::channel::ChannelRealization;
+use crate::latency::frameworks::Framework;
+use crate::latency::LatencyInputs;
 use crate::optim::eval::Evaluator;
 use crate::optim::{bcd, Decision, Problem};
 use crate::profile::NetworkProfile;
+use crate::timeline::{self, Mode};
 use crate::util::par;
 use crate::util::stats::mean;
 
@@ -41,6 +44,11 @@ pub struct RunOptions {
     /// Worker threads for the block fan-out (`OnRegression` ignores this
     /// and runs serially).
     pub threads: usize,
+    /// How per-round latency is accounted: `Barrier` evaluates the
+    /// eq. 23 closed form on the `optim::eval` fast path (bit-identical
+    /// to the legacy pipeline); `Pipelined` runs the round's realized
+    /// rates through the timeline engine's overlapped schedule.
+    pub timeline_mode: Mode,
 }
 
 impl RunOptions {
@@ -51,6 +59,7 @@ impl RunOptions {
             batch,
             phi,
             threads: 1,
+            timeline_mode: Mode::Barrier,
         }
     }
 }
@@ -114,9 +123,11 @@ fn round_problem<'a>(sc: &'a Scenario, profile: &'a NetworkProfile,
     }
 }
 
-/// Evaluate `d` on one round: fast-path rates + eq. 23 objective
-/// (bit-identical to `Evaluator::objective`, which is bit-identical to
-/// the reference `Problem::objective`).
+/// Evaluate `d` on one round. Barrier mode: fast-path rates + eq. 23
+/// objective (bit-identical to `Evaluator::objective`, which is
+/// bit-identical to the reference `Problem::objective`). Pipelined mode:
+/// the same realized rates run through the timeline engine's overlapped
+/// schedule (≤ the barrier value, exactly).
 fn eval_round(sc: &Scenario, profile: &NetworkProfile,
               round: &ScenarioRound, d: &Decision, opts: &RunOptions)
     -> (f64, RoundRates) {
@@ -125,13 +136,38 @@ fn eval_round(sc: &Scenario, profile: &NetworkProfile,
     let mut up = Vec::new();
     let mut dn = Vec::new();
     ev.fill_rates(&d.alloc, &d.psd_dbm_hz, &mut up, &mut dn);
-    let t = ev.objective_with_rates(d.cut, &up, &dn);
     let rates = RoundRates {
         cut: d.cut,
         f_clients: round.dep.f_clients().to_vec(),
         uplink: up,
         downlink: dn,
         broadcast: ev.broadcast_rate(),
+    };
+    let t = match opts.timeline_mode {
+        Mode::Barrier => {
+            ev.objective_with_rates(d.cut, &rates.uplink, &rates.downlink)
+        }
+        Mode::Pipelined => {
+            let inp = LatencyInputs {
+                profile,
+                cut: d.cut,
+                batch: opts.batch,
+                phi: opts.phi,
+                f_server: sc.net.f_server,
+                kappa_server: sc.net.kappa_server,
+                kappa_client: sc.net.kappa_client,
+                f_clients: &rates.f_clients,
+                uplink: &rates.uplink,
+                downlink: &rates.downlink,
+                broadcast: rates.broadcast,
+            };
+            timeline::simulate(
+                Framework::Epsl { phi: opts.phi },
+                &inp,
+                Mode::Pipelined,
+            )
+            .total
+        }
     };
     (t, rates)
 }
@@ -383,6 +419,7 @@ mod tests {
             batch: 64,
             phi: 0.5,
             threads,
+            timeline_mode: Mode::Barrier,
         }
     }
 
@@ -483,6 +520,7 @@ mod tests {
                 batch: 64,
                 phi: 0.5,
                 threads: 2,
+                timeline_mode: Mode::Barrier,
             },
         );
         assert_eq!(out.rounds.len(), legacy.len());
@@ -542,6 +580,35 @@ mod tests {
         }
         assert!(a.n_solves >= 1);
         assert_eq!(a.n_failed, 0);
+    }
+
+    #[test]
+    fn pipelined_rounds_never_slower_than_barrier() {
+        // Same scenario, same decisions, same realized rates — the only
+        // difference is the timeline schedule. Every round must satisfy
+        // pipelined ≤ barrier, and the Table-III heterogeneity makes the
+        // run strictly faster in aggregate.
+        let sc = fading_scenario(6, 0x71E);
+        let profile = resnet18::profile();
+        let barrier =
+            run_policy(&sc, &profile, &opts(ReoptPolicy::Never, 1));
+        let mut po = opts(ReoptPolicy::Never, 1);
+        po.timeline_mode = Mode::Pipelined;
+        let pipelined = run_policy(&sc, &profile, &po);
+        assert_eq!(barrier.rounds.len(), pipelined.rounds.len());
+        let mut sum_b = 0.0;
+        let mut sum_p = 0.0;
+        for (a, b) in barrier.rounds.iter().zip(&pipelined.rounds) {
+            let (ta, tb) = (a.latency.unwrap(), b.latency.unwrap());
+            assert!(
+                tb <= ta,
+                "round {}: pipelined {tb} > barrier {ta}",
+                a.round
+            );
+            sum_b += ta;
+            sum_p += tb;
+        }
+        assert!(sum_p < sum_b, "no pipelining gain: {sum_p} vs {sum_b}");
     }
 
     #[test]

@@ -12,6 +12,7 @@
 use crate::config::NetworkConfig;
 use crate::optim::bcd::BcdOptions;
 use crate::profile::NetworkProfile;
+use crate::timeline::Mode;
 use crate::util::par;
 
 use super::engine::Scenario;
@@ -29,6 +30,8 @@ pub struct ScenarioCell {
     pub seed: u64,
     pub batch: usize,
     pub phi: f64,
+    /// Timeline mode for the per-round latency accounting.
+    pub timeline_mode: Mode,
 }
 
 /// Aggregate result of one cell.
@@ -57,6 +60,7 @@ pub fn eval_scenario_cell(profile: &NetworkProfile, cell: &ScenarioCell)
             batch: cell.batch,
             phi: cell.phi,
             threads: 1,
+            timeline_mode: cell.timeline_mode,
         },
     );
     Some(ScenarioSummary {
@@ -98,6 +102,7 @@ mod tests {
                     seed: 0x13B + s,
                     batch: 64,
                     phi: 0.5,
+                    timeline_mode: Mode::Barrier,
                 });
             }
         }
@@ -142,6 +147,7 @@ mod tests {
             seed: 1,
             batch: 64,
             phi: 0.5,
+            timeline_mode: Mode::Barrier,
         };
         assert!(eval_scenario_cell(&profile, &cell).is_none());
     }

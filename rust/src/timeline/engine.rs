@@ -1,0 +1,516 @@
+//! The two execution modes over a [`RoundShape`].
+//!
+//! **Barrier** folds each phase's chain offsets (client FP→uplink,
+//! unicast→client BP) and accumulates phase spans left-to-right — the
+//! exact floating-point association of eq. 23 — so the total is
+//! bit-identical to `round_latency(fw, inp).round_total()`.
+//!
+//! **Pipelined** computes absolute milestone times with overlap:
+//!
+//! - the server forward pass serves smashed-data sub-batches FIFO in
+//!   arrival order (equal shares Φ_s^F/C); slot finish times use the
+//!   idle-free remaining-work form `max_{j≤k}(a_(j) + Φ·(k−j+1)/C)`,
+//!   whose every term is a monotone fp image of the barrier milestone
+//!   `max_i a_i + Φ`, so the pipelined server FP never finishes later;
+//! - broadcast and unicast travel concurrently on their own links; a
+//!   client's BP start is gated by whichever payload lands last, and the
+//!   gating branch also picks the fp association (`(t_bc) + b` vs
+//!   `t_sbp + (d + b)`) that stays dominated by the barrier fold;
+//! - SFL model uploads start as each client finishes BP; the FedAvg
+//!   broadcast follows the last upload.
+//!
+//! The final totals are additionally clamped by the barrier totals: the
+//! barrier schedule is always admissible, so rounding in the overlapped
+//! composition must never report a slower round. `pipelined ≤ barrier`
+//! therefore holds exactly, not "up to an ulp".
+
+use super::event::{sort_events, Event, EventKind};
+use super::plan::{shape_for, Exchange, RoundShape};
+use super::{Mode, StageSpans};
+use crate::latency::frameworks::Framework;
+use crate::latency::LatencyInputs;
+
+/// One simulated round: the typed event log, per-stage spans, and the
+/// round-completion time.
+#[derive(Debug, Clone)]
+pub struct RoundTimeline {
+    pub mode: Mode,
+    /// Events sorted by time (stable — construction order breaks ties).
+    pub events: Vec<Event>,
+    /// Per-stage breakdown (see [`StageSpans`] for the two modes'
+    /// semantics).
+    pub spans: StageSpans,
+    /// Round-completion time in seconds. Barrier: bit-identical to the
+    /// closed-form eq. 23 total. Pipelined: ≤ the barrier total, exactly.
+    pub total: f64,
+}
+
+/// Simulate one round of `fw` under `inp` in the given mode.
+pub fn simulate(fw: Framework, inp: &LatencyInputs, mode: Mode)
+    -> RoundTimeline {
+    let shape = shape_for(fw, inp);
+    match mode {
+        Mode::Barrier => run_barrier(&shape, Mode::Barrier),
+        // Vanilla SL is strictly sequential — nothing overlaps, so the
+        // pipelined schedule degenerates to the barrier one.
+        Mode::Pipelined if shape.sequential => {
+            run_barrier(&shape, Mode::Pipelined)
+        }
+        Mode::Pipelined => run_pipelined(&shape),
+    }
+}
+
+/// Barrier-mode totals (pre-exchange, final) in the eq. 23 association —
+/// shared by the barrier executor and the pipelined clamp.
+fn barrier_totals(shape: &RoundShape) -> (f64, f64) {
+    let mut total = 0.0f64;
+    let mut span = 0.0f64;
+    for (f, u) in shape.client_fp.iter().zip(&shape.uplink) {
+        span = span.max(f + u);
+    }
+    total += span;
+    total += shape.server_fp;
+    total += shape.server_bp;
+    total += shape.broadcast;
+    let mut span = 0.0f64;
+    for (d, b) in shape.downlink.iter().zip(&shape.client_bp) {
+        span = span.max(d + b);
+    }
+    total += span;
+    let pre_exchange = total;
+    let total = match &shape.exchange {
+        Exchange::None => pre_exchange,
+        Exchange::FedAvg { uploads, down } => {
+            let up_max = uploads.iter().cloned().fold(0.0, f64::max);
+            pre_exchange + (up_max + down)
+        }
+        Exchange::Relay(r) => pre_exchange + r,
+    };
+    (pre_exchange, total)
+}
+
+fn run_barrier(shape: &RoundShape, mode: Mode) -> RoundTimeline {
+    let n = shape.n_chains();
+    let mut ev = Vec::with_capacity(4 * n + 8);
+    let mut total = 0.0f64;
+
+    // Phase 1: client FP chained into smashed-data uplink, synchronized
+    // at the server-ingest barrier (phase starts at t = 0).
+    let mut span = 0.0f64;
+    for i in 0..n {
+        let fp = shape.client_fp[i];
+        let arr = fp + shape.uplink[i];
+        ev.push(Event::new(fp, EventKind::ClientFpDone { client: i }));
+        ev.push(Event::new(arr, EventKind::UplinkDone { client: i }));
+        span = span.max(arr);
+    }
+    let uplink_phase = span;
+    total += span;
+
+    // Phases 2–4: serial server FP, server BP (+ aggregation), broadcast.
+    total += shape.server_fp;
+    ev.push(Event::new(total, EventKind::ServerFpDone));
+    total += shape.server_bp;
+    ev.push(Event::new(total, EventKind::GradAggregated));
+    ev.push(Event::new(total, EventKind::ServerBpDone));
+    total += shape.broadcast;
+    ev.push(Event::new(total, EventKind::BroadcastDone));
+
+    // Phase 5: unicast chained into client BP, synchronized at round end.
+    let dl_base = total;
+    let mut span = 0.0f64;
+    for i in 0..n {
+        let d = shape.downlink[i];
+        let done = d + shape.client_bp[i];
+        ev.push(Event::new(
+            dl_base + d,
+            EventKind::DownlinkDone { client: i },
+        ));
+        ev.push(Event::new(
+            dl_base + done,
+            EventKind::ClientBpDone { client: i },
+        ));
+        span = span.max(done);
+    }
+    let downlink_phase = span;
+    total += span;
+
+    // Phase 6: model exchange. The span composes internally exactly as
+    // the closed form's single `model_exchange` term.
+    let model_exchange = match &shape.exchange {
+        Exchange::None => 0.0,
+        Exchange::FedAvg { uploads, down } => {
+            let base = total;
+            let mut up_max = 0.0f64;
+            for (i, u) in uploads.iter().enumerate() {
+                ev.push(Event::new(
+                    base + u,
+                    EventKind::ModelUploadDone { client: i },
+                ));
+                up_max = up_max.max(*u);
+            }
+            up_max + down
+        }
+        Exchange::Relay(r) => *r,
+    };
+    if !matches!(shape.exchange, Exchange::None) {
+        total += model_exchange;
+        ev.push(Event::new(total, EventKind::ModelSyncDone));
+    }
+    ev.push(Event::new(total, EventKind::RoundDone));
+    sort_events(&mut ev);
+
+    // The executor's fold and `barrier_totals` (the pipelined clamp's
+    // source) must stay the same association; the parity suite pins the
+    // executor to the closed form, and this ties the clamp to it.
+    debug_assert_eq!(
+        total.to_bits(),
+        barrier_totals(shape).1.to_bits(),
+        "barrier executor drifted from the shared eq. 23 fold"
+    );
+
+    RoundTimeline {
+        mode,
+        events: ev,
+        spans: StageSpans {
+            uplink_phase,
+            server_fp: shape.server_fp,
+            server_bp: shape.server_bp,
+            broadcast: shape.broadcast,
+            downlink_phase,
+            model_exchange,
+        },
+        total,
+    }
+}
+
+fn run_pipelined(shape: &RoundShape) -> RoundTimeline {
+    let n = shape.n_chains();
+    let nf = n as f64;
+    let mut ev = Vec::with_capacity(5 * n + 8);
+
+    // Client FP → uplink chains (the per-client association is identical
+    // to barrier mode: each client's data lands at a_i = T_i^F + T_i^U).
+    let mut arrivals = Vec::with_capacity(n);
+    for i in 0..n {
+        let fp = shape.client_fp[i];
+        let arr = fp + shape.uplink[i];
+        ev.push(Event::new(fp, EventKind::ClientFpDone { client: i }));
+        ev.push(Event::new(arr, EventKind::UplinkDone { client: i }));
+        arrivals.push(arr);
+    }
+    let t_arr = arrivals.iter().cloned().fold(0.0, f64::max);
+
+    // Server FP: FIFO slots in arrival order, equal shares Φ_s^F/C. The
+    // remaining-work form is idle-gap free and every term is bounded by
+    // max_i a_i + Φ_s^F under monotone fp add/mul (fractions ≤ 1).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&x, &y| {
+        arrivals[x].total_cmp(&arrivals[y]).then(x.cmp(&y))
+    });
+    let mut t_sfp = 0.0f64;
+    for k in 0..n {
+        let mut slot = 0.0f64;
+        for (j, &ci) in order.iter().enumerate().take(k + 1) {
+            let frac = (k - j + 1) as f64 / nf;
+            slot = slot.max(arrivals[ci] + shape.server_fp * frac);
+        }
+        ev.push(Event::new(
+            slot,
+            EventKind::ServerFpSlotDone { client: order[k] },
+        ));
+        t_sfp = slot;
+    }
+    ev.push(Event::new(t_sfp, EventKind::ServerFpDone));
+
+    // Server BP needs every sub-batch's loss gradient (the φ-aggregation
+    // spans the whole effective batch): one serial slot.
+    let t_sbp = t_sfp + shape.server_bp;
+    ev.push(Event::new(t_sbp, EventKind::GradAggregated));
+    ev.push(Event::new(t_sbp, EventKind::ServerBpDone));
+    let t_bc = t_sbp + shape.broadcast;
+    ev.push(Event::new(t_bc, EventKind::BroadcastDone));
+
+    // Gradient return: broadcast and per-client unicast depart together
+    // after server BP on their own links; client i's BP starts once both
+    // payloads are in. The gating branch picks the association that stays
+    // dominated by the barrier fold (broadcast-gated: (t_sbp+T^B)+T_i^B;
+    // unicast-gated: t_sbp+(T_i^D+T_i^B)).
+    let mut completions = Vec::with_capacity(n);
+    let mut completion = 0.0f64;
+    for i in 0..n {
+        let d = shape.downlink[i];
+        let b = shape.client_bp[i];
+        ev.push(Event::new(
+            t_sbp + d,
+            EventKind::DownlinkDone { client: i },
+        ));
+        let done = if shape.broadcast >= d {
+            t_bc + b
+        } else {
+            t_sbp + (d + b)
+        };
+        ev.push(Event::new(done, EventKind::ClientBpDone { client: i }));
+        completions.push(done);
+        completion = completion.max(done);
+    }
+
+    // The barrier schedule is always admissible; clamp so fp rounding in
+    // the overlapped composition can never report a slower round.
+    let (barrier_pre_exchange, barrier_total) = barrier_totals(shape);
+    let completion = completion.min(barrier_pre_exchange);
+
+    let total = match &shape.exchange {
+        Exchange::None => completion,
+        Exchange::FedAvg { uploads, down } => {
+            // Fast clients upload their client-side model while the
+            // straggler is still in BP; the FedAvg broadcast follows the
+            // last upload.
+            let mut up_done = 0.0f64;
+            for (i, u) in uploads.iter().enumerate() {
+                let t = completions[i] + u;
+                ev.push(Event::new(
+                    t,
+                    EventKind::ModelUploadDone { client: i },
+                ));
+                up_done = up_done.max(t);
+            }
+            let t = (up_done + down).min(barrier_total);
+            ev.push(Event::new(t, EventKind::ModelSyncDone));
+            t
+        }
+        Exchange::Relay(r) => {
+            // Unreachable through `simulate` (sequential shapes run the
+            // barrier executor) — kept total for direct engine users.
+            let t = (completion + r).min(barrier_total);
+            ev.push(Event::new(t, EventKind::ModelSyncDone));
+            t
+        }
+    };
+    // Everything in-round finishes by round end: when the admissibility
+    // clamp tightened the totals, pull any event rounded past them back
+    // onto the boundary so the log stays consistent with `total`.
+    for e in &mut ev {
+        if e.t > total {
+            e.t = total;
+        }
+    }
+    ev.push(Event::new(total, EventKind::RoundDone));
+    sort_events(&mut ev);
+
+    RoundTimeline {
+        mode: Mode::Pipelined,
+        events: ev,
+        spans: StageSpans {
+            uplink_phase: t_arr,
+            server_fp: t_sfp - t_arr,
+            server_bp: t_sbp - t_sfp,
+            broadcast: t_bc - t_sbp,
+            downlink_phase: completion - t_bc,
+            model_exchange: total - completion,
+        },
+        total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::frameworks::round_latency;
+    use crate::profile::resnet18;
+    use crate::profile::NetworkProfile;
+
+    fn inputs<'a>(p: &'a NetworkProfile, f: &'a [f64], up: &'a [f64],
+                  dn: &'a [f64], phi: f64) -> LatencyInputs<'a> {
+        LatencyInputs {
+            profile: p,
+            cut: 4,
+            batch: 64,
+            phi,
+            f_server: 5e9,
+            kappa_server: 1.0 / 32.0,
+            kappa_client: 1.0 / 16.0,
+            f_clients: f,
+            uplink: up,
+            downlink: dn,
+            broadcast: 2e8,
+        }
+    }
+
+    fn all_frameworks() -> Vec<Framework> {
+        vec![
+            Framework::VanillaSl,
+            Framework::Sfl,
+            Framework::Psl,
+            Framework::Epsl { phi: 0.5 },
+            Framework::EpslPt { early: true },
+        ]
+    }
+
+    #[test]
+    fn barrier_matches_closed_form_bitwise() {
+        let p = resnet18::profile();
+        let f = [1e9, 1.3e9, 1.6e9];
+        let up = [5e7, 1.5e8, 2.5e8];
+        let dn = [6e7, 1.2e8, 2.2e8];
+        let inp = inputs(&p, &f, &up, &dn, 0.5);
+        for fw in all_frameworks() {
+            let closed = round_latency(fw, &inp).round_total();
+            let tl = simulate(fw, &inp, Mode::Barrier);
+            assert_eq!(
+                tl.total.to_bits(),
+                closed.to_bits(),
+                "{}: barrier {} vs closed form {closed}",
+                fw.name(),
+                tl.total
+            );
+            // The barrier spans re-sum to the total bit-for-bit.
+            assert_eq!(tl.spans.total().to_bits(), tl.total.to_bits());
+        }
+    }
+
+    #[test]
+    fn pipelined_never_exceeds_barrier() {
+        let p = resnet18::profile();
+        let f = [1e9, 1.3e9, 1.6e9, 1.1e9];
+        let up = [5e7, 1.5e8, 2.5e8, 9e7];
+        let dn = [6e7, 1.2e8, 2.2e8, 8e7];
+        for phi in [0.0, 0.5, 1.0] {
+            let inp = inputs(&p, &f, &up, &dn, phi);
+            for fw in all_frameworks() {
+                let bar = simulate(fw, &inp, Mode::Barrier).total;
+                let pipe = simulate(fw, &inp, Mode::Pipelined).total;
+                assert!(
+                    pipe <= bar,
+                    "{} φ={phi}: pipelined {pipe} > barrier {bar}",
+                    fw.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_strictly_faster_under_heterogeneity() {
+        let p = resnet18::profile();
+        // Strongly heterogeneous compute and links: the straggler's
+        // arrival leaves plenty of server-FP work to overlap.
+        let f = [0.8e9, 1.6e9, 1.2e9, 2.0e9];
+        let up = [3e7, 3e8, 1e8, 2e8];
+        let dn = [4e7, 2.5e8, 1.2e8, 1.8e8];
+        let inp = inputs(&p, &f, &up, &dn, 0.5);
+        for fw in [
+            Framework::Epsl { phi: 0.5 },
+            Framework::Psl,
+            Framework::Sfl,
+        ] {
+            let bar = simulate(fw, &inp, Mode::Barrier).total;
+            let pipe = simulate(fw, &inp, Mode::Pipelined).total;
+            assert!(
+                pipe < bar,
+                "{}: pipelined {pipe} !< barrier {bar}",
+                fw.name()
+            );
+        }
+    }
+
+    #[test]
+    fn vanilla_pipelined_degenerates_to_barrier() {
+        let p = resnet18::profile();
+        let f = [1e9, 1.4e9];
+        let up = [1e8, 2e8];
+        let dn = [1e8, 2e8];
+        let inp = inputs(&p, &f, &up, &dn, 0.5);
+        let bar = simulate(Framework::VanillaSl, &inp, Mode::Barrier);
+        let pipe = simulate(Framework::VanillaSl, &inp, Mode::Pipelined);
+        assert_eq!(pipe.total.to_bits(), bar.total.to_bits());
+        assert_eq!(pipe.mode, Mode::Pipelined);
+        assert_eq!(bar.mode, Mode::Barrier);
+    }
+
+    #[test]
+    fn events_sorted_round_done_last_and_consistent() {
+        let p = resnet18::profile();
+        let f = [1e9, 1.3e9, 1.6e9];
+        let up = [5e7, 1.5e8, 2.5e8];
+        let dn = [6e7, 1.2e8, 2.2e8];
+        let inp = inputs(&p, &f, &up, &dn, 0.5);
+        for mode in [Mode::Barrier, Mode::Pipelined] {
+            for fw in all_frameworks() {
+                let tl = simulate(fw, &inp, mode);
+                assert!(tl
+                    .events
+                    .windows(2)
+                    .all(|w| w[0].t <= w[1].t));
+                let last = tl.events.last().unwrap();
+                assert_eq!(last.kind, EventKind::RoundDone);
+                assert_eq!(last.t.to_bits(), tl.total.to_bits());
+                assert!(tl.events.iter().all(|e| e.t.is_finite()
+                    && e.t >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_spans_nonnegative_and_milestones_ordered() {
+        let p = resnet18::profile();
+        let f = [0.8e9, 1.6e9, 1.2e9];
+        let up = [3e7, 3e8, 1e8];
+        let dn = [4e7, 2.5e8, 1.2e8];
+        for phi in [0.0, 0.5, 1.0] {
+            let inp = inputs(&p, &f, &up, &dn, phi);
+            for fw in all_frameworks() {
+                let tl = simulate(fw, &inp, Mode::Pipelined);
+                let s = tl.spans;
+                for (name, v) in [
+                    ("uplink_phase", s.uplink_phase),
+                    ("server_fp", s.server_fp),
+                    ("server_bp", s.server_bp),
+                    ("broadcast", s.broadcast),
+                    ("downlink_phase", s.downlink_phase),
+                    ("model_exchange", s.model_exchange),
+                ] {
+                    assert!(
+                        v >= 0.0 && v.is_finite(),
+                        "{} φ={phi}: span {name} = {v}",
+                        fw.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_client_psl_pipelined_equals_barrier() {
+        // C = 1, φ = 0: no broadcast to overlap and a single FP slot, so
+        // the two schedules coincide bit for bit.
+        let p = resnet18::profile();
+        let f = [1.2e9];
+        let up = [1e8];
+        let dn = [1e8];
+        let inp = inputs(&p, &f, &up, &dn, 0.0);
+        let bar = simulate(Framework::Psl, &inp, Mode::Barrier).total;
+        let pipe = simulate(Framework::Psl, &inp, Mode::Pipelined).total;
+        assert_eq!(pipe.to_bits(), bar.to_bits());
+    }
+
+    #[test]
+    fn server_fp_slots_serve_in_arrival_order() {
+        let p = resnet18::profile();
+        // Client 1 arrives first (fast compute + fat uplink).
+        let f = [0.8e9, 2.0e9];
+        let up = [3e7, 3e8];
+        let dn = [1e8, 1e8];
+        let inp = inputs(&p, &f, &up, &dn, 0.5);
+        let tl = simulate(Framework::Epsl { phi: 0.5 }, &inp,
+                          Mode::Pipelined);
+        let slots: Vec<usize> = tl
+            .events
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::ServerFpSlotDone { client } => Some(client),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(slots, vec![1, 0], "fast arrival served first");
+    }
+}

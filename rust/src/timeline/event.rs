@@ -1,0 +1,80 @@
+//! Typed timeline events.
+//!
+//! Every milestone of a simulated round is a timestamped [`Event`]. The
+//! engine emits them in a deterministic construction order and sorts by
+//! time with a stable sort, so the event log is reproducible for a given
+//! input in either mode.
+
+/// What happened at a timeline instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Client `client` finished its client-side forward pass (eq. 13).
+    /// For vanilla SL the per-turn chains are pre-summed, so the single
+    /// chain's events cover the whole sequential sweep.
+    ClientFpDone { client: usize },
+    /// Client `client`'s smashed data fully crossed its uplink
+    /// subchannels and is resident at the server (eq. 15).
+    UplinkDone { client: usize },
+    /// The server finished the FP slot for `client`'s sub-batch
+    /// (pipelined mode: FIFO service in arrival order).
+    ServerFpSlotDone { client: usize },
+    /// Server-side forward pass complete over all C·b samples (eq. 16).
+    ServerFpDone,
+    /// Last-layer gradient aggregation (the EPSL φ-kernel) complete.
+    GradAggregated,
+    /// Server-side backward pass complete (eq. 17).
+    ServerBpDone,
+    /// Aggregated-gradient broadcast complete (eq. 19).
+    BroadcastDone,
+    /// Unaggregated-gradient unicast to `client` complete (eq. 21).
+    DownlinkDone { client: usize },
+    /// Client `client` finished its client-side backward pass (eq. 22).
+    ClientBpDone { client: usize },
+    /// SFL: `client` uploaded its client-side model for FedAvg.
+    ModelUploadDone { client: usize },
+    /// Model synchronization complete (SFL aggregated-model broadcast /
+    /// vanilla SL relay chain).
+    ModelSyncDone,
+    /// The round is over; the timestamp equals the round total.
+    RoundDone,
+}
+
+/// One timestamped event (seconds from round start).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub t: f64,
+    pub kind: EventKind,
+}
+
+impl Event {
+    pub fn new(t: f64, kind: EventKind) -> Event {
+        Event { t, kind }
+    }
+}
+
+/// Stable in-place sort by timestamp (construction order breaks ties, so
+/// logs are deterministic).
+pub(crate) fn sort_events(events: &mut [Event]) {
+    events.sort_by(|a, b| a.t.total_cmp(&b.t));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sort_is_stable_on_ties() {
+        let mut ev = vec![
+            Event::new(2.0, EventKind::ServerFpDone),
+            Event::new(1.0, EventKind::GradAggregated),
+            Event::new(1.0, EventKind::ServerBpDone),
+            Event::new(0.5, EventKind::ClientFpDone { client: 0 }),
+        ];
+        sort_events(&mut ev);
+        assert_eq!(ev[0].kind, EventKind::ClientFpDone { client: 0 });
+        // Ties keep construction order.
+        assert_eq!(ev[1].kind, EventKind::GradAggregated);
+        assert_eq!(ev[2].kind, EventKind::ServerBpDone);
+        assert_eq!(ev[3].kind, EventKind::ServerFpDone);
+    }
+}

@@ -1,0 +1,142 @@
+//! Event-timeline round engine — the paper's §V accounting seen as a
+//! *schedule*, not just a stage sum.
+//!
+//! [`latency`](crate::latency) gives the seven closed-form stage
+//! latencies and the eq. 23 barrier total. EPSL's core claim, however, is
+//! *overlap*: client-side FP, per-client uplink, server compute, and the
+//! gradient return pipeline across heterogeneous clients. This module is
+//! a deterministic discrete-event simulator over typed events
+//! ([`EventKind`]) that makes both views executable:
+//!
+//! - [`Mode::Barrier`] synchronizes at every phase boundary and
+//!   reproduces the closed-form `round_latency(..).round_total()`
+//!   **bit-identically** for every framework (proven by the parity suite
+//!   in `tests/integration_timeline.rs` and by the CI smoke step) — the
+//!   engine folds each phase's chain offsets and accumulates phase spans
+//!   in exactly the eq. 23 association;
+//! - [`Mode::Pipelined`] overlaps phases per client / per link: the
+//!   server starts its forward pass on the first smashed-data arrival
+//!   (FIFO slots, one per client sub-batch), broadcast and unicast
+//!   payloads travel concurrently on their own links, and SFL's model
+//!   uploads begin as each client finishes its backward pass. The
+//!   composition is floating-point-monotone against the barrier fold and
+//!   finally clamped by it, so `pipelined ≤ barrier` holds *exactly* —
+//!   never "up to rounding" (PERF.md §5 documents the discipline).
+//!
+//! Stage durations come from the closed forms
+//! ([`plan::shape_for`] consumes [`crate::latency::frameworks::round_latency`]),
+//! so there is a single source of per-stage truth; the engine only
+//! decides how those durations compose in time.
+
+pub mod engine;
+pub mod event;
+pub mod plan;
+
+pub use engine::{simulate, RoundTimeline};
+pub use event::{Event, EventKind};
+pub use plan::{shape_for, Exchange, RoundShape};
+
+use crate::error::{Error, Result};
+
+/// How the engine composes stage dependencies in time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Mode {
+    /// Synchronize at every phase boundary — the paper's eq. 23
+    /// semantics. Bit-identical to the closed-form `round_latency`.
+    #[default]
+    Barrier,
+    /// Overlap phases per client / subchannel — the tighter latency a
+    /// pipelining coordinator actually achieves. Never exceeds barrier.
+    Pipelined,
+}
+
+impl Mode {
+    /// Parse a config/CLI string (`barrier` | `pipelined`).
+    pub fn parse(s: &str) -> Result<Mode> {
+        match s {
+            "barrier" => Ok(Mode::Barrier),
+            "pipelined" => Ok(Mode::Pipelined),
+            other => Err(Error::Config(format!(
+                "timeline mode '{other}' unknown (barrier|pipelined)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Barrier => "barrier",
+            Mode::Pipelined => "pipelined",
+        }
+    }
+}
+
+/// Per-stage wall-clock spans of one simulated round (seconds), in the
+/// order the stages gate the round. In barrier mode each field is the
+/// exact eq. 23 phase span and the left-to-right sum is bit-identical to
+/// the round total; in pipelined mode the fields are deltas between the
+/// engine's milestone events (last arrival, server FP/BP done, broadcast
+/// done, last client BP, model sync), so re-summing them may differ from
+/// the authoritative [`RoundTimeline::total`] by float rounding.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StageSpans {
+    /// Round start → last smashed-data arrival at the server.
+    pub uplink_phase: f64,
+    /// → server-side forward pass complete.
+    pub server_fp: f64,
+    /// → server-side backward pass (incl. φ-aggregation) complete.
+    pub server_bp: f64,
+    /// → aggregated-gradient broadcast complete.
+    pub broadcast: f64,
+    /// → last client finished unicast reception + client-side BP.
+    pub downlink_phase: f64,
+    /// → model exchange complete (SFL FedAvg / vanilla relay; 0 for
+    /// EPSL and PSL).
+    pub model_exchange: f64,
+}
+
+impl StageSpans {
+    /// Left-to-right sum of the spans — in barrier mode bit-identical to
+    /// [`RoundTimeline::total`] (same association as eq. 23).
+    pub fn total(&self) -> f64 {
+        self.uplink_phase
+            + self.server_fp
+            + self.server_bp
+            + self.broadcast
+            + self.downlink_phase
+            + self.model_exchange
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parses_both_names() {
+        assert_eq!(Mode::parse("barrier").unwrap(), Mode::Barrier);
+        assert_eq!(Mode::parse("pipelined").unwrap(), Mode::Pipelined);
+        assert_eq!(Mode::Barrier.name(), "barrier");
+        assert_eq!(Mode::Pipelined.name(), "pipelined");
+        let e = Mode::parse("overlapped").unwrap_err();
+        assert!(e.to_string().contains("barrier|pipelined"), "{e}");
+    }
+
+    #[test]
+    fn default_mode_is_barrier() {
+        assert_eq!(Mode::default(), Mode::Barrier);
+    }
+
+    #[test]
+    fn spans_total_sums_in_order() {
+        let s = StageSpans {
+            uplink_phase: 1.0,
+            server_fp: 2.0,
+            server_bp: 3.0,
+            broadcast: 0.5,
+            downlink_phase: 1.5,
+            model_exchange: 0.25,
+        };
+        assert_eq!(s.total(), 8.25);
+        assert_eq!(StageSpans::default().total(), 0.0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Declarative round shapes: per-stage durations plus the dependency
+//! structure each framework's round actually has, consumed by the engine
+//! in either execution mode.
+//!
+//! Durations come from the §V closed forms
+//! ([`round_latency`]) — the single source of per-stage truth — so the
+//! barrier engine's totals are bit-identical to
+//! `round_latency(fw, inp).round_total()` by construction.
+
+use crate::latency::frameworks::{
+    round_latency, sfl_exchange_parts, Framework,
+};
+use crate::latency::LatencyInputs;
+
+/// End-of-round client-side model synchronization.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Exchange {
+    /// PSL / EPSL / EPSL-PT: client models never synchronize in-round.
+    None,
+    /// SFL: every client uploads its client-side model over its own
+    /// subchannels, the server FedAvg-aggregates, then broadcasts the
+    /// result (Thapa et al.).
+    FedAvg {
+        /// Per-client model upload seconds.
+        uploads: Vec<f64>,
+        /// Aggregated-model broadcast seconds.
+        down: f64,
+    },
+    /// Vanilla SL: the summed inter-turn relay time — strictly serial,
+    /// nothing to overlap.
+    Relay(f64),
+}
+
+/// One framework round as stage durations (seconds) plus structure.
+///
+/// The per-client vectors are parallel chains (client i's FP feeds its
+/// own uplink; its unicast feeds its own BP). For vanilla SL the chains
+/// are the pre-summed sequential sweep (a single chain), mirroring the
+/// closed form's summed [`crate::latency::StageLatencies`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundShape {
+    /// Framework the shape was derived from (event labeling, reporting).
+    pub framework: Framework,
+    /// True for vanilla SL: the chains are pre-summed sequential turns,
+    /// so pipelined execution degenerates to barrier execution.
+    pub sequential: bool,
+    /// T_i^F per chain (eq. 13).
+    pub client_fp: Vec<f64>,
+    /// T_i^U per chain (eq. 15).
+    pub uplink: Vec<f64>,
+    /// T_s^F (eq. 16).
+    pub server_fp: f64,
+    /// T_s^B including the last-layer aggregation term (eq. 17).
+    pub server_bp: f64,
+    /// T^B (eq. 19).
+    pub broadcast: f64,
+    /// T_i^D per chain (eq. 21).
+    pub downlink: Vec<f64>,
+    /// T_i^B per chain (eq. 22).
+    pub client_bp: Vec<f64>,
+    pub exchange: Exchange,
+}
+
+impl RoundShape {
+    /// Number of parallel chains (C for the parallel frameworks, 1 for
+    /// vanilla SL's pre-summed sweep).
+    pub fn n_chains(&self) -> usize {
+        self.client_fp.len()
+    }
+}
+
+/// Build the declarative shape for `fw` under `inp` (the framework
+/// defines its own effective φ, exactly as [`round_latency`] does).
+pub fn shape_for(fw: Framework, inp: &LatencyInputs) -> RoundShape {
+    let s = round_latency(fw, inp);
+    let exchange = match fw {
+        Framework::Sfl => {
+            let (uploads, down) = sfl_exchange_parts(inp);
+            Exchange::FedAvg { uploads, down }
+        }
+        Framework::VanillaSl => Exchange::Relay(s.model_exchange),
+        _ => Exchange::None,
+    };
+    RoundShape {
+        framework: fw,
+        sequential: matches!(fw, Framework::VanillaSl),
+        client_fp: s.client_fp,
+        uplink: s.uplink,
+        server_fp: s.server_fp,
+        server_bp: s.server_bp,
+        broadcast: s.broadcast,
+        downlink: s.downlink,
+        client_bp: s.client_bp,
+        exchange,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::resnet18;
+    use crate::profile::NetworkProfile;
+
+    fn inputs<'a>(p: &'a NetworkProfile, f: &'a [f64], up: &'a [f64],
+                  dn: &'a [f64]) -> LatencyInputs<'a> {
+        LatencyInputs {
+            profile: p,
+            cut: 4,
+            batch: 64,
+            phi: 0.5,
+            f_server: 5e9,
+            kappa_server: 1.0 / 32.0,
+            kappa_client: 1.0 / 16.0,
+            f_clients: f,
+            uplink: up,
+            downlink: dn,
+            broadcast: 2e8,
+        }
+    }
+
+    #[test]
+    fn epsl_shape_has_c_chains_no_exchange() {
+        let p = resnet18::profile();
+        let f = [1e9, 2e9, 1.5e9];
+        let up = [1e8; 3];
+        let dn = [1e8; 3];
+        let inp = inputs(&p, &f, &up, &dn);
+        let sh = shape_for(Framework::Epsl { phi: 0.5 }, &inp);
+        assert_eq!(sh.n_chains(), 3);
+        assert!(!sh.sequential);
+        assert_eq!(sh.exchange, Exchange::None);
+        let s = round_latency(Framework::Epsl { phi: 0.5 }, &inp);
+        assert_eq!(sh.client_fp, s.client_fp);
+        assert_eq!(sh.server_bp, s.server_bp);
+    }
+
+    #[test]
+    fn sfl_shape_carries_exchange_parts() {
+        let p = resnet18::profile();
+        let f = [1e9; 2];
+        let up = [1e8, 2e8];
+        let dn = [1e8; 2];
+        let inp = inputs(&p, &f, &up, &dn);
+        let sh = shape_for(Framework::Sfl, &inp);
+        match &sh.exchange {
+            Exchange::FedAvg { uploads, down } => {
+                assert_eq!(uploads.len(), 2);
+                // Slower uplink ⇒ longer model upload.
+                assert!(uploads[0] > uploads[1]);
+                assert!(*down > 0.0);
+                // Parts recompose to the closed form's exchange term.
+                let up_max =
+                    uploads.iter().cloned().fold(0.0, f64::max);
+                let s = round_latency(Framework::Sfl, &inp);
+                assert_eq!(
+                    (up_max + down).to_bits(),
+                    s.model_exchange.to_bits()
+                );
+            }
+            other => panic!("SFL exchange missing: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn vanilla_shape_is_single_presummed_chain() {
+        let p = resnet18::profile();
+        let f = [1e9, 2e9, 1.5e9];
+        let up = [1e8; 3];
+        let dn = [1e8; 3];
+        let inp = inputs(&p, &f, &up, &dn);
+        let sh = shape_for(Framework::VanillaSl, &inp);
+        assert!(sh.sequential);
+        assert_eq!(sh.n_chains(), 1);
+        match &sh.exchange {
+            Exchange::Relay(r) => assert!(*r > 0.0),
+            other => panic!("vanilla relay missing: {other:?}"),
+        }
+    }
+}

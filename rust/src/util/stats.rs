@@ -34,9 +34,10 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 
 /// Percentile via linear interpolation on the sorted copy. `q` in [0,100].
 ///
-/// NaN entries are dropped before sorting: metrics series legitimately
-/// carry NaN sentinels (`test_acc` on non-eval rounds), and the previous
-/// `partial_cmp(..).unwrap()` comparator panicked on them.
+/// NaN entries are dropped before sorting: aggregate series can
+/// legitimately carry NaN sentinels (e.g. `converged_accuracy` of a
+/// never-evaluated run), and the previous `partial_cmp(..).unwrap()`
+/// comparator panicked on them.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     let mut s: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
     if s.is_empty() {
@@ -56,8 +57,8 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
 
 /// Full summary in one pass over a copy. NaN sentinels are excluded from
 /// every statistic (`n` reports the finite count), so summarizing a
-/// metrics column that interleaves NaN (e.g. `test_acc` on non-eval
-/// rounds) yields the summary of the evaluated points.
+/// metrics column that interleaves NaN (e.g. per-run converged accuracy
+/// of never-evaluated runs) yields the summary of the defined points.
 pub fn summarize(xs: &[f64]) -> Summary {
     let finite: Vec<f64> =
         xs.iter().copied().filter(|x| !x.is_nan()).collect();

@@ -6,9 +6,9 @@ use epsl::channel::rate::{broadcast_rate, downlink_rates, uplink_rates,
 use epsl::channel::{ChannelRealization, Deployment};
 use epsl::config::NetworkConfig;
 use epsl::latency::frameworks::{round_latency, Framework};
-use epsl::latency::LatencyInputs;
+use epsl::latency::{epsl_stage_latencies, LatencyInputs};
 use epsl::profile::resnet18;
-use epsl::util::prop::check;
+use epsl::util::prop::{check, Gen};
 use epsl::util::rng::Rng;
 
 fn round_robin(cfg: &NetworkConfig) -> Allocation {
@@ -123,6 +123,141 @@ fn faster_server_never_hurts() {
             let t = latency_of(&cfg, Framework::Epsl { phi: 0.5 }, cut, seed);
             assert!(t <= last * (1.0 + 1e-9));
             last = t;
+        }
+    });
+}
+
+/// Random heterogeneous per-client vectors for the stage-latency
+/// property tests.
+fn gen_rates(g: &mut Gen, c: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let f: Vec<f64> = (0..c).map(|_| g.f64_in(0.5e9, 3e9)).collect();
+    let up: Vec<f64> = (0..c).map(|_| g.f64_log(1e7, 5e8)).collect();
+    let dn: Vec<f64> = (0..c).map(|_| g.f64_log(1e7, 5e8)).collect();
+    (f, up, dn)
+}
+
+#[test]
+fn uplink_straggler_is_first_argmax_of_fp_plus_uplink() {
+    let profile = resnet18::profile();
+    check("uplink straggler argmax", 50, |g| {
+        let c = g.usize_in(1, 12);
+        let (f, up, dn) = gen_rates(g, c);
+        let cut = *g.choose(&profile.cut_candidates);
+        let inp = LatencyInputs {
+            profile: &profile,
+            cut,
+            batch: 64,
+            phi: g.f64_in(0.0, 1.0),
+            f_server: 5e9,
+            kappa_server: 1.0 / 32.0,
+            kappa_client: 1.0 / 16.0,
+            f_clients: &f,
+            uplink: &up,
+            downlink: &dn,
+            broadcast: 2e8,
+        };
+        let s = epsl_stage_latencies(&inp);
+        let idx = s.uplink_straggler();
+        let sums: Vec<f64> = s
+            .client_fp
+            .iter()
+            .zip(&s.uplink)
+            .map(|(a, b)| a + b)
+            .collect();
+        // idx is the FIRST argmax of T_i^F + T_i^U.
+        for (i, v) in sums.iter().enumerate() {
+            if i < idx {
+                assert!(*v < sums[idx], "earlier client {i} ties/beats");
+            } else {
+                assert!(*v <= sums[idx], "client {i} beats straggler");
+            }
+        }
+        // And the straggler pins the uplink phase.
+        assert_eq!(
+            s.uplink_phase_max().to_bits(),
+            sums[idx].to_bits()
+        );
+    });
+}
+
+#[test]
+fn comm_compute_split_brackets_round_total() {
+    // comm_seconds + compute_seconds uses per-stage maxima independently,
+    // so it can only over-count relative to the paired maxima of eq. 23:
+    // comm + compute ≥ round_total, with equality when one client is the
+    // straggler of every stage (homogeneous clients, or C = 1).
+    let profile = resnet18::profile();
+    check("comm/compute split", 40, |g| {
+        let c = g.usize_in(1, 10);
+        let (f, up, dn) = gen_rates(g, c);
+        let cut = *g.choose(&profile.cut_candidates);
+        let inp = LatencyInputs {
+            profile: &profile,
+            cut,
+            batch: 64,
+            phi: g.f64_in(0.0, 1.0),
+            f_server: 5e9,
+            kappa_server: 1.0 / 32.0,
+            kappa_client: 1.0 / 16.0,
+            f_clients: &f,
+            uplink: &up,
+            downlink: &dn,
+            broadcast: 2e8,
+        };
+        for fw in [
+            Framework::VanillaSl,
+            Framework::Sfl,
+            Framework::Psl,
+            Framework::Epsl { phi: 0.5 },
+        ] {
+            let s = round_latency(fw, &inp);
+            let total = s.round_total();
+            let split = s.comm_seconds() + s.compute_seconds();
+            assert!(
+                split >= total * (1.0 - 1e-12),
+                "{}: comm+compute {split} < total {total}",
+                fw.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn comm_compute_split_exact_for_homogeneous_clients() {
+    let profile = resnet18::profile();
+    check("comm/compute homogeneous", 25, |g| {
+        let c = g.usize_in(1, 8);
+        let f = vec![g.f64_in(0.5e9, 3e9); c];
+        let up = vec![g.f64_log(1e7, 5e8); c];
+        let dn = vec![g.f64_log(1e7, 5e8); c];
+        let cut = *g.choose(&profile.cut_candidates);
+        let inp = LatencyInputs {
+            profile: &profile,
+            cut,
+            batch: 64,
+            phi: g.f64_in(0.0, 1.0),
+            f_server: 5e9,
+            kappa_server: 1.0 / 32.0,
+            kappa_client: 1.0 / 16.0,
+            f_clients: &f,
+            uplink: &up,
+            downlink: &dn,
+            broadcast: 2e8,
+        };
+        for fw in [
+            Framework::VanillaSl,
+            Framework::Sfl,
+            Framework::Psl,
+            Framework::Epsl { phi: 0.5 },
+        ] {
+            let s = round_latency(fw, &inp);
+            let total = s.round_total();
+            let split = s.comm_seconds() + s.compute_seconds();
+            assert!(
+                (split - total).abs() <= 1e-9 * total.max(1e-9),
+                "{}: split {split} vs total {total}",
+                fw.name()
+            );
         }
     });
 }

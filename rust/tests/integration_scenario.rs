@@ -11,6 +11,7 @@ use epsl::scenario::{
     run_policy, run_scenario_cells, ChurnSpec, ReoptPolicy, RunOptions,
     Scenario, ScenarioCell, ScenarioSpec,
 };
+use epsl::timeline::Mode;
 
 fn small_net() -> NetworkConfig {
     NetworkConfig::default().with_clients(3)
@@ -23,6 +24,7 @@ fn opts(policy: ReoptPolicy, threads: usize) -> RunOptions {
         batch: 64,
         phi: 0.5,
         threads,
+        timeline_mode: Mode::Barrier,
     }
 }
 
@@ -80,6 +82,7 @@ fn parallel_equals_serial_across_the_stack() {
             seed: 0xCE11 + i as u64,
             batch: 64,
             phi: 0.5,
+            timeline_mode: Mode::Barrier,
         })
         .collect();
     let s = run_scenario_cells(profile, &cells, 1);
