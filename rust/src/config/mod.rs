@@ -257,12 +257,103 @@ impl ScenarioSettings {
     }
 }
 
+/// Opt-in fault injection + resilience policy for the training driver
+/// (`scenario::faults`; knobs documented in EXPERIMENTS.md). Plain data
+/// here — `scenario::FaultSpec::from_settings` turns it into the typed
+/// spec so config stays dependency-free, mirroring [`ScenarioSettings`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSettings {
+    /// Master switch for fault injection.
+    pub enabled: bool,
+    /// Scheduled events, comma-separated: `crash@r:c`, `delay@r:c:s`,
+    /// `corrupt@r:c`, `abort@r` (parsed by `FaultSpec::parse_events`).
+    pub events: String,
+    /// Per-client per-round crash probability.
+    pub crash_prob: f64,
+    /// Per-client per-round delayed-uplink probability.
+    pub delay_prob: f64,
+    /// Delay seconds applied by probabilistic delay events.
+    pub delay_s: f64,
+    /// Per-client per-round corrupted-payload probability.
+    pub corrupt_prob: f64,
+    /// Per-round server-abort probability.
+    pub abort_prob: f64,
+    /// Minimum surviving cohort a round may commit with.
+    pub quorum: usize,
+    /// Bounded retries for transient faults (0 = drop instead).
+    pub max_retries: usize,
+    /// Base backoff seconds charged per retry.
+    pub retry_backoff_s: f64,
+    /// Straggler deadline as a multiple of the round's nominal slowest
+    /// uplink arrival (>= 1).
+    pub deadline_factor: f64,
+}
+
+impl Default for FaultSettings {
+    fn default() -> Self {
+        FaultSettings {
+            enabled: false,
+            events: String::new(),
+            crash_prob: 0.0,
+            delay_prob: 0.0,
+            delay_s: 0.5,
+            corrupt_prob: 0.0,
+            abort_prob: 0.0,
+            quorum: 1,
+            max_retries: 2,
+            retry_backoff_s: 0.05,
+            deadline_factor: 1.5,
+        }
+    }
+}
+
+impl FaultSettings {
+    /// Range checks on the plain knobs. Event-string syntax and
+    /// round/client bounds are checked by `FaultSpec` at expansion time,
+    /// when the run shape is known.
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("crash_prob", self.crash_prob),
+            ("delay_prob", self.delay_prob),
+            ("corrupt_prob", self.corrupt_prob),
+            ("abort_prob", self.abort_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::Config(format!(
+                    "faults.{name}={p} out of [0,1]"
+                )));
+            }
+        }
+        for (name, v) in [
+            ("delay_s", self.delay_s),
+            ("retry_backoff_s", self.retry_backoff_s),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(Error::Config(format!(
+                    "faults.{name}={v} must be finite and >= 0"
+                )));
+            }
+        }
+        if !self.deadline_factor.is_finite() || self.deadline_factor < 1.0 {
+            return Err(Error::Config(format!(
+                "faults.deadline_factor={} must be >= 1",
+                self.deadline_factor
+            )));
+        }
+        if self.quorum == 0 {
+            return Err(Error::Config("faults.quorum must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
     pub net: NetworkConfig,
     pub train: TrainConfig,
     pub scenario: ScenarioSettings,
+    pub faults: FaultSettings,
     /// Execution backend: "auto" (PJRT artifacts when present, else the
     /// pure-Rust native backend), "native", or "pjrt". TOML:
     /// `[backend] mode = "native"` (or a top-level `backend = "native"`);
@@ -285,6 +376,7 @@ impl Config {
             net: NetworkConfig::default(),
             train: TrainConfig::default(),
             scenario: ScenarioSettings::default(),
+            faults: FaultSettings::default(),
             backend: "auto".into(),
             timeline_mode: "barrier".into(),
             artifacts_dir: "artifacts".into(),
@@ -302,7 +394,8 @@ impl Config {
         crate::timeline::Mode::parse(&self.timeline_mode)?;
         self.net.validate()?;
         self.train.validate()?;
-        self.scenario.validate()
+        self.scenario.validate()?;
+        self.faults.validate()
     }
 
     /// Apply overrides from a parsed TOML doc (keys mirror field paths,
@@ -404,6 +497,39 @@ impl Config {
         }
         if let Some(v) = d.str("scenario.reopt") {
             self.scenario.reopt = v.to_string();
+        }
+        if let Some(v) = d.bool("faults.enabled") {
+            self.faults.enabled = v;
+        }
+        if let Some(v) = d.str("faults.events") {
+            self.faults.events = v.to_string();
+        }
+        if let Some(v) = d.f64("faults.crash_prob") {
+            self.faults.crash_prob = v;
+        }
+        if let Some(v) = d.f64("faults.delay_prob") {
+            self.faults.delay_prob = v;
+        }
+        if let Some(v) = d.f64("faults.delay_s") {
+            self.faults.delay_s = v;
+        }
+        if let Some(v) = d.f64("faults.corrupt_prob") {
+            self.faults.corrupt_prob = v;
+        }
+        if let Some(v) = d.f64("faults.abort_prob") {
+            self.faults.abort_prob = v;
+        }
+        if let Some(v) = d.usize("faults.quorum") {
+            self.faults.quorum = v;
+        }
+        if let Some(v) = d.usize("faults.max_retries") {
+            self.faults.max_retries = v;
+        }
+        if let Some(v) = d.f64("faults.retry_backoff_s") {
+            self.faults.retry_backoff_s = v;
+        }
+        if let Some(v) = d.f64("faults.deadline_factor") {
+            self.faults.deadline_factor = v;
         }
         if let Some(v) = d.str("backend").or_else(|| d.str("backend.mode")) {
             self.backend = v.to_string();
@@ -586,6 +712,47 @@ mod tests {
             .apply_toml(&toml::parse("timeline = \"overlap\"\n").unwrap())
             .unwrap_err();
         assert!(e.to_string().contains("barrier|pipelined"), "{e}");
+    }
+
+    #[test]
+    fn fault_settings_from_toml() {
+        let doc = toml::parse(
+            "[faults]\nenabled = true\nevents = \"crash@3:1,abort@5\"\n\
+             crash_prob = 0.05\ndelay_prob = 0.1\ndelay_s = 1.25\n\
+             corrupt_prob = 0.02\nabort_prob = 0.01\nquorum = 2\n\
+             max_retries = 3\nretry_backoff_s = 0.1\n\
+             deadline_factor = 2.0\n",
+        )
+        .unwrap();
+        let mut c = Config::new();
+        c.apply_toml(&doc).unwrap();
+        assert!(c.faults.enabled);
+        assert_eq!(c.faults.events, "crash@3:1,abort@5");
+        assert_eq!(c.faults.crash_prob, 0.05);
+        assert_eq!(c.faults.delay_prob, 0.1);
+        assert_eq!(c.faults.delay_s, 1.25);
+        assert_eq!(c.faults.corrupt_prob, 0.02);
+        assert_eq!(c.faults.abort_prob, 0.01);
+        assert_eq!(c.faults.quorum, 2);
+        assert_eq!(c.faults.max_retries, 3);
+        assert_eq!(c.faults.retry_backoff_s, 0.1);
+        assert_eq!(c.faults.deadline_factor, 2.0);
+    }
+
+    #[test]
+    fn fault_settings_validated() {
+        let mut c = Config::new();
+        c.faults.crash_prob = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::new();
+        c.faults.quorum = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::new();
+        c.faults.deadline_factor = 0.9;
+        assert!(c.validate().is_err());
+        let mut c = Config::new();
+        c.faults.delay_s = -1.0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,525 @@
+//! Session checkpoints: everything a killed run needs to resume
+//! bit-exactly.
+//!
+//! The driver's setup phase is a pure function of `(Config,
+//! TrainerOptions)` — data synthesis, sharding, the simulated deployment,
+//! and the fault plan are all re-derived from the seed on resume. What a
+//! checkpoint must carry is only the *mutable* session state: model
+//! parameters (host `f32` mirrors, bit-preserved), the session RNG
+//! stream position (including a pending cached Gaussian deviate), the
+//! next round index, and the metric records already emitted. A
+//! fingerprint over the run-defining configuration guards against
+//! resuming into a different experiment.
+//!
+//! The format is a versioned little-endian binary layout written by this
+//! module alone (no serde offline); floats travel as raw IEEE-754 bits so
+//! the resumed run is bitwise identical, never "close".
+
+use std::fs;
+use std::path::Path;
+
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::metrics::{FaultStats, RoundRecord};
+use crate::timeline::StageSpans;
+use crate::util::rng::RngState;
+
+use super::driver::TrainerOptions;
+
+const MAGIC: &[u8; 8] = b"EPSLCKP1";
+const VERSION: u32 = 1;
+
+/// A resumable snapshot of one training session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// [`run_fingerprint`] of the configuration that produced it.
+    pub fingerprint: u64,
+    /// First round the resumed run executes.
+    pub next_round: usize,
+    /// Session RNG state at the snapshot point.
+    pub rng: RngState,
+    /// Per-replica client-side parameters (host mirrors, canonical
+    /// tensor order).
+    pub client_params: Vec<Vec<Vec<f32>>>,
+    /// Server-side parameters.
+    pub server_params: Vec<Vec<f32>>,
+    /// Metric records of the rounds already run.
+    pub records: Vec<RoundRecord>,
+}
+
+/// FNV-1a hash of the run-defining configuration. Checkpoint knobs are
+/// excluded: checkpointing more or less often, or to a different path,
+/// must not invalidate a snapshot of the same experiment.
+pub fn run_fingerprint(cfg: &Config, opts: &TrainerOptions) -> u64 {
+    let mut canon = opts.clone();
+    canon.checkpoint_every = 0;
+    canon.checkpoint_path = None;
+    // Debug derives render every field deterministically; config and
+    // options are plain data, so this is a stable canonical encoding.
+    let repr = format!("{:?}|{:?}|{:?}", cfg.net, cfg.train, canon);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in repr.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// --- binary writer helpers -------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_f32_slice(out: &mut Vec<u8>, xs: &[f32]) {
+    put_usize(out, xs.len());
+    for x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+// --- binary reader ----------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|e| *e <= self.buf.len());
+        let end = end.ok_or_else(|| {
+            Error::Fault(format!(
+                "checkpoint truncated at byte {} (wanted {n} more)",
+                self.pos
+            ))
+        })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| {
+            Error::Fault(format!("checkpoint length {v} overflows usize"))
+        })
+    }
+
+    /// Bounded count: each element occupies at least `min_elem_bytes`
+    /// more of the buffer, so a corrupted length cannot trigger a huge
+    /// allocation before the truncation check would catch it.
+    fn count(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.usize()?;
+        let remaining = self.buf.len() - self.pos;
+        if n.saturating_mul(min_elem_bytes.max(1)) > remaining {
+            return Err(Error::Fault(format!(
+                "checkpoint count {n} exceeds the remaining {remaining} \
+                 byte(s)"
+            )));
+        }
+        Ok(n)
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f32::from_bits(u32::from_le_bytes(
+                self.take(4)?.try_into().unwrap(),
+            )));
+        }
+        Ok(v)
+    }
+}
+
+fn put_record(out: &mut Vec<u8>, r: &RoundRecord) {
+    put_usize(out, r.round);
+    put_f64(out, r.loss);
+    put_f64(out, r.train_acc);
+    match r.test_acc {
+        Some(a) => {
+            out.push(1);
+            put_f64(out, a);
+        }
+        None => out.push(0),
+    }
+    put_f64(out, r.sim_latency);
+    let s = &r.stages;
+    for v in [
+        s.uplink_phase,
+        s.server_fp,
+        s.server_bp,
+        s.broadcast,
+        s.downlink_phase,
+        s.model_exchange,
+    ] {
+        put_f64(out, v);
+    }
+    put_usize(out, r.faults.injected);
+    put_usize(out, r.faults.retries);
+    put_usize(out, r.faults.dropped);
+    put_usize(out, r.faults.cohort);
+    put_f64(out, r.faults.recovery_s);
+    put_f64(out, r.wall_ms);
+}
+
+fn read_record(rd: &mut Reader<'_>) -> Result<RoundRecord> {
+    let round = rd.usize()?;
+    let loss = rd.f64()?;
+    let train_acc = rd.f64()?;
+    let test_acc = match rd.u8()? {
+        0 => None,
+        1 => Some(rd.f64()?),
+        other => {
+            return Err(Error::Fault(format!(
+                "checkpoint record flag {other} is not 0/1"
+            )))
+        }
+    };
+    let sim_latency = rd.f64()?;
+    let stages = StageSpans {
+        uplink_phase: rd.f64()?,
+        server_fp: rd.f64()?,
+        server_bp: rd.f64()?,
+        broadcast: rd.f64()?,
+        downlink_phase: rd.f64()?,
+        model_exchange: rd.f64()?,
+    };
+    let faults = FaultStats {
+        injected: rd.usize()?,
+        retries: rd.usize()?,
+        dropped: rd.usize()?,
+        cohort: rd.usize()?,
+        recovery_s: rd.f64()?,
+    };
+    let wall_ms = rd.f64()?;
+    Ok(RoundRecord {
+        round,
+        loss,
+        train_acc,
+        test_acc,
+        sim_latency,
+        stages,
+        faults,
+        wall_ms,
+    })
+}
+
+impl Checkpoint {
+    /// Serialize to the versioned binary layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        put_u32(&mut out, VERSION);
+        put_u64(&mut out, self.fingerprint);
+        put_usize(&mut out, self.next_round);
+        for lane in self.rng.s {
+            put_u64(&mut out, lane);
+        }
+        match self.rng.gauss_spare {
+            Some(v) => {
+                out.push(1);
+                put_f64(&mut out, v);
+            }
+            None => out.push(0),
+        }
+        put_usize(&mut out, self.client_params.len());
+        for replica in &self.client_params {
+            put_usize(&mut out, replica.len());
+            for t in replica {
+                put_f32_slice(&mut out, t);
+            }
+        }
+        put_usize(&mut out, self.server_params.len());
+        for t in &self.server_params {
+            put_f32_slice(&mut out, t);
+        }
+        put_usize(&mut out, self.records.len());
+        for r in &self.records {
+            put_record(&mut out, r);
+        }
+        out
+    }
+
+    /// Parse the binary layout; every malformation is a typed
+    /// [`Error::Fault`], never a panic.
+    pub fn from_bytes(buf: &[u8]) -> Result<Checkpoint> {
+        let mut rd = Reader { buf, pos: 0 };
+        if rd.take(MAGIC.len())? != MAGIC {
+            return Err(Error::Fault(
+                "not an EPSL checkpoint (bad magic)".into(),
+            ));
+        }
+        let version = rd.u32()?;
+        if version != VERSION {
+            return Err(Error::Fault(format!(
+                "checkpoint version {version} unsupported (expected \
+                 {VERSION})"
+            )));
+        }
+        let fingerprint = rd.u64()?;
+        let next_round = rd.usize()?;
+        let s = [rd.u64()?, rd.u64()?, rd.u64()?, rd.u64()?];
+        let gauss_spare = match rd.u8()? {
+            0 => None,
+            1 => Some(rd.f64()?),
+            other => {
+                return Err(Error::Fault(format!(
+                    "checkpoint rng flag {other} is not 0/1"
+                )))
+            }
+        };
+        let n_replicas = rd.count(8)?;
+        let mut client_params = Vec::with_capacity(n_replicas);
+        for _ in 0..n_replicas {
+            let n_tensors = rd.count(8)?;
+            let mut replica = Vec::with_capacity(n_tensors);
+            for _ in 0..n_tensors {
+                replica.push(rd.f32_vec()?);
+            }
+            client_params.push(replica);
+        }
+        let n_server = rd.count(8)?;
+        let mut server_params = Vec::with_capacity(n_server);
+        for _ in 0..n_server {
+            server_params.push(rd.f32_vec()?);
+        }
+        let n_records = rd.count(8)?;
+        let mut records = Vec::with_capacity(n_records);
+        for _ in 0..n_records {
+            records.push(read_record(&mut rd)?);
+        }
+        if rd.pos != buf.len() {
+            return Err(Error::Fault(format!(
+                "checkpoint has {} trailing byte(s)",
+                buf.len() - rd.pos
+            )));
+        }
+        Ok(Checkpoint {
+            fingerprint,
+            next_round,
+            rng: RngState { s, gauss_spare },
+            client_params,
+            server_params,
+            records,
+        })
+    }
+
+    /// Write to disk (atomic-ish: temp file + rename, so a crash during
+    /// the write never leaves a half-checkpoint under the final name).
+    pub fn save(&self, path: &str) -> Result<()> {
+        let tmp = format!("{path}.tmp");
+        fs::write(&tmp, self.to_bytes())
+            .map_err(|e| Error::Io(format!("{tmp}: {e}")))?;
+        fs::rename(&tmp, path)
+            .map_err(|e| Error::Io(format!("{tmp} -> {path}: {e}")))
+    }
+
+    /// Read + parse from disk.
+    pub fn load(path: &str) -> Result<Checkpoint> {
+        if !Path::new(path).exists() {
+            return Err(Error::Fault(format!(
+                "checkpoint '{path}' does not exist"
+            )));
+        }
+        let buf = fs::read(path)
+            .map_err(|e| Error::Io(format!("{path}: {e}")))?;
+        Self::from_bytes(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> Checkpoint {
+        Checkpoint {
+            fingerprint: 0xDEAD_BEEF_1234_5678,
+            next_round: 5,
+            rng: RngState {
+                s: [1, u64::MAX, 3, 0x8000_0000_0000_0001],
+                gauss_spare: Some(-0.123456789),
+            },
+            client_params: vec![
+                vec![vec![1.0, -2.5, f32::MIN_POSITIVE], vec![0.0]],
+                vec![vec![3.5, 4.25, -0.0], vec![9.0]],
+            ],
+            server_params: vec![vec![0.5; 7], vec![]],
+            records: vec![
+                RoundRecord {
+                    round: 0,
+                    loss: 2.302585,
+                    train_acc: 0.125,
+                    test_acc: None,
+                    sim_latency: 1.5,
+                    stages: StageSpans {
+                        uplink_phase: 0.5,
+                        server_fp: 0.25,
+                        server_bp: 0.25,
+                        broadcast: 0.25,
+                        downlink_phase: 0.25,
+                        model_exchange: 0.0,
+                    },
+                    faults: FaultStats::default(),
+                    wall_ms: 12.5,
+                },
+                RoundRecord {
+                    round: 1,
+                    loss: 2.1,
+                    train_acc: 0.25,
+                    test_acc: Some(0.3),
+                    sim_latency: 1.75,
+                    stages: StageSpans {
+                        uplink_phase: 0.75,
+                        server_fp: 0.25,
+                        server_bp: 0.25,
+                        broadcast: 0.25,
+                        downlink_phase: 0.25,
+                        model_exchange: 0.0,
+                    },
+                    faults: FaultStats {
+                        injected: 1,
+                        retries: 2,
+                        dropped: 1,
+                        cohort: 4,
+                        recovery_s: 0.375,
+                    },
+                    wall_ms: 13.25,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn byte_roundtrip_is_exact() {
+        let ck = fixture();
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(ck, back);
+        // Bit-level check on the float payloads (PartialEq would accept
+        // -0.0 == 0.0; the resume contract is bitwise).
+        assert_eq!(
+            ck.client_params[1][0][2].to_bits(),
+            back.client_params[1][0][2].to_bits(),
+            "-0.0 not preserved"
+        );
+    }
+
+    #[test]
+    fn no_spare_roundtrip() {
+        let mut ck = fixture();
+        ck.rng.gauss_spare = None;
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.rng.gauss_spare, None);
+    }
+
+    #[test]
+    fn truncation_is_a_typed_error() {
+        let bytes = ck_bytes();
+        for cut in [0, 4, 12, 21, bytes.len() / 2, bytes.len() - 1] {
+            let e = Checkpoint::from_bytes(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(e, Error::Fault(_)),
+                "cut at {cut}: unexpected kind {e}"
+            );
+        }
+    }
+
+    fn ck_bytes() -> Vec<u8> {
+        fixture().to_bytes()
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let mut bytes = ck_bytes();
+        bytes[0] = b'X';
+        let e = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(e.to_string().contains("magic"), "{e}");
+        let mut bytes = ck_bytes();
+        bytes[8] = 99; // version LE low byte
+        let e = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut bytes = ck_bytes();
+        bytes.push(0);
+        let e = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(e.to_string().contains("trailing"), "{e}");
+    }
+
+    #[test]
+    fn corrupt_count_rejected_without_huge_alloc() {
+        let mut bytes = ck_bytes();
+        // The replica-count field sits right after the rng block:
+        // 8 magic + 4 version + 8 fp + 8 round + 32 rng + 1 flag + 8 spare.
+        let off = 8 + 4 + 8 + 8 + 32 + 1 + 8;
+        bytes[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let e = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(matches!(e, Error::Fault(_)), "{e}");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir
+            .join(format!("epsl-ckpt-test-{}.bin", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let ck = fixture();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(ck, back);
+        let e = Checkpoint::load("/nonexistent/epsl.ckpt").unwrap_err();
+        assert!(e.to_string().contains("does not exist"), "{e}");
+    }
+
+    #[test]
+    fn fingerprint_ignores_checkpoint_knobs_only() {
+        let cfg = Config::new();
+        let a = TrainerOptions::default();
+        let mut b = a.clone();
+        b.checkpoint_every = 3;
+        b.checkpoint_path = Some("x.ckpt".into());
+        assert_eq!(run_fingerprint(&cfg, &a), run_fingerprint(&cfg, &b));
+        let mut c = a.clone();
+        c.seed = 7;
+        assert_ne!(run_fingerprint(&cfg, &a), run_fingerprint(&cfg, &c));
+        let mut d = a.clone();
+        d.n_clients += 1;
+        assert_ne!(run_fingerprint(&cfg, &a), run_fingerprint(&cfg, &d));
+        let mut cfg2 = Config::new();
+        cfg2.train.batch = 32;
+        assert_ne!(run_fingerprint(&cfg, &a), run_fingerprint(&cfg2, &a));
+    }
+}

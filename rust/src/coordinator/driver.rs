@@ -5,9 +5,15 @@
 //! [`RoundPlan`](super::rounds::RoundPlan) per round through the plan
 //! engine ([`super::rounds::execute_round`]) and records per-round
 //! [`RunMetrics`] — loss, train/test accuracy, the simulated latency
-//! with its timeline stage breakdown, and wall-clock. The heavy lifting
-//! lives in [`super::rounds`] (round execution) and [`super::session`]
-//! (session state + latency accounting).
+//! with its timeline stage breakdown plus fault-recovery seconds, and
+//! wall-clock. [`resume`] restarts a killed run from a
+//! [`Checkpoint`] bit-exactly: the deterministic setup phase is re-run
+//! from the seed (data, shards, deployment, fault plan are pure
+//! functions of it), then the checkpointed parameters, RNG stream
+//! position, and metric records are installed and the loop continues at
+//! the saved round. The heavy lifting lives in [`super::rounds`] (round
+//! execution + graceful degradation) and [`super::session`] (session
+//! state, fault runtime, latency accounting).
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -17,19 +23,22 @@ use xla::Literal;
 use crate::config::Config;
 use crate::data::partition::{iid, lambda_weights, non_iid_two_class};
 use crate::data::synth::{train_test, SynthSpec};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::latency::frameworks::Framework;
 use crate::metrics::{RoundRecord, RunMetrics};
 use crate::runtime::artifact::Manifest;
 use crate::runtime::tensor::{literal_f32, literal_u32};
 use crate::runtime::Backend;
-use crate::scenario::DynamicChannel;
+use crate::scenario::{DynamicChannel, FaultSpec};
 use crate::timeline::Mode;
 use crate::util::rng::Rng;
 
-use super::params::ParamSet;
+use super::checkpoint::{run_fingerprint, Checkpoint};
+use super::params::{client_tensor_count, host_params, literal_params,
+                    ParamSet};
 use super::rounds::{execute_round, RoundPlan};
-use super::session::{build_sim_latency, check_eval_batch, Session};
+use super::session::{build_sim_latency, check_eval_batch, FaultRuntime,
+                     Session};
 
 /// Options for one training run.
 #[derive(Debug, Clone)]
@@ -62,6 +71,15 @@ pub struct TrainerOptions {
     /// reproduces the closed-form eq. 23 numbers bit-identically,
     /// `Pipelined` overlaps phases per client/link.
     pub timeline_mode: Mode,
+    /// Opt-in fault injection + resilience policy, expanded from the run
+    /// seed into a deterministic per-round plan.
+    pub faults: Option<FaultSpec>,
+    /// Write a [`Checkpoint`] to `checkpoint_path` every k rounds
+    /// (0 = never).
+    pub checkpoint_every: usize,
+    /// Where periodic checkpoints are written (required when
+    /// `checkpoint_every > 0`).
+    pub checkpoint_path: Option<String>,
 }
 
 impl Default for TrainerOptions {
@@ -83,16 +101,23 @@ impl Default for TrainerOptions {
             optimize_resources: false,
             dynamic_channel: None,
             timeline_mode: Mode::Barrier,
+            faults: None,
+            checkpoint_every: 0,
+            checkpoint_path: None,
         }
     }
 }
 
-/// Final model state of a run (exposed for tests and checkpointing-style
+/// Final model state of a run (exposed for tests and checkpointing
 /// consumers; the driver itself only needs it internally).
 pub struct TrainState {
     /// Per-client client-side parameters (single entry for vanilla SL).
     pub client_params: Vec<Vec<Literal>>,
     pub server_params: Vec<Literal>,
+    /// Session RNG stream position after the last round — together with
+    /// the parameters this is exactly the mutable state a [`Checkpoint`]
+    /// carries, so a k-round run's state doubles as a round-k snapshot.
+    pub rng: crate::util::rng::RngState,
 }
 
 /// Run one full training experiment.
@@ -105,15 +130,64 @@ pub fn train(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
 pub fn train_with_state(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
                         opts: &TrainerOptions)
     -> Result<(RunMetrics, TrainState)> {
+    run_training(rt, manifest, cfg, opts, None)
+}
+
+/// Resume a run from a checkpoint; the completed run (prior records +
+/// continued rounds) is bit-identical to the uninterrupted one.
+pub fn resume(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
+              opts: &TrainerOptions, ckpt: &Checkpoint)
+    -> Result<RunMetrics> {
+    resume_with_state(rt, manifest, cfg, opts, ckpt).map(|(m, _)| m)
+}
+
+/// [`resume`], also returning the final parameter state.
+pub fn resume_with_state(rt: &dyn Backend, manifest: &Manifest,
+                         cfg: &Config, opts: &TrainerOptions,
+                         ckpt: &Checkpoint)
+    -> Result<(RunMetrics, TrainState)> {
+    run_training(rt, manifest, cfg, opts, Some(ckpt))
+}
+
+/// Snapshot the mutable session state (everything the deterministic
+/// setup phase cannot re-derive from the seed).
+fn snapshot(fingerprint: u64, next_round: usize, rng: &Rng,
+            client_params: &[Vec<Literal>], server_params: &[Literal],
+            metrics: &RunMetrics) -> Result<Checkpoint> {
+    Ok(Checkpoint {
+        fingerprint,
+        next_round,
+        rng: rng.state(),
+        client_params: client_params
+            .iter()
+            .map(|cp| host_params(cp))
+            .collect::<Result<_>>()?,
+        server_params: host_params(server_params)?,
+        records: metrics.rounds.clone(),
+    })
+}
+
+fn run_training(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
+                opts: &TrainerOptions, ckpt: Option<&Checkpoint>)
+    -> Result<(RunMetrics, TrainState)> {
     let fam = manifest.family(&opts.family)?;
     let plan0 = RoundPlan::for_round(opts.framework, 0, opts.pt_switch);
     // Fail fast if the needed artifact is missing, or if evaluation could
     // never see a full chunk (no accuracy column otherwise).
     fam.server_train_entry(opts.cut, plan0.server_clients(opts.n_clients))?;
     check_eval_batch(opts.test_size, fam.eval_batch)?;
+    if opts.checkpoint_every > 0 && opts.checkpoint_path.is_none() {
+        return Err(Error::Config(
+            "checkpoint_every > 0 requires a checkpoint path \
+             (--checkpoint <path>)"
+                .into(),
+        ));
+    }
 
+    // Deterministic setup: everything below this line is a pure function
+    // of (cfg, opts) — a resumed run re-derives it identically from the
+    // seed, so the checkpoint only carries the mutable state.
     let mut rng = Rng::new(opts.seed);
-    // Data.
     let spec = SynthSpec::for_family(&opts.family, opts.dataset_size);
     let (train_set, test_set) =
         train_test(&spec, opts.test_size, opts.seed ^ 0xDA7A);
@@ -127,10 +201,22 @@ pub fn train_with_state(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
     // Latency model over a simulated deployment.
     let sim_latency = build_sim_latency(cfg, opts, &mut rng)?;
 
+    // Fault plan, expanded from the same seed stream (scheduled-only
+    // specs consume nothing — see scenario::faults).
+    let faults = match &opts.faults {
+        Some(spec) => Some(FaultRuntime::from_spec(
+            spec,
+            opts.rounds,
+            opts.n_clients,
+            &mut rng,
+        )?),
+        None => None,
+    };
+
     // Model init.
     let seed_lit = literal_u32(&[2], &[0, opts.seed as u32])?;
     let full = ParamSet::new(rt.call(&fam.init, &[seed_lit])?);
-    let (client0, mut server_params) = full.split(fam, opts.cut);
+    let (client0, mut server_params) = full.split(fam, opts.cut)?;
     let n_replicas = plan0.param_replicas(opts.n_clients);
     let mut client_params: Vec<Vec<Literal>> = if n_replicas == 1 {
         vec![client0]
@@ -155,16 +241,58 @@ pub fn train_with_state(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
         lr_s_lit,
         lr_c_lit,
         mask_cache: HashMap::new(),
+        faults,
     };
 
+    let fingerprint = run_fingerprint(cfg, opts);
     let mut metrics = RunMetrics::new(opts.framework.name());
-    for round in 0..opts.rounds {
+    let mut start_round = 0;
+    if let Some(ck) = ckpt {
+        // Install the checkpointed mutable state over the re-derived
+        // setup. The fingerprint gate rejects resuming into a different
+        // experiment before any tensor is touched.
+        if ck.fingerprint != fingerprint {
+            return Err(Error::Fault(format!(
+                "checkpoint fingerprint {:016x} does not match this \
+                 run's {:016x}: it was taken under a different \
+                 configuration",
+                ck.fingerprint, fingerprint
+            )));
+        }
+        if ck.next_round > opts.rounds {
+            return Err(Error::Fault(format!(
+                "checkpoint resumes at round {} but the run has only \
+                 {} round(s)",
+                ck.next_round, opts.rounds
+            )));
+        }
+        if ck.client_params.len() != client_params.len() {
+            return Err(Error::Fault(format!(
+                "checkpoint carries {} client replica(s), expected {}",
+                ck.client_params.len(),
+                client_params.len()
+            )));
+        }
+        let n_client = client_tensor_count(fam, opts.cut)?;
+        for (i, replica) in ck.client_params.iter().enumerate() {
+            client_params[i] =
+                literal_params(replica, &fam.params[..n_client])?;
+        }
+        server_params =
+            literal_params(&ck.server_params, &fam.params[n_client..])?;
+        session.rng = Rng::from_state(ck.rng);
+        metrics.rounds = ck.records.clone();
+        start_round = ck.next_round;
+    }
+
+    for round in start_round..opts.rounds {
         let t0 = Instant::now();
         let plan = RoundPlan::for_round(opts.framework, round,
                                         opts.pt_switch);
-        let (loss, train_acc) = execute_round(
+        let out = execute_round(
             &mut session,
             &plan,
+            round,
             &mut client_params,
             &mut server_params,
         )?;
@@ -180,15 +308,38 @@ pub fn train_with_state(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
             .round_timeline(round, opts.framework, plan.phi);
         metrics.push(RoundRecord {
             round,
-            loss,
-            train_acc,
+            loss: out.loss,
+            train_acc: out.train_acc,
             test_acc,
-            sim_latency: tl.total,
+            // Recovery seconds ride on top of the nominal timeline
+            // (+0.0 for a quiet round keeps the total bit-identical).
+            sim_latency: tl.total + out.faults.recovery_s,
             stages: tl.spans,
+            faults: out.faults,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         });
+        if opts.checkpoint_every > 0
+            && (round + 1) % opts.checkpoint_every == 0
+            && round + 1 < opts.rounds
+        {
+            if let Some(path) = &opts.checkpoint_path {
+                snapshot(
+                    fingerprint,
+                    round + 1,
+                    &session.rng,
+                    &client_params,
+                    &server_params,
+                    &metrics,
+                )?
+                .save(path)?;
+            }
+        }
     }
-    Ok((metrics, TrainState { client_params, server_params }))
+    let rng_state = session.rng.state();
+    Ok((
+        metrics,
+        TrainState { client_params, server_params, rng: rng_state },
+    ))
 }
 
 #[cfg(test)]
@@ -225,6 +376,13 @@ mod tests {
             .rounds
             .iter()
             .all(|r| r.stages.total().to_bits() == r.sim_latency.to_bits()));
+        // quiet run: no fault accounting
+        assert!(run.rounds.iter().all(|r| {
+            r.faults.injected == 0
+                && r.faults.dropped == 0
+                && r.faults.cohort == 2
+                && r.faults.recovery_s == 0.0
+        }));
     }
 
     #[test]
@@ -238,6 +396,33 @@ mod tests {
         let run = train(&rt, &m, &cfg, &opts).unwrap();
         assert_eq!(run.rounds.len(), 2);
         assert!(run.rounds[0].loss.is_finite());
+    }
+
+    #[test]
+    fn checkpoint_every_requires_a_path() {
+        let (rt, m, cfg) = setup();
+        let opts = TrainerOptions {
+            checkpoint_every: 2,
+            ..smoke_opts()
+        };
+        let e = train(&rt, &m, &cfg, &opts).unwrap_err();
+        assert!(e.to_string().contains("checkpoint"), "{e}");
+    }
+
+    #[test]
+    fn resume_rejects_foreign_fingerprint() {
+        let (rt, m, cfg) = setup();
+        let opts = smoke_opts();
+        let ck = Checkpoint {
+            fingerprint: 0x1234,
+            next_round: 2,
+            rng: Rng::new(1).state(),
+            client_params: vec![],
+            server_params: vec![],
+            records: vec![],
+        };
+        let e = resume(&rt, &m, &cfg, &opts, &ck).unwrap_err();
+        assert!(e.to_string().contains("fingerprint"), "{e}");
     }
 
     #[test]

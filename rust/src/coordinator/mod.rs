@@ -23,14 +23,20 @@
 //! latency accounting (timeline barrier/pipelined modes) live in
 //! [`session`]; [`driver`] is the thin entry point.
 
+pub mod checkpoint;
 pub mod driver;
 pub mod params;
 pub mod rounds;
 pub mod session;
 
-pub use driver::{train, train_with_state, TrainState, TrainerOptions};
+pub use checkpoint::{run_fingerprint, Checkpoint};
+pub use driver::{
+    resume, resume_with_state, train, train_with_state, TrainState,
+    TrainerOptions,
+};
 pub use rounds::{RoundPlan, SyncStyle, TurnStyle};
 
+use crate::error::{Error, Result};
 use crate::latency::frameworks::Framework;
 
 /// Cut-layer mapping: SplitNet stage boundaries → the paper's ResNet-18
@@ -40,12 +46,21 @@ use crate::latency::frameworks::Framework;
 /// stage 1 ↔ CONV1 (layer 1), stage 2 ↔ end of stage-1 convs (layer 4),
 /// stage 3 ↔ end of stage-2 blocks (layer 10), stage 4 ↔ CONV12 (layer 16).
 pub fn resnet18_cut_for_splitnet(cut: usize) -> usize {
+    try_resnet18_cut_for_splitnet(cut)
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible form of [`resnet18_cut_for_splitnet`] for hot paths that
+/// report a typed error instead of panicking on a bad cut.
+pub fn try_resnet18_cut_for_splitnet(cut: usize) -> Result<usize> {
     match cut {
-        1 => 1,
-        2 => 4,
-        3 => 10,
-        4 => 16,
-        other => panic!("splitnet cut {other} out of 1..=4"),
+        1 => Ok(1),
+        2 => Ok(4),
+        3 => Ok(10),
+        4 => Ok(16),
+        other => Err(Error::Config(format!(
+            "splitnet cut {other} out of 1..=4"
+        ))),
     }
 }
 
@@ -73,6 +88,8 @@ mod tests {
             (1..=4).map(resnet18_cut_for_splitnet).collect();
         assert_eq!(cuts, vec![1, 4, 10, 16]);
         assert!(cuts.windows(2).all(|w| w[0] < w[1]));
+        let e = try_resnet18_cut_for_splitnet(5).unwrap_err();
+        assert!(e.to_string().contains("out of 1..=4"), "{e}");
     }
 
     #[test]

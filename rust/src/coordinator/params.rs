@@ -1,11 +1,24 @@
 //! Model parameter state: literal-resident parameters with host mirrors
-//! only where aggregation requires them (SFL FedAvg, evaluation average).
+//! only where aggregation requires them (SFL FedAvg, evaluation average,
+//! checkpoint serialization).
 
 use xla::Literal;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::runtime::artifact::FamilyManifest;
 use crate::runtime::tensor::{literal_f32, to_f32_vec, weighted_average};
+
+/// Number of client-side parameter tensors for a cut, as a typed error
+/// instead of a `BTreeMap` index panic on an unsupported cut.
+pub fn client_tensor_count(fam: &FamilyManifest, cut: usize)
+    -> Result<usize> {
+    fam.client_param_count.get(&cut).copied().ok_or_else(|| {
+        Error::Artifact(format!(
+            "family '{}' has no client parameter split for cut {cut}",
+            fam.name
+        ))
+    })
+}
 
 /// A full model's parameters in canonical order, as XLA literals.
 pub struct ParamSet {
@@ -27,12 +40,18 @@ impl ParamSet {
 
     /// Split into (client prefix, server suffix) clones for the given cut.
     pub fn split(&self, fam: &FamilyManifest, cut: usize)
-        -> (Vec<Literal>, Vec<Literal>) {
-        let n = fam.client_param_count[&cut];
-        (
+        -> Result<(Vec<Literal>, Vec<Literal>)> {
+        let n = client_tensor_count(fam, cut)?;
+        if n > self.literals.len() {
+            return Err(Error::Artifact(format!(
+                "cut {cut} wants {n} client tensors but the model has {}",
+                self.literals.len()
+            )));
+        }
+        Ok((
             self.literals[..n].to_vec(),
             self.literals[n..].to_vec(),
-        )
+        ))
     }
 
     /// Recombine client + server parts into a full canonical list.
@@ -49,19 +68,68 @@ impl ParamSet {
 /// PSL/EPSL (whose client models never synchronize during training).
 pub fn fedavg(clients: &[Vec<Literal>], weights: &[f32],
               fam: &FamilyManifest, cut: usize) -> Result<Vec<Literal>> {
-    assert_eq!(clients.len(), weights.len());
-    let n_tensors = fam.client_param_count[&cut];
+    if clients.len() != weights.len() {
+        return Err(Error::Data(format!(
+            "fedavg over {} client(s) with {} weight(s)",
+            clients.len(),
+            weights.len()
+        )));
+    }
+    let n_tensors = client_tensor_count(fam, cut)?;
     let mut out = Vec::with_capacity(n_tensors);
     for t in 0..n_tensors {
         let bufs: Vec<Vec<f32>> = clients
             .iter()
-            .map(|c| to_f32_vec(&c[t]))
+            .map(|c| {
+                c.get(t).ok_or_else(|| {
+                    Error::Data(format!(
+                        "fedavg: client model missing tensor {t} \
+                         (have {})",
+                        c.len()
+                    ))
+                })
+                .and_then(to_f32_vec)
+            })
             .collect::<Result<_>>()?;
         let avg = weighted_average(&bufs, weights);
         let shape = &fam.params[t].1;
         out.push(literal_f32(shape, &avg)?);
     }
     Ok(out)
+}
+
+/// Copy a literal parameter list to host `f32` buffers (checkpointing).
+pub fn host_params(lits: &[Literal]) -> Result<Vec<Vec<f32>>> {
+    lits.iter().map(to_f32_vec).collect()
+}
+
+/// Rebuild a literal parameter list from host buffers against the
+/// manifest's `(name, shape)` slice — the exact inverse of
+/// [`host_params`], validated element count by element count so a stale
+/// or cross-family checkpoint surfaces as a typed error.
+pub fn literal_params(host: &[Vec<f32>], shapes: &[(String, Vec<usize>)])
+    -> Result<Vec<Literal>> {
+    if host.len() != shapes.len() {
+        return Err(Error::Fault(format!(
+            "checkpoint carries {} tensor(s) but the model expects {}",
+            host.len(),
+            shapes.len()
+        )));
+    }
+    host.iter()
+        .zip(shapes)
+        .map(|(buf, (name, shape))| {
+            let want: usize = shape.iter().product();
+            if buf.len() != want {
+                return Err(Error::Fault(format!(
+                    "checkpoint tensor '{name}' has {} element(s), \
+                     expected {want}",
+                    buf.len()
+                )));
+            }
+            literal_f32(shape, buf)
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -77,23 +145,33 @@ mod tests {
             .clone()
     }
 
-    #[test]
-    fn split_join_roundtrip() {
-        let fam = fam();
-        let lits: Vec<Literal> = fam
-            .params
+    fn full_params(fam: &FamilyManifest) -> Vec<Literal> {
+        fam.params
             .iter()
             .map(|(_, s)| {
                 let n: usize = s.iter().product();
                 literal_f32(s, &vec![1.0; n]).unwrap()
             })
-            .collect();
-        let ps = ParamSet::new(lits);
-        let (c, s) = ps.split(&fam, 2);
+            .collect()
+    }
+
+    #[test]
+    fn split_join_roundtrip() {
+        let fam = fam();
+        let ps = ParamSet::new(full_params(&fam));
+        let (c, s) = ps.split(&fam, 2).unwrap();
         assert_eq!(c.len(), 6);
         assert_eq!(c.len() + s.len(), fam.params.len());
         let joined = ParamSet::join(&c, &s);
         assert_eq!(joined.len(), fam.params.len());
+    }
+
+    #[test]
+    fn split_unknown_cut_is_an_error() {
+        let fam = fam();
+        let ps = ParamSet::new(full_params(&fam));
+        let e = ps.split(&fam, 99).unwrap_err();
+        assert!(e.to_string().contains("cut 99"), "{e}");
     }
 
     #[test]
@@ -114,5 +192,37 @@ mod tests {
             fedavg(&[mk(1.0), mk(3.0)], &[0.25, 0.75], &fam, cut).unwrap();
         let v = to_f32_vec(&avg[0]).unwrap();
         assert!(v.iter().all(|&x| (x - 2.5).abs() < 1e-6));
+        // Mismatched weight vector is a typed error, not a panic.
+        assert!(fedavg(&[mk(1.0)], &[0.5, 0.5], &fam, cut).is_err());
+    }
+
+    #[test]
+    fn host_literal_roundtrip_is_bit_exact() {
+        let fam = fam();
+        let lits = full_params(&fam);
+        let host = host_params(&lits).unwrap();
+        let back = literal_params(&host, &fam.params).unwrap();
+        let host2 = host_params(&back).unwrap();
+        assert_eq!(host.len(), host2.len());
+        for (a, b) in host.iter().zip(&host2) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn literal_params_validates_shape_contract() {
+        let fam = fam();
+        let lits = full_params(&fam);
+        let mut host = host_params(&lits).unwrap();
+        // Wrong tensor count.
+        let e = literal_params(&host[..2], &fam.params).unwrap_err();
+        assert!(e.to_string().contains("tensor"), "{e}");
+        // Wrong element count in one tensor.
+        host[0].push(0.0);
+        let e = literal_params(&host, &fam.params).unwrap_err();
+        assert!(e.to_string().contains("element"), "{e}");
     }
 }

@@ -19,6 +19,7 @@ use xla::Literal;
 
 use crate::error::{Error, Result};
 use crate::latency::frameworks::Framework;
+use crate::metrics::FaultStats;
 use crate::runtime::tensor::{literal_f32, literal_i32, scalar_f32,
                              to_f32_vec};
 
@@ -104,17 +105,44 @@ impl RoundPlan {
     }
 }
 
-/// Execute one round of `plan`. Returns (weighted loss, train accuracy
-/// over all C·b samples).
+/// What one executed round hands back to the driver.
+pub(crate) struct RoundOutput {
+    /// Weighted loss over the committed cohort.
+    pub(crate) loss: f64,
+    /// Train accuracy over the committed cohort's samples.
+    pub(crate) train_acc: f64,
+    /// Injected-fault / recovery accounting for the round.
+    pub(crate) faults: FaultStats,
+}
+
+/// λ weights re-normalized over the present cohort: `λ_i / Σ_{j present}
+/// λ_j`, so the fused server step's weighted reduction stays a proper
+/// convex combination when clients drop mid-round.
+pub(crate) fn renormalized_lambda(lam: &[f32], present: &[usize])
+    -> Vec<f32> {
+    let total: f32 = present.iter().map(|&i| lam[i]).sum();
+    present.iter().map(|&i| lam[i] / total).collect()
+}
+
+/// Execute round `round` of `plan`. A fault-free session takes the exact
+/// pre-fault path (same RNG stream, same literals, bit-identical); with
+/// a [`super::session::FaultRuntime`] installed the round absorbs the
+/// injected faults — crashes and deadline-expired stragglers shrink the
+/// committed cohort (⌈φb⌉ mask unchanged, λ re-normalized over the
+/// survivors), transient corruptions and server aborts retry with
+/// backoff, and everything is accounted in the returned
+/// [`FaultStats`].
 pub(crate) fn execute_round(
-    sess: &mut Session, plan: &RoundPlan,
+    sess: &mut Session, plan: &RoundPlan, round: usize,
     client_params: &mut [Vec<Literal>], server_params: &mut Vec<Literal>,
-) -> Result<(f64, f64)> {
+) -> Result<RoundOutput> {
     let c = sess.opts.n_clients;
     let b = sess.fam.batch;
     let cut = sess.opts.cut;
     let fam = sess.fam;
-    let smash = &fam.smashed_shape[&cut];
+    let smash = fam.smashed_shape.get(&cut).ok_or_else(|| {
+        Error::Artifact(format!("no smashed_shape for cut {cut}"))
+    })?;
     let smash_len: usize = smash.iter().product();
 
     let cf_entry = fam.client_fwd.get(&cut).ok_or_else(|| {
@@ -124,18 +152,107 @@ pub(crate) fn execute_round(
         Error::Artifact(format!("no client_step for cut {cut}"))
     })?;
 
-    let turns: Vec<Vec<usize>> = match plan.turns {
-        TurnStyle::Parallel => vec![(0..c).collect()],
-        TurnStyle::Sequential => (0..c).map(|i| vec![i]).collect(),
+    // Resolve this round's faults + resilience policy (quiet defaults).
+    let rf = sess
+        .faults
+        .as_ref()
+        .map(|f| f.round(round))
+        .unwrap_or_default();
+    let (quorum, max_retries, backoff_s, deadline_factor) = sess
+        .faults
+        .as_ref()
+        .map_or((1, 0, 0.0, 1.5), |f| {
+            (f.quorum, f.max_retries, f.retry_backoff_s, f.deadline_factor)
+        });
+    let mut stats = FaultStats {
+        injected: rf.n_injected(),
+        ..FaultStats::default()
     };
-    let tc = plan.server_clients(c);
+
+    // Cohort assembly: crashes drop clients outright; corrupted payloads
+    // retry (detected on ingest, the deterministic resend succeeds) or
+    // drop when the retry budget is 0; injected uplink delays past the
+    // straggler deadline evict, within it they cost recovery seconds.
+    let mut present: Vec<usize> =
+        (0..c).filter(|i| !rf.crashed.contains(i)).collect();
+    stats.dropped += rf.crashed.len();
+    for &ci in &rf.corrupt {
+        if !present.contains(&ci) {
+            continue;
+        }
+        if max_retries == 0 {
+            present.retain(|&x| x != ci);
+            stats.dropped += 1;
+        } else {
+            stats.retries += 1;
+            stats.recovery_s += backoff_s;
+        }
+    }
+    if !rf.delays.is_empty() {
+        let arrivals =
+            sess.sim_latency.uplink_arrivals(round, plan.framework,
+                                             plan.phi);
+        // The deadline only has per-client meaning when the timeline has
+        // one chain per client (vanilla SL's pre-summed sweep does not).
+        if arrivals.len() == c {
+            let nominal_max =
+                arrivals.iter().cloned().fold(0.0, f64::max);
+            let deadline = deadline_factor * nominal_max;
+            let mut overshoot = 0.0f64;
+            for &(ci, d) in &rf.delays {
+                if !present.contains(&ci) {
+                    continue;
+                }
+                let arr = arrivals[ci] + d;
+                if arr > deadline {
+                    present.retain(|&x| x != ci);
+                    stats.dropped += 1;
+                } else {
+                    overshoot = overshoot.max((arr - nominal_max).max(0.0));
+                }
+            }
+            stats.recovery_s += overshoot;
+        }
+    }
+    if present.len() < quorum.max(1) {
+        return Err(Error::Quorum {
+            round,
+            active: present.len(),
+            need: quorum.max(1),
+        });
+    }
+    stats.cohort = present.len();
+    let full_cohort = present.len() == c;
+
+    let turns: Vec<Vec<usize>> = match plan.turns {
+        TurnStyle::Parallel => vec![present.clone()],
+        TurnStyle::Sequential => present.iter().map(|&i| vec![i]).collect(),
+    };
+    let tc = match plan.turns {
+        TurnStyle::Parallel => present.len(),
+        TurnStyle::Sequential => 1,
+    };
     let st_entry = fam.server_train_entry(cut, tc)?;
     let (mask, mask_lit) = sess.mask_for(plan.phi)?;
     let agg_used = mask.iter().any(|m| *m > 0.5);
     let lam_lit = match plan.turns {
-        TurnStyle::Parallel => sess.lam_lit.clone(),
+        // The hoisted literal on the full cohort keeps the fault-free
+        // path bit-identical; a shrunk cohort re-normalizes λ over the
+        // survivors.
+        TurnStyle::Parallel if full_cohort => sess.lam_lit.clone(),
+        TurnStyle::Parallel => literal_f32(
+            &[present.len()],
+            &renormalized_lambda(&sess.lam, &present),
+        )?,
         TurnStyle::Sequential => literal_f32(&[1], &[1.0])?,
     };
+    let mut abort_pending = rf.server_abort;
+    if abort_pending && max_retries == 0 {
+        return Err(Error::Fault(format!(
+            "server abort at round {round} with no retry budget \
+             (faults.max_retries = 0): the round cannot commit"
+        )));
+    }
 
     let n_turns = turns.len();
     let mut loss_sum = 0.0f64;
@@ -171,6 +288,22 @@ pub(crate) fn execute_round(
         inputs.push(lam_lit.clone());
         inputs.push(mask_lit.clone());
         inputs.push(sess.lr_s_lit.clone());
+        if abort_pending {
+            // Server abort mid-round: the first fused step's work is
+            // lost before it commits (server_params are only assigned
+            // below, so discarding the result really discards the
+            // update); the retry recomputes it. Recovery pays the
+            // backoff plus the repeated server compute.
+            abort_pending = false;
+            let _ = sess.rt.call(st_entry, &inputs)?;
+            stats.retries += 1;
+            let spans = sess
+                .sim_latency
+                .round_timeline(round, plan.framework, plan.phi)
+                .spans;
+            stats.recovery_s += backoff_s + spans.server_fp
+                + spans.server_bp;
+        }
         let mut out = sess.rt.call(st_entry, &inputs)?;
         let n_sp = server_params.len();
         ncorr_sum += scalar_f32(&out[n_sp + 3])? as f64;
@@ -222,17 +355,31 @@ pub(crate) fn execute_round(
         }
     }
 
-    // Model sync: SFL's per-round client-side FedAvg.
+    // Model sync: SFL's per-round client-side FedAvg. With a shrunk
+    // cohort only the survivors contribute (λ re-normalized), but every
+    // replica — including a crashed client's — receives the synced
+    // model, exactly as a rejoining SFL client downloads the current
+    // global model.
     if matches!(plan.sync, SyncStyle::FedAvg) {
-        let avg = fedavg(client_params, &sess.lam, fam, cut)?;
+        let avg = if full_cohort {
+            fedavg(client_params, &sess.lam, fam, cut)?
+        } else {
+            let subset: Vec<Vec<Literal>> = present
+                .iter()
+                .map(|&i| client_params[plan.param_index(i)].clone())
+                .collect();
+            let w = renormalized_lambda(&sess.lam, &present);
+            fedavg(&subset, &w, fam, cut)?
+        };
         for cp in client_params.iter_mut() {
             *cp = avg.clone();
         }
     }
-    Ok((
-        loss_sum / n_turns as f64,
-        ncorr_sum / (c * b) as f64,
-    ))
+    Ok(RoundOutput {
+        loss: loss_sum / n_turns as f64,
+        train_acc: ncorr_sum / (present.len() * b) as f64,
+        faults: stats,
+    })
 }
 
 #[cfg(test)]
@@ -421,5 +568,22 @@ mod tests {
         );
         // SFL's stage breakdown carries the model exchange.
         assert!(run.rounds.iter().all(|r| r.stages.model_exchange > 0.0));
+    }
+
+    #[test]
+    fn renormalized_lambda_hand_computed() {
+        // λ = [0.2, 0.3, 0.5], clients {0, 2} survive:
+        // weights = [0.2/0.7, 0.5/0.7], exactly as computed by hand.
+        let lam = [0.2_f32, 0.3, 0.5];
+        let w = renormalized_lambda(&lam, &[0, 2]);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].to_bits(), (0.2_f32 / 0.7).to_bits());
+        assert_eq!(w[1].to_bits(), (0.5_f32 / 0.7).to_bits());
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        // Full cohort renormalizes to the original weights (already
+        // normalized), single survivor gets weight 1.
+        let full = renormalized_lambda(&lam, &[0, 1, 2]);
+        assert!((full.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert_eq!(renormalized_lambda(&lam, &[1]), vec![1.0]);
     }
 }

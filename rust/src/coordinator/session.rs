@@ -19,14 +19,15 @@ use crate::profile::resnet18;
 use crate::runtime::artifact::FamilyManifest;
 use crate::runtime::tensor::{literal_f32, literal_i32, scalar_f32};
 use crate::runtime::Backend;
-use crate::scenario::{self, DynamicChannel, Scenario};
+use crate::scenario::{self, DynamicChannel, FaultPlan, FaultSpec,
+                      RoundFaults, Scenario};
 use crate::timeline::{self, Mode, RoundTimeline};
 use crate::util::par;
 use crate::util::rng::Rng;
 
 use super::driver::TrainerOptions;
 use super::params::{fedavg, ParamSet};
-use super::resnet18_cut_for_splitnet;
+use super::try_resnet18_cut_for_splitnet;
 
 /// Everything fixed across rounds.
 pub(crate) struct Session<'a> {
@@ -46,6 +47,41 @@ pub(crate) struct Session<'a> {
     pub(crate) lr_c_lit: Literal,
     /// (φ bits) → (mask host vector, mask literal).
     pub(crate) mask_cache: HashMap<u64, (Vec<f32>, Literal)>,
+    /// Expanded fault plan + resilience policy (`None` = fault-free run;
+    /// the round engine takes the quiet path with zero overhead).
+    pub(crate) faults: Option<FaultRuntime>,
+}
+
+/// The session-resident fault machinery: the seed-expanded per-round
+/// plan plus the resilience knobs the round engine applies.
+pub(crate) struct FaultRuntime {
+    pub(crate) plan: FaultPlan,
+    pub(crate) quorum: usize,
+    pub(crate) max_retries: usize,
+    pub(crate) retry_backoff_s: f64,
+    pub(crate) deadline_factor: f64,
+}
+
+impl FaultRuntime {
+    /// Expand `spec` against the run shape. Consumes the session RNG
+    /// stream only when the spec has probabilistic knobs (scheduled-only
+    /// specs leave the batch-sampling stream untouched).
+    pub(crate) fn from_spec(spec: &FaultSpec, rounds: usize,
+                            n_clients: usize, rng: &mut Rng)
+        -> Result<FaultRuntime> {
+        Ok(FaultRuntime {
+            plan: spec.expand(rounds, n_clients, rng)?,
+            quorum: spec.quorum,
+            max_retries: spec.max_retries,
+            retry_backoff_s: spec.retry_backoff_s,
+            deadline_factor: spec.deadline_factor,
+        })
+    }
+
+    /// This round's injected faults (quiet past the planned horizon).
+    pub(crate) fn round(&self, r: usize) -> RoundFaults {
+        self.plan.round(r).cloned().unwrap_or_default()
+    }
 }
 
 /// One round's link state for the §V model.
@@ -71,14 +107,14 @@ pub(crate) struct SimLatency {
 }
 
 impl SimLatency {
-    /// Simulate this round's timeline (per-stage events + total).
-    pub(crate) fn round_timeline(&self, round: usize, fw: Framework,
-                                 phi: f64) -> RoundTimeline {
+    /// Closed-form latency inputs for this round (any round index past
+    /// the horizon maps onto the last entry — the static frozen draw).
+    fn inputs_at(&self, round: usize, phi: f64) -> LatencyInputs<'_> {
         // Cached profile: this runs once per training round, and the old
         // per-call Table IV rebuild dominated the simulated-latency cost.
         let profile = resnet18::profile_static();
         let r = &self.rounds[round.min(self.rounds.len() - 1)];
-        let inp = LatencyInputs {
+        LatencyInputs {
             profile,
             cut: self.cut,
             batch: self.batch,
@@ -90,13 +126,33 @@ impl SimLatency {
             uplink: &r.uplink,
             downlink: &r.downlink,
             broadcast: r.broadcast,
-        };
-        // For EPSL-PT the effective framework at this round is EPSL{phi}.
-        let fw_eff = match fw {
+        }
+    }
+
+    /// For EPSL-PT the effective framework at a round is EPSL{phi}.
+    fn effective_fw(fw: Framework, phi: f64) -> Framework {
+        match fw {
             Framework::EpslPt { .. } => Framework::Epsl { phi },
             other => other,
-        };
-        timeline::simulate(fw_eff, &inp, self.mode)
+        }
+    }
+
+    /// Simulate this round's timeline (per-stage events + total).
+    pub(crate) fn round_timeline(&self, round: usize, fw: Framework,
+                                 phi: f64) -> RoundTimeline {
+        let inp = self.inputs_at(round, phi);
+        timeline::simulate(Self::effective_fw(fw, phi), &inp, self.mode)
+    }
+
+    /// Nominal per-client smashed-data arrival times at the server
+    /// (`a_i = T_i^F + T_i^U`) — the baseline the straggler deadline is
+    /// derived from. One entry per timeline chain: C for the parallel
+    /// frameworks, a single pre-summed chain for vanilla SL.
+    pub(crate) fn uplink_arrivals(&self, round: usize, fw: Framework,
+                                  phi: f64) -> Vec<f64> {
+        let inp = self.inputs_at(round, phi);
+        timeline::shape_for(Self::effective_fw(fw, phi), &inp)
+            .uplink_arrivals()
     }
 
     /// This round's simulated latency in seconds.
@@ -110,7 +166,7 @@ pub(crate) fn build_sim_latency(cfg: &Config, opts: &TrainerOptions,
                                 rng: &mut Rng) -> Result<SimLatency> {
     let net = cfg.net.clone().with_clients(opts.n_clients);
     let profile = resnet18::profile_static();
-    let cut = resnet18_cut_for_splitnet(opts.cut);
+    let cut = try_resnet18_cut_for_splitnet(opts.cut)?;
     if let Some(dc) = &opts.dynamic_channel {
         return build_dynamic_sim_latency(cfg, opts, &net, cut, dc, rng);
     }
@@ -162,6 +218,21 @@ fn build_dynamic_sim_latency(cfg: &Config, opts: &TrainerOptions,
     spec.rounds = opts.rounds; // the scenario spans the training run
     let roster = Deployment::generate(net, rng);
     let sc = Scenario::from_deployment(net.clone(), roster, spec, rng)?;
+    // Churn/quorum interaction: surface a structured error naming the
+    // first round whose surviving cohort falls below the floor, instead
+    // of a downstream optimizer solve failure. The floor is the fault
+    // quorum when fault injection is on, else the optimizer's own
+    // feasibility minimum of one active client.
+    let quorum_floor = opts.faults.as_ref().map_or(1, |f| f.quorum);
+    for round in &sc.rounds {
+        if round.active.len() < quorum_floor {
+            return Err(Error::Quorum {
+                round: round.round,
+                active: round.active.len(),
+                need: quorum_floor,
+            });
+        }
+    }
     let rounds: Vec<SimRound> = if opts.optimize_resources {
         let (outcome, rates) = scenario::run_policy_with_rates(
             &sc,
@@ -446,7 +517,7 @@ mod tests {
         let legacy = Decision {
             alloc,
             psd_dbm_hz: psd,
-            cut: resnet18_cut_for_splitnet(opts.cut),
+            cut: crate::coordinator::resnet18_cut_for_splitnet(opts.cut),
         };
         let (up, dn, bc) = prob.rates(&legacy);
         assert_eq!(s.rounds[0].uplink, up);
@@ -563,5 +634,55 @@ mod tests {
         for r in 0..4 {
             assert!(s.round_seconds(r, opts.framework, 0.5) > 0.0);
         }
+    }
+
+    #[test]
+    fn churn_below_quorum_is_a_structured_error() {
+        // Satellite: a scenario round whose churned cohort falls below
+        // the fault policy's quorum floor must fail up front with a
+        // structured error naming the offending round — not deep inside
+        // the optimizer with a shape panic.
+        use crate::scenario::{ChurnSpec, FaultSpec, ReoptPolicy,
+                              ScenarioSpec};
+        let cfg = Config::new();
+        let spec = ScenarioSpec {
+            churn: Some(ChurnSpec {
+                drop_prob: 1.0,
+                rejoin_prob: 0.0,
+                min_active: 1,
+            }),
+            ..ScenarioSpec::fading(6)
+        };
+        let opts = TrainerOptions {
+            rounds: 6,
+            optimize_resources: true,
+            dynamic_channel: Some(DynamicChannel {
+                spec,
+                policy: ReoptPolicy::EveryK(1),
+            }),
+            faults: Some(FaultSpec { quorum: 5, ..Default::default() }),
+            seed: 2,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(opts.seed);
+        let e = build_sim_latency(&cfg, &opts, &mut rng).unwrap_err();
+        match e {
+            Error::Quorum { round, active, need } => {
+                assert!(round < 6, "round {round} out of range");
+                assert!(active < 5, "active {active} not below quorum");
+                assert_eq!(need, 5);
+            }
+            other => panic!("expected Error::Quorum, got: {other}"),
+        }
+        assert!(e_string_names_round(&opts, &cfg));
+    }
+
+    /// The quorum error's Display must name the round (checked through a
+    /// fresh run so the matched-out error above stays structural).
+    fn e_string_names_round(opts: &TrainerOptions, cfg: &Config) -> bool {
+        let mut rng = Rng::new(opts.seed);
+        let e = build_sim_latency(cfg, opts, &mut rng).unwrap_err();
+        let s = e.to_string();
+        s.contains("round") && s.contains("quorum")
     }
 }

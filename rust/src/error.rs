@@ -17,6 +17,18 @@ pub enum Error {
     Data(String),
     /// I/O error with context.
     Io(String),
+    /// Fault-injection / recovery failure (bad fault spec, unusable
+    /// checkpoint, unrecoverable injected fault).
+    Fault(String),
+    /// A round's surviving cohort fell below the configured quorum —
+    /// structured so callers can name the failing round directly.
+    Quorum {
+        round: usize,
+        /// Clients still present when the round tried to commit.
+        active: usize,
+        /// Configured quorum floor.
+        need: usize,
+    },
 }
 
 impl fmt::Display for Error {
@@ -28,6 +40,12 @@ impl fmt::Display for Error {
             Error::Optim(m) => write!(f, "optimizer error: {m}"),
             Error::Data(m) => write!(f, "data error: {m}"),
             Error::Io(m) => write!(f, "io error: {m}"),
+            Error::Fault(m) => write!(f, "fault error: {m}"),
+            Error::Quorum { round, active, need } => write!(
+                f,
+                "quorum error: round {round} committed with {active} \
+                 active client(s), below the quorum of {need}"
+            ),
         }
     }
 }
@@ -58,6 +76,16 @@ mod tests {
         assert!(Error::Config("x".into()).to_string().contains("config"));
         assert!(Error::Runtime("y".into()).to_string().contains("runtime"));
         assert!(Error::Optim("z".into()).to_string().contains("optimizer"));
+        assert!(Error::Fault("w".into()).to_string().contains("fault"));
+    }
+
+    #[test]
+    fn quorum_names_the_round() {
+        let e = Error::Quorum { round: 7, active: 1, need: 3 };
+        let s = e.to_string();
+        assert!(s.contains("round 7"), "{s}");
+        assert!(s.contains("1 active"), "{s}");
+        assert!(s.contains("quorum of 3"), "{s}");
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use epsl::channel::{ChannelRealization, Deployment};
 use epsl::config::cli::{render_help, Args, FlagSpec};
 use epsl::config::Config;
-use epsl::coordinator::{train, TrainerOptions};
+use epsl::coordinator::{resume, train, Checkpoint, TrainerOptions};
 use epsl::experiments::{self, Ctx};
 use epsl::latency::frameworks::Framework;
 use epsl::optim::baselines::Scheme;
@@ -18,7 +18,7 @@ use epsl::optim::{baselines, bcd, Problem};
 use epsl::profile::{resnet18, splitnet};
 use epsl::runtime::artifact::Manifest;
 use epsl::runtime::{select_backend, BackendChoice, SelectedBackend};
-use epsl::scenario::DynamicChannel;
+use epsl::scenario::{DynamicChannel, FaultSpec};
 use epsl::util::rng::Rng;
 use epsl::util::table::Table;
 
@@ -46,6 +46,10 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "scheme", takes_value: true, help: "a|b|c|d|proposed (optimize)" },
         FlagSpec { name: "backend", takes_value: true, help: "auto|native|pjrt (training backend)" },
         FlagSpec { name: "timeline", takes_value: true, help: "latency timeline mode: barrier|pipelined" },
+        FlagSpec { name: "faults", takes_value: true, help: "scheduled fault events: crash@r:c,delay@r:c:s,corrupt@r:c,abort@r (implies [faults] enabled)" },
+        FlagSpec { name: "checkpoint-every", takes_value: true, help: "write a checkpoint every k rounds (0=never)" },
+        FlagSpec { name: "checkpoint", takes_value: true, help: "checkpoint file path (for --checkpoint-every / --resume)" },
+        FlagSpec { name: "resume", takes_value: true, help: "resume bit-exactly from a checkpoint file" },
         FlagSpec { name: "artifacts", takes_value: true, help: "artifacts dir" },
         FlagSpec { name: "help", takes_value: false, help: "print help" },
     ]
@@ -159,6 +163,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     } else {
         None
     };
+    // Fault injection: the `[faults]` config section, overridable (and
+    // implicitly enabled) by --faults with scheduled events.
+    let mut fts = cfg.faults.clone();
+    if let Some(events) = args.get("faults") {
+        fts.events = events.to_string();
+        fts.enabled = true;
+    }
+    let faults = if fts.enabled {
+        Some(FaultSpec::from_settings(&fts)?)
+    } else {
+        None
+    };
     let opts = TrainerOptions {
         family: args.get("family").unwrap_or("mnist").to_string(),
         framework: fw,
@@ -173,6 +189,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         optimize_resources: args.has("optimize"),
         dynamic_channel,
         timeline_mode,
+        faults,
+        checkpoint_every: args.usize("checkpoint-every")?.unwrap_or(0),
+        checkpoint_path: args.get("checkpoint").map(str::to_string),
         ..Default::default()
     };
     let sel = pick_backend(&cfg)?;
@@ -185,7 +204,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         opts.family,
         opts.timeline_mode.name()
     );
-    let run = train(sel.backend.as_ref(), &sel.manifest, &cfg, &opts)?;
+    let run = match args.get("resume") {
+        Some(path) => {
+            let ck = Checkpoint::load(path)?;
+            println!("resuming from {} at round {}", path, ck.next_round);
+            resume(sel.backend.as_ref(), &sel.manifest, &cfg, &opts, &ck)?
+        }
+        None => train(sel.backend.as_ref(), &sel.manifest, &cfg, &opts)?,
+    };
     for r in &run.rounds {
         if let Some(acc) = r.test_acc {
             println!(
@@ -193,6 +219,22 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                 r.round, r.loss, r.train_acc, acc, r.sim_latency
             );
         }
+    }
+    if opts.faults.is_some() {
+        let (inj, ret, drop): (usize, usize, usize) = run.rounds.iter().fold(
+            (0, 0, 0),
+            |(i, r, d), rec| {
+                (i + rec.faults.injected,
+                 r + rec.faults.retries,
+                 d + rec.faults.dropped)
+            },
+        );
+        let recov: f64 =
+            run.rounds.iter().map(|r| r.faults.recovery_s).sum();
+        println!(
+            "faults: injected {inj}, retries {ret}, dropped {drop}, \
+             recovery {recov:.3}s"
+        );
     }
     println!(
         "converged accuracy {:.3}; total simulated latency {:.1}s",

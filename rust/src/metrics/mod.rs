@@ -5,6 +5,28 @@ use std::fmt::Write as _;
 use crate::timeline::StageSpans;
 use crate::util::stats;
 
+/// Recovery accounting for one round: what was injected and what the
+/// coordinator paid to absorb it. All-zero (the [`Default`]) for a
+/// fault-free round.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultStats {
+    /// Fault events injected this round (crashes + delays + corruptions
+    /// + server aborts).
+    pub injected: usize,
+    /// Retries performed for transient faults (corrupt payload, server
+    /// abort).
+    pub retries: usize,
+    /// Clients dropped from the round (crashes + straggler-deadline
+    /// evictions + retry-exhausted corruptions).
+    pub dropped: usize,
+    /// Clients the round actually committed with.
+    pub cohort: usize,
+    /// Recovery latency (seconds) added on top of the nominal timeline:
+    /// retry backoff, repeated server work, in-deadline straggler
+    /// overshoot.
+    pub recovery_s: f64,
+}
+
 /// One training round's record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RoundRecord {
@@ -21,6 +43,8 @@ pub struct RoundRecord {
     /// Per-stage breakdown of `sim_latency` (uplink phase, server FP/BP,
     /// broadcast, downlink phase, model exchange).
     pub stages: StageSpans,
+    /// Injected-fault / recovery accounting (all zero when quiet).
+    pub faults: FaultStats,
     /// Wall-clock milliseconds actually spent executing the round.
     pub wall_ms: f64,
 }
@@ -104,12 +128,14 @@ impl RunMetrics {
     }
 
     /// CSV dump (one row per round; unevaluated `test_acc` is an empty
-    /// cell; the six timeline stage spans follow the total).
+    /// cell; the six timeline stage spans follow the total; the five
+    /// fault-accounting columns precede wall clock).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,loss,train_acc,test_acc,sim_latency_s,t_uplink_s,\
              t_server_fp_s,t_server_bp_s,t_broadcast_s,t_downlink_s,\
-             t_exchange_s,wall_ms\n",
+             t_exchange_s,faults_injected,fault_retries,fault_dropped,\
+             fault_cohort,recovery_s,wall_ms\n",
         );
         for r in &self.rounds {
             let acc = match r.test_acc {
@@ -117,10 +143,11 @@ impl RunMetrics {
                 None => String::new(),
             };
             let s = &r.stages;
+            let fs = &r.faults;
             let _ = writeln!(
                 out,
                 "{},{:.6},{:.4},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},\
-                 {:.6},{:.3}",
+                 {:.6},{},{},{},{},{:.6},{:.3}",
                 r.round,
                 r.loss,
                 r.train_acc,
@@ -132,6 +159,11 @@ impl RunMetrics {
                 s.broadcast,
                 s.downlink_phase,
                 s.model_exchange,
+                fs.injected,
+                fs.retries,
+                fs.dropped,
+                fs.cohort,
+                fs.recovery_s,
                 r.wall_ms
             );
         }
@@ -158,6 +190,7 @@ mod tests {
                 downlink_phase: 0.25,
                 model_exchange: 0.0,
             },
+            faults: FaultStats::default(),
             wall_ms: 1.0,
         }
     }
@@ -213,7 +246,7 @@ mod tests {
         assert_eq!(csv.lines().count(), 4);
         assert!(csv.starts_with("round,"));
         let header_cols = csv.lines().next().unwrap().split(',').count();
-        assert_eq!(header_cols, 12);
+        assert_eq!(header_cols, 17);
         for line in csv.lines().skip(1) {
             assert_eq!(line.split(',').count(), header_cols, "{line}");
         }
@@ -229,5 +262,35 @@ mod tests {
         let m = run_with(&[0.1]);
         let r = &m.rounds[0];
         assert_eq!(r.stages.total(), r.sim_latency);
+    }
+
+    #[test]
+    fn fault_columns_in_csv() {
+        let mut m = run_with(&[0.1]);
+        let mut r = record(1, Some(0.2));
+        r.faults = FaultStats {
+            injected: 2,
+            retries: 1,
+            dropped: 1,
+            cohort: 3,
+            recovery_s: 0.25,
+        };
+        m.push(r);
+        let csv = m.to_csv();
+        let header: Vec<&str> =
+            csv.lines().next().unwrap().split(',').collect();
+        assert_eq!(&header[11..16], &[
+            "faults_injected",
+            "fault_retries",
+            "fault_dropped",
+            "fault_cohort",
+            "recovery_s"
+        ]);
+        let row: Vec<&str> = csv.lines().nth(2).unwrap().split(',').collect();
+        assert_eq!(&row[11..16], &["2", "1", "1", "3", "0.250000"]);
+        // Quiet rounds stay all-zero.
+        let quiet: Vec<&str> =
+            csv.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(&quiet[11..15], &["0", "0", "0", "0"]);
     }
 }

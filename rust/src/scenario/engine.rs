@@ -85,13 +85,20 @@ impl Scenario {
             || spec.los_flip.is_some()
             || spec.compute_jitter.is_some();
         let base = any_feature.then(|| rng.fork(0xFEA7));
+        // A feature's stream exists iff the base does (the feature being
+        // on implies `any_feature`), so this is expect-free by shape.
         let sub = |tag: u64| {
-            let mut b = base.clone().expect("feature stream without base");
-            b.fork(tag)
+            base.as_ref().map(|b| {
+                let mut b = b.clone();
+                b.fork(tag)
+            })
         };
-        let mut churn_rng = spec.churn.is_some().then(|| sub(0xC42B));
-        let mut los_rng = spec.los_flip.is_some().then(|| sub(0x105F));
-        let mut jit_rng = spec.compute_jitter.is_some().then(|| sub(0x717E));
+        let mut churn_rng =
+            if spec.churn.is_some() { sub(0xC42B) } else { None };
+        let mut los_rng =
+            if spec.los_flip.is_some() { sub(0x105F) } else { None };
+        let mut jit_rng =
+            if spec.compute_jitter.is_some() { sub(0x717E) } else { None };
 
         let base_f: Vec<f64> = roster.f_clients().to_vec();
         let mut los: Vec<bool> = roster.clients.iter().map(|l| l.los).collect();

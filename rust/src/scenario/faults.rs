@@ -1,0 +1,526 @@
+//! Deterministic fault injection: *what breaks*, round by round.
+//!
+//! A [`FaultSpec`] sits beside [`super::ScenarioSpec`] and describes the
+//! failure process of a training run — scheduled events (client crash,
+//! delayed uplink, corrupted activation payload, server abort) plus
+//! probabilistic per-round knobs — together with the resilience policy
+//! the coordinator applies (quorum floor, bounded retry with backoff,
+//! straggler deadline factor). [`FaultSpec::expand`] turns the spec into
+//! a concrete [`FaultPlan`] from the run seed, following the scenario
+//! engine's stream discipline: one base fork when any probabilistic knob
+//! is enabled, private per-feature sub-streams derived from clones of it
+//! (so crash draws do not depend on whether delays are also enabled),
+//! and **zero** RNG consumption for a purely scheduled spec — a run with
+//! only scheduled faults keeps the exact batch-sampling stream of a
+//! fault-free run.
+
+use crate::config::FaultSettings;
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// One kind of injected failure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Client `i` crashes for the round: it samples no batch, sends no
+    /// smashed data, and is dropped from the round's cohort.
+    ClientCrash(usize),
+    /// Client `i`'s smashed-data uplink arrives `delay_s` seconds late.
+    /// Past the straggler deadline the client is dropped; within it, the
+    /// overshoot is accounted as recovery latency.
+    DelayedUplink { client: usize, delay_s: f64 },
+    /// Client `i`'s activation payload arrives corrupted; the coordinator
+    /// detects it and retries (bounded, with backoff).
+    CorruptPayload(usize),
+    /// The server aborts mid-round before committing its update; the
+    /// fused step is retried and nothing is committed until it succeeds.
+    ServerAbort,
+}
+
+/// A scheduled fault: `kind` fires at training round `round`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub round: usize,
+    pub kind: FaultKind,
+}
+
+/// Fault process + resilience policy for one training run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Explicitly scheduled events (deterministic, seed-independent).
+    pub events: Vec<FaultEvent>,
+    /// Per-client per-round crash probability.
+    pub crash_prob: f64,
+    /// Per-client per-round delayed-uplink probability.
+    pub delay_prob: f64,
+    /// Delay seconds applied by probabilistic `delay_prob` events.
+    pub delay_s: f64,
+    /// Per-client per-round corrupted-payload probability.
+    pub corrupt_prob: f64,
+    /// Per-round server-abort probability.
+    pub abort_prob: f64,
+    /// Minimum surviving cohort a round may commit with; below it the
+    /// run fails with [`Error::Quorum`] naming the round.
+    pub quorum: usize,
+    /// Bounded retries for transient faults (corrupt payload / server
+    /// abort). With 0 retries a corrupt client is dropped instead.
+    pub max_retries: usize,
+    /// Base backoff seconds charged per retry (linear in the attempt).
+    pub retry_backoff_s: f64,
+    /// Straggler deadline as a multiple of the round's nominal slowest
+    /// uplink arrival (must be >= 1; the deadline can only bite clients
+    /// with injected delay).
+    pub deadline_factor: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            events: Vec::new(),
+            crash_prob: 0.0,
+            delay_prob: 0.0,
+            delay_s: 0.5,
+            corrupt_prob: 0.0,
+            abort_prob: 0.0,
+            quorum: 1,
+            max_retries: 2,
+            retry_backoff_s: 0.05,
+            deadline_factor: 1.5,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Parse the compact CLI event list: comma-separated
+    /// `crash@<round>:<client>`, `delay@<round>:<client>:<seconds>`,
+    /// `corrupt@<round>:<client>`, `abort@<round>`. Empty input is an
+    /// empty schedule.
+    pub fn parse_events(s: &str) -> Result<Vec<FaultEvent>> {
+        let mut events = Vec::new();
+        for raw in s.split(',') {
+            let item = raw.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (kind, rest) = item.split_once('@').ok_or_else(|| {
+                Error::Config(format!(
+                    "fault event '{item}' missing '@' (expected e.g. \
+                     crash@3:1, delay@4:0:2.5, corrupt@5:2, abort@6)"
+                ))
+            })?;
+            let fields: Vec<&str> = rest.split(':').collect();
+            let num = |f: &str, what: &str| -> Result<usize> {
+                f.parse().map_err(|_| {
+                    Error::Config(format!(
+                        "fault event '{item}': bad {what} '{f}'"
+                    ))
+                })
+            };
+            let kind = match (kind, fields.as_slice()) {
+                ("crash", [r, c]) => FaultEvent {
+                    round: num(r, "round")?,
+                    kind: FaultKind::ClientCrash(num(c, "client")?),
+                },
+                ("delay", [r, c, d]) => FaultEvent {
+                    round: num(r, "round")?,
+                    kind: FaultKind::DelayedUplink {
+                        client: num(c, "client")?,
+                        delay_s: d.parse().map_err(|_| {
+                            Error::Config(format!(
+                                "fault event '{item}': bad delay '{d}'"
+                            ))
+                        })?,
+                    },
+                },
+                ("corrupt", [r, c]) => FaultEvent {
+                    round: num(r, "round")?,
+                    kind: FaultKind::CorruptPayload(num(c, "client")?),
+                },
+                ("abort", [r]) => FaultEvent {
+                    round: num(r, "round")?,
+                    kind: FaultKind::ServerAbort,
+                },
+                _ => {
+                    return Err(Error::Config(format!(
+                        "fault event '{item}' unrecognized (crash@r:c | \
+                         delay@r:c:s | corrupt@r:c | abort@r)"
+                    )))
+                }
+            };
+            events.push(kind);
+        }
+        Ok(events)
+    }
+
+    /// Typed spec from the plain `[faults]` config section.
+    pub fn from_settings(s: &FaultSettings) -> Result<FaultSpec> {
+        s.validate()?;
+        Ok(FaultSpec {
+            events: Self::parse_events(&s.events)?,
+            crash_prob: s.crash_prob,
+            delay_prob: s.delay_prob,
+            delay_s: s.delay_s,
+            corrupt_prob: s.corrupt_prob,
+            abort_prob: s.abort_prob,
+            quorum: s.quorum,
+            max_retries: s.max_retries,
+            retry_backoff_s: s.retry_backoff_s,
+            deadline_factor: s.deadline_factor,
+        })
+    }
+
+    /// Structural validation against a run of `rounds` rounds over
+    /// `n_clients` clients.
+    pub fn validate(&self, n_clients: usize, rounds: usize) -> Result<()> {
+        for (name, p) in [
+            ("crash_prob", self.crash_prob),
+            ("delay_prob", self.delay_prob),
+            ("corrupt_prob", self.corrupt_prob),
+            ("abort_prob", self.abort_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::Config(format!(
+                    "faults.{name}={p} out of [0,1]"
+                )));
+            }
+        }
+        for (name, v) in [
+            ("delay_s", self.delay_s),
+            ("retry_backoff_s", self.retry_backoff_s),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(Error::Config(format!(
+                    "faults.{name}={v} must be finite and >= 0"
+                )));
+            }
+        }
+        if !self.deadline_factor.is_finite() || self.deadline_factor < 1.0 {
+            return Err(Error::Config(format!(
+                "faults.deadline_factor={} must be >= 1 (the deadline is \
+                 a multiple of the nominal slowest arrival)",
+                self.deadline_factor
+            )));
+        }
+        if self.quorum == 0 || self.quorum > n_clients {
+            return Err(Error::Config(format!(
+                "faults.quorum {} out of 1..={n_clients}",
+                self.quorum
+            )));
+        }
+        for ev in &self.events {
+            if ev.round >= rounds {
+                return Err(Error::Config(format!(
+                    "fault event at round {} beyond the run's {rounds} \
+                     round(s)",
+                    ev.round
+                )));
+            }
+            let client = match ev.kind {
+                FaultKind::ClientCrash(c)
+                | FaultKind::CorruptPayload(c) => Some(c),
+                FaultKind::DelayedUplink { client, delay_s } => {
+                    if !delay_s.is_finite() || delay_s < 0.0 {
+                        return Err(Error::Config(format!(
+                            "fault delay {delay_s} at round {} must be \
+                             finite and >= 0",
+                            ev.round
+                        )));
+                    }
+                    Some(client)
+                }
+                FaultKind::ServerAbort => None,
+            };
+            if let Some(c) = client {
+                if c >= n_clients {
+                    return Err(Error::Config(format!(
+                        "fault event targets client {c} but the run has \
+                         {n_clients} client(s)"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Does the spec draw any randomness at expansion time?
+    pub fn has_random(&self) -> bool {
+        self.crash_prob > 0.0
+            || self.delay_prob > 0.0
+            || self.corrupt_prob > 0.0
+            || self.abort_prob > 0.0
+    }
+
+    /// Expand into a per-round plan. Scheduled events consume no RNG; the
+    /// probabilistic knobs draw from private sub-streams forked off one
+    /// base (scenario-engine discipline), so each feature's draws are
+    /// invariant to which other features are enabled.
+    pub fn expand(&self, rounds: usize, n_clients: usize, rng: &mut Rng)
+        -> Result<FaultPlan> {
+        self.validate(n_clients, rounds)?;
+        let mut plan = vec![RoundFaults::default(); rounds];
+        for ev in &self.events {
+            let rf = &mut plan[ev.round];
+            match ev.kind {
+                FaultKind::ClientCrash(c) => rf.crashed.push(c),
+                FaultKind::DelayedUplink { client, delay_s } => {
+                    rf.delays.push((client, delay_s))
+                }
+                FaultKind::CorruptPayload(c) => rf.corrupt.push(c),
+                FaultKind::ServerAbort => rf.server_abort = true,
+            }
+        }
+        if self.has_random() {
+            let mut base = rng.fork(0xFA17);
+            let sub = |base: &Rng, tag: u64| {
+                let mut b = base.clone();
+                b.fork(tag)
+            };
+            if self.crash_prob > 0.0 {
+                let mut r = sub(&base, 0xC8A5);
+                for rf in plan.iter_mut() {
+                    for c in 0..n_clients {
+                        if r.chance(self.crash_prob) {
+                            rf.crashed.push(c);
+                        }
+                    }
+                }
+            }
+            if self.delay_prob > 0.0 {
+                let mut r = sub(&base, 0xDE1A);
+                for rf in plan.iter_mut() {
+                    for c in 0..n_clients {
+                        if r.chance(self.delay_prob) {
+                            rf.delays.push((c, self.delay_s));
+                        }
+                    }
+                }
+            }
+            if self.corrupt_prob > 0.0 {
+                let mut r = sub(&base, 0xC077);
+                for rf in plan.iter_mut() {
+                    for c in 0..n_clients {
+                        if r.chance(self.corrupt_prob) {
+                            rf.corrupt.push(c);
+                        }
+                    }
+                }
+            }
+            if self.abort_prob > 0.0 {
+                let mut r = sub(&base, 0xAB07);
+                for rf in plan.iter_mut() {
+                    if r.chance(self.abort_prob) {
+                        rf.server_abort = true;
+                    }
+                }
+            }
+            // `base` itself is never drawn from; forking it above is what
+            // decorrelates the sub-streams from the parent.
+            let _ = &mut base;
+        }
+        for rf in plan.iter_mut() {
+            rf.normalize();
+        }
+        Ok(FaultPlan { rounds: plan })
+    }
+}
+
+/// One round's injected faults, normalized (sorted, deduplicated, crash
+/// dominating the other per-client faults).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RoundFaults {
+    /// Clients that crash this round (sorted, unique).
+    pub crashed: Vec<usize>,
+    /// (client, extra uplink seconds) — sorted by client, one entry per
+    /// client, crashed clients excluded.
+    pub delays: Vec<(usize, f64)>,
+    /// Clients whose payload arrives corrupted (sorted, unique, crashed
+    /// clients excluded).
+    pub corrupt: Vec<usize>,
+    /// Server aborts mid-round before committing.
+    pub server_abort: bool,
+}
+
+impl RoundFaults {
+    /// Number of injected fault events this round.
+    pub fn n_injected(&self) -> usize {
+        self.crashed.len()
+            + self.delays.len()
+            + self.corrupt.len()
+            + usize::from(self.server_abort)
+    }
+
+    pub fn is_quiet(&self) -> bool {
+        self.n_injected() == 0
+    }
+
+    fn normalize(&mut self) {
+        self.crashed.sort_unstable();
+        self.crashed.dedup();
+        // A crash dominates: a crashed client has no payload to delay or
+        // corrupt.
+        self.delays.sort_by(|a, b| a.0.cmp(&b.0));
+        self.delays.dedup_by_key(|d| d.0);
+        self.delays.retain(|(c, _)| !self.crashed.contains(c));
+        self.corrupt.sort_unstable();
+        self.corrupt.dedup();
+        self.corrupt.retain(|c| !self.crashed.contains(c));
+    }
+}
+
+/// A fully expanded fault plan: one [`RoundFaults`] per training round.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub rounds: Vec<RoundFaults>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing.
+    pub fn quiet(rounds: usize) -> FaultPlan {
+        FaultPlan { rounds: vec![RoundFaults::default(); rounds] }
+    }
+
+    /// This round's faults (`None` past the planned horizon).
+    pub fn round(&self, r: usize) -> Option<&RoundFaults> {
+        self.rounds.get(r)
+    }
+
+    /// Total injected events across the plan.
+    pub fn n_injected(&self) -> usize {
+        self.rounds.iter().map(|r| r.n_injected()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_parse_roundtrip() {
+        let evs = FaultSpec::parse_events(
+            "crash@3:1, delay@4:0:2.5,corrupt@5:2,abort@6",
+        )
+        .unwrap();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(
+            evs[0],
+            FaultEvent { round: 3, kind: FaultKind::ClientCrash(1) }
+        );
+        assert_eq!(
+            evs[1],
+            FaultEvent {
+                round: 4,
+                kind: FaultKind::DelayedUplink { client: 0, delay_s: 2.5 }
+            }
+        );
+        assert_eq!(
+            evs[2],
+            FaultEvent { round: 5, kind: FaultKind::CorruptPayload(2) }
+        );
+        assert_eq!(
+            evs[3],
+            FaultEvent { round: 6, kind: FaultKind::ServerAbort }
+        );
+        assert!(FaultSpec::parse_events("").unwrap().is_empty());
+        assert!(FaultSpec::parse_events("boom@1:2").is_err());
+        assert!(FaultSpec::parse_events("crash@x:2").is_err());
+        assert!(FaultSpec::parse_events("crash@1").is_err());
+        assert!(FaultSpec::parse_events("abort@1:2").is_err());
+        assert!(FaultSpec::parse_events("delay@1:2:zzz").is_err());
+    }
+
+    #[test]
+    fn validation_bounds() {
+        let mut s = FaultSpec::default();
+        assert!(s.validate(3, 10).is_ok());
+        s.crash_prob = 1.5;
+        assert!(s.validate(3, 10).is_err());
+        let mut s = FaultSpec::default();
+        s.quorum = 4;
+        assert!(s.validate(3, 10).is_err());
+        assert!(s.validate(4, 10).is_ok());
+        let mut s = FaultSpec::default();
+        s.deadline_factor = 0.5;
+        assert!(s.validate(3, 10).is_err());
+        let mut s = FaultSpec::default();
+        s.events = FaultSpec::parse_events("crash@12:0").unwrap();
+        assert!(s.validate(3, 10).is_err(), "round beyond run");
+        s.events = FaultSpec::parse_events("crash@2:9").unwrap();
+        assert!(s.validate(3, 10).is_err(), "client beyond roster");
+        s.events = FaultSpec::parse_events("crash@2:2").unwrap();
+        assert!(s.validate(3, 10).is_ok());
+    }
+
+    #[test]
+    fn scheduled_expansion_consumes_no_rng() {
+        let mut spec = FaultSpec::default();
+        spec.events =
+            FaultSpec::parse_events("crash@1:0,abort@2,delay@0:1:0.25")
+                .unwrap();
+        let mut rng = Rng::new(9);
+        let mut witness = rng.clone();
+        let plan = spec.expand(4, 2, &mut rng).unwrap();
+        assert_eq!(rng.next_u64(), witness.next_u64(), "stream moved");
+        assert_eq!(plan.rounds.len(), 4);
+        assert_eq!(plan.rounds[1].crashed, vec![0]);
+        assert!(plan.rounds[2].server_abort);
+        assert_eq!(plan.rounds[0].delays, vec![(1, 0.25)]);
+        assert_eq!(plan.n_injected(), 3);
+    }
+
+    #[test]
+    fn random_expansion_is_seed_deterministic() {
+        let mut spec = FaultSpec::default();
+        spec.crash_prob = 0.3;
+        spec.abort_prob = 0.2;
+        let a = spec.expand(20, 4, &mut Rng::new(5)).unwrap();
+        let b = spec.expand(20, 4, &mut Rng::new(5)).unwrap();
+        assert_eq!(a, b);
+        let c = spec.expand(20, 4, &mut Rng::new(6)).unwrap();
+        assert_ne!(a, c, "different seed must move the plan");
+        assert!(a.n_injected() > 0, "p=0.3 over 80 draws hit nothing");
+    }
+
+    #[test]
+    fn feature_streams_are_independent() {
+        // Enabling delays must not move the crash draws (private
+        // sub-streams off one base, scenario-engine discipline).
+        let mut only_crash = FaultSpec::default();
+        only_crash.crash_prob = 0.4;
+        let mut both = only_crash.clone();
+        both.delay_prob = 0.5;
+        let a = only_crash.expand(12, 3, &mut Rng::new(11)).unwrap();
+        let b = both.expand(12, 3, &mut Rng::new(11)).unwrap();
+        for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+            // Crash wins over delay during normalization, so compare on
+            // the crash sets only.
+            assert_eq!(ra.crashed, rb.crashed);
+        }
+    }
+
+    #[test]
+    fn crash_dominates_same_client_faults() {
+        let mut spec = FaultSpec::default();
+        spec.events = FaultSpec::parse_events(
+            "crash@0:1,delay@0:1:2.0,corrupt@0:1,corrupt@0:0",
+        )
+        .unwrap();
+        let plan = spec.expand(1, 2, &mut Rng::new(1)).unwrap();
+        let rf = &plan.rounds[0];
+        assert_eq!(rf.crashed, vec![1]);
+        assert!(rf.delays.is_empty(), "delay on crashed client kept");
+        assert_eq!(rf.corrupt, vec![0], "corrupt on crashed client kept");
+    }
+
+    #[test]
+    fn settings_to_spec() {
+        let mut st = FaultSettings::default();
+        st.events = "abort@1".into();
+        st.crash_prob = 0.1;
+        st.quorum = 2;
+        let spec = FaultSpec::from_settings(&st).unwrap();
+        assert_eq!(spec.events.len(), 1);
+        assert_eq!(spec.crash_prob, 0.1);
+        assert_eq!(spec.quorum, 2);
+        st.corrupt_prob = -0.5;
+        assert!(FaultSpec::from_settings(&st).is_err());
+    }
+}

@@ -18,7 +18,11 @@
 //!   `optim::eval` fast path with solve blocks fanned across cores
 //!   ([`run`]);
 //! - [`ScenarioCell`] — grid cells for parallel sweeps over
-//!   spec × policy × seed ([`sweep`]), feeding Fig. 13 / Fig. 13b.
+//!   spec × policy × seed ([`sweep`]), feeding Fig. 13 / Fig. 13b;
+//! - [`FaultSpec`] — *what breaks*: scheduled + probabilistic client
+//!   crashes, delayed uplinks, corrupted payloads, and server aborts,
+//!   expanded from the run seed into a [`FaultPlan`] the coordinator
+//!   executes with quorum/retry/deadline resilience ([`faults`]).
 //!
 //! Everything is bit-identical for any thread count (`EPSL_THREADS=1`
 //! forces serial), and a pure-fading spec consumes the RNG stream exactly
@@ -26,11 +30,13 @@
 //! reproduces its numbers. Knobs are documented in EXPERIMENTS.md.
 
 pub mod engine;
+pub mod faults;
 pub mod run;
 pub mod spec;
 pub mod sweep;
 
 pub use engine::{Scenario, ScenarioRound};
+pub use faults::{FaultEvent, FaultKind, FaultPlan, FaultSpec, RoundFaults};
 pub use run::{
     pair_latencies, run_policy, run_policy_with_rates, PairedStats,
     RoundOutcome, RoundRates, RunOptions, ScenarioOutcome,

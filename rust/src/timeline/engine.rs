@@ -97,10 +97,12 @@ fn run_barrier(shape: &RoundShape, mode: Mode) -> RoundTimeline {
     // Phase 1: client FP chained into smashed-data uplink, synchronized
     // at the server-ingest barrier (phase starts at t = 0).
     let mut span = 0.0f64;
-    for i in 0..n {
-        let fp = shape.client_fp[i];
-        let arr = fp + shape.uplink[i];
-        ev.push(Event::new(fp, EventKind::ClientFpDone { client: i }));
+    let arrivals = shape.uplink_arrivals();
+    for (i, &arr) in arrivals.iter().enumerate() {
+        ev.push(Event::new(
+            shape.client_fp[i],
+            EventKind::ClientFpDone { client: i },
+        ));
         ev.push(Event::new(arr, EventKind::UplinkDone { client: i }));
         span = span.max(arr);
     }
@@ -191,13 +193,13 @@ fn run_pipelined(shape: &RoundShape) -> RoundTimeline {
 
     // Client FP → uplink chains (the per-client association is identical
     // to barrier mode: each client's data lands at a_i = T_i^F + T_i^U).
-    let mut arrivals = Vec::with_capacity(n);
-    for i in 0..n {
-        let fp = shape.client_fp[i];
-        let arr = fp + shape.uplink[i];
-        ev.push(Event::new(fp, EventKind::ClientFpDone { client: i }));
+    let arrivals = shape.uplink_arrivals();
+    for (i, &arr) in arrivals.iter().enumerate() {
+        ev.push(Event::new(
+            shape.client_fp[i],
+            EventKind::ClientFpDone { client: i },
+        ));
         ev.push(Event::new(arr, EventKind::UplinkDone { client: i }));
-        arrivals.push(arr);
     }
     let t_arr = arrivals.iter().cloned().fold(0.0, f64::max);
 

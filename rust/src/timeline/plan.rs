@@ -67,6 +67,18 @@ impl RoundShape {
     pub fn n_chains(&self) -> usize {
         self.client_fp.len()
     }
+
+    /// Per-chain smashed-data arrival times at the server ingest,
+    /// `a_i = T_i^F + T_i^U` — the single fp association both engine
+    /// modes fold over, and the nominal baseline the coordinator's
+    /// straggler deadline is derived from.
+    pub fn uplink_arrivals(&self) -> Vec<f64> {
+        self.client_fp
+            .iter()
+            .zip(&self.uplink)
+            .map(|(f, u)| f + u)
+            .collect()
+    }
 }
 
 /// Build the declarative shape for `fw` under `inp` (the framework

@@ -1,0 +1,448 @@
+//! Fault-tolerance integration: checkpoint/resume bit-exactness, the
+//! deterministic fault-injection plan, and straggler-deadline graceful
+//! degradation — all on the native backend (no artifacts needed).
+//!
+//! The contracts under test:
+//!   * a killed run resumed from a checkpoint is *bitwise* identical to
+//!     the uninterrupted run (golden + every-round property test);
+//!   * scheduled fault specs consume no RNG, so the pre-fault prefix of
+//!     a faulty run matches the fault-free run bit for bit;
+//!   * a mid-round client crash commits the round with the surviving
+//!     cohort (re-normalized λ weights) and reports it in the metrics;
+//!   * cohort-below-quorum is a structured error naming the round.
+
+use epsl::config::Config;
+use epsl::coordinator::{
+    resume, resume_with_state, run_fingerprint, train, train_with_state,
+    Checkpoint, TrainerOptions,
+};
+use epsl::coordinator::params::host_params;
+use epsl::error::Error;
+use epsl::latency::frameworks::Framework;
+use epsl::metrics::RunMetrics;
+use epsl::runtime::artifact::Manifest;
+use epsl::runtime::native::{self, NativeBackend};
+use epsl::scenario::FaultSpec;
+
+fn setup() -> (NativeBackend, Manifest, Config) {
+    (NativeBackend::new(), native::manifest(), Config::new())
+}
+
+fn short_opts(rounds: usize) -> TrainerOptions {
+    TrainerOptions {
+        framework: Framework::Epsl { phi: 0.5 },
+        n_clients: 2,
+        rounds,
+        eval_every: 2,
+        dataset_size: 600,
+        test_size: 256,
+        eta_c: 0.1,
+        eta_s: 0.1,
+        seed: 99,
+        ..Default::default()
+    }
+}
+
+fn scheduled(events: &str) -> FaultSpec {
+    FaultSpec {
+        events: FaultSpec::parse_events(events).unwrap(),
+        ..Default::default()
+    }
+}
+
+fn tmp_path(tag: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("epsl_faults_{tag}_{}.ckpt", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+/// Learning dynamics of two runs, compared bit for bit from `from` on
+/// (wall_ms is wall-clock and necessarily differs).
+fn assert_rounds_bit_equal(a: &RunMetrics, b: &RunMetrics, from: usize) {
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    for (ra, rb) in a.rounds[from..].iter().zip(&b.rounds[from..]) {
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "round {}", ra.round);
+        assert_eq!(
+            ra.train_acc.to_bits(),
+            rb.train_acc.to_bits(),
+            "round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.test_acc.map(f64::to_bits),
+            rb.test_acc.map(f64::to_bits),
+            "round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.sim_latency.to_bits(),
+            rb.sim_latency.to_bits(),
+            "round {}",
+            ra.round
+        );
+        assert_eq!(ra.faults, rb.faults, "round {}", ra.round);
+    }
+}
+
+fn assert_params_bit_equal(
+    a: &[Vec<xla::Literal>],
+    b: &[Vec<xla::Literal>],
+) {
+    assert_eq!(a.len(), b.len());
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        let (ha, hb) = (host_params(pa).unwrap(), host_params(pb).unwrap());
+        assert_eq!(ha, hb, "replica {i} diverged");
+    }
+}
+
+// --- checkpoint / resume ----------------------------------------------
+
+#[test]
+fn golden_kill_and_resume_is_bit_exact() {
+    // 10 rounds straight vs 5 + snapshot-to-disk + restore + 5.
+    let (rt, m, cfg) = setup();
+    let straight = short_opts(10);
+    let (full, full_state) =
+        train_with_state(&rt, &m, &cfg, &straight).unwrap();
+
+    let path = tmp_path("golden");
+    let ckpt_opts = TrainerOptions {
+        checkpoint_every: 5,
+        checkpoint_path: Some(path.clone()),
+        ..straight.clone()
+    };
+    // Writing checkpoints must not perturb the run itself.
+    let with_ckpt = train(&rt, &m, &cfg, &ckpt_opts).unwrap();
+    assert_rounds_bit_equal(&full, &with_ckpt, 0);
+
+    // "Kill" the run: all we have is the checkpoint file on disk.
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.next_round, 5);
+    let (resumed, resumed_state) =
+        resume_with_state(&rt, &m, &cfg, &straight, &ck).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // The resumed run carries the first 5 records and continues with
+    // rounds 5..10 bitwise identical to the uninterrupted run.
+    assert_rounds_bit_equal(&full, &resumed, 0);
+    assert_params_bit_equal(
+        &full_state.client_params,
+        &resumed_state.client_params,
+    );
+    let (hs_a, hs_b) = (
+        host_params(&full_state.server_params).unwrap(),
+        host_params(&resumed_state.server_params).unwrap(),
+    );
+    assert_eq!(hs_a, hs_b, "server params diverged after resume");
+    assert_eq!(full_state.rng, resumed_state.rng);
+}
+
+#[test]
+fn checkpoint_roundtrip_property_every_round_both_families() {
+    // Satellite 3: snapshot at EVERY round k of a 6-round run, for both
+    // model families and cuts {1, 4}; the resumed run's continuation and
+    // final parameters must be bitwise equal to the uninterrupted run's.
+    //
+    // A k-round run's TrainState is exactly the round-k snapshot (setup
+    // is a pure function of the seed and evaluation consumes no RNG), so
+    // the checkpoint is built from it and the fingerprint is taken from
+    // the full run's options.
+    let (rt, m, cfg) = setup();
+    for family in ["mnist", "ham"] {
+        for cut in [1usize, 4] {
+            let full_opts = TrainerOptions {
+                family: family.into(),
+                cut,
+                eval_every: 3,
+                ..short_opts(6)
+            };
+            let (full, full_state) =
+                train_with_state(&rt, &m, &cfg, &full_opts).unwrap();
+            for k in 1..6 {
+                let (_, sk) = train_with_state(
+                    &rt,
+                    &m,
+                    &cfg,
+                    &TrainerOptions { rounds: k, ..full_opts.clone() },
+                )
+                .unwrap();
+                let ck = Checkpoint {
+                    fingerprint: run_fingerprint(&cfg, &full_opts),
+                    next_round: k,
+                    rng: sk.rng,
+                    client_params: sk
+                        .client_params
+                        .iter()
+                        .map(|cp| host_params(cp).unwrap())
+                        .collect(),
+                    server_params: host_params(&sk.server_params)
+                        .unwrap(),
+                    records: full.rounds[..k].to_vec(),
+                };
+                // Serialize through the wire format too: resume from the
+                // decoded bytes, not the in-memory struct.
+                let ck = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+                let (resumed, rs) =
+                    resume_with_state(&rt, &m, &cfg, &full_opts, &ck)
+                        .unwrap();
+                assert_rounds_bit_equal(&full, &resumed, k);
+                assert_params_bit_equal(
+                    &full_state.client_params,
+                    &rs.client_params,
+                );
+                assert_eq!(
+                    host_params(&full_state.server_params).unwrap(),
+                    host_params(&rs.server_params).unwrap(),
+                    "{family}/cut{cut}/k={k}: server params diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn resume_into_a_different_experiment_is_rejected() {
+    let (rt, m, cfg) = setup();
+    let opts = short_opts(6);
+    let (_, s3) = train_with_state(
+        &rt,
+        &m,
+        &cfg,
+        &TrainerOptions { rounds: 3, ..opts.clone() },
+    )
+    .unwrap();
+    let ck = Checkpoint {
+        fingerprint: run_fingerprint(
+            &cfg,
+            &TrainerOptions { seed: 7, ..opts.clone() },
+        ),
+        next_round: 3,
+        rng: s3.rng,
+        client_params: s3
+            .client_params
+            .iter()
+            .map(|cp| host_params(cp).unwrap())
+            .collect(),
+        server_params: host_params(&s3.server_params).unwrap(),
+        records: vec![],
+    };
+    let e = resume(&rt, &m, &cfg, &opts, &ck).unwrap_err();
+    assert!(e.to_string().contains("fingerprint"), "{e}");
+}
+
+// --- fault injection ---------------------------------------------------
+
+#[test]
+fn scheduled_crash_commits_round_with_surviving_cohort() {
+    // crash@2:1 on a 3-client run: round 2 commits with 2 clients and
+    // re-normalized λ; rounds before the fault are bit-identical to the
+    // fault-free run (scheduled specs consume no RNG).
+    let (rt, m, cfg) = setup();
+    let clean_opts = TrainerOptions { n_clients: 3, ..short_opts(5) };
+    let clean = train(&rt, &m, &cfg, &clean_opts).unwrap();
+    let opts = TrainerOptions {
+        faults: Some(scheduled("crash@2:1")),
+        ..clean_opts
+    };
+    let run = train(&rt, &m, &cfg, &opts).unwrap();
+    for r in &run.rounds {
+        if r.round == 2 {
+            assert_eq!(r.faults.injected, 1);
+            assert_eq!(r.faults.dropped, 1);
+            assert_eq!(r.faults.cohort, 2);
+        } else {
+            assert_eq!(r.faults.injected, 0, "round {}", r.round);
+            assert_eq!(r.faults.cohort, 3, "round {}", r.round);
+        }
+        assert!(r.loss.is_finite());
+    }
+    // Pre-fault prefix is bit-identical.
+    let pre: Vec<u64> =
+        clean.rounds[..2].iter().map(|r| r.loss.to_bits()).collect();
+    let got: Vec<u64> =
+        run.rounds[..2].iter().map(|r| r.loss.to_bits()).collect();
+    assert_eq!(pre, got);
+}
+
+#[test]
+fn corrupt_payload_retries_without_changing_the_trajectory() {
+    // A corrupted uplink with retry budget re-transmits: the cohort stays
+    // full and learning dynamics are bit-identical to the fault-free run;
+    // only the accounting (retries + recovery seconds) moves.
+    let (rt, m, cfg) = setup();
+    let clean = train(&rt, &m, &cfg, &short_opts(4)).unwrap();
+    let opts = TrainerOptions {
+        faults: Some(scheduled("corrupt@1:0")),
+        ..short_opts(4)
+    };
+    let run = train(&rt, &m, &cfg, &opts).unwrap();
+    for (rc, rf) in clean.rounds.iter().zip(&run.rounds) {
+        assert_eq!(rc.loss.to_bits(), rf.loss.to_bits());
+        assert_eq!(rc.train_acc.to_bits(), rf.train_acc.to_bits());
+    }
+    let r1 = &run.rounds[1];
+    assert_eq!(r1.faults.injected, 1);
+    assert_eq!(r1.faults.retries, 1);
+    assert_eq!(r1.faults.dropped, 0);
+    assert_eq!(r1.faults.cohort, 2);
+    assert!(r1.faults.recovery_s > 0.0);
+    assert!(r1.sim_latency > clean.rounds[1].sim_latency);
+}
+
+#[test]
+fn corrupt_payload_without_retry_budget_drops_the_client() {
+    let (rt, m, cfg) = setup();
+    let opts = TrainerOptions {
+        n_clients: 3,
+        faults: Some(FaultSpec {
+            max_retries: 0,
+            ..scheduled("corrupt@1:2")
+        }),
+        ..short_opts(3)
+    };
+    let run = train(&rt, &m, &cfg, &opts).unwrap();
+    let r1 = &run.rounds[1];
+    assert_eq!(r1.faults.dropped, 1);
+    assert_eq!(r1.faults.retries, 0);
+    assert_eq!(r1.faults.cohort, 2);
+}
+
+#[test]
+fn straggler_beyond_deadline_is_dropped_within_is_absorbed() {
+    let (rt, m, cfg) = setup();
+    // A 100 s uplink delay blows any deadline derived from the nominal
+    // timeline: the straggler is evicted, the round commits degraded.
+    let late = TrainerOptions {
+        faults: Some(scheduled("delay@1:0:100")),
+        ..short_opts(3)
+    };
+    let run = train(&rt, &m, &cfg, &late).unwrap();
+    let r1 = &run.rounds[1];
+    assert_eq!(r1.faults.injected, 1);
+    assert_eq!(r1.faults.dropped, 1);
+    assert_eq!(r1.faults.cohort, 1);
+
+    // A 1 ms delay lands well inside the 1.5× deadline: full cohort, the
+    // trajectory is bit-identical (delays never touch the computation).
+    let clean = train(&rt, &m, &cfg, &short_opts(3)).unwrap();
+    let slight = TrainerOptions {
+        faults: Some(scheduled("delay@1:0:0.001")),
+        ..short_opts(3)
+    };
+    let run = train(&rt, &m, &cfg, &slight).unwrap();
+    for (rc, rf) in clean.rounds.iter().zip(&run.rounds) {
+        assert_eq!(rc.loss.to_bits(), rf.loss.to_bits());
+    }
+    assert_eq!(run.rounds[1].faults.dropped, 0);
+    assert_eq!(run.rounds[1].faults.cohort, 2);
+}
+
+#[test]
+fn server_abort_recovers_by_recomputing() {
+    let (rt, m, cfg) = setup();
+    let clean = train(&rt, &m, &cfg, &short_opts(3)).unwrap();
+    let opts = TrainerOptions {
+        faults: Some(scheduled("abort@1")),
+        ..short_opts(3)
+    };
+    let run = train(&rt, &m, &cfg, &opts).unwrap();
+    for (rc, rf) in clean.rounds.iter().zip(&run.rounds) {
+        assert_eq!(rc.loss.to_bits(), rf.loss.to_bits());
+    }
+    let r1 = &run.rounds[1];
+    assert_eq!(r1.faults.retries, 1);
+    assert!(r1.faults.recovery_s > 0.0, "abort recompute not accounted");
+
+    // With no retry budget the abort is terminal.
+    let opts = TrainerOptions {
+        faults: Some(FaultSpec { max_retries: 0, ..scheduled("abort@1") }),
+        ..short_opts(3)
+    };
+    let e = train(&rt, &m, &cfg, &opts).unwrap_err();
+    assert!(
+        matches!(e, Error::Fault(_)),
+        "unexpected error kind: {e}"
+    );
+    assert!(e.to_string().contains("round 1"), "{e}");
+}
+
+#[test]
+fn cohort_below_quorum_is_a_structured_error() {
+    let (rt, m, cfg) = setup();
+    let opts = TrainerOptions {
+        faults: Some(scheduled("crash@1:0,crash@1:1")),
+        ..short_opts(3)
+    };
+    let e = train(&rt, &m, &cfg, &opts).unwrap_err();
+    match e {
+        Error::Quorum { round, active, need } => {
+            assert_eq!(round, 1);
+            assert_eq!(active, 0);
+            assert_eq!(need, 1);
+        }
+        other => panic!("expected Error::Quorum, got: {other}"),
+    }
+}
+
+#[test]
+fn random_fault_plans_are_seed_deterministic() {
+    let (rt, m, cfg) = setup();
+    let opts = TrainerOptions {
+        n_clients: 3,
+        faults: Some(FaultSpec {
+            crash_prob: 0.2,
+            delay_prob: 0.2,
+            delay_s: 0.05,
+            ..Default::default()
+        }),
+        ..short_opts(5)
+    };
+    // Whatever the expanded plan does (including a quorum abort), it does
+    // the same thing on every run of the same seed.
+    let a = train(&rt, &m, &cfg, &opts);
+    let b = train(&rt, &m, &cfg, &opts);
+    match (a, b) {
+        (Ok(ra), Ok(rb)) => {
+            assert_rounds_bit_equal(&ra, &rb, 0);
+            assert!(
+                ra.rounds.iter().any(|r| r.faults.injected > 0),
+                "plan with p=0.2 over 5 rounds × 3 clients injected nothing"
+            );
+        }
+        (Err(ea), Err(eb)) => assert_eq!(ea.to_string(), eb.to_string()),
+        (a, b) => panic!(
+            "runs diverged: {:?} vs {:?}",
+            a.map(|r| r.rounds.len()),
+            b.map(|r| r.rounds.len())
+        ),
+    }
+}
+
+#[test]
+fn resume_works_across_a_faulty_run() {
+    // Checkpoint/resume and scheduled fault injection compose: the
+    // resumed half replays the same fault plan (re-expanded from the
+    // seed) and stays bitwise identical.
+    let (rt, m, cfg) = setup();
+    let base = TrainerOptions {
+        n_clients: 3,
+        faults: Some(scheduled("crash@1:2,corrupt@4:0")),
+        ..short_opts(6)
+    };
+    let full = train(&rt, &m, &cfg, &base).unwrap();
+
+    let path = tmp_path("faulty_resume");
+    let ckpt_opts = TrainerOptions {
+        checkpoint_every: 3,
+        checkpoint_path: Some(path.clone()),
+        ..base.clone()
+    };
+    train(&rt, &m, &cfg, &ckpt_opts).unwrap();
+    let ck = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(ck.next_round, 3);
+    let resumed = resume(&rt, &m, &cfg, &base, &ck).unwrap();
+    assert_rounds_bit_equal(&full, &resumed, 0);
+    assert_eq!(resumed.rounds[4].faults.retries, 1, "corrupt@4 replayed");
+}
