@@ -69,11 +69,12 @@ fn main() -> anyhow::Result<()> {
     };
     let res = bcd::solve(&prob, bcd::BcdOptions::default())?;
     let s = prob.stage_latencies(&res.decision);
+    let cut = res.decision.uniform_cut()?;
     println!(
         "\noptimized deployment (C=5, ResNet-18 profile): cut layer {} \
          ({}), per-round latency {:.3}s",
-        res.decision.cut,
-        profile.layers[res.decision.cut - 1].name,
+        cut,
+        profile.layers[cut - 1].name,
         res.objective
     );
     println!(

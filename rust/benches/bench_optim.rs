@@ -38,7 +38,7 @@ fn main() {
     let psd = vec![-65.0; cfg.n_subchannels];
     let alloc = greedy::allocate(&prob, &psd, 4);
     let mut ev = Evaluator::new(&prob);
-    let d = Decision { alloc: alloc.clone(), psd_dbm_hz: psd.clone(), cut: 4 };
+    let d = Decision { alloc: alloc.clone(), psd_dbm_hz: psd.clone(), cut: 4.into() };
 
     let mut b = if smoke { Bencher::smoke() } else { Bencher::new() };
     b.run("evaluator_build (C=5, M=20)", || Evaluator::new(&prob));

@@ -257,6 +257,24 @@ impl ScenarioSettings {
     }
 }
 
+/// Cut-assignment knobs for the training driver (`[optim]` TOML table).
+/// Plain data here — the CLI/driver boundary parses `cut` into a typed
+/// `coordinator::CutMode` so config stays dependency-free, mirroring
+/// [`ScenarioSettings::reopt`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimSettings {
+    /// Cut spec: a single SplitNet cut (`"2"`), `"hetero"` for the
+    /// per-client refinement pass, or an explicit per-client vector
+    /// (`"1-2-2-3"`). Parsed by `coordinator::CutMode::parse`.
+    pub cut: String,
+}
+
+impl Default for OptimSettings {
+    fn default() -> Self {
+        OptimSettings { cut: "2".into() }
+    }
+}
+
 /// Opt-in fault injection + resilience policy for the training driver
 /// (`scenario::faults`; knobs documented in EXPERIMENTS.md). Plain data
 /// here — `scenario::FaultSpec::from_settings` turns it into the typed
@@ -354,6 +372,7 @@ pub struct Config {
     pub train: TrainConfig,
     pub scenario: ScenarioSettings,
     pub faults: FaultSettings,
+    pub optim: OptimSettings,
     /// Execution backend: "auto" (PJRT artifacts when present, else the
     /// pure-Rust native backend), "native", or "pjrt". TOML:
     /// `[backend] mode = "native"` (or a top-level `backend = "native"`);
@@ -377,6 +396,7 @@ impl Config {
             train: TrainConfig::default(),
             scenario: ScenarioSettings::default(),
             faults: FaultSettings::default(),
+            optim: OptimSettings::default(),
             backend: "auto".into(),
             timeline_mode: "barrier".into(),
             artifacts_dir: "artifacts".into(),
@@ -530,6 +550,9 @@ impl Config {
         }
         if let Some(v) = d.f64("faults.deadline_factor") {
             self.faults.deadline_factor = v;
+        }
+        if let Some(v) = d.str("optim.cut") {
+            self.optim.cut = v.to_string();
         }
         if let Some(v) = d.str("backend").or_else(|| d.str("backend.mode")) {
             self.backend = v.to_string();
@@ -712,6 +735,18 @@ mod tests {
             .apply_toml(&toml::parse("timeline = \"overlap\"\n").unwrap())
             .unwrap_err();
         assert!(e.to_string().contains("barrier|pipelined"), "{e}");
+    }
+
+    #[test]
+    fn optim_cut_from_toml() {
+        let mut c = Config::new();
+        assert_eq!(c.optim.cut, "2");
+        c.apply_toml(&toml::parse("[optim]\ncut = \"hetero\"\n").unwrap())
+            .unwrap();
+        assert_eq!(c.optim.cut, "hetero");
+        c.apply_toml(&toml::parse("[optim]\ncut = \"1-2-2-3\"\n").unwrap())
+            .unwrap();
+        assert_eq!(c.optim.cut, "1-2-2-3");
     }
 
     #[test]

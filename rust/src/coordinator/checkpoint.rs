@@ -27,7 +27,10 @@ use crate::util::rng::RngState;
 use super::driver::TrainerOptions;
 
 const MAGIC: &[u8; 8] = b"EPSLCKP1";
-const VERSION: u32 = 1;
+/// Version 2 added the per-round cut label to each record (mixed-cut
+/// training). Version-1 checkpoints predate the field and are rejected
+/// with a typed error rather than silently misparsed.
+const VERSION: u32 = 2;
 
 /// A resumable snapshot of one training session.
 #[derive(Debug, Clone, PartialEq)]
@@ -90,6 +93,11 @@ fn put_f32_slice(out: &mut Vec<u8>, xs: &[f32]) {
     }
 }
 
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_usize(out, s.len());
+    out.extend_from_slice(s.as_bytes());
+}
+
 // --- binary reader ----------------------------------------------------
 
 struct Reader<'a> {
@@ -149,6 +157,14 @@ impl<'a> Reader<'a> {
         Ok(f64::from_bits(self.u64()?))
     }
 
+    fn string(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| {
+            Error::Fault("checkpoint string is not UTF-8".into())
+        })
+    }
+
     fn f32_vec(&mut self) -> Result<Vec<f32>> {
         let n = self.count(4)?;
         let mut v = Vec::with_capacity(n);
@@ -190,6 +206,7 @@ fn put_record(out: &mut Vec<u8>, r: &RoundRecord) {
     put_usize(out, r.faults.cohort);
     put_f64(out, r.faults.recovery_s);
     put_f64(out, r.wall_ms);
+    put_str(out, &r.cut);
 }
 
 fn read_record(rd: &mut Reader<'_>) -> Result<RoundRecord> {
@@ -222,6 +239,7 @@ fn read_record(rd: &mut Reader<'_>) -> Result<RoundRecord> {
         recovery_s: rd.f64()?,
     };
     let wall_ms = rd.f64()?;
+    let cut = rd.string()?;
     Ok(RoundRecord {
         round,
         loss,
@@ -231,6 +249,7 @@ fn read_record(rd: &mut Reader<'_>) -> Result<RoundRecord> {
         stages,
         faults,
         wall_ms,
+        cut,
     })
 }
 
@@ -391,6 +410,7 @@ mod tests {
                     },
                     faults: FaultStats::default(),
                     wall_ms: 12.5,
+                    cut: "2".into(),
                 },
                 RoundRecord {
                     round: 1,
@@ -414,6 +434,7 @@ mod tests {
                         recovery_s: 0.375,
                     },
                     wall_ms: 13.25,
+                    cut: "1-2-2-3".into(),
                 },
             ],
         }
@@ -502,6 +523,35 @@ mod tests {
         assert_eq!(ck, back);
         let e = Checkpoint::load("/nonexistent/epsl.ckpt").unwrap_err();
         assert!(e.to_string().contains("does not exist"), "{e}");
+    }
+
+    #[test]
+    fn fingerprint_covers_cut_assignment() {
+        // Satellite: a checkpoint taken under one cut assignment must not
+        // resume into a run with another — uniform → hetero, hetero →
+        // uniform, and two different explicit vectors all re-fingerprint.
+        use super::super::driver::CutMode;
+        let cfg = Config::new();
+        let uniform = TrainerOptions::default();
+        let hetero = TrainerOptions {
+            cut_mode: CutMode::Hetero,
+            ..TrainerOptions::default()
+        };
+        let explicit = TrainerOptions {
+            cut_mode: CutMode::Explicit(vec![1, 2, 2, 3, 3]),
+            ..TrainerOptions::default()
+        };
+        let explicit2 = TrainerOptions {
+            cut_mode: CutMode::Explicit(vec![2, 2, 2, 3, 3]),
+            ..TrainerOptions::default()
+        };
+        let fp_u = run_fingerprint(&cfg, &uniform);
+        let fp_h = run_fingerprint(&cfg, &hetero);
+        let fp_e = run_fingerprint(&cfg, &explicit);
+        assert_ne!(fp_u, fp_h, "uniform vs hetero");
+        assert_ne!(fp_u, fp_e, "uniform vs explicit");
+        assert_ne!(fp_h, fp_e, "hetero vs explicit");
+        assert_ne!(fp_e, run_fingerprint(&cfg, &explicit2));
     }
 
     #[test]

@@ -39,6 +39,67 @@ use super::params::{client_tensor_count, host_params, literal_params,
 use super::rounds::{execute_round, RoundPlan};
 use super::session::{build_sim_latency, check_eval_batch, FaultRuntime,
                      Session};
+use super::try_splitnet_cut_for_resnet18;
+
+/// How the per-client cut assignment is chosen for a run.
+///
+/// `Uniform` is the paper's Alg. 3 semantics (one cut for the whole
+/// cohort at `TrainerOptions::cut`) and keeps every pre-existing path
+/// bit-identical. The other modes run *mixed-cut* rounds: clients split
+/// at different layers, the server batches them per cut group, and the
+/// §V latency accounting prices the per-client assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CutMode {
+    /// Every client splits at `TrainerOptions::cut`.
+    Uniform,
+    /// Per-client cuts from the heterogeneous refinement pass
+    /// ([`crate::optim::hetero`]) over the simulated deployment —
+    /// provably never worse than the uniform optimum.
+    Hetero,
+    /// A user-supplied per-client SplitNet cut vector (one entry per
+    /// client, each in 1..=4).
+    Explicit(Vec<usize>),
+}
+
+impl Default for CutMode {
+    fn default() -> Self {
+        CutMode::Uniform
+    }
+}
+
+impl CutMode {
+    /// Parse a CLI/TOML cut spec. `"hetero"` selects the refinement
+    /// pass; a single integer is a uniform cut (returned as the second
+    /// element so the caller can install it in `TrainerOptions::cut`);
+    /// `"1-2-2-3"` is an explicit per-client vector. Entries are
+    /// range-checked here (1..=4) so a typo fails at parse time.
+    pub fn parse(s: &str) -> Result<(CutMode, Option<usize>)> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("hetero") {
+            return Ok((CutMode::Hetero, None));
+        }
+        let assignment = crate::optim::CutAssignment::parse(s)?;
+        let cuts = match &assignment {
+            crate::optim::CutAssignment::Uniform(j) => vec![*j],
+            crate::optim::CutAssignment::PerClient(v) => v.clone(),
+        };
+        for &j in &cuts {
+            if !(1..=4).contains(&j) {
+                return Err(Error::Config(format!(
+                    "cut spec '{s}': cut {j} out of 1..=4"
+                )));
+            }
+        }
+        match assignment {
+            crate::optim::CutAssignment::Uniform(j) => {
+                Ok((CutMode::Uniform, Some(j)))
+            }
+            crate::optim::CutAssignment::PerClient(v) => {
+                Ok((CutMode::Explicit(v), None))
+            }
+        }
+    }
+}
 
 /// Options for one training run.
 #[derive(Debug, Clone)]
@@ -48,6 +109,9 @@ pub struct TrainerOptions {
     pub n_clients: usize,
     /// SplitNet cut (1..=4).
     pub cut: usize,
+    /// Per-client cut-assignment mode; `Uniform` trains every client at
+    /// `cut` (the bit-identical legacy path).
+    pub cut_mode: CutMode,
     pub iid: bool,
     pub dataset_size: usize,
     pub test_size: usize,
@@ -89,6 +153,7 @@ impl Default for TrainerOptions {
             framework: Framework::Epsl { phi: 0.5 },
             n_clients: 5,
             cut: 2,
+            cut_mode: CutMode::Uniform,
             iid: true,
             dataset_size: 2000,
             test_size: 512,
@@ -176,6 +241,30 @@ fn run_training(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
     // never see a full chunk (no accuracy column otherwise).
     fam.server_train_entry(opts.cut, plan0.server_clients(opts.n_clients))?;
     check_eval_batch(opts.test_size, fam.eval_batch)?;
+    if opts.cut_mode != CutMode::Uniform {
+        // Mixed-cut rounds are defined for the parallel, fault-free,
+        // static-channel frameworks: sequential relay shares one client
+        // model (a single cut by construction), SFL's FedAvg needs
+        // same-shape client models, and the fault/dynamic machinery
+        // reasons about one uplink payload size per round.
+        if matches!(opts.framework,
+                    Framework::Sfl | Framework::VanillaSl) {
+            return Err(Error::Config(format!(
+                "cut mode {:?} requires a parallel multi-model framework \
+                 (EPSL/PSL/EPSL-PT); {} shares or synchronizes the \
+                 client model across clients",
+                opts.cut_mode,
+                opts.framework.name()
+            )));
+        }
+        if opts.faults.is_some() {
+            return Err(Error::Config(
+                "mixed-cut training is incompatible with fault \
+                 injection: drop --faults or use --cut <uniform>"
+                    .into(),
+            ));
+        }
+    }
     if opts.checkpoint_every > 0 && opts.checkpoint_path.is_none() {
         return Err(Error::Config(
             "checkpoint_every > 0 requires a checkpoint path \
@@ -198,8 +287,34 @@ fn run_training(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
     };
     let lam = lambda_weights(&shards);
 
-    // Latency model over a simulated deployment.
+    // Latency model over a simulated deployment. Under a non-uniform cut
+    // mode this also resolves the per-client assignment (refined against
+    // the deployment for `Hetero`, validated for `Explicit`).
     let sim_latency = build_sim_latency(cfg, opts, &mut rng)?;
+
+    // The training-side cut vector, in SplitNet stage indices (the
+    // latency model lives in the paper's ResNet-18 layer domain).
+    let train_cuts: Vec<usize> = sim_latency
+        .cut
+        .cuts_for(opts.n_clients)
+        .iter()
+        .map(|&j| try_splitnet_cut_for_resnet18(j))
+        .collect::<Result<_>>()?;
+    fam.validate_cut_vector(&train_cuts, opts.n_clients)?;
+    let assignment =
+        crate::optim::CutAssignment::normalized(train_cuts.clone());
+    let cut_label = assignment.label();
+    let mixed = assignment.as_uniform().is_none();
+    let j_min = *train_cuts.iter().min().ok_or_else(|| {
+        Error::Config("run has zero clients".into())
+    })?;
+    if mixed {
+        // Fail fast per cut group: every group runs its own fused server
+        // step sized to the group's membership.
+        for (j, members) in assignment.groups(opts.n_clients) {
+            fam.server_train_entry(j, members.len())?;
+        }
+    }
 
     // Fault plan, expanded from the same seed stream (scheduled-only
     // specs consume nothing — see scenario::faults).
@@ -213,12 +328,20 @@ fn run_training(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
         None => None,
     };
 
-    // Model init.
+    // Model init. The server owns the suffix at the *shallowest* cut in
+    // the assignment; a deeper-cut group uses a sub-suffix of it (the
+    // layers between two cuts live client-side for that group). Uniform
+    // assignments split at the single cut exactly as before.
     let seed_lit = literal_u32(&[2], &[0, opts.seed as u32])?;
     let full = ParamSet::new(rt.call(&fam.init, &[seed_lit])?);
-    let (client0, mut server_params) = full.split(fam, opts.cut)?;
+    let (client0, mut server_params) = full.split(fam, j_min)?;
     let n_replicas = plan0.param_replicas(opts.n_clients);
-    let mut client_params: Vec<Vec<Literal>> = if n_replicas == 1 {
+    let mut client_params: Vec<Vec<Literal>> = if mixed {
+        train_cuts
+            .iter()
+            .map(|&jc| full.split(fam, jc).map(|(cp, _)| cp))
+            .collect::<Result<_>>()?
+    } else if n_replicas == 1 {
         vec![client0]
     } else {
         (0..n_replicas).map(|_| client0.clone()).collect()
@@ -236,6 +359,7 @@ fn run_training(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
         shards,
         lam,
         sim_latency,
+        cuts: train_cuts.clone(),
         rng,
         lam_lit,
         lr_s_lit,
@@ -273,13 +397,18 @@ fn run_training(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
                 client_params.len()
             )));
         }
-        let n_client = client_tensor_count(fam, opts.cut)?;
         for (i, replica) in ck.client_params.iter().enumerate() {
+            // Replica i trains client i's cut under a mixed assignment;
+            // all replicas share the single cut otherwise (for uniform
+            // runs this is exactly the pre-refactor prefix length).
+            let rc = if mixed { train_cuts[i] } else { train_cuts[0] };
+            let n_client = client_tensor_count(fam, rc)?;
             client_params[i] =
                 literal_params(replica, &fam.params[..n_client])?;
         }
+        let n_min = client_tensor_count(fam, j_min)?;
         server_params =
-            literal_params(&ck.server_params, &fam.params[n_client..])?;
+            literal_params(&ck.server_params, &fam.params[n_min..])?;
         session.rng = Rng::from_state(ck.rng);
         metrics.rounds = ck.records.clone();
         start_round = ck.next_round;
@@ -317,6 +446,7 @@ fn run_training(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
             stages: tl.spans,
             faults: out.faults,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            cut: cut_label.clone(),
         });
         if opts.checkpoint_every > 0
             && (round + 1) % opts.checkpoint_every == 0
@@ -396,6 +526,73 @@ mod tests {
         let run = train(&rt, &m, &cfg, &opts).unwrap();
         assert_eq!(run.rounds.len(), 2);
         assert!(run.rounds[0].loss.is_finite());
+    }
+
+    #[test]
+    fn cut_mode_parse_specs() {
+        assert_eq!(
+            CutMode::parse("hetero").unwrap(),
+            (CutMode::Hetero, None)
+        );
+        assert_eq!(
+            CutMode::parse("HETERO").unwrap(),
+            (CutMode::Hetero, None)
+        );
+        assert_eq!(CutMode::parse("3").unwrap(), (CutMode::Uniform, Some(3)));
+        assert_eq!(
+            CutMode::parse("1-2-2-3").unwrap(),
+            (CutMode::Explicit(vec![1, 2, 2, 3]), None)
+        );
+        assert!(CutMode::parse("0").is_err());
+        assert!(CutMode::parse("5").is_err());
+        assert!(CutMode::parse("1-5").is_err());
+        assert!(CutMode::parse("x").is_err());
+        assert!(CutMode::parse("").is_err());
+    }
+
+    #[test]
+    fn mixed_cut_incompatible_frameworks_rejected() {
+        let (rt, m, cfg) = setup();
+        for fw in [Framework::Sfl, Framework::VanillaSl] {
+            let opts = TrainerOptions {
+                framework: fw,
+                cut_mode: CutMode::Explicit(vec![1, 2]),
+                ..smoke_opts()
+            };
+            let e = train(&rt, &m, &cfg, &opts).unwrap_err();
+            assert!(
+                e.to_string().contains("parallel multi-model"),
+                "{fw:?}: {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_cut_with_faults_rejected() {
+        let (rt, m, cfg) = setup();
+        let opts = TrainerOptions {
+            cut_mode: CutMode::Hetero,
+            faults: Some(crate::scenario::FaultSpec::default()),
+            ..smoke_opts()
+        };
+        let e = train(&rt, &m, &cfg, &opts).unwrap_err();
+        assert!(e.to_string().contains("fault"), "{e}");
+    }
+
+    #[test]
+    fn explicit_cut_vector_length_must_match_clients() {
+        let (rt, m, cfg) = setup();
+        let opts = TrainerOptions {
+            cut_mode: CutMode::Explicit(vec![1, 2, 3]),
+            ..smoke_opts() // 2 clients
+        };
+        let e = train(&rt, &m, &cfg, &opts).unwrap_err();
+        assert!(e.to_string().contains("client"), "{e}");
+        let opts = TrainerOptions {
+            cut_mode: CutMode::Explicit(vec![1, 9]),
+            ..smoke_opts()
+        };
+        assert!(train(&rt, &m, &cfg, &opts).is_err());
     }
 
     #[test]

@@ -31,8 +31,8 @@ pub mod session;
 
 pub use checkpoint::{run_fingerprint, Checkpoint};
 pub use driver::{
-    resume, resume_with_state, train, train_with_state, TrainState,
-    TrainerOptions,
+    resume, resume_with_state, train, train_with_state, CutMode,
+    TrainState, TrainerOptions,
 };
 pub use rounds::{RoundPlan, SyncStyle, TurnStyle};
 
@@ -64,6 +64,22 @@ pub fn try_resnet18_cut_for_splitnet(cut: usize) -> Result<usize> {
     }
 }
 
+/// Inverse of [`try_resnet18_cut_for_splitnet`]: map a paper Table-IV
+/// layer index back to the SplitNet stage boundary it corresponds to.
+/// Only the four mapped indices are valid.
+pub fn try_splitnet_cut_for_resnet18(cut: usize) -> Result<usize> {
+    match cut {
+        1 => Ok(1),
+        4 => Ok(2),
+        10 => Ok(3),
+        16 => Ok(4),
+        other => Err(Error::Config(format!(
+            "resnet18 cut {other} has no splitnet stage (expected one of \
+             1/4/10/16)"
+        ))),
+    }
+}
+
 /// φ for a framework at a given round (EPSL-PT switches at `pt_switch`).
 pub fn phi_at_round(fw: Framework, round: usize, pt_switch: usize) -> f64 {
     match fw {
@@ -90,6 +106,16 @@ mod tests {
         assert!(cuts.windows(2).all(|w| w[0] < w[1]));
         let e = try_resnet18_cut_for_splitnet(5).unwrap_err();
         assert!(e.to_string().contains("out of 1..=4"), "{e}");
+    }
+
+    #[test]
+    fn cut_mapping_roundtrips() {
+        for s in 1..=4 {
+            let r = resnet18_cut_for_splitnet(s);
+            assert_eq!(try_splitnet_cut_for_resnet18(r).unwrap(), s);
+        }
+        let e = try_splitnet_cut_for_resnet18(7).unwrap_err();
+        assert!(e.to_string().contains("no splitnet stage"), "{e}");
     }
 
     #[test]

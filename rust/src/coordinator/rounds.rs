@@ -23,7 +23,9 @@ use crate::metrics::FaultStats;
 use crate::runtime::tensor::{literal_f32, literal_i32, scalar_f32,
                              to_f32_vec};
 
-use super::params::fedavg;
+use crate::optim::CutAssignment;
+
+use super::params::{client_tensor_count, fedavg};
 use super::phi_at_round;
 use super::session::Session;
 
@@ -136,9 +138,13 @@ pub(crate) fn execute_round(
     sess: &mut Session, plan: &RoundPlan, round: usize,
     client_params: &mut [Vec<Literal>], server_params: &mut Vec<Literal>,
 ) -> Result<RoundOutput> {
+    if sess.cuts.windows(2).any(|w| w[0] != w[1]) {
+        return execute_round_hetero(sess, plan, client_params,
+                                    server_params);
+    }
     let c = sess.opts.n_clients;
     let b = sess.fam.batch;
-    let cut = sess.opts.cut;
+    let cut = sess.cuts.first().copied().unwrap_or(sess.opts.cut);
     let fam = sess.fam;
     let smash = fam.smashed_shape.get(&cut).ok_or_else(|| {
         Error::Artifact(format!("no smashed_shape for cut {cut}"))
@@ -382,11 +388,157 @@ pub(crate) fn execute_round(
     })
 }
 
+/// One mixed-cut parallel round: clients are batched by cut group, each
+/// group runs its own fused server step over the server *sub-suffix* at
+/// its cut (the server owns the suffix at the shallowest assigned cut;
+/// a deeper group's extra layers live client-side), and φ-aggregation
+/// routes gradients within each group.
+///
+/// The driver gates this path to the parallel, fault-free, static-
+/// channel frameworks, so there is no cohort assembly here — the round
+/// always commits with the full cohort. Batches are drawn for *every*
+/// client in ascending client order before any group runs, so the RNG
+/// stream order is a function of the client count alone, not of how the
+/// assignment happens to group.
+///
+/// Loss accounting: the group's fused step returns the λ-renormalized
+/// group loss; weighting it by the group's λ mass (`w_g = Σ_g λ / Σ λ`)
+/// and summing recovers exactly the global λ-weighted loss of eq. 1.
+fn execute_round_hetero(
+    sess: &mut Session, plan: &RoundPlan,
+    client_params: &mut [Vec<Literal>], server_params: &mut Vec<Literal>,
+) -> Result<RoundOutput> {
+    debug_assert_eq!(plan.turns, TurnStyle::Parallel);
+    let c = sess.opts.n_clients;
+    let b = sess.fam.batch;
+    let fam = sess.fam;
+    let cuts = sess.cuts.clone();
+    let j_min = *cuts.iter().min().ok_or_else(|| {
+        Error::Config("round has zero clients".into())
+    })?;
+    let n_min = client_tensor_count(fam, j_min)?;
+
+    let (mask, mask_lit) = sess.mask_for(plan.phi)?;
+    let agg_used = mask.iter().any(|m| *m > 0.5);
+
+    let mut batches: Vec<(Literal, Vec<i32>)> = Vec::with_capacity(c);
+    for ci in 0..c {
+        let (x, _imgs, labels) = sess.batch_literals(ci)?;
+        batches.push((x, labels));
+    }
+
+    let lam_total: f64 = sess.lam.iter().map(|&w| w as f64).sum();
+    let mut loss_sum = 0.0f64;
+    let mut ncorr_sum = 0.0f64;
+    // Groups execute ascending in cut layer (deterministic order).
+    for (cut, members) in
+        CutAssignment::PerClient(cuts.clone()).groups(c)
+    {
+        let tc = members.len();
+        let smash = fam.smashed_shape.get(&cut).ok_or_else(|| {
+            Error::Artifact(format!("no smashed_shape for cut {cut}"))
+        })?;
+        let smash_len: usize = smash.iter().product();
+        let cf_entry = fam.client_fwd.get(&cut).ok_or_else(|| {
+            Error::Artifact(format!("no client_fwd for cut {cut}"))
+        })?;
+        let cs_entry = fam.client_step.get(&cut).ok_or_else(|| {
+            Error::Artifact(format!("no client_step for cut {cut}"))
+        })?;
+        let st_entry = fam.server_train_entry(cut, tc)?;
+        let off = client_tensor_count(fam, cut)? - n_min;
+
+        // Stages 1-2: the group's client FP fan-out.
+        let mut smashed_host = Vec::with_capacity(tc * b * smash_len);
+        let mut labels_host: Vec<i32> = Vec::with_capacity(tc * b);
+        let mut xs = Vec::with_capacity(tc);
+        let mut fwd_batches: Vec<Vec<Literal>> = Vec::with_capacity(tc);
+        for &ci in &members {
+            let (x, labels) = &batches[ci];
+            let mut inputs: Vec<Literal> = client_params[ci].to_vec();
+            inputs.push(x.clone());
+            fwd_batches.push(inputs);
+            labels_host.extend_from_slice(labels);
+            xs.push(x.clone());
+        }
+        for out in sess.rt.call_many(cf_entry, &fwd_batches)? {
+            smashed_host.extend(to_f32_vec(&out[0])?);
+        }
+
+        // Stages 3-4: the group's fused server step on its sub-suffix.
+        let mut smash_shape = vec![tc, b];
+        smash_shape.extend(smash.iter());
+        let lam_g = renormalized_lambda(&sess.lam, &members);
+        let mut inputs: Vec<Literal> = server_params[off..].to_vec();
+        inputs.push(literal_f32(&smash_shape, &smashed_host)?);
+        inputs.push(literal_i32(&[tc, b], &labels_host)?);
+        inputs.push(literal_f32(&[tc], &lam_g)?);
+        inputs.push(mask_lit.clone());
+        inputs.push(sess.lr_s_lit.clone());
+        let mut out = sess.rt.call(st_entry, &inputs)?;
+        let n_sp = server_params.len() - off;
+        let w_g: f64 = members
+            .iter()
+            .map(|&i| sess.lam[i] as f64)
+            .sum::<f64>()
+            / lam_total;
+        ncorr_sum += scalar_f32(&out[n_sp + 3])? as f64;
+        loss_sum += w_g * scalar_f32(&out[n_sp + 2])? as f64;
+        let cut_unagg = to_f32_vec(&out[n_sp + 1])?;
+        let cut_agg = if agg_used {
+            to_f32_vec(&out[n_sp])?
+        } else {
+            Vec::new()
+        };
+        out.truncate(n_sp);
+        for (k, lit) in out.into_iter().enumerate() {
+            server_params[off + k] = lit;
+        }
+
+        // Stages 5-7: gradient routing + client BP for the group.
+        let mut g_cut = vec![0.0f32; b * smash_len];
+        let mut g_shape = vec![b];
+        g_shape.extend(smash.iter());
+        let mut step_batches: Vec<Vec<Literal>> = Vec::with_capacity(tc);
+        for (ti, x) in xs.into_iter().enumerate() {
+            for j in 0..b {
+                let dst = &mut g_cut[j * smash_len..(j + 1) * smash_len];
+                if mask[j] > 0.5 {
+                    dst.copy_from_slice(
+                        &cut_agg[j * smash_len..(j + 1) * smash_len],
+                    );
+                } else {
+                    let base = (ti * b + j) * smash_len;
+                    dst.copy_from_slice(
+                        &cut_unagg[base..base + smash_len],
+                    );
+                }
+            }
+            let mut inputs: Vec<Literal> =
+                client_params[members[ti]].to_vec();
+            inputs.push(x);
+            inputs.push(literal_f32(&g_shape, &g_cut)?);
+            inputs.push(sess.lr_c_lit.clone());
+            step_batches.push(inputs);
+        }
+        for (ti, out) in
+            sess.rt.call_many(cs_entry, &step_batches)?.into_iter().enumerate()
+        {
+            client_params[members[ti]] = out;
+        }
+    }
+    Ok(RoundOutput {
+        loss: loss_sum,
+        train_acc: ncorr_sum / (c * b) as f64,
+        faults: FaultStats { cohort: c, ..FaultStats::default() },
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::Config;
-    use crate::coordinator::driver::{train, train_with_state,
+    use crate::coordinator::driver::{train, train_with_state, CutMode,
                                      TrainerOptions};
     use crate::runtime::artifact::Manifest;
     use crate::runtime::native::{self, NativeBackend};
@@ -568,6 +720,144 @@ mod tests {
         );
         // SFL's stage breakdown carries the model exchange.
         assert!(run.rounds.iter().all(|r| r.stages.model_exchange > 0.0));
+    }
+
+    #[test]
+    fn explicit_all_equal_cuts_bit_identical_to_uniform() {
+        // Tentpole acceptance: an Explicit all-equal assignment must
+        // collapse onto the literal uniform path — per-round records AND
+        // final parameters agree bit-for-bit, for both families and
+        // several cohort sizes.
+        let (rt, m, cfg) = setup();
+        for family in ["mnist", "ham"] {
+            for c in [1usize, 4, 8] {
+                let base = TrainerOptions {
+                    family: family.into(),
+                    n_clients: c,
+                    rounds: 2,
+                    eval_every: 2,
+                    dataset_size: 400,
+                    test_size: 256,
+                    ..Default::default()
+                };
+                let explicit = TrainerOptions {
+                    cut_mode: CutMode::Explicit(vec![base.cut; c]),
+                    ..base.clone()
+                };
+                let (ra, sa) =
+                    train_with_state(&rt, &m, &cfg, &base).unwrap();
+                let (rb, sb) =
+                    train_with_state(&rt, &m, &cfg, &explicit).unwrap();
+                for (x, y) in ra.rounds.iter().zip(&rb.rounds) {
+                    assert_eq!(
+                        x.loss.to_bits(),
+                        y.loss.to_bits(),
+                        "{family}/C={c} round {} loss diverged",
+                        x.round
+                    );
+                    assert_eq!(x.train_acc.to_bits(),
+                               y.train_acc.to_bits());
+                    assert_eq!(
+                        x.test_acc.map(f64::to_bits),
+                        y.test_acc.map(f64::to_bits)
+                    );
+                    assert_eq!(x.sim_latency.to_bits(),
+                               y.sim_latency.to_bits());
+                    assert_eq!(x.cut, y.cut, "{family}/C={c}");
+                }
+                for (ca, cb) in
+                    sa.client_params.iter().zip(&sb.client_params)
+                {
+                    for (la, lb) in ca.iter().zip(cb) {
+                        assert_eq!(to_f32_vec(la).unwrap(),
+                                   to_f32_vec(lb).unwrap());
+                    }
+                }
+                for (la, lb) in
+                    sa.server_params.iter().zip(&sb.server_params)
+                {
+                    assert_eq!(to_f32_vec(la).unwrap(),
+                               to_f32_vec(lb).unwrap());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_cut_round_trains_end_to_end() {
+        // A genuinely mixed assignment runs the grouped server-batching
+        // path: finite loss, recorded per-client cut label, per-client
+        // tensor counts at each client's own cut, and the server holding
+        // exactly the suffix at the shallowest assigned cut.
+        let (rt, m, cfg) = setup();
+        let opts = TrainerOptions {
+            n_clients: 4,
+            rounds: 3,
+            eval_every: 3,
+            dataset_size: 400,
+            test_size: 256,
+            cut_mode: CutMode::Explicit(vec![1, 2, 2, 3]),
+            ..Default::default()
+        };
+        let (run, state) =
+            train_with_state(&rt, &m, &cfg, &opts).unwrap();
+        assert_eq!(run.rounds.len(), 3);
+        assert!(run
+            .rounds
+            .iter()
+            .all(|r| r.loss.is_finite() && r.loss > 0.0));
+        assert!(
+            run.rounds.iter().all(|r| r.cut == "1-2-2-3"),
+            "cut labels: {:?}",
+            run.rounds.iter().map(|r| r.cut.clone()).collect::<Vec<_>>()
+        );
+        let last = run.rounds.last().unwrap();
+        assert!(last.test_acc.is_some(), "mixed-cut eval never ran");
+        assert!(last.test_acc.unwrap().is_finite());
+
+        let fam = m.family("mnist").unwrap();
+        for (ci, &cut) in [1usize, 2, 2, 3].iter().enumerate() {
+            assert_eq!(
+                state.client_params[ci].len(),
+                fam.client_param_count[&cut],
+                "client {ci} tensor count at cut {cut}"
+            );
+        }
+        // Client 0 sits at the shallowest cut (j_min = 1): its prefix
+        // plus the server suffix must tile the full parameter list.
+        assert_eq!(
+            state.client_params[0].len() + state.server_params.len(),
+            fam.params.len()
+        );
+    }
+
+    #[test]
+    fn mixed_cut_run_is_thread_invariant() {
+        // The grouped fan-out must stay bit-identical across thread
+        // budgets, exactly like the uniform engine.
+        let (_, m, cfg) = setup();
+        let opts = TrainerOptions {
+            n_clients: 4,
+            rounds: 2,
+            eval_every: 2,
+            dataset_size: 400,
+            test_size: 256,
+            cut_mode: CutMode::Explicit(vec![1, 2, 3, 4]),
+            ..Default::default()
+        };
+        let serial = NativeBackend::with_threads(1);
+        let fanned = NativeBackend::with_threads(7);
+        let a = train(&serial, &m, &cfg, &opts).unwrap();
+        let b = train(&fanned, &m, &cfg, &opts).unwrap();
+        for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+            assert_eq!(ra.train_acc.to_bits(), rb.train_acc.to_bits());
+            assert_eq!(
+                ra.test_acc.map(f64::to_bits),
+                rb.test_acc.map(f64::to_bits)
+            );
+            assert_eq!(ra.cut, rb.cut);
+        }
     }
 
     #[test]

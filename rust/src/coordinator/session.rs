@@ -14,7 +14,8 @@ use crate::data::{Dataset, Shard};
 use crate::error::{Error, Result};
 use crate::latency::frameworks::Framework;
 use crate::latency::LatencyInputs;
-use crate::optim::{bcd, Decision, Problem};
+use crate::optim::eval::Evaluator;
+use crate::optim::{bcd, hetero, CutAssignment, Decision, Problem};
 use crate::profile::resnet18;
 use crate::runtime::artifact::FamilyManifest;
 use crate::runtime::tensor::{literal_f32, literal_i32, scalar_f32};
@@ -25,9 +26,11 @@ use crate::timeline::{self, Mode, RoundTimeline};
 use crate::util::par;
 use crate::util::rng::Rng;
 
-use super::driver::TrainerOptions;
-use super::params::{fedavg, ParamSet};
-use super::try_resnet18_cut_for_splitnet;
+use super::driver::{CutMode, TrainerOptions};
+use super::params::{client_tensor_count, fedavg, ParamSet};
+use super::rounds::renormalized_lambda;
+use super::{try_resnet18_cut_for_splitnet,
+            try_splitnet_cut_for_resnet18};
 
 /// Everything fixed across rounds.
 pub(crate) struct Session<'a> {
@@ -40,6 +43,10 @@ pub(crate) struct Session<'a> {
     pub(crate) lam: Vec<f32>,
     /// Per-round simulated latency per φ value (resnet18 profile).
     pub(crate) sim_latency: SimLatency,
+    /// Per-client SplitNet cuts (all-equal for a uniform run). The round
+    /// engine dispatches on this: uniform vectors take the literal
+    /// single-cut path, mixed vectors run per-cut-group server batches.
+    pub(crate) cuts: Vec<usize>,
     pub(crate) rng: Rng,
     /// Round-invariant literals, hoisted out of the hot loop (§Perf).
     pub(crate) lam_lit: Literal,
@@ -98,7 +105,9 @@ pub(crate) struct SimRound {
 /// (barrier reproduces the closed-form eq. 23 numbers bit-identically).
 pub(crate) struct SimLatency {
     pub(crate) rounds: Vec<SimRound>,
-    pub(crate) cut: usize,
+    /// Cut assignment in the paper's ResNet-18 layer domain; mixed
+    /// assignments route through the hetero timeline builder.
+    pub(crate) cut: CutAssignment,
     pub(crate) batch: usize,
     pub(crate) f_server: f64,
     pub(crate) kappa_server: f64,
@@ -109,14 +118,15 @@ pub(crate) struct SimLatency {
 impl SimLatency {
     /// Closed-form latency inputs for this round (any round index past
     /// the horizon maps onto the last entry — the static frozen draw).
-    fn inputs_at(&self, round: usize, phi: f64) -> LatencyInputs<'_> {
+    fn inputs_at(&self, round: usize, phi: f64, cut: usize)
+        -> LatencyInputs<'_> {
         // Cached profile: this runs once per training round, and the old
         // per-call Table IV rebuild dominated the simulated-latency cost.
         let profile = resnet18::profile_static();
         let r = &self.rounds[round.min(self.rounds.len() - 1)];
         LatencyInputs {
             profile,
-            cut: self.cut,
+            cut,
             batch: self.batch,
             phi,
             f_server: self.f_server,
@@ -140,8 +150,21 @@ impl SimLatency {
     /// Simulate this round's timeline (per-stage events + total).
     pub(crate) fn round_timeline(&self, round: usize, fw: Framework,
                                  phi: f64) -> RoundTimeline {
-        let inp = self.inputs_at(round, phi);
-        timeline::simulate(Self::effective_fw(fw, phi), &inp, self.mode)
+        let fw = Self::effective_fw(fw, phi);
+        match self.cut.as_uniform() {
+            Some(j) => {
+                let inp = self.inputs_at(round, phi, j);
+                timeline::simulate(fw, &inp, self.mode)
+            }
+            None => {
+                let inp = self.inputs_at(round, phi, self.cut.min_cut());
+                let cuts = self.cut.cuts_for(inp.f_clients.len());
+                // Mixed assignments are gated to EPSL/PSL at build time,
+                // so the hetero shape builder accepts the framework.
+                timeline::simulate_cuts(fw, &inp, &cuts, self.mode)
+                    .expect("mixed-cut timeline on a gated framework")
+            }
+        }
     }
 
     /// Nominal per-client smashed-data arrival times at the server
@@ -150,9 +173,20 @@ impl SimLatency {
     /// frameworks, a single pre-summed chain for vanilla SL.
     pub(crate) fn uplink_arrivals(&self, round: usize, fw: Framework,
                                   phi: f64) -> Vec<f64> {
-        let inp = self.inputs_at(round, phi);
-        timeline::shape_for(Self::effective_fw(fw, phi), &inp)
-            .uplink_arrivals()
+        let fw = Self::effective_fw(fw, phi);
+        match self.cut.as_uniform() {
+            Some(j) => {
+                let inp = self.inputs_at(round, phi, j);
+                timeline::shape_for(fw, &inp).uplink_arrivals()
+            }
+            None => {
+                let inp = self.inputs_at(round, phi, self.cut.min_cut());
+                let cuts = self.cut.cuts_for(inp.f_clients.len());
+                timeline::shape_for_cuts(fw, &inp, &cuts)
+                    .expect("mixed-cut timeline on a gated framework")
+                    .uplink_arrivals()
+            }
+        }
     }
 
     /// This round's simulated latency in seconds.
@@ -168,6 +202,15 @@ pub(crate) fn build_sim_latency(cfg: &Config, opts: &TrainerOptions,
     let profile = resnet18::profile_static();
     let cut = try_resnet18_cut_for_splitnet(opts.cut)?;
     if let Some(dc) = &opts.dynamic_channel {
+        if opts.cut_mode != CutMode::Uniform {
+            return Err(Error::Config(
+                "mixed-cut training requires a static channel: the \
+                 dynamic-channel tracker reasons about one uplink \
+                 payload size per round (drop --dynamic or use a \
+                 uniform --cut)"
+                    .into(),
+            ));
+        }
         return build_dynamic_sim_latency(cfg, opts, &net, cut, dc, rng);
     }
     let dep = Deployment::generate(&net, rng);
@@ -188,6 +231,7 @@ pub(crate) fn build_sim_latency(cfg: &Config, opts: &TrainerOptions,
         crate::optim::baselines::uniform_decision(&prob, cut)
     };
     let (up, dn, bc) = prob.rates(&decision);
+    let assignment = resolve_cut_assignment(&prob, opts, cut, &decision)?;
     Ok(SimLatency {
         rounds: vec![SimRound {
             f_clients: dep.f_clients().to_vec(),
@@ -195,13 +239,85 @@ pub(crate) fn build_sim_latency(cfg: &Config, opts: &TrainerOptions,
             downlink: dn,
             broadcast: bc,
         }],
-        cut,
+        cut: assignment,
         batch: cfg.train.batch,
         f_server: net.f_server,
         kappa_server: net.kappa_server,
         kappa_client: net.kappa_client,
         mode: opts.timeline_mode,
     })
+}
+
+/// Resolve the run's cut assignment (ResNet-18 layer domain) from the
+/// configured [`CutMode`] against the frozen deployment draw.
+///
+/// - `Uniform` → `Uniform(cut)`: the literal pre-refactor behavior.
+/// - `Explicit` → the user's SplitNet vector, length-checked and mapped
+///   into the layer domain (all-equal vectors collapse to `Uniform`).
+/// - `Hetero` → per-client coordinate descent
+///   ([`hetero::refine_with`]) at the solved allocation/power, seeded
+///   from the uniform training cut and restricted to the four
+///   SplitNet-mappable layers so the result is always executable by the
+///   runtime — never worse than uniform by construction.
+fn resolve_cut_assignment(prob: &Problem, opts: &TrainerOptions,
+                          cut: usize, decision: &Decision)
+    -> Result<CutAssignment> {
+    match &opts.cut_mode {
+        CutMode::Uniform => Ok(CutAssignment::Uniform(cut)),
+        CutMode::Explicit(v) => {
+            if v.len() != opts.n_clients {
+                return Err(Error::Config(format!(
+                    "explicit cut vector has {} entr{} but the run has \
+                     {} client(s)",
+                    v.len(),
+                    if v.len() == 1 { "y" } else { "ies" },
+                    opts.n_clients
+                )));
+            }
+            let mapped: Vec<usize> = v
+                .iter()
+                .map(|&s| try_resnet18_cut_for_splitnet(s))
+                .collect::<Result<_>>()?;
+            Ok(CutAssignment::normalized(mapped))
+        }
+        CutMode::Hetero => {
+            let ev = Evaluator::new(prob);
+            let mappable: Vec<usize> = ev
+                .cut_candidates()
+                .iter()
+                .copied()
+                .filter(|&j| try_splitnet_cut_for_resnet18(j).is_ok())
+                .collect();
+            let seed = Decision {
+                alloc: decision.alloc.clone(),
+                psd_dbm_hz: decision.psd_dbm_hz.clone(),
+                cut: cut.into(),
+            };
+            let res = hetero::refine_with(
+                prob,
+                &ev,
+                &seed,
+                hetero::HeteroOptions {
+                    candidates: Some(mappable),
+                    ..Default::default()
+                },
+            )?;
+            println!(
+                "hetero cut: {} (objective {:.4} s vs uniform {:.4} s at \
+                 cut {})",
+                if res.improved {
+                    format!("per-client assignment {}",
+                            res.decision.cut.label())
+                } else {
+                    "uniform assignment kept".to_string()
+                },
+                res.objective,
+                res.uniform_objective,
+                cut
+            );
+            Ok(res.decision.cut)
+        }
+    }
 }
 
 /// Dynamic-channel mode: expand the scenario from the session RNG stream
@@ -340,7 +456,7 @@ fn build_dynamic_sim_latency(cfg: &Config, opts: &TrainerOptions,
     };
     Ok(SimLatency {
         rounds,
-        cut,
+        cut: cut.into(),
         batch: cfg.train.batch,
         f_server: net.f_server,
         kappa_server: net.kappa_server,
@@ -398,16 +514,66 @@ impl<'a> Session<'a> {
     }
 
     /// Test accuracy of the λ-averaged model (full test set, chunked).
+    ///
+    /// Under a mixed cut assignment the client models have different
+    /// shapes, so one global FedAvg is undefined: each cut group
+    /// λ-averages its own members, joins them with the server sub-suffix
+    /// at its cut, and the reported accuracy is the λ-mass-weighted mean
+    /// of the group accuracies (for an all-equal assignment this is the
+    /// literal single-model path, bit-identical).
     pub(crate) fn evaluate(&mut self, client_params: &[Vec<Literal>],
                            server_params: &[Literal]) -> Result<f64> {
         let fam = self.fam;
-        let cut = self.opts.cut;
-        let avg_client = if client_params.len() == 1 {
-            client_params[0].clone()
-        } else {
-            fedavg(client_params, &self.lam, fam, cut)?
-        };
-        let full = ParamSet::join(&avg_client, server_params);
+        let mixed = self.cuts.windows(2).any(|w| w[0] != w[1]);
+        if !mixed {
+            let cut =
+                self.cuts.first().copied().unwrap_or(self.opts.cut);
+            let avg_client = if client_params.len() == 1 {
+                client_params[0].clone()
+            } else {
+                fedavg(client_params, &self.lam, fam, cut)?
+            };
+            let full = ParamSet::join(&avg_client, server_params);
+            let (correct, total) = self.eval_model(&full)?;
+            return Ok(correct / total);
+        }
+        let j_min = *self.cuts.iter().min().unwrap();
+        let n_min = client_tensor_count(fam, j_min)?;
+        let lam_total: f64 =
+            self.lam.iter().map(|&w| w as f64).sum();
+        let groups = CutAssignment::PerClient(self.cuts.clone())
+            .groups(self.cuts.len());
+        let mut acc = 0.0f64;
+        for (cut, members) in groups {
+            let n_cut = client_tensor_count(fam, cut)?;
+            let off = n_cut - n_min;
+            let avg_client = if members.len() == 1 {
+                client_params[members[0]].clone()
+            } else {
+                let subset: Vec<Vec<Literal>> = members
+                    .iter()
+                    .map(|&i| client_params[i].clone())
+                    .collect();
+                let w = renormalized_lambda(&self.lam, &members);
+                fedavg(&subset, &w, fam, cut)?
+            };
+            let full =
+                ParamSet::join(&avg_client, &server_params[off..]);
+            let (correct, total) = self.eval_model(&full)?;
+            let w_g: f64 = members
+                .iter()
+                .map(|&i| self.lam[i] as f64)
+                .sum::<f64>()
+                / lam_total;
+            acc += w_g * (correct / total);
+        }
+        Ok(acc)
+    }
+
+    /// Chunked full-test-set pass of one assembled model: returns
+    /// `(correct, total)` over every full eval chunk.
+    fn eval_model(&self, full: &[Literal]) -> Result<(f64, f64)> {
+        let fam = self.fam;
         let eb = fam.eval_batch;
         let mut correct = 0.0;
         let mut total = 0.0;
@@ -422,7 +588,7 @@ impl<'a> Session<'a> {
             let idx: Vec<usize> = (lo..hi).collect();
             let (imgs, labels) = self.test_set.gather(&idx);
             debug_assert_eq!(imgs.len(), eb * img_len);
-            let mut inputs: Vec<Literal> = full.clone();
+            let mut inputs: Vec<Literal> = full.to_vec();
             inputs.push(literal_f32(
                 &[eb, fam.img, fam.img, fam.channels],
                 &imgs,
@@ -441,7 +607,7 @@ impl<'a> Session<'a> {
                 self.test_set.n
             )));
         }
-        Ok(correct / total)
+        Ok((correct, total))
     }
 }
 
@@ -517,7 +683,8 @@ mod tests {
         let legacy = Decision {
             alloc,
             psd_dbm_hz: psd,
-            cut: crate::coordinator::resnet18_cut_for_splitnet(opts.cut),
+            cut: crate::coordinator::resnet18_cut_for_splitnet(opts.cut)
+                .into(),
         };
         let (up, dn, bc) = prob.rates(&legacy);
         assert_eq!(s.rounds[0].uplink, up);
@@ -552,7 +719,7 @@ mod tests {
             let r = &sb.rounds[0];
             let inp = LatencyInputs {
                 profile: resnet18::profile_static(),
-                cut: sb.cut,
+                cut: sb.cut.as_uniform().unwrap(),
                 batch: sb.batch,
                 phi: fw.phi(),
                 f_server: sb.f_server,
@@ -684,5 +851,111 @@ mod tests {
         let e = build_sim_latency(cfg, opts, &mut rng).unwrap_err();
         let s = e.to_string();
         s.contains("round") && s.contains("quorum")
+    }
+
+    #[test]
+    fn explicit_all_equal_cut_resolves_to_uniform() {
+        // An all-equal explicit vector must be indistinguishable from the
+        // scalar uniform path — same assignment, bit-identical latency.
+        let cfg = Config::new();
+        let uni = TrainerOptions::default();
+        let expl = TrainerOptions {
+            cut_mode: CutMode::Explicit(vec![2; 5]),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(11);
+        let a = build_sim_latency(&cfg, &uni, &mut rng).unwrap();
+        let mut rng = Rng::new(11);
+        let b = build_sim_latency(&cfg, &expl, &mut rng).unwrap();
+        assert_eq!(a.cut, b.cut);
+        assert_eq!(b.cut.as_uniform(), Some(4)); // stage 2 ↔ layer 4
+        assert_eq!(
+            a.round_seconds(0, uni.framework, 0.5).to_bits(),
+            b.round_seconds(0, uni.framework, 0.5).to_bits()
+        );
+    }
+
+    #[test]
+    fn explicit_mixed_cut_prices_per_client_payloads() {
+        let cfg = Config::new();
+        let uni = TrainerOptions::default();
+        let mixd = TrainerOptions {
+            cut_mode: CutMode::Explicit(vec![1, 2, 2, 3, 4]),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(12);
+        let a = build_sim_latency(&cfg, &uni, &mut rng).unwrap();
+        let mut rng = Rng::new(12);
+        let b = build_sim_latency(&cfg, &mixd, &mut rng).unwrap();
+        assert!(b.cut.as_uniform().is_none());
+        let ta = a.round_seconds(0, uni.framework, 0.5);
+        let tb = b.round_seconds(0, mixd.framework, 0.5);
+        assert!(tb > 0.0 && tb.is_finite());
+        assert_ne!(ta.to_bits(), tb.to_bits());
+        // One uplink arrival per client: the straggler-deadline machinery
+        // keeps per-client meaning under mixed cuts.
+        assert_eq!(b.uplink_arrivals(0, mixd.framework, 0.5).len(), 5);
+    }
+
+    #[test]
+    fn hetero_cut_mode_never_slower_than_uniform() {
+        let cfg = Config::new();
+        let uni = TrainerOptions {
+            optimize_resources: true,
+            ..Default::default()
+        };
+        let het = TrainerOptions {
+            optimize_resources: true,
+            cut_mode: CutMode::Hetero,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(13);
+        let a = build_sim_latency(&cfg, &uni, &mut rng).unwrap();
+        let mut rng = Rng::new(13);
+        let b = build_sim_latency(&cfg, &het, &mut rng).unwrap();
+        let ta = a.round_seconds(0, uni.framework, 0.5);
+        let tb = b.round_seconds(0, het.framework, 0.5);
+        assert!(tb <= ta, "hetero {tb} > uniform {ta}");
+        // Executable contract: every refined cut maps to a SplitNet stage.
+        for j in b.cut.cuts_for(5) {
+            assert!(try_splitnet_cut_for_resnet18(j).is_ok(), "{j}");
+        }
+    }
+
+    #[test]
+    fn mixed_cut_with_dynamic_channel_rejected() {
+        use crate::scenario::{ReoptPolicy, ScenarioSpec};
+        let cfg = Config::new();
+        let opts = TrainerOptions {
+            rounds: 3,
+            cut_mode: CutMode::Explicit(vec![1, 2, 2, 3, 4]),
+            dynamic_channel: Some(DynamicChannel {
+                spec: ScenarioSpec::fading(3),
+                policy: ReoptPolicy::Never,
+            }),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(6);
+        let e = build_sim_latency(&cfg, &opts, &mut rng).unwrap_err();
+        assert!(e.to_string().contains("static channel"), "{e}");
+    }
+
+    #[test]
+    fn explicit_cut_vector_shape_and_range_validated() {
+        let cfg = Config::new();
+        let mut rng = Rng::new(8);
+        let bad_len = TrainerOptions {
+            cut_mode: CutMode::Explicit(vec![1, 2]), // run has 5 clients
+            ..Default::default()
+        };
+        let e = build_sim_latency(&cfg, &bad_len, &mut rng).unwrap_err();
+        assert!(e.to_string().contains("5 client"), "{e}");
+        let mut rng = Rng::new(8);
+        let bad_range = TrainerOptions {
+            cut_mode: CutMode::Explicit(vec![1, 2, 3, 4, 7]),
+            ..Default::default()
+        };
+        let e = build_sim_latency(&cfg, &bad_range, &mut rng).unwrap_err();
+        assert!(e.to_string().contains("out of 1..=4"), "{e}");
     }
 }

@@ -17,6 +17,7 @@
 //! | fig13  | robustness to channel variation |
 //! | fig13b | re-optimization policy vs channel coherence (scenario sweep; repo extension) |
 //! | fig_pipeline | barrier vs pipelined timeline latency across cuts and C (repo extension) |
+//! | fig_hetero_cut | per-client cut refinement vs uniform optimum under compute heterogeneity (repo extension) |
 //!
 //! Training-backed experiments (table5, fig4, fig7–10) run the real
 //! coordinator over the selected backend — PJRT when artifacts exist,
@@ -27,6 +28,7 @@
 //! keeps the training path executable.
 
 pub mod accuracy;
+pub mod hetero_cut;
 pub mod latency_figs;
 pub mod pipeline;
 pub mod sweep;
@@ -100,7 +102,8 @@ impl<'a> Ctx<'a> {
 /// All experiment ids in regeneration order.
 pub const ALL_IDS: &[&str] = &[
     "table1", "table4", "fig11", "fig12", "fig13", "fig13b",
-    "fig_pipeline", "table5", "fig4", "fig7", "fig8", "fig9", "fig10",
+    "fig_pipeline", "fig_hetero_cut", "table5", "fig4", "fig7", "fig8",
+    "fig9", "fig10",
 ];
 
 /// Run one experiment by id.
@@ -125,6 +128,7 @@ pub fn run(id: &str, ctx: &mut Ctx) -> Result<()> {
         "fig13" => latency_figs::fig13(ctx),
         "fig13b" => latency_figs::fig13b(ctx),
         "fig_pipeline" => pipeline::fig_pipeline(ctx),
+        "fig_hetero_cut" => hetero_cut::fig_hetero_cut(ctx),
         other => Err(Error::Config(format!(
             "unknown experiment '{other}' (known: {ALL_IDS:?})"
         ))),

@@ -91,7 +91,7 @@ pub fn eval_framework_cell(profile: &NetworkProfile, cell: &FrameworkCell)
     let (up, dn, bc) = prob.rates(&d);
     let inp = LatencyInputs {
         profile,
-        cut: d.cut,
+        cut: d.cut.as_uniform()?,
         batch: cell.batch,
         phi: cell.fw.phi(),
         f_server: cell.net.f_server,

@@ -13,7 +13,11 @@
 //!   of rounds, then φ = 0 (the framework drivers flip φ; per-round latency
 //!   here is parameterized by the current φ).
 
-use super::{epsl_stage_latencies, LatencyInputs, StageLatencies};
+use super::{
+    epsl_stage_latencies, epsl_stage_latencies_hetero, LatencyInputs,
+    StageLatencies,
+};
+use crate::error::{Error, Result};
 
 /// The five frameworks of the paper's evaluation.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -86,6 +90,30 @@ pub fn round_latency(fw: Framework, inp: &LatencyInputs) -> StageLatencies {
             s
         }
         Framework::VanillaSl => vanilla_sl_round(inp),
+    }
+}
+
+/// Mixed-cut per-round latency: client i splits at `cuts[i]`. Only the
+/// parallel frameworks (PSL / EPSL / EPSL-PT) support per-client cuts —
+/// SFL's FedAvg model exchange and vanilla SL's model relay both require
+/// every client-side model to have the same shape, so they are rejected
+/// with a typed error. All-equal `cuts` are bit-identical to
+/// [`round_latency`] at that cut (the hetero stage function delegates).
+pub fn round_latency_hetero(fw: Framework, inp: &LatencyInputs,
+                            cuts: &[usize]) -> Result<StageLatencies> {
+    match fw {
+        Framework::Epsl { .. }
+        | Framework::Psl
+        | Framework::EpslPt { .. } => {
+            let mut my = inp.clone();
+            my.phi = fw.phi();
+            Ok(epsl_stage_latencies_hetero(&my, cuts))
+        }
+        Framework::Sfl | Framework::VanillaSl => Err(Error::Config(format!(
+            "{} does not support per-client cut layers (client-side \
+             models must share one shape)",
+            fw.name()
+        ))),
     }
 }
 

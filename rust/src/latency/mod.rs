@@ -200,6 +200,99 @@ pub fn epsl_stage_latencies(inp: &LatencyInputs) -> StageLatencies {
     }
 }
 
+/// Mixed-cut extension of the seven EPSL stages: client i splits at
+/// `cuts[i]` (len must equal `inp.n_clients()`; `inp.cut` is ignored).
+///
+/// Client-side terms (eqs. 13, 15, 21, 22) use each client's own cut.
+/// Server-side terms sum over cut groups in ascending cut order: a group
+/// g of c_g clients at cut j contributes
+///
+/// - FP: `c_g · (b κ_s Φ_s^F(j) / f_s)` — eq. 16 restricted to the group
+/// - BP: `(⌈φb⌉ + c_g(b−⌈φb⌉)) · (κ_s Φ_s^B(j) / f_s) +
+///        c_g · (b κ_s Φ_s^L / f_s)` — eq. 17 per group (the aggregated
+///   rows back-propagate once per distinct suffix, since suffixes at
+///   different cuts are distinct parameter sets)
+/// - broadcast: `⌈φb⌉ χ_j / R^B` — eq. 19 per distinct cut (each group
+///   receives the aggregated gradient at its own boundary)
+///
+/// An all-equal `cuts` vector delegates to [`epsl_stage_latencies`], so
+/// it is bit-identical to the uniform closed form. The per-cut "unit"
+/// terms above (parenthesized) are the canonical association; the
+/// evaluator fast path replicates them operation for operation.
+pub fn epsl_stage_latencies_hetero(
+    inp: &LatencyInputs,
+    cuts: &[usize],
+) -> StageLatencies {
+    debug_assert_eq!(cuts.len(), inp.n_clients());
+    if let Some((first, rest)) = cuts.split_first() {
+        if rest.iter().all(|c| c == first) {
+            let uni = LatencyInputs { cut: *first, ..inp.clone() };
+            return epsl_stage_latencies(&uni);
+        }
+    }
+    let p = inp.profile;
+    let b = inp.batch as f64;
+    let m = inp.aggregated_count() as f64; // ⌈φb⌉
+
+    // eqs. 13/15/21/22 with per-client cuts.
+    let client_fp: Vec<f64> = inp
+        .f_clients
+        .iter()
+        .zip(cuts)
+        .map(|(fi, &j)| b * inp.kappa_client * p.client_fp_flops(j) / fi)
+        .collect();
+    let uplink: Vec<f64> = inp
+        .uplink
+        .iter()
+        .zip(cuts)
+        .map(|(r, &j)| b * p.psi_bits(j) / r.max(1e-9))
+        .collect();
+    let downlink: Vec<f64> = inp
+        .downlink
+        .iter()
+        .zip(cuts)
+        .map(|(r, &j)| (b - m) * p.chi_bits(j) / r.max(1e-9))
+        .collect();
+    let client_bp: Vec<f64> = inp
+        .f_clients
+        .iter()
+        .zip(cuts)
+        .map(|(fi, &j)| b * inp.kappa_client * p.client_bp_flops(j) / fi)
+        .collect();
+
+    // Server terms grouped by distinct cut, ascending.
+    let mut distinct: Vec<usize> = cuts.to_vec();
+    distinct.sort_unstable();
+    distinct.dedup();
+    let mut server_fp = 0.0;
+    let mut server_bp = 0.0;
+    let mut broadcast = 0.0;
+    for &j in &distinct {
+        let c_g = cuts.iter().filter(|&&c| c == j).count() as f64;
+        let sfp1 = b * inp.kappa_server * p.server_fp_flops(j)
+            / inp.f_server;
+        let sbp_unit =
+            inp.kappa_server * p.server_bp_flops(j) / inp.f_server;
+        let sll_unit = b * inp.kappa_server * p.last_layer_bp_flops()
+            / inp.f_server;
+        let eff_g = m + c_g * (b - m);
+        server_fp += c_g * sfp1;
+        server_bp += eff_g * sbp_unit + c_g * sll_unit;
+        broadcast += m * p.chi_bits(j) / inp.broadcast.max(1e-9);
+    }
+
+    StageLatencies {
+        client_fp,
+        uplink,
+        server_fp,
+        server_bp,
+        broadcast,
+        downlink,
+        client_bp,
+        model_exchange: 0.0,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,6 +391,68 @@ mod tests {
         let dn = [2e8; 3];
         let s = epsl_stage_latencies(&inputs(&p, &f, &up, &dn, 0.5));
         assert_eq!(s.uplink_straggler(), 1);
+    }
+
+    #[test]
+    fn hetero_all_equal_bitwise_matches_uniform() {
+        let p = resnet18::profile();
+        let f = [1e9, 1.7e9, 2.2e9];
+        let up = [5e7, 1e8, 2e8];
+        let dn = [6e7, 9e7, 3e8];
+        let inp = inputs(&p, &f, &up, &dn, 0.5);
+        for j in [1usize, 4, 10, 16] {
+            let uni =
+                epsl_stage_latencies(&LatencyInputs { cut: j, ..inp.clone() });
+            let het = epsl_stage_latencies_hetero(&inp, &[j, j, j]);
+            assert_eq!(uni, het, "cut {j}");
+            assert_eq!(
+                uni.round_total().to_bits(),
+                het.round_total().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn hetero_mixed_matches_manual_group_sums() {
+        let p = resnet18::profile();
+        let f = [1e9, 2e9, 1.5e9];
+        let up = [1e8, 1e8, 2e8];
+        let dn = [1e8, 2e8, 1e8];
+        let inp = inputs(&p, &f, &up, &dn, 0.5);
+        let cuts = [4usize, 1, 4];
+        let s = epsl_stage_latencies_hetero(&inp, &cuts);
+        let b = 64.0;
+        let m = inp.aggregated_count() as f64;
+        // Per-client terms use each client's own cut.
+        for i in 0..3 {
+            let j = cuts[i];
+            let fp = b * inp.kappa_client * p.client_fp_flops(j) / f[i];
+            assert_eq!(s.client_fp[i].to_bits(), fp.to_bits(), "fp {i}");
+            let ul = b * p.psi_bits(j) / up[i];
+            assert_eq!(s.uplink[i].to_bits(), ul.to_bits(), "ul {i}");
+            let dl = (b - m) * p.chi_bits(j) / dn[i];
+            assert_eq!(s.downlink[i].to_bits(), dl.to_bits(), "dl {i}");
+        }
+        // Server FP: group {1}×1 + group {4}×2, ascending cut order.
+        let sfp1 = |j: usize| {
+            b * inp.kappa_server * p.server_fp_flops(j) / inp.f_server
+        };
+        let expect_fp = 1.0 * sfp1(1) + 2.0 * sfp1(4);
+        assert_eq!(s.server_fp.to_bits(), expect_fp.to_bits());
+        // Server BP: per-group eq. 17.
+        let bp_g = |j: usize, c_g: f64| {
+            let sbp_unit =
+                inp.kappa_server * p.server_bp_flops(j) / inp.f_server;
+            let sll_unit = b * inp.kappa_server * p.last_layer_bp_flops()
+                / inp.f_server;
+            (m + c_g * (b - m)) * sbp_unit + c_g * sll_unit
+        };
+        let expect_bp = bp_g(1, 1.0) + bp_g(4, 2.0);
+        assert_eq!(s.server_bp.to_bits(), expect_bp.to_bits());
+        // Broadcast: one eq.-19 term per distinct cut.
+        let expect_bc =
+            m * p.chi_bits(1) / 2e8 + m * p.chi_bits(4) / 2e8;
+        assert_eq!(s.broadcast.to_bits(), expect_bc.to_bits());
     }
 
     #[test]

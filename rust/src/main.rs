@@ -10,7 +10,8 @@
 use epsl::channel::{ChannelRealization, Deployment};
 use epsl::config::cli::{render_help, Args, FlagSpec};
 use epsl::config::Config;
-use epsl::coordinator::{resume, train, Checkpoint, TrainerOptions};
+use epsl::coordinator::{resume, train, Checkpoint, CutMode,
+                        TrainerOptions};
 use epsl::experiments::{self, Ctx};
 use epsl::latency::frameworks::Framework;
 use epsl::optim::baselines::Scheme;
@@ -32,7 +33,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "framework", takes_value: true, help: "epsl|psl|sfl|vanilla|epsl-pt" },
         FlagSpec { name: "phi", takes_value: true, help: "aggregation ratio" },
         FlagSpec { name: "clients", takes_value: true, help: "client count C" },
-        FlagSpec { name: "cut", takes_value: true, help: "cut layer (splitnet 1..4)" },
+        FlagSpec { name: "cut", takes_value: true, help: "cut spec: splitnet layer 1..4 | hetero | per-client vector a-b-c" },
         FlagSpec { name: "rounds", takes_value: true, help: "training rounds" },
         FlagSpec { name: "family", takes_value: true, help: "mnist|ham" },
         FlagSpec { name: "non-iid", takes_value: false, help: "2-class non-IID sharding" },
@@ -175,11 +176,20 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     } else {
         None
     };
+    // Cut assignment: --cut takes a uniform layer, "hetero", or an
+    // explicit per-client vector; the `[optim] cut` TOML knob is the
+    // flagless default.
+    let cut_spec = args
+        .get("cut")
+        .map(str::to_string)
+        .unwrap_or_else(|| cfg.optim.cut.clone());
+    let (cut_mode, uniform_cut) = CutMode::parse(&cut_spec)?;
     let opts = TrainerOptions {
         family: args.get("family").unwrap_or("mnist").to_string(),
         framework: fw,
         n_clients: args.usize("clients")?.unwrap_or(5),
-        cut: args.usize("cut")?.unwrap_or(2),
+        cut: uniform_cut.unwrap_or(2),
+        cut_mode,
         iid: !args.has("non-iid"),
         dataset_size: args.usize("dataset")?.unwrap_or(2000),
         rounds,
@@ -195,11 +205,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         ..Default::default()
     };
     let sel = pick_backend(&cfg)?;
+    let cut_desc = match &opts.cut_mode {
+        CutMode::Uniform => opts.cut.to_string(),
+        _ => cut_spec.clone(),
+    };
     println!(
         "training {} C={} cut={} rounds={} family={} timeline={}",
         opts.framework.name(),
         opts.n_clients,
-        opts.cut,
+        cut_desc,
         opts.rounds,
         opts.family,
         opts.timeline_mode.name()
@@ -285,8 +299,9 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         baselines::solve(&prob, scheme, &mut srng)?
     };
     let s = prob.stage_latencies(&d);
+    let cut = d.uniform_cut()?;
     println!("scheme: {}", scheme.name());
-    println!("cut layer: {} ({})", d.cut, profile.layers[d.cut - 1].name);
+    println!("cut layer: {} ({})", cut, profile.layers[cut - 1].name);
     let mut t = Table::new("per-client allocation").header(&[
         "client", "f (GHz)", "d (m)", "channels", "power (W)", "T_F+T_U (s)",
         "T_D+T_B (s)",

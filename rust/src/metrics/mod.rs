@@ -47,6 +47,10 @@ pub struct RoundRecord {
     pub faults: FaultStats,
     /// Wall-clock milliseconds actually spent executing the round.
     pub wall_ms: f64,
+    /// Cut-layer label for the round: a single SplitNet cut (`"2"`) or a
+    /// `'-'`-joined per-client vector (`"1-2-2-3"`) under mixed-cut
+    /// training. CSV-safe (no commas).
+    pub cut: String,
 }
 
 /// A full training run's record.
@@ -129,13 +133,14 @@ impl RunMetrics {
 
     /// CSV dump (one row per round; unevaluated `test_acc` is an empty
     /// cell; the six timeline stage spans follow the total; the five
-    /// fault-accounting columns precede wall clock).
+    /// fault-accounting columns precede wall clock; the cut label is the
+    /// last column so earlier column indices stay stable).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,loss,train_acc,test_acc,sim_latency_s,t_uplink_s,\
              t_server_fp_s,t_server_bp_s,t_broadcast_s,t_downlink_s,\
              t_exchange_s,faults_injected,fault_retries,fault_dropped,\
-             fault_cohort,recovery_s,wall_ms\n",
+             fault_cohort,recovery_s,wall_ms,cut\n",
         );
         for r in &self.rounds {
             let acc = match r.test_acc {
@@ -147,7 +152,7 @@ impl RunMetrics {
             let _ = writeln!(
                 out,
                 "{},{:.6},{:.4},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},\
-                 {:.6},{},{},{},{},{:.6},{:.3}",
+                 {:.6},{},{},{},{},{:.6},{:.3},{}",
                 r.round,
                 r.loss,
                 r.train_acc,
@@ -164,7 +169,8 @@ impl RunMetrics {
                 fs.dropped,
                 fs.cohort,
                 fs.recovery_s,
-                r.wall_ms
+                r.wall_ms,
+                r.cut
             );
         }
         out
@@ -192,6 +198,7 @@ mod tests {
             },
             faults: FaultStats::default(),
             wall_ms: 1.0,
+            cut: "2".into(),
         }
     }
 
@@ -246,7 +253,7 @@ mod tests {
         assert_eq!(csv.lines().count(), 4);
         assert!(csv.starts_with("round,"));
         let header_cols = csv.lines().next().unwrap().split(',').count();
-        assert_eq!(header_cols, 17);
+        assert_eq!(header_cols, 18);
         for line in csv.lines().skip(1) {
             assert_eq!(line.split(',').count(), header_cols, "{line}");
         }
@@ -292,5 +299,25 @@ mod tests {
         let quiet: Vec<&str> =
             csv.lines().nth(1).unwrap().split(',').collect();
         assert_eq!(&quiet[11..15], &["0", "0", "0", "0"]);
+    }
+
+    #[test]
+    fn cut_label_is_the_last_csv_column() {
+        let mut m = run_with(&[0.1]);
+        let mut r = record(1, Some(0.2));
+        r.cut = "1-2-2-3".into();
+        m.push(r);
+        let csv = m.to_csv();
+        let header: Vec<&str> =
+            csv.lines().next().unwrap().split(',').collect();
+        assert_eq!(header.last(), Some(&"cut"));
+        assert_eq!(header[16], "wall_ms");
+        let uniform: Vec<&str> =
+            csv.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(uniform.last(), Some(&"2"));
+        let mixed: Vec<&str> =
+            csv.lines().nth(2).unwrap().split(',').collect();
+        assert_eq!(mixed.last(), Some(&"1-2-2-3"));
+        assert_eq!(mixed.len(), header.len());
     }
 }

@@ -129,7 +129,7 @@ pub fn uniform_power(prob: &Problem, alloc: &Allocation) -> Vec<f64> {
 pub fn uniform_decision(prob: &Problem, cut: usize) -> Decision {
     let alloc = rss_allocation(prob);
     let psd = uniform_power(prob, &alloc);
-    Decision { alloc, psd_dbm_hz: psd, cut }
+    Decision { alloc, psd_dbm_hz: psd, cut: cut.into() }
 }
 
 /// Random cut among the candidates (baselines a/b).
@@ -144,7 +144,7 @@ fn baseline_a(prob: &Problem, rng: &mut Rng) -> Decision {
     let cut = random_cut(prob, rng);
     let alloc = rss_allocation(prob);
     let psd = uniform_power(prob, &alloc);
-    Decision { alloc, psd_dbm_hz: psd, cut }
+    Decision { alloc, psd_dbm_hz: psd, cut: cut.into() }
 }
 
 /// Solve one scheme. `rng` drives the random cut draws of a)/b). Builds a
@@ -170,7 +170,7 @@ pub fn solve_with(prob: &Problem, ev: &mut Evaluator, scheme: Scheme,
             let seed_psd = uniform_power(prob, &rss_allocation(prob));
             let alloc = greedy::allocate_with(prob, ev, &seed_psd, cut);
             let sol = power::solve_with(prob, ev, &alloc, cut)?;
-            Ok(Decision { alloc, psd_dbm_hz: sol.psd_dbm_hz, cut })
+            Ok(Decision { alloc, psd_dbm_hz: sol.psd_dbm_hz, cut: cut.into() })
         }
         Scheme::BaselineC => {
             let alloc = rss_allocation(prob);
@@ -184,7 +184,7 @@ pub fn solve_with(prob: &Problem, ev: &mut Evaluator, scheme: Scheme,
                 let sol = power::solve_with(prob, ev, &alloc, cut)?;
                 psd = sol.psd_dbm_hz;
             }
-            Ok(Decision { alloc, psd_dbm_hz: psd, cut })
+            Ok(Decision { alloc, psd_dbm_hz: psd, cut: cut.into() })
         }
         Scheme::BaselineD => {
             let mut cut = prob.profile.cut_candidates
@@ -197,7 +197,7 @@ pub fn solve_with(prob: &Problem, ev: &mut Evaluator, scheme: Scheme,
                 let (new_cut, _) = cutlayer::solve_with(prob, ev, &alloc, &psd)?;
                 cut = new_cut;
             }
-            Ok(Decision { alloc, psd_dbm_hz: psd, cut })
+            Ok(Decision { alloc, psd_dbm_hz: psd, cut: cut.into() })
         }
         Scheme::Proposed => {
             Ok(bcd::solve_with(prob, ev, BcdOptions::default())?.decision)
@@ -315,7 +315,8 @@ mod tests {
         let p = prob(&cfg, &profile, &dep, &ch);
         let alloc = rss_allocation(&p);
         let psd = uniform_power(&p, &alloc);
-        let d = Decision { alloc, psd_dbm_hz: psd, cut: 3 };
+        let d =
+            Decision { alloc, psd_dbm_hz: psd, cut: 3.into() };
         p.check_feasible(&d).unwrap();
     }
 

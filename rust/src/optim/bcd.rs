@@ -69,7 +69,7 @@ fn initial_with(prob: &Problem, ev: &Evaluator) -> Decision {
     let cut = cands[cands.len() / 2];
     let psd = initial_psd(prob);
     let alloc = greedy::allocate_with(prob, ev, &psd, cut);
-    Decision { alloc, psd_dbm_hz: psd, cut }
+    Decision { alloc, psd_dbm_hz: psd, cut: cut.into() }
 }
 
 /// Copy `src` into `dst` reusing `dst`'s buffers (no allocation once the
@@ -77,7 +77,7 @@ fn initial_with(prob: &Problem, ev: &Evaluator) -> Decision {
 fn copy_decision(dst: &mut Decision, src: &Decision) {
     dst.alloc.owner.clone_from(&src.alloc.owner);
     dst.psd_dbm_hz.clone_from(&src.psd_dbm_hz);
-    dst.cut = src.cut;
+    dst.cut.clone_from(&src.cut);
 }
 
 /// Run Algorithm 3 on the evaluator fast path.
@@ -100,11 +100,14 @@ pub fn solve_with(prob: &Problem, ev: &mut Evaluator, opts: BcdOptions)
     for _ in 0..opts.max_iters {
         iterations += 1;
         let before = best;
+        // BCD is the paper's uniform-cut Alg. 3 — the incumbent's
+        // assignment is always uniform here.
+        let dj = d.uniform_cut()?;
 
         // Block 1: subchannel allocation (Algorithm 2).
-        cand.alloc = greedy::allocate_with(prob, ev, &d.psd_dbm_hz, d.cut);
+        cand.alloc = greedy::allocate_with(prob, ev, &d.psd_dbm_hz, dj);
         cand.psd_dbm_hz.clone_from(&d.psd_dbm_hz);
-        cand.cut = d.cut;
+        cand.cut.clone_from(&d.cut);
         if prob.check_feasible(&cand).is_ok() {
             let t = ev.objective(&cand);
             if t <= best {
@@ -114,10 +117,10 @@ pub fn solve_with(prob: &Problem, ev: &mut Evaluator, opts: BcdOptions)
         }
 
         // Block 2: power control (P2).
-        if let Ok(sol) = power::solve_with(prob, ev, &d.alloc, d.cut) {
+        if let Ok(sol) = power::solve_with(prob, ev, &d.alloc, dj) {
             cand.alloc.owner.clone_from(&d.alloc.owner);
             cand.psd_dbm_hz = sol.psd_dbm_hz;
-            cand.cut = d.cut;
+            cand.cut.clone_from(&d.cut);
             if prob.check_feasible(&cand).is_ok() {
                 let t = ev.objective(&cand);
                 if t <= best {
@@ -132,10 +135,10 @@ pub fn solve_with(prob: &Problem, ev: &mut Evaluator, opts: BcdOptions)
         if let Ok((cut, _stats)) =
             cutlayer::solve_with(prob, ev, &d.alloc, &d.psd_dbm_hz)
         {
-            if cut != d.cut {
+            if d.cut != cut {
                 cand.alloc.owner.clone_from(&d.alloc.owner);
                 cand.psd_dbm_hz.clone_from(&d.psd_dbm_hz);
-                cand.cut = cut;
+                cand.cut = cut.into();
                 if let Ok(sol) = power::solve_with(prob, ev, &cand.alloc, cut)
                 {
                     cand.psd_dbm_hz = sol.psd_dbm_hz;
@@ -167,7 +170,7 @@ pub fn solve_reference(prob: &Problem, opts: BcdOptions) -> Result<BcdResult> {
     let cut = cands[cands.len() / 2];
     let psd = initial_psd(prob);
     let alloc = greedy::allocate_reference(prob, &psd, cut);
-    let mut d = Decision { alloc, psd_dbm_hz: psd, cut };
+    let mut d = Decision { alloc, psd_dbm_hz: psd, cut: cut.into() };
     let mut best = prob.objective(&d);
     let mut trajectory = vec![best];
     let mut iterations = 0;
@@ -175,9 +178,10 @@ pub fn solve_reference(prob: &Problem, opts: BcdOptions) -> Result<BcdResult> {
     for _ in 0..opts.max_iters {
         iterations += 1;
         let before = best;
+        let dj = d.uniform_cut()?;
 
         // Block 1: subchannel allocation (Algorithm 2).
-        let alloc = greedy::allocate_reference(prob, &d.psd_dbm_hz, d.cut);
+        let alloc = greedy::allocate_reference(prob, &d.psd_dbm_hz, dj);
         let cand = Decision { alloc, ..d.clone() };
         if prob.check_feasible(&cand).is_ok() {
             let t = prob.objective(&cand);
@@ -188,7 +192,7 @@ pub fn solve_reference(prob: &Problem, opts: BcdOptions) -> Result<BcdResult> {
         }
 
         // Block 2: power control (P2).
-        if let Ok(sol) = power::solve(prob, &d.alloc, d.cut) {
+        if let Ok(sol) = power::solve(prob, &d.alloc, dj) {
             let cand = Decision { psd_dbm_hz: sol.psd_dbm_hz, ..d.clone() };
             if prob.check_feasible(&cand).is_ok() {
                 let t = prob.objective(&cand);
@@ -204,8 +208,8 @@ pub fn solve_reference(prob: &Problem, opts: BcdOptions) -> Result<BcdResult> {
         if let Ok((cut, _stats)) =
             cutlayer::solve(prob, &d.alloc, &d.psd_dbm_hz)
         {
-            if cut != d.cut {
-                let mut cand = Decision { cut, ..d.clone() };
+            if d.cut != cut {
+                let mut cand = Decision { cut: cut.into(), ..d.clone() };
                 if let Ok(sol) = power::solve(prob, &cand.alloc, cut) {
                     cand.psd_dbm_hz = sol.psd_dbm_hz;
                 }
@@ -275,7 +279,7 @@ mod tests {
         let naive = Decision {
             alloc: round_robin(&cfg),
             psd_dbm_hz: vec![-65.0; 20],
-            cut: 1,
+            cut: 1.into(),
         };
         assert!(
             res.objective < prob.objective(&naive),

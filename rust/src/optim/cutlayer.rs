@@ -50,7 +50,7 @@ pub fn solve(prob: &Problem, alloc: &Allocation, psd_dbm_hz: &[f64])
     let d0 = Decision {
         alloc: alloc.clone(),
         psd_dbm_hz: psd_dbm_hz.to_vec(),
-        cut: cands[0],
+        cut: cands[0].into(),
     };
     let (up, dn, bc) = prob.rates(&d0);
     let nj = cands.len();
@@ -141,7 +141,7 @@ pub fn exhaustive(prob: &Problem, alloc: &Allocation, psd_dbm_hz: &[f64])
         let d = Decision {
             alloc: alloc.clone(),
             psd_dbm_hz: psd_dbm_hz.to_vec(),
-            cut,
+            cut: cut.into(),
         };
         let t = prob.objective(&d);
         if t < best.1 {
@@ -251,7 +251,7 @@ mod tests {
             let d = Decision {
                 alloc: alloc.clone(),
                 psd_dbm_hz: psd.clone(),
-                cut: cut_milp,
+                cut: cut_milp.into(),
             };
             let t_milp = prob.objective(&d);
             assert!(

@@ -66,6 +66,17 @@ pub struct Evaluator {
     cfp: Vec<f64>,
     /// T_i^B(j) — eq. 22, `[j·C + i]`.
     cbp: Vec<f64>,
+    // ---- per-cut *unit* tables for mixed-cut groups (the canonical
+    // association of `epsl_stage_latencies_hetero`) ----
+    /// One client's server-FP seconds at cut j: b·κ_s·Φ_s^F(j)/f_s.
+    sfp1: Vec<f64>,
+    /// Per-effective-sample server-BP seconds at cut j: κ_s·Φ_s^B(j)/f_s.
+    sbp_unit: Vec<f64>,
+    /// One client's last-layer BP seconds: b·κ_s·Φ_s^L/f_s.
+    sll_unit: f64,
+    /// b and ⌈φb⌉ as f64 (for per-group effective-sample counts).
+    batch_f: f64,
+    magg_f: f64,
     // ---- reusable scratch (steady-state evaluation is allocation-free) --
     up: Vec<f64>,
     dn: Vec<f64>,
@@ -115,6 +126,8 @@ impl Evaluator {
         let mut tbc = vec![0.0; nl];
         let mut cfp = vec![0.0; nl * c];
         let mut cbp = vec![0.0; nl * c];
+        let mut sfp1 = vec![0.0; nl];
+        let mut sbp_unit = vec![0.0; nl];
         for j in 1..nl {
             let psi = p.psi_bits(j);
             let chi = p.chi_bits(j);
@@ -127,6 +140,10 @@ impl Evaluator {
                 + cc * b * cfg.kappa_server * p.last_layer_bp_flops())
                 / cfg.f_server;
             tbc[j] = magg * chi / bc_rate.max(1e-9);
+            sfp1[j] = b * cfg.kappa_server * p.server_fp_flops(j)
+                / cfg.f_server;
+            sbp_unit[j] =
+                cfg.kappa_server * p.server_bp_flops(j) / cfg.f_server;
             let phi_cf = p.client_fp_flops(j);
             let phi_cb = p.client_bp_flops(j);
             for i in 0..c {
@@ -134,6 +151,8 @@ impl Evaluator {
                 cbp[j * c + i] = b * cfg.kappa_client * phi_cb / f[i];
             }
         }
+        let sll_unit = b * cfg.kappa_server * p.last_layer_bp_flops()
+            / cfg.f_server;
 
         Evaluator {
             n_clients: c,
@@ -152,6 +171,11 @@ impl Evaluator {
             tbc,
             cfp,
             cbp,
+            sfp1,
+            sbp_unit,
+            sll_unit,
+            batch_f: b,
+            magg_f: magg,
             up: vec![0.0; c],
             dn: vec![0.0; c],
         }
@@ -299,13 +323,60 @@ impl Evaluator {
         upmax + self.sfp[cut] + self.sbp[cut] + self.tbc[cut] + dnmax
     }
 
+    /// Mixed-cut round total given per-client rates and per-client cuts —
+    /// operation-for-operation the association of
+    /// [`crate::latency::epsl_stage_latencies_hetero`], so it is
+    /// bit-identical to the reference [`Problem::objective`] on the same
+    /// assignment. All-equal `cuts` dispatch to the uniform fast path
+    /// (which delegates bitwise to the uniform closed form). Allocates
+    /// one small distinct-cut scratch vector (hetero-only path).
+    pub fn objective_with_rates_cuts(&self, cuts: &[usize], up: &[f64],
+                                     dn: &[f64]) -> f64 {
+        if let Some((first, rest)) = cuts.split_first() {
+            if rest.iter().all(|c| c == first) {
+                return self.objective_with_rates(*first, up, dn);
+            }
+        }
+        let c = self.n_clients;
+        let mut upmax = 0.0f64;
+        for i in 0..c {
+            upmax = upmax.max(self.uplink_phase_time(i, cuts[i], up[i]));
+        }
+        let mut dnmax = 0.0f64;
+        for i in 0..c {
+            dnmax = dnmax.max(self.downlink_phase_time(i, cuts[i], dn[i]));
+        }
+        let mut distinct: Vec<usize> = cuts.to_vec();
+        distinct.sort_unstable();
+        distinct.dedup();
+        let mut server_fp = 0.0;
+        let mut server_bp = 0.0;
+        let mut broadcast = 0.0;
+        for &j in &distinct {
+            let c_g = cuts.iter().filter(|&&x| x == j).count() as f64;
+            let eff_g = self.magg_f + c_g * (self.batch_f - self.magg_f);
+            server_fp += c_g * self.sfp1[j];
+            server_bp += eff_g * self.sbp_unit[j] + c_g * self.sll_unit;
+            broadcast += self.tbc[j];
+        }
+        upmax + server_fp + server_bp + broadcast + dnmax
+    }
+
     /// Full objective of a decision — bit-identical to
-    /// [`Problem::objective`], allocation-free in steady state.
+    /// [`Problem::objective`], allocation-free in steady state for
+    /// uniform (and all-equal) cut assignments.
     pub fn objective(&mut self, d: &Decision) -> f64 {
         let mut up = std::mem::take(&mut self.up);
         let mut dn = std::mem::take(&mut self.dn);
         self.fill_rates(&d.alloc, &d.psd_dbm_hz, &mut up, &mut dn);
-        let t = self.objective_with_rates(d.cut, &up, &dn);
+        let t = match d.cut.as_uniform() {
+            Some(j) => self.objective_with_rates(j, &up, &dn),
+            None => self.objective_with_rates_cuts(
+                &d.cut.cuts_for(self.n_clients),
+                &up,
+                &dn,
+            ),
+        };
         self.up = up;
         self.dn = dn;
         t
@@ -342,7 +413,7 @@ mod tests {
             let d = Decision {
                 alloc: round_robin(&cfg),
                 psd_dbm_hz: vec![-62.0; cfg.n_subchannels],
-                cut,
+                cut: cut.into(),
             };
             let reference = prob.objective(&d);
             let fast = ev.objective(&d);
@@ -437,7 +508,7 @@ mod tests {
                 .map(|_| g.f64_in(-78.0, -55.0))
                 .collect();
             let cut = *g.choose(&profile.cut_candidates);
-            let d = Decision { alloc, psd_dbm_hz: psd, cut };
+            let d = Decision { alloc, psd_dbm_hz: psd, cut: cut.into() };
             let reference = prob.objective(&d);
             let fast = ev.objective(&d);
             assert!(
@@ -467,7 +538,7 @@ mod tests {
             let d = Decision {
                 alloc: alloc.clone(),
                 psd_dbm_hz: psd.clone(),
-                cut,
+                cut: cut.into(),
             };
             let full = ev.objective(&d);
             let via_rates = ev.objective_with_rates(cut, &up, &dn);
@@ -486,7 +557,7 @@ mod tests {
             let d = Decision {
                 alloc: round_robin(&cfg),
                 psd_dbm_hz: vec![-62.0; cfg.n_subchannels],
-                cut,
+                cut: cut.into(),
             };
             let s = prob.stage_latencies(&d);
             let expect = s.server_fp + s.server_bp + s.broadcast;
@@ -496,5 +567,105 @@ mod tests {
                 "cut {cut}: {got} vs {expect}"
             );
         }
+    }
+
+    #[test]
+    fn hetero_objective_bitwise_matches_reference() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = default_prob(&cfg, &profile, &dep, &ch);
+        let mut ev = Evaluator::new(&prob);
+        let c = cfg.n_clients;
+        let alloc = round_robin(&cfg);
+        let psd = vec![-62.0; cfg.n_subchannels];
+        // Mixed assignment spanning the candidate set.
+        let cands = &profile.cut_candidates;
+        let cuts: Vec<usize> =
+            (0..c).map(|i| cands[i % cands.len()]).collect();
+        let d = Decision {
+            alloc: alloc.clone(),
+            psd_dbm_hz: psd.clone(),
+            cut: cuts.clone().into(),
+        };
+        let reference = prob.objective(&d);
+        let fast = ev.objective(&d);
+        assert_eq!(
+            fast.to_bits(),
+            reference.to_bits(),
+            "hetero fast {fast} vs reference {reference}"
+        );
+        // All-equal per-client vector is bitwise the scalar objective.
+        for &j in cands {
+            let d_vec = Decision {
+                alloc: alloc.clone(),
+                psd_dbm_hz: psd.clone(),
+                cut: vec![j; c].into(),
+            };
+            let d_uni = Decision {
+                alloc: alloc.clone(),
+                psd_dbm_hz: psd.clone(),
+                cut: j.into(),
+            };
+            assert_eq!(
+                ev.objective(&d_vec).to_bits(),
+                ev.objective(&d_uni).to_bits(),
+                "cut {j}"
+            );
+            assert_eq!(
+                ev.objective(&d_vec).to_bits(),
+                prob.objective(&d_vec).to_bits(),
+                "cut {j} vs reference"
+            );
+        }
+    }
+
+    #[test]
+    fn property_hetero_evaluator_matches_reference() {
+        check("hetero evaluator == reference objective", 30, |g| {
+            let mut cfg = NetworkConfig::default();
+            cfg.n_clients = g.usize_in(1, 6);
+            cfg.n_subchannels = cfg.n_clients + g.usize_in(0, 10);
+            cfg.f_server = g.f64_in(1e9, 9e9);
+            let profile = resnet18::profile();
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let dep = Deployment::generate(&cfg, &mut rng);
+            let ch = ChannelRealization::average(&dep);
+            let phi = *g.choose(&[0.0, 0.5, 1.0]);
+            let batch = g.usize_in(1, 128);
+            let prob = Problem {
+                cfg: &cfg,
+                profile: &profile,
+                dep: &dep,
+                ch: &ch,
+                batch,
+                phi,
+            };
+            let mut ev = Evaluator::new(&prob);
+            let mut alloc = Allocation::empty(cfg.n_subchannels);
+            for k in 0..cfg.n_subchannels {
+                alloc.assign(k, g.usize_in(0, cfg.n_clients - 1));
+            }
+            let psd: Vec<f64> = (0..cfg.n_subchannels)
+                .map(|_| g.f64_in(-78.0, -55.0))
+                .collect();
+            let cuts: Vec<usize> = (0..cfg.n_clients)
+                .map(|_| *g.choose(&profile.cut_candidates))
+                .collect();
+            let d = Decision {
+                alloc,
+                psd_dbm_hz: psd,
+                cut: cuts.clone().into(),
+            };
+            let reference = prob.objective(&d);
+            let fast = ev.objective(&d);
+            assert_eq!(
+                fast.to_bits(),
+                reference.to_bits(),
+                "fast {fast} vs reference {reference} (C={} cuts={cuts:?} \
+                 phi={phi})",
+                cfg.n_clients
+            );
+        });
     }
 }

@@ -284,7 +284,7 @@ fn rates_for(prob: &Problem, alloc: &Allocation, psd: &[f64])
 pub fn allocate_decision(prob: &Problem, psd_dbm_hz: Vec<f64>, cut: usize)
     -> Decision {
     let alloc = allocate(prob, &psd_dbm_hz, cut);
-    Decision { alloc, psd_dbm_hz, cut }
+    Decision { alloc, psd_dbm_hz, cut: cut.into() }
 }
 
 #[cfg(test)]
@@ -350,7 +350,8 @@ mod tests {
         let psd = default_psd(&cfg);
         let d_greedy = allocate_decision(&prob, psd.clone(), 3);
         let rr = crate::optim::test_support::round_robin(&cfg);
-        let d_rr = Decision { alloc: rr, psd_dbm_hz: psd, cut: 3 };
+        let d_rr =
+            Decision { alloc: rr, psd_dbm_hz: psd, cut: 3.into() };
         assert!(
             prob.objective(&d_greedy) <= prob.objective(&d_rr) * 1.001,
             "greedy {} vs rr {}",
@@ -382,7 +383,7 @@ mod tests {
             let d = Decision {
                 alloc: alloc.clone(),
                 psd_dbm_hz: psd.clone(),
-                cut: 3,
+                cut: 3.into(),
             };
             // Clients beyond their budget were frozen; channels dumped on
             // them at the end carry no transmit obligation until the next

@@ -1,0 +1,289 @@
+//! Heterogeneous (per-client) cut-layer optimization.
+//!
+//! The paper's Algorithm 3 picks one cut layer for the whole cohort;
+//! related work (Sun et al. arXiv:2411.13907, Zhang et al.
+//! arXiv:2403.15815) optimizes *per-client* split points under device
+//! heterogeneity. This module adds that pass on top of the uniform
+//! solver rather than replacing it:
+//!
+//! 1. [`solve`] first runs the uniform BCD ([`bcd::solve`]) — the
+//!    retained reference oracle — to obtain the uniform optimum
+//!    `(r*, p*, j*)`.
+//! 2. [`refine_with`] then coordinate-descends over the per-client cut
+//!    vector at *fixed* `(r*, p*)` (link rates do not depend on the cut,
+//!    so the precomputed rates stay valid), initialized at
+//!    `[j*; C]` and accepting a move only if it *strictly* lowers the
+//!    evaluator objective.
+//!
+//! Because the initial vector is all-equal, its evaluation dispatches
+//! bitwise to the uniform objective, and every accepted move strictly
+//! decreases it — so the hetero objective is **provably ≤ the uniform
+//! optimum**, with exact equality when no mixed assignment helps.
+
+use crate::error::Result;
+
+use super::bcd::{self, BcdOptions};
+use super::eval::Evaluator;
+use super::{CutAssignment, Decision, Problem};
+
+/// Options for the heterogeneous-cut pass.
+#[derive(Debug, Clone)]
+pub struct HeteroOptions {
+    /// Options for the uniform BCD that seeds the refinement.
+    pub bcd: BcdOptions,
+    /// Max full client sweeps of the coordinate descent (each sweep
+    /// tries every candidate cut for every client).
+    pub max_sweeps: usize,
+    /// Restrict the per-client search to these cut candidates (`None`
+    /// searches the full profile candidate set). The training driver
+    /// passes the four SplitNet-mappable layers here so a refined vector
+    /// is always executable by the runtime, not just analytically better.
+    pub candidates: Option<Vec<usize>>,
+}
+
+impl Default for HeteroOptions {
+    fn default() -> Self {
+        HeteroOptions {
+            bcd: BcdOptions::default(),
+            max_sweeps: 4,
+            candidates: None,
+        }
+    }
+}
+
+/// Outcome of the heterogeneous-cut solve.
+#[derive(Debug, Clone)]
+pub struct HeteroResult {
+    /// Refined decision; `cut` is `Uniform(j*)` when no mixed assignment
+    /// beat the uniform optimum.
+    pub decision: Decision,
+    /// Objective of `decision` (eq. 23, mixed-cut extension).
+    pub objective: f64,
+    /// The uniform optimum the refinement started from.
+    pub uniform_objective: f64,
+    /// The uniform optimum's cut layer j*.
+    pub uniform_cut: usize,
+    /// Whether any per-client move was accepted (`objective <
+    /// uniform_objective` exactly when true).
+    pub improved: bool,
+    /// Coordinate-descent sweeps performed.
+    pub sweeps: usize,
+}
+
+/// Uniform BCD followed by the per-client refinement.
+pub fn solve(prob: &Problem, opts: HeteroOptions) -> Result<HeteroResult> {
+    let mut ev = Evaluator::new(prob);
+    let uniform = bcd::solve_with(prob, &mut ev, opts.bcd)?;
+    refine_with(prob, &ev, &uniform.decision, opts)
+}
+
+/// Coordinate descent over per-client cuts at fixed allocation + power.
+///
+/// `seed` must carry a uniform cut assignment (it is the uniform-solver
+/// incumbent). The returned objective is ≤ the seed's objective *by
+/// construction*: the initial all-equal vector evaluates bitwise equal
+/// to the uniform objective, and only strictly-improving moves are
+/// accepted.
+pub fn refine_with(prob: &Problem, ev: &Evaluator, seed: &Decision,
+                   opts: HeteroOptions) -> Result<HeteroResult> {
+    let c = prob.n_clients();
+    let uniform_cut = seed.uniform_cut()?;
+    let mut up = Vec::new();
+    let mut dn = Vec::new();
+    ev.fill_rates(&seed.alloc, &seed.psd_dbm_hz, &mut up, &mut dn);
+
+    let mut cuts = vec![uniform_cut; c];
+    // Bitwise equal to the uniform objective (all-equal dispatch).
+    let uniform_objective = ev.objective_with_rates_cuts(&cuts, &up, &dn);
+    let mut best = uniform_objective;
+    let cands: Vec<usize> = opts
+        .candidates
+        .clone()
+        .unwrap_or_else(|| ev.cut_candidates().to_vec());
+
+    let mut sweeps = 0;
+    let mut improved = false;
+    for _ in 0..opts.max_sweeps {
+        sweeps += 1;
+        let mut changed = false;
+        for i in 0..c {
+            let keep = cuts[i];
+            let mut best_j = keep;
+            for &j in &cands {
+                if j == keep {
+                    continue;
+                }
+                cuts[i] = j;
+                let t = ev.objective_with_rates_cuts(&cuts, &up, &dn);
+                if t < best {
+                    best = t;
+                    best_j = j;
+                }
+            }
+            cuts[i] = best_j;
+            if best_j != keep {
+                changed = true;
+                improved = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Normalize all-equal vectors back to Uniform so the decision is
+    // indistinguishable from the uniform solver's when nothing improved.
+    let assignment = CutAssignment::normalized(cuts);
+    let decision = Decision {
+        alloc: seed.alloc.clone(),
+        psd_dbm_hz: seed.psd_dbm_hz.clone(),
+        cut: assignment,
+    };
+    prob.check_feasible(&decision)?;
+    Ok(HeteroResult {
+        decision,
+        objective: best,
+        uniform_objective,
+        uniform_cut,
+        improved,
+        sweeps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{ChannelRealization, Deployment};
+    use crate::config::NetworkConfig;
+    use crate::optim::test_support::fixture;
+    use crate::profile::resnet18;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn refinement_never_worse_than_uniform() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let res = solve(&prob, HeteroOptions::default()).unwrap();
+        assert!(
+            res.objective <= res.uniform_objective,
+            "hetero {} > uniform {}",
+            res.objective,
+            res.uniform_objective
+        );
+        // `improved` is exact: false means bitwise-equal objectives and a
+        // uniform decision.
+        if !res.improved {
+            assert_eq!(
+                res.objective.to_bits(),
+                res.uniform_objective.to_bits()
+            );
+            assert_eq!(res.decision.cut, res.uniform_cut);
+        } else {
+            assert!(res.objective < res.uniform_objective);
+        }
+        prob.check_feasible(&res.decision).unwrap();
+    }
+
+    #[test]
+    fn refined_objective_matches_reference_evaluation() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let res = solve(&prob, HeteroOptions::default()).unwrap();
+        let reference = prob.objective(&res.decision);
+        assert_eq!(
+            res.objective.to_bits(),
+            reference.to_bits(),
+            "refined {} vs reference {}",
+            res.objective,
+            reference
+        );
+    }
+
+    #[test]
+    fn strict_gain_under_strong_compute_heterogeneity() {
+        // One order-of-magnitude compute spread: the slow clients want a
+        // shallow cut, the fast ones a deep one — a mixed assignment must
+        // strictly beat any single cut at fixed allocation/power.
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let mut rng = Rng::new(17);
+        let mut dep = Deployment::generate(&cfg, &mut rng);
+        for (i, cl) in dep.clients.iter_mut().enumerate() {
+            cl.f_client = if i % 2 == 0 { 2e8 } else { 4e9 };
+        }
+        dep.refresh_f_clients();
+        let ch = ChannelRealization::average(&dep);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let res = solve(&prob, HeteroOptions::default()).unwrap();
+        assert!(
+            res.improved,
+            "expected a strict hetero gain; uniform {} hetero {}",
+            res.uniform_objective,
+            res.objective
+        );
+        assert!(res.objective < res.uniform_objective);
+        assert!(res.decision.cut.as_uniform().is_none());
+    }
+
+    #[test]
+    fn property_hetero_dominates_uniform() {
+        check("hetero objective <= uniform optimum", 15, |g| {
+            let mut cfg = NetworkConfig::default();
+            cfg.n_clients = g.usize_in(2, 6);
+            cfg.n_subchannels = cfg.n_clients + g.usize_in(1, 12);
+            cfg.f_server = g.f64_in(1e9, 9e9);
+            let profile = resnet18::profile();
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let dep = Deployment::generate(&cfg, &mut rng);
+            let ch = ChannelRealization::average(&dep);
+            let prob = Problem {
+                cfg: &cfg,
+                profile: &profile,
+                dep: &dep,
+                ch: &ch,
+                batch: g.usize_in(8, 96),
+                phi: *g.choose(&[0.0, 0.5, 1.0]),
+            };
+            let opts = HeteroOptions {
+                bcd: BcdOptions { max_iters: 8, tol: 1e-6 },
+                max_sweeps: 3,
+                candidates: None,
+            };
+            let res = solve(&prob, opts).unwrap();
+            assert!(
+                res.objective <= res.uniform_objective,
+                "hetero {} > uniform {} (C={})",
+                res.objective,
+                res.uniform_objective,
+                cfg.n_clients
+            );
+            prob.check_feasible(&res.decision).unwrap();
+        });
+    }
+}

@@ -46,7 +46,7 @@ mod tests {
         let d = Decision {
             alloc: round_robin(&cfg),
             psd_dbm_hz: vec![-62.0; 20],
-            cut: 5,
+            cut: 5.into(),
         };
         let direct = prob.objective(&d);
         let tilde = objective_tilde(&prob, &d);
@@ -69,7 +69,7 @@ mod tests {
         let d = Decision {
             alloc: round_robin(&cfg),
             psd_dbm_hz: vec![-62.0; 20],
-            cut: 5,
+            cut: 5.into(),
         };
         let (t1, t2) = optimal_t1_t2(&prob, &d);
         let s = prob.stage_latencies(&d);

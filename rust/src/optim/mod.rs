@@ -28,12 +28,213 @@ pub mod lp;
 pub mod milp;
 pub mod power;
 
+pub mod hetero;
+
 use crate::channel::rate::{self, Allocation};
 use crate::channel::{ChannelRealization, Deployment};
 use crate::config::{dbm_to_w, NetworkConfig};
 use crate::error::{Error, Result};
-use crate::latency::{epsl_stage_latencies, LatencyInputs, StageLatencies};
+use crate::latency::{
+    epsl_stage_latencies, epsl_stage_latencies_hetero, LatencyInputs,
+    StageLatencies,
+};
 use crate::profile::NetworkProfile;
+
+/// Per-client cut-layer assignment μ.
+///
+/// `Uniform(j)` is the paper's Alg. 3 decision (one cut for the whole
+/// cohort) and the fast path everywhere: any all-equal assignment
+/// normalizes to it through [`CutAssignment::as_uniform`], which every
+/// consumer uses to dispatch to the literal single-cut code path — so a
+/// `PerClient` vector whose entries agree is *bit-identical* to the
+/// scalar it replaces, not merely numerically close.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CutAssignment {
+    /// Every client splits at layer j.
+    Uniform(usize),
+    /// Client i splits at layer `v[i]`; `v.len()` must equal the client
+    /// count of the problem the decision belongs to.
+    PerClient(Vec<usize>),
+}
+
+impl CutAssignment {
+    /// `Some(j)` iff every client splits at the same layer j (covers
+    /// `Uniform(j)` and all-equal `PerClient` vectors). This is *the*
+    /// dispatch point that keeps uniform assignments on the pre-existing
+    /// single-cut code paths.
+    pub fn as_uniform(&self) -> Option<usize> {
+        match self {
+            CutAssignment::Uniform(j) => Some(*j),
+            CutAssignment::PerClient(v) => match v.split_first() {
+                Some((first, rest)) if rest.iter().all(|c| c == first) => {
+                    Some(*first)
+                }
+                _ => None,
+            },
+        }
+    }
+
+    /// Cut layer of client `i`. For `PerClient` the index must be in
+    /// range (assignments are validated against the client count before
+    /// they reach any consumer).
+    pub fn cut_of(&self, i: usize) -> usize {
+        match self {
+            CutAssignment::Uniform(j) => *j,
+            CutAssignment::PerClient(v) => v[i],
+        }
+    }
+
+    /// Materialize the per-client vector for `c` clients.
+    pub fn cuts_for(&self, c: usize) -> Vec<usize> {
+        match self {
+            CutAssignment::Uniform(j) => vec![*j; c],
+            CutAssignment::PerClient(v) => v.clone(),
+        }
+    }
+
+    /// Shallowest cut in the assignment.
+    pub fn min_cut(&self) -> usize {
+        match self {
+            CutAssignment::Uniform(j) => *j,
+            CutAssignment::PerClient(v) => {
+                v.iter().copied().min().unwrap_or(1)
+            }
+        }
+    }
+
+    /// Deepest cut in the assignment.
+    pub fn max_cut(&self) -> usize {
+        match self {
+            CutAssignment::Uniform(j) => *j,
+            CutAssignment::PerClient(v) => {
+                v.iter().copied().max().unwrap_or(1)
+            }
+        }
+    }
+
+    /// Client indices grouped by cut, ascending in cut layer. Group
+    /// member lists preserve client order.
+    pub fn groups(&self, c: usize) -> Vec<(usize, Vec<usize>)> {
+        let cuts = self.cuts_for(c);
+        let mut distinct: Vec<usize> = cuts.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        distinct
+            .into_iter()
+            .map(|j| {
+                let members: Vec<usize> = (0..cuts.len())
+                    .filter(|&i| cuts[i] == j)
+                    .collect();
+                (j, members)
+            })
+            .collect()
+    }
+
+    /// Validate shape (len == C for `PerClient`) and membership of every
+    /// cut in `candidates`. Typed `Error::Config` so config/manifest
+    /// layers can reject bad assignments at parse time.
+    pub fn validate(&self, n_clients: usize, candidates: &[usize])
+        -> Result<()> {
+        match self {
+            CutAssignment::Uniform(j) => {
+                if !candidates.contains(j) {
+                    return Err(Error::Config(format!(
+                        "cut {j} not a candidate (candidates: \
+                         {candidates:?})"
+                    )));
+                }
+            }
+            CutAssignment::PerClient(v) => {
+                if v.len() != n_clients {
+                    return Err(Error::Config(format!(
+                        "cut vector has {} entries but the deployment \
+                         has {n_clients} client(s)",
+                        v.len()
+                    )));
+                }
+                for (i, j) in v.iter().enumerate() {
+                    if !candidates.contains(j) {
+                        return Err(Error::Config(format!(
+                            "client {i}: cut {j} not a candidate \
+                             (candidates: {candidates:?})"
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonicalize a per-client vector: all-equal collapses to
+    /// `Uniform(j)` so downstream `as_uniform` dispatch — and equality
+    /// with a uniform-solver decision — is exact.
+    pub fn normalized(cuts: Vec<usize>) -> CutAssignment {
+        match CutAssignment::PerClient(cuts.clone()).as_uniform() {
+            Some(j) => CutAssignment::Uniform(j),
+            None => CutAssignment::PerClient(cuts),
+        }
+    }
+
+    /// Compact label: `"2"` for uniform, `"1-2-2-3"` per client
+    /// ('-'-separated so it stays CSV-safe).
+    pub fn label(&self) -> String {
+        match self.as_uniform() {
+            Some(j) => j.to_string(),
+            None => match self {
+                CutAssignment::PerClient(v) => v
+                    .iter()
+                    .map(|j| j.to_string())
+                    .collect::<Vec<_>>()
+                    .join("-"),
+                CutAssignment::Uniform(j) => j.to_string(),
+            },
+        }
+    }
+
+    /// Parse a CLI/TOML cut spec: `"2"` (uniform) or `"1-2-2-3"`
+    /// (per-client).
+    pub fn parse(s: &str) -> Result<CutAssignment> {
+        let parts: Vec<&str> = s.split('-').collect();
+        let mut cuts = Vec::with_capacity(parts.len());
+        for p in &parts {
+            cuts.push(p.trim().parse::<usize>().map_err(|_| {
+                Error::Config(format!(
+                    "bad cut spec '{s}' (expected e.g. \"2\" or \
+                     \"1-2-2-3\")"
+                ))
+            })?);
+        }
+        match cuts.as_slice() {
+            [] => Err(Error::Config(format!("empty cut spec '{s}'"))),
+            [j] => Ok(CutAssignment::Uniform(*j)),
+            _ => Ok(CutAssignment::PerClient(cuts)),
+        }
+    }
+}
+
+impl From<usize> for CutAssignment {
+    fn from(j: usize) -> Self {
+        CutAssignment::Uniform(j)
+    }
+}
+
+impl From<Vec<usize>> for CutAssignment {
+    fn from(v: Vec<usize>) -> Self {
+        CutAssignment::PerClient(v)
+    }
+}
+
+impl std::fmt::Display for CutAssignment {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+impl PartialEq<usize> for CutAssignment {
+    fn eq(&self, other: &usize) -> bool {
+        self.as_uniform() == Some(*other)
+    }
+}
 
 /// One resource-management problem instance (fixed deployment + channel).
 #[derive(Debug, Clone)]
@@ -53,8 +254,22 @@ pub struct Decision {
     pub alloc: Allocation,
     /// Per-subchannel transmit PSD (dBm/Hz).
     pub psd_dbm_hz: Vec<f64>,
-    /// Cut layer j.
-    pub cut: usize,
+    /// Cut-layer assignment μ (uniform or per-client).
+    pub cut: CutAssignment,
+}
+
+impl Decision {
+    /// The single cut layer when the assignment is uniform (the paper's
+    /// original decision space); `Error::Optim` otherwise.
+    pub fn uniform_cut(&self) -> Result<usize> {
+        self.cut.as_uniform().ok_or_else(|| {
+            Error::Optim(format!(
+                "decision has per-client cuts ({}) where a uniform cut \
+                 is required",
+                self.cut
+            ))
+        })
+    }
 }
 
 impl<'a> Problem<'a> {
@@ -91,11 +306,31 @@ impl<'a> Problem<'a> {
         if !d.alloc.is_complete() {
             return Err(Error::Optim("C2: unassigned subchannel".into()));
         }
-        if !self.profile.cut_candidates.contains(&d.cut) {
-            return Err(Error::Optim(format!(
-                "C3/C4: cut {} not a candidate",
-                d.cut
-            )));
+        match &d.cut {
+            CutAssignment::Uniform(j) => {
+                if !self.profile.cut_candidates.contains(j) {
+                    return Err(Error::Optim(format!(
+                        "C3/C4: cut {j} not a candidate"
+                    )));
+                }
+            }
+            CutAssignment::PerClient(v) => {
+                if v.len() != self.n_clients() {
+                    return Err(Error::Optim(format!(
+                        "C3/C4: cut vector has {} entries for {} \
+                         client(s)",
+                        v.len(),
+                        self.n_clients()
+                    )));
+                }
+                for (i, j) in v.iter().enumerate() {
+                    if !self.profile.cut_candidates.contains(j) {
+                        return Err(Error::Optim(format!(
+                            "C3/C4: client {i} cut {j} not a candidate"
+                        )));
+                    }
+                }
+            }
         }
         let p_max = dbm_to_w(self.cfg.p_max_dbm);
         for i in 0..self.n_clients() {
@@ -126,11 +361,15 @@ impl<'a> Problem<'a> {
     }
 
     /// Full EPSL stage latencies for a decision (objective eq. 23).
+    ///
+    /// Uniform (and all-equal per-client) assignments take the literal
+    /// single-cut closed form; mixed assignments take the grouped-by-cut
+    /// extension.
     pub fn stage_latencies(&self, d: &Decision) -> StageLatencies {
         let (up, dn, bc) = self.rates(d);
         let inp = LatencyInputs {
             profile: self.profile,
-            cut: d.cut,
+            cut: d.cut.min_cut(),
             batch: self.batch,
             phi: self.phi,
             f_server: self.cfg.f_server,
@@ -141,7 +380,16 @@ impl<'a> Problem<'a> {
             downlink: &dn,
             broadcast: bc,
         };
-        epsl_stage_latencies(&inp)
+        match d.cut.as_uniform() {
+            Some(j) => {
+                let inp = LatencyInputs { cut: j, ..inp };
+                epsl_stage_latencies(&inp)
+            }
+            None => epsl_stage_latencies_hetero(
+                &inp,
+                &d.cut.cuts_for(self.n_clients()),
+            ),
+        }
     }
 
     /// Objective value T(r, μ, p).
@@ -231,21 +479,21 @@ mod tests {
         let d = Decision {
             alloc: Allocation::empty(cfg.n_subchannels),
             psd_dbm_hz: vec![-60.0; cfg.n_subchannels],
-            cut: 3,
+            cut: 3.into(),
         };
         assert!(prob.check_feasible(&d).is_err());
         // complete, sane powers
         let d = Decision {
             alloc: round_robin(&cfg),
             psd_dbm_hz: vec![-60.0; cfg.n_subchannels],
-            cut: 3,
+            cut: 3.into(),
         };
         prob.check_feasible(&d).unwrap();
         // hot PSD violates C5: -35 dBm/Hz * 10 MHz = 35 dBm per channel.
         let d_hot = Decision { psd_dbm_hz: vec![-35.0; 20], ..d.clone() };
         assert!(prob.check_feasible(&d_hot).is_err());
         // bad cut (last layer)
-        let d_cut = Decision { cut: 18, ..d };
+        let d_cut = Decision { cut: 18.into(), ..d };
         assert!(prob.check_feasible(&d_cut).is_err());
     }
 
@@ -262,10 +510,10 @@ mod tests {
             batch: 64,
             phi: 0.5,
         };
-        let mk = |cut| Decision {
+        let mk = |cut: usize| Decision {
             alloc: round_robin(&cfg),
             psd_dbm_hz: vec![-60.0; 20],
-            cut,
+            cut: cut.into(),
         };
         let t1 = prob.objective(&mk(1));
         let t9 = prob.objective(&mk(9));
@@ -288,7 +536,8 @@ mod tests {
         };
         let mut alloc = Allocation::empty(20);
         alloc.assign(0, 0);
-        let d = Decision { alloc, psd_dbm_hz: vec![-60.0; 20], cut: 3 };
+        let d =
+            Decision { alloc, psd_dbm_hz: vec![-60.0; 20], cut: 3.into() };
         // -60 dBm/Hz over 10 MHz = -60 + 70 = 10 dBm = 10 mW.
         let pw = prob.client_power_w(&d, 0);
         assert!((pw - 0.01).abs() < 1e-6, "{pw}");
@@ -325,5 +574,114 @@ mod tests {
         );
         let via_coeff = cfg.subchannel_bw_hz * (1.0 + p_lin * coeff).log2();
         assert!((direct - via_coeff).abs() / direct < 1e-9);
+    }
+
+    #[test]
+    fn cut_assignment_uniform_dispatch() {
+        assert_eq!(CutAssignment::Uniform(3).as_uniform(), Some(3));
+        assert_eq!(
+            CutAssignment::PerClient(vec![2, 2, 2]).as_uniform(),
+            Some(2)
+        );
+        assert_eq!(
+            CutAssignment::PerClient(vec![1, 2, 2]).as_uniform(),
+            None
+        );
+        assert_eq!(CutAssignment::PerClient(vec![]).as_uniform(), None);
+        // PartialEq<usize> keeps scalar assertions working.
+        assert_eq!(CutAssignment::Uniform(4), 4);
+        assert_eq!(CutAssignment::PerClient(vec![4, 4]), 4);
+        assert!(CutAssignment::PerClient(vec![1, 4]) != 4);
+    }
+
+    #[test]
+    fn cut_assignment_groups_and_extremes() {
+        let a = CutAssignment::PerClient(vec![3, 1, 3, 2]);
+        assert_eq!(a.min_cut(), 1);
+        assert_eq!(a.max_cut(), 3);
+        assert_eq!(a.cut_of(2), 3);
+        assert_eq!(a.groups(4), vec![
+            (1, vec![1]),
+            (2, vec![3]),
+            (3, vec![0, 2]),
+        ]);
+        let u = CutAssignment::Uniform(2);
+        assert_eq!(u.groups(3), vec![(2, vec![0, 1, 2])]);
+        assert_eq!(u.cuts_for(3), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn cut_assignment_labels_and_parse() {
+        assert_eq!(CutAssignment::Uniform(2).label(), "2");
+        // All-equal per-client vectors label as the uniform scalar.
+        assert_eq!(CutAssignment::PerClient(vec![2, 2]).label(), "2");
+        assert_eq!(
+            CutAssignment::PerClient(vec![1, 2, 2, 3]).label(),
+            "1-2-2-3"
+        );
+        assert_eq!(
+            CutAssignment::parse("2").unwrap(),
+            CutAssignment::Uniform(2)
+        );
+        assert_eq!(
+            CutAssignment::parse("1-2-2-3").unwrap(),
+            CutAssignment::PerClient(vec![1, 2, 2, 3])
+        );
+        assert!(CutAssignment::parse("hi").is_err());
+        assert!(CutAssignment::parse("1-x").is_err());
+    }
+
+    #[test]
+    fn cut_assignment_validate_typed_errors() {
+        let cands = [1, 2, 3, 4];
+        CutAssignment::Uniform(2).validate(4, &cands).unwrap();
+        CutAssignment::PerClient(vec![1, 4, 2, 3])
+            .validate(4, &cands)
+            .unwrap();
+        let short = CutAssignment::PerClient(vec![1, 2]).validate(4, &cands);
+        assert!(matches!(short, Err(Error::Config(_))), "{short:?}");
+        let bad = CutAssignment::PerClient(vec![1, 2, 9, 3])
+            .validate(4, &cands);
+        assert!(matches!(bad, Err(Error::Config(_))), "{bad:?}");
+        let off = CutAssignment::Uniform(7).validate(4, &cands);
+        assert!(matches!(off, Err(Error::Config(_))), "{off:?}");
+    }
+
+    #[test]
+    fn mixed_cut_feasibility_and_latency() {
+        let cfg = NetworkConfig::default();
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = Problem {
+            cfg: &cfg,
+            profile: &profile,
+            dep: &dep,
+            ch: &ch,
+            batch: 64,
+            phi: 0.5,
+        };
+        let c = prob.n_clients();
+        // All-equal per-client vector is bit-identical to the scalar.
+        let d_uni = Decision {
+            alloc: round_robin(&cfg),
+            psd_dbm_hz: vec![-60.0; 20],
+            cut: 4.into(),
+        };
+        let d_vec = Decision { cut: vec![4; c].into(), ..d_uni.clone() };
+        prob.check_feasible(&d_vec).unwrap();
+        assert_eq!(
+            prob.objective(&d_uni).to_bits(),
+            prob.objective(&d_vec).to_bits()
+        );
+        // A genuinely mixed assignment is feasible and positive.
+        let mut cuts = vec![4; c];
+        cuts[0] = 1;
+        cuts[1 % c] = 10;
+        let d_mix = Decision { cut: cuts.into(), ..d_uni.clone() };
+        prob.check_feasible(&d_mix).unwrap();
+        assert!(prob.objective(&d_mix) > 0.0);
+        // Wrong-length vectors are infeasible.
+        let d_short = Decision { cut: vec![4; c - 1].into(), ..d_uni };
+        assert!(prob.check_feasible(&d_short).is_err());
     }
 }

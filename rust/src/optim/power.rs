@@ -337,7 +337,7 @@ mod tests {
         let d = Decision {
             alloc,
             psd_dbm_hz: sol.psd_dbm_hz.clone(),
-            cut,
+            cut: cut.into(),
         };
         prob.check_feasible(&d).unwrap();
         // T1 reported must match the realized uplink-phase straggler time.
@@ -382,7 +382,7 @@ mod tests {
         let d_uni = Decision {
             alloc: alloc.clone(),
             psd_dbm_hz: psd_uni,
-            cut,
+            cut: cut.into(),
         };
         prob.check_feasible(&d_uni).unwrap();
         let t1_uni = prob.stage_latencies(&d_uni).uplink_phase_max();

@@ -151,6 +151,40 @@ impl FamilyManifest {
         self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
     }
 
+    /// Validate a per-client cut vector against this family's exported
+    /// artifacts before any worker touches it: the vector must have one
+    /// entry per client, and every cut must carry a full artifact set
+    /// (client_fwd/client_step entries, parameter split, smashed shape).
+    /// A user-supplied vector that fails is a configuration error, not a
+    /// corrupt manifest — hence [`Error::Config`] and not a worker panic
+    /// deep inside the round.
+    pub fn validate_cut_vector(&self, cuts: &[usize], n_clients: usize)
+        -> Result<()> {
+        if cuts.len() != n_clients {
+            return Err(Error::Config(format!(
+                "cut vector has {} entr{} but the run has {n_clients} \
+                 client(s)",
+                cuts.len(),
+                if cuts.len() == 1 { "y" } else { "ies" }
+            )));
+        }
+        for &cut in cuts {
+            let complete = self.client_fwd.contains_key(&cut)
+                && self.client_step.contains_key(&cut)
+                && self.client_param_count.contains_key(&cut)
+                && self.smashed_shape.contains_key(&cut);
+            if !complete {
+                return Err(Error::Config(format!(
+                    "family '{}' exports no artifacts for cut {cut} \
+                     (available cuts: {:?})",
+                    self.name,
+                    self.cuts()
+                )));
+            }
+        }
+        Ok(())
+    }
+
     /// Reject degenerate shapes before they reach the kernels. The
     /// splitnet stages halve the spatial dims twice, so `img < 4`
     /// produces zero-sized feature maps whose SAME-padding arithmetic
@@ -432,6 +466,32 @@ mod tests {
                      r#""smashed_shape": {"2": [16,0,8]}"#);
         let e = Manifest::parse(&bad_smash).unwrap_err();
         assert!(e.to_string().contains("smashed_shape"), "{e}");
+    }
+
+    #[test]
+    fn cut_vectors_validated_against_exports() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let fam = m.family("mnist").unwrap();
+        // Every entry exported → ok.
+        assert!(fam.validate_cut_vector(&[2, 2, 2], 3).is_ok());
+        // Length must match the cohort.
+        let e = fam.validate_cut_vector(&[2, 2], 3).unwrap_err();
+        assert!(e.to_string().contains("2 entries"), "{e}");
+        assert!(e.to_string().contains("3 client"), "{e}");
+        let e = fam.validate_cut_vector(&[2], 3).unwrap_err();
+        assert!(e.to_string().contains("1 entry"), "{e}");
+        // A cut with no exported artifacts is rejected by name.
+        let e = fam.validate_cut_vector(&[2, 3, 2], 3).unwrap_err();
+        assert!(
+            e.to_string().contains("no artifacts for cut 3"),
+            "{e}"
+        );
+        assert!(e.to_string().contains("available cuts"), "{e}");
+        // The real native manifest accepts any vector over 1..=4.
+        let native = crate::runtime::native::manifest();
+        let fam = native.family("mnist").unwrap();
+        assert!(fam.validate_cut_vector(&[1, 2, 3, 4], 4).is_ok());
+        assert!(fam.validate_cut_vector(&[1, 5], 2).is_err());
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::channel::ChannelRealization;
 use crate::latency::frameworks::Framework;
 use crate::latency::LatencyInputs;
 use crate::optim::eval::Evaluator;
-use crate::optim::{bcd, Decision, Problem};
+use crate::optim::{bcd, CutAssignment, Decision, Problem};
 use crate::profile::NetworkProfile;
 use crate::timeline::{self, Mode};
 use crate::util::par;
@@ -79,7 +79,7 @@ pub struct RoundOutcome {
 /// dynamic-channel `SimLatency`).
 #[derive(Debug, Clone)]
 pub struct RoundRates {
-    pub cut: usize,
+    pub cut: CutAssignment,
     pub f_clients: Vec<f64>,
     pub uplink: Vec<f64>,
     pub downlink: Vec<f64>,
@@ -137,20 +137,25 @@ fn eval_round(sc: &Scenario, profile: &NetworkProfile,
     let mut dn = Vec::new();
     ev.fill_rates(&d.alloc, &d.psd_dbm_hz, &mut up, &mut dn);
     let rates = RoundRates {
-        cut: d.cut,
+        cut: d.cut.clone(),
         f_clients: round.dep.f_clients().to_vec(),
         uplink: up,
         downlink: dn,
         broadcast: ev.broadcast_rate(),
     };
-    let t = match opts.timeline_mode {
-        Mode::Barrier => {
-            ev.objective_with_rates(d.cut, &rates.uplink, &rates.downlink)
+    let t = match (opts.timeline_mode, d.cut.as_uniform()) {
+        (Mode::Barrier, Some(j)) => {
+            ev.objective_with_rates(j, &rates.uplink, &rates.downlink)
         }
-        Mode::Pipelined => {
+        (Mode::Barrier, None) => ev.objective_with_rates_cuts(
+            &d.cut.cuts_for(prob.n_clients()),
+            &rates.uplink,
+            &rates.downlink,
+        ),
+        (Mode::Pipelined, uni) => {
             let inp = LatencyInputs {
                 profile,
-                cut: d.cut,
+                cut: d.cut.min_cut(),
                 batch: opts.batch,
                 phi: opts.phi,
                 f_server: sc.net.f_server,
@@ -161,12 +166,25 @@ fn eval_round(sc: &Scenario, profile: &NetworkProfile,
                 downlink: &rates.downlink,
                 broadcast: rates.broadcast,
             };
-            timeline::simulate(
-                Framework::Epsl { phi: opts.phi },
-                &inp,
-                Mode::Pipelined,
-            )
-            .total
+            let fw = Framework::Epsl { phi: opts.phi };
+            match uni {
+                Some(j) => timeline::simulate(
+                    fw,
+                    &LatencyInputs { cut: j, ..inp },
+                    Mode::Pipelined,
+                )
+                .total,
+                // shape_for_cuts only fails for exchange frameworks,
+                // never for EPSL.
+                None => timeline::simulate_cuts(
+                    fw,
+                    &inp,
+                    &d.cut.cuts_for(prob.n_clients()),
+                    Mode::Pipelined,
+                )
+                .map(|t| t.total)
+                .unwrap_or(f64::INFINITY),
+            }
         }
     };
     (t, rates)

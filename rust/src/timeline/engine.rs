@@ -48,16 +48,29 @@ pub struct RoundTimeline {
 /// Simulate one round of `fw` under `inp` in the given mode.
 pub fn simulate(fw: Framework, inp: &LatencyInputs, mode: Mode)
     -> RoundTimeline {
-    let shape = shape_for(fw, inp);
+    simulate_shape(&shape_for(fw, inp), mode)
+}
+
+/// Execute an already-built [`RoundShape`] in the given mode — the single
+/// dispatch both [`simulate`] and the mixed-cut entry point share.
+pub fn simulate_shape(shape: &RoundShape, mode: Mode) -> RoundTimeline {
     match mode {
-        Mode::Barrier => run_barrier(&shape, Mode::Barrier),
+        Mode::Barrier => run_barrier(shape, Mode::Barrier),
         // Vanilla SL is strictly sequential — nothing overlaps, so the
         // pipelined schedule degenerates to the barrier one.
         Mode::Pipelined if shape.sequential => {
-            run_barrier(&shape, Mode::Pipelined)
+            run_barrier(shape, Mode::Pipelined)
         }
-        Mode::Pipelined => run_pipelined(&shape),
+        Mode::Pipelined => run_pipelined(shape),
     }
+}
+
+/// Simulate one mixed-cut round (client i splits at `cuts[i]`). Only the
+/// parallel frameworks are supported; an all-equal vector is
+/// bit-identical to [`simulate`] at that cut.
+pub fn simulate_cuts(fw: Framework, inp: &LatencyInputs, cuts: &[usize],
+                     mode: Mode) -> crate::error::Result<RoundTimeline> {
+    Ok(simulate_shape(&super::plan::shape_for_cuts(fw, inp, cuts)?, mode))
 }
 
 /// Barrier-mode totals (pre-exchange, final) in the eq. 23 association —

@@ -32,9 +32,9 @@ pub mod engine;
 pub mod event;
 pub mod plan;
 
-pub use engine::{simulate, RoundTimeline};
+pub use engine::{simulate, simulate_cuts, simulate_shape, RoundTimeline};
 pub use event::{Event, EventKind};
-pub use plan::{shape_for, Exchange, RoundShape};
+pub use plan::{shape_for, shape_for_cuts, Exchange, RoundShape};
 
 use crate::error::{Error, Result};
 

@@ -7,8 +7,9 @@
 //! barrier engine's totals are bit-identical to
 //! `round_latency(fw, inp).round_total()` by construction.
 
+use crate::error::Result;
 use crate::latency::frameworks::{
-    round_latency, sfl_exchange_parts, Framework,
+    round_latency, round_latency_hetero, sfl_exchange_parts, Framework,
 };
 use crate::latency::LatencyInputs;
 
@@ -107,6 +108,27 @@ pub fn shape_for(fw: Framework, inp: &LatencyInputs) -> RoundShape {
     }
 }
 
+/// Build a mixed-cut shape: client i splits at `cuts[i]`. Only the
+/// parallel frameworks are supported (see
+/// [`round_latency_hetero`]); an all-equal vector produces a shape
+/// bit-identical to [`shape_for`] at that cut.
+pub fn shape_for_cuts(fw: Framework, inp: &LatencyInputs, cuts: &[usize])
+    -> Result<RoundShape> {
+    let s = round_latency_hetero(fw, inp, cuts)?;
+    Ok(RoundShape {
+        framework: fw,
+        sequential: false,
+        client_fp: s.client_fp,
+        uplink: s.uplink,
+        server_fp: s.server_fp,
+        server_bp: s.server_bp,
+        broadcast: s.broadcast,
+        downlink: s.downlink,
+        client_bp: s.client_bp,
+        exchange: Exchange::None,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,6 +193,40 @@ mod tests {
             }
             other => panic!("SFL exchange missing: {other:?}"),
         }
+    }
+
+    #[test]
+    fn shape_for_cuts_all_equal_matches_shape_for() {
+        let p = resnet18::profile();
+        let f = [1e9, 2e9, 1.5e9];
+        let up = [1e8; 3];
+        let dn = [1e8; 3];
+        let inp = inputs(&p, &f, &up, &dn);
+        let uni = shape_for(Framework::Epsl { phi: 0.5 }, &inp);
+        let het =
+            shape_for_cuts(Framework::Epsl { phi: 0.5 }, &inp, &[4, 4, 4])
+                .unwrap();
+        assert_eq!(uni, het);
+        // A mixed vector still builds a C-chain parallel shape.
+        let mix =
+            shape_for_cuts(Framework::Epsl { phi: 0.5 }, &inp, &[1, 4, 10])
+                .unwrap();
+        assert_eq!(mix.n_chains(), 3);
+        assert!(!mix.sequential);
+        assert_eq!(mix.exchange, Exchange::None);
+    }
+
+    #[test]
+    fn shape_for_cuts_rejects_exchange_frameworks() {
+        let p = resnet18::profile();
+        let f = [1e9; 2];
+        let up = [1e8; 2];
+        let dn = [1e8; 2];
+        let inp = inputs(&p, &f, &up, &dn);
+        assert!(shape_for_cuts(Framework::Sfl, &inp, &[1, 4]).is_err());
+        assert!(
+            shape_for_cuts(Framework::VanillaSl, &inp, &[1, 4]).is_err()
+        );
     }
 
     #[test]

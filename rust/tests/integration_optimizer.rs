@@ -135,10 +135,11 @@ fn power_then_cut_consistency() {
     // P3 can't improve:
     let (best_cut, _) = cutlayer::solve(&prob, &d.alloc, &d.psd_dbm_hz).unwrap();
     let mut d_cut = d.clone();
-    d_cut.cut = best_cut;
+    d_cut.cut = best_cut.into();
     assert!(prob.objective(&d_cut) >= res.objective - 1e-6);
     // P2 can't improve:
-    if let Ok(sol) = power::solve(&prob, &d.alloc, d.cut) {
+    if let Ok(sol) = power::solve(&prob, &d.alloc, d.uniform_cut().unwrap())
+    {
         let mut d_pow = d.clone();
         d_pow.psd_dbm_hz = sol.psd_dbm_hz;
         assert!(prob.objective(&d_pow) >= res.objective - 1e-6);
@@ -176,7 +177,7 @@ fn property_evaluator_matches_reference_objective_cross_module() {
             .map(|_| g.f64_in(-78.0, -55.0))
             .collect();
         let cut = *g.choose(&profile.cut_candidates);
-        let d = Decision { alloc, psd_dbm_hz: psd, cut };
+        let d = Decision { alloc, psd_dbm_hz: psd, cut: cut.into() };
         let reference = prob.objective(&d);
         let fast = ev.objective(&d);
         assert!(
@@ -241,7 +242,7 @@ fn property_greedy_power_pipeline_feasible() {
         let d = epsl::optim::Decision {
             alloc,
             psd_dbm_hz: sol.psd_dbm_hz,
-            cut,
+            cut: cut.into(),
         };
         prob.check_feasible(&d).unwrap();
         assert!(prob.objective(&d).is_finite());
