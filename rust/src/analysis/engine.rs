@@ -1,0 +1,367 @@
+//! The audit engine: rule scoping by path, test-region tracking,
+//! suppression handling, and the deterministic tree walk.
+//!
+//! Scope model (all paths repo-root-relative, `/`-separated):
+//!
+//! * **R1** applies to `rust/src/**` outside `#[cfg(test)]` / `#[test]`
+//!   regions — benches, integration tests, and examples may panic.
+//! * **R2** applies to the deterministic modules: `optim`, `timeline`,
+//!   `coordinator`, `scenario`, and `runtime/native`.
+//! * **R3** applies to `rust/src/**` except `util/bench.rs` (the
+//!   measurement harness) and `coordinator/driver.rs` (wall-clock
+//!   stats reported next to, never mixed into, simulated latency).
+//! * **R4** applies everywhere.
+//! * **R5** applies everywhere except `util/par.rs`, the one sanctioned
+//!   threading home.
+//! * **R6** applies to `rust/src/config/**` and
+//!   `rust/src/coordinator/checkpoint.rs` — the parsing layers where a
+//!   silent narrowing cast corrupts a run instead of crashing it.
+//!
+//! Test regions are tracked by brace depth: a line containing
+//! `cfg(test)` or `#[test]` marks the next opened brace as a test
+//! scope; R1 is waived until that brace closes. The test decision for
+//! a line is made at its *start*, so a violation on the same line as
+//! the opening `{` of a test module is still reported.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+use super::lexer::lex;
+use super::rules::{scan_allows, scan_rule, RuleId};
+
+/// Directories walked by [`audit_tree`], relative to the repo root.
+pub const WALK_ROOTS: [&str; 4] =
+    ["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Modules whose iteration order feeds bit-exact guarantees (R2).
+const DET_DIRS: [&str; 5] = [
+    "rust/src/optim/",
+    "rust/src/timeline/",
+    "rust/src/coordinator/",
+    "rust/src/scenario/",
+    "rust/src/runtime/native/",
+];
+
+/// Files allowed to read the host clock (R3).
+const R3_EXEMPT: [&str; 2] =
+    ["rust/src/util/bench.rs", "rust/src/coordinator/driver.rs"];
+
+/// The sanctioned threading home (R5).
+const R5_EXEMPT: [&str; 1] = ["rust/src/util/par.rs"];
+
+/// Parsing layers where narrowing casts need review (R6).
+const R6_SCOPE: [&str; 2] =
+    ["rust/src/config/", "rust/src/coordinator/checkpoint.rs"];
+
+/// How a finding is treated by the reporting layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Fails the audit.
+    Deny,
+    /// Reported, but only fails under `--deny-all`.
+    Warn,
+}
+
+/// Severity of `rule` under the given strictness. R6 findings are
+/// advisory by default (a reviewed narrowing cast is sometimes the
+/// right tool); `--deny-all` promotes them, and CI runs that way.
+pub fn severity(rule: RuleId, deny_all: bool) -> Severity {
+    if deny_all {
+        return Severity::Deny;
+    }
+    match rule {
+        RuleId::R6 => Severity::Warn,
+        _ => Severity::Deny,
+    }
+}
+
+/// One rule violation at one source location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-root-relative path, `/`-separated.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: RuleId,
+    /// The matched token text.
+    pub token: String,
+    /// The offending code line, trimmed and truncated.
+    pub snippet: String,
+}
+
+/// Result of auditing one source file.
+#[derive(Debug, Default)]
+pub struct FileAudit {
+    pub findings: Vec<Finding>,
+    /// Findings silenced by a well-formed `audit:allow` directive.
+    pub suppressed: usize,
+}
+
+/// Aggregate over a tree walk.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub suppressed: usize,
+}
+
+fn applicable_rules(rel: &str, in_test: bool) -> Vec<RuleId> {
+    let is_src = rel.starts_with("rust/src/");
+    let mut rules = Vec::new();
+    if is_src && !in_test {
+        rules.push(RuleId::R1);
+    }
+    if DET_DIRS.iter().any(|d| rel.starts_with(d)) {
+        rules.push(RuleId::R2);
+    }
+    if is_src && !R3_EXEMPT.contains(&rel) {
+        rules.push(RuleId::R3);
+    }
+    rules.push(RuleId::R4);
+    if !R5_EXEMPT.contains(&rel) {
+        rules.push(RuleId::R5);
+    }
+    if R6_SCOPE.iter().any(|s| rel.starts_with(s)) {
+        rules.push(RuleId::R6);
+    }
+    rules
+}
+
+fn snippet_of(code: &str) -> String {
+    code.trim().chars().take(90).collect()
+}
+
+/// Audit one file's source text. `rel` is the repo-root-relative path
+/// used for rule scoping and reporting; the text does not have to come
+/// from disk, which is what the fixture tests rely on.
+pub fn audit_source(rel: &str, text: &str) -> FileAudit {
+    let lines = lex(text);
+    let mut out = FileAudit::default();
+    let mut depth: i64 = 0;
+    let mut test_stack: Vec<i64> = Vec::new();
+    let mut pending_test = false;
+    for (ix, line) in lines.iter().enumerate() {
+        let ln = ix + 1;
+        let in_test = !test_stack.is_empty();
+        if line.code.contains("cfg(test)") || line.code.contains("#[test]") {
+            pending_test = true;
+        }
+        // Directives on the same line, or on an immediately preceding
+        // comment-only line, suppress this line's findings.
+        let mut allows: Vec<RuleId> =
+            scan_allows(&line.comment).into_iter().map(|(r, _)| r).collect();
+        if ix > 0 {
+            let prev = &lines[ix - 1];
+            if prev.code.trim().is_empty() {
+                allows.extend(
+                    scan_allows(&prev.comment).into_iter().map(|(r, _)| r),
+                );
+            }
+        }
+        for rule in applicable_rules(rel, in_test) {
+            for token in scan_rule(rule, &line.code) {
+                if allows.contains(&rule) {
+                    out.suppressed += 1;
+                    continue;
+                }
+                out.findings.push(Finding {
+                    path: rel.to_string(),
+                    line: ln,
+                    rule,
+                    token,
+                    snippet: snippet_of(&line.code),
+                });
+            }
+        }
+        for c in line.code.chars() {
+            if c == '{' {
+                if pending_test {
+                    test_stack.push(depth);
+                    pending_test = false;
+                }
+                depth += 1;
+            } else if c == '}' {
+                depth -= 1;
+                if test_stack.last() == Some(&depth) {
+                    test_stack.pop();
+                }
+            }
+        }
+    }
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in fs::read_dir(dir)
+        .map_err(|e| Error::Io(format!("read_dir {}: {e}", dir.display())))?
+    {
+        let entry = entry
+            .map_err(|e| Error::Io(format!("read_dir {}: {e}", dir.display())))?;
+        entries.push(entry.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Walk the audited roots under `root` (deterministically: sorted
+/// directory entries) and audit every `.rs` file.
+pub fn audit_tree(root: &Path) -> Result<AuditReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for wr in WALK_ROOTS {
+        let dir = root.join(wr);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut report = AuditReport::default();
+    for path in &files {
+        let text = fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("read {}: {e}", path.display())))?;
+        let rel_path = path.strip_prefix(root).unwrap_or(path);
+        let rel = rel_path.to_string_lossy().replace('\\', "/");
+        let fa = audit_source(&rel, &text);
+        report.findings.extend(fa.findings);
+        report.suppressed += fa.suppressed;
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r1_waived_inside_test_modules() {
+        let src = "pub fn f(x: Option<u8>) -> u8 { x.unwrap() }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn g(x: Option<u8>) -> u8 { x.unwrap() }\n\
+                   }\n\
+                   pub fn h(x: Option<u8>) -> u8 { x.unwrap() }\n";
+        let fa = audit_source("rust/src/lib.rs", src);
+        let lines: Vec<usize> = fa
+            .findings
+            .iter()
+            .filter(|f| f.rule == RuleId::R1)
+            .map(|f| f.line)
+            .collect();
+        assert_eq!(lines, vec![1, 6]);
+    }
+
+    #[test]
+    fn r1_not_applied_outside_src() {
+        let fa = audit_source("rust/tests/x.rs", "fn f() { o.unwrap(); }\n");
+        assert!(fa.findings.iter().all(|f| f.rule != RuleId::R1));
+    }
+
+    #[test]
+    fn same_line_allow_suppresses_and_counts() {
+        let src =
+            "let v = o.unwrap(); // audit:allow(R1, \"checked two lines up\")\n";
+        let fa = audit_source("rust/src/lib.rs", src);
+        assert!(fa.findings.is_empty());
+        assert_eq!(fa.suppressed, 1);
+    }
+
+    #[test]
+    fn preceding_comment_line_allow_suppresses() {
+        let src = "// audit:allow(R1, \"guarded by the loop condition\")\n\
+                   let v = o.unwrap();\n";
+        let fa = audit_source("rust/src/lib.rs", src);
+        assert!(fa.findings.is_empty());
+        assert_eq!(fa.suppressed, 1);
+    }
+
+    #[test]
+    fn allow_does_not_leak_past_code_lines() {
+        let src = "// audit:allow(R1, \"only for the next line\")\n\
+                   let a = 1;\n\
+                   let v = o.unwrap();\n";
+        let fa = audit_source("rust/src/lib.rs", src);
+        assert_eq!(fa.findings.len(), 1);
+        assert_eq!(fa.findings[0].line, 3);
+    }
+
+    #[test]
+    fn wrong_rule_allow_does_not_suppress() {
+        let src = "let v = o.unwrap(); // audit:allow(R2, \"wrong rule\")\n";
+        let fa = audit_source("rust/src/lib.rs", src);
+        assert_eq!(fa.findings.len(), 1);
+        assert_eq!(fa.suppressed, 0);
+    }
+
+    #[test]
+    fn scoping_r2_r3_r5_r6() {
+        let hm = "use std::collections::HashMap;\n";
+        assert_eq!(audit_source("rust/src/optim/x.rs", hm).findings.len(), 1);
+        assert!(audit_source("rust/src/util/x.rs", hm).findings.is_empty());
+
+        let inst = "use std::time::Instant;\n";
+        assert_eq!(audit_source("rust/src/latency/x.rs", inst).findings.len(), 1);
+        assert!(audit_source("rust/src/util/bench.rs", inst)
+            .findings
+            .is_empty());
+        assert!(audit_source("rust/src/coordinator/driver.rs", inst)
+            .findings
+            .is_empty());
+
+        let thr = "std::thread::spawn(f);\n";
+        assert!(!audit_source("rust/src/optim/x.rs", thr).findings.is_empty());
+        assert!(audit_source("rust/src/util/par.rs", thr)
+            .findings
+            .is_empty());
+
+        let cast = "let n = x as u32;\n";
+        assert_eq!(audit_source("rust/src/config/toml.rs", cast).findings.len(), 1);
+        assert_eq!(
+            audit_source("rust/src/coordinator/checkpoint.rs", cast)
+                .findings
+                .len(),
+            1
+        );
+        assert!(audit_source("rust/src/optim/x.rs", cast).findings.is_empty());
+    }
+
+    #[test]
+    fn r4_applies_everywhere() {
+        let src = "let r = thread_rng();\n";
+        for rel in [
+            "rust/src/util/rng.rs",
+            "rust/tests/t.rs",
+            "rust/benches/b.rs",
+            "examples/e.rs",
+        ] {
+            let fa = audit_source(rel, src);
+            assert!(
+                fa.findings.iter().any(|f| f.rule == RuleId::R4),
+                "R4 should fire in {rel}"
+            );
+        }
+    }
+
+    #[test]
+    fn severity_default_and_deny_all() {
+        assert_eq!(severity(RuleId::R1, false), Severity::Deny);
+        assert_eq!(severity(RuleId::R6, false), Severity::Warn);
+        assert_eq!(severity(RuleId::R6, true), Severity::Deny);
+    }
+
+    #[test]
+    fn tokens_in_strings_and_comments_do_not_fire() {
+        let src = "let s = \"call .unwrap() on a HashMap\"; // Instant\n";
+        let fa = audit_source("rust/src/optim/x.rs", src);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+}

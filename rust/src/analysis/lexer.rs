@@ -1,0 +1,255 @@
+//! Minimal lexical pass for the audit engine: split Rust source into
+//! per-line *code* and *comment* channels.
+//!
+//! The engine scans tokens in the code channel only, so forbidden names
+//! inside string literals, doc comments, or `//` prose never false-fire
+//! (the audit's own rule catalogue and the fixture tests would otherwise
+//! flag themselves). Comment text is kept separately because that is
+//! where `audit:allow(...)` suppression directives live.
+//!
+//! This is deliberately *not* a full Rust lexer: it understands exactly
+//! the constructs that matter for channel separation — line comments,
+//! nested block comments, string / raw-string / byte-string / char
+//! literals, and the `'a` lifetime-vs-char-literal ambiguity — and blanks
+//! literal contents out of the code channel while preserving the line
+//! structure of the file.
+
+/// One source line, split into lexical channels.
+#[derive(Debug, Clone, Default)]
+pub struct LineView {
+    /// Code with comments removed and string/char-literal contents
+    /// blanked.
+    pub code: String,
+    /// Concatenated comment text appearing on the line.
+    pub comment: String,
+}
+
+enum State {
+    Normal,
+    LineComment,
+    /// Nested depth of `/* ... */`.
+    BlockComment(usize),
+    Str,
+    /// Raw string, closing delimiter is `"` followed by this many `#`s.
+    RawStr(usize),
+    CharLit,
+}
+
+/// Lex `text` into per-line [`LineView`]s. Never fails: unterminated
+/// literals or comments simply run to end-of-file in their channel.
+pub fn lex(text: &str) -> Vec<LineView> {
+    let cs: Vec<char> = text.chars().collect();
+    let n = cs.len();
+    let mut lines: Vec<LineView> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Normal;
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            lines.push(LineView {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            if matches!(state, State::LineComment) {
+                state = State::Normal;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    code.push(' ');
+                    i += 1;
+                } else if c == 'r' || c == 'b' {
+                    // r"..." / r#"..."# / br"..." raw strings. A bare
+                    // `r` or `b` identifier char falls through below.
+                    let mut j = i;
+                    if cs[j] == 'b' && j + 1 < n && cs[j + 1] == 'r' {
+                        j += 1;
+                    }
+                    let mut opened = false;
+                    if cs[j] == 'r' {
+                        let mut k = j + 1;
+                        let mut hashes = 0usize;
+                        while k < n && cs[k] == '#' {
+                            hashes += 1;
+                            k += 1;
+                        }
+                        if k < n && cs[k] == '"' {
+                            state = State::RawStr(hashes);
+                            for _ in i..=k {
+                                code.push(' ');
+                            }
+                            i = k + 1;
+                            opened = true;
+                        }
+                    }
+                    if !opened {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if i + 1 < n && cs[i + 1] == '\\' {
+                        // '\n' style escaped char literal.
+                        state = State::CharLit;
+                        code.push(' ');
+                        i += 1;
+                    } else if i + 2 < n && cs[i + 2] == '\'' {
+                        // Plain 'x' char literal.
+                        code.push_str("   ");
+                        i += 3;
+                    } else {
+                        // Lifetime tick ('a in a generic position).
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    state = State::BlockComment(depth + 1);
+                    comment.push(' ');
+                    i += 2;
+                } else if c == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    state = if depth == 1 {
+                        State::Normal
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else {
+                    if c == '"' {
+                        state = State::Normal;
+                    }
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let mut k = i + 1;
+                    let mut got = 0usize;
+                    while k < n && cs[k] == '#' && got < hashes {
+                        got += 1;
+                        k += 1;
+                    }
+                    if got == hashes {
+                        state = State::Normal;
+                        i = k;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                } else {
+                    if c == '\'' {
+                        state = State::Normal;
+                    }
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(LineView { code, comment });
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_split_out() {
+        let v = lex("let x = 1; // trailing note\n");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].code.trim_end(), "let x = 1;");
+        assert_eq!(v[0].comment.trim(), "trailing note");
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let v = lex("let s = \"HashMap .unwrap() panic!\"; f(s);\n");
+        assert!(!v[0].code.contains("HashMap"));
+        assert!(!v[0].code.contains("unwrap"));
+        assert!(v[0].code.contains("f(s);"));
+    }
+
+    #[test]
+    fn raw_string_contents_are_blanked() {
+        let v = lex("let s = r#\"Instant \"quoted\" body\"#; g();\n");
+        assert!(!v[0].code.contains("Instant"));
+        assert!(v[0].code.contains("g();"));
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let v = lex("a(); /* outer /* inner */ still comment */ b();\n");
+        assert!(v[0].code.contains("a();"));
+        assert!(v[0].code.contains("b();"));
+        assert!(!v[0].code.contains("still"));
+        assert!(v[0].comment.contains("inner"));
+    }
+
+    #[test]
+    fn multi_line_string_spans_lines() {
+        let v = lex("let s = \"first HashMap\nsecond Instant\"; h();\n");
+        assert_eq!(v.len(), 2);
+        assert!(!v[0].code.contains("HashMap"));
+        assert!(!v[1].code.contains("Instant"));
+        assert!(v[1].code.contains("h();"));
+    }
+
+    #[test]
+    fn char_literal_and_lifetime() {
+        let v = lex("fn f<'a>(x: &'a str) { let c = '\"'; let d = 'y'; }\n");
+        // The quote character literal must not open a string state.
+        assert!(v[0].code.contains("let d ="));
+        let v = lex("let q = 'Q'; q2();\n");
+        assert!(v[0].code.contains("q2();"));
+        assert!(!v[0].code.contains('Q'));
+    }
+
+    #[test]
+    fn escaped_quote_inside_string() {
+        let v = lex("let s = \"a\\\"b Instant c\"; tail();\n");
+        assert!(!v[0].code.contains("Instant"));
+        assert!(v[0].code.contains("tail();"));
+    }
+
+    #[test]
+    fn line_comment_ends_at_newline() {
+        let v = lex("// only a comment\ncode();\n");
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].code.trim(), "");
+        assert!(v[1].code.contains("code();"));
+    }
+}

@@ -1,0 +1,30 @@
+//! In-tree static-analysis pass (`epsl-audit`) enforcing the source
+//! invariants the repo's bit-exactness guarantees rest on.
+//!
+//! Every guarantee this reproduction makes — bit-exact checkpoint /
+//! resume, hetero-cut ≤ uniform dominance, `EPSL_THREADS`-invariance,
+//! the eq. 23 fp-association parity between the closed forms and the
+//! event timeline — depends on source-level discipline: seed-pure RNG
+//! streams, deterministic iteration order, no wall-clock reads in
+//! simulated paths, no panics in the training loop. This module turns
+//! those rules into a machine-checked, CI-gated audit.
+//!
+//! The engine is dependency-free and line/token-level: [`lexer`] strips
+//! comments and literals, [`rules`] matches forbidden tokens (rules
+//! R1–R6), [`engine`] scopes rules by path, tracks `#[cfg(test)]`
+//! regions, honors `// audit:allow(R<n>, "reason")` suppressions, and
+//! walks the tree in sorted order. The `epsl-audit` binary
+//! (`cargo run --bin epsl-audit`) reports findings as
+//! `path:line: rule [token] snippet` (or `--json`) and exits non-zero
+//! on denied findings. See `ANALYSIS.md` at the repo root for the full
+//! rule catalogue, rationale, and suppression policy.
+
+pub mod engine;
+pub mod lexer;
+pub mod rules;
+
+pub use engine::{
+    audit_source, audit_tree, severity, AuditReport, FileAudit, Finding,
+    Severity, WALK_ROOTS,
+};
+pub use rules::{scan_allows, scan_rule, RuleId};

@@ -1,0 +1,322 @@
+//! The audit rule catalogue (R1–R6) and its token matchers.
+//!
+//! Each rule is a small set of token patterns matched against the
+//! comment-and-literal-stripped *code* channel of a line (see
+//! [`super::lexer`]). Where a rule applies is decided by the engine
+//! ([`super::engine`]) from the file's repo-relative path; this module
+//! only answers "does this code line contain the forbidden token".
+
+use std::fmt;
+
+/// Identifier of one audit rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RuleId {
+    /// No `unwrap()` / `expect()` / `panic!` / `todo!` /
+    /// `unimplemented!` in non-test library code.
+    R1,
+    /// No `HashMap` / `HashSet` state in deterministic modules —
+    /// iteration order must come from `BTreeMap` or an explicit sort.
+    R2,
+    /// No `std::time::{Instant, SystemTime}` outside the benchmarking
+    /// harness and the driver's wall-clock stats.
+    R3,
+    /// No ambient entropy (`thread_rng`, `from_entropy`,
+    /// `RandomState`, …) — all randomness forks from `util::rng`
+    /// named streams.
+    R4,
+    /// No `mul_add` / fast-math contractions and no ad-hoc threading
+    /// (`std::thread`, `.par_*`, rayon) outside `util::par`.
+    R5,
+    /// Flag narrowing `as` casts in config / checkpoint parsing.
+    R6,
+}
+
+impl RuleId {
+    /// Every rule, in report order.
+    pub const ALL: [RuleId; 6] = [
+        RuleId::R1,
+        RuleId::R2,
+        RuleId::R3,
+        RuleId::R4,
+        RuleId::R5,
+        RuleId::R6,
+    ];
+
+    /// Short mnemonic used in reports next to the id.
+    pub fn name(self) -> &'static str {
+        match self {
+            RuleId::R1 => "no-panic",
+            RuleId::R2 => "hash-order",
+            RuleId::R3 => "wall-clock",
+            RuleId::R4 => "ambient-entropy",
+            RuleId::R5 => "fast-math-threading",
+            RuleId::R6 => "trunc-cast",
+        }
+    }
+
+    /// One-line rationale, shown by `epsl-audit --help`.
+    pub fn summary(self) -> &'static str {
+        match self {
+            RuleId::R1 => {
+                "library code returns typed Errors instead of panicking"
+            }
+            RuleId::R2 => {
+                "deterministic modules must not iterate hash-ordered maps"
+            }
+            RuleId::R3 => {
+                "simulated-latency paths must never read the host clock"
+            }
+            RuleId::R4 => {
+                "all randomness forks from seed-pure util::rng streams"
+            }
+            RuleId::R5 => {
+                "no FP contraction, and threading only via util::par"
+            }
+            RuleId::R6 => {
+                "narrowing casts in config/checkpoint parsing need review"
+            }
+        }
+    }
+
+    /// Parse `"R1"`..`"R6"`.
+    pub fn parse(s: &str) -> Option<RuleId> {
+        match s {
+            "R1" => Some(RuleId::R1),
+            "R2" => Some(RuleId::R2),
+            "R3" => Some(RuleId::R3),
+            "R4" => Some(RuleId::R4),
+            "R5" => Some(RuleId::R5),
+            "R6" => Some(RuleId::R6),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            RuleId::R1 => "R1",
+            RuleId::R2 => "R2",
+            RuleId::R3 => "R3",
+            RuleId::R4 => "R4",
+            RuleId::R5 => "R5",
+            RuleId::R6 => "R6",
+        };
+        f.write_str(s)
+    }
+}
+
+fn is_word_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Collect occurrences of `needle` in `code`, optionally requiring a
+/// non-identifier character (or line edge) before / after the match.
+fn hits(
+    code: &str,
+    needle: &str,
+    bound_start: bool,
+    bound_end: bool,
+    out: &mut Vec<String>,
+) {
+    for (idx, _) in code.match_indices(needle) {
+        if bound_start {
+            if let Some(c) = code[..idx].chars().next_back() {
+                if is_word_char(c) {
+                    continue;
+                }
+            }
+        }
+        if bound_end {
+            if let Some(c) = code[idx + needle.len()..].chars().next() {
+                if is_word_char(c) {
+                    continue;
+                }
+            }
+        }
+        out.push(needle.to_string());
+    }
+}
+
+/// `.par_` followed by a lowercase identifier character — a rayon-style
+/// parallel-iterator call.
+fn par_hits(code: &str, out: &mut Vec<String>) {
+    for (idx, _) in code.match_indices(".par_") {
+        let tail = &code[idx + ".par_".len()..];
+        if tail
+            .chars()
+            .next()
+            .map(|c| c.is_ascii_lowercase() || c == '_')
+            .unwrap_or(false)
+        {
+            let word: String = tail
+                .chars()
+                .take_while(|c| is_word_char(*c))
+                .collect();
+            out.push(format!(".par_{word}"));
+        }
+    }
+}
+
+/// Word-bounded `as` followed by a narrowing integer type.
+fn cast_hits(code: &str, out: &mut Vec<String>) {
+    const NARROW: [&str; 7] = ["u8", "u16", "u32", "i8", "i16", "i32", "usize"];
+    for (idx, _) in code.match_indices("as") {
+        if let Some(c) = code[..idx].chars().next_back() {
+            if is_word_char(c) {
+                continue;
+            }
+        }
+        let tail = &code[idx + 2..];
+        if !tail.starts_with(|c: char| c.is_ascii_whitespace()) {
+            continue;
+        }
+        let word: String = tail
+            .trim_start()
+            .chars()
+            .take_while(|c| is_word_char(*c))
+            .collect();
+        if NARROW.contains(&word.as_str()) {
+            out.push(format!("as {word}"));
+        }
+    }
+}
+
+/// All pattern matches of `rule` on one stripped code line. Returns the
+/// matched token text, one entry per occurrence.
+pub fn scan_rule(rule: RuleId, code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    match rule {
+        RuleId::R1 => {
+            hits(code, ".unwrap()", false, false, &mut out);
+            hits(code, ".expect(", false, false, &mut out);
+            hits(code, "panic!", true, false, &mut out);
+            hits(code, "todo!", true, false, &mut out);
+            hits(code, "unimplemented!", true, false, &mut out);
+        }
+        RuleId::R2 => {
+            hits(code, "HashMap", true, true, &mut out);
+            hits(code, "HashSet", true, true, &mut out);
+            hits(code, "hash_map", true, true, &mut out);
+            hits(code, "hash_set", true, true, &mut out);
+        }
+        RuleId::R3 => {
+            hits(code, "Instant", true, true, &mut out);
+            hits(code, "SystemTime", true, true, &mut out);
+        }
+        RuleId::R4 => {
+            hits(code, "thread_rng", true, true, &mut out);
+            hits(code, "from_entropy", true, true, &mut out);
+            hits(code, "RandomState", true, true, &mut out);
+            hits(code, "OsRng", true, true, &mut out);
+            hits(code, "getrandom", true, true, &mut out);
+        }
+        RuleId::R5 => {
+            hits(code, "mul_add", true, true, &mut out);
+            par_hits(code, &mut out);
+            hits(code, "rayon", true, true, &mut out);
+            hits(code, "std::thread", true, true, &mut out);
+            hits(code, "thread::spawn", true, true, &mut out);
+            hits(code, "thread::scope", true, true, &mut out);
+        }
+        RuleId::R6 => {
+            cast_hits(code, &mut out);
+        }
+    }
+    out
+}
+
+/// Parse every well-formed `audit:allow(R<n>, "reason")` directive in a
+/// comment channel. Malformed directives (unknown rule, missing or
+/// empty reason) are ignored, which means the underlying finding still
+/// surfaces — the safe failure mode.
+pub fn scan_allows(comment: &str) -> Vec<(RuleId, String)> {
+    const KEY: &str = "audit:allow(";
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find(KEY) {
+        let body = &rest[pos + KEY.len()..];
+        rest = body;
+        let comma = match body.find(',') {
+            Some(c) => c,
+            None => continue,
+        };
+        let rule = match RuleId::parse(body[..comma].trim()) {
+            Some(r) => r,
+            None => continue,
+        };
+        let after = body[comma + 1..].trim_start();
+        let quoted = match after.strip_prefix('"') {
+            Some(q) => q,
+            None => continue,
+        };
+        let endq = match quoted.find('"') {
+            Some(e) => e,
+            None => continue,
+        };
+        let reason = quoted[..endq].trim();
+        if reason.is_empty() {
+            continue;
+        }
+        if !quoted[endq + 1..].trim_start().starts_with(')') {
+            continue;
+        }
+        out.push((rule, reason.to_string()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r1_matches_exact_calls_only() {
+        assert_eq!(scan_rule(RuleId::R1, "x.unwrap();").len(), 1);
+        assert_eq!(scan_rule(RuleId::R1, "x.unwrap_or(0);").len(), 0);
+        assert_eq!(scan_rule(RuleId::R1, "x.unwrap_or_else(f);").len(), 0);
+        assert_eq!(scan_rule(RuleId::R1, "x.expect(m);").len(), 1);
+        assert_eq!(scan_rule(RuleId::R1, "x.expect_err(m);").len(), 0);
+        assert_eq!(scan_rule(RuleId::R1, "panic!(m);").len(), 1);
+        assert_eq!(scan_rule(RuleId::R1, "no_panic!(m);").len(), 0);
+        assert_eq!(scan_rule(RuleId::R1, "todo!()").len(), 1);
+        assert_eq!(scan_rule(RuleId::R1, "unimplemented!()").len(), 1);
+    }
+
+    #[test]
+    fn r2_word_bounded() {
+        assert_eq!(scan_rule(RuleId::R2, "let m: HashMap<K, V>;").len(), 1);
+        assert_eq!(scan_rule(RuleId::R2, "let m = MyHashMapish;").len(), 0);
+        assert_eq!(scan_rule(RuleId::R2, "use x::hash_map::Entry;").len(), 1);
+    }
+
+    #[test]
+    fn r5_patterns() {
+        assert_eq!(scan_rule(RuleId::R5, "a.mul_add(b, c)").len(), 1);
+        assert_eq!(scan_rule(RuleId::R5, "v.par_iter().sum()").len(), 1);
+        assert_eq!(scan_rule(RuleId::R5, "v.particle()").len(), 0);
+        assert_eq!(scan_rule(RuleId::R5, "std::thread::spawn(f)").len(), 2);
+        assert_eq!(scan_rule(RuleId::R5, "my_thread::spawnish()").len(), 0);
+    }
+
+    #[test]
+    fn r6_narrowing_casts() {
+        assert_eq!(scan_rule(RuleId::R6, "x as u32"), vec!["as u32"]);
+        assert_eq!(scan_rule(RuleId::R6, "x as usize"), vec!["as usize"]);
+        assert!(scan_rule(RuleId::R6, "x as u64").is_empty());
+        assert!(scan_rule(RuleId::R6, "x as f64").is_empty());
+        assert!(scan_rule(RuleId::R6, "alias u32").is_empty());
+    }
+
+    #[test]
+    fn allow_directives() {
+        let got = scan_allows(r#" audit:allow(R1, "checked above") "#);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, RuleId::R1);
+        assert_eq!(got[0].1, "checked above");
+        // Malformed: unknown rule, empty reason, missing quote.
+        assert!(scan_allows(r#" audit:allow(R9, "x") "#).is_empty());
+        assert!(scan_allows(r#" audit:allow(R1, "") "#).is_empty());
+        assert!(scan_allows(" audit:allow(R1, reason) ").is_empty());
+    }
+}

@@ -1,0 +1,187 @@
+//! `epsl-audit` — the in-tree determinism & safety static-analysis
+//! pass. Walks `rust/src`, `rust/benches`, `rust/tests`, and
+//! `examples`, enforces rules R1–R6 (see `ANALYSIS.md`), and exits
+//! non-zero when any denied finding remains.
+//!
+//! ```text
+//! cargo run --bin epsl-audit                 # warn-level R6, deny R1–R5
+//! cargo run --bin epsl-audit -- --deny-all   # CI mode: everything denies
+//! cargo run --bin epsl-audit -- --json       # machine-readable findings
+//! cargo run --bin epsl-audit -- --root PATH  # audit another checkout
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use epsl::analysis::{audit_tree, severity, RuleId, Severity};
+use epsl::util::json::Json;
+
+struct Options {
+    deny_all: bool,
+    json: bool,
+    root: PathBuf,
+}
+
+fn print_help() {
+    println!("epsl-audit: static-analysis pass for the EPSL tree");
+    println!();
+    println!("USAGE: epsl-audit [--deny-all] [--json] [--root PATH]");
+    println!();
+    println!("  --deny-all   treat advisory findings (R6) as errors");
+    println!("  --json       emit findings as a JSON report");
+    println!("  --root PATH  repo root to audit (default: this checkout)");
+    println!();
+    println!("RULES:");
+    for rule in RuleId::ALL {
+        println!("  {rule} {:<20} {}", rule.name(), rule.summary());
+    }
+    println!();
+    println!("Suppress a reviewed site with a trailing or preceding");
+    println!("comment: // audit:allow(R<n>, \"reason\")");
+}
+
+fn default_root() -> PathBuf {
+    // The crate manifest lives in rust/; the audited tree is its parent.
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    match manifest.parent() {
+        Some(p) => p.to_path_buf(),
+        None => manifest,
+    }
+}
+
+fn parse_args(args: &[String]) -> Result<Option<Options>, String> {
+    let mut opts = Options {
+        deny_all: false,
+        json: false,
+        root: default_root(),
+    };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--deny-all" => opts.deny_all = true,
+            "--json" => opts.json = true,
+            "--root" => {
+                i += 1;
+                let path = args
+                    .get(i)
+                    .ok_or_else(|| "--root requires a path".to_string())?;
+                opts.root = PathBuf::from(path);
+            }
+            "--help" | "-h" => return Ok(None),
+            other => {
+                return Err(format!(
+                    "unknown argument '{other}' (try --help)"
+                ))
+            }
+        }
+        i += 1;
+    }
+    Ok(Some(opts))
+}
+
+fn run(opts: &Options) -> Result<ExitCode, epsl::error::Error> {
+    let report = audit_tree(&opts.root)?;
+    let mut denied = 0usize;
+    let mut warned = 0usize;
+    for f in &report.findings {
+        match severity(f.rule, opts.deny_all) {
+            Severity::Deny => denied += 1,
+            Severity::Warn => warned += 1,
+        }
+    }
+    if opts.json {
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "root".to_string(),
+            Json::Str(opts.root.display().to_string()),
+        );
+        obj.insert("files_scanned".to_string(),
+                   Json::Num(report.files_scanned as f64));
+        obj.insert("suppressed".to_string(),
+                   Json::Num(report.suppressed as f64));
+        obj.insert("denied".to_string(), Json::Num(denied as f64));
+        obj.insert("warned".to_string(), Json::Num(warned as f64));
+        let findings: Vec<Json> = report
+            .findings
+            .iter()
+            .map(|f| {
+                let mut m = BTreeMap::new();
+                m.insert("path".to_string(), Json::Str(f.path.clone()));
+                m.insert("line".to_string(), Json::Num(f.line as f64));
+                m.insert("rule".to_string(), Json::Str(f.rule.to_string()));
+                m.insert("name".to_string(),
+                         Json::Str(f.rule.name().to_string()));
+                m.insert("token".to_string(), Json::Str(f.token.clone()));
+                m.insert("snippet".to_string(), Json::Str(f.snippet.clone()));
+                let sev = match severity(f.rule, opts.deny_all) {
+                    Severity::Deny => "deny",
+                    Severity::Warn => "warn",
+                };
+                m.insert("severity".to_string(), Json::Str(sev.to_string()));
+                Json::Obj(m)
+            })
+            .collect();
+        obj.insert("findings".to_string(), Json::Arr(findings));
+        println!("{}", Json::Obj(obj).to_string_pretty());
+    } else {
+        for f in &report.findings {
+            let sev = match severity(f.rule, opts.deny_all) {
+                Severity::Deny => "deny",
+                Severity::Warn => "warn",
+            };
+            println!(
+                "{}:{}: {sev} {} ({}) [{}] {}",
+                f.path,
+                f.line,
+                f.rule,
+                f.rule.name(),
+                f.token,
+                f.snippet
+            );
+        }
+        println!(
+            "audit: {} file(s) scanned, {} finding(s) ({} denied, {} warned), \
+             {} suppression(s) honored",
+            report.files_scanned,
+            report.findings.len(),
+            denied,
+            warned,
+            report.suppressed
+        );
+    }
+    Ok(if denied > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    })
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = match parse_args(&args) {
+        Ok(Some(opts)) => opts,
+        Ok(None) => {
+            print_help();
+            return ExitCode::SUCCESS;
+        }
+        Err(msg) => {
+            eprintln!("epsl-audit: {msg}");
+            return ExitCode::from(2);
+        }
+    };
+    if !Path::new(&opts.root).is_dir() {
+        eprintln!(
+            "epsl-audit: root '{}' is not a directory",
+            opts.root.display()
+        );
+        return ExitCode::from(2);
+    }
+    match run(&opts) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("epsl-audit: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -31,7 +31,8 @@ impl Args {
         let mut it = argv.iter().peekable();
         if let Some(first) = it.peek() {
             if !first.starts_with("--") {
-                out.subcommand = it.next().unwrap().clone();
+                out.subcommand = (*first).clone();
+                it.next();
             }
         }
         while let Some(arg) = it.next() {

@@ -184,6 +184,7 @@ impl TrainConfig {
 
     /// ⌈φb⌉ — number of aggregated sample slots.
     pub fn aggregated_count(&self) -> usize {
+        // audit:allow(R6, "exact for the validated domain: phi in [0,1] and batch >= 1 bound the product to [0, batch]")
         (self.phi * self.batch as f64).ceil() as usize
     }
 }

@@ -18,6 +18,11 @@ pub enum Value {
     Arr(Vec<Value>),
 }
 
+/// Largest f64 at or below which every integer is exactly
+/// representable (2^53). Above this, a "count" read from config has
+/// already lost precision in the float, so we refuse it.
+const MAX_EXACT_F64: f64 = 9_007_199_254_740_992.0;
+
 impl Value {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
@@ -27,7 +32,14 @@ impl Value {
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().filter(|x| *x >= 0.0).map(|x| x as usize)
+        // Integral values only: `rounds = 2.7` used to silently
+        // truncate to 2, and values past 2^53 have already lost
+        // integer precision in the f64 — both now read as "wrong type"
+        // (None), the same handling every other type mismatch gets.
+        self.as_f64()
+            .filter(|x| *x >= 0.0 && x.fract() == 0.0 && *x <= MAX_EXACT_F64)
+            // audit:allow(R6, "cast is exact: value is a non-negative integer below 2^53, checked on the line above")
+            .map(|x| x as usize)
     }
 
     pub fn as_bool(&self) -> Option<bool> {

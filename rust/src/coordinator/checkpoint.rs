@@ -123,12 +123,21 @@ impl<'a> Reader<'a> {
         Ok(self.take(1)?[0])
     }
 
+    /// Fixed-width slice as an array. `take(N)` returns exactly `N`
+    /// bytes, so the conversion cannot fail in practice; a typed error
+    /// (not a panic) keeps corrupted-input handling uniform anyway.
+    fn array<const N: usize>(&mut self) -> Result<[u8; N]> {
+        self.take(N)?.try_into().map_err(|_| {
+            Error::Fault(format!("checkpoint field: expected {N} bytes"))
+        })
+    }
+
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.array()?))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.array()?))
     }
 
     fn usize(&mut self) -> Result<usize> {
@@ -169,9 +178,7 @@ impl<'a> Reader<'a> {
         let n = self.count(4)?;
         let mut v = Vec::with_capacity(n);
         for _ in 0..n {
-            v.push(f32::from_bits(u32::from_le_bytes(
-                self.take(4)?.try_into().unwrap(),
-            )));
+            v.push(f32::from_bits(u32::from_le_bytes(self.array()?)));
         }
         Ok(v)
     }

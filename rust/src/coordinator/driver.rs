@@ -15,7 +15,7 @@
 //! execution + graceful degradation) and [`super::session`] (session
 //! state, fault runtime, latency accounting).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use xla::Literal;
@@ -332,7 +332,15 @@ fn run_training(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
     // the assignment; a deeper-cut group uses a sub-suffix of it (the
     // layers between two cuts live client-side for that group). Uniform
     // assignments split at the single cut exactly as before.
-    let seed_lit = literal_u32(&[2], &[0, opts.seed as u32])?;
+    // Both 32-bit words of the run seed: the Init entry point rebuilds
+    // `(hi << 32) | lo`, so passing `[0, seed as u32]` silently dropped
+    // the high word for seeds >= 2^32 (same init for distinct seeds).
+    // For the common sub-2^32 seeds the words are unchanged, so
+    // existing golden runs are bit-identical.
+    let seed_lit = literal_u32(
+        &[2],
+        &[(opts.seed >> 32) as u32, opts.seed as u32],
+    )?;
     let full = ParamSet::new(rt.call(&fam.init, &[seed_lit])?);
     let (client0, mut server_params) = full.split(fam, j_min)?;
     let n_replicas = plan0.param_replicas(opts.n_clients);
@@ -364,7 +372,7 @@ fn run_training(rt: &dyn Backend, manifest: &Manifest, cfg: &Config,
         lam_lit,
         lr_s_lit,
         lr_c_lit,
-        mask_cache: HashMap::new(),
+        mask_cache: BTreeMap::new(),
         faults,
     };
 

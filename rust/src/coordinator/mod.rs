@@ -47,6 +47,7 @@ use crate::latency::frameworks::Framework;
 /// stage 3 ↔ end of stage-2 blocks (layer 10), stage 4 ↔ CONV12 (layer 16).
 pub fn resnet18_cut_for_splitnet(cut: usize) -> usize {
     try_resnet18_cut_for_splitnet(cut)
+        // audit:allow(R1, "documented panicking convenience wrapper; hot paths use the try_ form below")
         .unwrap_or_else(|e| panic!("{e}"))
 }
 

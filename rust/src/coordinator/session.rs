@@ -4,7 +4,7 @@
 //! executed through the [`crate::timeline`] event engine in either
 //! `barrier` or `pipelined` mode.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use xla::Literal;
 
@@ -52,8 +52,10 @@ pub(crate) struct Session<'a> {
     pub(crate) lam_lit: Literal,
     pub(crate) lr_s_lit: Literal,
     pub(crate) lr_c_lit: Literal,
-    /// (φ bits) → (mask host vector, mask literal).
-    pub(crate) mask_cache: HashMap<u64, (Vec<f32>, Literal)>,
+    /// (φ bits) → (mask host vector, mask literal). BTreeMap, not
+    /// HashMap: keyed session state must be hash-order-free by
+    /// construction (audit rule R2).
+    pub(crate) mask_cache: BTreeMap<u64, (Vec<f32>, Literal)>,
     /// Expanded fault plan + resilience policy (`None` = fault-free run;
     /// the round engine takes the quiet path with zero overhead).
     pub(crate) faults: Option<FaultRuntime>,
@@ -162,6 +164,7 @@ impl SimLatency {
                 // Mixed assignments are gated to EPSL/PSL at build time,
                 // so the hetero shape builder accepts the framework.
                 timeline::simulate_cuts(fw, &inp, &cuts, self.mode)
+                    // audit:allow(R1, "mixed assignments are rejected for non-EPSL/PSL frameworks when the session is built, so the shape builder cannot refuse here")
                     .expect("mixed-cut timeline on a gated framework")
             }
         }
@@ -183,6 +186,7 @@ impl SimLatency {
                 let inp = self.inputs_at(round, phi, self.cut.min_cut());
                 let cuts = self.cut.cuts_for(inp.f_clients.len());
                 timeline::shape_for_cuts(fw, &inp, &cuts)
+                    // audit:allow(R1, "mixed assignments are rejected for non-EPSL/PSL frameworks when the session is built, so the shape builder cannot refuse here")
                     .expect("mixed-cut timeline on a gated framework")
                     .uplink_arrivals()
             }
@@ -537,7 +541,9 @@ impl<'a> Session<'a> {
             let (correct, total) = self.eval_model(&full)?;
             return Ok(correct / total);
         }
-        let j_min = *self.cuts.iter().min().unwrap();
+        let j_min = *self.cuts.iter().min().ok_or_else(|| {
+            Error::Runtime("evaluate: session has no client cuts".into())
+        })?;
         let n_min = client_tensor_count(fam, j_min)?;
         let lam_total: f64 =
             self.lam.iter().map(|&w| w as f64).sum();

@@ -127,8 +127,9 @@ pub fn fig_pipeline(ctx: &mut Ctx) -> Result<()> {
     let mut chunks = outs.chunks(seeds as usize);
     for (cut_i, &cut) in cuts.iter().enumerate() {
         for &c in &sweep_c {
-            let chunk =
-                chunks.next().expect("fig_pipeline cell grid mismatch");
+            let chunk = chunks
+                // audit:allow(R1, "the solve fan-out produced exactly one chunk per (cut, C) cell, in this same order")
+                .next().expect("fig_pipeline cell grid mismatch");
             let bars: Vec<f64> = chunk.iter().map(|(b, _)| *b).collect();
             let pipes: Vec<f64> = chunk.iter().map(|(_, p)| *p).collect();
             let (mb, mp) = (mean(&bars), mean(&pipes));

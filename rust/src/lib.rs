@@ -35,7 +35,9 @@
 //! | [`scenario`] | multi-round network dynamics: block fading, LoS flips, compute jitter, churn, re-optimization policies |
 //! | [`metrics`] | round records, curves, CSV emission |
 //! | [`experiments`] | one registered generator per paper table/figure |
+//! | [`analysis`] | in-tree static-analysis pass (`epsl-audit`): rules R1–R6 guarding the determinism/safety invariants above — see `ANALYSIS.md` |
 
+pub mod analysis;
 pub mod channel;
 pub mod config;
 pub mod coordinator;

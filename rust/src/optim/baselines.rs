@@ -16,6 +16,7 @@
 use crate::channel::rate::{uniform_psd_dbm_hz, Allocation};
 use crate::config::dbm_to_w;
 use crate::error::Result;
+use crate::util::fp::cmp_finite;
 use crate::util::rng::Rng;
 
 use super::bcd::{self, BcdOptions};
@@ -67,14 +68,15 @@ pub fn rss_allocation(prob: &Problem) -> Allocation {
     order.sort_by(|&a, &b| {
         let ga: f64 = prob.ch.gain[a].iter().sum();
         let gb: f64 = prob.ch.gain[b].iter().sum();
-        ga.partial_cmp(&gb).unwrap()
+        cmp_finite(ga, gb)
     });
     for &i in &order {
         let k = (0..m)
             .filter(|&k| !taken[k])
             .max_by(|&a, &b| {
-                prob.ch.gain[i][a].partial_cmp(&prob.ch.gain[i][b]).unwrap()
+                cmp_finite(prob.ch.gain[i][a], prob.ch.gain[i][b])
             })
+            // audit:allow(R1, "M >= C is a Problem invariant, so an untaken channel always remains during the first pass")
             .expect("M >= C");
         alloc.assign(k, i);
         taken[k] = true;
@@ -84,8 +86,9 @@ pub fn rss_allocation(prob: &Problem) -> Allocation {
         if !taken[k] {
             let i = (0..c)
                 .max_by(|&a, &b| {
-                    prob.ch.gain[a][k].partial_cmp(&prob.ch.gain[b][k]).unwrap()
+                    cmp_finite(prob.ch.gain[a][k], prob.ch.gain[b][k])
                 })
+                // audit:allow(R1, "0..c is non-empty: NetworkConfig validation guarantees at least one client")
                 .unwrap();
             alloc.assign(k, i);
         }

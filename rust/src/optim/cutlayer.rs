@@ -17,6 +17,7 @@
 
 use crate::channel::rate::Allocation;
 use crate::error::{Error, Result};
+use crate::util::fp::cmp_finite;
 
 use super::eval::Evaluator;
 use super::milp::{solve_milp, Lp, Milp, MilpStats};
@@ -127,7 +128,8 @@ fn solve_milp_core(cands: &[usize], n_clients: usize, costs: &[f64],
         Error::Optim("P3 MILP infeasible (should never happen)".into())
     })?;
     let jj = (0..nj)
-        .max_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap())
+        .max_by(|&a, &b| cmp_finite(x[a], x[b]))
+        // audit:allow(R1, "nj >= 1: every NetworkProfile constructor ships non-empty cut_candidates, and exhaustive() below already indexes [0]")
         .unwrap();
     Ok((cands[jj], stats))
 }

@@ -287,7 +287,7 @@ pub fn solve_milp(milp: &Milp) -> (Option<(Vec<f64>, f64)>, MilpStats) {
             .iter()
             .map(|&j| (j, (sol.0[j] - sol.0[j].round()).abs()))
             .filter(|(_, f)| *f > 1e-6)
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            .max_by(|a, b| crate::util::fp::cmp_finite(a.1, b.1));
         match frac {
             None => {
                 // Integral: candidate incumbent.

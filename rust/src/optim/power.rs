@@ -223,6 +223,7 @@ fn solve_core(prob: &Problem, channels: Vec<Vec<usize>>,
         }
     }
     let t1 = hi;
+    // audit:allow(R1, "t1 == hi and the bisection only ever shrinks hi to values where min_powers succeeded")
     let sols = min_powers(t1).expect("hi is feasible by construction");
 
     let mut psd_dbm = vec![PSD_OFF_DBM_HZ; prob.n_subchannels()];

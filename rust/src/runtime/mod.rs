@@ -22,15 +22,15 @@ pub mod tensor;
 pub use backend::{select_backend, Backend, BackendChoice, SelectedBackend};
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::time::Instant;
 
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable,
           XlaComputation};
 
 use crate::error::{Error, Result};
+use crate::util::bench::WallTimer;
 
 use artifact::ArtifactEntry;
 
@@ -48,7 +48,11 @@ pub struct RuntimeStats {
 pub struct Runtime {
     client: PjRtClient,
     dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    // BTreeMap rather than HashMap: the executable cache is keyed state
+    // inside a deterministic module (audit rule R2) — even though nothing
+    // iterates it today, hash order must never be one refactor away from
+    // leaking into round behavior.
+    cache: RefCell<BTreeMap<String, Rc<PjRtLoadedExecutable>>>,
     stats: RefCell<RuntimeStats>,
 }
 
@@ -59,7 +63,7 @@ impl Runtime {
         Ok(Runtime {
             client,
             dir: PathBuf::from(artifacts_dir),
-            cache: RefCell::new(HashMap::new()),
+            cache: RefCell::new(BTreeMap::new()),
             stats: RefCell::new(RuntimeStats::default()),
         })
     }
@@ -74,7 +78,7 @@ impl Runtime {
             return Ok(exe.clone());
         }
         let path = self.dir.join(file);
-        let t0 = Instant::now();
+        let t0 = WallTimer::start();
         let proto = HloModuleProto::from_text_file(&path).map_err(|e| {
             Error::Artifact(format!("{}: {e}", path.display()))
         })?;
@@ -82,7 +86,7 @@ impl Runtime {
         let exe = Rc::new(self.client.compile(&comp)?);
         let mut stats = self.stats.borrow_mut();
         stats.compiles += 1;
-        stats.compile_seconds += t0.elapsed().as_secs_f64();
+        stats.compile_seconds += t0.elapsed_seconds();
         drop(stats);
         self.cache.borrow_mut().insert(file.to_string(), exe.clone());
         Ok(exe)
@@ -105,12 +109,12 @@ impl Runtime {
         -> Result<Vec<Literal>> {
         validate_inputs(entry, inputs)?;
         let exe = self.load(&entry.file)?;
-        let t0 = Instant::now();
+        let t0 = WallTimer::start();
         let result = exe.execute::<Literal>(inputs)?;
         let tuple = result[0][0].to_literal_sync()?;
         let mut stats = self.stats.borrow_mut();
         stats.executions += 1;
-        stats.execute_seconds += t0.elapsed().as_secs_f64();
+        stats.execute_seconds += t0.elapsed_seconds();
         drop(stats);
         let outs = tuple.to_tuple()?;
         if outs.len() != entry.outputs.len() {

@@ -21,7 +21,6 @@ pub mod model;
 pub mod ops;
 
 use std::sync::Mutex;
-use std::time::Instant;
 
 use xla::Literal;
 
@@ -32,6 +31,7 @@ use crate::runtime::artifact::{ArtifactEntry, DType, FamilyManifest,
 use crate::runtime::backend::Backend;
 use crate::runtime::tensor::{literal_f32, to_f32_vec};
 use crate::runtime::{validate_inputs, RuntimeStats};
+use crate::util::bench::WallTimer;
 use crate::util::par;
 
 /// Training mini-batch b baked into the graph contract (matches the AOT
@@ -183,14 +183,14 @@ impl Backend for NativeBackend {
     fn call(&self, entry: &ArtifactEntry, inputs: &[Literal])
         -> Result<Vec<Literal>> {
         validate_inputs(entry, inputs)?;
-        let t0 = Instant::now();
+        let t0 = WallTimer::start();
         let outs = self.dispatch(entry, inputs)?;
         // into_inner on poison: one panicked worker must not turn every
         // later stats update into a cascade of unrelated panics.
         let mut stats =
             self.stats.lock().unwrap_or_else(|e| e.into_inner());
         stats.executions += 1;
-        stats.execute_seconds += t0.elapsed().as_secs_f64();
+        stats.execute_seconds += t0.elapsed_seconds();
         Ok(outs)
     }
 

@@ -106,6 +106,7 @@ fn stage_in_dims(cfg: &SplitNetConfig, s: usize) -> Dims {
         2 => (img, img, w),
         3 => (img, img, w),
         4 => (img / 2, img / 2, 2 * w),
+        // audit:allow(R1, "internal contract: stage indices come from the fixed 1..=4 stage loop, never from input")
         _ => panic!("stage {s} out of 1..=4"),
     }
 }
@@ -194,6 +195,7 @@ pub fn backward(cfg: &SplitNetConfig, params: &[Vec<f32>], first: usize,
     let mut g = cot.to_vec();
     let mut off = params.len();
     if with_head {
+        // audit:allow(R1, "with_head callers always ran the head forward that fills cache.head")
         let (pooled, xd) = cache.head.as_ref().expect("head cache");
         let fc_w = &params[off - 2];
         let (gw, gb, gx) =
@@ -569,6 +571,7 @@ impl BatchCache {
     /// Move the final stage's batched output out of the cache — the
     /// smashed activations for [`client_fwd`].
     fn into_last_out(mut self) -> Vec<f32> {
+        // audit:allow(R1, "into_last_out is only called after the forward loop pushed >= 1 stage")
         match self.stages.pop().expect("at least one stage ran") {
             BatchStage::Conv { y } => y,
             BatchStage::Res { out, .. } => out,
@@ -694,6 +697,7 @@ fn backward_sample(cfg: &SplitNetConfig, params: &[Vec<f32>],
     let mut off = params.len();
     if with_head {
         let xd = stage_out_dims(cfg, 4);
+        // audit:allow(R1, "with_head callers always ran the batched head forward that fills cache.pooled")
         let pooled_all = cache.pooled.as_ref().expect("head cache");
         let pooled = &pooled_all[j * xd.2..][..xd.2];
         let fc_w = &params[off - 2];

@@ -12,6 +12,33 @@ use std::time::{Duration, Instant};
 use super::stats::{summarize, Summary};
 use super::table::Table;
 
+/// Monotonic wall-clock span measurement for *host-time* statistics:
+/// backend compile/execute counters and the driver's wall-ms report.
+///
+/// The audit pass (R3, see `ANALYSIS.md`) confines `std::time` to this
+/// module so simulated-latency paths can never read the host clock by
+/// accident — everything that legitimately needs real elapsed time
+/// starts a `WallTimer` instead of importing `Instant`.
+#[derive(Debug, Clone, Copy)]
+pub struct WallTimer(Instant);
+
+impl WallTimer {
+    /// Start measuring now.
+    pub fn start() -> Self {
+        WallTimer(Instant::now())
+    }
+
+    /// Seconds elapsed since `start`.
+    pub fn elapsed_seconds(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds elapsed since `start`.
+    pub fn elapsed_millis(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
 /// One benchmark's measured result.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -133,6 +160,7 @@ impl Bencher {
             res.samples
         );
         self.results.push(res);
+        // audit:allow(R1, "a result was pushed on the previous line, so last() is Some")
         self.results.last().unwrap()
     }
 
@@ -202,9 +230,11 @@ impl Bencher {
             .iter()
             .filter_map(|name| by_name.get(name).cloned())
             .collect();
+        let n = records.len();
         std::fs::write(&path, Json::Arr(records).to_string_pretty())
+            // audit:allow(R1, "bench-record tooling path: an unwritable BENCH_JSON target should abort the bench run loudly")
             .expect("write BENCH_JSON");
-        println!("wrote {path} ({} records)", records.len());
+        println!("wrote {path} ({n} records)");
     }
 }
 

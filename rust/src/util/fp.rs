@@ -1,0 +1,50 @@
+//! Floating-point ordering helpers for the optimizer hot paths.
+//!
+//! The solvers (`optim::*`) constantly pick argmin/argmax over latencies,
+//! gains, and objective values. Those quantities are finite by
+//! construction — they come from finite channel rates, FLOP counts, and
+//! payload sizes, with infeasible candidates filtered before comparison —
+//! so `partial_cmp` cannot observe a NaN. Centralizing the comparison
+//! here keeps the one `expect` documented in a single place instead of
+//! two dozen `partial_cmp(..).unwrap()` call sites.
+//!
+//! Deliberately **not** `f64::total_cmp`: total order ranks `-0.0`
+//! below `+0.0`, so swapping it in could flip which of two equal-cost
+//! candidates an argmin picks and silently change bit-exact allocation
+//! golden results. `cmp_finite` preserves the exact `partial_cmp`
+//! semantics every call site shipped with.
+
+use std::cmp::Ordering;
+
+/// Compare two floats that are finite by construction.
+///
+/// Panics only if a caller violates the no-NaN contract, which the
+/// optimizer input validation (`Problem::check_feasible`, evaluator
+/// table construction) rules out.
+#[inline]
+pub fn cmp_finite(a: f64, b: f64) -> Ordering {
+    // audit:allow(R1, "documented contract: optimizer objectives are finite by construction; NaN here is a solver bug worth a loud stop")
+    a.partial_cmp(&b).expect("cmp_finite: NaN in optimizer objective")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_like_partial_cmp() {
+        assert_eq!(cmp_finite(1.0, 2.0), Ordering::Less);
+        assert_eq!(cmp_finite(2.0, 1.0), Ordering::Greater);
+        assert_eq!(cmp_finite(3.5, 3.5), Ordering::Equal);
+        // Signed zeros stay Equal (unlike total_cmp) — load-bearing for
+        // bit-exact argmin tie-breaks.
+        assert_eq!(cmp_finite(-0.0, 0.0), Ordering::Equal);
+        assert_eq!(cmp_finite(f64::INFINITY, 1.0), Ordering::Greater);
+    }
+
+    #[test]
+    #[should_panic(expected = "cmp_finite")]
+    fn nan_is_a_loud_stop() {
+        let _ = cmp_finite(f64::NAN, 0.0);
+    }
+}

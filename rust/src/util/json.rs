@@ -60,7 +60,14 @@ impl Json {
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().filter(|x| *x >= 0.0).map(|x| x as usize)
+        // Same contract as config::toml::Value::as_usize: only exact
+        // non-negative integers (<= 2^53) read as counts — a fractional
+        // or precision-lossy number is a type mismatch, not a value to
+        // silently truncate.
+        const MAX_EXACT_F64: f64 = 9_007_199_254_740_992.0;
+        self.as_f64()
+            .filter(|x| *x >= 0.0 && x.fract() == 0.0 && *x <= MAX_EXACT_F64)
+            .map(|x| x as usize)
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -292,7 +299,9 @@ impl<'a> Parser<'a> {
                     // Copy one UTF-8 scalar.
                     let s = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|e| Error::Io(e.to_string()))?;
-                    let ch = s.chars().next().unwrap();
+                    let ch = s.chars().next().ok_or_else(|| {
+                        Error::Io("JSON: unterminated string".into())
+                    })?;
                     out.push(ch);
                     self.i += ch.len_utf8();
                 }

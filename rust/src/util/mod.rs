@@ -5,6 +5,7 @@
 //! unavailable. Everything the system needs is implemented here:
 //!
 //! - [`par`] — deterministic scoped-thread fork-join parallelism
+//! - [`fp`] — float ordering for optimizer argmin/argmax hot paths
 //! - [`rng`] — splitmix64 / xoshiro256** PRNG with distributions
 //! - [`stats`] — descriptive statistics and simple fits
 //! - [`json`] — minimal JSON writer *and* parser (for the artifact manifest)
@@ -13,6 +14,7 @@
 //! - [`prop`] — property-based testing mini-framework
 
 pub mod bench;
+pub mod fp;
 pub mod json;
 pub mod par;
 pub mod prop;

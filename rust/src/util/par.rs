@@ -59,7 +59,7 @@ where
                     break;
                 }
                 let r = f(i, &items[i]);
-                *slots[i].lock().unwrap() = Some(r);
+                *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
             });
         }
     });
@@ -67,7 +67,8 @@ where
         .into_iter()
         .map(|slot| {
             slot.into_inner()
-                .unwrap()
+                .unwrap_or_else(|e| e.into_inner())
+                // audit:allow(R1, "scope has joined and the cursor covered every index, so each slot holds Some; a worker panic would have propagated at join")
                 .expect("parallel_map: every slot is filled before join")
         })
         .collect()

@@ -96,6 +96,7 @@ pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) + std::panic::Ref
                 .cloned()
                 .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
+            // audit:allow(R1, "the property harness reports failures by panicking inside the test process; this is its one reporting channel")
             panic!(
                 "property '{name}' failed on case {case} (replay seed \
                  {seed:#x}, size {size}):\n  {msg}"

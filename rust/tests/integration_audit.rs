@@ -1,0 +1,339 @@
+//! Fixture tests for the `epsl-audit` static-analysis pass, the
+//! live-tree clean self-check, and regression tests for the bugs the
+//! first tree-wide sweep surfaced.
+//!
+//! Fixtures are audited as in-memory strings with a pretend repo path,
+//! so each rule's firing and suppression behavior is pinned without
+//! touching the real tree. All forbidden tokens below live inside
+//! string literals, which the audit lexer blanks — this file audits
+//! clean even though it spells out every violation.
+
+use std::path::PathBuf;
+
+use epsl::analysis::{audit_source, audit_tree, severity, RuleId, Severity};
+
+/// Repo root: the crate manifest lives in `rust/`, the audited tree is
+/// its parent.
+fn repo_root() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().map(PathBuf::from).unwrap_or(manifest)
+}
+
+fn rules_fired(rel: &str, src: &str) -> Vec<RuleId> {
+    let mut rules: Vec<RuleId> =
+        audit_source(rel, src).findings.iter().map(|f| f.rule).collect();
+    rules.dedup();
+    rules
+}
+
+// ---- R1: no unwrap/expect/panic in non-test library code ---------------
+
+#[test]
+fn r1_fires_on_library_unwrap() {
+    let src = "pub fn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+    assert_eq!(rules_fired("rust/src/latency/fake.rs", src), vec![RuleId::R1]);
+}
+
+#[test]
+fn r1_negative_test_code_and_non_src() {
+    let test_src = "#[cfg(test)]\nmod tests {\n fn f() { o.unwrap(); }\n}\n";
+    assert!(rules_fired("rust/src/latency/fake.rs", test_src).is_empty());
+    // Integration tests, benches, and examples may panic freely.
+    let src = "fn f() { o.unwrap(); p.expect(\"m\"); panic!(\"x\"); }\n";
+    assert!(rules_fired("rust/tests/fake.rs", src).is_empty());
+    assert!(rules_fired("rust/benches/fake.rs", src).is_empty());
+    assert!(rules_fired("examples/fake.rs", src).is_empty());
+    // Non-panicking cousins don't fire.
+    let ok = "pub fn f(x: Option<u8>) -> u8 { x.unwrap_or(0) }\n";
+    assert!(rules_fired("rust/src/latency/fake.rs", ok).is_empty());
+}
+
+// ---- R2: no hash-ordered maps in deterministic modules -----------------
+
+#[test]
+fn r2_fires_in_deterministic_modules() {
+    let src = "use std::collections::HashMap;\n";
+    for rel in [
+        "rust/src/optim/fake.rs",
+        "rust/src/timeline/fake.rs",
+        "rust/src/coordinator/fake.rs",
+        "rust/src/scenario/fake.rs",
+        "rust/src/runtime/native/fake.rs",
+    ] {
+        assert_eq!(rules_fired(rel, src), vec![RuleId::R2], "{rel}");
+    }
+}
+
+#[test]
+fn r2_negative_outside_det_modules_and_for_btreemap() {
+    let src = "use std::collections::HashMap;\n";
+    assert!(rules_fired("rust/src/util/fake.rs", src).is_empty());
+    let ok = "use std::collections::BTreeMap;\n";
+    assert!(rules_fired("rust/src/optim/fake.rs", ok).is_empty());
+}
+
+// ---- R3: no host clock outside bench + driver wall-stats ---------------
+
+#[test]
+fn r3_fires_on_instant_in_src() {
+    let src = "use std::time::Instant;\n";
+    assert_eq!(rules_fired("rust/src/runtime/fake.rs", src), vec![RuleId::R3]);
+    let sys = "let t = SystemTime::now();\n";
+    assert_eq!(rules_fired("rust/src/channel/fake.rs", sys), vec![RuleId::R3]);
+}
+
+#[test]
+fn r3_negative_in_exempt_files() {
+    let src = "use std::time::Instant;\n";
+    assert!(rules_fired("rust/src/util/bench.rs", src).is_empty());
+    assert!(rules_fired("rust/src/coordinator/driver.rs", src)
+        .iter()
+        .all(|r| *r != RuleId::R3));
+    // Benches measure wall time by design.
+    assert!(rules_fired("rust/benches/fake.rs", src).is_empty());
+}
+
+// ---- R4: no ambient entropy -------------------------------------------
+
+#[test]
+fn r4_fires_everywhere() {
+    for tok in ["thread_rng()", "from_entropy()", "RandomState::new()"] {
+        let src = format!("let r = {tok};\n");
+        for rel in ["rust/src/util/fake.rs", "rust/tests/fake.rs",
+                    "examples/fake.rs"] {
+            assert_eq!(
+                rules_fired(rel, &src),
+                vec![RuleId::R4],
+                "{tok} in {rel}"
+            );
+        }
+    }
+}
+
+#[test]
+fn r4_negative_named_streams() {
+    // The sanctioned pattern: forking a named stream from the run seed.
+    let src = "let mut rng = Rng::new(seed).fork(0xFA17);\n";
+    assert!(rules_fired("rust/src/scenario/fake.rs", src).is_empty());
+}
+
+// ---- R5: no fast-math / ad-hoc threading ------------------------------
+
+#[test]
+fn r5_fires_on_mul_add_and_threading() {
+    let fma = "let y = a.mul_add(b, c);\n";
+    assert_eq!(
+        rules_fired("rust/src/runtime/native/kernels.rs", fma),
+        vec![RuleId::R5]
+    );
+    let spawn = "std::thread::spawn(move || work());\n";
+    assert_eq!(rules_fired("rust/src/experiments/fake.rs", spawn),
+               vec![RuleId::R5]);
+    let par = "let s: f32 = v.par_iter().sum();\n";
+    assert_eq!(rules_fired("rust/src/optim/fake.rs", par)
+                   .iter()
+                   .filter(|r| **r == RuleId::R5)
+                   .count(),
+               1);
+}
+
+#[test]
+fn r5_negative_in_util_par_and_plain_code() {
+    let spawn = "std::thread::scope(|scope| { scope.spawn(|| f()); });\n";
+    assert!(rules_fired("rust/src/util/par.rs", spawn).is_empty());
+    // A plain multiply-add spelled out does not fire.
+    let ok = "let y = a * b + c; let z = v.iter().sum::<f32>();\n";
+    assert!(rules_fired("rust/src/runtime/native/kernels.rs", ok).is_empty());
+}
+
+// ---- R6: narrowing casts in parsing layers ----------------------------
+
+#[test]
+fn r6_fires_in_config_and_checkpoint() {
+    let src = "let n = x as u32;\n";
+    assert_eq!(rules_fired("rust/src/config/fake.rs", src), vec![RuleId::R6]);
+    assert_eq!(
+        rules_fired("rust/src/coordinator/checkpoint.rs", src),
+        vec![RuleId::R6]
+    );
+}
+
+#[test]
+fn r6_negative_widening_and_out_of_scope() {
+    // Widening casts are fine even in scope.
+    let ok = "let n = x as u64; let f = y as f64;\n";
+    assert!(rules_fired("rust/src/config/fake.rs", ok).is_empty());
+    // Narrowing casts outside the parsing layers are other rules' turf.
+    let src = "let n = x as u32;\n";
+    assert!(rules_fired("rust/src/latency/fake.rs", src).is_empty());
+}
+
+#[test]
+fn r6_is_advisory_unless_deny_all() {
+    assert_eq!(severity(RuleId::R6, false), Severity::Warn);
+    assert_eq!(severity(RuleId::R6, true), Severity::Deny);
+    for rule in [RuleId::R1, RuleId::R2, RuleId::R3, RuleId::R4, RuleId::R5] {
+        assert_eq!(severity(rule, false), Severity::Deny, "{rule}");
+    }
+}
+
+// ---- suppression directives -------------------------------------------
+
+#[test]
+fn suppression_same_line_and_preceding_comment() {
+    let trailing = "let v = o.unwrap(); \
+                    // audit:allow(R1, \"established invariant\")\n";
+    let fa = audit_source("rust/src/latency/fake.rs", trailing);
+    assert!(fa.findings.is_empty());
+    assert_eq!(fa.suppressed, 1);
+
+    let preceding = "// audit:allow(R2, \"never iterated, keyed get/insert only\")\n\
+                     use std::collections::HashMap;\n";
+    let fa = audit_source("rust/src/optim/fake.rs", preceding);
+    assert!(fa.findings.is_empty());
+    assert_eq!(fa.suppressed, 1);
+}
+
+#[test]
+fn suppression_requires_matching_rule_and_reason() {
+    // Wrong rule id: the finding survives.
+    let wrong = "let v = o.unwrap(); // audit:allow(R3, \"wrong rule\")\n";
+    assert_eq!(rules_fired("rust/src/latency/fake.rs", wrong),
+               vec![RuleId::R1]);
+    // Missing reason: malformed directive, finding survives.
+    let bare = "let v = o.unwrap(); // audit:allow(R1)\n";
+    assert_eq!(rules_fired("rust/src/latency/fake.rs", bare),
+               vec![RuleId::R1]);
+    // Directive does not leak past an intervening code line.
+    let stale = "// audit:allow(R1, \"one line only\")\nlet a = 1;\n\
+                 let v = o.unwrap();\n";
+    let fa = audit_source("rust/src/latency/fake.rs", stale);
+    assert_eq!(fa.findings.len(), 1);
+    assert_eq!(fa.findings[0].line, 3);
+}
+
+// ---- the live tree audits clean (epsl-audit --deny-all contract) ------
+
+#[test]
+fn live_tree_audits_clean_under_deny_all() {
+    let report = audit_tree(&repo_root()).expect("audit walk failed");
+    assert!(
+        report.files_scanned > 50,
+        "suspiciously few files scanned ({}) — wrong root?",
+        report.files_scanned
+    );
+    let listing: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| format!("{}:{}: {} [{}] {}",
+                         f.path, f.line, f.rule, f.token, f.snippet))
+        .collect();
+    // Zero findings of ANY severity: `epsl-audit --deny-all` must exit 0.
+    assert!(
+        report.findings.is_empty(),
+        "live tree has audit findings:\n{}",
+        listing.join("\n")
+    );
+}
+
+// ---- serial-vs-threaded parity over the swept coordinator paths -------
+
+#[test]
+fn training_parity_serial_vs_threaded_after_sweep() {
+    // The HashMap→BTreeMap swap (session mask_cache, driver) and the
+    // error-handling sweep must leave training bit-identical across
+    // thread counts: EPSL φ=0.5 exercises the mask cache, evaluation,
+    // and the λ-aggregation path end to end.
+    use epsl::config::Config;
+    use epsl::coordinator::{train, TrainerOptions};
+    use epsl::latency::frameworks::Framework;
+    use epsl::runtime::native::{self, NativeBackend};
+
+    let cfg = Config::new();
+    let m = native::manifest();
+    let opts = TrainerOptions {
+        framework: Framework::Epsl { phi: 0.5 },
+        n_clients: 3,
+        rounds: 6,
+        eval_every: 3,
+        dataset_size: 480,
+        test_size: 256,
+        eta_c: 0.1,
+        eta_s: 0.1,
+        seed: 2024,
+        ..Default::default()
+    };
+    let a = train(&NativeBackend::with_threads(1), &m, &cfg, &opts)
+        .expect("serial run failed");
+    let b = train(&NativeBackend::with_threads(8), &m, &cfg, &opts)
+        .expect("threaded run failed");
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(
+            ra.loss.to_bits(),
+            rb.loss.to_bits(),
+            "round {} loss diverged across thread counts",
+            ra.round
+        );
+        assert_eq!(ra.test_acc.map(f64::to_bits),
+                   rb.test_acc.map(f64::to_bits));
+        assert_eq!(ra.sim_latency.to_bits(), rb.sim_latency.to_bits());
+    }
+}
+
+// ---- regression: bugs surfaced by the first sweep ---------------------
+
+#[test]
+fn regression_toml_as_usize_rejects_non_integers() {
+    use epsl::config::toml::Value;
+    assert_eq!(Value::Num(2.0).as_usize(), Some(2));
+    assert_eq!(Value::Num(0.0).as_usize(), Some(0));
+    // Fractional counts used to silently truncate (rounds = 2.7 → 2).
+    assert_eq!(Value::Num(2.7).as_usize(), None);
+    assert_eq!(Value::Num(-1.0).as_usize(), None);
+    // Past 2^53 the f64 has already lost integer precision.
+    assert_eq!(Value::Num(1e16).as_usize(), None);
+    assert_eq!(Value::Str("3".into()).as_usize(), None);
+}
+
+#[test]
+fn regression_json_as_usize_rejects_non_integers() {
+    use epsl::util::json::Json;
+    assert_eq!(Json::Num(64.0).as_usize(), Some(64));
+    assert_eq!(Json::Num(64.5).as_usize(), None);
+    assert_eq!(Json::Num(-2.0).as_usize(), None);
+}
+
+#[test]
+fn regression_init_seed_uses_all_64_bits() {
+    // The init literal used to pass [0, seed as u32]: seeds differing
+    // only in the high 32 bits collapsed to identical model inits.
+    use epsl::config::Config;
+    use epsl::coordinator::{train, TrainerOptions};
+    use epsl::latency::frameworks::Framework;
+    use epsl::runtime::native::{self, NativeBackend};
+
+    let cfg = Config::new();
+    let m = native::manifest();
+    let rt = NativeBackend::with_threads(1);
+    let mk = |seed: u64| TrainerOptions {
+        framework: Framework::Psl,
+        n_clients: 2,
+        rounds: 1,
+        eval_every: 1,
+        dataset_size: 320,
+        test_size: 256,
+        eta_c: 0.1,
+        eta_s: 0.1,
+        seed,
+        ..Default::default()
+    };
+    let lo = train(&rt, &m, &cfg, &mk(7)).expect("seed=7 run failed");
+    let hi = train(&rt, &m, &cfg, &mk(7 + (1u64 << 32)))
+        .expect("seed=7+2^32 run failed");
+    assert_ne!(
+        lo.rounds[0].loss.to_bits(),
+        hi.rounds[0].loss.to_bits(),
+        "seeds differing only in the high 32 bits must not collide"
+    );
+}
