@@ -16,18 +16,36 @@
 //! * **R6** applies to `rust/src/config/**` and
 //!   `rust/src/coordinator/checkpoint.rs` — the parsing layers where a
 //!   silent narrowing cast corrupts a run instead of crashing it.
+//! * **R7** applies to `rust/src/**` *including* test regions (a
+//!   test-only back-edge still couples the layers at build time);
+//!   `lib.rs` is exempt, being the module root that declares every
+//!   layer.
+//! * **R8** applies to `rust/src/**` outside test regions. Raw
+//!   integer fork tags are denied everywhere; named tags must resolve
+//!   in the `util::rng::streams` registry; a registered tag *value*
+//!   reappearing as a raw literal anywhere outside `util/rng.rs` is a
+//!   collision-in-waiting and also denied. Auditing `util/rng.rs`
+//!   itself re-parses the registry from the audited text and checks it
+//!   for duplicate values, sub-`0x1000` tags, and `ALL`-mirror drift.
+//! * **R9** applies everywhere a directive can appear: after the file
+//!   pass, any well-formed `audit:allow` that suppressed nothing is
+//!   itself a finding (stale suppression). An `allow(R9)` aimed at the
+//!   directive's own line silences it; a stale `allow(R9)` is always
+//!   reported — the ratchet needs a fixed point.
 //!
 //! Test regions are tracked by brace depth: a line containing
 //! `cfg(test)` or `#[test]` marks the next opened brace as a test
-//! scope; R1 is waived until that brace closes. The test decision for
-//! a line is made at its *start*, so a violation on the same line as
-//! the opening `{` of a test module is still reported.
+//! scope; R1/R8 are waived until that brace closes. The test decision
+//! for a line is made at its *start*, so a violation on the same line
+//! as the opening `{` of a test module is still reported.
 
+use std::collections::BTreeMap;
 use std::fs;
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 
+use super::items::{scan_items, ForkArg, StreamRegistry};
 use super::lexer::lex;
 use super::rules::{scan_allows, scan_rule, RuleId};
 
@@ -55,6 +73,63 @@ const R5_EXEMPT: [&str; 1] = ["rust/src/util/par.rs"];
 const R6_SCOPE: [&str; 2] =
     ["rust/src/config/", "rust/src/coordinator/checkpoint.rs"];
 
+/// Home of the `streams` tag registry; exempt from the R8
+/// raw-value-collision scan (its constants *are* the values).
+const RNG_PATH: &str = "rust/src/util/rng.rs";
+
+/// The module layering DAG as a strict rank map: a reference from
+/// module A to module B is legal iff `rank(B) < rank(A)` or `A == B`.
+/// This refines the coarse layer diagram in `ANALYSIS.md` — modules
+/// sharing a layer there get distinct ranks here reflecting their real
+/// (acyclic) intra-layer order, e.g. `channel` reads `config` but never
+/// the reverse.
+pub const LAYER_MAP: [(&str, u32); 16] = [
+    ("error", 0),
+    ("util", 1),
+    ("analysis", 2),
+    ("config", 2),
+    ("channel", 3),
+    ("profile", 3),
+    ("data", 3),
+    ("latency", 4),
+    ("optim", 5),
+    ("timeline", 6),
+    ("metrics", 7),
+    ("scenario", 8),
+    ("runtime", 9),
+    ("coordinator", 10),
+    ("experiments", 11),
+    ("bin", 12),
+];
+
+fn rank_of(module: &str) -> Option<u32> {
+    LAYER_MAP.iter().find(|(m, _)| *m == module).map(|(_, r)| *r)
+}
+
+/// The layering module a `rust/src` file belongs to, or `None` when
+/// the file is out of R7 scope (`lib.rs`, or not under `rust/src`).
+pub fn module_of(rel: &str) -> Option<&'static str> {
+    let rest = rel.strip_prefix("rust/src/")?;
+    if rest == "lib.rs" {
+        return None;
+    }
+    if rest == "main.rs" || rest.starts_with("bin/") {
+        return Some("bin");
+    }
+    let head = rest.split('/').next().unwrap_or(rest);
+    let head = head.strip_suffix(".rs").unwrap_or(head);
+    LAYER_MAP.iter().find(|(m, _)| *m == head).map(|(m, _)| *m)
+}
+
+/// Map a `crate::X` reference head to its layering module. The only
+/// crate-root re-exports are `Error`/`Result` from `error`.
+fn ref_module(head: &str) -> Option<&'static str> {
+    if head == "Error" || head == "Result" {
+        return Some("error");
+    }
+    LAYER_MAP.iter().find(|(m, _)| *m == head).map(|(m, _)| *m)
+}
+
 /// How a finding is treated by the reporting layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Severity {
@@ -66,7 +141,9 @@ pub enum Severity {
 
 /// Severity of `rule` under the given strictness. R6 findings are
 /// advisory by default (a reviewed narrowing cast is sometimes the
-/// right tool); `--deny-all` promotes them, and CI runs that way.
+/// right tool); `--deny-all` promotes them, and CI runs that way. The
+/// semantic rules R7–R9 deny by default: a layering back-edge, an
+/// unregistered fork tag, or a stale suppression is never "advisory".
 pub fn severity(rule: RuleId, deny_all: bool) -> Severity {
     if deny_all {
         return Severity::Deny;
@@ -91,6 +168,15 @@ pub struct Finding {
     pub snippet: String,
 }
 
+impl Finding {
+    /// The baseline identity of this finding: stable under unrelated
+    /// edits (line drift), specific enough that a *new* violation of
+    /// the same rule in the same file does not ride an old entry.
+    pub fn baseline_key(&self) -> String {
+        format!("{}|{}|{}", self.path, self.rule, self.token)
+    }
+}
+
 /// Result of auditing one source file.
 #[derive(Debug, Default)]
 pub struct FileAudit {
@@ -105,6 +191,14 @@ pub struct AuditReport {
     pub findings: Vec<Finding>,
     pub files_scanned: usize,
     pub suppressed: usize,
+}
+
+impl AuditReport {
+    /// Count of stale-suppression (R9) findings — the number CI pins
+    /// to zero.
+    pub fn stale_suppressions(&self) -> usize {
+        self.findings.iter().filter(|f| f.rule == RuleId::R9).count()
+    }
 }
 
 fn applicable_rules(rel: &str, in_test: bool) -> Vec<RuleId> {
@@ -133,12 +227,169 @@ fn snippet_of(code: &str) -> String {
     code.trim().chars().take(90).collect()
 }
 
+/// One well-formed `audit:allow` directive found in the file, with the
+/// line its suppression applies to and whether it ever fired.
+struct Directive {
+    rule: RuleId,
+    /// Line the directive is written on.
+    source_line: usize,
+    /// Line whose findings it suppresses (own line, or the next line
+    /// when the directive sits on a comment-only line).
+    target_line: usize,
+    used: bool,
+}
+
+/// An item-level (R7/R8) violation candidate waiting for the main
+/// pass's test-region and suppression decisions.
+struct ItemHit {
+    rule: RuleId,
+    token: String,
+    /// Waived inside `#[cfg(test)]` regions (R8 is; R7 is not).
+    test_waived: bool,
+}
+
 /// Audit one file's source text. `rel` is the repo-root-relative path
 /// used for rule scoping and reporting; the text does not have to come
 /// from disk, which is what the fixture tests rely on.
+///
+/// Runs with no stream registry: R8 still denies raw-literal fork
+/// tags, but named-tag resolution and raw-value collision checks are
+/// skipped. [`audit_tree`] and the fixture tests that exercise those
+/// checks use [`audit_source_with`].
 pub fn audit_source(rel: &str, text: &str) -> FileAudit {
+    audit_source_with(rel, text, None)
+}
+
+/// [`audit_source`] with an explicit `util::rng::streams` registry for
+/// the R8 named-tag and raw-value-collision checks.
+pub fn audit_source_with(
+    rel: &str,
+    text: &str,
+    registry: Option<&StreamRegistry>,
+) -> FileAudit {
     let lines = lex(text);
     let mut out = FileAudit::default();
+    let is_src = rel.starts_with("rust/src/");
+
+    // Auditing the registry file itself re-parses the registry from
+    // the audited text, so fixtures exercise the self-checks and the
+    // live pass can never check rng.rs against a stale copy.
+    let own_registry =
+        if rel == RNG_PATH { Some(StreamRegistry::parse(text)) } else { None };
+    let effective = own_registry.as_ref().or(registry);
+
+    // Collect directives with target lines and used-flags (R9 input).
+    let mut directives: Vec<Directive> = Vec::new();
+    for (ix, line) in lines.iter().enumerate() {
+        let ln = ix + 1;
+        let target = if line.code.trim().is_empty() { ln + 1 } else { ln };
+        for (rule, _) in scan_allows(&line.comment) {
+            directives.push(Directive {
+                rule,
+                source_line: ln,
+                target_line: target,
+                used: false,
+            });
+        }
+    }
+    let mut by_target: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (di, d) in directives.iter().enumerate() {
+        by_target.entry(d.target_line).or_default().push(di);
+    }
+
+    // Item-level (R7/R8) violation candidates, keyed by line.
+    let mut item_hits: BTreeMap<usize, Vec<ItemHit>> = BTreeMap::new();
+    if is_src {
+        let items = scan_items(&lines);
+        if let Some(own) = module_of(rel) {
+            let own_rank = rank_of(own).unwrap_or(u32::MAX);
+            for mr in &items.module_refs {
+                let target = match ref_module(&mr.module) {
+                    Some(t) => t,
+                    None => continue,
+                };
+                if target != own && rank_of(target).unwrap_or(0) >= own_rank {
+                    item_hits.entry(mr.line).or_default().push(ItemHit {
+                        rule: RuleId::R7,
+                        token: format!("crate::{}", mr.module),
+                        test_waived: false,
+                    });
+                }
+            }
+        }
+        for fork in &items.forks {
+            match &fork.arg {
+                ForkArg::Literal { text, .. } => {
+                    item_hits.entry(fork.line).or_default().push(ItemHit {
+                        rule: RuleId::R8,
+                        token: format!(".fork({text})"),
+                        test_waived: true,
+                    });
+                }
+                ForkArg::Named { name, text } => {
+                    if let Some(reg) = effective {
+                        if !reg.contains(name) {
+                            item_hits.entry(fork.line).or_default().push(
+                                ItemHit {
+                                    rule: RuleId::R8,
+                                    token: format!(".fork({text})"),
+                                    test_waived: true,
+                                },
+                            );
+                        }
+                    }
+                }
+                ForkArg::Threaded { .. } => {}
+            }
+        }
+        if rel != RNG_PATH {
+            if let Some(reg) = effective {
+                for lit in &items.int_lits {
+                    let names = reg.names_of(lit.value);
+                    if let Some(name) = names.first() {
+                        item_hits.entry(lit.line).or_default().push(ItemHit {
+                            rule: RuleId::R8,
+                            token: format!(
+                                "{:#x} (= streams::{name})",
+                                lit.value
+                            ),
+                            test_waived: true,
+                        });
+                    }
+                }
+            }
+        }
+        if let Some(own) = &own_registry {
+            for (a, b) in own.duplicate_values() {
+                item_hits.entry(b.line).or_default().push(ItemHit {
+                    rule: RuleId::R8,
+                    token: format!(
+                        "{} duplicates {} (= {:#x})",
+                        b.name, a.name, b.value
+                    ),
+                    test_waived: false,
+                });
+            }
+            for d in own.low_values() {
+                item_hits.entry(d.line).or_default().push(ItemHit {
+                    rule: RuleId::R8,
+                    token: format!("{} = {:#x} below 0x1000", d.name, d.value),
+                    test_waived: false,
+                });
+            }
+            let mod_line = own.mod_line.unwrap_or(1);
+            for msg in own.mirror_mismatch() {
+                item_hits.entry(mod_line).or_default().push(ItemHit {
+                    rule: RuleId::R8,
+                    token: msg,
+                    test_waived: false,
+                });
+            }
+        }
+    }
+
+    // Main pass: token rules + item hits, with test-region tracking
+    // and suppression accounting.
     let mut depth: i64 = 0;
     let mut test_stack: Vec<i64> = Vec::new();
     let mut pending_test = false;
@@ -148,24 +399,22 @@ pub fn audit_source(rel: &str, text: &str) -> FileAudit {
         if line.code.contains("cfg(test)") || line.code.contains("#[test]") {
             pending_test = true;
         }
-        // Directives on the same line, or on an immediately preceding
-        // comment-only line, suppress this line's findings.
-        let mut allows: Vec<RuleId> =
-            scan_allows(&line.comment).into_iter().map(|(r, _)| r).collect();
-        if ix > 0 {
-            let prev = &lines[ix - 1];
-            if prev.code.trim().is_empty() {
-                allows.extend(
-                    scan_allows(&prev.comment).into_iter().map(|(r, _)| r),
-                );
-            }
-        }
-        for rule in applicable_rules(rel, in_test) {
-            for token in scan_rule(rule, &line.code) {
-                if allows.contains(&rule) {
-                    out.suppressed += 1;
-                    continue;
+        let dirs_here: &[usize] =
+            by_target.get(&ln).map(|v| v.as_slice()).unwrap_or(&[]);
+        let suppress = |rule: RuleId,
+                            token: String,
+                            directives: &mut Vec<Directive>,
+                            out: &mut FileAudit| {
+            let mut hit = false;
+            for &di in dirs_here {
+                if directives[di].rule == rule {
+                    directives[di].used = true;
+                    hit = true;
                 }
+            }
+            if hit {
+                out.suppressed += 1;
+            } else {
                 out.findings.push(Finding {
                     path: rel.to_string(),
                     line: ln,
@@ -173,6 +422,19 @@ pub fn audit_source(rel: &str, text: &str) -> FileAudit {
                     token,
                     snippet: snippet_of(&line.code),
                 });
+            }
+        };
+        for rule in applicable_rules(rel, in_test) {
+            for token in scan_rule(rule, &line.code) {
+                suppress(rule, token, &mut directives, &mut out);
+            }
+        }
+        if let Some(hits) = item_hits.get(&ln) {
+            for hit in hits {
+                if hit.test_waived && in_test {
+                    continue;
+                }
+                suppress(hit.rule, hit.token.clone(), &mut directives, &mut out);
             }
         }
         for c in line.code.chars() {
@@ -190,6 +452,70 @@ pub fn audit_source(rel: &str, text: &str) -> FileAudit {
             }
         }
     }
+
+    // R9 pass: an unused directive is a stale suppression. Non-R9
+    // directives first — each may be silenced by an `allow(R9)` whose
+    // target is the stale directive's own line, which marks that R9
+    // directive used. Whatever `allow(R9)`s remain unused after that
+    // are themselves stale, reported unconditionally.
+    let stale: Vec<usize> = directives
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| !d.used && d.rule != RuleId::R9)
+        .map(|(i, _)| i)
+        .collect();
+    for si in stale {
+        let (src_line, rule) =
+            (directives[si].source_line, directives[si].rule);
+        let mut silenced = false;
+        if let Some(dis) = by_target.get(&src_line) {
+            for &di in dis {
+                if directives[di].rule == RuleId::R9 {
+                    directives[di].used = true;
+                    silenced = true;
+                }
+            }
+        }
+        if silenced {
+            out.suppressed += 1;
+        } else {
+            out.findings.push(Finding {
+                path: rel.to_string(),
+                line: src_line,
+                rule: RuleId::R9,
+                token: format!("audit:allow({rule})"),
+                snippet: snippet_of(
+                    &lines
+                        .get(src_line - 1)
+                        .map(|l| {
+                            format!("{}{}", l.code.trim_end(), l.comment)
+                        })
+                        .unwrap_or_default(),
+                ),
+            });
+        }
+    }
+    for d in &directives {
+        if !d.used && d.rule == RuleId::R9 {
+            out.findings.push(Finding {
+                path: rel.to_string(),
+                line: d.source_line,
+                rule: RuleId::R9,
+                token: "audit:allow(R9)".to_string(),
+                snippet: snippet_of(
+                    &lines
+                        .get(d.source_line - 1)
+                        .map(|l| {
+                            format!("{}{}", l.code.trim_end(), l.comment)
+                        })
+                        .unwrap_or_default(),
+                ),
+            });
+        }
+    }
+    out.findings.sort_by(|a, b| {
+        (a.line, a.rule as u32).cmp(&(b.line, b.rule as u32))
+    });
     out
 }
 
@@ -214,8 +540,14 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
 }
 
 /// Walk the audited roots under `root` (deterministically: sorted
-/// directory entries) and audit every `.rs` file.
+/// directory entries) and audit every `.rs` file. The stream registry
+/// is parsed from `rust/src/util/rng.rs` first so every file's R8
+/// checks see the same tag table.
 pub fn audit_tree(root: &Path) -> Result<AuditReport> {
+    let registry = match fs::read_to_string(root.join(RNG_PATH)) {
+        Ok(text) => Some(StreamRegistry::parse(&text)),
+        Err(_) => None,
+    };
     let mut files: Vec<PathBuf> = Vec::new();
     for wr in WALK_ROOTS {
         let dir = root.join(wr);
@@ -230,7 +562,7 @@ pub fn audit_tree(root: &Path) -> Result<AuditReport> {
             .map_err(|e| Error::Io(format!("read {}: {e}", path.display())))?;
         let rel_path = path.strip_prefix(root).unwrap_or(path);
         let rel = rel_path.to_string_lossy().replace('\\', "/");
-        let fa = audit_source(&rel, &text);
+        let fa = audit_source_with(&rel, &text, registry.as_ref());
         report.findings.extend(fa.findings);
         report.suppressed += fa.suppressed;
         report.files_scanned += 1;
@@ -290,15 +622,22 @@ mod tests {
                    let a = 1;\n\
                    let v = o.unwrap();\n";
         let fa = audit_source("rust/src/lib.rs", src);
-        assert_eq!(fa.findings.len(), 1);
-        assert_eq!(fa.findings[0].line, 3);
+        // The unwrap on line 3 fires, and the directive — which
+        // suppressed nothing — is now itself a stale-allow finding.
+        assert_eq!(fa.findings.len(), 2);
+        assert_eq!(fa.findings[0].line, 1);
+        assert_eq!(fa.findings[0].rule, RuleId::R9);
+        assert_eq!(fa.findings[1].line, 3);
+        assert_eq!(fa.findings[1].rule, RuleId::R1);
     }
 
     #[test]
     fn wrong_rule_allow_does_not_suppress() {
         let src = "let v = o.unwrap(); // audit:allow(R2, \"wrong rule\")\n";
         let fa = audit_source("rust/src/lib.rs", src);
-        assert_eq!(fa.findings.len(), 1);
+        assert_eq!(fa.findings.len(), 2, "{:?}", fa.findings);
+        assert!(fa.findings.iter().any(|f| f.rule == RuleId::R1));
+        assert!(fa.findings.iter().any(|f| f.rule == RuleId::R9));
         assert_eq!(fa.suppressed, 0);
     }
 
@@ -356,6 +695,9 @@ mod tests {
         assert_eq!(severity(RuleId::R1, false), Severity::Deny);
         assert_eq!(severity(RuleId::R6, false), Severity::Warn);
         assert_eq!(severity(RuleId::R6, true), Severity::Deny);
+        assert_eq!(severity(RuleId::R7, false), Severity::Deny);
+        assert_eq!(severity(RuleId::R8, false), Severity::Deny);
+        assert_eq!(severity(RuleId::R9, false), Severity::Deny);
     }
 
     #[test]
@@ -363,5 +705,203 @@ mod tests {
         let src = "let s = \"call .unwrap() on a HashMap\"; // Instant\n";
         let fa = audit_source("rust/src/optim/x.rs", src);
         assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+
+    #[test]
+    fn module_of_paths() {
+        assert_eq!(module_of("rust/src/optim/bcd.rs"), Some("optim"));
+        assert_eq!(module_of("rust/src/error.rs"), Some("error"));
+        assert_eq!(module_of("rust/src/main.rs"), Some("bin"));
+        assert_eq!(module_of("rust/src/bin/epsl_audit.rs"), Some("bin"));
+        assert_eq!(module_of("rust/src/lib.rs"), None);
+        assert_eq!(module_of("rust/tests/t.rs"), None);
+    }
+
+    #[test]
+    fn r7_back_edge_fires_and_downward_edge_does_not() {
+        let back = "use crate::coordinator::train;\n";
+        let fa = audit_source("rust/src/optim/bcd.rs", back);
+        assert_eq!(fa.findings.len(), 1, "{:?}", fa.findings);
+        assert_eq!(fa.findings[0].rule, RuleId::R7);
+        assert_eq!(fa.findings[0].token, "crate::coordinator");
+
+        let down = "use crate::util::rng::Rng;\nuse crate::channel::Deployment;\n";
+        let fa = audit_source("rust/src/optim/bcd.rs", down);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+
+    #[test]
+    fn r7_same_rank_cross_edge_fires_self_edge_does_not() {
+        // config and analysis share rank 2: neither may read the other.
+        let fa = audit_source(
+            "rust/src/config/mod.rs",
+            "use crate::analysis::engine;\n",
+        );
+        assert!(fa.findings.iter().any(|f| f.rule == RuleId::R7));
+        let fa = audit_source(
+            "rust/src/config/toml.rs",
+            "use crate::config::NetworkConfig;\n",
+        );
+        assert!(fa.findings.iter().all(|f| f.rule != RuleId::R7));
+    }
+
+    #[test]
+    fn r7_applies_inside_test_regions() {
+        let src = "#[cfg(test)]\n\
+                   mod tests {\n\
+                   use crate::experiments::sweep;\n\
+                   }\n";
+        let fa = audit_source("rust/src/scenario/run.rs", src);
+        assert!(
+            fa.findings.iter().any(|f| f.rule == RuleId::R7),
+            "{:?}",
+            fa.findings
+        );
+    }
+
+    #[test]
+    fn r7_error_result_reexports_map_to_error() {
+        let src = "use crate::Result;\nfn f() -> crate::Error { todo!() }\n";
+        let fa = audit_source("rust/src/util/x.rs", src);
+        assert!(
+            fa.findings.iter().all(|f| f.rule != RuleId::R7),
+            "{:?}",
+            fa.findings
+        );
+    }
+
+    #[test]
+    fn r8_literal_fork_fires_outside_tests_only() {
+        let src = "let a = rng.fork(0xFEA7);\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn g() { let b = rng.fork(0x2222); }\n\
+                   }\n";
+        let fa = audit_source("rust/src/scenario/x.rs", src);
+        let r8: Vec<usize> = fa
+            .findings
+            .iter()
+            .filter(|f| f.rule == RuleId::R8)
+            .map(|f| f.line)
+            .collect();
+        assert_eq!(r8, vec![1]);
+    }
+
+    #[test]
+    fn r8_named_fork_checked_against_registry() {
+        let reg = StreamRegistry::parse(
+            "pub mod streams {\n\
+             pub const GOOD_TAG: u64 = 0x1234;\n\
+             pub const ALL: [u64; 1] = [GOOD_TAG];\n\
+             }\n",
+        );
+        let good = "let a = rng.fork(streams::GOOD_TAG);\n";
+        let fa = audit_source_with("rust/src/scenario/x.rs", good, Some(&reg));
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+
+        let bad = "let a = rng.fork(streams::MYSTERY_TAG);\n";
+        let fa = audit_source_with("rust/src/scenario/x.rs", bad, Some(&reg));
+        assert_eq!(fa.findings.len(), 1);
+        assert_eq!(fa.findings[0].rule, RuleId::R8);
+
+        // Without a registry the named check is skipped (fixture mode).
+        let fa = audit_source("rust/src/scenario/x.rs", bad);
+        assert!(fa.findings.is_empty());
+    }
+
+    #[test]
+    fn r8_registered_value_as_raw_literal_fires() {
+        let reg = StreamRegistry::parse(
+            "pub mod streams {\n\
+             pub const CHURN_TAG: u64 = 0xC42B;\n\
+             pub const ALL: [u64; 1] = [CHURN_TAG];\n\
+             }\n",
+        );
+        let src = "let x = sub(0xC42B);\n";
+        let fa = audit_source_with("rust/src/scenario/x.rs", src, Some(&reg));
+        assert_eq!(fa.findings.len(), 1, "{:?}", fa.findings);
+        assert_eq!(fa.findings[0].rule, RuleId::R8);
+        assert!(fa.findings[0].token.contains("CHURN_TAG"));
+
+        // Unregistered large literals are fine.
+        let fa = audit_source_with(
+            "rust/src/scenario/x.rs",
+            "let batch = 4096;\n",
+            Some(&reg),
+        );
+        assert!(fa.findings.is_empty());
+    }
+
+    #[test]
+    fn r8_registry_self_checks_fire_on_rng_path() {
+        let dup = "pub mod streams {\n\
+                   pub const A_TAG: u64 = 0x1234;\n\
+                   pub const B_TAG: u64 = 0x1234;\n\
+                   pub const ALL: [u64; 2] = [A_TAG, B_TAG];\n\
+                   }\n";
+        let fa = audit_source("rust/src/util/rng.rs", dup);
+        assert!(
+            fa.findings
+                .iter()
+                .any(|f| f.rule == RuleId::R8 && f.token.contains("duplicates")),
+            "{:?}",
+            fa.findings
+        );
+
+        let low = "pub mod streams {\n\
+                   pub const TINY_TAG: u64 = 0x7;\n\
+                   pub const ALL: [u64; 1] = [TINY_TAG];\n\
+                   }\n";
+        let fa = audit_source("rust/src/util/rng.rs", low);
+        assert!(fa
+            .findings
+            .iter()
+            .any(|f| f.rule == RuleId::R8 && f.token.contains("below 0x1000")));
+
+        let drift = "pub mod streams {\n\
+                     pub const A_TAG: u64 = 0x1234;\n\
+                     pub const B_TAG: u64 = 0x2345;\n\
+                     pub const ALL: [u64; 1] = [A_TAG];\n\
+                     }\n";
+        let fa = audit_source("rust/src/util/rng.rs", drift);
+        assert!(fa
+            .findings
+            .iter()
+            .any(|f| f.rule == RuleId::R8 && f.token.contains("ALL")));
+    }
+
+    #[test]
+    fn r9_stale_allow_fires_and_live_allow_does_not() {
+        // Live: the directive suppresses a real finding — no R9.
+        let live =
+            "let v = o.unwrap(); // audit:allow(R1, \"bounded by caller\")\n";
+        let fa = audit_source("rust/src/util/x.rs", live);
+        assert!(fa.findings.is_empty());
+        assert_eq!(fa.suppressed, 1);
+
+        // Stale: nothing to suppress — the directive itself fires.
+        let stale = "let v = 1; // audit:allow(R1, \"obsolete\")\n";
+        let fa = audit_source("rust/src/util/x.rs", stale);
+        assert_eq!(fa.findings.len(), 1);
+        assert_eq!(fa.findings[0].rule, RuleId::R9);
+        assert_eq!(fa.findings[0].line, 1);
+        assert!(fa.findings[0].token.contains("R1"));
+    }
+
+    #[test]
+    fn r9_allow_r9_silences_a_kept_stale_directive_once() {
+        // A deliberately kept directive: allow(R9) on the same line
+        // silences the staleness finding.
+        let src = "let v = 1; // audit:allow(R1, \"kept\") audit:allow(R9, \"transition\")\n";
+        let fa = audit_source("rust/src/util/x.rs", src);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+        assert_eq!(fa.suppressed, 1);
+
+        // But a stale allow(R9) with nothing to silence is reported.
+        let src = "let v = o.unwrap(); // audit:allow(R1, \"live\") audit:allow(R9, \"useless\")\n";
+        let fa = audit_source("rust/src/util/x.rs", src);
+        assert_eq!(fa.findings.len(), 1, "{:?}", fa.findings);
+        assert_eq!(fa.findings[0].rule, RuleId::R9);
+        assert_eq!(fa.findings[0].token, "audit:allow(R9)");
     }
 }

@@ -1,0 +1,605 @@
+//! Item-level scans on top of the [`super::lexer`] channel split: the
+//! semantic inputs for rules R7 (module layering) and R8 (RNG-stream
+//! lineage).
+//!
+//! Three scans run over the *code* channel of a lexed file:
+//!
+//! * **module references** — every `crate::<module>` / `epsl::<module>`
+//!   path head, from `use` declarations and inline qualified paths
+//!   alike (an inline `crate::experiments::f()` is the same layering
+//!   edge as `use crate::experiments`), including one-line
+//!   `crate::{a, b}` groups;
+//! * **fork call sites** — every `.fork(ARG)` occurrence, with `ARG`
+//!   classified as an integer literal, a SCREAMING_CASE constant path,
+//!   or a threaded expression (a lowercase binding such as the `tag`
+//!   parameter of a sub-stream closure — checked at the call site that
+//!   names the constant, not here);
+//! * **integer literals** — every standalone integer literal ≥ 0x1000,
+//!   so a registered stream tag value re-introduced as a raw number is
+//!   caught anywhere, not just inside a `.fork(...)` argument.
+//!
+//! [`StreamRegistry::parse`] additionally reads the central tag
+//! registry (`pub mod streams` in `util/rng.rs`): its `pub const NAME:
+//! u64 = <value>;` declarations and the `ALL` mirror array that feeds
+//! the compile-time uniqueness assert.
+
+use super::lexer::{lex, LineView};
+use super::rules::is_word_char;
+
+/// One `crate::…` / `epsl::…` reference: the top-level module named
+/// right after the crate-root segment.
+#[derive(Debug, Clone)]
+pub struct ModuleRef {
+    /// 1-based line number.
+    pub line: usize,
+    /// The referenced top-level module (`"experiments"` for
+    /// `crate::experiments::sweep`).
+    pub module: String,
+}
+
+/// Classification of the argument of one `.fork(...)` call.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ForkArg {
+    /// A raw integer literal (`.fork(0xFEA7)`).
+    Literal { value: u64, text: String },
+    /// A constant path whose final segment is SCREAMING_CASE
+    /// (`.fork(streams::SCENARIO_DYNAMICS)` → `SCENARIO_DYNAMICS`).
+    Named { name: String, text: String },
+    /// Anything else — a lowercase binding or expression that threads a
+    /// tag chosen (and checked) at an upstream call site.
+    Threaded { text: String },
+}
+
+/// One `.fork(...)` call site.
+#[derive(Debug, Clone)]
+pub struct ForkSite {
+    /// 1-based line number.
+    pub line: usize,
+    pub arg: ForkArg,
+}
+
+/// One standalone integer literal (value ≥ 0x1000 only — small
+/// literals are ubiquitous and stream tags are required to clear the
+/// same floor, so nothing below it can be a tag collision).
+#[derive(Debug, Clone)]
+pub struct IntLit {
+    /// 1-based line number.
+    pub line: usize,
+    pub value: u64,
+}
+
+/// Smallest value a registered stream tag may take; also the floor
+/// below which [`IntLit`]s are not collected.
+pub const MIN_TAG_VALUE: u64 = 0x1000;
+
+/// Everything the item pass extracted from one file.
+#[derive(Debug, Default)]
+pub struct FileItems {
+    pub module_refs: Vec<ModuleRef>,
+    pub forks: Vec<ForkSite>,
+    pub int_lits: Vec<IntLit>,
+}
+
+/// Parse a complete Rust integer literal (hex or decimal, `_`
+/// separators, optional integer-type suffix). Returns `None` for
+/// anything else — floats, invalid suffixes, overflow.
+pub fn parse_int_literal(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (digits, radix) = match s.strip_prefix("0x").or_else(|| {
+        s.strip_prefix("0X")
+    }) {
+        Some(hex) => (hex, 16),
+        None => (s, 10),
+    };
+    if digits.is_empty() {
+        return None;
+    }
+    // Split the digit run from a trailing type suffix.
+    let mut split = digits.len();
+    for (i, c) in digits.char_indices() {
+        let is_digit = c == '_'
+            || (radix == 16 && c.is_ascii_hexdigit())
+            || (radix == 10 && c.is_ascii_digit());
+        if !is_digit {
+            split = i;
+            break;
+        }
+    }
+    let (body, suffix) = digits.split_at(split);
+    let suffix = suffix.strip_prefix('_').unwrap_or(suffix);
+    const SUFFIXES: [&str; 12] = [
+        "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32",
+        "i64", "i128", "isize",
+    ];
+    if !suffix.is_empty() && !SUFFIXES.contains(&suffix) {
+        return None;
+    }
+    let clean: String = body.chars().filter(|c| *c != '_').collect();
+    if clean.is_empty() {
+        return None;
+    }
+    u64::from_str_radix(&clean, radix).ok()
+}
+
+fn leading_ident(s: &str) -> Option<&str> {
+    let s = s.trim_start();
+    let mut end = 0;
+    for (i, c) in s.char_indices() {
+        if i == 0 {
+            if !(c.is_ascii_alphabetic() || c == '_') {
+                return None;
+            }
+        } else if !is_word_char(c) {
+            break;
+        }
+        end = i + c.len_utf8();
+    }
+    if end == 0 {
+        None
+    } else {
+        Some(&s[..end])
+    }
+}
+
+fn is_screaming_case(s: &str) -> bool {
+    s.starts_with(|c: char| c.is_ascii_uppercase())
+        && s.chars().all(|c| {
+            c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_'
+        })
+}
+
+/// Scan one code line for `crate::` / `epsl::` module references.
+fn scan_module_refs(code: &str, ln: usize, out: &mut Vec<ModuleRef>) {
+    for head in ["crate::", "epsl::"] {
+        for (idx, _) in code.match_indices(head) {
+            if let Some(c) = code[..idx].chars().next_back() {
+                // Word boundary: skips `xcrate::`; a preceding `:`
+                // means a deeper path segment, which is invalid Rust
+                // for `crate`/root anyway.
+                if is_word_char(c) || c == ':' {
+                    continue;
+                }
+            }
+            let tail = &code[idx + head.len()..];
+            if let Some(rest) = tail.strip_prefix('{') {
+                // One-line `crate::{a, b::c}` group: the leading ident
+                // of each comma-separated entry is a module head.
+                let body = match rest.find('}') {
+                    Some(close) => &rest[..close],
+                    None => rest,
+                };
+                for entry in body.split(',') {
+                    if let Some(id) = leading_ident(entry) {
+                        out.push(ModuleRef {
+                            line: ln,
+                            module: id.to_string(),
+                        });
+                    }
+                }
+            } else if let Some(id) = leading_ident(tail) {
+                out.push(ModuleRef { line: ln, module: id.to_string() });
+            }
+        }
+    }
+}
+
+/// Scan one code line for `.fork(...)` call sites.
+fn scan_forks(code: &str, ln: usize, out: &mut Vec<ForkSite>) {
+    const NEEDLE: &str = ".fork(";
+    for (idx, _) in code.match_indices(NEEDLE) {
+        let tail = &code[idx + NEEDLE.len()..];
+        // Argument text up to the matching close paren (same line; a
+        // multi-line argument is classified as threaded from what is
+        // visible, which errs toward reporting at the upstream site).
+        let mut depth = 0usize;
+        let mut end = tail.len();
+        for (i, c) in tail.char_indices() {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    if depth == 0 {
+                        end = i;
+                        break;
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+        }
+        let text = tail[..end].trim().to_string();
+        let arg = if let Some(value) = parse_int_literal(&text) {
+            ForkArg::Literal { value, text }
+        } else {
+            let last = text.rsplit("::").next().unwrap_or("").trim();
+            let path_like = text
+                .split("::")
+                .all(|seg| leading_ident(seg).map(|id| id.len())
+                    == Some(seg.trim().len()) && !seg.trim().is_empty());
+            if path_like && is_screaming_case(last) {
+                ForkArg::Named { name: last.to_string(), text }
+            } else {
+                ForkArg::Threaded { text }
+            }
+        };
+        out.push(ForkSite { line: ln, arg });
+    }
+}
+
+/// Scan one code line for standalone integer literals ≥
+/// [`MIN_TAG_VALUE`].
+fn scan_int_lits(code: &str, ln: usize, out: &mut Vec<IntLit>) {
+    let bytes = code.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if !c.is_ascii_digit() {
+            i += 1;
+            continue;
+        }
+        if i > 0 && is_word_char(bytes[i - 1] as char) {
+            // Digit inside an identifier (`cut2`, `0xFEA7`'s tail once
+            // the head was consumed below).
+            i += 1;
+            while i < bytes.len() && is_word_char(bytes[i] as char) {
+                i += 1;
+            }
+            continue;
+        }
+        // Take the whole word-character run as the literal candidate.
+        let start = i;
+        while i < bytes.len() && is_word_char(bytes[i] as char) {
+            i += 1;
+        }
+        // A following `.` or exponent marks a float, not an int.
+        if i < bytes.len() && bytes[i] == b'.' {
+            // Skip the fractional part too.
+            i += 1;
+            while i < bytes.len() && is_word_char(bytes[i] as char) {
+                i += 1;
+            }
+            continue;
+        }
+        if let Some(value) = parse_int_literal(&code[start..i]) {
+            if value >= MIN_TAG_VALUE {
+                out.push(IntLit { line: ln, value });
+            }
+        }
+    }
+}
+
+/// Run all item scans over a lexed file.
+pub fn scan_items(lines: &[LineView]) -> FileItems {
+    let mut items = FileItems::default();
+    for (ix, line) in lines.iter().enumerate() {
+        let ln = ix + 1;
+        scan_module_refs(&line.code, ln, &mut items.module_refs);
+        scan_forks(&line.code, ln, &mut items.forks);
+        scan_int_lits(&line.code, ln, &mut items.int_lits);
+    }
+    items
+}
+
+/// One `pub const NAME: u64 = <value>;` declaration inside the
+/// registry module.
+#[derive(Debug, Clone)]
+pub struct StreamDef {
+    pub name: String,
+    pub value: u64,
+    /// 1-based line number in the registry source file.
+    pub line: usize,
+}
+
+/// The parsed central tag registry (`pub mod streams` in
+/// `util/rng.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct StreamRegistry {
+    pub defs: Vec<StreamDef>,
+    /// Constant names listed in the `ALL` mirror array (the operand of
+    /// the compile-time uniqueness assert).
+    pub all_names: Vec<String>,
+    /// Line of the `mod streams` declaration, if found.
+    pub mod_line: Option<usize>,
+}
+
+impl StreamRegistry {
+    /// Parse the registry out of `util/rng.rs` source text. Absent or
+    /// empty `mod streams` yields an empty registry (R8's
+    /// name-resolution checks then report every named tag as
+    /// unregistered, the safe direction).
+    pub fn parse(text: &str) -> StreamRegistry {
+        let lines = lex(text);
+        let mut reg = StreamRegistry::default();
+        let mut depth: i64 = 0;
+        let mut region: Option<i64> = None;
+        let mut pending = false;
+        let mut in_all = false;
+        for (ix, line) in lines.iter().enumerate() {
+            let ln = ix + 1;
+            let code = &line.code;
+            if region.is_none()
+                && code.contains("mod streams")
+                && reg.mod_line.is_none()
+            {
+                pending = true;
+                reg.mod_line = Some(ln);
+            }
+            if region.is_some() {
+                if in_all {
+                    in_all = !Self::collect_all_names(code, &mut reg);
+                } else if code.contains("const ALL") {
+                    if let Some(eq) = code.find('=') {
+                        in_all =
+                            !Self::collect_all_names(&code[eq + 1..], &mut reg);
+                    }
+                } else {
+                    Self::collect_const(code, ln, &mut reg);
+                }
+            }
+            for c in code.chars() {
+                if c == '{' {
+                    if pending {
+                        region = Some(depth);
+                        pending = false;
+                    }
+                    depth += 1;
+                } else if c == '}' {
+                    depth -= 1;
+                    if region == Some(depth) {
+                        region = None;
+                        in_all = false;
+                    }
+                }
+            }
+        }
+        reg
+    }
+
+    /// Pull SCREAMING_CASE idents out of (part of) an `ALL` initializer
+    /// line. Returns `true` when the closing `]` was seen.
+    fn collect_all_names(code: &str, reg: &mut StreamRegistry) -> bool {
+        let body = match code.find(']') {
+            Some(close) => &code[..close],
+            None => code,
+        };
+        let mut word = String::new();
+        for c in body.chars().chain(std::iter::once(' ')) {
+            if is_word_char(c) {
+                word.push(c);
+            } else {
+                if is_screaming_case(&word) && word != "ALL" {
+                    reg.all_names.push(std::mem::take(&mut word));
+                }
+                word.clear();
+            }
+        }
+        code.contains(']')
+    }
+
+    /// Parse one `pub const NAME: u64 = <int>;` declaration, if the
+    /// line holds one.
+    fn collect_const(code: &str, ln: usize, reg: &mut StreamRegistry) {
+        const KEY: &str = "const ";
+        let idx = match code.find(KEY) {
+            Some(i) => i,
+            None => return,
+        };
+        let name = match leading_ident(&code[idx + KEY.len()..]) {
+            Some(id) => id.to_string(),
+            None => return,
+        };
+        let eq = match code.find('=') {
+            Some(e) => e,
+            None => return,
+        };
+        let rhs = code[eq + 1..].trim().trim_end_matches(';').trim();
+        if let Some(value) = parse_int_literal(rhs) {
+            reg.defs.push(StreamDef { name, value, line: ln });
+        }
+    }
+
+    /// Is `name` a registered stream constant?
+    pub fn contains(&self, name: &str) -> bool {
+        self.defs.iter().any(|d| d.name == name)
+    }
+
+    /// Names registered for `value` (normally zero or one).
+    pub fn names_of(&self, value: u64) -> Vec<&str> {
+        self.defs
+            .iter()
+            .filter(|d| d.value == value)
+            .map(|d| d.name.as_str())
+            .collect()
+    }
+
+    /// Pairs of constants sharing one tag value — the duplicate-fork
+    /// bug class R8 exists to deny.
+    pub fn duplicate_values(&self) -> Vec<(StreamDef, StreamDef)> {
+        let mut out = Vec::new();
+        for (i, a) in self.defs.iter().enumerate() {
+            for b in &self.defs[i + 1..] {
+                if a.value == b.value {
+                    out.push((a.clone(), b.clone()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Constants below the [`MIN_TAG_VALUE`] floor (raw-value collision
+    /// detection needs tags out of the small-literal range).
+    pub fn low_values(&self) -> Vec<StreamDef> {
+        self.defs
+            .iter()
+            .filter(|d| d.value < MIN_TAG_VALUE)
+            .cloned()
+            .collect()
+    }
+
+    /// Registered constants missing from the `ALL` mirror, and `ALL`
+    /// entries naming no registered constant — either desynchronizes
+    /// the compile-time uniqueness assert from the real registry.
+    pub fn mirror_mismatch(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for d in &self.defs {
+            if !self.all_names.iter().any(|n| *n == d.name) {
+                out.push(format!("{} missing from streams::ALL", d.name));
+            }
+        }
+        for n in &self.all_names {
+            if !self.contains(n) {
+                out.push(format!(
+                    "streams::ALL entry {n} names no registered constant"
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn items(src: &str) -> FileItems {
+        scan_items(&lex(src))
+    }
+
+    #[test]
+    fn int_literal_forms() {
+        assert_eq!(parse_int_literal("0xFEA7"), Some(0xFEA7));
+        assert_eq!(parse_int_literal("0xFE_A7"), Some(0xFEA7));
+        assert_eq!(parse_int_literal("65191"), Some(65191));
+        assert_eq!(parse_int_literal("0xFEA7u64"), Some(0xFEA7));
+        assert_eq!(parse_int_literal("4096_usize"), Some(4096));
+        assert_eq!(parse_int_literal("1e6"), None);
+        assert_eq!(parse_int_literal("3.14"), None);
+        assert_eq!(parse_int_literal("0xZZ"), None);
+        assert_eq!(parse_int_literal("seed"), None);
+        assert_eq!(parse_int_literal(""), None);
+    }
+
+    #[test]
+    fn module_refs_use_and_inline_and_group() {
+        let it = items(
+            "use crate::experiments::sweep;\n\
+             fn f() { crate::timeline::Mode::parse(s); }\n\
+             use crate::{util, optim};\n\
+             use epsl::coordinator::train;\n",
+        );
+        let mods: Vec<&str> =
+            it.module_refs.iter().map(|m| m.module.as_str()).collect();
+        assert_eq!(
+            mods,
+            vec!["experiments", "timeline", "util", "optim", "coordinator"]
+        );
+        assert_eq!(it.module_refs[1].line, 2);
+    }
+
+    #[test]
+    fn module_refs_skip_strings_and_words() {
+        let it = items(
+            "let s = \"crate::experiments\";\n\
+             let xcrate__ = 1; // crate::optim in a comment\n",
+        );
+        assert!(it.module_refs.is_empty());
+    }
+
+    #[test]
+    fn fork_sites_classified() {
+        let it = items(
+            "let a = rng.fork(0xFEA7);\n\
+             let b = rng.fork(streams::SCENARIO_DYNAMICS);\n\
+             let c = b.fork(tag);\n\
+             let d = rng.fork(seed ^ 3);\n",
+        );
+        assert_eq!(it.forks.len(), 4);
+        assert_eq!(
+            it.forks[0].arg,
+            ForkArg::Literal { value: 0xFEA7, text: "0xFEA7".into() }
+        );
+        assert_eq!(
+            it.forks[1].arg,
+            ForkArg::Named {
+                name: "SCENARIO_DYNAMICS".into(),
+                text: "streams::SCENARIO_DYNAMICS".into()
+            }
+        );
+        assert!(matches!(it.forks[2].arg, ForkArg::Threaded { .. }));
+        assert!(matches!(it.forks[3].arg, ForkArg::Threaded { .. }));
+    }
+
+    #[test]
+    fn int_lits_collect_large_only() {
+        let it = items(
+            "let a = 0xFEA7; let b = 7; let c = 4096; let d = 65191.0;\n\
+             let e = x2_5000; let f = arr[50219];\n",
+        );
+        let vals: Vec<u64> = it.int_lits.iter().map(|l| l.value).collect();
+        assert_eq!(vals, vec![0xFEA7, 4096, 50219]);
+    }
+
+    #[test]
+    fn registry_parse_roundtrip() {
+        let src = "\
+pub mod streams {\n\
+    /// Scenario base stream.\n\
+    pub const SCENARIO_DYNAMICS: u64 = 0xFEA7;\n\
+    pub const FAULT_PLAN: u64 = 0xFA17;\n\
+    pub const ALL: [u64; 2] = [SCENARIO_DYNAMICS, FAULT_PLAN];\n\
+}\n\
+pub const OUTSIDE: u64 = 0xBEEF;\n";
+        let reg = StreamRegistry::parse(src);
+        assert_eq!(reg.defs.len(), 2);
+        assert!(reg.contains("SCENARIO_DYNAMICS"));
+        assert!(reg.contains("FAULT_PLAN"));
+        assert!(!reg.contains("OUTSIDE"));
+        assert_eq!(reg.names_of(0xFA17), vec!["FAULT_PLAN"]);
+        assert_eq!(reg.all_names, vec!["SCENARIO_DYNAMICS", "FAULT_PLAN"]);
+        assert!(reg.duplicate_values().is_empty());
+        assert!(reg.low_values().is_empty());
+        assert!(reg.mirror_mismatch().is_empty());
+    }
+
+    #[test]
+    fn registry_detects_duplicates_low_values_and_mirror_drift() {
+        let src = "\
+pub mod streams {\n\
+    pub const A_STREAM: u64 = 0xFEA7;\n\
+    pub const B_STREAM: u64 = 0xFEA7;\n\
+    pub const C_LOW: u64 = 0x7;\n\
+    pub const ALL: [u64; 2] = [A_STREAM, B_STREAM];\n\
+}\n";
+        let reg = StreamRegistry::parse(src);
+        assert_eq!(reg.defs.len(), 3);
+        let dups = reg.duplicate_values();
+        assert_eq!(dups.len(), 1);
+        assert_eq!(dups[0].0.name, "A_STREAM");
+        assert_eq!(dups[0].1.name, "B_STREAM");
+        assert_eq!(reg.low_values().len(), 1);
+        // C_LOW is registered but missing from ALL.
+        assert_eq!(reg.mirror_mismatch().len(), 1);
+    }
+
+    #[test]
+    fn registry_multi_line_all_array() {
+        let src = "\
+pub mod streams {\n\
+    pub const A_STREAM: u64 = 0x1001;\n\
+    pub const B_STREAM: u64 = 0x1002;\n\
+    pub const ALL: [u64; 2] = [\n\
+        A_STREAM,\n\
+        B_STREAM,\n\
+    ];\n\
+}\n";
+        let reg = StreamRegistry::parse(src);
+        assert_eq!(reg.all_names, vec!["A_STREAM", "B_STREAM"]);
+        assert!(reg.mirror_mismatch().is_empty());
+    }
+
+    #[test]
+    fn registry_absent_mod_is_empty() {
+        let reg = StreamRegistry::parse("pub const X: u64 = 0xFEA7;\n");
+        assert!(reg.defs.is_empty());
+        assert!(reg.mod_line.is_none());
+    }
+}

@@ -9,22 +9,34 @@
 //! simulated paths, no panics in the training loop. This module turns
 //! those rules into a machine-checked, CI-gated audit.
 //!
-//! The engine is dependency-free and line/token-level: [`lexer`] strips
-//! comments and literals, [`rules`] matches forbidden tokens (rules
-//! R1–R6), [`engine`] scopes rules by path, tracks `#[cfg(test)]`
-//! regions, honors `// audit:allow(R<n>, "reason")` suppressions, and
-//! walks the tree in sorted order. The `epsl-audit` binary
+//! The engine is dependency-free and works at two levels. Token level:
+//! [`lexer`] strips comments and literals, [`rules`] matches forbidden
+//! tokens (rules R1–R6). Item level: [`items`] parses `crate::…`
+//! module references, `rng.fork(TAG)` call sites, and the
+//! `util::rng::streams` tag registry, feeding the semantic rules —
+//! R7 (module-layering DAG), R8 (RNG-stream lineage), and R9
+//! (stale-suppression ratchet). [`engine`] scopes rules by path,
+//! tracks `#[cfg(test)]` regions, honors
+//! `// audit:allow(R<n>, "reason")` suppressions (and reports the
+//! stale ones), and walks the tree in sorted order. [`report`] adds
+//! the `--baseline` ratchet (frozen findings demote to advisory;
+//! fresh ones deny) and SARIF 2.1.0 output. The `epsl-audit` binary
 //! (`cargo run --bin epsl-audit`) reports findings as
-//! `path:line: rule [token] snippet` (or `--json`) and exits non-zero
-//! on denied findings. See `ANALYSIS.md` at the repo root for the full
-//! rule catalogue, rationale, and suppression policy.
+//! `path:line: rule [token] snippet` (or `--json` / `--sarif`) and
+//! exits non-zero on denied findings. See `ANALYSIS.md` at the repo
+//! root for the full rule catalogue, rationale, and suppression
+//! policy.
 
 pub mod engine;
+pub mod items;
 pub mod lexer;
+pub mod report;
 pub mod rules;
 
 pub use engine::{
-    audit_source, audit_tree, severity, AuditReport, FileAudit, Finding,
-    Severity, WALK_ROOTS,
+    audit_source, audit_source_with, audit_tree, module_of, severity,
+    AuditReport, FileAudit, Finding, Severity, LAYER_MAP, WALK_ROOTS,
 };
+pub use items::{scan_items, ForkArg, StreamRegistry};
+pub use report::{to_sarif, Baseline};
 pub use rules::{scan_allows, scan_rule, RuleId};

@@ -1,0 +1,279 @@
+//! Reporting layers above the audit engine: the baseline ratchet and
+//! SARIF-style machine-readable output.
+//!
+//! **Baseline ratchet.** A baseline file freezes today's findings as a
+//! multiset of [`Finding::baseline_key`]s (`path|rule|token`) with
+//! counts. Findings covered by the baseline are demoted to advisory;
+//! anything *fresh* keeps its normal severity. The key deliberately
+//! omits the line number, so unrelated edits that shift a baselined
+//! finding do not break the build — but an additional violation of the
+//! same rule/token in the same file exceeds the baselined count and is
+//! fresh. Fixing a finding and regenerating (`--write-baseline`)
+//! shrinks the file monotonically: that is the ratchet.
+//!
+//! **SARIF.** `--sarif` emits a minimal SARIF 2.1.0 log (single run,
+//! one `rule` per [`RuleId`], one `result` per finding) for CI
+//! annotation tooling; it is output-only, nothing here parses SARIF.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+use super::engine::{severity, Finding, Severity};
+use super::rules::RuleId;
+
+/// A frozen finding multiset: `path|rule|token` → occurrence count.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Baseline {
+    pub entries: BTreeMap<String, usize>,
+}
+
+impl Baseline {
+    /// Freeze a set of findings.
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        let mut entries: BTreeMap<String, usize> = BTreeMap::new();
+        for f in findings {
+            *entries.entry(f.baseline_key()).or_insert(0) += 1;
+        }
+        Baseline { entries }
+    }
+
+    /// Parse a baseline file (the JSON written by [`Baseline::to_json`]).
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let json = Json::parse(text)?;
+        let obj = json
+            .req("findings")?
+            .as_obj()
+            .ok_or_else(|| Error::Io("baseline: findings not an object".into()))?;
+        let mut entries = BTreeMap::new();
+        for (key, v) in obj {
+            let n = v.as_usize().ok_or_else(|| {
+                Error::Io(format!("baseline: count for {key} not an integer"))
+            })?;
+            entries.insert(key.clone(), n);
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Serialize for `--write-baseline`.
+    pub fn to_json(&self) -> Json {
+        let mut counts = BTreeMap::new();
+        for (k, n) in &self.entries {
+            counts.insert(k.clone(), Json::Num(*n as f64));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("version".to_string(), Json::Num(1.0));
+        root.insert("findings".to_string(), Json::Obj(counts));
+        Json::Obj(root)
+    }
+
+    /// Split `findings` into (baselined, fresh). Each baseline entry
+    /// absorbs at most its recorded count, in finding order; the
+    /// overflow — and every unlisted key — is fresh.
+    pub fn partition(
+        &self,
+        findings: &[Finding],
+    ) -> (Vec<Finding>, Vec<Finding>) {
+        let mut budget = self.entries.clone();
+        let mut baselined = Vec::new();
+        let mut fresh = Vec::new();
+        for f in findings {
+            match budget.get_mut(&f.baseline_key()) {
+                Some(n) if *n > 0 => {
+                    *n -= 1;
+                    baselined.push(f.clone());
+                }
+                _ => fresh.push(f.clone()),
+            }
+        }
+        (baselined, fresh)
+    }
+}
+
+fn sarif_level(sev: Severity) -> &'static str {
+    match sev {
+        Severity::Deny => "error",
+        Severity::Warn => "warning",
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+    )
+}
+
+/// Render findings as a SARIF 2.1.0 log. `baselined` findings get
+/// `level: "warning"` regardless of rule severity; the rest follow
+/// [`severity`] under `deny_all`.
+pub fn to_sarif(
+    fresh: &[Finding],
+    baselined: &[Finding],
+    deny_all: bool,
+) -> Json {
+    let rules: Vec<Json> = RuleId::ALL
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("id", Json::Str(format!("{r}"))),
+                ("name", Json::Str(r.name().to_string())),
+                (
+                    "shortDescription",
+                    obj(vec![("text", Json::Str(r.summary().to_string()))]),
+                ),
+            ])
+        })
+        .collect();
+    let mut results: Vec<Json> = Vec::new();
+    for (set, demoted) in [(fresh, false), (baselined, true)] {
+        for f in set {
+            let level = if demoted {
+                "warning"
+            } else {
+                sarif_level(severity(f.rule, deny_all))
+            };
+            let mut props = vec![("baselined", Json::Bool(demoted))];
+            props.push(("token", Json::Str(f.token.clone())));
+            results.push(obj(vec![
+                ("ruleId", Json::Str(format!("{}", f.rule))),
+                ("level", Json::Str(level.to_string())),
+                ("message", obj(vec![(
+                    "text",
+                    Json::Str(format!(
+                        "{} [{}] {}",
+                        f.rule.name(),
+                        f.token,
+                        f.snippet
+                    )),
+                )])),
+                ("locations", Json::Arr(vec![obj(vec![(
+                    "physicalLocation",
+                    obj(vec![
+                        (
+                            "artifactLocation",
+                            obj(vec![("uri", Json::Str(f.path.clone()))]),
+                        ),
+                        (
+                            "region",
+                            obj(vec![(
+                                "startLine",
+                                Json::Num(f.line as f64),
+                            )]),
+                        ),
+                    ]),
+                )])])),
+                ("properties", obj(props)),
+            ]));
+        }
+    }
+    let tool = obj(vec![("driver", obj(vec![
+        ("name", Json::Str("epsl-audit".to_string())),
+        ("rules", Json::Arr(rules)),
+    ]))]);
+    obj(vec![
+        ("version", Json::Str("2.1.0".to_string())),
+        (
+            "$schema",
+            Json::Str(
+                "https://json.schemastore.org/sarif-2.1.0.json".to_string(),
+            ),
+        ),
+        ("runs", Json::Arr(vec![obj(vec![
+            ("tool", tool),
+            ("results", Json::Arr(results)),
+        ])])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(path: &str, line: usize, rule: RuleId, token: &str) -> Finding {
+        Finding {
+            path: path.to_string(),
+            line,
+            rule,
+            token: token.to_string(),
+            snippet: "let x = 1;".to_string(),
+        }
+    }
+
+    #[test]
+    fn baseline_roundtrip() {
+        let fs = vec![
+            finding("a.rs", 3, RuleId::R1, ".unwrap()"),
+            finding("a.rs", 9, RuleId::R1, ".unwrap()"),
+            finding("b.rs", 1, RuleId::R7, "crate::coordinator"),
+        ];
+        let base = Baseline::from_findings(&fs);
+        assert_eq!(base.entries.len(), 2);
+        assert_eq!(base.entries["a.rs|R1|.unwrap()"], 2);
+        let text = base.to_json().to_string_pretty();
+        let back = Baseline::parse(&text).unwrap();
+        assert_eq!(back, base);
+    }
+
+    #[test]
+    fn partition_absorbs_counts_and_flags_overflow() {
+        let old = vec![finding("a.rs", 3, RuleId::R1, ".unwrap()")];
+        let base = Baseline::from_findings(&old);
+        // Same key twice: one absorbed, one fresh. New key: fresh.
+        let now = vec![
+            finding("a.rs", 3, RuleId::R1, ".unwrap()"),
+            finding("a.rs", 40, RuleId::R1, ".unwrap()"),
+            finding("b.rs", 1, RuleId::R8, ".fork(0xFEA7)"),
+        ];
+        let (baselined, fresh) = base.partition(&now);
+        assert_eq!(baselined.len(), 1);
+        assert_eq!(fresh.len(), 2);
+        assert_eq!(fresh[1].rule, RuleId::R8);
+    }
+
+    #[test]
+    fn partition_line_drift_still_baselined() {
+        let base = Baseline::from_findings(&[finding(
+            "a.rs",
+            3,
+            RuleId::R6,
+            "as u32",
+        )]);
+        let (baselined, fresh) =
+            base.partition(&[finding("a.rs", 117, RuleId::R6, "as u32")]);
+        assert_eq!(baselined.len(), 1);
+        assert!(fresh.is_empty());
+    }
+
+    #[test]
+    fn sarif_shape_and_levels() {
+        let fresh = vec![finding("a.rs", 3, RuleId::R7, "crate::experiments")];
+        let baselined = vec![finding("b.rs", 5, RuleId::R6, "as u32")];
+        let sarif = to_sarif(&fresh, &baselined, false);
+        let text = sarif.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.req("version").unwrap().as_str(), Some("2.1.0"));
+        let runs = parsed.req("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 1);
+        let results = runs[0].req("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[0].req("level").unwrap().as_str(),
+            Some("error")
+        );
+        assert_eq!(
+            results[1].req("level").unwrap().as_str(),
+            Some("warning")
+        );
+        let rules = runs[0]
+            .req("tool")
+            .unwrap()
+            .req("driver")
+            .unwrap()
+            .req("rules")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(rules.len(), RuleId::ALL.len());
+    }
+}

@@ -1,10 +1,18 @@
-//! The audit rule catalogue (R1–R6) and its token matchers.
+//! The audit rule catalogue (R1–R9) and the token matchers for the
+//! line-level rules.
 //!
-//! Each rule is a small set of token patterns matched against the
-//! comment-and-literal-stripped *code* channel of a line (see
-//! [`super::lexer`]). Where a rule applies is decided by the engine
-//! ([`super::engine`]) from the file's repo-relative path; this module
-//! only answers "does this code line contain the forbidden token".
+//! R1–R6 are token rules: each is a small set of patterns matched
+//! against the comment-and-literal-stripped *code* channel of a line
+//! (see [`super::lexer`]). Where a rule applies is decided by the
+//! engine ([`super::engine`]) from the file's repo-relative path; this
+//! module only answers "does this code line contain the forbidden
+//! token".
+//!
+//! R7–R9 are *item-level* rules — module layering, RNG-stream lineage,
+//! and stale-suppression detection. Their matching lives in
+//! [`super::items`] (the item scanner) and [`super::engine`] (the
+//! checks); they share this catalogue for ids, names, severities, and
+//! `audit:allow` suppression.
 
 use std::fmt;
 
@@ -29,17 +37,29 @@ pub enum RuleId {
     R5,
     /// Flag narrowing `as` casts in config / checkpoint parsing.
     R6,
+    /// Module layering: `crate::`/`epsl::` references must point
+    /// strictly *down* the module DAG (no back- or sideways edges).
+    R7,
+    /// RNG-stream lineage: every `Rng::fork` tag is a named constant
+    /// registered in `util::rng::streams`, with unique values.
+    R8,
+    /// Stale suppression: an `audit:allow` directive whose rule no
+    /// longer fires on its target line is itself a finding.
+    R9,
 }
 
 impl RuleId {
     /// Every rule, in report order.
-    pub const ALL: [RuleId; 6] = [
+    pub const ALL: [RuleId; 9] = [
         RuleId::R1,
         RuleId::R2,
         RuleId::R3,
         RuleId::R4,
         RuleId::R5,
         RuleId::R6,
+        RuleId::R7,
+        RuleId::R8,
+        RuleId::R9,
     ];
 
     /// Short mnemonic used in reports next to the id.
@@ -51,6 +71,9 @@ impl RuleId {
             RuleId::R4 => "ambient-entropy",
             RuleId::R5 => "fast-math-threading",
             RuleId::R6 => "trunc-cast",
+            RuleId::R7 => "layering",
+            RuleId::R8 => "rng-lineage",
+            RuleId::R9 => "stale-allow",
         }
     }
 
@@ -75,10 +98,19 @@ impl RuleId {
             RuleId::R6 => {
                 "narrowing casts in config/checkpoint parsing need review"
             }
+            RuleId::R7 => {
+                "module references must follow the layering DAG downward"
+            }
+            RuleId::R8 => {
+                "fork tags are unique named util::rng::streams constants"
+            }
+            RuleId::R9 => {
+                "a suppression whose rule no longer fires must be deleted"
+            }
         }
     }
 
-    /// Parse `"R1"`..`"R6"`.
+    /// Parse `"R1"`..`"R9"`.
     pub fn parse(s: &str) -> Option<RuleId> {
         match s {
             "R1" => Some(RuleId::R1),
@@ -87,6 +119,9 @@ impl RuleId {
             "R4" => Some(RuleId::R4),
             "R5" => Some(RuleId::R5),
             "R6" => Some(RuleId::R6),
+            "R7" => Some(RuleId::R7),
+            "R8" => Some(RuleId::R8),
+            "R9" => Some(RuleId::R9),
             _ => None,
         }
     }
@@ -101,12 +136,15 @@ impl fmt::Display for RuleId {
             RuleId::R4 => "R4",
             RuleId::R5 => "R5",
             RuleId::R6 => "R6",
+            RuleId::R7 => "R7",
+            RuleId::R8 => "R8",
+            RuleId::R9 => "R9",
         };
         f.write_str(s)
     }
 }
 
-fn is_word_char(c: char) -> bool {
+pub(crate) fn is_word_char(c: char) -> bool {
     c.is_ascii_alphanumeric() || c == '_'
 }
 
@@ -222,6 +260,9 @@ pub fn scan_rule(rule: RuleId, code: &str) -> Vec<String> {
         RuleId::R6 => {
             cast_hits(code, &mut out);
         }
+        // Item-level rules: matched by the engine over `items` scans,
+        // never by per-line token patterns.
+        RuleId::R7 | RuleId::R8 | RuleId::R9 => {}
     }
     out
 }
@@ -315,7 +356,7 @@ mod tests {
         assert_eq!(got[0].0, RuleId::R1);
         assert_eq!(got[0].1, "checked above");
         // Malformed: unknown rule, empty reason, missing quote.
-        assert!(scan_allows(r#" audit:allow(R9, "x") "#).is_empty());
+        assert!(scan_allows(r#" audit:allow(R12, "x") "#).is_empty());
         assert!(scan_allows(r#" audit:allow(R1, "") "#).is_empty());
         assert!(scan_allows(" audit:allow(R1, reason) ").is_empty());
     }

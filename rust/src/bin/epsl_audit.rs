@@ -1,36 +1,54 @@
 //! `epsl-audit` — the in-tree determinism & safety static-analysis
 //! pass. Walks `rust/src`, `rust/benches`, `rust/tests`, and
-//! `examples`, enforces rules R1–R6 (see `ANALYSIS.md`), and exits
+//! `examples`, enforces rules R1–R9 (see `ANALYSIS.md`), and exits
 //! non-zero when any denied finding remains.
 //!
 //! ```text
-//! cargo run --bin epsl-audit                 # warn-level R6, deny R1–R5
+//! cargo run --bin epsl-audit                 # warn-level R6, deny the rest
 //! cargo run --bin epsl-audit -- --deny-all   # CI mode: everything denies
 //! cargo run --bin epsl-audit -- --json       # machine-readable findings
+//! cargo run --bin epsl-audit -- --sarif      # SARIF 2.1.0 log
 //! cargo run --bin epsl-audit -- --root PATH  # audit another checkout
+//! cargo run --bin epsl-audit -- --baseline audit-baseline.json
+//!                                            # ratchet: frozen findings warn
+//! cargo run --bin epsl-audit -- --write-baseline audit-baseline.json
+//!                                            # freeze the current findings
 //! ```
 
 use std::collections::BTreeMap;
+use std::fs;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use epsl::analysis::{audit_tree, severity, RuleId, Severity};
+use epsl::analysis::{
+    audit_tree, severity, to_sarif, Baseline, RuleId, Severity,
+};
 use epsl::util::json::Json;
 
 struct Options {
     deny_all: bool,
     json: bool,
+    sarif: bool,
     root: PathBuf,
+    baseline: Option<PathBuf>,
+    write_baseline: Option<PathBuf>,
 }
 
 fn print_help() {
     println!("epsl-audit: static-analysis pass for the EPSL tree");
     println!();
-    println!("USAGE: epsl-audit [--deny-all] [--json] [--root PATH]");
+    println!(
+        "USAGE: epsl-audit [--deny-all] [--json | --sarif] [--root PATH]"
+    );
+    println!("                  [--baseline FILE] [--write-baseline FILE]");
     println!();
-    println!("  --deny-all   treat advisory findings (R6) as errors");
-    println!("  --json       emit findings as a JSON report");
-    println!("  --root PATH  repo root to audit (default: this checkout)");
+    println!("  --deny-all        treat advisory findings (R6) as errors");
+    println!("  --json            emit findings as a JSON report");
+    println!("  --sarif           emit findings as a SARIF 2.1.0 log");
+    println!("  --root PATH       repo root to audit (default: this checkout)");
+    println!("  --baseline FILE   ratchet: findings frozen in FILE only warn;");
+    println!("                    fresh findings keep their severity");
+    println!("  --write-baseline FILE  freeze the current findings to FILE");
     println!();
     println!("RULES:");
     for rule in RuleId::ALL {
@@ -38,7 +56,8 @@ fn print_help() {
     }
     println!();
     println!("Suppress a reviewed site with a trailing or preceding");
-    println!("comment: // audit:allow(R<n>, \"reason\")");
+    println!("comment: // audit:allow(R<n>, \"reason\") — but keep it live:");
+    println!("a suppression whose rule no longer fires is an R9 finding.");
 }
 
 fn default_root() -> PathBuf {
@@ -54,19 +73,37 @@ fn parse_args(args: &[String]) -> Result<Option<Options>, String> {
     let mut opts = Options {
         deny_all: false,
         json: false,
+        sarif: false,
         root: default_root(),
+        baseline: None,
+        write_baseline: None,
     };
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--deny-all" => opts.deny_all = true,
             "--json" => opts.json = true,
+            "--sarif" => opts.sarif = true,
             "--root" => {
                 i += 1;
                 let path = args
                     .get(i)
                     .ok_or_else(|| "--root requires a path".to_string())?;
                 opts.root = PathBuf::from(path);
+            }
+            "--baseline" => {
+                i += 1;
+                let path = args
+                    .get(i)
+                    .ok_or_else(|| "--baseline requires a file".to_string())?;
+                opts.baseline = Some(PathBuf::from(path));
+            }
+            "--write-baseline" => {
+                i += 1;
+                let path = args.get(i).ok_or_else(|| {
+                    "--write-baseline requires a file".to_string()
+                })?;
+                opts.write_baseline = Some(PathBuf::from(path));
             }
             "--help" | "-h" => return Ok(None),
             other => {
@@ -77,20 +114,66 @@ fn parse_args(args: &[String]) -> Result<Option<Options>, String> {
         }
         i += 1;
     }
+    if opts.json && opts.sarif {
+        return Err("--json and --sarif are mutually exclusive".to_string());
+    }
     Ok(Some(opts))
 }
 
 fn run(opts: &Options) -> Result<ExitCode, epsl::error::Error> {
     let report = audit_tree(&opts.root)?;
+
+    if let Some(path) = &opts.write_baseline {
+        let base = Baseline::from_findings(&report.findings);
+        fs::write(path, base.to_json().to_string_pretty() + "\n").map_err(
+            |e| {
+                epsl::error::Error::Io(format!(
+                    "write {}: {e}",
+                    path.display()
+                ))
+            },
+        )?;
+        println!(
+            "audit: baseline with {} entry(ies) written to {}",
+            base.entries.len(),
+            path.display()
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let baseline = match &opts.baseline {
+        Some(path) => {
+            let text = fs::read_to_string(path).map_err(|e| {
+                epsl::error::Error::Io(format!(
+                    "read {}: {e}",
+                    path.display()
+                ))
+            })?;
+            Some(Baseline::parse(&text)?)
+        }
+        None => None,
+    };
+    let (baselined, fresh) = match &baseline {
+        Some(b) => b.partition(&report.findings),
+        None => (Vec::new(), report.findings.clone()),
+    };
+
     let mut denied = 0usize;
-    let mut warned = 0usize;
-    for f in &report.findings {
+    let mut warned = baselined.len();
+    for f in &fresh {
         match severity(f.rule, opts.deny_all) {
             Severity::Deny => denied += 1,
             Severity::Warn => warned += 1,
         }
     }
-    if opts.json {
+    let stale = report.stale_suppressions();
+
+    if opts.sarif {
+        println!(
+            "{}",
+            to_sarif(&fresh, &baselined, opts.deny_all).to_string_pretty()
+        );
+    } else if opts.json {
         let mut obj = BTreeMap::new();
         obj.insert(
             "root".to_string(),
@@ -102,52 +185,67 @@ fn run(opts: &Options) -> Result<ExitCode, epsl::error::Error> {
                    Json::Num(report.suppressed as f64));
         obj.insert("denied".to_string(), Json::Num(denied as f64));
         obj.insert("warned".to_string(), Json::Num(warned as f64));
-        let findings: Vec<Json> = report
-            .findings
-            .iter()
-            .map(|f| {
-                let mut m = BTreeMap::new();
-                m.insert("path".to_string(), Json::Str(f.path.clone()));
-                m.insert("line".to_string(), Json::Num(f.line as f64));
-                m.insert("rule".to_string(), Json::Str(f.rule.to_string()));
-                m.insert("name".to_string(),
-                         Json::Str(f.rule.name().to_string()));
-                m.insert("token".to_string(), Json::Str(f.token.clone()));
-                m.insert("snippet".to_string(), Json::Str(f.snippet.clone()));
-                let sev = match severity(f.rule, opts.deny_all) {
+        obj.insert("baselined".to_string(), Json::Num(baselined.len() as f64));
+        obj.insert("stale_suppressions".to_string(),
+                   Json::Num(stale as f64));
+        let render = |f: &epsl::analysis::Finding, demoted: bool| {
+            let mut m = BTreeMap::new();
+            m.insert("path".to_string(), Json::Str(f.path.clone()));
+            m.insert("line".to_string(), Json::Num(f.line as f64));
+            m.insert("rule".to_string(), Json::Str(f.rule.to_string()));
+            m.insert("name".to_string(),
+                     Json::Str(f.rule.name().to_string()));
+            m.insert("token".to_string(), Json::Str(f.token.clone()));
+            m.insert("snippet".to_string(), Json::Str(f.snippet.clone()));
+            let sev = if demoted {
+                "warn"
+            } else {
+                match severity(f.rule, opts.deny_all) {
                     Severity::Deny => "deny",
                     Severity::Warn => "warn",
-                };
-                m.insert("severity".to_string(), Json::Str(sev.to_string()));
-                Json::Obj(m)
-            })
-            .collect();
+                }
+            };
+            m.insert("severity".to_string(), Json::Str(sev.to_string()));
+            m.insert("baselined".to_string(), Json::Bool(demoted));
+            Json::Obj(m)
+        };
+        let mut findings: Vec<Json> =
+            fresh.iter().map(|f| render(f, false)).collect();
+        findings.extend(baselined.iter().map(|f| render(f, true)));
         obj.insert("findings".to_string(), Json::Arr(findings));
         println!("{}", Json::Obj(obj).to_string_pretty());
     } else {
-        for f in &report.findings {
-            let sev = match severity(f.rule, opts.deny_all) {
-                Severity::Deny => "deny",
-                Severity::Warn => "warn",
-            };
-            println!(
-                "{}:{}: {sev} {} ({}) [{}] {}",
-                f.path,
-                f.line,
-                f.rule,
-                f.rule.name(),
-                f.token,
-                f.snippet
-            );
+        for (set, demoted) in [(&fresh, false), (&baselined, true)] {
+            for f in set.iter() {
+                let sev = if demoted {
+                    "warn (baselined)"
+                } else {
+                    match severity(f.rule, opts.deny_all) {
+                        Severity::Deny => "deny",
+                        Severity::Warn => "warn",
+                    }
+                };
+                println!(
+                    "{}:{}: {sev} {} ({}) [{}] {}",
+                    f.path,
+                    f.line,
+                    f.rule,
+                    f.rule.name(),
+                    f.token,
+                    f.snippet
+                );
+            }
         }
         println!(
-            "audit: {} file(s) scanned, {} finding(s) ({} denied, {} warned), \
-             {} suppression(s) honored",
+            "audit: {} file(s) scanned, {} finding(s) ({} denied, {} warned, \
+             {} baselined), {} suppression(s) honored, stale-suppressions: {}",
             report.files_scanned,
             report.findings.len(),
             denied,
             warned,
-            report.suppressed
+            baselined.len(),
+            report.suppressed,
+            stale
         );
     }
     Ok(if denied > 0 {

@@ -412,7 +412,16 @@ impl Config {
                 self.backend
             )));
         }
-        crate::timeline::Mode::parse(&self.timeline_mode)?;
+        // Mirrors `timeline::Mode::parse` (config sits below timeline in
+        // the layering DAG, so it validates the spelling without
+        // constructing the mode; `timeline_mode_matches_mode_parse` in
+        // the timeline tests pins the two accept sets together).
+        if !matches!(self.timeline_mode.as_str(), "barrier" | "pipelined") {
+            return Err(Error::Config(format!(
+                "timeline mode '{}' unknown (barrier|pipelined)",
+                self.timeline_mode
+            )));
+        }
         self.net.validate()?;
         self.train.validate()?;
         self.scenario.validate()?;

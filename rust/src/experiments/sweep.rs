@@ -201,6 +201,65 @@ mod tests {
     }
 
     #[test]
+    fn oracle_matches_scenario_every_round() {
+        // EveryK(1) through the scenario runner must reproduce the
+        // pre-scenario fig13 oracle path (run_oracle_cells) bit-for-bit
+        // on the same realizations. (Moved here from scenario::run's
+        // tests: scenario sits below experiments in the layering DAG.)
+        use crate::scenario::{
+            run_policy, ReoptPolicy, RunOptions, Scenario, ScenarioSpec,
+        };
+        use crate::timeline::Mode;
+
+        let net = NetworkConfig::default().with_clients(3);
+        let n_rounds = 5;
+        let mut rng = Rng::new(0x13);
+        let dep = Deployment::generate(&net, &mut rng);
+        let sc = Scenario::from_deployment(
+            net.clone(),
+            dep,
+            ScenarioSpec::fading(n_rounds),
+            &mut rng,
+        )
+        .unwrap();
+        let profile = resnet18::profile();
+        let bcd_opts = bcd::BcdOptions { max_iters: 6, tol: 1e-4 };
+        let avg = ChannelRealization::average(&sc.roster);
+        let base = Problem {
+            cfg: &net,
+            profile: &profile,
+            dep: &sc.roster,
+            ch: &avg,
+            batch: 64,
+            phi: 0.5,
+        };
+        let chs: Vec<ChannelRealization> =
+            sc.rounds.iter().map(|r| r.ch.clone()).collect();
+        let legacy = run_oracle_cells(&base, &chs, bcd_opts, 2);
+        let out = run_policy(
+            &sc,
+            &profile,
+            &RunOptions {
+                policy: ReoptPolicy::EveryK(1),
+                bcd: bcd_opts,
+                batch: 64,
+                phi: 0.5,
+                threads: 2,
+                timeline_mode: Mode::Barrier,
+            },
+        );
+        assert_eq!(out.rounds.len(), legacy.len());
+        for (r, l) in out.rounds.iter().zip(&legacy) {
+            assert_eq!(
+                r.latency.map(f64::to_bits),
+                l.map(f64::to_bits),
+                "oracle diverged at round {}",
+                r.round
+            );
+        }
+    }
+
+    #[test]
     fn framework_cells_deterministic_across_threads() {
         let mut net = NetworkConfig::default();
         net.n_clients = 3;

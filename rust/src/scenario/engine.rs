@@ -25,7 +25,7 @@ use crate::channel::{ChannelRealization, ClientLink, Deployment};
 use crate::channel::pathloss;
 use crate::config::NetworkConfig;
 use crate::error::Result;
-use crate::util::rng::Rng;
+use crate::util::rng::{streams, Rng};
 
 use super::spec::ScenarioSpec;
 
@@ -84,7 +84,7 @@ impl Scenario {
         let any_feature = spec.churn.is_some()
             || spec.los_flip.is_some()
             || spec.compute_jitter.is_some();
-        let base = any_feature.then(|| rng.fork(0xFEA7));
+        let base = any_feature.then(|| rng.fork(streams::SCENARIO_DYNAMICS));
         // A feature's stream exists iff the base does (the feature being
         // on implies `any_feature`), so this is expect-free by shape.
         let sub = |tag: u64| {
@@ -94,11 +94,14 @@ impl Scenario {
             })
         };
         let mut churn_rng =
-            if spec.churn.is_some() { sub(0xC42B) } else { None };
+            if spec.churn.is_some() { sub(streams::SCENARIO_CHURN) } else { None };
         let mut los_rng =
-            if spec.los_flip.is_some() { sub(0x105F) } else { None };
-        let mut jit_rng =
-            if spec.compute_jitter.is_some() { sub(0x717E) } else { None };
+            if spec.los_flip.is_some() { sub(streams::SCENARIO_LOS) } else { None };
+        let mut jit_rng = if spec.compute_jitter.is_some() {
+            sub(streams::SCENARIO_JITTER)
+        } else {
+            None
+        };
 
         let base_f: Vec<f64> = roster.f_clients().to_vec();
         let mut los: Vec<bool> = roster.clients.iter().map(|l| l.los).collect();

@@ -16,7 +16,7 @@
 
 use crate::config::FaultSettings;
 use crate::error::{Error, Result};
-use crate::util::rng::Rng;
+use crate::util::rng::{streams, Rng};
 
 /// One kind of injected failure.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -269,13 +269,13 @@ impl FaultSpec {
             }
         }
         if self.has_random() {
-            let mut base = rng.fork(0xFA17);
+            let mut base = rng.fork(streams::FAULT_PLAN);
             let sub = |base: &Rng, tag: u64| {
                 let mut b = base.clone();
                 b.fork(tag)
             };
             if self.crash_prob > 0.0 {
-                let mut r = sub(&base, 0xC8A5);
+                let mut r = sub(&base, streams::FAULT_CRASH);
                 for rf in plan.iter_mut() {
                     for c in 0..n_clients {
                         if r.chance(self.crash_prob) {
@@ -285,7 +285,7 @@ impl FaultSpec {
                 }
             }
             if self.delay_prob > 0.0 {
-                let mut r = sub(&base, 0xDE1A);
+                let mut r = sub(&base, streams::FAULT_DELAY);
                 for rf in plan.iter_mut() {
                     for c in 0..n_clients {
                         if r.chance(self.delay_prob) {
@@ -295,7 +295,7 @@ impl FaultSpec {
                 }
             }
             if self.corrupt_prob > 0.0 {
-                let mut r = sub(&base, 0xC077);
+                let mut r = sub(&base, streams::FAULT_CORRUPT);
                 for rf in plan.iter_mut() {
                     for c in 0..n_clients {
                         if r.chance(self.corrupt_prob) {
@@ -305,7 +305,7 @@ impl FaultSpec {
                 }
             }
             if self.abort_prob > 0.0 {
-                let mut r = sub(&base, 0xAB07);
+                let mut r = sub(&base, streams::FAULT_ABORT);
                 for rf in plan.iter_mut() {
                     if r.chance(self.abort_prob) {
                         rf.server_abort = true;

@@ -415,11 +415,8 @@ pub fn pair_latencies(fixed: &[Option<f64>], oracle: &[Option<f64>])
 mod tests {
     use super::*;
     use crate::config::NetworkConfig;
-    use crate::experiments::sweep;
     use crate::profile::resnet18;
     use crate::scenario::spec::ScenarioSpec;
-    use crate::util::rng::Rng;
-    use crate::channel::Deployment;
 
     fn small_net() -> NetworkConfig {
         NetworkConfig::default().with_clients(3)
@@ -499,58 +496,10 @@ mod tests {
         }
     }
 
-    #[test]
-    fn oracle_matches_legacy_oracle_cells() {
-        // EveryK(1) through the scenario runner must reproduce the
-        // pre-scenario fig13 oracle path (sweep::run_oracle_cells)
-        // bit-for-bit on the same realizations.
-        let net = small_net();
-        let n_rounds = 5;
-        let mut rng = Rng::new(0x13);
-        let dep = Deployment::generate(&net, &mut rng);
-        let sc = Scenario::from_deployment(
-            net.clone(),
-            dep,
-            ScenarioSpec::fading(n_rounds),
-            &mut rng,
-        )
-        .unwrap();
-        let profile = resnet18::profile();
-        let bcd_opts = bcd::BcdOptions { max_iters: 6, tol: 1e-4 };
-        let avg = ChannelRealization::average(&sc.roster);
-        let base = Problem {
-            cfg: &net,
-            profile: &profile,
-            dep: &sc.roster,
-            ch: &avg,
-            batch: 64,
-            phi: 0.5,
-        };
-        let chs: Vec<ChannelRealization> =
-            sc.rounds.iter().map(|r| r.ch.clone()).collect();
-        let legacy = sweep::run_oracle_cells(&base, &chs, bcd_opts, 2);
-        let out = run_policy(
-            &sc,
-            &profile,
-            &RunOptions {
-                policy: ReoptPolicy::EveryK(1),
-                bcd: bcd_opts,
-                batch: 64,
-                phi: 0.5,
-                threads: 2,
-                timeline_mode: Mode::Barrier,
-            },
-        );
-        assert_eq!(out.rounds.len(), legacy.len());
-        for (r, l) in out.rounds.iter().zip(&legacy) {
-            assert_eq!(
-                r.latency.map(f64::to_bits),
-                l.map(f64::to_bits),
-                "oracle diverged at round {}",
-                r.round
-            );
-        }
-    }
+    // The EveryK(1)-vs-legacy-oracle bit-parity check lives in
+    // `experiments::sweep::tests::oracle_matches_scenario_every_round`:
+    // scenario sits below experiments in the layering DAG, so the
+    // cross-layer test belongs to the higher layer.
 
     #[test]
     fn on_regression_with_huge_threshold_acts_like_never() {

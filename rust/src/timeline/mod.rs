@@ -127,6 +127,23 @@ mod tests {
     }
 
     #[test]
+    fn timeline_mode_matches_mode_parse() {
+        // `Config::validate` re-spells this accept set inline (config
+        // sits below timeline in the layering DAG and must not call
+        // up into it); this pins the two together.
+        for name in ["barrier", "pipelined"] {
+            assert!(Mode::parse(name).is_ok());
+            let mut c = crate::config::Config::new();
+            c.timeline_mode = name.to_string();
+            assert!(c.validate().is_ok(), "config rejects '{name}'");
+        }
+        let mut c = crate::config::Config::new();
+        c.timeline_mode = "overlap".to_string();
+        let e = c.validate().unwrap_err();
+        assert!(e.to_string().contains("barrier|pipelined"), "{e}");
+    }
+
+    #[test]
     fn spans_total_sums_in_order() {
         let s = StageSpans {
             uplink_phase: 1.0,

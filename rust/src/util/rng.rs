@@ -176,9 +176,115 @@ impl Rng {
     }
 }
 
+/// Central registry of every [`Rng::fork`] tag in the tree.
+///
+/// A fork tag is the identity of a derived RNG stream: two call sites
+/// forking the same parent with the same tag get *correlated* streams,
+/// which silently couples whatever randomness they drive (the bug
+/// class behind the PR 8 seed-packing fix). Every tag therefore lives
+/// here as a documented named constant — raw literals at call sites
+/// are denied by audit rule R8 — and uniqueness is enforced twice:
+/// at compile time by the `ALL`-array asserts below (independent of
+/// the analyzer), and tree-wide by R8's registry self-checks.
+///
+/// Conventions:
+/// * values are `u64`, unique, and ≥ `0x1000` — keeping tags out of
+///   the small-integer range makes R8's raw-value collision scan
+///   meaningful;
+/// * names are `SCREAMING_SNAKE`, prefixed by the owning subsystem;
+/// * every constant is mirrored in [`ALL`], which feeds the
+///   compile-time asserts (the audit denies drift between the two).
+pub mod streams {
+    /// Base stream for per-round scenario dynamics
+    /// (`scenario::engine`); parent of the churn/LoS/jitter substreams.
+    pub const SCENARIO_DYNAMICS: u64 = 0xFEA7;
+    /// Client churn (departure/arrival) draws.
+    pub const SCENARIO_CHURN: u64 = 0xC42B;
+    /// Line-of-sight blockage state flips.
+    pub const SCENARIO_LOS: u64 = 0x105F;
+    /// Per-round rate-jitter multipliers.
+    pub const SCENARIO_JITTER: u64 = 0x717E;
+    /// Base stream for the fault-injection plan (`scenario::faults`);
+    /// parent of the per-fault-kind substreams.
+    pub const FAULT_PLAN: u64 = 0xFA17;
+    /// Client-crash fault draws.
+    pub const FAULT_CRASH: u64 = 0xC8A5;
+    /// Link-delay fault draws.
+    pub const FAULT_DELAY: u64 = 0xDE1A;
+    /// Activation-corruption fault draws.
+    pub const FAULT_CORRUPT: u64 = 0xC077;
+    /// Round-abort fault draws.
+    pub const FAULT_ABORT: u64 = 0xAB07;
+
+    /// Mirror of every registered tag, in declaration order. Feeds the
+    /// compile-time uniqueness/floor asserts; audit rule R8 denies any
+    /// drift between this array and the constants above.
+    pub const ALL: [u64; 9] = [
+        SCENARIO_DYNAMICS,
+        SCENARIO_CHURN,
+        SCENARIO_LOS,
+        SCENARIO_JITTER,
+        FAULT_PLAN,
+        FAULT_CRASH,
+        FAULT_DELAY,
+        FAULT_CORRUPT,
+        FAULT_ABORT,
+    ];
+
+    const fn all_distinct(xs: &[u64]) -> bool {
+        let mut i = 0;
+        while i < xs.len() {
+            let mut j = i + 1;
+            while j < xs.len() {
+                if xs[i] == xs[j] {
+                    return false;
+                }
+                j += 1;
+            }
+            i += 1;
+        }
+        true
+    }
+
+    const fn all_at_least(xs: &[u64], floor: u64) -> bool {
+        let mut i = 0;
+        while i < xs.len() {
+            if xs[i] < floor {
+                return false;
+            }
+            i += 1;
+        }
+        true
+    }
+
+    const _: () = assert!(
+        all_distinct(&ALL),
+        "duplicate rng stream tag: two fork sites would correlate"
+    );
+    const _: () = assert!(
+        all_at_least(&ALL, 0x1000),
+        "rng stream tags must stay out of the small-integer range"
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stream_tags_unique_and_above_floor() {
+        // Runtime mirror of the compile-time asserts, so a registry
+        // regression shows up as a named test failure — independent of
+        // epsl-audit's R8 checks.
+        let all = streams::ALL;
+        for (i, a) in all.iter().enumerate() {
+            assert!(*a >= 0x1000, "tag {a:#x} below floor");
+            for b in &all[i + 1..] {
+                assert_ne!(a, b, "duplicate stream tag {a:#x}");
+            }
+        }
+        assert_eq!(all.len(), 9);
+    }
 
     #[test]
     fn deterministic_streams() {

@@ -10,7 +10,10 @@
 
 use std::path::PathBuf;
 
-use epsl::analysis::{audit_source, audit_tree, severity, RuleId, Severity};
+use epsl::analysis::{
+    audit_source, audit_source_with, audit_tree, severity, Baseline, RuleId,
+    Severity, StreamRegistry,
+};
 
 /// Repo root: the crate manifest lives in `rust/`, the audited tree is
 /// its parent.
@@ -24,6 +27,19 @@ fn rules_fired(rel: &str, src: &str) -> Vec<RuleId> {
         audit_source(rel, src).findings.iter().map(|f| f.rule).collect();
     rules.dedup();
     rules
+}
+
+/// A small stand-in `util::rng::streams` registry for R8 fixtures, so
+/// named-tag resolution is pinned without depending on the live tree's
+/// tag set.
+fn fixture_registry() -> StreamRegistry {
+    StreamRegistry::parse(
+        "pub mod streams {\n\
+         pub const FIG_SEED: u64 = 0x1A2B;\n\
+         pub const CELL_DRAW: u64 = 0x3C4D;\n\
+         pub const ALL: [u64; 2] = [FIG_SEED, CELL_DRAW];\n\
+         }\n",
+    )
 }
 
 // ---- R1: no unwrap/expect/panic in non-test library code ---------------
@@ -112,9 +128,12 @@ fn r4_fires_everywhere() {
 
 #[test]
 fn r4_negative_named_streams() {
-    // The sanctioned pattern: forking a named stream from the run seed.
-    let src = "let mut rng = Rng::new(seed).fork(0xFA17);\n";
-    assert!(rules_fired("rust/src/scenario/fake.rs", src).is_empty());
+    // The sanctioned pattern: forking a *registered named* stream from
+    // the run seed. (A raw-literal tag here would be R8's turf now.)
+    let reg = fixture_registry();
+    let src = "let mut rng = Rng::new(seed).fork(streams::FIG_SEED);\n";
+    let fa = audit_source_with("rust/src/scenario/fake.rs", src, Some(&reg));
+    assert!(fa.findings.is_empty(), "{:?}", fa.findings);
 }
 
 // ---- R5: no fast-math / ad-hoc threading ------------------------------
@@ -212,6 +231,212 @@ fn suppression_requires_matching_rule_and_reason() {
     assert_eq!(fa.findings[0].line, 3);
 }
 
+// ---- R7: module references follow the layering DAG --------------------
+
+#[test]
+fn r7_fires_on_back_edge_use() {
+    // optim sits below coordinator: the upward `use` is a back-edge.
+    let src = "use crate::coordinator::train;\n";
+    assert_eq!(rules_fired("rust/src/optim/fake.rs", src), vec![RuleId::R7]);
+    // Inline qualified paths are the same edge as a `use`.
+    let inline = "fn f() { crate::experiments::sweep::run(); }\n";
+    assert_eq!(
+        rules_fired("rust/src/scenario/fake.rs", inline),
+        vec![RuleId::R7]
+    );
+    // Grouped imports surface each offending head.
+    let group = "use crate::{util, runtime};\n";
+    let fa = audit_source("rust/src/timeline/fake.rs", group);
+    assert_eq!(fa.findings.len(), 1, "{:?}", fa.findings);
+    assert_eq!(fa.findings[0].token, "crate::runtime");
+}
+
+#[test]
+fn r7_negative_downward_self_and_out_of_scope() {
+    // Downward references are the DAG's normal direction.
+    let down = "use crate::util::rng::Rng;\nuse crate::channel::Deployment;\n\
+                use crate::Error;\n";
+    assert!(rules_fired("rust/src/coordinator/fake.rs", down).is_empty());
+    // Self-module references are always fine.
+    let own = "use crate::optim::bcd;\n";
+    assert!(rules_fired("rust/src/optim/fake.rs", own).is_empty());
+    // lib.rs (module root) and non-src trees are out of scope.
+    let up = "use crate::experiments::sweep;\n";
+    assert!(rules_fired("rust/src/lib.rs", up).is_empty());
+    assert!(rules_fired("rust/tests/fake.rs", up).is_empty());
+}
+
+#[test]
+fn r7_applies_inside_test_modules() {
+    // A test-only back-edge still couples the layers at build time —
+    // the exact shape that used to live in scenario::run's tests.
+    let src = "#[cfg(test)]\nmod tests {\n use crate::experiments::sweep;\n}\n";
+    assert_eq!(
+        rules_fired("rust/src/scenario/fake.rs", src),
+        vec![RuleId::R7]
+    );
+}
+
+// ---- R8: fork tags are unique registered named streams ----------------
+
+#[test]
+fn r8_fires_on_raw_literal_fork_tag() {
+    let src = "let base = rng.fork(0xFEA7);\n";
+    assert_eq!(rules_fired("rust/src/scenario/fake.rs", src), vec![RuleId::R8]);
+}
+
+#[test]
+fn r8_fires_on_unregistered_named_tag() {
+    let reg = fixture_registry();
+    let src = "let base = rng.fork(streams::NOT_A_STREAM);\n";
+    let fa = audit_source_with("rust/src/scenario/fake.rs", src, Some(&reg));
+    assert_eq!(fa.findings.len(), 1);
+    assert_eq!(fa.findings[0].rule, RuleId::R8);
+}
+
+#[test]
+fn r8_fires_on_registered_value_as_raw_literal() {
+    // The PR 8 bug class: a registered tag value smuggled back in as a
+    // raw literal (`sub(0xC42B)`-style) collides with the named stream.
+    let reg = fixture_registry();
+    let src = "let x = sub(0x1A2B);\n";
+    let fa = audit_source_with("rust/src/optim/fake.rs", src, Some(&reg));
+    assert_eq!(fa.findings.len(), 1, "{:?}", fa.findings);
+    assert_eq!(fa.findings[0].rule, RuleId::R8);
+    assert!(fa.findings[0].token.contains("FIG_SEED"));
+}
+
+#[test]
+fn r8_fires_on_duplicate_registry_values() {
+    // Auditing the registry file itself re-parses it from the text:
+    // two constants sharing a value is the duplicate-tag collision R8
+    // exists to deny.
+    let dup = "pub mod streams {\n\
+               pub const A_TAG: u64 = 0x9999;\n\
+               pub const B_TAG: u64 = 0x9999;\n\
+               pub const ALL: [u64; 2] = [A_TAG, B_TAG];\n\
+               }\n";
+    let fa = audit_source("rust/src/util/rng.rs", dup);
+    assert!(
+        fa.findings
+            .iter()
+            .any(|f| f.rule == RuleId::R8 && f.token.contains("duplicates")),
+        "{:?}",
+        fa.findings
+    );
+}
+
+#[test]
+fn r8_negative_threaded_tag_and_test_code() {
+    let reg = fixture_registry();
+    // A lowercase binding threads a tag chosen (and checked) upstream.
+    let threaded = "let sub = |tag: u64| base.fork(tag);\n";
+    let fa =
+        audit_source_with("rust/src/scenario/fake.rs", threaded, Some(&reg));
+    assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    // Test code may fork ad-hoc literals (fixtures need local streams).
+    let test_src =
+        "#[cfg(test)]\nmod tests {\n fn f() { rng.fork(0x9ABC); }\n}\n";
+    let fa =
+        audit_source_with("rust/src/scenario/fake.rs", test_src, Some(&reg));
+    assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    // Unregistered large literals outside fork positions are fine.
+    let plain = "let batch = 4096;\n";
+    let fa = audit_source_with("rust/src/optim/fake.rs", plain, Some(&reg));
+    assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+}
+
+// ---- R9: stale suppressions are findings ------------------------------
+
+#[test]
+fn r9_fires_on_stale_allow() {
+    // The unwrap was fixed but the directive stayed behind.
+    let src = "let v = o.unwrap_or(0); // audit:allow(R1, \"obsolete\")\n";
+    let fa = audit_source("rust/src/latency/fake.rs", src);
+    assert_eq!(fa.findings.len(), 1);
+    assert_eq!(fa.findings[0].rule, RuleId::R9);
+    assert_eq!(fa.findings[0].line, 1);
+    assert!(fa.findings[0].token.contains("R1"));
+}
+
+#[test]
+fn r9_negative_live_allow() {
+    let src = "let v = o.unwrap(); // audit:allow(R1, \"bounded above\")\n";
+    let fa = audit_source("rust/src/latency/fake.rs", src);
+    assert!(fa.findings.is_empty());
+    assert_eq!(fa.suppressed, 1);
+}
+
+#[test]
+fn r9_directive_leaking_past_code_line_goes_stale() {
+    // Same fixture as the suppression-scope test, seen from R9's side:
+    // the directive that no longer reaches its target is itself flagged.
+    let src = "// audit:allow(R1, \"one line only\")\nlet a = 1;\n\
+               let v = o.unwrap();\n";
+    let fa = audit_source("rust/src/latency/fake.rs", src);
+    let r9: Vec<usize> = fa
+        .findings
+        .iter()
+        .filter(|f| f.rule == RuleId::R9)
+        .map(|f| f.line)
+        .collect();
+    assert_eq!(r9, vec![1]);
+}
+
+// ---- baseline ratchet semantics ---------------------------------------
+
+#[test]
+fn baseline_passes_frozen_findings_and_denies_fresh() {
+    let rel = "rust/src/latency/fake.rs";
+    let old = audit_source(rel, "pub fn f(x: Option<u8>) -> u8 { x.unwrap() }\n");
+    let base = Baseline::from_findings(&old.findings);
+
+    // Unchanged tree: everything baselined, nothing fresh.
+    let (baselined, fresh) = base.partition(&old.findings);
+    assert_eq!(baselined.len(), 1);
+    assert!(fresh.is_empty());
+
+    // Line drift does not un-baseline a finding (key omits the line).
+    let drifted = audit_source(
+        rel,
+        "// a new doc line\npub fn f(x: Option<u8>) -> u8 { x.unwrap() }\n",
+    );
+    let (baselined, fresh) = base.partition(&drifted.findings);
+    assert_eq!(baselined.len(), 1);
+    assert!(fresh.is_empty());
+
+    // A second violation of the same rule exceeds the frozen count and
+    // is fresh; so is any new rule.
+    let grown = audit_source(
+        rel,
+        "pub fn f(x: Option<u8>) -> u8 { x.unwrap() }\n\
+         pub fn g(x: Option<u8>) -> u8 { x.unwrap() }\n\
+         use crate::coordinator::train;\n",
+    );
+    let (baselined, fresh) = base.partition(&grown.findings);
+    assert_eq!(baselined.len(), 1);
+    assert_eq!(fresh.len(), 2, "{:?}", fresh);
+    assert!(fresh.iter().any(|f| f.rule == RuleId::R1));
+    assert!(fresh.iter().any(|f| f.rule == RuleId::R7));
+}
+
+#[test]
+fn baseline_serialization_roundtrip() {
+    let rel = "rust/src/optim/fake.rs";
+    let fa = audit_source(
+        rel,
+        "use std::collections::HashMap;\nuse crate::runtime::pjrt;\n",
+    );
+    assert_eq!(fa.findings.len(), 2);
+    let base = Baseline::from_findings(&fa.findings);
+    let text = base.to_json().to_string_pretty();
+    let back = Baseline::parse(&text).expect("baseline reparse failed");
+    assert_eq!(back, base);
+    let (baselined, fresh) = back.partition(&fa.findings);
+    assert_eq!(baselined.len(), 2);
+    assert!(fresh.is_empty());
+}
+
 // ---- the live tree audits clean (epsl-audit --deny-all contract) ------
 
 #[test]
@@ -229,11 +454,36 @@ fn live_tree_audits_clean_under_deny_all() {
                          f.path, f.line, f.rule, f.token, f.snippet))
         .collect();
     // Zero findings of ANY severity: `epsl-audit --deny-all` must exit 0.
+    // This now includes the semantic rules — no layering back-edges
+    // (R7), every fork tag a registered named stream (R8), and zero
+    // stale suppressions (R9).
     assert!(
         report.findings.is_empty(),
         "live tree has audit findings:\n{}",
         listing.join("\n")
     );
+    assert_eq!(report.stale_suppressions(), 0);
+}
+
+#[test]
+fn live_stream_registry_parses_and_matches_constants() {
+    // The analyzer's view of `util::rng::streams` must agree with the
+    // compiled constants — if the parser misreads the registry, R8's
+    // checks silently hollow out.
+    use epsl::util::rng::streams;
+    let path = repo_root().join("rust/src/util/rng.rs");
+    let text = std::fs::read_to_string(&path).expect("read rng.rs");
+    let reg = StreamRegistry::parse(&text);
+    assert_eq!(reg.defs.len(), streams::ALL.len());
+    assert_eq!(reg.all_names.len(), streams::ALL.len());
+    assert!(reg.duplicate_values().is_empty());
+    assert!(reg.low_values().is_empty());
+    assert!(reg.mirror_mismatch().is_empty(), "{:?}", reg.mirror_mismatch());
+    for (def, value) in reg.defs.iter().zip(streams::ALL) {
+        assert_eq!(def.value, value, "parsed {} drifted", def.name);
+    }
+    assert!(reg.contains("SCENARIO_DYNAMICS"));
+    assert!(reg.contains("FAULT_PLAN"));
 }
 
 // ---- serial-vs-threaded parity over the swept coordinator paths -------
