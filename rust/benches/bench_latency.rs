@@ -31,6 +31,7 @@ fn main() {
         uplink: &up,
         downlink: &dn,
         broadcast: 2e8,
+        uplink_comp: 1.0,
     };
 
     let smoke = std::env::args().any(|a| a == "--test");
@@ -82,6 +83,7 @@ fn main() {
         uplink: &up32,
         downlink: &dn32,
         broadcast: 2e8,
+        uplink_comp: 1.0,
     };
     b.run("timeline barrier EPSL C=32", || {
         simulate(Framework::Epsl { phi: 0.5 }, &inp32, Mode::Barrier)

@@ -1,24 +1,33 @@
-//! Runtime benches: per-entry execution cost, the full EPSL round, and —
-//! since PR 4 — **reference-vs-fast kernel pairs** for the native
-//! backend's im2col + blocked-GEMM compute core.
+//! Runtime benches: per-entry execution cost, the full EPSL round,
+//! the PR 4 **reference-vs-fast kernel pairs** for the native backend's
+//! im2col + blocked-GEMM compute core, and — since PR 10 — the
+//! **bitwise-vs-fast math-tier pairs** (scalar deterministic tier vs the
+//! SIMD microkernel + threaded macro-loop tier).
 //!
 //! Runs on whatever backend `auto` selects for the entry-point section
 //! (PJRT when `make artifacts` has been run, the pure-Rust native
-//! backend otherwise); the kernel A/B section always measures the native
-//! model paths directly. Before timing, the fast outputs are verified
-//! **bitwise** against the retained naive reference and for finiteness —
-//! the bench binary exits non-zero on any mismatch, which is what the CI
-//! smoke run (`cargo bench --bench bench_runtime -- --test`) enforces.
+//! backend otherwise); the kernel A/B sections always measure the native
+//! model paths directly. Before timing, the bitwise outputs are verified
+//! **bitwise** against the retained naive reference, and the fast tier's
+//! outputs are verified finite, within tolerance of the bitwise tier,
+//! and run-to-run deterministic at the fixed thread count — the bench
+//! binary exits non-zero on any mismatch, which is what the CI smoke run
+//! (`cargo bench --bench bench_runtime -- --test`) enforces. Both tiers
+//! are verified before either is timed: a bench must never publish a
+//! speedup for a configuration it has not checked in the same run.
 //!
 //! `BENCH_JSON=BENCH_4.json cargo bench --bench bench_runtime` records
 //! the perf trajectory; the acceptance row for PR 4 is the
-//! `server_train cut2 C=4` pair (target ≥5× reference/fast).
+//! `server_train cut2 C=4` pair (target ≥5× reference/fast), and for
+//! PR 10 (`BENCH_JSON=BENCH_10.json`) the `server_train cut2 C=4`
+//! tier pair (target ≥2× bitwise/fast on ≥2 threads).
 
 use epsl::config::Config;
 use epsl::coordinator::{train, TrainerOptions};
 use epsl::profile::splitnet::SplitNetConfig;
 use epsl::runtime::native::kernels::ScratchPool;
 use epsl::runtime::native::model;
+use epsl::runtime::native::MathTier;
 use epsl::runtime::tensor::{literal_f32, literal_i32, literal_u32};
 use epsl::runtime::{select_backend, Backend, BackendChoice};
 use epsl::util::bench::{format_ns, Bencher};
@@ -34,6 +43,20 @@ fn assert_finite(name: &str, v: &[f32]) {
         v.iter().all(|x| x.is_finite()),
         "{name}: non-finite output from the fast kernels"
     );
+}
+
+/// Element-wise relative tolerance check for the fast-tier verification
+/// (the fast tier reassociates, so bitwise equality does not apply —
+/// see PERF.md §10 for the tolerance model).
+fn assert_close(name: &str, reference: &[f32], fast: &[f32], tol: f32) {
+    assert_eq!(reference.len(), fast.len(), "{name}: length mismatch");
+    for (i, (r, f)) in reference.iter().zip(fast).enumerate() {
+        let scale = r.abs().max(f.abs()).max(1.0);
+        assert!(
+            (r - f).abs() <= tol * scale,
+            "{name}[{i}]: fast {f} vs bitwise {r} outside tol {tol}"
+        );
+    }
 }
 
 /// Reference-vs-GEMM pairs on the native model paths (the PR 4
@@ -63,14 +86,15 @@ fn kernel_pairs(bench: &mut Bencher) {
         .collect();
 
     // --- verification: fast ≡ reference, bitwise, before timing ---
-    let f_smash =
-        model::client_fwd(&cfg, cut, &params[..n_c], &x, b, &pool);
+    let f_smash = model::client_fwd(&cfg, cut, &params[..n_c], &x, b,
+                                    MathTier::Bitwise, &pool);
     let r_smash =
         model::client_fwd_reference(&cfg, cut, &params[..n_c], &x, b);
     assert_eq!(bits(&r_smash), bits(&f_smash),
                "client_fwd fast != reference");
     assert_finite("client_fwd", &f_smash);
-    let f = model::server_train(&cfg, cut, c, b, threads, &params[n_c..],
+    let f = model::server_train(&cfg, cut, c, b, threads,
+                                MathTier::Bitwise, &params[n_c..],
                                 &smashed, &labels, &lam, &mask, 0.05,
                                 &pool)
         .expect("valid labels");
@@ -98,7 +122,8 @@ fn kernel_pairs(bench: &mut Bencher) {
         model::client_fwd_reference(&cfg, cut, &params[..n_c], &x, b)
     });
     bench.run("client_fwd cut2 b=32 fast (im2col+GEMM)", || {
-        model::client_fwd(&cfg, cut, &params[..n_c], &x, b, &pool)
+        model::client_fwd(&cfg, cut, &params[..n_c], &x, b,
+                          MathTier::Bitwise, &pool)
     });
     bench.run("server_train cut2 C=4 reference (naive)", || {
         model::server_train_reference(&cfg, cut, c, b, threads,
@@ -106,8 +131,9 @@ fn kernel_pairs(bench: &mut Bencher) {
                                       &lam, &mask, 0.05)
     });
     bench.run("server_train cut2 C=4 fast (im2col+GEMM)", || {
-        model::server_train(&cfg, cut, c, b, threads, &params[n_c..],
-                            &smashed, &labels, &lam, &mask, 0.05, &pool)
+        model::server_train(&cfg, cut, c, b, threads, MathTier::Bitwise,
+                            &params[n_c..], &smashed, &labels, &lam,
+                            &mask, 0.05, &pool)
             .unwrap()
     });
     let ex: Vec<f32> = (0..256 * in_len)
@@ -118,20 +144,154 @@ fn kernel_pairs(bench: &mut Bencher) {
         model::eval_reference(&cfg, &params, &ex, &ey, threads)
     });
     bench.run("eval n=256 fast (im2col+GEMM)", || {
-        model::eval(&cfg, &params, &ex, &ey, threads, &pool).unwrap()
+        model::eval(&cfg, &params, &ex, &ey, threads, MathTier::Bitwise,
+                    &pool)
+            .unwrap()
     });
 }
 
-/// Print `reference / fast` ratios for every adjacent pair.
+/// Bitwise-vs-fast math-tier pairs on the native model paths (the PR 10
+/// acceptance measurement), preceded by the fast tier's own
+/// verification pass: the previous revision only verified the bitwise
+/// tier before timing, so a broken fast tier could still publish
+/// speedup rows — now every fast-tier output is checked for finiteness,
+/// tolerance against the bitwise tier, and run-to-run determinism at
+/// the fixed thread count before any tier row is timed.
+fn tier_pairs(bench: &mut Bencher) {
+    let cfg = SplitNetConfig::mnist_like();
+    let pool = ScratchPool::new();
+    let threads = par::max_threads();
+    let (cut, c, b) = (2usize, 4usize, 32usize);
+    let n_c = model::client_param_count(cut);
+    let params = model::init_params(&cfg, 11);
+    let in_len = cfg.img * cfg.img * cfg.channels;
+    let (sh, sw, sc) = cfg.smashed_shape(cut);
+    let smash_len = sh * sw * sc;
+    let mut rng = Rng::new(29);
+    let x: Vec<f32> = (0..b * in_len)
+        .map(|_| rng.normal(0.0, 1.0) as f32)
+        .collect();
+    let smashed: Vec<f32> = (0..c * b * smash_len)
+        .map(|_| rng.normal(0.0, 1.0) as f32)
+        .collect();
+    let labels: Vec<i32> =
+        (0..c * b).map(|i| (i % 10) as i32).collect();
+    let lam = vec![1.0 / c as f32; c];
+    let mask: Vec<f32> = (0..b)
+        .map(|j| if j < b / 2 { 1.0 } else { 0.0 })
+        .collect();
+    let tol = 1e-3f32;
+
+    // --- verification: fast tier finite + within tolerance of bitwise
+    //     + deterministic at this thread count, before timing ---
+    let bw_smash = model::client_fwd(&cfg, cut, &params[..n_c], &x, b,
+                                     MathTier::Bitwise, &pool);
+    let ft_smash = model::client_fwd(&cfg, cut, &params[..n_c], &x, b,
+                                     MathTier::Fast, &pool);
+    assert_finite("client_fwd tier=fast", &ft_smash);
+    assert_close("client_fwd tier=fast", &bw_smash, &ft_smash, tol);
+    let bw = model::server_train(&cfg, cut, c, b, threads,
+                                 MathTier::Bitwise, &params[n_c..],
+                                 &smashed, &labels, &lam, &mask, 0.05,
+                                 &pool)
+        .expect("valid labels");
+    let ft = model::server_train(&cfg, cut, c, b, threads,
+                                 MathTier::Fast, &params[n_c..],
+                                 &smashed, &labels, &lam, &mask, 0.05,
+                                 &pool)
+        .expect("valid labels");
+    let ft2 = model::server_train(&cfg, cut, c, b, threads,
+                                  MathTier::Fast, &params[n_c..],
+                                  &smashed, &labels, &lam, &mask, 0.05,
+                                  &pool)
+        .expect("valid labels");
+    assert_eq!(ft.loss.to_bits(), ft2.loss.to_bits(),
+               "fast tier nondeterministic at fixed thread count");
+    assert_eq!(bits(&ft.cut_agg), bits(&ft2.cut_agg),
+               "fast tier cut_agg nondeterministic at fixed threads");
+    assert!(ft.loss.is_finite(),
+            "server_train tier=fast: non-finite loss");
+    assert_close("server_train cut_agg tier=fast", &bw.cut_agg,
+                 &ft.cut_agg, tol);
+    assert_close("server_train cut_unagg tier=fast", &bw.cut_unagg,
+                 &ft.cut_unagg, tol);
+    assert_close("server_train loss tier=fast", &[bw.loss], &[ft.loss],
+                 tol);
+    for (t, (bp, fp)) in bw.new_params.iter().zip(&ft.new_params)
+        .enumerate()
+    {
+        assert_finite("server_train new_params tier=fast", fp);
+        assert_close(&format!("server_train new_params[{t}] tier=fast"),
+                     bp, fp, tol);
+    }
+    let ex: Vec<f32> = (0..256 * in_len)
+        .map(|_| rng.normal(0.0, 1.0) as f32)
+        .collect();
+    let ey: Vec<i32> = (0..256).map(|i| (i % 10) as i32).collect();
+    let (bl, bc) = model::eval(&cfg, &params, &ex, &ey, threads,
+                               MathTier::Bitwise, &pool)
+        .expect("valid labels");
+    let (fl, fc) = model::eval(&cfg, &params, &ex, &ey, threads,
+                               MathTier::Fast, &pool)
+        .expect("valid labels");
+    assert_close("eval loss tier=fast", &[bl], &[fl], tol);
+    // An argmax can legitimately flip on a near-tie under reassociated
+    // sums; bound the drift instead of demanding equality.
+    assert!((fc - bc).abs() <= 2.0,
+            "eval ncorrect drifted: bitwise {bc} vs fast {fc}");
+    println!(
+        "tier verification: fast within tol={tol} of bitwise, finite, \
+         deterministic at {threads} threads\n"
+    );
+
+    // --- timed pairs (adjacent rows feed the speedup table) ---
+    bench.run("client_fwd cut2 b=32 tier=bitwise", || {
+        model::client_fwd(&cfg, cut, &params[..n_c], &x, b,
+                          MathTier::Bitwise, &pool)
+    });
+    bench.run("client_fwd cut2 b=32 tier=fast", || {
+        model::client_fwd(&cfg, cut, &params[..n_c], &x, b,
+                          MathTier::Fast, &pool)
+    });
+    bench.run("server_train cut2 C=4 tier=bitwise", || {
+        model::server_train(&cfg, cut, c, b, threads, MathTier::Bitwise,
+                            &params[n_c..], &smashed, &labels, &lam,
+                            &mask, 0.05, &pool)
+            .unwrap()
+    });
+    bench.run("server_train cut2 C=4 tier=fast", || {
+        model::server_train(&cfg, cut, c, b, threads, MathTier::Fast,
+                            &params[n_c..], &smashed, &labels, &lam,
+                            &mask, 0.05, &pool)
+            .unwrap()
+    });
+    bench.run("eval n=256 tier=bitwise", || {
+        model::eval(&cfg, &params, &ex, &ey, threads, MathTier::Bitwise,
+                    &pool)
+            .unwrap()
+    });
+    bench.run("eval n=256 tier=fast", || {
+        model::eval(&cfg, &params, &ex, &ey, threads, MathTier::Fast,
+                    &pool)
+            .unwrap()
+    });
+}
+
+/// Print `slow / fast` ratios for every adjacent pair: the PR 4
+/// reference-vs-GEMM pairs and the PR 10 bitwise-vs-fast tier pairs.
 fn speedup_table(bench: &Bencher) {
-    println!("\nspeedups (reference / fast):");
+    println!("\nspeedups (slow / fast):");
     let rs = bench.results();
     for pair in rs.windows(2) {
         let (a, b) = (&pair[0], &pair[1]);
-        if let (Some(stem), true) = (
-            a.name.strip_suffix(" reference (naive)"),
-            b.name.ends_with(" fast (im2col+GEMM)"),
-        ) {
+        let stem = if b.name.ends_with(" fast (im2col+GEMM)") {
+            a.name.strip_suffix(" reference (naive)")
+        } else if b.name.ends_with(" tier=fast") {
+            a.name.strip_suffix(" tier=bitwise")
+        } else {
+            None
+        };
+        if let Some(stem) = stem {
             println!(
                 "  {:<32} {:>10} -> {:>10}  {:5.1}x",
                 stem,
@@ -172,6 +332,10 @@ fn main() {
     // Reference-vs-fast kernel pairs (native model level) — also the
     // bitwise verification gate the CI smoke run relies on.
     kernel_pairs(&mut bench);
+
+    // Bitwise-vs-fast math-tier pairs, with the fast tier's own
+    // finiteness/tolerance/determinism gate ahead of the timing.
+    tier_pairs(&mut bench);
 
     let cf = fam.client_fwd.get(&cut).unwrap();
     let mut inputs = client_p.clone();

@@ -11,8 +11,10 @@
 //!   measurement harness) and `coordinator/driver.rs` (wall-clock
 //!   stats reported next to, never mixed into, simulated latency).
 //! * **R4** applies everywhere.
-//! * **R5** applies everywhere except `util/par.rs`, the one sanctioned
-//!   threading home.
+//! * **R5** applies everywhere except `util/par.rs` (the sanctioned
+//!   threading home) and `runtime/native/kernels_fast.rs` (the opt-in
+//!   fast math tier, whose contract is tolerance — not bit-identity —
+//!   so fused `mul_add` and the threaded macro-loop are its point).
 //! * **R6** applies to `rust/src/config/**` and
 //!   `rust/src/coordinator/checkpoint.rs` — the parsing layers where a
 //!   silent narrowing cast corrupts a run instead of crashing it.
@@ -66,8 +68,13 @@ const DET_DIRS: [&str; 5] = [
 const R3_EXEMPT: [&str; 2] =
     ["rust/src/util/bench.rs", "rust/src/coordinator/driver.rs"];
 
-/// The sanctioned threading home (R5).
-const R5_EXEMPT: [&str; 1] = ["rust/src/util/par.rs"];
+/// The sanctioned homes for threading / fused arithmetic (R5): the
+/// thread-pool module itself, and the opt-in fast math tier whose
+/// guarantee is documented tolerance rather than bit-identity.
+const R5_EXEMPT: [&str; 2] = [
+    "rust/src/util/par.rs",
+    "rust/src/runtime/native/kernels_fast.rs",
+];
 
 /// Parsing layers where narrowing casts need review (R6).
 const R6_SCOPE: [&str; 2] =
@@ -661,6 +668,20 @@ mod tests {
         assert!(audit_source("rust/src/util/par.rs", thr)
             .findings
             .is_empty());
+        let fused = "let y = a.mul_add(b, c);\n";
+        assert!(!audit_source("rust/src/runtime/native/kernels.rs", fused)
+            .findings
+            .is_empty());
+        assert!(
+            audit_source("rust/src/runtime/native/kernels_fast.rs", fused)
+                .findings
+                .is_empty()
+        );
+        assert!(
+            audit_source("rust/src/runtime/native/kernels_fast.rs", thr)
+                .findings
+                .is_empty()
+        );
 
         let cast = "let n = x as u32;\n";
         assert_eq!(audit_source("rust/src/config/toml.rs", cast).findings.len(), 1);

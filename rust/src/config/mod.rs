@@ -58,6 +58,13 @@ pub struct NetworkConfig {
     pub p_max_dbm: f64,
     /// Total uplink power threshold p_th (dBm).
     pub p_th_dbm: f64,
+    /// Uplink activation-payload compression factor in (0, 1]: the
+    /// smashed-activation bits per sample are multiplied by this before
+    /// entering the rate equation (eq. 15). 1.0 = raw f32 payloads
+    /// (bit-identical to the uncompressed model); 0.5 models f16, 0.25
+    /// models int8 quantization. Modeled latency only — training
+    /// numerics are untouched.
+    pub uplink_compression: f64,
 }
 
 impl Default for NetworkConfig {
@@ -77,6 +84,7 @@ impl Default for NetworkConfig {
             d_max_m: 200.0,
             p_max_dbm: 31.76,
             p_th_dbm: 36.99,
+            uplink_compression: 1.0,
         }
     }
 }
@@ -121,6 +129,12 @@ impl NetworkConfig {
         let (lo, hi) = self.f_client_range;
         if lo <= 0.0 || hi < lo {
             return Err(Error::Config("bad client compute range".into()));
+        }
+        let c = self.uplink_compression;
+        if !c.is_finite() || c <= 0.0 || c > 1.0 {
+            return Err(Error::Config(format!(
+                "net.uplink_compression={c} out of (0,1]"
+            )));
         }
         Ok(())
     }
@@ -379,6 +393,14 @@ pub struct Config {
     /// `[backend] mode = "native"` (or a top-level `backend = "native"`);
     /// CLI: `--backend`.
     pub backend: String,
+    /// Native-backend compute tier: "bitwise" (default — bit-identical
+    /// to the reference oracles, EPSL_THREADS-invariant) or "fast" (SIMD
+    /// + threaded GEMM, tolerance contract; PERF.md §10). Plain string
+    /// here — `runtime::MathTier::parse` constructs the typed tier at
+    /// the CLI/driver boundary so config stays dependency-free. TOML:
+    /// `[backend] math_tier = "fast"` (or top-level `math_tier`); CLI:
+    /// `--math-tier`.
+    pub math_tier: String,
     /// Latency timeline mode: "barrier" (eq. 23 phase synchronization,
     /// bit-identical to the closed forms) or "pipelined" (per-client /
     /// per-link overlap). TOML: `[timeline] mode = "pipelined"` (or a
@@ -399,6 +421,7 @@ impl Config {
             faults: FaultSettings::default(),
             optim: OptimSettings::default(),
             backend: "auto".into(),
+            math_tier: "bitwise".into(),
             timeline_mode: "barrier".into(),
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
@@ -410,6 +433,16 @@ impl Config {
             return Err(Error::Config(format!(
                 "backend '{}' unknown (auto|native|pjrt)",
                 self.backend
+            )));
+        }
+        // Mirrors `runtime::MathTier::parse` (config sits below runtime
+        // in the layering DAG, so it validates the spelling without
+        // constructing the tier; `tier_parse_roundtrip_and_default` in
+        // the kernels_fast tests pins the two accept sets together).
+        if !matches!(self.math_tier.as_str(), "bitwise" | "fast") {
+            return Err(Error::Config(format!(
+                "math tier '{}' unknown (bitwise|fast)",
+                self.math_tier
             )));
         }
         // Mirrors `timeline::Mode::parse` (config sits below timeline in
@@ -476,6 +509,9 @@ impl Config {
         }
         if let Some(v) = d.f64("net.p_th_dbm") {
             self.net.p_th_dbm = v;
+        }
+        if let Some(v) = d.f64("net.uplink_compression") {
+            self.net.uplink_compression = v;
         }
         if let Some(v) = d.usize("train.batch") {
             self.train.batch = v;
@@ -566,6 +602,11 @@ impl Config {
         }
         if let Some(v) = d.str("backend").or_else(|| d.str("backend.mode")) {
             self.backend = v.to_string();
+        }
+        if let Some(v) =
+            d.str("math_tier").or_else(|| d.str("backend.math_tier"))
+        {
+            self.math_tier = v.to_string();
         }
         if let Some(v) =
             d.str("timeline").or_else(|| d.str("timeline.mode"))
@@ -706,6 +747,40 @@ mod tests {
             .apply_toml(&toml::parse("backend = \"tpu\"\n").unwrap())
             .unwrap_err();
         assert!(e.to_string().contains("auto|native|pjrt"), "{e}");
+    }
+
+    #[test]
+    fn math_tier_from_toml_and_validated() {
+        let mut c = Config::new();
+        assert_eq!(c.math_tier, "bitwise");
+        c.apply_toml(
+            &toml::parse("[backend]\nmath_tier = \"fast\"\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.math_tier, "fast");
+        c.apply_toml(&toml::parse("math_tier = \"bitwise\"\n").unwrap())
+            .unwrap();
+        assert_eq!(c.math_tier, "bitwise");
+        let e = c
+            .apply_toml(&toml::parse("math_tier = \"turbo\"\n").unwrap())
+            .unwrap_err();
+        assert!(e.to_string().contains("bitwise|fast"), "{e}");
+    }
+
+    #[test]
+    fn uplink_compression_from_toml_and_validated() {
+        let mut c = Config::new();
+        assert_eq!(c.net.uplink_compression, 1.0);
+        c.apply_toml(
+            &toml::parse("[net]\nuplink_compression = 0.5\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.net.uplink_compression, 0.5);
+        for bad in [0.0, -0.5, 1.5, f64::NAN] {
+            let mut c = Config::new();
+            c.net.uplink_compression = bad;
+            assert!(c.validate().is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

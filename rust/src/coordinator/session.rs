@@ -114,6 +114,8 @@ pub(crate) struct SimLatency {
     pub(crate) f_server: f64,
     pub(crate) kappa_server: f64,
     pub(crate) kappa_client: f64,
+    /// Uplink activation-payload compression factor (eq. 15 scale).
+    pub(crate) uplink_comp: f64,
     pub(crate) mode: Mode,
 }
 
@@ -138,6 +140,7 @@ impl SimLatency {
             uplink: &r.uplink,
             downlink: &r.downlink,
             broadcast: r.broadcast,
+            uplink_comp: self.uplink_comp,
         }
     }
 
@@ -248,6 +251,7 @@ pub(crate) fn build_sim_latency(cfg: &Config, opts: &TrainerOptions,
         f_server: net.f_server,
         kappa_server: net.kappa_server,
         kappa_client: net.kappa_client,
+        uplink_comp: net.uplink_compression,
         mode: opts.timeline_mode,
     })
 }
@@ -465,6 +469,7 @@ fn build_dynamic_sim_latency(cfg: &Config, opts: &TrainerOptions,
         f_server: net.f_server,
         kappa_server: net.kappa_server,
         kappa_client: net.kappa_client,
+        uplink_comp: net.uplink_compression,
         mode: opts.timeline_mode,
     })
 }
@@ -735,6 +740,7 @@ mod tests {
                 uplink: &r.uplink,
                 downlink: &r.downlink,
                 broadcast: r.broadcast,
+                uplink_comp: sb.uplink_comp,
             };
             let closed = round_latency(fw, &inp).round_total();
             assert_eq!(tb.to_bits(), closed.to_bits(), "{}", fw.name());

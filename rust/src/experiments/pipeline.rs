@@ -66,6 +66,7 @@ fn eval_cell(cell: &PipelineCell) -> (f64, f64) {
         uplink: &up,
         downlink: &dn,
         broadcast: bc,
+        uplink_comp: cell.net.uplink_compression,
     };
     let fw = Framework::Epsl { phi: cell.phi };
     (

@@ -101,6 +101,7 @@ pub fn eval_framework_cell(profile: &NetworkProfile, cell: &FrameworkCell)
         uplink: &up,
         downlink: &dn,
         broadcast: bc,
+        uplink_comp: cell.net.uplink_compression,
     };
     Some(round_latency(cell.fw, &inp).round_total())
 }

@@ -159,7 +159,8 @@ fn vanilla_sl_round(inp: &LatencyInputs) -> StageLatencies {
     for i in 0..n {
         let fi = inp.f_clients[i];
         total_cf += b * inp.kappa_client * p.client_fp_flops(j) / fi;
-        total_up += b * p.psi_bits(j) / inp.uplink[i].max(1e-9);
+        total_up +=
+            b * p.psi_bits(j) * inp.uplink_comp / inp.uplink[i].max(1e-9);
         // server trains alone with this client: C = 1, φ = 0
         server_fp += b * inp.kappa_server * p.server_fp_flops(j)
             / inp.f_server;
@@ -206,6 +207,7 @@ mod tests {
             uplink: up,
             downlink: dn,
             broadcast: 2e8,
+            uplink_comp: 1.0,
         }
     }
 

@@ -39,6 +39,10 @@ pub struct LatencyInputs<'a> {
     pub downlink: &'a [f64],
     /// Broadcast rate R^B (bits/s) — eq. 18.
     pub broadcast: f64,
+    /// Uplink activation-payload compression factor in (0, 1] — scales
+    /// the eq. 15 payload `b·ψ_j` (1.0 = raw f32, bit-identical to the
+    /// uncompressed model; 0.5 ≈ f16, 0.25 ≈ int8).
+    pub uplink_comp: f64,
 }
 
 impl<'a> LatencyInputs<'a> {
@@ -154,10 +158,14 @@ pub fn epsl_stage_latencies(inp: &LatencyInputs) -> StageLatencies {
         .map(|fi| b * inp.kappa_client * phi_cf / fi)
         .collect();
 
-    // eq. 15: T_i^U = b ψ_j / R_i^U
+    // eq. 15: T_i^U = b ψ_j γ / R_i^U (γ = uplink compression factor;
+    // γ = 1 leaves the product bit-identical to the uncompressed form).
     let psi = p.psi_bits(j);
-    let uplink: Vec<f64> =
-        inp.uplink.iter().map(|r| b * psi / r.max(1e-9)).collect();
+    let uplink: Vec<f64> = inp
+        .uplink
+        .iter()
+        .map(|r| b * psi * inp.uplink_comp / r.max(1e-9))
+        .collect();
 
     // eq. 16: T_s^F = C b κ_s Φ_s^F / f_s
     let server_fp =
@@ -245,7 +253,7 @@ pub fn epsl_stage_latencies_hetero(
         .uplink
         .iter()
         .zip(cuts)
-        .map(|(r, &j)| b * p.psi_bits(j) / r.max(1e-9))
+        .map(|(r, &j)| b * p.psi_bits(j) * inp.uplink_comp / r.max(1e-9))
         .collect();
     let downlink: Vec<f64> = inp
         .downlink
@@ -312,6 +320,7 @@ mod tests {
             uplink: up,
             downlink: dn,
             broadcast: 2e8,
+            uplink_comp: 1.0,
         }
     }
 
@@ -453,6 +462,40 @@ mod tests {
         let expect_bc =
             m * p.chi_bits(1) / 2e8 + m * p.chi_bits(4) / 2e8;
         assert_eq!(s.broadcast.to_bits(), expect_bc.to_bits());
+    }
+
+    #[test]
+    fn uplink_compression_scales_only_the_uplink_stage() {
+        let p = resnet18::profile();
+        let f = [1e9, 1.5e9];
+        let up = [5e7, 2e8];
+        let dn = [5e7, 2e8];
+        let raw = inputs(&p, &f, &up, &dn, 0.5);
+        let a = epsl_stage_latencies(&raw);
+        let half =
+            LatencyInputs { uplink_comp: 0.5, ..raw.clone() };
+        let b = epsl_stage_latencies(&half);
+        for i in 0..2 {
+            // γ scales the eq. 15 payload linearly...
+            assert!((b.uplink[i] - 0.5 * a.uplink[i]).abs()
+                        < 1e-15 * a.uplink[i].max(1.0),
+                    "uplink {i}");
+        }
+        // ...and touches nothing else.
+        assert_eq!(a.client_fp, b.client_fp);
+        assert_eq!(a.server_fp.to_bits(), b.server_fp.to_bits());
+        assert_eq!(a.server_bp.to_bits(), b.server_bp.to_bits());
+        assert_eq!(a.broadcast.to_bits(), b.broadcast.to_bits());
+        assert_eq!(a.downlink, b.downlink);
+        assert_eq!(a.client_bp, b.client_bp);
+        // γ = 1 is bit-identical (x * 1.0 is exact), and the hetero path
+        // applies the same factor per client.
+        let one = LatencyInputs { uplink_comp: 1.0, ..raw.clone() };
+        let s1 = epsl_stage_latencies(&one);
+        assert_eq!(a.uplink[0].to_bits(), s1.uplink[0].to_bits());
+        let het = epsl_stage_latencies_hetero(&half, &[3, 1]);
+        let expect = 64.0 * p.psi_bits(1) * 0.5 / up[1];
+        assert_eq!(het.uplink[1].to_bits(), expect.to_bits());
     }
 
     #[test]

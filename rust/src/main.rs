@@ -18,7 +18,8 @@ use epsl::optim::baselines::Scheme;
 use epsl::optim::{baselines, bcd, Problem};
 use epsl::profile::{resnet18, splitnet};
 use epsl::runtime::artifact::Manifest;
-use epsl::runtime::{select_backend, BackendChoice, SelectedBackend};
+use epsl::runtime::{select_backend_with, BackendChoice, MathTier,
+                    SelectedBackend};
 use epsl::scenario::{DynamicChannel, FaultSpec};
 use epsl::util::rng::Rng;
 use epsl::util::table::Table;
@@ -46,6 +47,8 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "reopt", takes_value: true, help: "re-opt policy: never|every:<k>|regress:<x>|oracle (implies --dynamic-channel)" },
         FlagSpec { name: "scheme", takes_value: true, help: "a|b|c|d|proposed (optimize)" },
         FlagSpec { name: "backend", takes_value: true, help: "auto|native|pjrt (training backend)" },
+        FlagSpec { name: "math-tier", takes_value: true, help: "native compute tier: bitwise|fast" },
+        FlagSpec { name: "uplink-compression", takes_value: true, help: "uplink activation payload factor in (0,1] (1=f32, 0.5=f16, 0.25=int8)" },
         FlagSpec { name: "timeline", takes_value: true, help: "latency timeline mode: barrier|pipelined" },
         FlagSpec { name: "faults", takes_value: true, help: "scheduled fault events: crash@r:c,delay@r:c:s,corrupt@r:c,abort@r (implies [faults] enabled)" },
         FlagSpec { name: "checkpoint-every", takes_value: true, help: "write a checkpoint every k rounds (0=never)" },
@@ -108,13 +111,23 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
         cfg.backend = b.to_string();
         cfg.validate()?;
     }
+    if let Some(t) = args.get("math-tier") {
+        cfg.math_tier = t.to_string();
+        cfg.validate()?;
+    }
+    if let Some(c) = args.f64("uplink-compression")? {
+        cfg.net.uplink_compression = c;
+        cfg.validate()?;
+    }
     Ok(cfg)
 }
 
-/// Resolve the configured backend choice (`[backend]` TOML / `--backend`).
+/// Resolve the configured backend choice (`[backend]` TOML / `--backend`)
+/// and native math tier (`--math-tier`).
 fn pick_backend(cfg: &Config) -> anyhow::Result<SelectedBackend> {
     let choice = BackendChoice::parse(&cfg.backend)?;
-    let sel = select_backend(&cfg.artifacts_dir, choice)?;
+    let tier = MathTier::parse(&cfg.math_tier)?;
+    let sel = select_backend_with(&cfg.artifacts_dir, choice, tier)?;
     println!("backend: {}", sel.describe());
     Ok(sel)
 }
@@ -420,7 +433,10 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     // is a diagnostic command: selection failure is a status line, not
     // an error.
     match BackendChoice::parse(&cfg.backend)
-        .and_then(|c| select_backend(&cfg.artifacts_dir, c))
+        .and_then(|c| {
+            let tier = MathTier::parse(&cfg.math_tier)?;
+            select_backend_with(&cfg.artifacts_dir, c, tier)
+        })
     {
         Ok(sel) => println!(
             "backend ({}): {} — {} famil{} available",

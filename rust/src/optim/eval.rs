@@ -52,7 +52,7 @@ pub struct Evaluator {
     /// Cut-layer candidates of the profile (copied).
     cut_candidates: Vec<usize>,
     // ---- per-cut tables, 1-based cut index j (slot 0 unused) ----
-    /// Uplink payload bits b·ψ_j.
+    /// Uplink payload bits b·ψ_j·γ (γ = uplink compression factor).
     ub: Vec<f64>,
     /// Unicast downlink payload bits (b − ⌈φb⌉)·χ_j.
     db: Vec<f64>,
@@ -131,7 +131,10 @@ impl Evaluator {
         for j in 1..nl {
             let psi = p.psi_bits(j);
             let chi = p.chi_bits(j);
-            ub[j] = b * psi;
+            // b·ψ_j·γ — same association as `Problem::uplink_bits` and
+            // the eq. 15 term in `epsl_stage_latencies` (γ = 1 leaves it
+            // bit-identical to the uncompressed payload).
+            ub[j] = b * psi * cfg.uplink_compression;
             db[j] = (b - magg) * chi;
             sfp[j] = cc * b * cfg.kappa_server * p.server_fp_flops(j)
                 / cfg.f_server;
@@ -275,7 +278,7 @@ impl Evaluator {
         self.cbp[cut * self.n_clients + i]
     }
 
-    /// Uplink payload bits b·ψ_j.
+    /// Uplink payload bits b·ψ_j·γ (γ = uplink compression factor).
     #[inline]
     pub fn uplink_bits(&self, cut: usize) -> f64 {
         self.ub[cut]
@@ -520,6 +523,36 @@ mod tests {
                 cfg.n_subchannels
             );
         });
+    }
+
+    #[test]
+    fn uplink_compression_tracks_reference_and_lowers_objective() {
+        let mut cfg = NetworkConfig::default();
+        cfg.uplink_compression = 0.5;
+        let profile = resnet18::profile();
+        let (dep, ch) = fixture(&cfg);
+        let prob = default_prob(&cfg, &profile, &dep, &ch);
+        let mut ev = Evaluator::new(&prob);
+        let d = Decision {
+            alloc: round_robin(&cfg),
+            psd_dbm_hz: vec![-62.0; cfg.n_subchannels],
+            cut: 4.into(),
+        };
+        // The fast path stays bit-identical to the reference under a
+        // compressed payload table...
+        assert_eq!(ev.uplink_bits(4), prob.uplink_bits(4));
+        let reference = prob.objective(&d);
+        let fast = ev.objective(&d);
+        assert!(
+            (fast - reference).abs() <= 1e-13 * reference,
+            "fast {fast} vs reference {reference}"
+        );
+        // ...and halving the uplink payload strictly lowers eq. 23 on a
+        // deployment whose uplink stage is non-degenerate.
+        let mut raw_cfg = cfg.clone();
+        raw_cfg.uplink_compression = 1.0;
+        let raw_prob = default_prob(&raw_cfg, &profile, &dep, &ch);
+        assert!(prob.objective(&d) < raw_prob.objective(&d));
     }
 
     #[test]

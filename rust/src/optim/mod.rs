@@ -379,6 +379,7 @@ impl<'a> Problem<'a> {
             uplink: &up,
             downlink: &dn,
             broadcast: bc,
+            uplink_comp: self.cfg.uplink_compression,
         };
         match d.cut.as_uniform() {
             Some(j) => {
@@ -421,9 +422,12 @@ impl<'a> Problem<'a> {
             / self.dep.clients[i].f_client
     }
 
-    /// Uplink payload bits for one round: b·ψ_j.
+    /// Uplink payload bits for one round: b·ψ_j·γ (γ = the configured
+    /// activation-compression factor; γ = 1 is the raw f32 payload).
     pub fn uplink_bits(&self, cut: usize) -> f64 {
-        self.batch as f64 * self.profile.psi_bits(cut)
+        self.batch as f64
+            * self.profile.psi_bits(cut)
+            * self.cfg.uplink_compression
     }
 
     /// Unicast downlink payload bits: (b − ⌈φb⌉)·χ_j.

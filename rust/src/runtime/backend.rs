@@ -14,7 +14,7 @@ use xla::Literal;
 use crate::error::{Error, Result};
 
 use super::artifact::{ArtifactEntry, Manifest};
-use super::native::{self, NativeBackend};
+use super::native::{self, MathTier, NativeBackend};
 use super::Runtime;
 
 /// An execution backend for the manifest entry points.
@@ -90,8 +90,18 @@ impl SelectedBackend {
     }
 }
 
-/// Resolve a [`BackendChoice`] against the artifacts directory.
+/// Resolve a [`BackendChoice`] against the artifacts directory (bitwise
+/// math tier).
 pub fn select_backend(artifacts_dir: &str, choice: BackendChoice)
+    -> Result<SelectedBackend> {
+    select_backend_with(artifacts_dir, choice, MathTier::default())
+}
+
+/// Resolve a [`BackendChoice`] with an explicit native [`MathTier`]. The
+/// PJRT path ignores the tier (its numerics come from the compiled
+/// artifacts); only the native backend dispatches on it.
+pub fn select_backend_with(artifacts_dir: &str, choice: BackendChoice,
+                           tier: MathTier)
     -> Result<SelectedBackend> {
     let pjrt = || -> Result<SelectedBackend> {
         let manifest = Manifest::load(artifacts_dir)?;
@@ -103,7 +113,8 @@ pub fn select_backend(artifacts_dir: &str, choice: BackendChoice)
         })
     };
     let native_sel = || SelectedBackend {
-        backend: Box::new(NativeBackend::new()),
+        backend: Box::new(NativeBackend::with_options(
+            crate::util::par::max_threads(), tier)),
         manifest: native::manifest(),
         kind: "native",
     };
@@ -154,6 +165,21 @@ mod tests {
         assert_eq!(sel.kind, "native");
         assert!(sel.manifest.family("mnist").is_ok());
         assert!(sel.describe().contains("native"));
+    }
+
+    #[test]
+    fn fast_tier_selectable_and_reported() {
+        let sel = select_backend_with("artifacts", BackendChoice::Native,
+                                      MathTier::Fast)
+            .unwrap();
+        assert_eq!(sel.kind, "native");
+        let platform = sel.backend.platform();
+        assert!(platform.contains("fast"), "{platform}");
+        // And the default entry point stays on the bitwise tier.
+        let def =
+            select_backend("artifacts", BackendChoice::Native).unwrap();
+        assert!(def.backend.platform().contains("bitwise"),
+                "{}", def.backend.platform());
     }
 
     #[test]

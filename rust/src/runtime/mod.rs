@@ -19,7 +19,9 @@ pub mod backend;
 pub mod native;
 pub mod tensor;
 
-pub use backend::{select_backend, Backend, BackendChoice, SelectedBackend};
+pub use backend::{select_backend, select_backend_with, Backend,
+                  BackendChoice, SelectedBackend};
+pub use native::MathTier;
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;

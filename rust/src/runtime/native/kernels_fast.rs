@@ -1,0 +1,515 @@
+//! The opt-in **fast-math compute tier** (PERF.md §10): explicit-SIMD
+//! GEMM microkernels plus a multi-threaded macro-loop, selected by
+//! [`MathTier::Fast`] and dispatched at runtime from
+//! [`super::model`]'s batched paths.
+//!
+//! ## Contract: tolerance, not bit-identity
+//!
+//! The bitwise tier ([`super::kernels`]) promises exact reproduction of
+//! the reference summation order — no FMA, no reassociation, invariant
+//! to `EPSL_THREADS`. This module deliberately trades that for speed:
+//!
+//! - The AVX2/FMA microkernels contract `a·b + c` into fused
+//!   multiply-adds (one rounding instead of two) and, in the
+//!   input-gradient dot ([`gemm_b_bt`]), reassociate the reduction into
+//!   8 SIMD partial sums. Outputs therefore differ from the bitwise
+//!   tier in the low mantissa bits: per-kernel relative error is
+//!   bounded by O(K·ε) for a K-long reduction (K ≤ 1152 for every
+//!   SplitNet layer, ε = 2⁻²⁴ ⇒ ~7·10⁻⁵), tested against the bitwise
+//!   tier at 1e-3 here and in `tests/property_tier.rs`.
+//! - [`gemm_bias_mt`] fans M-panels across threads via [`par`]. The
+//!   partition is output-row-disjoint and each element's reduction
+//!   order is fixed *within* a panel, so the current implementation is
+//!   still thread-count-invariant and run-to-run deterministic — but
+//!   only the weaker guarantee (deterministic at a *fixed*
+//!   `EPSL_THREADS`) is contractual, leaving room for K-split
+//!   reductions later. `tests/property_tier.rs` pins the documented
+//!   guarantee, PERF.md §10 spells out the difference.
+//!
+//! On non-x86_64 targets, or when the CPU lacks AVX2/FMA at runtime,
+//! every dispatcher falls back to the bitwise kernels — `Fast` then
+//! degenerates to `Bitwise` semantics (never the other way around).
+//!
+//! This file is the R5-sanctioned home for fast-math/SIMD code (next to
+//! `util/par.rs` for threading); `mul_add`/FMA stays banned everywhere
+//! else in the tree (see ANALYSIS.md).
+
+use crate::error::{Error, Result};
+use crate::util::par;
+
+use super::kernels::{self, Buf};
+use super::ops::{out_size, Dims};
+
+/// Which arithmetic the native backend runs.
+///
+/// `Bitwise` (the default) keeps every PR-4 guarantee: bit-identical to
+/// the naive reference oracles and invariant to `EPSL_THREADS`. `Fast`
+/// opts into the SIMD + threaded-GEMM kernels in this module under the
+/// tolerance contract above. Selected via `[backend] math_tier` in TOML
+/// or `--math-tier` on the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MathTier {
+    /// Bit-identical to the reference oracles; `EPSL_THREADS`-invariant.
+    #[default]
+    Bitwise,
+    /// SIMD microkernel + threaded GEMM macro-loop; tolerance-tested.
+    Fast,
+}
+
+impl MathTier {
+    /// Parse `"bitwise"` / `"fast"` (the `--math-tier` / TOML values).
+    pub fn parse(s: &str) -> Result<MathTier> {
+        match s {
+            "bitwise" => Ok(MathTier::Bitwise),
+            "fast" => Ok(MathTier::Fast),
+            other => Err(Error::Config(format!(
+                "math tier '{other}' unknown (bitwise|fast)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MathTier::Bitwise => "bitwise",
+            MathTier::Fast => "fast",
+        }
+    }
+}
+
+/// Output rows per threaded macro-loop panel (`gemm_bias_mt`). Matches
+/// the bitwise path's `GEMM_BLOCK_ROWS` so the two tiers fan comparable
+/// work items.
+const PANEL_ROWS: usize = 128;
+
+#[cfg(target_arch = "x86_64")]
+fn simd_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// `out[m][n] = bias[n] + Σ_t a[m][t]·b[t][n]` — the fast-tier
+/// counterpart of [`kernels::gemm_bias`]: AVX2/FMA when the CPU has it,
+/// the bitwise kernel otherwise.
+pub fn gemm_bias(m: usize, kdim: usize, n: usize, a: &[f32], b: &[f32],
+                 bias: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * kdim);
+    debug_assert_eq!(b.len(), kdim * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: gated on runtime detection of AVX2 + FMA; slice
+        // lengths asserted above match the kernel's access pattern.
+        unsafe { x86::gemm_bias(m, kdim, n, a, b, bias, out) };
+        return;
+    }
+    kernels::gemm_bias(m, kdim, n, a, b, bias, out);
+}
+
+/// `gw[t][n] += Σ_r patch[r][t]·gy[r][n]` — fast-tier counterpart of
+/// [`kernels::gemm_at_b_acc`] (weight-gradient GEMM).
+pub fn gemm_at_b_acc(rows: usize, kdim: usize, n: usize, patch: &[f32],
+                     gy: &[f32], gw: &mut [f32]) {
+    debug_assert_eq!(patch.len(), rows * kdim);
+    debug_assert_eq!(gy.len(), rows * n);
+    debug_assert_eq!(gw.len(), kdim * n);
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: gated on runtime detection of AVX2 + FMA; lengths
+        // asserted above.
+        unsafe { x86::gemm_at_b_acc(rows, kdim, n, patch, gy, gw) };
+        return;
+    }
+    kernels::gemm_at_b_acc(rows, kdim, n, patch, gy, gw);
+}
+
+/// `dpatch[r][t] = Σ_c gy[r][c]·w[t][c]` — fast-tier counterpart of
+/// [`kernels::gemm_b_bt`] (input-gradient cols). The SIMD dot keeps 8
+/// partial sums, so this is the one kernel that *reassociates* the
+/// reduction rather than merely contracting it.
+pub fn gemm_b_bt(rows: usize, kdim: usize, n: usize, gy: &[f32],
+                 w: &[f32], dpatch: &mut [f32]) {
+    debug_assert_eq!(gy.len(), rows * n);
+    debug_assert_eq!(w.len(), kdim * n);
+    debug_assert_eq!(dpatch.len(), rows * kdim);
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: gated on runtime detection of AVX2 + FMA; lengths
+        // asserted above.
+        unsafe { x86::gemm_b_bt(rows, kdim, n, gy, w, dpatch) };
+        return;
+    }
+    kernels::gemm_b_bt(rows, kdim, n, gy, w, dpatch);
+}
+
+/// The threaded GEMM macro-loop: fan `PANEL_ROWS`-row M-panels of
+/// `out` across `threads` workers, each panel running the SIMD (or
+/// fallback) [`gemm_bias`] microkernel. Panels partition output rows
+/// disjointly and every element's reduction stays within its panel, so
+/// the result is identical for any thread count; `threads <= 1` runs
+/// the plain serial kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_mt(m: usize, kdim: usize, n: usize, a: &[f32],
+                    b: &[f32], bias: &[f32], out: &mut [f32],
+                    threads: usize) {
+    debug_assert_eq!(a.len(), m * kdim);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if threads <= 1 || m <= PANEL_ROWS {
+        gemm_bias(m, kdim, n, a, b, bias, out);
+        return;
+    }
+    par::parallel_chunks_mut(out, PANEL_ROWS * n, threads, |pi, chunk| {
+        let r0 = pi * PANEL_ROWS;
+        let rows = chunk.len() / n;
+        gemm_bias(rows, kdim, n, &a[r0 * kdim..][..rows * kdim], b, bias,
+                  chunk);
+    });
+}
+
+/// Fast-tier conv2d backward for one sample — the same decomposition as
+/// [`kernels::conv2d_bwd_fast`] (zeroed `gw`/`gb`/`gx`, row-sum `gb`,
+/// im2col → weight-gradient GEMM → input-gradient cols → col2im) with
+/// the GEMMs dispatched to the SIMD kernels above. Within the
+/// documented tolerance of the bitwise version, never bit-asserted.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bwd_fast(x: &[f32], xd: Dims, w: &[f32], k: usize,
+                       cout: usize, stride: usize, gy: &[f32],
+                       patch: &mut Buf, dpatch: &mut Buf, gw: &mut [f32],
+                       gb: &mut [f32], gx: &mut [f32]) {
+    let (h, ww, cin) = xd;
+    let (oh, ow) = (out_size(h, stride), out_size(ww, stride));
+    let rows = oh * ow;
+    let kc = kernels::patch_cols(k, cin);
+    gw.fill(0.0);
+    gb.fill(0.0);
+    gx.fill(0.0);
+    for r in 0..rows {
+        for (b, &g) in gb.iter_mut().zip(&gy[r * cout..][..cout]) {
+            *b += g;
+        }
+    }
+    let patch = patch.get(rows * kc);
+    kernels::im2col(x, xd, k, stride, patch);
+    gemm_at_b_acc(rows, kc, cout, patch, gy, gw);
+    let dpatch = dpatch.get(rows * kc);
+    gemm_b_bt(rows, kc, cout, gy, w, dpatch);
+    kernels::col2im_acc(dpatch, xd, k, stride, gx);
+}
+
+/// The AVX2 + FMA microkernels. All functions here are `unsafe` solely
+/// because of `#[target_feature]`; callers gate on
+/// [`simd_available`]. Kept private to this module.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Register tile: 4 output rows × 16 columns (two 8-lane vectors),
+    /// the SIMD realization of the bitwise kernel's MR=4×NR=16 tile.
+    const MR: usize = 4;
+
+    /// SAFETY: requires AVX2 + FMA; `a` is m×kdim, `b` is kdim×n,
+    /// `bias` is n, `out` is m×n, all row-major.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemm_bias(m: usize, kdim: usize, n: usize, a: &[f32],
+                            b: &[f32], bias: &[f32], out: &mut [f32]) {
+        let mut i0 = 0;
+        while i0 < m {
+            let mr = MR.min(m - i0);
+            let mut j0 = 0;
+            // 16-wide column tiles: 2 vectors × MR row accumulators.
+            while j0 + 16 <= n {
+                let b0 = _mm256_loadu_ps(bias.as_ptr().add(j0));
+                let b1 = _mm256_loadu_ps(bias.as_ptr().add(j0 + 8));
+                let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+                for accr in acc.iter_mut().take(mr) {
+                    accr[0] = b0;
+                    accr[1] = b1;
+                }
+                for t in 0..kdim {
+                    let v0 = _mm256_loadu_ps(b.as_ptr().add(t * n + j0));
+                    let v1 =
+                        _mm256_loadu_ps(b.as_ptr().add(t * n + j0 + 8));
+                    for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                        let av = _mm256_set1_ps(a[(i0 + r) * kdim + t]);
+                        accr[0] = _mm256_fmadd_ps(av, v0, accr[0]);
+                        accr[1] = _mm256_fmadd_ps(av, v1, accr[1]);
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate().take(mr) {
+                    let dst = out.as_mut_ptr().add((i0 + r) * n + j0);
+                    _mm256_storeu_ps(dst, accr[0]);
+                    _mm256_storeu_ps(dst.add(8), accr[1]);
+                }
+                j0 += 16;
+            }
+            // 8-wide tail tiles.
+            while j0 + 8 <= n {
+                let bv = _mm256_loadu_ps(bias.as_ptr().add(j0));
+                let mut acc = [_mm256_setzero_ps(); MR];
+                for accr in acc.iter_mut().take(mr) {
+                    *accr = bv;
+                }
+                for t in 0..kdim {
+                    let v = _mm256_loadu_ps(b.as_ptr().add(t * n + j0));
+                    for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                        let av = _mm256_set1_ps(a[(i0 + r) * kdim + t]);
+                        *accr = _mm256_fmadd_ps(av, v, *accr);
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate().take(mr) {
+                    _mm256_storeu_ps(
+                        out.as_mut_ptr().add((i0 + r) * n + j0), *accr);
+                }
+                j0 += 8;
+            }
+            // Scalar tail columns (FMA-contracted, like the vector body).
+            while j0 < n {
+                for r in 0..mr {
+                    let mut c = bias[j0];
+                    for t in 0..kdim {
+                        c = a[(i0 + r) * kdim + t].mul_add(b[t * n + j0],
+                                                           c);
+                    }
+                    out[(i0 + r) * n + j0] = c;
+                }
+                j0 += 1;
+            }
+            i0 += mr;
+        }
+    }
+
+    /// SAFETY: requires AVX2 + FMA; `patch` is rows×kdim, `gy` is
+    /// rows×n, `gw` is kdim×n (accumulated in place), all row-major.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemm_at_b_acc(rows: usize, kdim: usize, n: usize,
+                                patch: &[f32], gy: &[f32],
+                                gw: &mut [f32]) {
+        let mut t0 = 0;
+        while t0 < kdim {
+            let tr = MR.min(kdim - t0);
+            let mut j0 = 0;
+            while j0 + 8 <= n {
+                let mut acc = [_mm256_setzero_ps(); MR];
+                for (ti, accr) in acc.iter_mut().enumerate().take(tr) {
+                    *accr = _mm256_loadu_ps(
+                        gw.as_ptr().add((t0 + ti) * n + j0));
+                }
+                for r in 0..rows {
+                    let gv = _mm256_loadu_ps(gy.as_ptr().add(r * n + j0));
+                    for (ti, accr) in acc.iter_mut().enumerate().take(tr)
+                    {
+                        let pv = _mm256_set1_ps(
+                            patch[r * kdim + t0 + ti]);
+                        *accr = _mm256_fmadd_ps(pv, gv, *accr);
+                    }
+                }
+                for (ti, accr) in acc.iter().enumerate().take(tr) {
+                    _mm256_storeu_ps(
+                        gw.as_mut_ptr().add((t0 + ti) * n + j0), *accr);
+                }
+                j0 += 8;
+            }
+            while j0 < n {
+                for ti in 0..tr {
+                    let mut c = gw[(t0 + ti) * n + j0];
+                    for r in 0..rows {
+                        c = patch[r * kdim + t0 + ti]
+                            .mul_add(gy[r * n + j0], c);
+                    }
+                    gw[(t0 + ti) * n + j0] = c;
+                }
+                j0 += 1;
+            }
+            t0 += tr;
+        }
+    }
+
+    /// Horizontal sum of one 8-lane accumulator (reassociates).
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps(v, 1);
+        let lo = _mm256_castps256_ps128(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// SAFETY: requires AVX2 + FMA; `gy` is rows×n, `w` is kdim×n,
+    /// `dpatch` is rows×kdim, all row-major.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemm_b_bt(rows: usize, kdim: usize, n: usize,
+                            gy: &[f32], w: &[f32], dpatch: &mut [f32]) {
+        for r in 0..rows {
+            let gp = gy.as_ptr().add(r * n);
+            for t in 0..kdim {
+                let wp = w.as_ptr().add(t * n);
+                let mut acc = _mm256_setzero_ps();
+                let mut j = 0;
+                while j + 8 <= n {
+                    acc = _mm256_fmadd_ps(_mm256_loadu_ps(wp.add(j)),
+                                          _mm256_loadu_ps(gp.add(j)),
+                                          acc);
+                    j += 8;
+                }
+                let mut s = hsum(acc);
+                while j < n {
+                    s = w[t * n + j].mul_add(gy[r * n + j], s);
+                    j += 1;
+                }
+                dpatch[r * kdim + t] = s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect()
+    }
+
+    /// The documented per-kernel tolerance (PERF.md §10).
+    const TOL: f32 = 1e-3;
+
+    fn rel_close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+    }
+
+    #[test]
+    fn tier_parse_roundtrip_and_default() {
+        assert_eq!(MathTier::default(), MathTier::Bitwise);
+        for t in [MathTier::Bitwise, MathTier::Fast] {
+            assert_eq!(MathTier::parse(t.name()).unwrap(), t);
+        }
+        assert!(MathTier::parse("turbo").is_err());
+        assert!(MathTier::parse("Fast").is_err());
+    }
+
+    #[test]
+    fn gemm_bias_within_tolerance_of_bitwise_on_odd_shapes() {
+        let mut rng = Rng::new(301);
+        for &(m, k, n) in &[
+            (7usize, 23usize, 19usize),
+            (1, 1, 1),
+            (33, 144, 16),
+            (5, 1152, 37),
+            (128, 9, 8),
+        ] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let bias = rand_vec(&mut rng, n);
+            let mut bitwise = vec![0.0f32; m * n];
+            kernels::gemm_bias(m, k, n, &a, &b, &bias, &mut bitwise);
+            let mut fast = vec![0.0f32; m * n];
+            gemm_bias(m, k, n, &a, &b, &bias, &mut fast);
+            for (i, (&r, &f)) in bitwise.iter().zip(&fast).enumerate() {
+                assert!(rel_close(r, f, TOL),
+                        "gemm_bias m={m} k={k} n={n} [{i}]: {r} vs {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_at_b_acc_within_tolerance_and_accumulates() {
+        let mut rng = Rng::new(302);
+        let (rows, k, n) = (29, 37, 11);
+        let patch = rand_vec(&mut rng, rows * k);
+        let gy = rand_vec(&mut rng, rows * n);
+        let init = rand_vec(&mut rng, k * n);
+        let mut bitwise = init.clone();
+        kernels::gemm_at_b_acc(rows, k, n, &patch, &gy, &mut bitwise);
+        let mut fast = init;
+        gemm_at_b_acc(rows, k, n, &patch, &gy, &mut fast);
+        for (i, (&r, &f)) in bitwise.iter().zip(&fast).enumerate() {
+            assert!(rel_close(r, f, TOL), "gw[{i}]: {r} vs {f}");
+        }
+    }
+
+    #[test]
+    fn gemm_b_bt_within_tolerance() {
+        let mut rng = Rng::new(303);
+        let (rows, k, n) = (13, 27, 21);
+        let gy = rand_vec(&mut rng, rows * n);
+        let w = rand_vec(&mut rng, k * n);
+        let mut bitwise = vec![0.0f32; rows * k];
+        kernels::gemm_b_bt(rows, k, n, &gy, &w, &mut bitwise);
+        let mut fast = vec![0.0f32; rows * k];
+        gemm_b_bt(rows, k, n, &gy, &w, &mut fast);
+        for (i, (&r, &f)) in bitwise.iter().zip(&fast).enumerate() {
+            assert!(rel_close(r, f, TOL), "dpatch[{i}]: {r} vs {f}");
+        }
+    }
+
+    #[test]
+    fn gemm_bias_mt_is_thread_count_invariant() {
+        let mut rng = Rng::new(304);
+        // m spans several panels plus a short tail.
+        let (m, k, n) = (PANEL_ROWS * 3 + 17, 45, 24);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let bias = rand_vec(&mut rng, n);
+        let mut serial = vec![0.0f32; m * n];
+        gemm_bias_mt(m, k, n, &a, &b, &bias, &mut serial, 1);
+        let mut fanned = vec![0.0f32; m * n];
+        gemm_bias_mt(m, k, n, &a, &b, &bias, &mut fanned, 4);
+        assert_eq!(
+            serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            fanned.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // ... and bit-identical to the single-call dispatch (panels
+        // partition output rows without touching any reduction order).
+        let mut single = vec![0.0f32; m * n];
+        gemm_bias(m, k, n, &a, &b, &bias, &mut single);
+        assert_eq!(
+            serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            single.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn conv2d_bwd_fast_within_tolerance_of_bitwise() {
+        let mut rng = Rng::new(305);
+        let mut patch = Buf::default();
+        let mut dpatch = Buf::default();
+        for &(h, w, cin, cout, k, stride) in &[
+            (5usize, 7usize, 3usize, 16usize, 3usize, 1usize),
+            (9, 9, 8, 8, 3, 2),
+            (4, 4, 2, 32, 1, 2),
+        ] {
+            let x = rand_vec(&mut rng, h * w * cin);
+            let wt = rand_vec(&mut rng, k * k * cin * cout);
+            let (oh, ow) = (out_size(h, stride), out_size(w, stride));
+            let gy = rand_vec(&mut rng, oh * ow * cout);
+            let mut rgw = vec![0.0f32; wt.len()];
+            let mut rgb = vec![0.0f32; cout];
+            let mut rgx = vec![0.0f32; h * w * cin];
+            kernels::conv2d_bwd_fast(&x, (h, w, cin), &wt, k, cout,
+                                     stride, &gy, &mut patch,
+                                     &mut dpatch, &mut rgw, &mut rgb,
+                                     &mut rgx);
+            let mut fgw = vec![1.0f32; wt.len()]; // nonzero: fill check
+            let mut fgb = vec![1.0f32; cout];
+            let mut fgx = vec![1.0f32; h * w * cin];
+            conv2d_bwd_fast(&x, (h, w, cin), &wt, k, cout, stride, &gy,
+                            &mut patch, &mut dpatch, &mut fgw, &mut fgb,
+                            &mut fgx);
+            for (name, r, f) in [("gw", &rgw, &fgw), ("gb", &rgb, &fgb),
+                                 ("gx", &rgx, &fgx)]
+            {
+                for (i, (&rv, &fv)) in r.iter().zip(f.iter()).enumerate()
+                {
+                    assert!(rel_close(rv, fv, TOL),
+                            "{name}[{i}] h={h} w={w} cin={cin} \
+                             cout={cout} k={k} stride={stride}: \
+                             {rv} vs {fv}");
+                }
+            }
+        }
+    }
+}

@@ -17,6 +17,7 @@
 //! so the driver's `call_many` fans client FP/BP across cores.
 
 pub mod kernels;
+pub mod kernels_fast;
 pub mod model;
 pub mod ops;
 
@@ -34,6 +35,8 @@ use crate::runtime::{validate_inputs, RuntimeStats};
 use crate::util::bench::WallTimer;
 use crate::util::par;
 
+pub use kernels_fast::MathTier;
+
 /// Training mini-batch b baked into the graph contract (matches the AOT
 /// export in `python/compile/aot.py`).
 pub const BATCH: usize = 32;
@@ -48,6 +51,10 @@ const PHI_AGG_CLIENTS: usize = 5;
 /// reusable kernel scratch arenas.
 pub struct NativeBackend {
     threads: usize,
+    /// Compute tier: [`MathTier::Bitwise`] (default, bit-identical to the
+    /// reference oracles) or [`MathTier::Fast`] (SIMD + threaded GEMM,
+    /// tolerance contract — see `kernels_fast`).
+    tier: MathTier,
     stats: Mutex<RuntimeStats>,
     /// Pooled [`kernels::Scratch`] arenas: im2col/GEMM buffers allocated
     /// once per concurrent worker and reused across samples and rounds.
@@ -66,10 +73,16 @@ impl NativeBackend {
         Self::with_threads(par::max_threads())
     }
 
-    /// Explicit thread budget (determinism tests pin this).
+    /// Explicit thread budget (determinism tests pin this). Bitwise tier.
     pub fn with_threads(threads: usize) -> Self {
+        Self::with_options(threads, MathTier::Bitwise)
+    }
+
+    /// Explicit thread budget and compute tier.
+    pub fn with_options(threads: usize, tier: MathTier) -> Self {
         NativeBackend {
             threads: threads.max(1),
+            tier,
             stats: Mutex::new(RuntimeStats::default()),
             pool: kernels::ScratchPool::new(),
         }
@@ -104,7 +117,8 @@ impl NativeBackend {
                 let params = to_host(&inputs[..n])?;
                 let x = to_f32_vec(&inputs[n])?;
                 let smashed = model::client_fwd(&cfg, cut, &params, &x,
-                                                BATCH, &self.pool);
+                                                BATCH, self.tier,
+                                                &self.pool);
                 Ok(vec![literal_f32(&entry.outputs[0].shape, &smashed)?])
             }
             OpKind::ClientStep { cut } => {
@@ -115,7 +129,7 @@ impl NativeBackend {
                 let lr = inputs[n + 2].get_first_element::<f32>()?;
                 let new =
                     model::client_step(&cfg, cut, &params, &x, &g_cut, lr,
-                                       BATCH, &self.pool);
+                                       BATCH, self.tier, &self.pool);
                 entry
                     .outputs
                     .iter()
@@ -133,9 +147,10 @@ impl NativeBackend {
                 let mask = to_f32_vec(&inputs[n_sp + 3])?;
                 let lr = inputs[n_sp + 4].get_first_element::<f32>()?;
                 let out = model::server_train(&cfg, cut, c, BATCH,
-                                              self.threads, &params,
-                                              &smashed, &labels, &lam,
-                                              &mask, lr, &self.pool)?;
+                                              self.threads, self.tier,
+                                              &params, &smashed, &labels,
+                                              &lam, &mask, lr,
+                                              &self.pool)?;
                 let mut lits: Vec<Literal> = entry.outputs[..n_sp]
                     .iter()
                     .zip(&out.new_params)
@@ -156,7 +171,7 @@ impl NativeBackend {
                 let labels = inputs[np + 1].to_vec::<i32>()?;
                 let (loss, ncorr) = model::eval(&cfg, &params, &x,
                                                 &labels, self.threads,
-                                                &self.pool)?;
+                                                self.tier, &self.pool)?;
                 Ok(vec![
                     literal_f32(&[], &[loss])?,
                     literal_f32(&[], &[ncorr])?,
@@ -177,7 +192,8 @@ impl NativeBackend {
 
 impl Backend for NativeBackend {
     fn platform(&self) -> String {
-        format!("native-f32 ({} threads)", self.threads)
+        format!("native-f32 ({} threads, {} tier)", self.threads,
+                self.tier.name())
     }
 
     fn call(&self, entry: &ArtifactEntry, inputs: &[Literal])

@@ -27,6 +27,18 @@
 //! retained `*_reference` implementations (property-tested in
 //! `tests/property_kernels.rs`) and all PR 3 determinism guarantees
 //! (seed-reproducible, `EPSL_THREADS`-invariant) carry over unchanged.
+//!
+//! ## Math tiers
+//!
+//! Every public entry point takes a [`MathTier`]: `Bitwise` (the
+//! default) runs the kernels above under the bit-identity contract;
+//! `Fast` swaps the two GEMM seams — the batched forward's macro-loop
+//! and the per-sample conv backward — for the SIMD/FMA kernels of
+//! [`super::kernels_fast`], which are tolerance-tested against the
+//! bitwise tier instead (PERF.md §10, `tests/property_tier.rs`).
+//! Everything around those seams (im2col, elementwise ops, reduction
+//! orders, masking) is shared, so the tiers differ only in kernel
+//! arithmetic, never in semantics.
 
 use crate::error::Result;
 use crate::profile::splitnet::SplitNetConfig;
@@ -34,6 +46,7 @@ use crate::util::par;
 use crate::util::rng::Rng;
 
 use super::kernels::{self, Buf, Scratch, ScratchPool};
+use super::kernels_fast::{self, MathTier};
 use super::ops::{self, Dims};
 
 /// Parameter tensors per stage (s1, s2, s3, s4) + head — the canonical
@@ -492,7 +505,7 @@ const ELEM_CHUNK: usize = 1 << 16;
 #[allow(clippy::too_many_arguments)]
 fn conv_batch(n: usize, x_all: &[f32], xd: Dims, w: &[f32], k: usize,
               cout: usize, bias: &[f32], stride: usize, threads: usize,
-              patch: &mut Buf, y_all: &mut [f32]) {
+              tier: MathTier, patch: &mut Buf, y_all: &mut [f32]) {
     let (h, ww, cin) = xd;
     let in_len = h * ww * cin;
     let rows = ops::out_size(h, stride) * ops::out_size(ww, stride);
@@ -515,15 +528,21 @@ fn conv_batch(n: usize, x_all: &[f32], xd: Dims, w: &[f32], k: usize,
         });
         let pg: &[f32] = pg;
         let out_g = &mut y_all[s0 * rows * cout..][..gn * rows * cout];
-        par::parallel_chunks_mut(
-            out_g, GEMM_BLOCK_ROWS * cout, threads, |bi, chunk| {
-                let r0 = bi * GEMM_BLOCK_ROWS;
-                let m = chunk.len() / cout;
-                kernels::gemm_bias(m, kc, cout,
-                                   &pg[r0 * kc..][..m * kc], w, bias,
-                                   chunk);
-            },
-        );
+        match tier {
+            MathTier::Bitwise => par::parallel_chunks_mut(
+                out_g, GEMM_BLOCK_ROWS * cout, threads, |bi, chunk| {
+                    let r0 = bi * GEMM_BLOCK_ROWS;
+                    let m = chunk.len() / cout;
+                    kernels::gemm_bias(m, kc, cout,
+                                       &pg[r0 * kc..][..m * kc], w, bias,
+                                       chunk);
+                },
+            ),
+            // The fast tier's threaded SIMD macro-loop over the same
+            // group rows (tolerance contract, PERF.md §10).
+            MathTier::Fast => kernels_fast::gemm_bias_mt(
+                gn * rows, kc, cout, pg, w, bias, out_g, threads),
+        }
         s0 += gn;
     }
 }
@@ -593,7 +612,8 @@ impl BatchCache {
 #[allow(clippy::too_many_arguments)]
 fn forward_batch(cfg: &SplitNetConfig, params: &[Vec<f32>], first: usize,
                  last: usize, with_head: bool, keep: bool, xs: &[f32],
-                 n: usize, threads: usize, ws: &mut Scratch)
+                 n: usize, threads: usize, tier: MathTier,
+                 ws: &mut Scratch)
     -> (Vec<f32>, BatchCache) {
     let mut cache = BatchCache {
         n,
@@ -613,7 +633,7 @@ fn forward_batch(cfg: &SplitNetConfig, params: &[Vec<f32>], first: usize,
         if s == 1 {
             let (w, b) = (&params[off], &params[off + 1]);
             let mut y = vec![0.0f32; n * out_len];
-            conv_batch(n, x_all, xd, w, 3, cout, b, 1, threads,
+            conv_batch(n, x_all, xd, w, 3, cout, b, 1, threads, tier,
                        &mut ws.patch, &mut y);
             relu_batch(&mut y, threads);
             cache.stages.push(BatchStage::Conv { y });
@@ -624,17 +644,17 @@ fn forward_batch(cfg: &SplitNetConfig, params: &[Vec<f32>], first: usize,
             let (wb, bb) = (&params[off + 2], &params[off + 3]);
             let mut a = vec![0.0f32; n * out_len];
             conv_batch(n, x_all, xd, wa, 3, cout, ba, stride, threads,
-                       &mut ws.patch, &mut a);
+                       tier, &mut ws.patch, &mut a);
             relu_batch(&mut a, threads);
             let ad = (oh, ow, cout);
             let mut out = vec![0.0f32; n * out_len];
-            conv_batch(n, &a, ad, wb, 3, cout, bb, 1, threads,
+            conv_batch(n, &a, ad, wb, 3, cout, bb, 1, threads, tier,
                        &mut ws.patch, &mut out);
             if project {
                 let (wp, bp) = (&params[off + 4], &params[off + 5]);
                 let skip = ws.skip.get(n * out_len);
-                conv_batch(n, x_all, xd, wp, 1, cout, bp, stride, threads,
-                           &mut ws.patch, skip);
+                conv_batch(n, x_all, xd, wp, 1, cout, bp, stride,
+                           threads, tier, &mut ws.patch, skip);
                 add_batch(&mut out, skip, threads);
             } else {
                 add_batch(&mut out, x_all, threads);
@@ -685,9 +705,15 @@ fn forward_batch(cfg: &SplitNetConfig, params: &[Vec<f32>], first: usize,
 fn backward_sample(cfg: &SplitNetConfig, params: &[Vec<f32>],
                    first: usize, last: usize, with_head: bool,
                    xs_sample: &[f32], cache: &BatchCache, j: usize,
-                   cot: &[f32], scratch: &mut Scratch)
+                   cot: &[f32], tier: MathTier, scratch: &mut Scratch)
     -> (Vec<Vec<f32>>, Vec<f32>) {
     debug_assert!(j < cache.n);
+    // The tier's conv-backward kernel: identical signatures, so the
+    // stage loop below is tier-oblivious.
+    let conv_bwd = match tier {
+        MathTier::Bitwise => kernels::conv2d_bwd_fast,
+        MathTier::Fast => kernels_fast::conv2d_bwd_fast,
+    };
     let Scratch {
         ref mut patch, ref mut dpatch, ref mut ga, ref mut gproj, ..
     } = *scratch;
@@ -727,9 +753,8 @@ fn backward_sample(cfg: &SplitNetConfig, params: &[Vec<f32>],
                 let mut gw = vec![0.0f32; w.len()];
                 let mut gb = vec![0.0f32; cout];
                 let mut gx = vec![0.0f32; in_len];
-                kernels::conv2d_bwd_fast(x, xd, w, 3, cout, 1, &g, patch,
-                                         dpatch, &mut gw, &mut gb,
-                                         &mut gx);
+                conv_bwd(x, xd, w, 3, cout, 1, &g, patch, dpatch,
+                         &mut gw, &mut gb, &mut gx);
                 grads.push(gb);
                 grads.push(gw);
                 g = gx;
@@ -745,25 +770,22 @@ fn backward_sample(cfg: &SplitNetConfig, params: &[Vec<f32>],
                 let mut gwb = vec![0.0f32; wb.len()];
                 let mut gbb = vec![0.0f32; cout];
                 let ga = ga_buf.get(out_len);
-                kernels::conv2d_bwd_fast(a_s, ad, wb, 3, cout, 1, &g,
-                                         patch, dpatch, &mut gwb,
-                                         &mut gbb, ga);
+                conv_bwd(a_s, ad, wb, 3, cout, 1, &g, patch, dpatch,
+                         &mut gwb, &mut gbb, ga);
                 ops::relu_bwd(ga, a_s);
                 let wa = &params[off];
                 let mut gwa = vec![0.0f32; wa.len()];
                 let mut gba = vec![0.0f32; cout];
                 let mut gx = vec![0.0f32; in_len];
-                kernels::conv2d_bwd_fast(x, xd, wa, 3, cout, stride, ga,
-                                         patch, dpatch, &mut gwa,
-                                         &mut gba, &mut gx);
+                conv_bwd(x, xd, wa, 3, cout, stride, ga, patch, dpatch,
+                         &mut gwa, &mut gba, &mut gx);
                 if project {
                     let wp = &params[off + 4];
                     let mut gwp = vec![0.0f32; wp.len()];
                     let mut gbp = vec![0.0f32; cout];
                     let gxp = gproj_buf.get(in_len);
-                    kernels::conv2d_bwd_fast(x, xd, wp, 1, cout, stride,
-                                             &g, patch, dpatch, &mut gwp,
-                                             &mut gbp, gxp);
+                    conv_bwd(x, xd, wp, 1, cout, stride, &g, patch,
+                             dpatch, &mut gwp, &mut gbp, gxp);
                     ops::add_assign(&mut gx, gxp);
                     grads.push(gbp);
                     grads.push(gwp);
@@ -787,10 +809,11 @@ fn backward_sample(cfg: &SplitNetConfig, params: &[Vec<f32>],
 /// [`client_fwd_reference`]. Runs single-threaded internally — the
 /// driver already fans whole clients across cores via `call_many`.
 pub fn client_fwd(cfg: &SplitNetConfig, cut: usize, params: &[Vec<f32>],
-                  x: &[f32], b: usize, pool: &ScratchPool) -> Vec<f32> {
+                  x: &[f32], b: usize, tier: MathTier,
+                  pool: &ScratchPool) -> Vec<f32> {
     pool.with(|ws| {
-        let (_, cache) =
-            forward_batch(cfg, params, 1, cut, false, false, x, b, 1, ws);
+        let (_, cache) = forward_batch(cfg, params, 1, cut, false, false,
+                                       x, b, 1, tier, ws);
         cache.into_last_out()
     })
 }
@@ -801,14 +824,14 @@ pub fn client_fwd(cfg: &SplitNetConfig, cut: usize, params: &[Vec<f32>],
 #[allow(clippy::too_many_arguments)]
 pub fn client_step(cfg: &SplitNetConfig, cut: usize, params: &[Vec<f32>],
                    x: &[f32], g_cut: &[f32], lr: f32, b: usize,
-                   pool: &ScratchPool) -> Vec<Vec<f32>> {
+                   tier: MathTier, pool: &ScratchPool) -> Vec<Vec<f32>> {
     let in_len = cfg.img * cfg.img * cfg.channels;
     let (sh, sw, sc) = stage_out_dims(cfg, cut);
     let smash_len = sh * sw * sc;
     let inv_b = 1.0 / b as f32;
     pool.with(|ws| {
-        let (_, cache) =
-            forward_batch(cfg, params, 1, cut, false, true, x, b, 1, ws);
+        let (_, cache) = forward_batch(cfg, params, 1, cut, false, true,
+                                       x, b, 1, tier, ws);
         let mut acc: Vec<Vec<f32>> =
             params.iter().map(|p| vec![0.0f32; p.len()]).collect();
         for j in 0..b {
@@ -817,8 +840,9 @@ pub fn client_step(cfg: &SplitNetConfig, cut: usize, params: &[Vec<f32>],
                 .iter()
                 .map(|&v| v * inv_b)
                 .collect();
-            let (grads, _) = backward_sample(cfg, params, 1, cut, false,
-                                             xs, &cache, j, &cot, ws);
+            let (grads, _) =
+                backward_sample(cfg, params, 1, cut, false, xs, &cache,
+                                j, &cot, tier, ws);
             for (a, gr) in acc.iter_mut().zip(&grads) {
                 ops::add_assign(a, gr);
             }
@@ -844,9 +868,10 @@ pub fn client_step(cfg: &SplitNetConfig, cut: usize, params: &[Vec<f32>],
 /// a worker mid-round.
 #[allow(clippy::too_many_arguments)]
 pub fn server_train(cfg: &SplitNetConfig, cut: usize, c: usize, b: usize,
-                    threads: usize, params: &[Vec<f32>], smashed: &[f32],
-                    labels: &[i32], lam: &[f32], mask: &[f32], lr: f32,
-                    pool: &ScratchPool) -> Result<ServerTrainOut> {
+                    threads: usize, tier: MathTier, params: &[Vec<f32>],
+                    smashed: &[f32], labels: &[i32], lam: &[f32],
+                    mask: &[f32], lr: f32, pool: &ScratchPool)
+    -> Result<ServerTrainOut> {
     ops::check_labels(labels, cfg.num_classes)?;
     let (sh, sw, sc) = stage_out_dims(cfg, cut);
     let smash_len = sh * sw * sc;
@@ -858,7 +883,8 @@ pub fn server_train(cfg: &SplitNetConfig, cut: usize, c: usize, b: usize,
     let (real, bps) = pool.with(|ws| {
         let (logits_all, cache) = forward_batch(cfg, params, cut + 1, 4,
                                                 true, true, smashed,
-                                                c * b, threads, ws);
+                                                c * b, threads, tier,
+                                                ws);
         let real: Vec<(f32, bool, Vec<f32>)> = (0..c * b)
             .map(|k| {
                 let (ce, d, correct) = ops::softmax_xent(
@@ -879,7 +905,7 @@ pub fn server_train(cfg: &SplitNetConfig, cut: usize, c: usize, b: usize,
                 let xs = &smashed[k * smash_len..][..smash_len];
                 let out = pool.with(|scratch| {
                     backward_sample(cfg, params, cut + 1, 4, true, xs,
-                                    &cache, k, &cot, scratch)
+                                    &cache, k, &cot, tier, scratch)
                 });
                 (k, out)
             });
@@ -914,7 +940,8 @@ pub fn server_train(cfg: &SplitNetConfig, cut: usize, c: usize, b: usize,
     }
     let virt = pool.with(|ws| {
         let (_, vcache) = forward_batch(cfg, params, cut + 1, 4, true,
-                                        true, &sbar_all, nm, threads, ws);
+                                        true, &sbar_all, nm, threads,
+                                        tier, ws);
         par::parallel_map(&masked, threads, |mi, &j| {
             let cot: Vec<f32> = zbar_all[mi * nc..][..nc]
                 .iter()
@@ -923,7 +950,7 @@ pub fn server_train(cfg: &SplitNetConfig, cut: usize, c: usize, b: usize,
             let xs = &sbar_all[mi * smash_len..][..smash_len];
             pool.with(|scratch| {
                 backward_sample(cfg, params, cut + 1, 4, true, xs,
-                                &vcache, mi, &cot, scratch)
+                                &vcache, mi, &cot, tier, scratch)
             })
         })
     });
@@ -979,13 +1006,16 @@ pub fn server_train(cfg: &SplitNetConfig, cut: usize, c: usize, b: usize,
 /// bit-identical to [`eval_reference`]: `(mean CE, ncorrect)`. Labels
 /// are validated up front and surface as `Error::Data`.
 pub fn eval(cfg: &SplitNetConfig, params: &[Vec<f32>], x: &[f32],
-            labels: &[i32], threads: usize, pool: &ScratchPool)
+            labels: &[i32], threads: usize, tier: MathTier,
+            pool: &ScratchPool)
     -> Result<(f32, f32)> {
     ops::check_labels(labels, cfg.num_classes)?;
     let n = labels.len();
     let nc = cfg.num_classes;
     let logits_all = pool.with(|ws| {
-        forward_batch(cfg, params, 1, 4, true, false, x, n, threads, ws).0
+        forward_batch(cfg, params, 1, 4, true, false, x, n, threads,
+                      tier, ws)
+            .0
     });
     let mut loss = 0.0f32;
     let mut ncorr = 0.0f32;
@@ -1124,11 +1154,13 @@ mod tests {
         let mask: Vec<f32> =
             (0..b).map(|j| if j < b / 2 { 1.0 } else { 0.0 }).collect();
         let pool = ScratchPool::new();
-        let a = server_train(&cfg, cut, c, b, 1, &p[n..], &smashed,
-                             &labels, &lam, &mask, 0.05, &pool)
+        let a = server_train(&cfg, cut, c, b, 1, MathTier::Bitwise,
+                             &p[n..], &smashed, &labels, &lam, &mask,
+                             0.05, &pool)
             .unwrap();
-        let z = server_train(&cfg, cut, c, b, 7, &p[n..], &smashed,
-                             &labels, &lam, &mask, 0.05, &pool)
+        let z = server_train(&cfg, cut, c, b, 7, MathTier::Bitwise,
+                             &p[n..], &smashed, &labels, &lam, &mask,
+                             0.05, &pool)
             .unwrap();
         assert_eq!(a.loss.to_bits(), z.loss.to_bits());
         assert_eq!(a.cut_agg, z.cut_agg);
@@ -1158,14 +1190,17 @@ mod tests {
         for bad in [-1i32, 10, i32::MIN] {
             let mut labels: Vec<i32> = vec![0; c * b];
             labels[3] = bad;
-            let e = server_train(&cfg, cut, c, b, 1, &p[n..], &smashed,
-                                 &labels, &lam, &mask, 0.05, &pool)
+            let e = server_train(&cfg, cut, c, b, 1, MathTier::Bitwise,
+                                 &p[n..], &smashed, &labels, &lam,
+                                 &mask, 0.05, &pool)
                 .unwrap_err();
             assert!(matches!(e, crate::error::Error::Data(_)),
                     "label {bad}: {e}");
         }
         let ex = vec![0.0f32; 2 * 256];
-        let e = eval(&cfg, &p, &ex, &[0, 12], 1, &pool).unwrap_err();
+        let e = eval(&cfg, &p, &ex, &[0, 12], 1, MathTier::Bitwise,
+                     &pool)
+            .unwrap_err();
         assert!(matches!(e, crate::error::Error::Data(_)), "{e}");
     }
 
@@ -1192,11 +1227,13 @@ mod tests {
             (0..b).map(|j| if j < m { 1.0 } else { 0.0 }).collect();
         let full = vec![1.0f32; b];
         let pool = ScratchPool::new();
-        let a = server_train(&cfg, cut, c, b, 2, &p[n..], &smashed,
-                             &labels, &lam, &half, 0.05, &pool)
+        let a = server_train(&cfg, cut, c, b, 2, MathTier::Bitwise,
+                             &p[n..], &smashed, &labels, &lam, &half,
+                             0.05, &pool)
             .unwrap();
-        let f = server_train(&cfg, cut, c, b, 2, &p[n..], &smashed,
-                             &labels, &lam, &full, 0.05, &pool)
+        let f = server_train(&cfg, cut, c, b, 2, MathTier::Bitwise,
+                             &p[n..], &smashed, &labels, &lam, &full,
+                             0.05, &pool)
             .unwrap();
         for j in 0..m {
             assert_eq!(

@@ -165,6 +165,7 @@ fn eval_round(sc: &Scenario, profile: &NetworkProfile,
                 uplink: &rates.uplink,
                 downlink: &rates.downlink,
                 broadcast: rates.broadcast,
+                uplink_comp: sc.net.uplink_compression,
             };
             let fw = Framework::Epsl { phi: opts.phi };
             match uni {

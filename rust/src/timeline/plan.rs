@@ -149,6 +149,7 @@ mod tests {
             uplink: up,
             downlink: dn,
             broadcast: 2e8,
+            uplink_comp: 1.0,
         }
     }
 

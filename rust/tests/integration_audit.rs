@@ -165,6 +165,32 @@ fn r5_negative_in_util_par_and_plain_code() {
     assert!(rules_fired("rust/src/runtime/native/kernels.rs", ok).is_empty());
 }
 
+#[test]
+fn r5_exempts_the_fast_tier_but_not_its_neighbors() {
+    // PR 10: the opt-in fast math tier is the second sanctioned R5 home
+    // — fused arithmetic and the threaded macro-loop are its purpose,
+    // under a tolerance (not bit-identity) contract.
+    let fma = "let y = a.mul_add(b, c);\n";
+    let spawn = "std::thread::spawn(move || work());\n";
+    for src in [fma, spawn] {
+        assert!(
+            rules_fired("rust/src/runtime/native/kernels_fast.rs", src)
+                .is_empty(),
+            "R5 must not fire in the sanctioned fast tier: {src}"
+        );
+    }
+    // The exemption is path-exact: the bitwise kernels and the model
+    // layer next door stay under the ban.
+    for rel in [
+        "rust/src/runtime/native/kernels.rs",
+        "rust/src/runtime/native/model.rs",
+        "rust/src/runtime/native/kernels_fast/helper.rs",
+    ] {
+        assert_eq!(rules_fired(rel, fma), vec![RuleId::R5],
+                   "R5 must still fire in {rel}");
+    }
+}
+
 // ---- R6: narrowing casts in parsing layers ----------------------------
 
 #[test]

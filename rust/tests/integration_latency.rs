@@ -43,6 +43,7 @@ fn latency_of(cfg: &NetworkConfig, fw: Framework, cut: usize, seed: u64)
         uplink: &up,
         downlink: &dn,
         broadcast: bc,
+        uplink_comp: 1.0,
     };
     round_latency(fw, &inp).round_total()
 }
@@ -155,6 +156,7 @@ fn uplink_straggler_is_first_argmax_of_fp_plus_uplink() {
             uplink: &up,
             downlink: &dn,
             broadcast: 2e8,
+            uplink_comp: 1.0,
         };
         let s = epsl_stage_latencies(&inp);
         let idx = s.uplink_straggler();
@@ -203,6 +205,7 @@ fn comm_compute_split_brackets_round_total() {
             uplink: &up,
             downlink: &dn,
             broadcast: 2e8,
+            uplink_comp: 1.0,
         };
         for fw in [
             Framework::VanillaSl,
@@ -243,6 +246,7 @@ fn comm_compute_split_exact_for_homogeneous_clients() {
             uplink: &up,
             downlink: &dn,
             broadcast: 2e8,
+            uplink_comp: 1.0,
         };
         for fw in [
             Framework::VanillaSl,

@@ -61,6 +61,7 @@ fn inputs<'a>(p: &'a NetworkProfile, cut: usize, f: &'a [f64],
         uplink: up,
         downlink: dn,
         broadcast: 2e8,
+        uplink_comp: 1.0,
     }
 }
 

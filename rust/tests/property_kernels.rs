@@ -9,6 +9,7 @@
 use epsl::profile::splitnet::SplitNetConfig;
 use epsl::runtime::native::kernels::{self, Buf, ScratchPool};
 use epsl::runtime::native::model;
+use epsl::runtime::native::MathTier;
 use epsl::runtime::native::ops;
 use epsl::util::prop::{check, Gen};
 use epsl::util::rng::Rng;
@@ -102,7 +103,7 @@ fn fast_model_paths_bit_identical_to_reference_all_cuts_both_families() {
 
             // client_fwd
             let fast = model::client_fwd(&cfg, cut, &params[..n_c], &x, b,
-                                         &pool);
+                                         MathTier::Bitwise, &pool);
             let reference = model::client_fwd_reference(
                 &cfg, cut, &params[..n_c], &x, b);
             assert_eq!(bits(&reference), bits(&fast),
@@ -120,6 +121,7 @@ fn fast_model_paths_bit_identical_to_reference_all_cuts_both_families() {
                 .map(|j| if j % 2 == 0 { 1.0 } else { 0.0 })
                 .collect();
             let f = model::server_train(&cfg, cut, c, b, 3,
+                                        MathTier::Bitwise,
                                         &params[n_c..], &smashed,
                                         &labels, &lam, &mask, 0.05,
                                         &pool)
@@ -146,7 +148,8 @@ fn fast_model_paths_bit_identical_to_reference_all_cuts_both_families() {
             // client_step driven by the broadcast gradient
             let new_fast = model::client_step(&cfg, cut, &params[..n_c],
                                               &x, &f.cut_agg[..b * smash_len],
-                                              0.05, b, &pool);
+                                              0.05, b, MathTier::Bitwise,
+                                              &pool);
             let new_ref = model::client_step_reference(
                 &cfg, cut, &params[..n_c], &x,
                 &r.cut_agg[..b * smash_len], 0.05, b);
@@ -165,7 +168,9 @@ fn fast_model_paths_bit_identical_to_reference_all_cuts_both_families() {
         let ey: Vec<i32> =
             (0..n).map(|j| (j % cfg.num_classes) as i32).collect();
         let (fl, fc) =
-            model::eval(&cfg, &params, &ex, &ey, 4, &pool).unwrap();
+            model::eval(&cfg, &params, &ex, &ey, 4, MathTier::Bitwise,
+                        &pool)
+                .unwrap();
         let (rl, rc) = model::eval_reference(&cfg, &params, &ex, &ey, 1);
         assert_eq!(fl.to_bits(), rl.to_bits(), "eval loss {family}");
         assert_eq!(fc.to_bits(), rc.to_bits(), "eval ncorrect {family}");
@@ -189,7 +194,8 @@ fn fast_server_train_mask_corners_match_reference() {
         (0..c * b).map(|k| (k % cfg.num_classes) as i32).collect();
     let lam = vec![1.0 / c as f32; c];
     for mask in [vec![1.0f32; b], vec![0.0f32; b]] {
-        let f = model::server_train(&cfg, cut, c, b, 2, &params[n_c..],
+        let f = model::server_train(&cfg, cut, c, b, 2,
+                                    MathTier::Bitwise, &params[n_c..],
                                     &smashed, &labels, &lam, &mask, 0.1,
                                     &pool)
             .unwrap();

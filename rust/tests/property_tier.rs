@@ -1,0 +1,233 @@
+//! Math-tier parity properties (PR 10): the opt-in fast tier must track
+//! the bitwise tier within the documented tolerance (PERF.md §10) on
+//! every model entry point, across all cuts (1..=4), both dataset
+//! families, and odd shapes; it must be run-to-run deterministic at a
+//! fixed thread count; and the bitwise tier must remain bit-identical
+//! to the retained naive reference oracles — the tier plumbing itself
+//! must not have perturbed the default path.
+
+use epsl::profile::splitnet::SplitNetConfig;
+use epsl::runtime::native::kernels::ScratchPool;
+use epsl::runtime::native::model;
+use epsl::runtime::native::MathTier;
+use epsl::util::rng::Rng;
+
+/// Per-kernel relative tolerance (one GEMM seam deep).
+const TOL: f32 = 1e-3;
+/// Loss is a mean over one softmax/CE reduction past the GEMMs.
+const LOSS_TOL: f32 = 5e-3;
+/// Updated parameters sit at the end of the full forward+backward
+/// sweep plus an SGD step, so rounding differences compound.
+const PARAM_TOL: f32 = 1e-2;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect()
+}
+
+fn assert_close(name: &str, reference: &[f32], fast: &[f32], tol: f32) {
+    assert_eq!(reference.len(), fast.len(), "{name}: length mismatch");
+    for (i, (r, f)) in reference.iter().zip(fast).enumerate() {
+        assert!(f.is_finite(), "{name}[{i}]: fast tier non-finite ({f})");
+        let scale = r.abs().max(f.abs()).max(1.0);
+        assert!(
+            (r - f).abs() <= tol * scale,
+            "{name}[{i}]: fast {f} vs bitwise {r} outside tol {tol}"
+        );
+    }
+}
+
+/// Fast within tolerance of bitwise on every entry point, all cuts,
+/// both families — the tolerance half of the tier contract.
+#[test]
+fn fast_tier_within_tolerance_all_cuts_both_families() {
+    let pool = ScratchPool::new();
+    let (b, c) = (4usize, 2usize);
+    for family in ["mnist", "ham"] {
+        let cfg = SplitNetConfig::for_family(family);
+        let in_len = cfg.img * cfg.img * cfg.channels;
+        for cut in 1..=4usize {
+            let seed = (cut * 53) as u64
+                + if family == "mnist" { 0 } else { 11 };
+            let params = model::init_params(&cfg, seed);
+            let n_c = model::client_param_count(cut);
+            let mut rng = Rng::new(seed ^ 0x7157);
+            let x = rand_vec(&mut rng, b * in_len);
+            let tag = format!("{family} cut{cut}");
+
+            let bw_smash = model::client_fwd(&cfg, cut, &params[..n_c],
+                                             &x, b, MathTier::Bitwise,
+                                             &pool);
+            let ft_smash = model::client_fwd(&cfg, cut, &params[..n_c],
+                                             &x, b, MathTier::Fast,
+                                             &pool);
+            assert_close(&format!("client_fwd {tag}"), &bw_smash,
+                         &ft_smash, TOL);
+
+            let (sh, sw, sc) = cfg.smashed_shape(cut);
+            let smash_len = sh * sw * sc;
+            let smashed = rand_vec(&mut rng, c * b * smash_len);
+            let labels: Vec<i32> = (0..c * b)
+                .map(|k| ((k * 5 + cut) % cfg.num_classes) as i32)
+                .collect();
+            let lam = vec![0.4f32, 0.6];
+            let mask: Vec<f32> = (0..b)
+                .map(|j| if j % 2 == 0 { 1.0 } else { 0.0 })
+                .collect();
+            let bw = model::server_train(&cfg, cut, c, b, 3,
+                                         MathTier::Bitwise,
+                                         &params[n_c..], &smashed,
+                                         &labels, &lam, &mask, 0.05,
+                                         &pool)
+                .unwrap();
+            let ft = model::server_train(&cfg, cut, c, b, 3,
+                                         MathTier::Fast, &params[n_c..],
+                                         &smashed, &labels, &lam, &mask,
+                                         0.05, &pool)
+                .unwrap();
+            assert_close(&format!("loss {tag}"), &[bw.loss], &[ft.loss],
+                         LOSS_TOL);
+            assert!((bw.ncorrect - ft.ncorrect).abs() <= 1.0,
+                    "training-batch ncorrect diverged on {tag}: \
+                     bitwise {} vs fast {}", bw.ncorrect, ft.ncorrect);
+            assert_close(&format!("cut_agg {tag}"), &bw.cut_agg,
+                         &ft.cut_agg, TOL);
+            assert_close(&format!("cut_unagg {tag}"), &bw.cut_unagg,
+                         &ft.cut_unagg, TOL);
+            for (t, (bp, fp)) in
+                bw.new_params.iter().zip(&ft.new_params).enumerate()
+            {
+                assert_close(&format!("new_params[{t}] {tag}"), bp, fp,
+                             PARAM_TOL);
+            }
+
+            let bw_step = model::client_step(
+                &cfg, cut, &params[..n_c], &x,
+                &bw.cut_agg[..b * smash_len], 0.05, b,
+                MathTier::Bitwise, &pool);
+            let ft_step = model::client_step(
+                &cfg, cut, &params[..n_c], &x,
+                &bw.cut_agg[..b * smash_len], 0.05, b, MathTier::Fast,
+                &pool);
+            for (t, (bp, fp)) in bw_step.iter().zip(&ft_step).enumerate()
+            {
+                assert_close(&format!("client_step[{t}] {tag}"), bp, fp,
+                             PARAM_TOL);
+            }
+        }
+
+        // eval: full model, odd-sized batch.
+        let params = model::init_params(&cfg, 23);
+        let n = 9usize;
+        let mut rng = Rng::new(151);
+        let ex = rand_vec(&mut rng, n * in_len);
+        let ey: Vec<i32> =
+            (0..n).map(|j| (j % cfg.num_classes) as i32).collect();
+        let (bl, bc) = model::eval(&cfg, &params, &ex, &ey, 3,
+                                   MathTier::Bitwise, &pool)
+            .unwrap();
+        let (fl, fc) = model::eval(&cfg, &params, &ex, &ey, 3,
+                                   MathTier::Fast, &pool)
+            .unwrap();
+        assert_close(&format!("eval loss {family}"), &[bl], &[fl],
+                     LOSS_TOL);
+        // A near-tie argmax may flip under reassociated sums; bound the
+        // drift rather than demanding equality on the 9-example batch.
+        assert!((fc - bc).abs() <= 1.0,
+                "eval ncorrect {family}: bitwise {bc} vs fast {fc}");
+    }
+}
+
+/// The determinism half of the tier contract: at a *fixed* thread
+/// count the fast tier is run-to-run bit-identical (reduction orders
+/// are fixed given the panel partition; nothing reads the clock or an
+/// unseeded RNG).
+#[test]
+fn fast_tier_deterministic_at_fixed_thread_count() {
+    let cfg = SplitNetConfig::mnist_like();
+    let pool = ScratchPool::new();
+    let (cut, c, b) = (2usize, 3usize, 8usize);
+    let n_c = model::client_param_count(cut);
+    let params = model::init_params(&cfg, 41);
+    let in_len = cfg.img * cfg.img * cfg.channels;
+    let (sh, sw, sc) = cfg.smashed_shape(cut);
+    let smash_len = sh * sw * sc;
+    let mut rng = Rng::new(43);
+    let x = rand_vec(&mut rng, b * in_len);
+    let smashed = rand_vec(&mut rng, c * b * smash_len);
+    let labels: Vec<i32> =
+        (0..c * b).map(|k| (k % cfg.num_classes) as i32).collect();
+    let lam = vec![1.0 / c as f32; c];
+    let mask = vec![1.0f32; b];
+
+    let s1 = model::client_fwd(&cfg, cut, &params[..n_c], &x, b,
+                               MathTier::Fast, &pool);
+    let s2 = model::client_fwd(&cfg, cut, &params[..n_c], &x, b,
+                               MathTier::Fast, &pool);
+    assert_eq!(bits(&s1), bits(&s2), "client_fwd fast nondeterministic");
+
+    for threads in [1usize, 4] {
+        let a = model::server_train(&cfg, cut, c, b, threads,
+                                    MathTier::Fast, &params[n_c..],
+                                    &smashed, &labels, &lam, &mask, 0.05,
+                                    &pool)
+            .unwrap();
+        let z = model::server_train(&cfg, cut, c, b, threads,
+                                    MathTier::Fast, &params[n_c..],
+                                    &smashed, &labels, &lam, &mask, 0.05,
+                                    &pool)
+            .unwrap();
+        assert_eq!(a.loss.to_bits(), z.loss.to_bits(),
+                   "fast loss nondeterministic at {threads} threads");
+        assert_eq!(bits(&a.cut_agg), bits(&z.cut_agg),
+                   "fast cut_agg nondeterministic at {threads} threads");
+        assert_eq!(bits(&a.cut_unagg), bits(&z.cut_unagg),
+                   "fast cut_unagg nondeterministic at {threads} threads");
+        for (t, (ap, zp)) in
+            a.new_params.iter().zip(&z.new_params).enumerate()
+        {
+            assert_eq!(bits(ap), bits(zp),
+                       "fast new_params[{t}] nondeterministic at \
+                        {threads} threads");
+        }
+    }
+}
+
+/// Threading the tier argument through must not have changed the
+/// default path: bitwise stays bit-identical to the naive reference
+/// oracle (the exhaustive version lives in `property_kernels.rs`; this
+/// is the focused regression pin for the PR 10 plumbing).
+#[test]
+fn bitwise_tier_still_bit_identical_to_reference() {
+    let cfg = SplitNetConfig::mnist_like();
+    let pool = ScratchPool::new();
+    let (cut, c, b) = (3usize, 2usize, 4usize);
+    let n_c = model::client_param_count(cut);
+    let params = model::init_params(&cfg, 77);
+    let (sh, sw, sc) = cfg.smashed_shape(cut);
+    let smash_len = sh * sw * sc;
+    let mut rng = Rng::new(79);
+    let smashed = rand_vec(&mut rng, c * b * smash_len);
+    let labels: Vec<i32> =
+        (0..c * b).map(|k| (k % cfg.num_classes) as i32).collect();
+    let lam = vec![0.5f32; c];
+    let mask: Vec<f32> = (0..b)
+        .map(|j| if j < b / 2 { 1.0 } else { 0.0 })
+        .collect();
+    let f = model::server_train(&cfg, cut, c, b, 2, MathTier::Bitwise,
+                                &params[n_c..], &smashed, &labels, &lam,
+                                &mask, 0.1, &pool)
+        .unwrap();
+    let r = model::server_train_reference(&cfg, cut, c, b, 1,
+                                          &params[n_c..], &smashed,
+                                          &labels, &lam, &mask, 0.1);
+    assert_eq!(f.loss.to_bits(), r.loss.to_bits());
+    assert_eq!(bits(&f.cut_agg), bits(&r.cut_agg));
+    assert_eq!(bits(&f.cut_unagg), bits(&r.cut_unagg));
+    for (fp, rp) in f.new_params.iter().zip(&r.new_params) {
+        assert_eq!(bits(fp), bits(rp));
+    }
+}
